@@ -1,0 +1,129 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! 1. **Transform + simulate (L3)** — enumerate the striding space of the
+//!    paper's kernels on the simulated Coffee Lake, pick each kernel's best
+//!    multi-strided configuration, and report the paper's headline metric
+//!    (multi-strided speedup over the best single-strided configuration and
+//!    over the reference-implementation models).
+//! 2. **Execute numerically (L2/L1 via PJRT)** — load the AOT-compiled
+//!    JAX/Pallas artifacts (`make artifacts`) for the same kernels, run
+//!    them on real data through the Rust PJRT runtime, validate every
+//!    result against pure-Rust oracles, and measure request throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Instant;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::{figure7, summarize_kernel};
+use multistride::runtime::{oracle, ArtifactRegistry, Runtime};
+use multistride::util::Rng;
+
+fn main() -> multistride::Result<()> {
+    let machine = coffee_lake();
+    let budget = 24 * 1024 * 1024u64;
+    println!("=== stage 1: multi-striding pipeline on simulated {} ===\n", machine.name);
+
+    let mut headline = Vec::new();
+    for kernel in ["mxv", "bicg", "conv", "jacobi2d"] {
+        let s = summarize_kernel(machine, kernel, budget, 10);
+        println!(
+            "{kernel:>9}: best multi-strided s={} p={} -> {:.2} GiB/s  ({:.2}x over best single-strided)",
+            s.best_multi.config.stride_unroll,
+            s.best_multi.config.portion_unroll,
+            s.best_multi.throughput_gib,
+            s.multi_over_single()
+        );
+        headline.push((kernel, s.multi_over_single()));
+        for row in figure7(machine, kernel, budget, 10) {
+            println!(
+                "{:>9}  vs {:<24} {:>6.2} GiB/s -> speedup {:.2}x",
+                "",
+                row.reference.label(),
+                row.reference_gib,
+                row.speedup()
+            );
+        }
+    }
+
+    println!("\n=== stage 2: numeric execution of the same kernels via PJRT ===\n");
+    let reg = ArtifactRegistry::new(ArtifactRegistry::default_dir());
+    if reg.list().is_empty() {
+        println!("no artifacts found in {:?} — run `make artifacts` first.", reg.dir());
+        println!("stage 1 completed; stage 2 skipped.");
+        return Ok(());
+    }
+    let mut rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    for name in reg.list() {
+        rt.load(&name, &reg.path_for(&name))?;
+    }
+
+    let mut rng = Rng::new(0xE2E);
+    let mut rand_vec = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.f64() as f32 - 0.5).collect()
+    };
+
+    // mxv — also measure request throughput over a batch of executions.
+    let (m, n) = (64usize, 128usize);
+    let a = rand_vec(m * n);
+    let x = rand_vec(n);
+    let want = oracle::mxv(&a, &x, m, n);
+    let reps = 200u32;
+    let t0 = Instant::now();
+    let mut got = Vec::new();
+    for _ in 0..reps {
+        got = rt.execute_f32("mxv", &[(&a, &[m as i64, n as i64]), (&x, &[n as i64])])?[0].clone();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let err = oracle::max_rel_err(&got, &want);
+    println!(
+        "mxv artifact: {reps} executions in {:.3} s ({:.0} req/s), max rel err {err:.2e}",
+        secs,
+        reps as f64 / secs
+    );
+    anyhow::ensure!(err < 1e-3, "mxv numeric mismatch");
+
+    // bicg + conv + jacobi2d numeric validation.
+    let r = rand_vec(m);
+    let p = rand_vec(n);
+    let out =
+        rt.execute_f32("bicg", &[(&a, &[m as i64, n as i64]), (&r, &[m as i64]), (&p, &[n as i64])])?;
+    let (s_want, q_want) = oracle::bicg(&a, &r, &p, m, n);
+    anyhow::ensure!(oracle::max_rel_err(&out[0], &s_want) < 1e-3, "bicg s mismatch");
+    anyhow::ensure!(oracle::max_rel_err(&out[1], &q_want) < 1e-3, "bicg q mismatch");
+    println!("bicg artifact: OK");
+
+    let (h, w) = (34usize, 66usize);
+    let img = rand_vec(h * w);
+    let wts = rand_vec(9);
+    let got = &rt.execute_f32("conv", &[(&img, &[h as i64, w as i64]), (&wts, &[3, 3])])?[0];
+    let mut w9 = [0f32; 9];
+    w9.copy_from_slice(&wts);
+    anyhow::ensure!(
+        oracle::max_rel_err(got, &oracle::conv3x3(&img, &w9, h, w)) < 1e-3,
+        "conv mismatch"
+    );
+    println!("conv artifact: OK");
+
+    let (h, w) = (32usize, 64usize);
+    let aj = rand_vec(h * w);
+    let got = &rt.execute_f32("jacobi2d", &[(&aj, &[h as i64, w as i64])])?[0];
+    anyhow::ensure!(
+        oracle::max_rel_err(got, &oracle::jacobi2d(&aj, h, w)) < 1e-3,
+        "jacobi2d mismatch"
+    );
+    println!("jacobi2d artifact: OK");
+
+    println!("\n=== e2e summary ===");
+    for (k, gain) in &headline {
+        println!("{k:>9}: multi-striding speedup {gain:.2}x (simulated)");
+    }
+    println!("all PJRT-executed kernels numerically validated against oracles.");
+    println!("e2e pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Native probe: run *real* single- vs multi-strided memory sweeps on the
+//! host CPU. Whatever machine executes this, its actual hardware prefetcher
+//! sees the paper's access patterns — a live cross-check of the simulated
+//! effect (the host prefetcher cannot be MSR-toggled from user space, which
+//! is why the simulator stays the primary vehicle).
+//!
+//! ```sh
+//! cargo run --release --example native_probe [-- <buffer MiB>]
+//! ```
+
+use multistride::native::NativeProbe;
+
+fn main() {
+    let mib: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let probe = NativeProbe { bytes: mib * 1024 * 1024, reps: 5 };
+    println!("host probe: {} MiB buffer, median of {} reps\n", mib, probe.reps);
+    println!(
+        "{:>8} | {:>11} {:>11} {:>11}",
+        "strides", "read GiB/s", "write GiB/s", "copy GiB/s"
+    );
+    let mut base = None;
+    for p in probe.run(&[1, 2, 4, 8, 16, 32]) {
+        println!(
+            "{:>8} | {:>11.2} {:>11.2} {:>11.2}",
+            p.strides, p.read_gib_s, p.write_gib_s, p.copy_gib_s
+        );
+        if p.strides == 1 {
+            base = Some(p);
+        }
+    }
+    if let Some(b) = base {
+        println!(
+            "\n(read gain of the best multi-strided configuration over single-strided\n\
+             indicates how much this host's prefetcher benefits from multi-striding;\n\
+             single-strided baseline: {:.2} GiB/s)",
+            b.read_gib_s
+        );
+    }
+}

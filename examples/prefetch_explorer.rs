@@ -1,0 +1,56 @@
+//! Prefetch explorer: the §4 micro-benchmark analysis in one binary —
+//! throughput, stall cycles, hit ratios and streamer statistics for every
+//! stride count, with the prefetcher MSR-style switch flipped both ways.
+//!
+//! ```sh
+//! cargo run --release --example prefetch_explorer [-- <machine>]
+//! ```
+
+use multistride::config::{MachinePreset, ScaleConfig};
+use multistride::coordinator::experiments::{run_micro, MICRO_STRIDES};
+use multistride::kernels::micro::MicroOp;
+
+fn main() {
+    let machine = std::env::args()
+        .nth(1)
+        .and_then(|n| MachinePreset::from_name(&n))
+        .unwrap_or(MachinePreset::CoffeeLake)
+        .config();
+    let bytes = ScaleConfig::default().micro_bytes;
+    println!(
+        "machine: {} ({:.1} GHz, model roofline {:.2} GiB/s)\narray: {} MiB\n",
+        machine.name,
+        machine.freq_ghz,
+        machine.model_peak_gib(),
+        bytes >> 20
+    );
+
+    println!(
+        "{:>8} {:>4} | {:>9} | {:>10} {:>10} {:>10} | {:>6} {:>6} {:>6} | {:>8} {:>9}",
+        "strides", "pf", "GiB/s", "stalls(M)", "L2miss(M)", "L3miss(M)", "L1hit", "L2hit", "L3hit",
+        "streams", "prefetches"
+    );
+    for prefetch in [true, false] {
+        for &s in &MICRO_STRIDES {
+            let p = run_micro(machine, MicroOp::LoadAligned, s, bytes, prefetch, false);
+            let c = &p.result.counters;
+            println!(
+                "{:>8} {:>4} | {:>9.2} | {:>10.1} {:>10.1} {:>10.1} | {:>6.3} {:>6.3} {:>6.3} | {:>8} {:>9}",
+                s,
+                if prefetch { "on" } else { "off" },
+                p.throughput_gib,
+                c.stalls_total as f64 / 1e6,
+                c.stalls_l2_miss as f64 / 1e6,
+                c.stalls_l3_miss as f64 / 1e6,
+                p.result.l1.hit_ratio(),
+                p.result.l2.hit_ratio(),
+                p.result.l3.hit_ratio(),
+                p.result.streamer.streams_allocated,
+                p.result.streamer.prefetches_issued,
+            );
+        }
+        println!();
+    }
+    println!("reading: multi-striding raises GiB/s and L2/L3 hit ratios and cuts stalls");
+    println!("only while the prefetcher is on — the paper's central causal claim.");
+}

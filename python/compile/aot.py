@@ -1,0 +1,80 @@
+"""AOT bridge: lower every L2 model to HLO **text** artifacts.
+
+Interchange format is HLO text, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the Rust binary then loads
+``artifacts/<name>.hlo.txt`` through PJRT and never touches Python again.
+
+The example shapes below are the AOT contract with the Rust side — keep in
+sync with ``rust/src/main.rs::validate`` and
+``rust/tests/runtime_integration.rs``.
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# name -> (fn, example args). Shapes chosen small (artifact compile time)
+# but structured: row counts divide the kernels' stride_unroll.
+ARTIFACTS = {
+    "mxv": (model.mxv, (_s(64, 128), _s(128))),
+    "bicg": (model.bicg, (_s(64, 128), _s(64), _s(128))),
+    "conv": (model.conv, (_s(34, 66), _s(3, 3))),
+    "jacobi2d": (model.jacobi2d, (_s(32, 64),)),
+    "doitgen": (model.doitgen, (_s(64,), _s(64, 128))),
+    "gemver": (
+        model.gemver,
+        (_s(64, 64), _s(64), _s(64), _s(64), _s(64), _s(64), _s(64), _s(64), _s(64)),
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: pathlib.Path, only=None) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, (fn, args) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        written.append(path)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    build(pathlib.Path(args.out_dir), set(args.only) if args.only else None)
+
+
+if __name__ == "__main__":
+    main()

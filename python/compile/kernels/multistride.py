@@ -1,0 +1,291 @@
+"""L1 — multi-strided Pallas kernels.
+
+§Hardware-Adaptation (DESIGN.md §4): the paper's x86 transformation primes
+multiple cache-prefetch streams by unrolling over a non-contiguous axis.
+TPUs have no hardware prefetcher; the analogue is the **HBM→VMEM copy
+schedule**. Each kernel here takes a ``stride_unroll`` parameter ``S``: one
+grid step processes a *group of S rows* concurrently, so S independent HBM
+row streams are in flight per step (Pallas/Mosaic double-buffers the block
+DMA across steps). ``S = 1`` is the single-strided baseline — same FLOPs,
+one row stream at a time.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime loads (see /opt/xla-example/README.md).
+
+Every kernel is checked against the pure-jnp oracles in ``ref.py`` by
+``python/tests/test_kernels.py`` (pytest + hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _check_rows(m, s, name):
+    if m % s != 0:
+        raise ValueError(f"{name}: row count {m} not divisible by stride unroll {s}")
+
+
+# ---------------------------------------------------------------------------
+# mxv — y = A·x (and gemvermxv2): stride unroll over rows of A.
+# ---------------------------------------------------------------------------
+
+
+def mxv(a, x, *, stride_unroll=4):
+    """Multi-strided dense matrix-vector product.
+
+    Grid step *g* loads rows ``[g·S, (g+1)·S)`` of A as one (S, N) VMEM
+    block — S concurrent HBM row streams, the Listing-2 schedule.
+    """
+    m, n = a.shape
+    s = stride_unroll
+    _check_rows(m, s, "mxv")
+
+    def kernel(a_ref, x_ref, o_ref):
+        o_ref[...] = jnp.sum(a_ref[...] * x_ref[...][None, :], axis=1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s,),
+        in_specs=[
+            pl.BlockSpec((s, n), lambda g: (g, 0)),
+            pl.BlockSpec((n,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((s,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=INTERPRET,
+    )(a, x)
+
+
+# ---------------------------------------------------------------------------
+# tmxv — x = Aᵀ·y (gemvermxv1 / isolated doitgen): stride unroll over the
+# reduction rows; the output block accumulates across grid steps.
+# ---------------------------------------------------------------------------
+
+
+def tmxv(a, y, *, stride_unroll=4):
+    """Multi-strided transposed matrix-vector product (Listing 1/2)."""
+    m, n = a.shape
+    s = stride_unroll
+    _check_rows(m, s, "tmxv")
+
+    def kernel(a_ref, y_ref, o_ref):
+        g = pl.program_id(0)
+
+        @pl.when(g == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.sum(a_ref[...] * y_ref[...][:, None], axis=0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s,),
+        in_specs=[
+            pl.BlockSpec((s, n), lambda g: (g, 0)),
+            pl.BlockSpec((s,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda g: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=INTERPRET,
+    )(a, y)
+
+
+# ---------------------------------------------------------------------------
+# bicg — s = Aᵀ·r and q = A·p in a single multi-strided pass over A.
+# ---------------------------------------------------------------------------
+
+
+def bicg(a, r, p, *, stride_unroll=4):
+    """BiCG sub-kernel: one sweep of A feeds both reductions, exactly like
+    the paper's fused loop (Table 1: n+2 load streams)."""
+    m, n = a.shape
+    s = stride_unroll
+    _check_rows(m, s, "bicg")
+
+    def kernel(a_ref, r_ref, p_ref, s_ref, q_ref):
+        g = pl.program_id(0)
+
+        @pl.when(g == 0)
+        def _init():
+            s_ref[...] = jnp.zeros_like(s_ref)
+
+        blk = a_ref[...]
+        s_ref[...] += jnp.sum(blk * r_ref[...][:, None], axis=0)
+        q_ref[...] = blk @ p_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s,),
+        in_specs=[
+            pl.BlockSpec((s, n), lambda g: (g, 0)),
+            pl.BlockSpec((s,), lambda g: (g,)),
+            pl.BlockSpec((n,), lambda g: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n,), lambda g: (0,)),
+            pl.BlockSpec((s,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), a.dtype),
+            jax.ShapeDtypeStruct((m,), a.dtype),
+        ],
+        interpret=INTERPRET,
+    )(a, r, p)
+
+
+# ---------------------------------------------------------------------------
+# gemverouter — A += u1·v1ᵀ + u2·v2ᵀ: stride unroll over updated rows.
+# ---------------------------------------------------------------------------
+
+
+def gemverouter(a, u1, v1, u2, v2, *, stride_unroll=4):
+    """Double rank-1 update with S row streams per grid step."""
+    m, n = a.shape
+    s = stride_unroll
+    _check_rows(m, s, "gemverouter")
+
+    def kernel(a_ref, u1_ref, v1_ref, u2_ref, v2_ref, o_ref):
+        o_ref[...] = (
+            a_ref[...]
+            + u1_ref[...][:, None] * v1_ref[...][None, :]
+            + u2_ref[...][:, None] * v2_ref[...][None, :]
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // s,),
+        in_specs=[
+            pl.BlockSpec((s, n), lambda g: (g, 0)),
+            pl.BlockSpec((s,), lambda g: (g,)),
+            pl.BlockSpec((n,), lambda g: (0,)),
+            pl.BlockSpec((s,), lambda g: (g,)),
+            pl.BlockSpec((n,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((s, n), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=INTERPRET,
+    )(a, u1, v1, u2, v2)
+
+
+# ---------------------------------------------------------------------------
+# gemversum — x = x + z: 1-D, loop-blocked into S partitions (Table 1 LB).
+# ---------------------------------------------------------------------------
+
+
+def gemversum(x, z, *, stride_unroll=4):
+    """Vector sum update; the 1-D axis is loop-blocked so each grid step
+    advances S partition streams (the paper's LB transformation)."""
+    (n,) = x.shape
+    s = stride_unroll
+    _check_rows(n, s, "gemversum")
+    part = n // s
+    x2 = x.reshape(s, part)
+    z2 = z.reshape(s, part)
+
+    def kernel(x_ref, z_ref, o_ref):
+        o_ref[...] = x_ref[...] + z_ref[...]
+
+    # Grid walks the partition axis; every step touches all S partitions at
+    # the same offset — S concurrent streams.
+    blk = min(part, 512)
+    steps = part // blk if part % blk == 0 else 1
+    if part % blk != 0:
+        blk = part
+    out = pl.pallas_call(
+        kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((s, blk), lambda g: (0, g)),
+            pl.BlockSpec((s, blk), lambda g: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((s, blk), lambda g: (0, g)),
+        out_shape=jax.ShapeDtypeStruct((s, part), x.dtype),
+        interpret=INTERPRET,
+    )(x2, z2)
+    return out.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# conv — 3×3 valid convolution: S output-row streams per grid step, input
+# window loaded as an (S+2)-row dynamic slice (rows overlap between steps,
+# the n+2-load-stream pattern of Table 1).
+# ---------------------------------------------------------------------------
+
+
+def conv3x3(img, w, *, stride_unroll=4):
+    """Multi-strided 3×3 stencil."""
+    h, wd = img.shape
+    oh, ow = h - 2, wd - 2
+    s = stride_unroll
+    _check_rows(oh, s, "conv3x3")
+
+    def kernel(img_ref, w_ref, o_ref):
+        g = pl.program_id(0)
+        x = pl.load(img_ref, (pl.ds(g * s, s + 2), slice(None)))
+        wv = w_ref[...]
+        acc = jnp.zeros((s, ow), dtype=o_ref.dtype)
+        for di in range(3):
+            for dj in range(3):
+                acc += wv[di, dj] * jax.lax.dynamic_slice(x, (di, dj), (s, ow))
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(oh // s,),
+        in_specs=[
+            pl.BlockSpec((h, wd), lambda g: (0, 0)),  # full image; window DMA'd
+            pl.BlockSpec((3, 3), lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, ow), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), img.dtype),
+        interpret=INTERPRET,
+    )(img, w)
+
+
+# ---------------------------------------------------------------------------
+# jacobi2d — one 5-point sweep, interior only; borders handled at L2.
+# ---------------------------------------------------------------------------
+
+
+def jacobi2d_interior(a, *, stride_unroll=5):
+    """Interior of one Jacobi sweep with S row streams per grid step."""
+    h, w = a.shape
+    ih, iw = h - 2, w - 2
+    s = stride_unroll
+    _check_rows(ih, s, "jacobi2d")
+
+    def kernel(a_ref, o_ref):
+        g = pl.program_id(0)
+        x = pl.load(a_ref, (pl.ds(g * s, s + 2), slice(None)))
+        c = jax.lax.dynamic_slice(x, (1, 1), (s, iw))
+        west = jax.lax.dynamic_slice(x, (1, 0), (s, iw))
+        east = jax.lax.dynamic_slice(x, (1, 2), (s, iw))
+        north = jax.lax.dynamic_slice(x, (0, 1), (s, iw))
+        south = jax.lax.dynamic_slice(x, (2, 1), (s, iw))
+        o_ref[...] = 0.2 * (c + west + east + north + south)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(ih // s,),
+        in_specs=[pl.BlockSpec((h, w), lambda g: (0, 0))],
+        out_specs=pl.BlockSpec((s, iw), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((ih, iw), a.dtype),
+        interpret=INTERPRET,
+    )(a)
+
+
+def jacobi2d(a, *, stride_unroll=5):
+    """Full Jacobi step: interior via the Pallas kernel, borders copied."""
+    a = jnp.asarray(a)
+    interior = jacobi2d_interior(a, stride_unroll=stride_unroll)
+    return a.at[1:-1, 1:-1].set(interior)
+
+
+# Isolated doitgen is tmxv by construction (§6.1 of the paper).
+doitgen = functools.partial(tmxv)

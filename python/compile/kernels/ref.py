@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the L1 correctness references: each function computes the same
+mathematical result as its multi-strided Pallas counterpart in
+``multistride.py`` using plain ``jax.numpy`` ops, with no Pallas, no custom
+blocking, and no manual scheduling. ``python/tests`` asserts allclose
+between the two across randomized shapes (hypothesis).
+"""
+
+import jax.numpy as jnp
+
+
+def mxv(a, x):
+    """y = A · x."""
+    return a @ x
+
+
+def tmxv(a, y):
+    """x = Aᵀ · y (the paper's Listing 1 / gemvermxv1 / isolated doitgen)."""
+    return a.T @ y
+
+
+def bicg(a, r, p):
+    """BiCG sub-kernel: s = Aᵀ·r, q = A·p."""
+    return a.T @ r, a @ p
+
+
+def gemverouter(a, u1, v1, u2, v2):
+    """Double rank-1 update: A + u1·v1ᵀ + u2·v2ᵀ."""
+    return a + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+
+
+def gemversum(x, z):
+    """Vector sum update: x + z."""
+    return x + z
+
+
+def gemver(a, u1, v1, u2, v2, y, z, x, w, alpha, beta):
+    """The full PolyBench gemver kernel (four parts composed)."""
+    a2 = gemverouter(a, u1, v1, u2, v2)
+    x1 = x + beta * (a2.T @ y)
+    x2 = gemversum(x1, z)
+    w1 = w + alpha * (a2 @ x2)
+    return a2, x2, w1
+
+
+def conv3x3(img, w):
+    """Valid-mode 3×3 convolution (correlation, like the paper's stencil)."""
+    h, wd = img.shape
+    acc = jnp.zeros((h - 2, wd - 2), dtype=img.dtype)
+    for di in range(3):
+        for dj in range(3):
+            acc = acc + w[di, dj] * img[di : di + h - 2, dj : dj + wd - 2]
+    return acc
+
+
+def jacobi2d(a):
+    """One 5-point Jacobi sweep over the interior; borders copied."""
+    a = jnp.asarray(a)
+    interior = 0.2 * (
+        a[1:-1, 1:-1] + a[1:-1, :-2] + a[1:-1, 2:] + a[:-2, 1:-1] + a[2:, 1:-1]
+    )
+    return a.at[1:-1, 1:-1].set(interior)
+
+
+def doitgen(a1, c4):
+    """Isolated doitgen inner step: sum_p = Σ_s A1[s] · C4[s, p]."""
+    return a1 @ c4

@@ -1,0 +1,53 @@
+"""L2 — the JAX compute graphs the Rust runtime executes.
+
+Each function here is the *model layer*: a jitted JAX computation whose
+memory-bound hot spots are the L1 Pallas kernels in
+``compile/kernels/multistride.py``. ``compile/aot.py`` lowers these once to
+HLO text; Python never runs on the Rust request path.
+
+All functions return tuples (the AOT bridge lowers with
+``return_tuple=True``; the Rust side unwraps in order).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import multistride as ms
+
+
+def mxv(a, x):
+    """y = A·x through the multi-strided Pallas kernel."""
+    return (ms.mxv(a, x),)
+
+
+def bicg(a, r, p):
+    """BiCG sub-kernel: (s, q) in one fused multi-strided sweep of A."""
+    s, q = ms.bicg(a, r, p)
+    return (s, q)
+
+
+def conv(img, w):
+    """3×3 valid convolution."""
+    return (ms.conv3x3(img, w),)
+
+
+def jacobi2d(a):
+    """One Jacobi sweep (interior Pallas kernel + border copy)."""
+    return (ms.jacobi2d(a),)
+
+
+def doitgen(a1, c4):
+    """Isolated doitgen step (transposed MxV)."""
+    return (ms.doitgen(c4, a1),)
+
+
+def gemver(a, u1, v1, u2, v2, y, z, x, w):
+    """The full gemver kernel: all four parts composed from the L1 kernels,
+    mirroring how §6.4 reassembles the compute kernel from its individually
+    tuned steps (α = β = 1 like PolyBench's defaults scaled)."""
+    alpha = jnp.float32(1.5)
+    beta = jnp.float32(1.2)
+    a2 = ms.gemverouter(a, u1, v1, u2, v2)
+    x1 = x + beta * ms.tmxv(a2, y)
+    x2 = ms.gemversum(x1, z)
+    w1 = w + alpha * ms.mxv(a2, x2)
+    return (a2, x2, w1)

@@ -1,0 +1,143 @@
+"""L1 correctness: every multi-strided Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and stride-unroll factors; the key property is the
+paper's own invariant — multi-striding is a *schedule* change, so the
+numeric result must be identical (up to fp reassociation) to the
+single-strided and pure-jnp computations for every configuration.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import multistride as ms
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+def close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# --- fixed-shape smoke (fast, always run) ----------------------------------
+
+
+class TestFixedShapes:
+    def test_mxv(self):
+        a, x = rand(16, 32), rand(32)
+        close(ms.mxv(a, x), ref.mxv(a, x))
+
+    def test_tmxv(self):
+        a, y = rand(16, 32), rand(16)
+        close(ms.tmxv(a, y), ref.tmxv(a, y))
+
+    def test_bicg(self):
+        a, r, p = rand(16, 32), rand(16), rand(32)
+        s, q = ms.bicg(a, r, p)
+        s_ref, q_ref = ref.bicg(a, r, p)
+        close(s, s_ref)
+        close(q, q_ref)
+
+    def test_gemverouter(self):
+        a, u1, v1, u2, v2 = rand(16, 24), rand(16), rand(24), rand(16), rand(24)
+        close(ms.gemverouter(a, u1, v1, u2, v2), ref.gemverouter(a, u1, v1, u2, v2))
+
+    def test_gemversum(self):
+        x, z = rand(256), rand(256)
+        close(ms.gemversum(x, z), ref.gemversum(x, z))
+
+    def test_conv3x3(self):
+        img, w = rand(18, 34), rand(3, 3)
+        close(ms.conv3x3(img, w), ref.conv3x3(img, w))
+
+    def test_jacobi2d(self):
+        a = rand(22, 34)
+        close(ms.jacobi2d(a), ref.jacobi2d(a))
+
+    def test_doitgen(self):
+        a1, c4 = rand(16), rand(16, 32)
+        close(ms.doitgen(c4, a1), ref.doitgen(a1, c4))
+
+
+# --- the headline invariant: schedules don't change numerics ----------------
+
+
+class TestStrideUnrollInvariance:
+    """Multi-striding is a pure schedule transformation (§5.1): every
+    stride-unroll factor must produce the same values."""
+
+    def test_mxv_all_strides(self):
+        a, x = rand(24, 16), rand(16)
+        base = np.asarray(ms.mxv(a, x, stride_unroll=1))
+        for s in (2, 3, 4, 6, 8, 12, 24):
+            close(ms.mxv(a, x, stride_unroll=s), base)
+
+    def test_tmxv_all_strides(self):
+        a, y = rand(24, 16), rand(24)
+        base = np.asarray(ms.tmxv(a, y, stride_unroll=1))
+        for s in (2, 3, 4, 6, 8, 12, 24):
+            close(ms.tmxv(a, y, stride_unroll=s), base)
+
+    def test_conv_all_strides(self):
+        img, w = rand(26, 20), rand(3, 3)
+        base = np.asarray(ms.conv3x3(img, w, stride_unroll=1))
+        for s in (2, 3, 4, 6, 8, 12, 24):
+            close(ms.conv3x3(img, w, stride_unroll=s), base)
+
+    def test_indivisible_stride_rejected(self):
+        a, x = rand(10, 8), rand(8)
+        with pytest.raises(ValueError, match="not divisible"):
+            ms.mxv(a, x, stride_unroll=4)
+
+
+# --- hypothesis sweeps -------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mb=dims, nb=dims, s=st.sampled_from([1, 2, 4]))
+def test_mxv_hypothesis(mb, nb, s):
+    m, n = mb * 4, nb * 4
+    a, x = rand(m, n), rand(n)
+    close(ms.mxv(a, x, stride_unroll=s), ref.mxv(a, x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(mb=dims, nb=dims, s=st.sampled_from([1, 2, 4]))
+def test_bicg_hypothesis(mb, nb, s):
+    m, n = mb * 4, nb * 4
+    a, r, p = rand(m, n), rand(m), rand(n)
+    s_got, q_got = ms.bicg(a, r, p, stride_unroll=s)
+    s_ref, q_ref = ref.bicg(a, r, p)
+    close(s_got, s_ref, tol=5e-4)
+    close(q_got, q_ref, tol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(hb=st.integers(2, 6), wb=st.integers(1, 6), s=st.sampled_from([1, 2, 4]))
+def test_conv_hypothesis(hb, wb, s):
+    h, w = hb * 4 + 2, wb * 8 + 2  # interior divisible by 4
+    img, wts = rand(h, w), rand(3, 3)
+    close(ms.conv3x3(img, wts, stride_unroll=s), ref.conv3x3(img, wts))
+
+
+@settings(max_examples=20, deadline=None)
+@given(hb=st.integers(2, 6), wb=st.integers(1, 6))
+def test_jacobi_hypothesis(hb, wb):
+    h, w = hb * 5 + 2, wb * 8 + 2
+    a = rand(h, w)
+    close(ms.jacobi2d(a, stride_unroll=5), ref.jacobi2d(a))
+
+
+@settings(max_examples=20, deadline=None)
+@given(nb=st.integers(1, 16), s=st.sampled_from([1, 2, 4, 8]))
+def test_gemversum_hypothesis(nb, s):
+    n = nb * 8
+    x, z = rand(n), rand(n)
+    close(ms.gemversum(x, z, stride_unroll=s), ref.gemversum(x, z))

@@ -1,0 +1,65 @@
+"""L2 + AOT pipeline tests: model graphs compose the kernels correctly and
+every artifact lowers to parseable HLO text with stable entry shapes."""
+
+import numpy as np
+import jax
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+class TestModelGraphs:
+    def test_gemver_composition_matches_reference(self):
+        n = 64
+        a, u1, v1, u2, v2 = rand(n, n), rand(n), rand(n), rand(n), rand(n)
+        y, z, x, w = rand(n), rand(n), rand(n), rand(n)
+        a2, x2, w1 = model.gemver(a, u1, v1, u2, v2, y, z, x, w)
+        ra, rx, rw = ref.gemver(
+            a, u1, v1, u2, v2, y, z, x, w, np.float32(1.5), np.float32(1.2)
+        )
+        np.testing.assert_allclose(a2, ra, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(x2, rx, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(w1, rw, rtol=1e-2, atol=1e-2)
+
+    def test_models_return_tuples(self):
+        out = model.mxv(rand(16, 32), rand(32))
+        assert isinstance(out, tuple) and len(out) == 1
+
+    def test_jacobi_preserves_borders(self):
+        a = rand(32, 64)
+        (b,) = model.jacobi2d(a)
+        np.testing.assert_array_equal(np.asarray(b)[0], a[0])
+        np.testing.assert_array_equal(np.asarray(b)[-1], a[-1])
+        np.testing.assert_array_equal(np.asarray(b)[:, 0], a[:, 0])
+
+
+class TestAotLowering:
+    @pytest.mark.parametrize("name", sorted(aot.ARTIFACTS))
+    def test_lowers_to_hlo_text(self, name):
+        fn, args = aot.ARTIFACTS[name]
+        lowered = jax.jit(fn).lower(*args)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+        # Text (not proto) is the interchange contract with Rust.
+        assert "f32" in text
+
+    def test_build_writes_files(self, tmp_path):
+        written = aot.build(tmp_path, only={"mxv"})
+        assert len(written) == 1
+        assert written[0].name == "mxv.hlo.txt"
+        assert written[0].read_text().startswith("HloModule")
+
+    def test_artifact_shapes_are_the_rust_contract(self):
+        # rust/src/main.rs::validate and rust/tests assume these shapes.
+        assert aot.ARTIFACTS["mxv"][1][0].shape == (64, 128)
+        assert aot.ARTIFACTS["bicg"][1][0].shape == (64, 128)
+        assert aot.ARTIFACTS["conv"][1][0].shape == (34, 66)
+        assert aot.ARTIFACTS["jacobi2d"][1][0].shape == (32, 64)

@@ -1,0 +1,79 @@
+//! Bench harness — ablations over the design choices DESIGN.md calls out:
+//!
+//! * streamer tracker-table size (what breaks first beyond 32 streams),
+//! * per-stream outstanding-prefetch budget (the single-stride ceiling),
+//! * lookahead distance ramp,
+//! * next-page carry on/off (training cost per 4 KiB page),
+//! * write-combining pool size (the NT-store cliff position).
+//!
+//! Each ablation varies ONE knob of the calibrated Coffee Lake preset and
+//! reports the micro-benchmark read (or NT-store) curve.
+
+mod common;
+
+use multistride::config::coffee_lake;
+use multistride::kernels::micro::{MicroBench, MicroOp};
+use multistride::sim::{Engine, EngineConfig};
+
+fn read_curve(cfg_fn: impl Fn(&mut EngineConfig), bytes: u64) -> Vec<f64> {
+    [1u32, 2, 4, 8, 16, 32]
+        .iter()
+        .map(|&s| {
+            let b = MicroBench::new(MicroOp::LoadAligned, s, bytes);
+            let mut ec = EngineConfig::new(coffee_lake()).with_huge_pages(true);
+            cfg_fn(&mut ec);
+            Engine::new(ec).run(b.trace()).throughput_gib()
+        })
+        .collect()
+}
+
+fn print_curve(label: &str, curve: &[f64]) {
+    print!("{label:>44}:");
+    for v in curve {
+        print!(" {v:>6.2}");
+    }
+    println!();
+}
+
+fn main() {
+    let bytes = common::scale().micro_bytes;
+    println!("aligned-read GiB/s at strides [1 2 4 8 16 32], {} MiB array\n", bytes >> 20);
+
+    print_curve("calibrated baseline", &read_curve(|_| {}, bytes));
+
+    for table in [8u32, 16, 32, 48, 64] {
+        let c = read_curve(|ec| ec.prefetch.streamer.table_size = table, bytes);
+        print_curve(&format!("streamer table_size={table}"), &c);
+    }
+    println!();
+    for outs in [4u32, 8, 16, 24] {
+        let c = read_curve(|ec| ec.prefetch.streamer.per_stream_outstanding = outs, bytes);
+        print_curve(&format!("per_stream_outstanding={outs}"), &c);
+    }
+    println!();
+    for dist in [8u32, 16, 24, 32] {
+        let c = read_curve(|ec| ec.prefetch.streamer.max_distance = dist, bytes);
+        print_curve(&format!("max_distance={dist}"), &c);
+    }
+    println!();
+    for carry in [true, false] {
+        let c = read_curve(|ec| ec.prefetch.streamer.next_page_carry = carry, bytes);
+        print_curve(&format!("next_page_carry={carry}"), &c);
+    }
+    println!();
+    // WC pool: where does the interleaved NT-store cliff sit?
+    println!("interleaved NT-store GiB/s at strides [1 2 4 8 16 32]:");
+    for entries in [6u32, 10, 14, 20] {
+        let curve: Vec<f64> = [1u32, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&s| {
+                let b = MicroBench::new(MicroOp::StoreNt, s, bytes).interleaved();
+                let mut ec = EngineConfig::new(coffee_lake()).with_huge_pages(true);
+                ec.machine.wc.entries = entries;
+                Engine::new(ec).run(b.trace()).throughput_gib()
+            })
+            .collect();
+        print_curve(&format!("wc entries={entries}"), &curve);
+    }
+    println!("\nreading: the cliff moves right as the WC pool grows — the §4.4 mechanism.");
+}

@@ -1,0 +1,27 @@
+//! Shared helpers for the bench harnesses.
+//!
+//! criterion is unavailable offline; each bench binary (`harness = false`)
+//! is a self-timed harness that regenerates one paper table/figure and
+//! prints wall-clock cost. `MULTISTRIDE_BENCH_SMOKE=1` switches to the
+//! smoke scale for quick runs.
+
+use multistride::config::ScaleConfig;
+use std::time::Instant;
+
+/// Scale selected by the environment.
+pub fn scale() -> ScaleConfig {
+    if std::env::var("MULTISTRIDE_BENCH_SMOKE").is_ok() {
+        ScaleConfig::smoke()
+    } else {
+        ScaleConfig::default()
+    }
+}
+
+/// Run a named stage, print its wall-clock time, return its value.
+pub fn stage<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    eprintln!("[bench] {name} ...");
+    let t = Instant::now();
+    let v = f();
+    eprintln!("[bench] {name}: {:.2} s", t.elapsed().as_secs_f64());
+    v
+}

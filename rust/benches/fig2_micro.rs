@@ -1,0 +1,37 @@
+//! Bench harness — Figure 2: micro-benchmark throughput for every
+//! data-movement instruction class across stride counts, prefetcher
+//! on/off, on the Coffee Lake preset (the paper's §4 platform).
+
+mod common;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::figure2;
+use multistride::report::figures::render_micro_grid;
+
+fn main() {
+    let scale = common::scale();
+    let points = common::stage("figure 2 grid", || figure2(coffee_lake(), scale, false));
+    print!("{}", render_micro_grid(&points, "Figure 2 — micro-benchmark throughput"));
+
+    // Headline check the paper states in §4.3: ~33% read gain at 16 strides.
+    let at = |s: u32, pf: bool| {
+        points
+            .iter()
+            .find(|p| {
+                p.strides == s
+                    && p.prefetch == pf
+                    && !p.interleaved
+                    && p.op == multistride::kernels::micro::MicroOp::LoadAligned
+            })
+            .map(|p| p.throughput_gib)
+            .unwrap_or(0.0)
+    };
+    println!(
+        "\naligned-read gain at 16 strides (pf on):  {:.2}x   (paper: 1.33x)",
+        at(16, true) / at(1, true)
+    );
+    println!(
+        "aligned-read gain at 16 strides (pf off): {:.2}x   (paper: ≤1.00x)",
+        at(16, false) / at(1, false)
+    );
+}

@@ -1,0 +1,40 @@
+//! Bench harness — Figure 5: the power-of-two cache-collision experiment.
+//! Same grid as Figure 2 but over an exactly-power-of-two array, so equally
+//! spaced strides alias to the same cache sets (§4.5).
+
+mod common;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::figure2;
+use multistride::kernels::micro::MicroOp;
+use multistride::report::figures::render_micro_grid;
+
+fn main() {
+    let scale = common::scale();
+    let pow2 = common::stage("figure 5 grid (pow2 array)", || figure2(coffee_lake(), scale, true));
+    print!("{}", render_micro_grid(&pow2, "Figure 5 — power-of-two array"));
+
+    let nonpow2 = common::stage("figure 2 reference points", || {
+        use multistride::coordinator::experiments::run_micro;
+        [8u32, 16, 32]
+            .iter()
+            .map(|&s| run_micro(coffee_lake(), MicroOp::LoadAligned, s, scale.micro_bytes, true, false))
+            .collect::<Vec<_>>()
+    });
+    println!("\naligned reads, pow2 vs non-pow2 array (pf on):");
+    for p in &nonpow2 {
+        let bad = pow2
+            .iter()
+            .find(|q| {
+                q.op == MicroOp::LoadAligned && q.strides == p.strides && q.prefetch && !q.interleaved
+            })
+            .unwrap();
+        println!(
+            "  {:>2} strides: {:>6.2} GiB/s -> {:>6.2} GiB/s ({:.0}% of non-pow2; paper: collapse)",
+            p.strides,
+            p.throughput_gib,
+            bad.throughput_gib,
+            100.0 * bad.throughput_gib / p.throughput_gib
+        );
+    }
+}

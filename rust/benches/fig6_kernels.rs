@@ -1,0 +1,38 @@
+//! Bench harness — Figure 6: the striding optimization space of every
+//! isolated kernel, plus the green/red reference lines (best single-strided
+//! and no-unroll) and the multi-striding speedup summary.
+
+mod common;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::{figure6_kernels, summarize_kernel};
+
+fn main() {
+    let scale = common::scale();
+    let machine = coffee_lake();
+    let max_total = if std::env::var("MULTISTRIDE_BENCH_SMOKE").is_ok() { 10 } else { 24 };
+
+    println!(
+        "{:>12} | {:>22} | {:>12} | {:>10} | {:>8}",
+        "kernel", "best multi (s x p)", "GiB/s", "single", "speedup"
+    );
+    let mut gains = Vec::new();
+    for kernel in figure6_kernels() {
+        let s = common::stage(&format!("sweep {kernel}"), || {
+            summarize_kernel(machine, kernel, scale.kernel_bytes, max_total)
+        });
+        println!(
+            "{:>12} | {:>14} {:>3} x {:<3} | {:>12.2} | {:>10.2} | {:>7.2}x",
+            kernel,
+            "",
+            s.best_multi.config.stride_unroll,
+            s.best_multi.config.portion_unroll,
+            s.best_multi.throughput_gib,
+            s.best_single.throughput_gib,
+            s.multi_over_single()
+        );
+        gains.push(s.multi_over_single());
+    }
+    let geo = multistride::util::stats::geomean(&gains);
+    println!("\ngeomean multi-over-single speedup: {geo:.3}x (paper band: 1.02x–1.58x)");
+}

@@ -1,0 +1,24 @@
+//! Bench harness — Figure 7: best multi-strided kernels vs the reference
+//! implementation models (CLang / Polly / no-unroll / best single-strided /
+//! MKL / OpenBLAS / Halide×3 / OpenCV) on all three machine presets.
+
+mod common;
+
+use multistride::config::MachinePreset;
+use multistride::coordinator::experiments::{figure7, figure7_kernels};
+use multistride::report::figures::render_comparison;
+
+fn main() {
+    let scale = common::scale();
+    let max_total = if std::env::var("MULTISTRIDE_BENCH_SMOKE").is_ok() { 8 } else { 20 };
+    for preset in MachinePreset::all() {
+        let machine = preset.config();
+        for kernel in figure7_kernels() {
+            let rows = common::stage(&format!("{} / {kernel}", machine.name), || {
+                figure7(machine, kernel, scale.kernel_bytes, max_total)
+            });
+            print!("{}", render_comparison(machine.name, &rows));
+            println!();
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Bench harness — simulator hot path: simulated vector accesses per
+//! second, per configuration class. This is the §Perf instrument: the
+//! paper harnesses sweep hundreds of configurations, so the simulator's
+//! access rate bounds total experiment wall-clock.
+
+mod common;
+
+use std::time::Instant;
+
+use multistride::config::coffee_lake;
+use multistride::kernels::library::kernel_by_name;
+use multistride::kernels::micro::{MicroBench, MicroOp};
+use multistride::sim::{Engine, EngineConfig};
+use multistride::trace::KernelTrace;
+use multistride::transform::{transform, StridingConfig};
+
+fn rate(label: &str, accesses: u64, f: impl FnOnce()) {
+    let t = Instant::now();
+    f();
+    let s = t.elapsed().as_secs_f64();
+    println!("{label:>42}: {:>8.2} M accesses/s ({accesses} accesses, {s:.3} s)", accesses as f64 / s / 1e6);
+}
+
+fn main() {
+    let m = coffee_lake();
+    let bytes = 32 * 1024 * 1024u64;
+
+    for (label, strides, pf) in [
+        ("micro read, 1 stride, pf on", 1u32, true),
+        ("micro read, 16 strides, pf on", 16, true),
+        ("micro read, 16 strides, pf off", 16, false),
+    ] {
+        let b = MicroBench::new(MicroOp::LoadAligned, strides, bytes);
+        let n = b.trace_len();
+        rate(label, n, || {
+            let mut e = Engine::new(EngineConfig::new(m).with_prefetch(pf).with_huge_pages(true));
+            let _ = e.run(b.trace());
+        });
+    }
+
+    for (label, op) in [
+        ("micro NT store, 16 strides", MicroOp::StoreNt),
+        ("micro copy, 8 strides", MicroOp::CopyAligned),
+    ] {
+        let strides = if op == MicroOp::StoreNt { 16 } else { 8 };
+        let b = MicroBench::new(op, strides, bytes);
+        let n = b.trace_len();
+        rate(label, n, || {
+            let mut e = Engine::new(EngineConfig::new(m).with_huge_pages(true));
+            let _ = e.run(b.trace());
+        });
+    }
+
+    // Kernel trace generation + simulation.
+    let pk = kernel_by_name("mxv", bytes).unwrap();
+    for (label, cfg) in [
+        ("mxv trace gen only, s=4 p=2", StridingConfig::new(4, 2)),
+        ("mxv simulate, s=1 p=8", StridingConfig::new(1, 8)),
+        ("mxv simulate, s=8 p=1", StridingConfig::new(8, 1)),
+    ] {
+        let t = transform(&pk.spec, cfg).unwrap();
+        let kt = KernelTrace::new(t);
+        let n = kt.len_estimate();
+        if label.contains("gen only") {
+            rate(label, n, || {
+                let mut sink = 0u64;
+                for a in kt.iter() {
+                    sink ^= a.addr;
+                }
+                std::hint::black_box(sink);
+            });
+        } else {
+            rate(label, n, || {
+                let mut e = Engine::new(EngineConfig::new(m));
+                let _ = e.run(kt.iter());
+            });
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Bench harness — Tables 1 and 2: the kernel overview (with stride-stream
+//! profiles computed from the transform) and the machine presets.
+
+mod common;
+
+use multistride::config::MachinePreset;
+use multistride::kernels::library::paper_kernels;
+use multistride::report::table::Table;
+use multistride::transform::{stride_profile, transform, StridingConfig};
+
+fn main() {
+    let scale = common::scale();
+
+    let mut t1 = Table::new(&["name", "AT", "L", "S", "L/S", "IN", "WB", "LE", "LI", "LB"])
+        .with_title("Table 1 — stride columns computed at n=4");
+    for pk in paper_kernels(scale.kernel_bytes) {
+        let prof = transform(&pk.spec, StridingConfig::new(4, 2))
+            .map(|tr| stride_profile(&tr))
+            .expect("library kernels transform");
+        let yn = |b: bool| if b { "Y" } else { "" }.to_string();
+        t1.row(vec![
+            pk.name.clone(),
+            if pk.aligned { "A" } else { "U" }.into(),
+            prof.loads.to_string(),
+            prof.stores.to_string(),
+            prof.loadstores.to_string(),
+            yn(pk.has_init),
+            yn(pk.has_writeback),
+            if pk.loop_embedment > 0 { pk.loop_embedment.to_string() } else { String::new() },
+            yn(pk.loop_interchange),
+            yn(pk.loop_blocking),
+        ]);
+    }
+    t1.print();
+    println!();
+
+    let mut t2 = Table::new(&["machine", "freq", "L2", "L3", "paper BW", "model BW"])
+        .with_title("Table 2 — machine presets vs modeled rooflines");
+    for p in MachinePreset::all() {
+        let m = p.config();
+        t2.row(vec![
+            m.name.into(),
+            format!("{:.1} GHz", m.freq_ghz),
+            format!("{} KiB/{}w", m.l2.size_bytes / 1024, m.l2.ways),
+            format!("{:.1} MiB/{}w", m.l3.size_bytes as f64 / 1048576.0, m.l3.ways),
+            format!("{:.2}", m.bandwidth_gib),
+            format!("{:.2}", m.model_peak_gib()),
+        ]);
+    }
+    t2.print();
+}

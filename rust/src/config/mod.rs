@@ -1,0 +1,10 @@
+//! Experiment configuration: machine presets (Table 2 of the paper), data
+//! scaling, and a TOML-subset loader for user-supplied experiment files.
+
+pub mod machines;
+pub mod scale;
+pub mod toml_file;
+
+pub use machines::{cascade_lake, coffee_lake, zen2, MachineConfig, MachinePreset};
+pub use scale::ScaleConfig;
+pub use toml_file::ExperimentFile;

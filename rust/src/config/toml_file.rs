@@ -1,0 +1,249 @@
+//! Minimal TOML-subset parser for experiment files.
+//!
+//! No third-party crates are available offline, so the config system ships
+//! its own parser covering the subset experiment files need: `[section]`
+//! headers, `key = value` with string / integer / float / boolean / array
+//! values, `#` comments and blank lines.
+//!
+//! ```toml
+//! [experiment]
+//! machine = "coffee-lake"
+//! strides = [1, 2, 4, 8, 16, 32]
+//! prefetch = true
+//! array_mib = 60
+//! ```
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_int_array(&self) -> Option<Vec<i64>> {
+        match self {
+            Value::Array(vs) => vs.iter().map(|v| v.as_int()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed experiment file: `section -> key -> value`.
+#[derive(Debug, Default, Clone)]
+pub struct ExperimentFile {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// Parse error with a line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl ExperimentFile {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut out = ExperimentFile::default();
+        let mut section = String::new();
+        out.sections.entry(section.clone()).or_default();
+
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| ParseError {
+                line: ln + 1,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let value = parse_value(val.trim()).map_err(|msg| ParseError { line: ln + 1, msg })?;
+            out.sections
+                .get_mut(&section)
+                .expect("section exists")
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let body = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let body = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if body.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = split_top_level(body)
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body on commas that are not nested in sub-arrays/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let f = ExperimentFile::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n[s]\ne = false\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("", "a").unwrap().as_int(), Some(1));
+        assert_eq!(f.get("", "b").unwrap().as_float(), Some(2.5));
+        assert_eq!(f.get("", "c").unwrap().as_str(), Some("hi"));
+        assert_eq!(f.get("", "d").unwrap().as_bool(), Some(true));
+        assert_eq!(f.get("s", "e").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let f = ExperimentFile::parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nzs = []\n").unwrap();
+        assert_eq!(f.get("", "xs").unwrap().as_int_array(), Some(vec![1, 2, 3]));
+        match f.get("", "ys").unwrap() {
+            Value::Array(vs) => assert_eq!(vs.len(), 2),
+            v => panic!("{v:?}"),
+        }
+        assert_eq!(f.get("", "zs").unwrap().as_int_array(), Some(vec![]));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let f = ExperimentFile::parse("# header\nn = 1_000_000 # inline\ns = \"a # b\"\n").unwrap();
+        assert_eq!(f.get("", "n").unwrap().as_int(), Some(1_000_000));
+        assert_eq!(f.get("", "s").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = ExperimentFile::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = ExperimentFile::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn int_array_of_mixed_fails_gracefully() {
+        let f = ExperimentFile::parse("xs = [1, \"two\"]\n").unwrap();
+        assert_eq!(f.get("", "xs").unwrap().as_int_array(), None);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let f = ExperimentFile::parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        match f.get("", "m").unwrap() {
+            Value::Array(rows) => {
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0].as_int_array(), Some(vec![1, 2]));
+            }
+            v => panic!("{v:?}"),
+        }
+    }
+}

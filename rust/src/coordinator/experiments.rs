@@ -1,0 +1,375 @@
+//! One driver per paper figure/table. Each returns structured data; the
+//! [`crate::report`] layer renders it in the paper's format.
+
+use crate::config::{MachineConfig, ScaleConfig};
+use crate::kernels::library::{kernel_by_name, paper_kernels};
+use crate::kernels::micro::{MicroBench, MicroOp};
+use crate::kernels::reference::Reference;
+use crate::sim::{Engine, EngineConfig, RunResult};
+use crate::trace::KernelTrace;
+use crate::transform::{enumerate_configs, is_feasible, transform, StridingConfig};
+
+use super::pool::{default_workers, parallel_map};
+
+/// The stride counts the micro-benchmarks sweep (divisors of 32).
+pub const MICRO_STRIDES: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+/// One measured micro-benchmark point.
+#[derive(Debug, Clone)]
+pub struct MicroPoint {
+    pub op: MicroOp,
+    pub strides: u32,
+    pub interleaved: bool,
+    pub prefetch: bool,
+    pub throughput_gib: f64,
+    pub result: RunResult,
+}
+
+/// Run one micro-benchmark configuration (§4 protocol: huge pages on).
+pub fn run_micro(
+    machine: MachineConfig,
+    op: MicroOp,
+    strides: u32,
+    bytes: u64,
+    prefetch: bool,
+    interleaved: bool,
+) -> MicroPoint {
+    let mut bench = MicroBench::new(op, strides, bytes);
+    if interleaved {
+        bench = bench.interleaved();
+    }
+    let mut engine =
+        Engine::new(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(true));
+    let result = engine.run(bench.trace());
+    MicroPoint {
+        op,
+        strides,
+        interleaved,
+        prefetch,
+        throughput_gib: result.throughput_gib(),
+        result,
+    }
+}
+
+/// Figure 2 / Figure 5: the micro-benchmark throughput grid for one array
+/// size. `pow2 = true` reproduces Figure 5's 2-GiB-analog collision setup.
+pub fn figure2(machine: MachineConfig, scale: ScaleConfig, pow2: bool) -> Vec<MicroPoint> {
+    let bytes = if pow2 { scale.micro_pow2_bytes } else { scale.micro_bytes };
+    let mut jobs = Vec::new();
+    for prefetch in [true, false] {
+        for op in MicroOp::all() {
+            for &s in &MICRO_STRIDES {
+                jobs.push((op, s, prefetch, false));
+                // The §4.4 interleaved-NT-store variant.
+                if op == MicroOp::StoreNt {
+                    jobs.push((op, s, prefetch, true));
+                }
+            }
+        }
+    }
+    parallel_map(jobs, default_workers(), |&(op, s, prefetch, inter)| {
+        run_micro(machine, op, s, bytes, prefetch, inter)
+    })
+}
+
+/// Figure 3 + Figure 4 series: stall cycles and hit ratios for the aligned
+/// read micro-benchmark across stride counts, prefetch on/off.
+pub fn figure3_4(machine: MachineConfig, scale: ScaleConfig) -> Vec<MicroPoint> {
+    let mut jobs = Vec::new();
+    for prefetch in [true, false] {
+        for &s in &MICRO_STRIDES {
+            jobs.push((MicroOp::LoadAligned, s, prefetch, false));
+        }
+    }
+    parallel_map(jobs, default_workers(), |&(op, s, prefetch, inter)| {
+        run_micro(machine, op, s, scale.micro_bytes, prefetch, inter)
+    })
+}
+
+/// One point of the Figure 6 kernel sweep.
+#[derive(Debug, Clone)]
+pub struct KernelPoint {
+    pub kernel: String,
+    pub config: StridingConfig,
+    pub prefetch: bool,
+    pub feasible: bool,
+    pub throughput_gib: f64,
+}
+
+/// Run one kernel configuration through the simulator (§6 protocol:
+/// default 4 KiB pages, aligned+interleaved loop bodies kept as generated).
+pub fn run_kernel(
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    config: StridingConfig,
+    prefetch: bool,
+) -> Option<KernelPoint> {
+    let pk = kernel_by_name(kernel, budget)?;
+    let t = transform(&pk.spec, config).ok()?;
+    let feasible = is_feasible(&t, machine.simd_registers);
+    if !feasible {
+        return Some(KernelPoint {
+            kernel: kernel.to_string(),
+            config,
+            prefetch,
+            feasible,
+            throughput_gib: 0.0,
+        });
+    }
+    let trace = KernelTrace::new(t);
+    // The paper reports kernel throughput as *data size / time* (§6.3
+    // compares kernels across data sizes "we report throughput rather than
+    // time"), i.e. each array counts once — not per-access traffic, which
+    // would reward cache-hit reloads.
+    let footprint = trace.transformed().spec.footprint();
+    let mut engine =
+        Engine::new(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(false));
+    let result = engine.run(trace.iter());
+    Some(KernelPoint {
+        kernel: kernel.to_string(),
+        config,
+        prefetch,
+        feasible,
+        throughput_gib: machine.gib_per_s(footprint, result.counters.cycles),
+    })
+}
+
+/// The Figure 6 unroll totals swept (the paper sweeps 1..=50; the default
+/// driver covers the same range more sparsely past 12 where divisor pairs
+/// explode — override with `max_total` for the full grid).
+pub fn figure6_totals(max_total: u32) -> Vec<u32> {
+    (1..=max_total.min(12)).chain([16, 18, 20, 24, 30, 32, 36, 40, 48, 50]).filter(|&t| t <= max_total).collect()
+}
+
+/// Figure 6: sweep the striding optimization space of one isolated kernel.
+pub fn figure6(
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    max_total: u32,
+    prefetch: bool,
+) -> Vec<KernelPoint> {
+    let mut cfgs: Vec<StridingConfig> = Vec::new();
+    for t in figure6_totals(max_total) {
+        for c in enumerate_configs(t) {
+            if c.total_unrolls() == t {
+                cfgs.push(c);
+            }
+        }
+    }
+    cfgs.dedup_by_key(|c| (c.stride_unroll, c.portion_unroll));
+    let kernel = kernel.to_string();
+    parallel_map(cfgs, default_workers(), |&cfg| {
+        run_kernel(machine, &kernel, budget, cfg, prefetch).expect("library kernel")
+    })
+    .into_iter()
+    .collect()
+}
+
+/// Pick the best feasible configuration out of a sweep.
+pub fn best_point(points: &[KernelPoint]) -> Option<&KernelPoint> {
+    points
+        .iter()
+        .filter(|p| p.feasible)
+        .max_by(|a, b| a.throughput_gib.partial_cmp(&b.throughput_gib).expect("no NaN"))
+}
+
+/// Best multi-strided vs best single-strided vs no-unroll summary
+/// (the green/red lines of Figure 6).
+#[derive(Debug, Clone)]
+pub struct KernelSummary {
+    pub kernel: String,
+    pub best_multi: KernelPoint,
+    pub best_single: KernelPoint,
+    pub no_unroll: KernelPoint,
+}
+
+impl KernelSummary {
+    /// The §6.3 headline: multi-strided speedup over the best
+    /// single-strided configuration.
+    pub fn multi_over_single(&self) -> f64 {
+        self.best_multi.throughput_gib / self.best_single.throughput_gib
+    }
+}
+
+/// Summarize a kernel's sweep into the Figure 6 reference lines.
+pub fn summarize_kernel(machine: MachineConfig, kernel: &str, budget: u64, max_total: u32) -> KernelSummary {
+    let points = figure6(machine, kernel, budget, max_total, true);
+    let best_multi = best_point(&points).expect("at least one feasible config").clone();
+    let best_single = points
+        .iter()
+        .filter(|p| p.feasible && p.config.stride_unroll == 1)
+        .max_by(|a, b| a.throughput_gib.partial_cmp(&b.throughput_gib).expect("no NaN"))
+        .expect("single-strided configs always feasible")
+        .clone();
+    let no_unroll = points
+        .iter()
+        .find(|p| p.config.stride_unroll == 1 && p.config.portion_unroll == 1)
+        .expect("no-unroll config present")
+        .clone();
+    KernelSummary { kernel: kernel.to_string(), best_multi, best_single, no_unroll }
+}
+
+/// One Figure 7 comparison row: the best multi-strided kernel against one
+/// reference implementation model.
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub kernel: String,
+    pub reference: Reference,
+    pub reference_gib: f64,
+    pub multistrided_gib: f64,
+}
+
+impl ComparisonRow {
+    pub fn speedup(&self) -> f64 {
+        self.multistrided_gib / self.reference_gib
+    }
+}
+
+/// Run a reference implementation model on a kernel.
+pub fn run_reference(
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    reference: Reference,
+) -> Option<f64> {
+    let pk = kernel_by_name(kernel, budget)?;
+    let cfg = reference.schedule();
+    let t = transform(&pk.spec, cfg).ok()?;
+    let trace = KernelTrace::new(t);
+    let footprint = trace.transformed().spec.footprint();
+    let mut engine = Engine::new(EngineConfig::new(machine).with_huge_pages(false));
+    let result = engine.run(trace.iter());
+    let mut gib = machine.gib_per_s(footprint, result.counters.cycles);
+    // References that fail to vectorize (the paper verified Polly/CLang
+    // emitted no AVX2 for these kernels) stream 4-byte elements through a
+    // serial accumulate chain: ~one element per cycle is the practical
+    // ceiling, so their data throughput is core-bound, not DRAM-bound.
+    if reference.scalar_on(kernel) {
+        // One 4-byte element every ~2 cycles: the serial FMA accumulate
+        // chain (4-5 cycle latency, partially hidden by the OoO core).
+        let scalar_bound = machine.gib_per_s(2, 1);
+        gib = gib.min(scalar_bound);
+    }
+    Some(gib)
+}
+
+/// Figure 7: compare the tuned multi-strided kernel against every
+/// applicable reference on one machine.
+pub fn figure7(machine: MachineConfig, kernel: &str, budget: u64, max_total: u32) -> Vec<ComparisonRow> {
+    let summary = summarize_kernel(machine, kernel, budget, max_total);
+    let refs = Reference::for_kernel(kernel);
+    let mut rows = Vec::new();
+    for r in refs {
+        let reference_gib = match r {
+            Reference::BestSingleStrided => summary.best_single.throughput_gib,
+            Reference::NoUnroll => summary.no_unroll.throughput_gib,
+            _ => match run_reference(machine, kernel, budget, r) {
+                Some(g) => g,
+                None => continue,
+            },
+        };
+        rows.push(ComparisonRow {
+            kernel: kernel.to_string(),
+            reference: r,
+            reference_gib,
+            multistrided_gib: summary.best_multi.throughput_gib,
+        });
+    }
+    rows
+}
+
+/// All kernels the Figure 6/7 experiments sweep.
+pub fn figure6_kernels() -> Vec<&'static str> {
+    vec![
+        "bicg",
+        "conv",
+        "doitgen",
+        "gemverouter",
+        "gemversum",
+        "jacobi2d",
+        "mxv",
+        "init",
+        "writeback",
+    ]
+}
+
+/// All kernels compared in Figure 7.
+pub fn figure7_kernels() -> Vec<&'static str> {
+    vec!["bicg", "conv", "doitgen", "gemverouter", "jacobi2d", "mxv"]
+}
+
+/// Sanity: the whole kernel library transforms under the paper's default
+/// configuration on every machine preset.
+pub fn selfcheck(budget: u64) -> crate::Result<()> {
+    for pk in paper_kernels(budget) {
+        transform(&pk.spec, StridingConfig::new(2, 2))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn micro_point_reports_throughput() {
+        let p = run_micro(coffee_lake(), MicroOp::LoadAligned, 4, 4 * MIB, true, false);
+        assert!(p.throughput_gib > 1.0, "got {}", p.throughput_gib);
+    }
+
+    #[test]
+    fn kernel_point_runs() {
+        let p = run_kernel(coffee_lake(), "mxv", 8 * MIB, StridingConfig::new(4, 1), true).unwrap();
+        assert!(p.feasible);
+        assert!(p.throughput_gib > 1.0);
+    }
+
+    #[test]
+    fn infeasible_configs_flagged_not_run() {
+        // 16×4 = 64 accumulators cannot fit 16 ymm registers.
+        let p =
+            run_kernel(coffee_lake(), "mxv", 8 * MIB, StridingConfig::new(16, 4), true).unwrap();
+        assert!(!p.feasible);
+        assert_eq!(p.throughput_gib, 0.0);
+    }
+
+    #[test]
+    fn figure6_totals_structure() {
+        let ts = figure6_totals(50);
+        assert!(ts.contains(&1) && ts.contains(&50));
+        let ts = figure6_totals(8);
+        assert!(ts.iter().all(|&t| t <= 8));
+    }
+
+    #[test]
+    fn summarize_finds_multi_advantage_mxv() {
+        let s = summarize_kernel(coffee_lake(), "mxv", 8 * MIB, 8);
+        assert!(
+            s.multi_over_single() > 1.0,
+            "multi-striding must beat single-striding on mxv: {:.3}",
+            s.multi_over_single()
+        );
+        assert!(s.best_single.throughput_gib >= s.no_unroll.throughput_gib * 0.9);
+    }
+
+    #[test]
+    fn figure7_rows_cover_references() {
+        let rows = figure7(coffee_lake(), "mxv", 8 * MIB, 6);
+        let labels: Vec<&str> = rows.iter().map(|r| r.reference.label()).collect();
+        assert!(labels.contains(&"MKL (model)"));
+        assert!(labels.contains(&"CLang"));
+        for r in &rows {
+            assert!(r.reference_gib > 0.0 && r.multistrided_gib > 0.0);
+        }
+    }
+
+    #[test]
+    fn selfcheck_passes() {
+        selfcheck(4 * MIB).unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+//! Experiment orchestration.
+//!
+//! The paper's evaluation is a large parameter sweep: 9 isolated kernels ×
+//! ~200 striding configurations × 3 machines, plus the micro-benchmark
+//! grids. [`pool::parallel_map`] fans configurations out over worker
+//! threads (each simulation is independent and single-threaded);
+//! [`experiments`] contains one driver per paper figure/table, returning
+//! structured results the [`crate::report`] layer renders.
+
+pub mod experiments;
+pub mod pool;
+
+pub use experiments::*;
+pub use pool::parallel_map;

@@ -1,0 +1,89 @@
+//! A small scoped thread pool (no rayon offline): order-preserving
+//! parallel map over independent jobs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use: `MULTISTRIDE_THREADS` env var, else the
+/// available parallelism, else 4.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("MULTISTRIDE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every job on a pool of `workers` threads, preserving input
+/// order in the output. Panics in workers propagate.
+pub fn parallel_map<J, R, F>(jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
+where
+    J: Send + Sync,
+    R: Send,
+    F: Fn(&J) -> R + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return jobs.iter().map(|j| f(j)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let jobs_ref = &jobs;
+    let f_ref = &f;
+    let next_ref = &next;
+    let results_ref = &results;
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f_ref(&jobs_ref[i]);
+                *results_ref[i].lock().expect("result slot poisoned") = Some(r);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().expect("poisoned").expect("worker completed all jobs"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<u64> = (0..100).collect();
+        let out = parallel_map(jobs, 8, |&j| j * 2);
+        assert_eq!(out, (0..100).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_map(vec![1, 2, 3], 1, |&j| j + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |&j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = parallel_map(vec![5], 16, |&j| j);
+        assert_eq!(out, vec![5]);
+    }
+}

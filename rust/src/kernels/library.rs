@@ -1,0 +1,540 @@
+//! The surveyed compute kernels of Table 1, expressed in the loop-nest IR.
+//!
+//! Sizing: each constructor takes a byte budget for the kernel's dominant
+//! array (the paper uses 2–4 GiB; the default simulator scale is 48 MiB —
+//! see [`crate::config::ScaleConfig`] for why that preserves behaviour).
+//! Matrix extents are rounded to multiples of 1024 so every striding
+//! configuration the experiments sweep divides them cleanly.
+
+use super::spec::{AccessMode, Array, ArrayAccess, IndexExpr, KernelSpec, LoopVar};
+
+/// Metadata mirroring the descriptive columns of Table 1.
+#[derive(Debug, Clone)]
+pub struct PaperKernel {
+    pub name: String,
+    pub description: &'static str,
+    /// `true` → aligned AVX2 ops (`A` in the table); `false` → unaligned
+    /// (`U`; the two stencils, because padding breaks 32-byte alignment).
+    pub aligned: bool,
+    /// Has an initialization phase (IN column).
+    pub has_init: bool,
+    /// Has a write-back phase (WB column).
+    pub has_writeback: bool,
+    /// Loop embedment: number of enclosing outer loops removed for the
+    /// isolated experiments (LE column).
+    pub loop_embedment: u32,
+    /// Loop interchange applied during transformation (LI column).
+    pub loop_interchange: bool,
+    /// Loop blocking applied (LB column).
+    pub loop_blocking: bool,
+    /// Paper's data sizes in GiB (isolated, comparison) — for Table 1.
+    pub data_gib: (f64, f64),
+    /// The kernel body.
+    pub spec: KernelSpec,
+}
+
+/// Square matrix extent for a byte budget, rounded down to a multiple of
+/// 1024 (so 1..=32-way striding configs divide it).
+fn square_extent(budget_bytes: u64) -> u64 {
+    let n = ((budget_bytes / 4) as f64).sqrt() as u64;
+    (n / 1024).max(1) * 1024
+}
+
+/// 1-D extent for a byte budget, multiple of 1024·64 elements.
+fn vec_extent(budget_bytes: u64) -> u64 {
+    let n = budget_bytes / 4;
+    (n / (1024 * 64)).max(1) * 1024 * 64
+}
+
+fn finished(mut spec: KernelSpec) -> KernelSpec {
+    spec.layout();
+    spec
+}
+
+/// `mxv`: y[i] += A[i][j] · x[j] — dense matrix-vector multiplication.
+pub fn mxv(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "mxv".into(),
+        loops: vec![LoopVar::new("i", n), LoopVar::new("j", n)],
+        arrays: vec![
+            Array::new("A", &[n, n], 4),
+            Array::new("x", &[n], 4),
+            Array::new("y", &[n], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::ReadWrite),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "mxv".into(),
+        description: "Matrix Vector Multiplication",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (4.0, 4.0),
+        spec,
+    }
+}
+
+/// `bicg`: s[j] += r[i]·A[i][j]; q[i] += A[i][j]·p[j] — the BiCG sub-kernel.
+/// `q` accumulates in a register across the row and stores once (the init
+/// phase zeroes it), hence its Table 1 classification as a store stream.
+pub fn bicg(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "bicg".into(),
+        loops: vec![LoopVar::new("i", n), LoopVar::new("j", n)],
+        arrays: vec![
+            Array::new("A", &[n, n], 4),
+            Array::new("p", &[n], 4),
+            Array::new("r", &[n], 4),
+            Array::new("s", &[n], 4),
+            Array::new("q", &[n], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(3, vec![IndexExpr::var(1)], AccessMode::ReadWrite),
+            ArrayAccess::new(4, vec![IndexExpr::var(0)], AccessMode::Write),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "bicg".into(),
+        description: "BiCG Sub Kernel of BiCGStab Linear Solver",
+        aligned: true,
+        has_init: true,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (4.0, 4.0),
+        spec,
+    }
+}
+
+/// `conv`: 3×3 2-D convolution stencil (valid mode, interior loops so every
+/// subscript is non-negative). Unaligned: the ±1-element offsets of the
+/// window break 32-byte alignment.
+pub fn conv(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let (h, w) = (n, n);
+    let mut accesses = Vec::new();
+    for di in 0..3i64 {
+        for dj in 0..3i64 {
+            accesses.push(ArrayAccess::new(
+                0,
+                vec![IndexExpr::var_plus(0, di), IndexExpr::var_plus(1, dj)],
+                AccessMode::Read,
+            ));
+        }
+    }
+    accesses.push(ArrayAccess::new(
+        1,
+        vec![IndexExpr::var(0), IndexExpr::var(1)],
+        AccessMode::Write,
+    ));
+    // Interior extents rounded to sweep-divisible multiples of 64.
+    let (ih, iw) = (((h - 2) / 64) * 64, ((w - 2) / 64) * 64);
+    let spec = finished(KernelSpec {
+        name: "conv".into(),
+        loops: vec![LoopVar::new("i", ih), LoopVar::new("j", iw)],
+        arrays: vec![Array::new("in", &[h, w], 4), Array::new("out", &[h - 2, w - 2], 4)],
+        accesses,
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "conv".into(),
+        description: "3x3 2D Convolution Stencil",
+        aligned: false,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (2.0, 2.0),
+        spec,
+    }
+}
+
+/// `doitgen` (isolated per §6.1: the two unnecessary outer loops `r, q`
+/// removed, init/write-back split off): sum[p] += A[s] · C4[s][p] — after
+/// the paper's loop interchange this is the transposed-MxV shape.
+pub fn doitgen(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "doitgen".into(),
+        loops: vec![LoopVar::new("s", n), LoopVar::new("p", n)],
+        arrays: vec![
+            Array::new("C4", &[n, n], 4),
+            Array::new("A", &[n], 4),
+            Array::new("sum", &[n], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(1)], AccessMode::ReadWrite),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "doitgen".into(),
+        description: "Multi-resolution analysis kernel (MADNESS)",
+        aligned: true,
+        has_init: true,
+        has_writeback: true,
+        loop_embedment: 2,
+        loop_interchange: true,
+        loop_blocking: false,
+        data_gib: (4.0, 0.4),
+        spec,
+    }
+}
+
+/// `gemverouter`: A[i][j] += u1[i]·v1[j] + u2[i]·v2[j] — double rank-1
+/// update.
+pub fn gemverouter(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "gemverouter".into(),
+        loops: vec![LoopVar::new("i", n), LoopVar::new("j", n)],
+        arrays: vec![
+            Array::new("A", &[n, n], 4),
+            Array::new("u1", &[n], 4),
+            Array::new("v1", &[n], 4),
+            Array::new("u2", &[n], 4),
+            Array::new("v2", &[n], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::ReadWrite),
+            ArrayAccess::new(1, vec![IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(3, vec![IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(4, vec![IndexExpr::var(1)], AccessMode::Read),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "gemverouter".into(),
+        description: "Double Rank-1 Matrix Update",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (4.0, 4.0),
+        spec,
+    }
+}
+
+/// `gemvermxv1`: x[i] += β·A[j][i]·y[j] — *transposed* matrix-vector
+/// multiplication (the paper's Listing 1; requires loop interchange).
+pub fn gemvermxv1(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "gemvermxv1".into(),
+        loops: vec![LoopVar::new("i", n), LoopVar::new("j", n)],
+        arrays: vec![
+            Array::new("A", &[n, n], 4),
+            Array::new("y", &[n], 4),
+            Array::new("x", &[n], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(1), IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::ReadWrite),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "gemvermxv1".into(),
+        description: "Transpose Matrix Vector Multiplication",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: true,
+        loop_blocking: false,
+        data_gib: (4.0, 4.0),
+        spec,
+    }
+}
+
+/// `gemversum`: x[i] = x[i] + z[i] — vector sum update (1-D; needs loop
+/// blocking to create strides). The x stream reads and writes the same
+/// positions; Table 1 lists it under separate L and S columns, our profiler
+/// reports it as a combined L/S stream (same information).
+pub fn gemversum(budget: u64) -> PaperKernel {
+    let n = vec_extent(budget / 2);
+    let spec = finished(KernelSpec {
+        name: "gemversum".into(),
+        loops: vec![LoopVar::new("i", n)],
+        arrays: vec![Array::new("x", &[n], 4), Array::new("z", &[n], 4)],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0)], AccessMode::ReadWrite),
+            ArrayAccess::new(1, vec![IndexExpr::var(0)], AccessMode::Read),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "gemversum".into(),
+        description: "Vector Sum Update",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: true,
+        data_gib: (4.0, 4.0),
+        spec,
+    }
+}
+
+/// `gemvermxv2`: w[i] += α·A[i][j]·x[j] — plain matrix-vector
+/// multiplication (same shape as `mxv`).
+pub fn gemvermxv2(budget: u64) -> PaperKernel {
+    let mut k = mxv(budget);
+    k.name = "gemvermxv2".into();
+    k.spec.name = "gemvermxv2".into();
+    k.description = "Matrix Vector Multiplication";
+    k
+}
+
+/// `jacobi2d`: B[i+1][j+1] = 0.2·(A[i+1][j+1] + A[i+1][j] + A[i+1][j+2] +
+/// A[i][j+1] + A[i+2][j+1]) — 5-point stencil over the interior.
+pub fn jacobi2d(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let (h, w) = (n, n);
+    let (ih, iw) = (((h - 2) / 64) * 64, ((w - 2) / 64) * 64);
+    let spec = finished(KernelSpec {
+        name: "jacobi2d".into(),
+        loops: vec![LoopVar::new("i", ih), LoopVar::new("j", iw)],
+        arrays: vec![Array::new("A", &[h, w], 4), Array::new("B", &[h, w], 4)],
+        accesses: vec![
+            // Center + four neighbours (all offsets non-negative: interior).
+            ArrayAccess::new(
+                0,
+                vec![IndexExpr::var_plus(0, 1), IndexExpr::var_plus(1, 1)],
+                AccessMode::Read,
+            ),
+            ArrayAccess::new(
+                0,
+                vec![IndexExpr::var_plus(0, 1), IndexExpr::var_plus(1, 0)],
+                AccessMode::Read,
+            ),
+            ArrayAccess::new(
+                0,
+                vec![IndexExpr::var_plus(0, 1), IndexExpr::var_plus(1, 2)],
+                AccessMode::Read,
+            ),
+            ArrayAccess::new(
+                0,
+                vec![IndexExpr::var_plus(0, 0), IndexExpr::var_plus(1, 1)],
+                AccessMode::Read,
+            ),
+            ArrayAccess::new(
+                0,
+                vec![IndexExpr::var_plus(0, 2), IndexExpr::var_plus(1, 1)],
+                AccessMode::Read,
+            ),
+            ArrayAccess::new(
+                1,
+                vec![IndexExpr::var_plus(0, 1), IndexExpr::var_plus(1, 1)],
+                AccessMode::Write,
+            ),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "jacobi2d".into(),
+        description: "2D Jacobi Stencil",
+        aligned: false,
+        has_init: false,
+        has_writeback: true,
+        loop_embedment: 1,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (2.0, 2.0),
+        spec,
+    }
+}
+
+/// `init`: A[i] = 0 — the initialization phase kernel (1-D, loop blocked).
+pub fn init(budget: u64) -> PaperKernel {
+    let n = vec_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "init".into(),
+        loops: vec![LoopVar::new("i", n)],
+        arrays: vec![Array::new("A", &[n], 4)],
+        accesses: vec![ArrayAccess::new(0, vec![IndexExpr::var(0)], AccessMode::Write)],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "init".into(),
+        description: "Initialization",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: true,
+        data_gib: (2.0, 2.0),
+        spec,
+    }
+}
+
+/// `writeback`: A[i] = B[i] — the write-back phase kernel (1-D copy).
+pub fn writeback(budget: u64) -> PaperKernel {
+    let n = vec_extent(budget / 2);
+    let spec = finished(KernelSpec {
+        name: "writeback".into(),
+        loops: vec![LoopVar::new("i", n)],
+        arrays: vec![Array::new("A", &[n], 4), Array::new("B", &[n], 4)],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0)], AccessMode::Write),
+            ArrayAccess::new(1, vec![IndexExpr::var(0)], AccessMode::Read),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "writeback".into(),
+        description: "Writeback",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: true,
+        data_gib: (2.0, 2.0),
+        spec,
+    }
+}
+
+/// All Table 1 kernels (six surveyed kernels with gemver's four parts,
+/// plus the init/writeback phase kernels), dominant array sized to
+/// `budget` bytes.
+pub fn paper_kernels(budget: u64) -> Vec<PaperKernel> {
+    vec![
+        bicg(budget),
+        conv(budget),
+        doitgen(budget),
+        gemverouter(budget),
+        gemvermxv1(budget),
+        gemversum(budget),
+        gemvermxv2(budget),
+        jacobi2d(budget),
+        mxv(budget),
+        init(budget),
+        writeback(budget),
+    ]
+}
+
+/// Look a kernel up by name.
+pub fn kernel_by_name(name: &str, budget: u64) -> Option<PaperKernel> {
+    paper_kernels(budget).into_iter().find(|k| k.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kernels_present() {
+        let ks = paper_kernels(1 << 24);
+        let names: Vec<&str> = ks.iter().map(|k| k.name.as_str()).collect();
+        for expect in [
+            "bicg",
+            "conv",
+            "doitgen",
+            "gemverouter",
+            "gemvermxv1",
+            "gemversum",
+            "gemvermxv2",
+            "jacobi2d",
+            "mxv",
+            "init",
+            "writeback",
+        ] {
+            assert!(names.contains(&expect), "missing {expect}");
+        }
+    }
+
+    #[test]
+    fn table1_descriptive_columns() {
+        let ks = paper_kernels(1 << 24);
+        let get = |n: &str| ks.iter().find(|k| k.name == n).unwrap();
+        // AT column: stencils unaligned, rest aligned.
+        assert!(!get("conv").aligned);
+        assert!(!get("jacobi2d").aligned);
+        assert!(get("mxv").aligned);
+        // IN / WB columns.
+        assert!(get("bicg").has_init);
+        assert!(get("doitgen").has_init && get("doitgen").has_writeback);
+        assert!(get("jacobi2d").has_writeback);
+        // LI column.
+        assert!(get("gemvermxv1").loop_interchange);
+        assert!(get("doitgen").loop_interchange);
+        // LB column.
+        assert!(get("gemversum").loop_blocking);
+        assert!(get("init").loop_blocking);
+        assert!(get("writeback").loop_blocking);
+        // LE column.
+        assert_eq!(get("doitgen").loop_embedment, 2);
+        assert_eq!(get("jacobi2d").loop_embedment, 1);
+    }
+
+    #[test]
+    fn budgets_respected_roughly() {
+        for k in paper_kernels(1 << 24) {
+            let main: u64 = k.spec.arrays.iter().map(|a| a.bytes()).max().unwrap();
+            assert!(
+                main <= (1 << 24) + (1 << 22),
+                "{}: dominant array {} exceeds budget",
+                k.name,
+                main
+            );
+            assert!(main >= 1 << 22, "{}: dominant array {} too small", k.name, main);
+        }
+    }
+
+    #[test]
+    fn extents_divisible_for_sweeps() {
+        for k in paper_kernels(1 << 24) {
+            for l in &k.spec.loops {
+                assert_eq!(l.extent % 64, 0, "{} loop {} extent {}", k.name, l.name, l.extent);
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_subscripts_stay_in_bounds() {
+        for k in paper_kernels(1 << 22) {
+            let maxes: Vec<u64> = k.spec.loops.iter().map(|l| l.extent - 1).collect();
+            for acc in &k.spec.accesses {
+                assert!(
+                    k.spec.address(acc, &maxes).is_some(),
+                    "{}: access to array {} out of bounds at loop maxima",
+                    k.name,
+                    k.spec.arrays[acc.array].name
+                );
+                let zeros = vec![0u64; k.spec.loops.len()];
+                assert!(k.spec.address(acc, &zeros).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(kernel_by_name("mxv", 1 << 22).is_some());
+        assert!(kernel_by_name("nope", 1 << 22).is_none());
+    }
+}

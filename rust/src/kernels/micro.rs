@@ -1,0 +1,259 @@
+//! The §4 micro-benchmarks behind Figures 2–5.
+//!
+//! Each benchmark is "a single loop that processes the data stored in an
+//! array using solely data-movement instructions" with a **constant budget
+//! of 32 unroll slots** evenly distributed over the configured number of
+//! stride unrolls (§4.1). The only differences between configurations are
+//! the access offsets and the base-register step — exactly the isolation
+//! argument the paper makes.
+
+use crate::trace::{Access, Arrangement, Op};
+
+/// Which data-movement instruction mix a micro-benchmark runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MicroOp {
+    /// `vmovaps` loads.
+    LoadAligned,
+    /// `vmovups` loads at a +4 B offset.
+    LoadUnaligned,
+    /// `vmovntdqa` loads.
+    LoadNt,
+    /// `vmovaps` stores.
+    StoreAligned,
+    /// `vmovups` stores at a +4 B offset.
+    StoreUnaligned,
+    /// `vmovntdq` stores.
+    StoreNt,
+    /// Copy: aligned loads + aligned stores.
+    CopyAligned,
+    /// Copy: aligned loads + non-temporal stores.
+    CopyNt,
+    /// Copy: non-temporal loads + non-temporal stores.
+    CopyNtBoth,
+}
+
+impl MicroOp {
+    pub fn all() -> [MicroOp; 9] {
+        [
+            Self::LoadAligned,
+            Self::LoadUnaligned,
+            Self::LoadNt,
+            Self::StoreAligned,
+            Self::StoreUnaligned,
+            Self::StoreNt,
+            Self::CopyAligned,
+            Self::CopyNt,
+            Self::CopyNtBoth,
+        ]
+    }
+
+    /// (load op, store op) pair this mix issues.
+    fn ops(self) -> (Option<Op>, Option<Op>) {
+        match self {
+            Self::LoadAligned => (Some(Op::Load), None),
+            Self::LoadUnaligned => (Some(Op::LoadU), None),
+            Self::LoadNt => (Some(Op::LoadNt), None),
+            Self::StoreAligned => (None, Some(Op::Store)),
+            Self::StoreUnaligned => (None, Some(Op::StoreU)),
+            Self::StoreNt => (None, Some(Op::StoreNt)),
+            Self::CopyAligned => (Some(Op::Load), Some(Op::Store)),
+            Self::CopyNt => (Some(Op::Load), Some(Op::StoreNt)),
+            Self::CopyNtBoth => (Some(Op::LoadNt), Some(Op::StoreNt)),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::LoadAligned => "aligned loads",
+            Self::LoadUnaligned => "unaligned loads",
+            Self::LoadNt => "non-temporal loads",
+            Self::StoreAligned => "aligned stores",
+            Self::StoreUnaligned => "unaligned stores",
+            Self::StoreNt => "non-temporal stores",
+            Self::CopyAligned => "copy (aligned stores)",
+            Self::CopyNt => "copy (NT stores)",
+            Self::CopyNtBoth => "copy (NT loads+stores)",
+        }
+    }
+}
+
+/// One micro-benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroBench {
+    pub op: MicroOp,
+    /// Number of concurrent strides (1, 2, 4, 8, 16, 32 in the paper).
+    pub strides: u32,
+    /// Total bytes of array data processed per kernel execution.
+    pub array_bytes: u64,
+    /// Grouped (default) or interleaved body arrangement.
+    pub arrangement: Arrangement,
+}
+
+/// The fixed unroll-slot budget of §4.1.
+pub const UNROLL_SLOTS: u32 = 32;
+
+impl MicroBench {
+    pub fn new(op: MicroOp, strides: u32, array_bytes: u64) -> Self {
+        assert!(strides >= 1 && UNROLL_SLOTS % strides == 0, "strides must divide 32");
+        Self { op, strides, array_bytes, arrangement: Arrangement::Grouped }
+    }
+
+    pub fn interleaved(mut self) -> Self {
+        self.arrangement = Arrangement::Interleaved;
+        self
+    }
+
+    /// Is this a copy benchmark (separate source and destination regions)?
+    pub fn is_copy(&self) -> bool {
+        matches!(self.op, MicroOp::CopyAligned | MicroOp::CopyNt | MicroOp::CopyNtBoth)
+    }
+
+    /// Number of vector accesses the trace will contain.
+    pub fn trace_len(&self) -> u64 {
+        // Every 32 data bytes is touched by one vector op per involved
+        // direction; copies touch src+dst halves once each.
+        self.array_bytes / 32
+    }
+
+    /// Generate the access trace lazily.
+    ///
+    /// Layout: the array is split into `strides` equal contiguous regions;
+    /// stride *k* walks region *k*. With `strides == 1` this degenerates to
+    /// the single-strided 32-unrolled baseline of §4.2.
+    pub fn trace(&self) -> impl Iterator<Item = Access> + '_ {
+        let n = self.strides as u64;
+        let (load_op, store_op) = self.op.ops();
+        let is_copy = self.is_copy();
+
+        // For copies, the data region is split into source and destination
+        // halves; each stride then owns a region in both halves.
+        let data = self.array_bytes;
+        let (src_base, dst_base, region_total) =
+            if is_copy { (0u64, data / 2, data / 2) } else { (0u64, 0u64, data) };
+        let stride_span = region_total / n;
+        let vectors_per_stride = stride_span / 32;
+        let portion = (UNROLL_SLOTS as u64 / n).max(1);
+        let iterations = vectors_per_stride / portion;
+        let arrangement = self.arrangement;
+
+        // Iteration state: (iteration, slot) flattened.
+        let total_slots_per_iter = n * portion;
+        let mut iter_idx = 0u64;
+        let mut slot_idx = 0u64;
+
+        std::iter::from_fn(move || {
+            loop {
+                if iter_idx >= iterations {
+                    return None;
+                }
+                if slot_idx >= total_slots_per_iter * if is_copy { 2 } else { 1 } {
+                    slot_idx = 0;
+                    iter_idx += 1;
+                    continue;
+                }
+                // For copies, even sub-slots are the load, odd the store
+                // (load a; store b — per vector, like STREAM copy).
+                let (pair, op) = if is_copy {
+                    let pair = slot_idx / 2;
+                    let op = if slot_idx % 2 == 0 { load_op.unwrap() } else { store_op.unwrap() };
+                    (pair, op)
+                } else {
+                    (slot_idx, load_op.or(store_op).unwrap())
+                };
+
+                // Map the flattened slot to (stride, portion offset).
+                let (s, u) = match arrangement {
+                    Arrangement::Grouped => (pair / portion, pair % portion),
+                    Arrangement::Interleaved => (pair % n, pair / n),
+                };
+
+                let base = if op.is_store() && is_copy { dst_base } else { src_base };
+                let addr = base
+                    + s * stride_span
+                    + (iter_idx * portion + u) * 32
+                    + op.addr_offset();
+                slot_idx += 1;
+                return Some(Access::new(addr, op, 32, pair as u32));
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn trace_covers_every_vector_exactly_once_loads() {
+        for strides in [1u32, 2, 4, 8, 16, 32] {
+            let b = MicroBench::new(MicroOp::LoadAligned, strides, MIB);
+            let addrs: HashSet<u64> = b.trace().map(|a| a.addr).collect();
+            assert_eq!(addrs.len() as u64, MIB / 32, "strides={strides}");
+            assert_eq!(b.trace().count() as u64, b.trace_len());
+        }
+    }
+
+    #[test]
+    fn copy_touches_src_and_dst_halves() {
+        let b = MicroBench::new(MicroOp::CopyAligned, 4, 2 * MIB);
+        let mut reads = 0u64;
+        let mut writes = 0u64;
+        for a in b.trace() {
+            if a.op.is_store() {
+                assert!(a.addr >= MIB, "stores in dst half");
+                writes += 1;
+            } else {
+                assert!(a.addr < MIB, "loads in src half");
+                reads += 1;
+            }
+        }
+        assert_eq!(reads, MIB / 32);
+        assert_eq!(writes, MIB / 32);
+    }
+
+    #[test]
+    fn grouped_vs_interleaved_ordering() {
+        let g = MicroBench::new(MicroOp::StoreNt, 4, MIB);
+        let i = MicroBench::new(MicroOp::StoreNt, 4, MIB).interleaved();
+        let first_g: Vec<u64> = g.trace().take(8).map(|a| a.addr).collect();
+        let first_i: Vec<u64> = i.trace().take(8).map(|a| a.addr).collect();
+        let span = MIB / 4;
+        // Grouped: all 8 slots of stride 0 first (consecutive 32 B steps).
+        assert!(first_g.windows(2).all(|w| w[1] == w[0] + 32));
+        // Interleaved: consecutive slots hop between strides.
+        assert_eq!(first_i[1] - first_i[0], span);
+    }
+
+    #[test]
+    fn unaligned_offsets_applied() {
+        let b = MicroBench::new(MicroOp::LoadUnaligned, 1, MIB);
+        assert!(b.trace().all(|a| a.addr % 32 == 4));
+    }
+
+    #[test]
+    fn single_stride_is_sequential() {
+        let b = MicroBench::new(MicroOp::LoadAligned, 1, MIB);
+        let addrs: Vec<u64> = b.trace().take(100).map(|a| a.addr).collect();
+        assert!(addrs.windows(2).all(|w| w[1] == w[0] + 32));
+    }
+
+    #[test]
+    fn ip_stable_across_iterations() {
+        let b = MicroBench::new(MicroOp::LoadAligned, 4, MIB);
+        let per_iter = 32usize;
+        let trace: Vec<Access> = b.trace().take(per_iter * 3).collect();
+        for k in 0..per_iter {
+            assert_eq!(trace[k].ip, trace[k + per_iter].ip);
+            assert_eq!(trace[k].ip, trace[k + 2 * per_iter].ip);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "strides must divide 32")]
+    fn invalid_stride_count_rejected() {
+        MicroBench::new(MicroOp::LoadAligned, 3, MIB);
+    }
+}

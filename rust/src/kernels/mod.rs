@@ -1,0 +1,25 @@
+//! Compute-kernel specifications.
+//!
+//! * [`spec`] — a small affine loop-nest IR: loop variables, arrays, and
+//!   affine array accesses. The multi-striding transformation
+//!   ([`crate::transform`]) operates on this IR exactly as §5 of the paper
+//!   describes (critical-access selection, interchange, vectorization,
+//!   portion/stride unrolling).
+//! * [`library`] — the six surveyed kernels of Table 1 (plus gemver's four
+//!   parts and the init/writeback micro-kernels) expressed in the IR.
+//! * [`micro`] — the §4 micro-benchmarks (pure load/store/copy loops with a
+//!   fixed 32-slot unroll budget) that Figures 2–5 are built from.
+//! * [`reference`] — access-pattern models of the state-of-the-art
+//!   implementations Figure 7 compares against (CLang, Polly, MKL,
+//!   OpenBLAS, Halide, OpenCV). These are *models* of each library's
+//!   documented schedule, not the vendor binaries — see DESIGN.md §2.
+
+pub mod library;
+pub mod micro;
+pub mod reference;
+pub mod spec;
+
+pub use library::{paper_kernels, PaperKernel};
+pub use micro::{MicroBench, MicroOp};
+pub use reference::Reference;
+pub use spec::{Array, ArrayAccess, AccessMode, IndexExpr, KernelSpec, LoopVar};

@@ -1,0 +1,273 @@
+//! Affine loop-nest IR.
+//!
+//! The multi-striding methodology of §5.1 operates on kernels that are
+//! "free of (loop-carried) data dependencies that enforce a fixed order of
+//! execution". This IR captures exactly what the transformation needs:
+//!
+//! * a perfect loop nest of [`LoopVar`]s (outermost first);
+//! * row-major [`Array`]s laid out in a single simulated address space;
+//! * [`ArrayAccess`]es whose every subscript is an [`IndexExpr`] — an
+//!   affine function of the loop variables.
+
+/// Read/write mode of an access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessMode {
+    Read,
+    Write,
+    /// Read-modify-write of the same address (e.g. `C[i] += …`).
+    ReadWrite,
+}
+
+/// One loop of the nest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoopVar {
+    /// Human name (`"i"`, `"j"`, …).
+    pub name: String,
+    /// Trip count.
+    pub extent: u64,
+}
+
+impl LoopVar {
+    pub fn new(name: &str, extent: u64) -> Self {
+        Self { name: name.to_string(), extent }
+    }
+}
+
+/// A dense row-major array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Array {
+    pub name: String,
+    /// Dimension sizes, outermost first.
+    pub dims: Vec<u64>,
+    /// Element size in bytes (4 for the paper's single-precision floats).
+    pub elem_bytes: u32,
+    /// Base byte address within the simulated address space. Assigned by
+    /// [`KernelSpec::layout`].
+    pub base: u64,
+}
+
+impl Array {
+    pub fn new(name: &str, dims: &[u64], elem_bytes: u32) -> Self {
+        Self { name: name.to_string(), dims: dims.to_vec(), elem_bytes, base: 0 }
+    }
+
+    /// Total size in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.dims.iter().product::<u64>() * self.elem_bytes as u64
+    }
+
+    /// Row-major linear stride (in elements) of dimension `d`.
+    pub fn dim_stride(&self, d: usize) -> u64 {
+        self.dims[d + 1..].iter().product()
+    }
+}
+
+/// An affine subscript: `Σ coef·loop_var + offset`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct IndexExpr {
+    /// `(loop index, coefficient)` terms; loop index refers to
+    /// [`KernelSpec::loops`] order.
+    pub terms: Vec<(usize, i64)>,
+    pub offset: i64,
+}
+
+impl IndexExpr {
+    /// The subscript `var` (coefficient 1, offset 0).
+    pub fn var(loop_idx: usize) -> Self {
+        Self { terms: vec![(loop_idx, 1)], offset: 0 }
+    }
+
+    /// The subscript `var + offset` (stencils).
+    pub fn var_plus(loop_idx: usize, offset: i64) -> Self {
+        Self { terms: vec![(loop_idx, 1)], offset }
+    }
+
+    /// A constant subscript.
+    pub fn constant(offset: i64) -> Self {
+        Self { terms: vec![], offset }
+    }
+
+    /// Evaluate at concrete loop values.
+    pub fn eval(&self, loop_vals: &[u64]) -> i64 {
+        self.terms.iter().map(|&(l, c)| c * loop_vals[l] as i64).sum::<i64>() + self.offset
+    }
+
+    /// Does the expression reference loop `l`?
+    pub fn uses(&self, l: usize) -> bool {
+        self.terms.iter().any(|&(t, c)| t == l && c != 0)
+    }
+
+    /// Coefficient of loop `l` (0 when absent).
+    pub fn coef(&self, l: usize) -> i64 {
+        self.terms.iter().find(|&&(t, _)| t == l).map_or(0, |&(_, c)| c)
+    }
+}
+
+/// One array access in the innermost body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayAccess {
+    /// Index into [`KernelSpec::arrays`].
+    pub array: usize,
+    /// One subscript per array dimension.
+    pub idx: Vec<IndexExpr>,
+    pub mode: AccessMode,
+}
+
+impl ArrayAccess {
+    pub fn new(array: usize, idx: Vec<IndexExpr>, mode: AccessMode) -> Self {
+        Self { array, idx, mode }
+    }
+
+    /// Deepest loop (by spec order) this access depends on, if any.
+    pub fn deepest_loop(&self, n_loops: usize) -> Option<usize> {
+        (0..n_loops).rev().find(|&l| self.idx.iter().any(|e| e.uses(l)))
+    }
+
+    /// Byte offset of the accessed element within the array, at concrete
+    /// loop values. `None` if any subscript is negative (stencil border —
+    /// the library pads extents so this cannot happen in-bounds).
+    pub fn elem_offset(&self, arr: &Array, loop_vals: &[u64]) -> Option<u64> {
+        let mut linear: i64 = 0;
+        for (d, e) in self.idx.iter().enumerate() {
+            let v = e.eval(loop_vals);
+            if v < 0 || v as u64 >= arr.dims[d] {
+                return None;
+            }
+            linear += v * arr.dim_stride(d) as i64;
+        }
+        Some(linear as u64 * arr.elem_bytes as u64)
+    }
+}
+
+/// A complete kernel: loop nest + arrays + body accesses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelSpec {
+    pub name: String,
+    /// Loop nest, outermost first (the *source* order; the transform may
+    /// interchange).
+    pub loops: Vec<LoopVar>,
+    pub arrays: Vec<Array>,
+    pub accesses: Vec<ArrayAccess>,
+    /// Kernel carries a dependence that forbids reordering (multi-striding
+    /// is then inapplicable; §5.1).
+    pub loop_carried_dep: bool,
+}
+
+impl KernelSpec {
+    /// Assign array base addresses: arrays are laid out back-to-back,
+    /// each aligned to a 4 KiB page (as `aligned_alloc` would).
+    pub fn layout(&mut self) {
+        let mut base = 0u64;
+        for a in &mut self.arrays {
+            a.base = base;
+            let sz = a.bytes();
+            base += sz.div_ceil(4096) * 4096;
+            // Guard page between arrays so streams never coalesce.
+            base += 4096;
+        }
+    }
+
+    /// Total data footprint in bytes.
+    pub fn footprint(&self) -> u64 {
+        self.arrays.iter().map(|a| a.bytes()).sum()
+    }
+
+    /// Absolute byte address of an access at concrete loop values.
+    pub fn address(&self, acc: &ArrayAccess, loop_vals: &[u64]) -> Option<u64> {
+        let arr = &self.arrays[acc.array];
+        acc.elem_offset(arr, loop_vals).map(|o| arr.base + o)
+    }
+
+    /// Find the loop index by name (panics if absent — library invariant).
+    pub fn loop_named(&self, name: &str) -> usize {
+        self.loops
+            .iter()
+            .position(|l| l.name == name)
+            .unwrap_or_else(|| panic!("no loop named {name} in {}", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// C[i] += A[i][j] * B[j] — plain matrix-vector product.
+    fn mxv(n: u64, m: u64) -> KernelSpec {
+        let mut k = KernelSpec {
+            name: "mxv".into(),
+            loops: vec![LoopVar::new("i", n), LoopVar::new("j", m)],
+            arrays: vec![
+                Array::new("A", &[n, m], 4),
+                Array::new("B", &[m], 4),
+                Array::new("C", &[n], 4),
+            ],
+            accesses: vec![
+                ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Read),
+                ArrayAccess::new(1, vec![IndexExpr::var(1)], AccessMode::Read),
+                ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::ReadWrite),
+            ],
+            loop_carried_dep: false,
+        };
+        k.layout();
+        k
+    }
+
+    #[test]
+    fn layout_is_page_aligned_and_disjoint() {
+        let k = mxv(64, 64);
+        for a in &k.arrays {
+            assert_eq!(a.base % 4096, 0);
+        }
+        for w in k.arrays.windows(2) {
+            assert!(w[0].base + w[0].bytes() < w[1].base);
+        }
+    }
+
+    #[test]
+    fn address_evaluation_row_major() {
+        let k = mxv(8, 16);
+        let a = &k.accesses[0];
+        // A[2][3] = base + (2*16+3)*4
+        let addr = k.address(a, &[2, 3]).unwrap();
+        assert_eq!(addr, k.arrays[0].base + 35 * 4);
+    }
+
+    #[test]
+    fn index_expr_eval() {
+        let e = IndexExpr::var_plus(1, -1);
+        assert_eq!(e.eval(&[0, 5]), 4);
+        assert!(e.uses(1));
+        assert!(!e.uses(0));
+        assert_eq!(e.coef(1), 1);
+        let c = IndexExpr::constant(7);
+        assert_eq!(c.eval(&[1, 2]), 7);
+    }
+
+    #[test]
+    fn out_of_bounds_returns_none() {
+        let k = mxv(8, 16);
+        let a = &k.accesses[0];
+        assert!(k.address(a, &[8, 0]).is_none());
+        // Negative subscript via stencil-style offset:
+        let st = ArrayAccess::new(
+            0,
+            vec![IndexExpr::var_plus(0, -1), IndexExpr::var(1)],
+            AccessMode::Read,
+        );
+        assert!(k.address(&st, &[0, 0]).is_none());
+    }
+
+    #[test]
+    fn deepest_loop_detection() {
+        let k = mxv(8, 16);
+        assert_eq!(k.accesses[0].deepest_loop(2), Some(1)); // A[i][j] -> j
+        assert_eq!(k.accesses[1].deepest_loop(2), Some(1)); // B[j] -> j
+        assert_eq!(k.accesses[2].deepest_loop(2), Some(0)); // C[i] -> i
+    }
+
+    #[test]
+    fn footprint_accounting() {
+        let k = mxv(8, 16);
+        assert_eq!(k.footprint(), (8 * 16 + 16 + 8) * 4);
+    }
+}

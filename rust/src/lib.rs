@@ -1,0 +1,53 @@
+//! # multistride
+//!
+//! Reproduction of *Multi-Strided Access Patterns to Boost Hardware
+//! Prefetching* (Blom, Rietveld, van Nieuwpoort — ICPE'25).
+//!
+//! The paper's claim: transforming a kernel's memory access pattern from a
+//! single contiguous stride into several **concurrent** strides primes
+//! multiple hardware prefetch streams at once, raising effective single-core
+//! memory bandwidth and speeding up memory-bound kernels.
+//!
+//! This crate contains the full system described in `DESIGN.md`:
+//!
+//! * [`kernels`] — a loop-nest IR plus the paper's six surveyed compute
+//!   kernels, the Figure-2 micro-benchmarks and access-pattern models of the
+//!   reference implementations (CLang / Polly / MKL / OpenBLAS / Halide /
+//!   OpenCV).
+//! * [`transform`] — the multi-striding code transformation: critical-access
+//!   selection, loop interchange, vectorization, loop blocking, portion /
+//!   stride unroll enumeration, redundant-access elimination and the
+//!   register-pressure feasibility check.
+//! * [`trace`] — expands a transformed kernel configuration into the exact
+//!   stream of vector memory accesses the generated AVX2 assembly would
+//!   perform.
+//! * [`mem`] + [`prefetch`] + [`sim`] — a timestamp-driven simulator of a
+//!   Coffee-Lake-class memory subsystem: set-associative L1/L2/L3, TLBs,
+//!   DRAM banks with row buffers and a bandwidth-limited service queue,
+//!   line-fill buffers, write-combining buffers, and Intel-style hardware
+//!   prefetch engines (L2 streamer, DCU next-line, IP-stride) behind an
+//!   MSR-like enable switch.
+//! * [`coordinator`] — parallel experiment orchestration (config sweeps over
+//!   worker threads, result aggregation).
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas kernel
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them numerically.
+//! * [`native`] — real memory-bandwidth probes that run single- vs
+//!   multi-strided sweeps on the *host* CPU.
+//! * [`report`] / [`config`] / [`util`] — figure renderers, machine presets,
+//!   a TOML-subset parser and small utilities (PRNG, stats, timing).
+
+pub mod config;
+pub mod coordinator;
+pub mod kernels;
+pub mod mem;
+pub mod native;
+pub mod prefetch;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod transform;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

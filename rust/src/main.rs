@@ -1,0 +1,512 @@
+//! `repro` — the command-line driver that regenerates every table and
+//! figure of *Multi-Strided Access Patterns to Boost Hardware Prefetching*.
+//!
+//! ```text
+//! repro table1                  # Table 1: kernel overview + stride formulas
+//! repro table2                  # Table 2: machine presets
+//! repro figure2 [--machine M]   # micro-benchmark throughput grid
+//! repro figure3 / figure4       # stall cycles / hit ratios
+//! repro figure5                 # power-of-two cache-collision grid
+//! repro figure6 [--kernel K]    # striding-space sweep per kernel
+//! repro figure7 [--kernel K]    # comparison with state-of-the-art models
+//! repro sweep --kernel K        # detailed sweep of one kernel
+//! repro native                  # real host-memory multi-striding probe
+//! repro validate                # load + execute the PJRT artifacts
+//! repro all                     # everything (writes results/*.csv too)
+//! ```
+
+use std::path::PathBuf;
+
+use multistride::config::{MachinePreset, ScaleConfig};
+use multistride::coordinator::experiments as exp;
+use multistride::kernels::library::paper_kernels;
+use multistride::kernels::micro::UNROLL_SLOTS;
+use multistride::report::{self, figures, table::Table};
+use multistride::runtime::{oracle, ArtifactRegistry, Runtime};
+use multistride::transform::{stride_profile, transform, StridingConfig};
+use multistride::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].as_str();
+    let opts = Opts::parse(&args[1..]);
+    let result = match cmd {
+        "table1" => table1(&opts),
+        "table2" => table2(),
+        "figure2" => figure2(&opts, false),
+        "figure3" | "figure4" => figure3_4(&opts),
+        "figure5" => figure2(&opts, true),
+        "figure6" | "sweep" => figure6(&opts),
+        "figure7" => figure7(&opts),
+        "native" => native(&opts),
+        "validate" => validate(&opts),
+        "run" => run_config(&opts),
+        "all" => all(&opts),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command: {other}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: repro <command> [--machine coffee-lake|cascade-lake|zen2] \
+         [--kernel NAME] [--smoke] [--max-total N] [--csv DIR] [--artifacts DIR] \
+         [--no-prefetch] [--config FILE]\n\
+         commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
+         sweep native validate all"
+    );
+}
+
+/// Parsed command-line options.
+struct Opts {
+    machine: MachinePreset,
+    kernel: Option<String>,
+    smoke: bool,
+    max_total: u32,
+    csv_dir: Option<PathBuf>,
+    artifacts: PathBuf,
+    config: Option<PathBuf>,
+    /// MSR-style prefetcher switch for the kernel sweeps (the Figure 6
+    /// bicg top-right panel runs with it off).
+    prefetch: bool,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Self {
+        let mut o = Opts {
+            machine: MachinePreset::CoffeeLake,
+            kernel: None,
+            smoke: false,
+            max_total: 24,
+            csv_dir: None,
+            artifacts: ArtifactRegistry::default_dir(),
+            config: None,
+            prefetch: true,
+        };
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--machine" => {
+                    let v = it.next().expect("--machine needs a value");
+                    o.machine = MachinePreset::from_name(v)
+                        .unwrap_or_else(|| panic!("unknown machine {v}"));
+                }
+                "--kernel" => o.kernel = Some(it.next().expect("--kernel needs a value").clone()),
+                "--smoke" => o.smoke = true,
+                "--max-total" => {
+                    o.max_total =
+                        it.next().expect("--max-total needs a value").parse().expect("number")
+                }
+                "--csv" => o.csv_dir = Some(PathBuf::from(it.next().expect("--csv needs a value"))),
+                "--artifacts" => {
+                    o.artifacts = PathBuf::from(it.next().expect("--artifacts needs a value"))
+                }
+                "--config" => {
+                    o.config = Some(PathBuf::from(it.next().expect("--config needs a value")))
+                }
+                "--no-prefetch" => o.prefetch = false,
+                other => {
+                    eprintln!("unknown option {other}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        o
+    }
+
+    fn scale(&self) -> ScaleConfig {
+        if self.smoke {
+            ScaleConfig::smoke()
+        } else {
+            ScaleConfig::default()
+        }
+    }
+}
+
+/// Table 1: the kernel overview with our computed stride profiles at n=4.
+fn table1(opts: &Opts) -> multistride::Result<()> {
+    let mut t = Table::new(&[
+        "name", "description", "AT", "L", "S", "L/S", "IN", "WB", "LE", "LI", "LB",
+        "data (iso/cmp GiB)",
+    ])
+    .with_title("Table 1 — surveyed compute kernels (stride columns at n=4 via stride_profile)");
+    let n = 4u32;
+    for pk in paper_kernels(opts.scale().kernel_bytes) {
+        let prof = transform(&pk.spec, StridingConfig::new(n, 2)).map(|tr| stride_profile(&tr)).ok();
+        let (l, s, ls) = prof.map_or((0, 0, 0), |p| (p.loads, p.stores, p.loadstores));
+        let yn = |b: bool| if b { "Y" } else { "" }.to_string();
+        t.row(vec![
+            pk.name.clone(),
+            pk.description.into(),
+            if pk.aligned { "A" } else { "U" }.into(),
+            l.to_string(),
+            s.to_string(),
+            ls.to_string(),
+            yn(pk.has_init),
+            yn(pk.has_writeback),
+            if pk.loop_embedment > 0 { pk.loop_embedment.to_string() } else { String::new() },
+            yn(pk.loop_interchange),
+            yn(pk.loop_blocking),
+            format!("{}/{}", pk.data_gib.0, pk.data_gib.1),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Table 2: machine presets.
+fn table2() -> multistride::Result<()> {
+    let ms: Vec<_> = MachinePreset::all().iter().map(|p| p.config()).collect();
+    let mut t = Table::new(&["", "Coffee Lake", "Cascade Lake", "Zen 2"])
+        .with_title("Table 2 — simulated micro-architectures");
+    let row = |label: &str, f: &dyn Fn(&multistride::config::MachineConfig) -> String| {
+        let mut cells = vec![label.to_string()];
+        cells.extend(ms.iter().map(f));
+        cells
+    };
+    t.row(row("Vendor", &|m| m.vendor.into()));
+    t.row(row("Model", &|m| m.model.into()));
+    t.row(row("Base freq (GHz)", &|m| format!("{:.1}", m.freq_ghz)));
+    t.row(row("Bandwidth (GiB/s, paper)", &|m| format!("{:.2}", m.bandwidth_gib)));
+    t.row(row("Bandwidth (GiB/s, model roofline)", &|m| format!("{:.2}", m.model_peak_gib())));
+    t.row(row("Memory channels", &|m| m.mem_channels.to_string()));
+    t.row(row("L1D size/assoc", &|m| format!("{} KiB / {}-way", m.l1.size_bytes / 1024, m.l1.ways)));
+    t.row(row("L2 size/assoc", &|m| format!("{} KiB / {}-way", m.l2.size_bytes / 1024, m.l2.ways)));
+    t.row(row("L3 size/assoc", &|m| {
+        format!("{:.1} MiB / {}-way", m.l3.size_bytes as f64 / 1048576.0, m.l3.ways)
+    }));
+    t.row(row("RAM (GiB)", &|m| m.ram_gib.to_string()));
+    t.row(row("Max FMA (GFLOP/s)", &|m| format!("{:.1}", m.max_fma_gflops)));
+    t.print();
+    Ok(())
+}
+
+fn figure2(opts: &Opts, pow2: bool) -> multistride::Result<()> {
+    let m = opts.machine.config();
+    let scale = opts.scale();
+    let title = if pow2 {
+        format!("Figure 5 — {} of power-of-two data, {}", bytes_h(scale.micro_pow2_bytes), m.name)
+    } else {
+        format!("Figure 2 — micro-benchmark throughput ({}, {})", bytes_h(scale.micro_bytes), m.name)
+    };
+    println!(
+        "[{} unroll slots over n strides; huge pages; array size {} a power of two]",
+        UNROLL_SLOTS,
+        if pow2 { "IS" } else { "is NOT" }
+    );
+    let points = exp::figure2(m, scale, pow2);
+    print!("{}", figures::render_micro_grid(&points, &title));
+    if let Some(dir) = &opts.csv_dir {
+        let name = if pow2 { "figure5.csv" } else { "figure2.csv" };
+        report::write_csv(
+            &dir.join(name),
+            &figures::MICRO_CSV_HEADER,
+            &figures::micro_csv_rows(&points),
+        )?;
+    }
+    Ok(())
+}
+
+fn figure3_4(opts: &Opts) -> multistride::Result<()> {
+    let m = opts.machine.config();
+    let points = exp::figure3_4(m, opts.scale());
+    print!("{}", figures::render_stalls(&points));
+    println!();
+    print!("{}", figures::render_hit_ratios(&points));
+    if let Some(dir) = &opts.csv_dir {
+        report::write_csv(
+            &dir.join("figure3_4.csv"),
+            &figures::MICRO_CSV_HEADER,
+            &figures::micro_csv_rows(&points),
+        )?;
+    }
+    Ok(())
+}
+
+fn figure6(opts: &Opts) -> multistride::Result<()> {
+    let m = opts.machine.config();
+    let budget = opts.scale().kernel_bytes;
+    let kernels: Vec<String> = match &opts.kernel {
+        Some(k) => vec![k.clone()],
+        None => exp::figure6_kernels().iter().map(|s| s.to_string()).collect(),
+    };
+    if !opts.prefetch {
+        println!("[hardware prefetching DISABLED for this sweep]");
+    }
+    for k in kernels {
+        let points = exp::figure6(m, &k, budget, opts.max_total, opts.prefetch);
+        print!("{}", figures::render_kernel_sweep(&k, &points));
+        if let Some(best) = exp::best_point(&points) {
+            let single = points
+                .iter()
+                .filter(|p| p.feasible && p.config.stride_unroll == 1)
+                .max_by(|a, b| a.throughput_gib.partial_cmp(&b.throughput_gib).unwrap());
+            if let Some(sgl) = single {
+                println!(
+                    "best multi-strided: s={} p={} -> {:.2} GiB/s ({:.2}x over best single-strided {:.2})\n",
+                    best.config.stride_unroll,
+                    best.config.portion_unroll,
+                    best.throughput_gib,
+                    best.throughput_gib / sgl.throughput_gib,
+                    sgl.throughput_gib,
+                );
+            }
+        }
+        if let Some(dir) = &opts.csv_dir {
+            let rows: Vec<Vec<String>> = points
+                .iter()
+                .map(|p| {
+                    vec![
+                        p.kernel.clone(),
+                        p.config.stride_unroll.to_string(),
+                        p.config.portion_unroll.to_string(),
+                        p.feasible.to_string(),
+                        format!("{:.4}", p.throughput_gib),
+                    ]
+                })
+                .collect();
+            report::write_csv(
+                &dir.join(format!("figure6_{k}.csv")),
+                &["kernel", "strides", "portion", "feasible", "gib_s"],
+                &rows,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+fn figure7(opts: &Opts) -> multistride::Result<()> {
+    let m = opts.machine.config();
+    let budget = opts.scale().kernel_bytes;
+    let kernels: Vec<String> = match &opts.kernel {
+        Some(k) => vec![k.clone()],
+        None => exp::figure7_kernels().iter().map(|s| s.to_string()).collect(),
+    };
+    let mut all_rows = Vec::new();
+    for k in kernels {
+        let rows = exp::figure7(m, &k, budget, opts.max_total);
+        print!("{}", figures::render_comparison(m.name, &rows));
+        println!();
+        all_rows.extend(rows);
+    }
+    if let Some(dir) = &opts.csv_dir {
+        let rows: Vec<Vec<String>> = all_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.kernel.clone(),
+                    r.reference.label().to_string(),
+                    format!("{:.4}", r.reference_gib),
+                    format!("{:.4}", r.multistrided_gib),
+                    format!("{:.4}", r.speedup()),
+                ]
+            })
+            .collect();
+        report::write_csv(
+            &dir.join("figure7.csv"),
+            &["kernel", "reference", "ref_gib_s", "multi_gib_s", "speedup"],
+            &rows,
+        )?;
+    }
+    Ok(())
+}
+
+fn native(opts: &Opts) -> multistride::Result<()> {
+    use multistride::native::NativeProbe;
+    let probe = if opts.smoke {
+        NativeProbe { bytes: 64 * 1024 * 1024, reps: 3 }
+    } else {
+        NativeProbe::default()
+    };
+    println!(
+        "native probe on this host: {} buffer, median of {} reps",
+        bytes_h(probe.bytes as u64),
+        probe.reps
+    );
+    let pts = probe.run(&[1, 2, 4, 8, 16, 32]);
+    let mut t = Table::new(&["strides", "read GiB/s", "write GiB/s", "copy GiB/s"])
+        .with_title("host multi-striding probe (real hardware, prefetcher state unknown)");
+    for p in &pts {
+        t.row(vec![
+            p.strides.to_string(),
+            format!("{:.2}", p.read_gib_s),
+            format!("{:.2}", p.write_gib_s),
+            format!("{:.2}", p.copy_gib_s),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Load every artifact, execute it on random inputs, check against the
+/// Rust oracles.
+fn validate(opts: &Opts) -> multistride::Result<()> {
+    let reg = ArtifactRegistry::new(&opts.artifacts);
+    let names = reg.list();
+    if names.is_empty() {
+        anyhow::bail!("no artifacts in {:?} — run `make artifacts` first", reg.dir());
+    }
+    let mut rt = Runtime::new()?;
+    println!("PJRT: {}", rt.platform());
+    for n in &names {
+        rt.load(n, &reg.path_for(n))?;
+        println!("loaded {n}");
+    }
+    let mut rng = Rng::new(0xA07);
+    let mut rand_vec = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.f64() as f32 - 0.5).collect()
+    };
+
+    // Shapes here must match python/compile/aot.py's AOT example shapes.
+    let (m, n) = (64usize, 128usize);
+    if names.iter().any(|s| s == "mxv") {
+        let a = rand_vec(m * n);
+        let x = rand_vec(n);
+        let got = &rt.execute_f32("mxv", &[(&a, &[m as i64, n as i64]), (&x, &[n as i64])])?[0];
+        let want = oracle::mxv(&a, &x, m, n);
+        let err = oracle::max_rel_err(got, &want);
+        println!("mxv: max rel err {err:.2e}");
+        anyhow::ensure!(err < 1e-3, "mxv mismatch");
+    }
+    if names.iter().any(|s| s == "bicg") {
+        let a = rand_vec(m * n);
+        let r = rand_vec(m);
+        let p = rand_vec(n);
+        let out = rt.execute_f32(
+            "bicg",
+            &[(&a, &[m as i64, n as i64]), (&r, &[m as i64]), (&p, &[n as i64])],
+        )?;
+        let (s_want, q_want) = oracle::bicg(&a, &r, &p, m, n);
+        let es = oracle::max_rel_err(&out[0], &s_want);
+        let eq = oracle::max_rel_err(&out[1], &q_want);
+        println!("bicg: max rel err s={es:.2e} q={eq:.2e}");
+        anyhow::ensure!(es < 1e-3 && eq < 1e-3, "bicg mismatch");
+    }
+    if names.iter().any(|s| s == "conv") {
+        let (h, w) = (34usize, 66usize);
+        let img = rand_vec(h * w);
+        let wts = rand_vec(9);
+        let got = &rt.execute_f32("conv", &[(&img, &[h as i64, w as i64]), (&wts, &[3, 3])])?[0];
+        let mut w9 = [0f32; 9];
+        w9.copy_from_slice(&wts);
+        let want = oracle::conv3x3(&img, &w9, h, w);
+        let err = oracle::max_rel_err(got, &want);
+        println!("conv: max rel err {err:.2e}");
+        anyhow::ensure!(err < 1e-3, "conv mismatch");
+    }
+    if names.iter().any(|s| s == "jacobi2d") {
+        let (h, w) = (32usize, 64usize);
+        let a = rand_vec(h * w);
+        let got = &rt.execute_f32("jacobi2d", &[(&a, &[h as i64, w as i64])])?[0];
+        let want = oracle::jacobi2d(&a, h, w);
+        let err = oracle::max_rel_err(got, &want);
+        println!("jacobi2d: max rel err {err:.2e}");
+        anyhow::ensure!(err < 1e-3, "jacobi2d mismatch");
+    }
+    println!("validate OK ({} artifacts)", names.len());
+    Ok(())
+}
+
+fn all(opts: &Opts) -> multistride::Result<()> {
+    table1(opts)?;
+    println!();
+    table2()?;
+    println!();
+    figure2(opts, false)?;
+    figure3_4(opts)?;
+    println!();
+    figure2(opts, true)?;
+    figure6(opts)?;
+    figure7(opts)?;
+    if ArtifactRegistry::new(&opts.artifacts).list().is_empty() {
+        println!("(skipping validate: no artifacts built)");
+    } else {
+        validate(opts)?;
+    }
+    Ok(())
+}
+
+/// `repro run --config FILE`: a TOML-driven kernel sweep.
+fn run_config(opts: &Opts) -> multistride::Result<()> {
+    use multistride::config::ExperimentFile;
+    let path = opts
+        .config
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("run requires --config FILE (see configs/)"))?;
+    let file = ExperimentFile::load(&path)?;
+    let get_str = |k: &str| file.get("experiment", k).and_then(|v| v.as_str().map(String::from));
+    let machine = get_str("machine")
+        .and_then(|n| MachinePreset::from_name(&n))
+        .unwrap_or(opts.machine)
+        .config();
+    let kernel = get_str("kernel").unwrap_or_else(|| "mxv".into());
+    let max_total = file
+        .get("experiment", "max_total")
+        .and_then(|v| v.as_int())
+        .unwrap_or(opts.max_total as i64) as u32;
+    let prefetch =
+        file.get("experiment", "prefetch").and_then(|v| v.as_bool()).unwrap_or(true);
+    let budget = file
+        .get("experiment", "kernel_mib")
+        .and_then(|v| v.as_int())
+        .map(|m| m as u64 * 1024 * 1024)
+        .unwrap_or(opts.scale().kernel_bytes);
+
+    println!(
+        "config {path:?}: kernel={kernel} machine={} max_total={max_total} prefetch={prefetch} budget={}",
+        machine.name,
+        bytes_h(budget)
+    );
+    let points = exp::figure6(machine, &kernel, budget, max_total, prefetch);
+    print!("{}", figures::render_kernel_sweep(&kernel, &points));
+    if let Some(best) = exp::best_point(&points) {
+        println!(
+            "best: s={} p={} -> {:.2} GiB/s",
+            best.config.stride_unroll, best.config.portion_unroll, best.throughput_gib
+        );
+    }
+    let csv = file.get("report", "csv").and_then(|v| v.as_str().map(String::from));
+    if let Some(dir) = csv.filter(|s| !s.is_empty()) {
+        let rows: Vec<Vec<String>> = points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.kernel.clone(),
+                    p.config.stride_unroll.to_string(),
+                    p.config.portion_unroll.to_string(),
+                    p.feasible.to_string(),
+                    format!("{:.4}", p.throughput_gib),
+                ]
+            })
+            .collect();
+        report::write_csv(
+            &PathBuf::from(dir).join(format!("sweep_{kernel}.csv")),
+            &["kernel", "strides", "portion", "feasible", "gib_s"],
+            &rows,
+        )?;
+    }
+    Ok(())
+}
+
+fn bytes_h(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.1} GiB", b as f64 / (1u64 << 30) as f64)
+    } else {
+        format!("{} MiB", b >> 20)
+    }
+}

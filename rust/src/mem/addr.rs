@@ -1,0 +1,112 @@
+//! Address arithmetic shared by every memory-model component.
+//!
+//! All components speak *byte addresses* (`Addr`) at their interfaces and
+//! convert internally to cache-line or page granules. The line size is fixed
+//! at 64 bytes — true of all three micro-architectures surveyed in Table 2
+//! of the paper ("All caches have a cache line size of 64 bytes").
+
+/// Byte address in the simulated (virtual = physical) address space.
+pub type Addr = u64;
+
+/// Simulation timestamp in core clock cycles. Sub-cycle issue slots are
+/// handled by the engine's issue cursor, which counts in fixed-point
+/// quarter-cycles internally.
+pub type Cycle = u64;
+
+/// log2 of the cache-line size in bytes.
+pub const LINE_SHIFT: u32 = 6;
+/// Cache-line size in bytes (64 B on Coffee Lake / Cascade Lake / Zen 2).
+pub const LINE_BYTES: u64 = 1 << LINE_SHIFT;
+
+/// log2 of the small-page size (4 KiB, the default page size used for the
+/// kernel experiments in §6.2 of the paper).
+pub const PAGE_SHIFT: u32 = 12;
+/// Small-page size in bytes.
+pub const PAGE_BYTES: u64 = 1 << PAGE_SHIFT;
+
+/// log2 of a huge page (2 MiB; the micro-benchmarks of §4 enabled these).
+pub const HUGE_PAGE_SHIFT: u32 = 21;
+
+/// Cache-line index of a byte address.
+#[inline(always)]
+pub fn line_of(addr: Addr) -> u64 {
+    addr >> LINE_SHIFT
+}
+
+/// Byte address of the start of a line index.
+#[inline(always)]
+pub fn line_base(line: u64) -> Addr {
+    line << LINE_SHIFT
+}
+
+/// 4 KiB page index of a byte address.
+#[inline(always)]
+pub fn page_of(addr: Addr) -> u64 {
+    addr >> PAGE_SHIFT
+}
+
+/// 4 KiB page index of a *line* index.
+#[inline(always)]
+pub fn page_of_line(line: u64) -> u64 {
+    line >> (PAGE_SHIFT - LINE_SHIFT)
+}
+
+/// Line index of the last line in the 4 KiB page containing `line`.
+#[inline(always)]
+pub fn page_last_line(line: u64) -> u64 {
+    (page_of_line(line) << (PAGE_SHIFT - LINE_SHIFT)) + ((PAGE_BYTES >> LINE_SHIFT) - 1)
+}
+
+/// Line index of the first line in the 4 KiB page containing `line`.
+#[inline(always)]
+pub fn page_first_line(line: u64) -> u64 {
+    page_of_line(line) << (PAGE_SHIFT - LINE_SHIFT)
+}
+
+/// Inclusive range of line indices touched by a `[addr, addr+size)` access.
+/// A 32-byte AVX2 access touches one line when aligned, and two lines when
+/// it straddles a 64-byte boundary (the "unaligned" case in §3).
+#[inline(always)]
+pub fn lines_touched(addr: Addr, size: u32) -> (u64, u64) {
+    debug_assert!(size > 0);
+    (line_of(addr), line_of(addr + size as u64 - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_math() {
+        assert_eq!(line_of(0), 0);
+        assert_eq!(line_of(63), 0);
+        assert_eq!(line_of(64), 1);
+        assert_eq!(line_base(3), 192);
+    }
+
+    #[test]
+    fn page_math() {
+        assert_eq!(page_of(4095), 0);
+        assert_eq!(page_of(4096), 1);
+        assert_eq!(page_of_line(line_of(4096)), 1);
+        assert_eq!(page_first_line(65), 64);
+        assert_eq!(page_last_line(65), 127);
+    }
+
+    #[test]
+    fn aligned_vector_touches_one_line() {
+        // A 32 B access at a 32 B-aligned offset never splits across lines
+        // when offset % 64 ∈ {0, 32}.
+        assert_eq!(lines_touched(0, 32), (0, 0));
+        assert_eq!(lines_touched(32, 32), (0, 0));
+        assert_eq!(lines_touched(64, 32), (1, 1));
+    }
+
+    #[test]
+    fn unaligned_vector_may_split() {
+        // The paper's unaligned benchmarks offset by 4 bytes: half of the
+        // 32 B accesses then straddle a 64 B line boundary.
+        assert_eq!(lines_touched(4, 32), (0, 0)); // [4,36) inside line 0
+        assert_eq!(lines_touched(36, 32), (0, 1)); // [36,68) splits
+    }
+}

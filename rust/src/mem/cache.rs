@@ -1,0 +1,490 @@
+//! Set-associative cache model with pluggable replacement.
+//!
+//! The cache is indexed by *line address* (byte address >> 6). Set selection
+//! uses the low bits of the line address — exactly the power-of-two indexing
+//! that makes equally-spaced strides collide in §4.5 of the paper ("Blocks
+//! spaced equally at a specific power of two are assigned to the same cache
+//! set").
+//!
+//! The model tracks, per line, whether it was installed by a prefetch and
+//! whether it has been referenced by a demand access since. This lets the
+//! simulator report the *useless prefetch* (prefetched-but-evicted-unused)
+//! statistic that explains the Figure-5 collapse.
+
+/// Replacement policy for a set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Replacement {
+    /// True least-recently-used via a monotone stamp.
+    Lru,
+    /// Tree-PLRU approximation (what real L2/L3s implement).
+    TreePlru,
+    /// Pseudo-random replacement (xorshift), a lower bound on policy quality.
+    Random,
+}
+
+/// Static geometry + policy of one cache level.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Total capacity in bytes. Must be `ways * n_sets * 64`.
+    pub size_bytes: u64,
+    /// Associativity.
+    pub ways: u32,
+    /// Replacement policy.
+    pub replacement: Replacement,
+}
+
+impl CacheConfig {
+    pub const fn new(size_bytes: u64, ways: u32, replacement: Replacement) -> Self {
+        Self { size_bytes, ways, replacement }
+    }
+
+    /// Number of sets implied by the geometry.
+    pub fn n_sets(&self) -> u64 {
+        self.size_bytes / super::addr::LINE_BYTES / self.ways as u64
+    }
+}
+
+/// A line evicted by [`Cache::insert`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Eviction {
+    /// Line address of the victim.
+    pub line: u64,
+    /// Victim was dirty (needs write-back).
+    pub dirty: bool,
+    /// Victim was installed by a prefetch and never referenced by a demand
+    /// access — a wasted prefetch (the Figure-5 failure mode).
+    pub unused_prefetch: bool,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    /// Line address; `valid` gates interpretation.
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// Installed by a prefetch engine.
+    prefetched: bool,
+    /// Referenced by a demand access since installation.
+    referenced: bool,
+    /// LRU stamp (monotone counter) — also reused as PLRU hint.
+    stamp: u64,
+}
+
+/// Aggregate statistics for one cache level.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub demand_hits: u64,
+    pub demand_misses: u64,
+    /// Demand hits on lines a prefetcher installed.
+    pub prefetch_hits: u64,
+    pub evictions: u64,
+    pub dirty_evictions: u64,
+    /// Evicted lines that a prefetcher installed and no demand ever touched.
+    pub unused_prefetch_evictions: u64,
+    pub prefetch_installs: u64,
+}
+
+impl CacheStats {
+    /// Demand hit ratio: hits / (hits + misses); the quantity Figure 4 plots.
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.demand_hits + self.demand_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.demand_hits as f64 / total as f64
+        }
+    }
+}
+
+/// One level of set-associative cache.
+pub struct Cache {
+    cfg: CacheConfig,
+    n_sets: u64,
+    /// `sets_per_slice - 1`. Power-of-two caches are one "slice".
+    set_mask: u64,
+    /// Non-power-of-two LLCs (Coffee Lake: 12 MiB = 3×4 MiB worth of sets)
+    /// are built from `n_slices` power-of-two slices; the slice is chosen
+    /// by an address hash, the set *within* the slice by the low index
+    /// bits. Power-of-two stride spacings therefore alias to the same
+    /// within-slice set — the §4.5 collision mechanism survives slicing,
+    /// exactly as on the real part.
+    n_slices: u64,
+    shift: u32,
+    entries: Vec<Entry>,
+    clock: u64,
+    rng: u64,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    /// Build a cache. Power-of-two set counts use mask indexing; others are
+    /// decomposed into `odd × pow2` slices (see struct docs).
+    pub fn new(cfg: CacheConfig) -> Self {
+        let n_sets = cfg.n_sets();
+        assert!(n_sets >= 1, "cache must have at least one set");
+        assert!(cfg.ways >= 1);
+        // Largest power-of-two divisor = sets per slice.
+        let sets_per_slice = n_sets & n_sets.wrapping_neg();
+        let n_slices = n_sets / sets_per_slice;
+        Self {
+            cfg,
+            n_sets,
+            set_mask: sets_per_slice - 1,
+            n_slices,
+            shift: sets_per_slice.trailing_zeros(),
+            entries: vec![Entry::default(); (n_sets * cfg.ways as u64) as usize],
+            clock: 0,
+            rng: 0x9e3779b97f4a7c15,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Geometry this cache was built with.
+    pub fn config(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    #[inline(always)]
+    fn set_index(&self, line: u64) -> u64 {
+        let within = line & self.set_mask;
+        if self.n_slices == 1 {
+            return within;
+        }
+        // Slice selection from a narrow window of bits just above the
+        // within-slice index: sequential data rotates through the slices
+        // every `sets_per_slice` lines (capacity distributes), while
+        // streams spaced at large powers of two land in the *same* slice
+        // and the *same* within-slice set — the §4.5 aliasing the paper
+        // measures on the real sliced LLC (its hash folds to the same
+        // slice for the 2 GiB / n spacings of the experiment).
+        let slice = ((line >> self.shift) & 3) % self.n_slices;
+        slice * (self.set_mask + 1) + within
+    }
+
+    #[inline(always)]
+    fn set_range(&self, line: u64) -> std::ops::Range<usize> {
+        let set = self.set_index(line) as usize * self.cfg.ways as usize;
+        set..set + self.cfg.ways as usize
+    }
+
+    /// Demand lookup. Updates recency and statistics. Returns `true` on hit.
+    pub fn demand_lookup(&mut self, line: u64) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        let range = self.set_range(line);
+        for e in &mut self.entries[range] {
+            if e.valid && e.tag == line {
+                e.stamp = clock;
+                if e.prefetched && !e.referenced {
+                    self.stats.prefetch_hits += 1;
+                }
+                e.referenced = true;
+                self.stats.demand_hits += 1;
+                return true;
+            }
+        }
+        self.stats.demand_misses += 1;
+        false
+    }
+
+    /// Non-destructive probe: no recency update, no statistics.
+    pub fn contains(&self, line: u64) -> bool {
+        let set = self.set_index(line) as usize * self.cfg.ways as usize;
+        self.entries[set..set + self.cfg.ways as usize]
+            .iter()
+            .any(|e| e.valid && e.tag == line)
+    }
+
+    /// Mark a resident line dirty (store hit). No-op when absent.
+    pub fn mark_dirty(&mut self, line: u64) {
+        let range = self.set_range(line);
+        for e in &mut self.entries[range] {
+            if e.valid && e.tag == line {
+                e.dirty = true;
+                return;
+            }
+        }
+    }
+
+    /// Install a line (demand fill when `prefetch == false`). Returns the
+    /// victim if a valid line had to be evicted. Installing a line that is
+    /// already resident refreshes it in place and returns `None`.
+    pub fn insert(&mut self, line: u64, prefetch: bool, dirty: bool) -> Option<Eviction> {
+        self.clock += 1;
+        let clock = self.clock;
+        if prefetch {
+            self.stats.prefetch_installs += 1;
+        }
+        let range = self.set_range(line);
+
+        // Already resident: refresh.
+        for e in &mut self.entries[range.clone()] {
+            if e.valid && e.tag == line {
+                e.stamp = clock;
+                e.dirty |= dirty;
+                if !prefetch {
+                    e.referenced = true;
+                }
+                return None;
+            }
+        }
+
+        // Invalid way available.
+        for e in &mut self.entries[range.clone()] {
+            if !e.valid {
+                *e = Entry {
+                    tag: line,
+                    valid: true,
+                    dirty,
+                    prefetched: prefetch,
+                    referenced: !prefetch,
+                    stamp: clock,
+                };
+                return None;
+            }
+        }
+
+        // Choose a victim.
+        let victim_off = match self.cfg.replacement {
+            Replacement::Lru => {
+                let mut best = 0usize;
+                let mut best_stamp = u64::MAX;
+                for (i, e) in self.entries[range.clone()].iter().enumerate() {
+                    if e.stamp < best_stamp {
+                        best_stamp = e.stamp;
+                        best = i;
+                    }
+                }
+                best
+            }
+            Replacement::TreePlru => {
+                // Approximate tree-PLRU: victimize the way whose stamp is
+                // older than the set median — cheap and close enough to the
+                // hardware policy for the aggregate statistics we report.
+                let ways = self.cfg.ways as usize;
+                let mut best = 0usize;
+                let mut best_stamp = u64::MAX;
+                // Walk a tree-like halving: compare halves by max stamp.
+                let slice = &self.entries[range.clone()];
+                let (mut lo, mut hi) = (0usize, ways);
+                while hi - lo > 1 {
+                    let mid = (lo + hi) / 2;
+                    let left_max = slice[lo..mid].iter().map(|e| e.stamp).max().unwrap();
+                    let right_max = slice[mid..hi].iter().map(|e| e.stamp).max().unwrap();
+                    if left_max <= right_max {
+                        hi = mid;
+                    } else {
+                        lo = mid;
+                    }
+                }
+                // Within the chosen leaf pair, take the older one.
+                for (i, e) in slice.iter().enumerate().take(hi).skip(lo) {
+                    if e.stamp < best_stamp {
+                        best_stamp = e.stamp;
+                        best = i;
+                    }
+                }
+                best
+            }
+            Replacement::Random => {
+                // xorshift64*
+                self.rng ^= self.rng << 13;
+                self.rng ^= self.rng >> 7;
+                self.rng ^= self.rng << 17;
+                (self.rng % self.cfg.ways as u64) as usize
+            }
+        };
+
+        let idx = range.start + victim_off;
+        let victim = self.entries[idx];
+        self.stats.evictions += 1;
+        if victim.dirty {
+            self.stats.dirty_evictions += 1;
+        }
+        let unused_prefetch = victim.prefetched && !victim.referenced;
+        if unused_prefetch {
+            self.stats.unused_prefetch_evictions += 1;
+        }
+        self.entries[idx] = Entry {
+            tag: line,
+            valid: true,
+            dirty,
+            prefetched: prefetch,
+            referenced: !prefetch,
+            stamp: clock,
+        };
+        Some(Eviction { line: victim.tag, dirty: victim.dirty, unused_prefetch })
+    }
+
+    /// Invalidate a line (inclusive-hierarchy back-invalidation). Returns
+    /// whether the line was present and dirty.
+    pub fn invalidate(&mut self, line: u64) -> bool {
+        let range = self.set_range(line);
+        for e in &mut self.entries[range] {
+            if e.valid && e.tag == line {
+                let dirty = e.dirty;
+                e.valid = false;
+                return dirty;
+            }
+        }
+        false
+    }
+
+    /// Drop all contents and statistics (between experiment repetitions).
+    pub fn reset(&mut self) {
+        self.entries.fill(Entry::default());
+        self.clock = 0;
+        self.stats = CacheStats::default();
+    }
+
+    /// Number of valid lines currently resident (test / debug helper).
+    pub fn resident_lines(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cache {
+        // 4 sets x 2 ways x 64B = 512 B.
+        Cache::new(CacheConfig::new(512, 2, Replacement::Lru))
+    }
+
+    #[test]
+    fn geometry() {
+        let c = tiny();
+        assert_eq!(c.config().n_sets(), 4);
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = tiny();
+        assert!(!c.demand_lookup(10));
+        c.insert(10, false, false);
+        assert!(c.demand_lookup(10));
+        assert_eq!(c.stats.demand_hits, 1);
+        assert_eq!(c.stats.demand_misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = tiny();
+        // Lines 0, 4, 8 all map to set 0 (4 sets). 2 ways.
+        c.insert(0, false, false);
+        c.insert(4, false, false);
+        c.demand_lookup(0); // 0 is now MRU
+        let ev = c.insert(8, false, false).expect("must evict");
+        assert_eq!(ev.line, 4, "LRU victim is line 4");
+        assert!(c.contains(0));
+        assert!(c.contains(8));
+        assert!(!c.contains(4));
+    }
+
+    #[test]
+    fn same_set_aliasing_at_power_of_two_spacing() {
+        // The §4.5 mechanism: line addresses spaced by n_sets alias.
+        let mut c = tiny();
+        for i in 0..3 {
+            c.insert(i * 4, false, false); // all set 0
+        }
+        assert_eq!(c.resident_lines(), 2, "third aliasing line evicted one");
+    }
+
+    #[test]
+    fn dirty_eviction_reported() {
+        let mut c = tiny();
+        c.insert(0, false, true);
+        c.insert(4, false, false);
+        let ev = c.insert(8, false, false).unwrap();
+        assert!(ev.dirty, "victim 0 was dirty");
+        assert_eq!(c.stats.dirty_evictions, 1);
+    }
+
+    #[test]
+    fn unused_prefetch_eviction_reported() {
+        let mut c = tiny();
+        c.insert(0, true, false); // prefetch install, never referenced
+        c.insert(4, false, false);
+        let ev = c.insert(8, false, false).unwrap();
+        assert!(ev.unused_prefetch);
+        assert_eq!(c.stats.unused_prefetch_evictions, 1);
+    }
+
+    #[test]
+    fn prefetch_then_demand_counts_prefetch_hit() {
+        let mut c = tiny();
+        c.insert(0, true, false);
+        assert!(c.demand_lookup(0));
+        assert_eq!(c.stats.prefetch_hits, 1);
+        // Second demand is a plain hit, not another prefetch hit.
+        assert!(c.demand_lookup(0));
+        assert_eq!(c.stats.prefetch_hits, 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut c = tiny();
+        c.insert(0, false, false);
+        assert!(c.insert(0, false, true).is_none());
+        c.insert(4, false, false);
+        // 0 was refreshed after 4? No: 0 refreshed before 4 inserted; LRU is 0.
+        let ev = c.insert(8, false, false).unwrap();
+        assert_eq!(ev.line, 0);
+        assert!(ev.dirty, "refresh carried dirty bit");
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = tiny();
+        c.insert(0, false, true);
+        assert!(c.invalidate(0), "was dirty");
+        assert!(!c.contains(0));
+        assert!(!c.invalidate(0));
+    }
+
+    #[test]
+    fn mark_dirty_then_evict() {
+        let mut c = tiny();
+        c.insert(0, false, false);
+        c.mark_dirty(0);
+        c.insert(4, false, false);
+        c.insert(8, false, false);
+        assert_eq!(c.stats.dirty_evictions, 1);
+    }
+
+    #[test]
+    fn random_replacement_stays_in_set() {
+        let mut c = Cache::new(CacheConfig::new(512, 2, Replacement::Random));
+        for i in 0..16 {
+            c.insert(i * 4, false, false);
+        }
+        // Only set-0 lines inserted; residency never exceeds the 2 ways.
+        assert!(c.resident_lines() <= 2);
+    }
+
+    #[test]
+    fn plru_replacement_evicts_old() {
+        let mut c = Cache::new(CacheConfig::new(2048, 8, Replacement::TreePlru));
+        // Fill set 0 (4 sets): lines 0,4,...,28.
+        for i in 0..8 {
+            c.insert(i * 4, false, false);
+        }
+        // Touch everything but line 0.
+        for i in 1..8 {
+            c.demand_lookup(i * 4);
+        }
+        let ev = c.insert(8 * 4, false, false).unwrap();
+        assert_eq!(ev.line, 0, "PLRU approximation must victimize the stale line");
+    }
+
+    #[test]
+    fn hit_ratio_computation() {
+        let mut c = tiny();
+        c.insert(0, false, false);
+        c.demand_lookup(0);
+        c.demand_lookup(4);
+        assert!((c.stats.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+}

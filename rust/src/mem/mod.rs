@@ -1,0 +1,18 @@
+//! Memory-subsystem models: address arithmetic, set-associative caches,
+//! TLBs, DRAM (banks + row buffers + bandwidth-limited service queue) and
+//! the write-combining buffer used by non-temporal stores.
+//!
+//! These are the substrates the paper's measurements run on: the paper used
+//! a real Coffee Lake i7-8700; we build the machine (see DESIGN.md §2).
+
+pub mod addr;
+pub mod cache;
+pub mod dram;
+pub mod tlb;
+pub mod writebuffer;
+
+pub use addr::{Addr, Cycle, LINE_BYTES, LINE_SHIFT, PAGE_BYTES, PAGE_SHIFT};
+pub use cache::{Cache, CacheConfig, Eviction, Replacement};
+pub use dram::{Dram, DramConfig};
+pub use tlb::{Tlb, TlbConfig};
+pub use writebuffer::{WcFlush, WriteCombineBuffer, WriteCombineConfig};

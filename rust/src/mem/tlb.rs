@@ -1,0 +1,211 @@
+//! TLB model (L1 dTLB + unified STLB) with page-walk cost.
+//!
+//! The paper's §4 micro-benchmarks run with huge pages enabled, while the §6
+//! kernel experiments use the default 4 KiB pages. With 4 KiB pages, every
+//! concurrent stride advances through its own page stream; once the number
+//! of concurrent page streams pressures the small set-associative dTLB —
+//! and in particular once the stride spacing aliases dTLB sets — page walks
+//! appear on the critical path. This is one of the mechanisms behind the
+//! decline of kernel throughput at high stride-unroll counts in Figure 6
+//! (while Figure 2, with huge pages, keeps scaling to 32 strides).
+
+use super::addr::{Addr, HUGE_PAGE_SHIFT, PAGE_SHIFT};
+
+/// Geometry and costs of the two-level TLB.
+#[derive(Debug, Clone, Copy)]
+pub struct TlbConfig {
+    /// L1 dTLB entries (e.g. 64 on Coffee Lake).
+    pub l1_entries: u32,
+    /// L1 dTLB associativity (4-way on Coffee Lake).
+    pub l1_ways: u32,
+    /// Unified second-level TLB entries (1536 on Coffee Lake).
+    pub l2_entries: u32,
+    /// STLB associativity (12-way on Coffee Lake).
+    pub l2_ways: u32,
+    /// Added latency (cycles) of an L1-dTLB miss that hits the STLB.
+    pub stlb_hit_cycles: u64,
+    /// Added latency (cycles) of a full page walk.
+    pub walk_cycles: u64,
+    /// Translate at 2 MiB granularity (huge pages on) instead of 4 KiB.
+    pub huge_pages: bool,
+}
+
+impl Default for TlbConfig {
+    fn default() -> Self {
+        Self {
+            l1_entries: 64,
+            l1_ways: 4,
+            l2_entries: 1536,
+            l2_ways: 12,
+            stlb_hit_cycles: 7,
+            walk_cycles: 70,
+            huge_pages: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct TlbEntry {
+    page: u64,
+    valid: bool,
+    stamp: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TlbStats {
+    pub accesses: u64,
+    pub l1_misses: u64,
+    pub walks: u64,
+}
+
+/// Two-level data TLB with LRU sets and a flat page-walk cost.
+pub struct Tlb {
+    cfg: TlbConfig,
+    l1: Vec<TlbEntry>,
+    l2: Vec<TlbEntry>,
+    l1_sets: u64,
+    l2_sets: u64,
+    clock: u64,
+    page_shift: u32,
+    pub stats: TlbStats,
+}
+
+impl Tlb {
+    pub fn new(cfg: TlbConfig) -> Self {
+        let l1_sets = (cfg.l1_entries / cfg.l1_ways) as u64;
+        let l2_sets = (cfg.l2_entries / cfg.l2_ways) as u64;
+        assert!(l1_sets.is_power_of_two() && l2_sets.is_power_of_two());
+        Self {
+            cfg,
+            l1: vec![TlbEntry::default(); cfg.l1_entries as usize],
+            l2: vec![TlbEntry::default(); cfg.l2_entries as usize],
+            l1_sets,
+            l2_sets,
+            clock: 0,
+            page_shift: if cfg.huge_pages { HUGE_PAGE_SHIFT } else { PAGE_SHIFT },
+            stats: TlbStats::default(),
+        }
+    }
+
+    /// Translate `addr`; returns the added latency in cycles (0 on dTLB hit).
+    pub fn translate(&mut self, addr: Addr) -> u64 {
+        self.stats.accesses += 1;
+        self.clock += 1;
+        let page = addr >> self.page_shift;
+
+        if Self::probe(&mut self.l1, self.l1_sets, self.cfg.l1_ways, page, self.clock) {
+            return 0;
+        }
+        self.stats.l1_misses += 1;
+        if Self::probe(&mut self.l2, self.l2_sets, self.cfg.l2_ways, page, self.clock) {
+            Self::fill(&mut self.l1, self.l1_sets, self.cfg.l1_ways, page, self.clock);
+            return self.cfg.stlb_hit_cycles;
+        }
+        self.stats.walks += 1;
+        Self::fill(&mut self.l2, self.l2_sets, self.cfg.l2_ways, page, self.clock);
+        Self::fill(&mut self.l1, self.l1_sets, self.cfg.l1_ways, page, self.clock);
+        self.cfg.walk_cycles
+    }
+
+    fn probe(arr: &mut [TlbEntry], sets: u64, ways: u32, page: u64, clock: u64) -> bool {
+        let set = (page & (sets - 1)) as usize * ways as usize;
+        for e in &mut arr[set..set + ways as usize] {
+            if e.valid && e.page == page {
+                e.stamp = clock;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn fill(arr: &mut [TlbEntry], sets: u64, ways: u32, page: u64, clock: u64) {
+        let set = (page & (sets - 1)) as usize * ways as usize;
+        let slice = &mut arr[set..set + ways as usize];
+        // Reuse resident / invalid way, else LRU.
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for (i, e) in slice.iter().enumerate() {
+            if e.valid && e.page == page {
+                return;
+            }
+            if !e.valid {
+                victim = i;
+                break;
+            }
+            if e.stamp < best {
+                best = e.stamp;
+                victim = i;
+            }
+        }
+        slice[victim] = TlbEntry { page, valid: true, stamp: clock };
+    }
+
+    pub fn reset(&mut self) {
+        self.l1.fill(TlbEntry::default());
+        self.l2.fill(TlbEntry::default());
+        self.clock = 0;
+        self.stats = TlbStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Tlb {
+        Tlb::new(TlbConfig {
+            l1_entries: 8,
+            l1_ways: 4,
+            l2_entries: 32,
+            l2_ways: 4,
+            stlb_hit_cycles: 7,
+            walk_cycles: 70,
+            huge_pages: false,
+        })
+    }
+
+    #[test]
+    fn first_touch_walks_then_hits() {
+        let mut t = small();
+        assert_eq!(t.translate(0), 70);
+        assert_eq!(t.translate(64), 0, "same page hits dTLB");
+        assert_eq!(t.stats.walks, 1);
+    }
+
+    #[test]
+    fn stlb_catches_l1_capacity_misses() {
+        let mut t = small();
+        // Touch 9 distinct pages: > 8 L1 entries, < 32 STLB entries.
+        for p in 0..9u64 {
+            t.translate(p * 4096);
+        }
+        // Re-touch page 0: L1-evicted (same set pressure) but STLB-resident.
+        let lat = t.translate(0);
+        assert!(lat == 0 || lat == 7, "never a full walk: {lat}");
+        assert_eq!(t.stats.walks, 9);
+    }
+
+    #[test]
+    fn set_aliased_page_streams_thrash() {
+        let mut t = small(); // 2 L1 sets, 4 ways
+        // 8 page streams spaced 2 pages apart: all even pages -> set 0.
+        // Round-robin touching 8 distinct even pages with only 4 ways
+        // guarantees L1 misses every round.
+        for _round in 0..4 {
+            for s in 0..8u64 {
+                t.translate(s * 2 * 4096);
+            }
+        }
+        assert!(t.stats.l1_misses > 16, "aliased streams must thrash L1 dTLB");
+    }
+
+    #[test]
+    fn huge_pages_collapse_page_streams() {
+        let mut t = Tlb::new(TlbConfig { huge_pages: true, ..TlbConfig::default() });
+        // 16 MiB touched at 4 KiB steps = 8 huge pages -> at most 8 walks.
+        for a in (0..16 * 1024 * 1024u64).step_by(4096) {
+            t.translate(a);
+        }
+        assert!(t.stats.walks <= 8);
+    }
+}

@@ -1,0 +1,246 @@
+//! Write-combining (WC) buffer model for non-temporal stores.
+//!
+//! Coffee Lake's non-temporal stores are no-write-allocate: they bypass the
+//! cache hierarchy and land in a small pool of write-combining buffers
+//! (shared with the line-fill buffers, ~10-12 entries). A buffer collects
+//! stores to one 64-byte line; when the line is *fully* written it drains to
+//! memory as a single efficient burst. If the pool is under pressure and a
+//! buffer is evicted *partially filled*, the drain needs masked partial
+//! writes, which occupy the memory channel far longer.
+//!
+//! §4.4 of the paper shows exactly this failure: interleaved multi-strided
+//! NT stores touch many lines concurrently, evicting partial buffers and
+//! capping throughput around 1.74 GiB/s, while grouped NT stores (complete
+//! one line before the next) stay efficient. This module reproduces that
+//! mechanism; the paper's Fritts [14] citation describes the same
+//! write-buffer contention point.
+
+use super::addr::{Cycle, LINE_BYTES};
+
+/// Configuration of the WC buffer pool.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteCombineConfig {
+    /// Number of concurrent WC buffers (≈ line-fill buffers on Intel).
+    pub entries: u32,
+}
+
+impl Default for WriteCombineConfig {
+    fn default() -> Self {
+        Self { entries: 10 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct WcEntry {
+    line: u64,
+    valid: bool,
+    /// Bitmask of written 4-byte chunks (16 chunks per 64 B line).
+    filled: u16,
+    stamp: u64,
+}
+
+/// A buffer flush that must be sent to DRAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WcFlush {
+    /// Line address being drained.
+    pub line: u64,
+    /// All 64 bytes were written: drain as one full-line burst.
+    pub full: bool,
+    /// Time the triggering store was issued (drain is ordered after it).
+    pub at: Cycle,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WcStats {
+    pub stores: u64,
+    pub full_flushes: u64,
+    pub partial_flushes: u64,
+}
+
+/// The WC buffer pool.
+pub struct WriteCombineBuffer {
+    #[allow(dead_code)]
+    cfg: WriteCombineConfig,
+    entries: Vec<WcEntry>,
+    clock: u64,
+    pub stats: WcStats,
+}
+
+impl WriteCombineBuffer {
+    pub fn new(cfg: WriteCombineConfig) -> Self {
+        Self {
+            cfg,
+            entries: vec![WcEntry::default(); cfg.entries as usize],
+            clock: 0,
+            stats: WcStats::default(),
+        }
+    }
+
+    /// Record a non-temporal store of `size` bytes at `addr`, time `now`.
+    /// Returns any flush (at most one) the store forces: either the target
+    /// line completing, or an LRU victim evicted to make room.
+    pub fn store(&mut self, now: Cycle, addr: u64, size: u32) -> Option<WcFlush> {
+        self.clock += 1;
+        self.stats.stores += 1;
+        let line = addr >> 6;
+        let offset = (addr & (LINE_BYTES - 1)) as u32;
+        debug_assert!(offset + size <= 64, "NT store must not split a line");
+        let first_chunk = offset / 4;
+        let chunks = size.div_ceil(4);
+        let mask: u16 = (((1u32 << chunks) - 1) << first_chunk) as u16;
+
+        // Hit an open buffer?
+        if let Some(e) = self.entries.iter_mut().find(|e| e.valid && e.line == line) {
+            e.filled |= mask;
+            e.stamp = self.clock;
+            if e.filled == u16::MAX {
+                e.valid = false;
+                self.stats.full_flushes += 1;
+                return Some(WcFlush { line, full: true, at: now });
+            }
+            return None;
+        }
+
+        // Allocate: free entry or evict LRU (partial flush).
+        let mut victim_flush = None;
+        let idx = if let Some(i) = self.entries.iter().position(|e| !e.valid) {
+            i
+        } else {
+            let (i, _) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .expect("pool is non-empty");
+            let v = self.entries[i];
+            self.stats.partial_flushes += 1;
+            victim_flush = Some(WcFlush { line: v.line, full: false, at: now });
+            i
+        };
+
+        // Newly allocated buffer; if this single store fills the line
+        // (64-byte store), it drains immediately.
+        if mask == u16::MAX {
+            self.stats.full_flushes += 1;
+            debug_assert!(victim_flush.is_none() || self.entries[idx].valid);
+            // The line never occupies the buffer; victim (if any) still flushed.
+            return victim_flush.or(Some(WcFlush { line, full: true, at: now }));
+        }
+        self.entries[idx] = WcEntry { line, valid: true, filled: mask, stamp: self.clock };
+        victim_flush
+    }
+
+    /// Drain every open buffer (the trailing `sfence`/`mfence` of a kernel).
+    pub fn drain(&mut self, now: Cycle) -> Vec<WcFlush> {
+        let mut out = Vec::new();
+        for e in &mut self.entries {
+            if e.valid {
+                e.valid = false;
+                let full = e.filled == u16::MAX;
+                if full {
+                    self.stats.full_flushes += 1;
+                } else {
+                    self.stats.partial_flushes += 1;
+                }
+                out.push(WcFlush { line: e.line, full, at: now });
+            }
+        }
+        out
+    }
+
+    /// Number of currently open (partially filled) buffers.
+    pub fn open_buffers(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+
+    pub fn reset(&mut self) {
+        self.entries.fill(WcEntry::default());
+        self.clock = 0;
+        self.stats = WcStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wc(n: u32) -> WriteCombineBuffer {
+        WriteCombineBuffer::new(WriteCombineConfig { entries: n })
+    }
+
+    #[test]
+    fn two_halves_complete_a_line() {
+        let mut w = wc(4);
+        assert!(w.store(0, 0, 32).is_none());
+        let f = w.store(1, 32, 32).expect("line complete");
+        assert!(f.full);
+        assert_eq!(f.line, 0);
+        assert_eq!(w.stats.full_flushes, 1);
+        assert_eq!(w.open_buffers(), 0);
+    }
+
+    #[test]
+    fn grouped_stores_never_flush_partial() {
+        let mut w = wc(4);
+        // Grouped arrangement: finish each line before moving on.
+        for line in 0..100u64 {
+            assert!(w.store(0, line * 64, 32).is_none());
+            assert!(w.store(0, line * 64 + 32, 32).unwrap().full);
+        }
+        assert_eq!(w.stats.partial_flushes, 0);
+        assert_eq!(w.stats.full_flushes, 100);
+    }
+
+    #[test]
+    fn interleaved_streams_beyond_pool_flush_partial() {
+        // 16 streams, 10 buffers: visiting each stream once per offset (the
+        // paper's "interleaved" arrangement) evicts partial buffers nonstop.
+        let mut w = wc(10);
+        let stride = 1 << 20;
+        for off in 0..32u64 {
+            for s in 0..16u64 {
+                w.store(0, s * stride + off * 32, 32);
+            }
+        }
+        assert!(
+            w.stats.partial_flushes > 100,
+            "partial flushes dominate: {:?}",
+            w.stats
+        );
+        assert_eq!(w.stats.full_flushes, 0, "no line ever completes before eviction");
+    }
+
+    #[test]
+    fn interleaved_streams_within_pool_are_fine() {
+        // 4 streams fit in 10 buffers: each line's second half arrives
+        // before any eviction.
+        let mut w = wc(10);
+        let stride = 1 << 20;
+        for off in 0..32u64 {
+            for s in 0..4u64 {
+                w.store(0, s * stride + off * 32, 32);
+            }
+        }
+        assert_eq!(w.stats.partial_flushes, 0);
+        assert_eq!(w.stats.full_flushes, 4 * 16);
+    }
+
+    #[test]
+    fn drain_reports_leftovers() {
+        let mut w = wc(4);
+        w.store(0, 0, 32);
+        w.store(0, 64, 64); // full-line store drains immediately
+        let fl = w.drain(10);
+        assert_eq!(fl.len(), 1);
+        assert!(!fl[0].full);
+        assert_eq!(fl[0].line, 0);
+    }
+
+    #[test]
+    fn full_line_store_bypasses_buffer() {
+        let mut w = wc(1);
+        let f = w.store(0, 0, 64).unwrap();
+        assert!(f.full);
+        assert_eq!(w.open_buffers(), 0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Native host memory probes: run *real* single- vs multi-strided sweeps
+//! over a large buffer on the machine this repo executes on.
+//!
+//! This is the live cross-check for the simulator: whatever CPU hosts the
+//! run, its hardware prefetcher sees exactly the access patterns of §4 (a
+//! fixed unroll budget distributed over n concurrent strides) and the
+//! multi-striding effect — or its absence — shows up in wall-clock
+//! bandwidth. The probe cannot toggle the prefetcher MSR (unprivileged),
+//! which is why the simulator remains the primary reproduction vehicle.
+//!
+//! The inner loops are written so the compiler keeps them memory-bound:
+//! per-stride f32 accumulators (auto-vectorizable), `black_box` sinks, and
+//! a data-dependent reduction that cannot be elided.
+
+use std::hint::black_box;
+
+use crate::util::stats::median;
+use crate::util::timer::Timer;
+
+/// Probe configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeProbe {
+    /// Buffer size in bytes (defaults well beyond any L3).
+    pub bytes: usize,
+    /// Measurement repetitions (median reported, like the paper).
+    pub reps: u32,
+}
+
+impl Default for NativeProbe {
+    fn default() -> Self {
+        Self { bytes: 512 * 1024 * 1024, reps: 5 }
+    }
+}
+
+/// Result of one probe configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NativePoint {
+    pub strides: u32,
+    pub read_gib_s: f64,
+    pub write_gib_s: f64,
+    pub copy_gib_s: f64,
+}
+
+impl NativeProbe {
+    /// Run read/write/copy probes for each stride count.
+    pub fn run(&self, stride_counts: &[u32]) -> Vec<NativePoint> {
+        let n_elems = self.bytes / 4;
+        let mut src = vec![1.0f32; n_elems];
+        let mut dst = vec![0.0f32; n_elems];
+        // Touch everything once (page-fault warmup).
+        for (i, v) in src.iter_mut().enumerate() {
+            *v = (i % 7) as f32;
+        }
+
+        stride_counts
+            .iter()
+            .map(|&s| NativePoint {
+                strides: s,
+                read_gib_s: self.measure(|| read_strided(&src, s)),
+                write_gib_s: self.measure(|| write_strided(&mut dst, s)),
+                copy_gib_s: self.measure_copy(&src, &mut dst, s),
+            })
+            .collect()
+    }
+
+    fn measure<F: FnMut() -> f32>(&self, mut f: F) -> f64 {
+        // One warmup.
+        black_box(f());
+        let mut samples = Vec::with_capacity(self.reps as usize);
+        for _ in 0..self.reps {
+            let t = Timer::start();
+            black_box(f());
+            samples.push(self.bytes as f64 / (1u64 << 30) as f64 / t.secs());
+        }
+        median(&samples)
+    }
+
+    fn measure_copy(&self, src: &[f32], dst: &mut [f32], s: u32) -> f64 {
+        copy_strided(src, dst, s);
+        let mut samples = Vec::with_capacity(self.reps as usize);
+        for _ in 0..self.reps {
+            let t = Timer::start();
+            copy_strided(src, dst, s);
+            black_box(&dst[0]);
+            // A copy moves 2× the buffer (read + write).
+            samples.push(2.0 * src.len() as f64 * 4.0 / (1u64 << 30) as f64 / t.secs());
+        }
+        median(&samples)
+    }
+}
+
+/// Sum the buffer walking `n` concurrent strides (the §4 read pattern):
+/// the buffer splits into `n` contiguous regions advanced in lockstep.
+pub fn read_strided(data: &[f32], n: u32) -> f32 {
+    let n = n as usize;
+    let span = data.len() / n;
+    let mut accs = vec![0f32; n];
+    // Lockstep walk: iteration i touches element i of every region —
+    // exactly n concurrent address streams.
+    for i in 0..span {
+        for (k, acc) in accs.iter_mut().enumerate() {
+            // Safety: k*span + i < n*span <= len.
+            *acc += unsafe { *data.get_unchecked(k * span + i) };
+        }
+    }
+    accs.iter().sum()
+}
+
+/// Store a constant through `n` concurrent strides.
+pub fn write_strided(data: &mut [f32], n: u32) -> f32 {
+    let n = n as usize;
+    let span = data.len() / n;
+    for i in 0..span {
+        for k in 0..n {
+            unsafe {
+                *data.get_unchecked_mut(k * span + i) = 1.0;
+            }
+        }
+    }
+    data[0]
+}
+
+/// Copy src→dst through `n` concurrent stride pairs.
+pub fn copy_strided(src: &[f32], dst: &mut [f32], n: u32) {
+    let n = n as usize;
+    let len = src.len().min(dst.len());
+    let span = len / n;
+    for i in 0..span {
+        for k in 0..n {
+            unsafe {
+                *dst.get_unchecked_mut(k * span + i) = *src.get_unchecked(k * span + i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_strided_sums_everything() {
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let expect: f32 = data.iter().sum();
+        for n in [1, 2, 4, 8] {
+            assert_eq!(read_strided(&data, n), expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn write_strided_covers_buffer() {
+        let mut data = vec![0f32; 64];
+        write_strided(&mut data, 4);
+        assert!(data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn copy_strided_copies() {
+        let src: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut dst = vec![0f32; 64];
+        copy_strided(&src, &mut dst, 8);
+        assert_eq!(src, dst);
+    }
+
+    #[test]
+    fn probe_runs_small() {
+        let p = NativeProbe { bytes: 1 << 20, reps: 2 };
+        let pts = p.run(&[1, 4]);
+        assert_eq!(pts.len(), 2);
+        for pt in pts {
+            assert!(pt.read_gib_s > 0.0 && pt.write_gib_s > 0.0 && pt.copy_gib_s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,447 @@
+//! The L2 streamer — the prefetch engine multi-striding exploits.
+//!
+//! Modeled after Intel's documented behaviour (Optimization Reference
+//! Manual §E.2.5.4 and the primer the paper cites [13]):
+//!
+//! * Streams are tracked per **4 KiB page region**; a tracker table holds up
+//!   to `table_size` concurrent streams (32 on recent big cores).
+//! * A stream *trains* after `train_threshold` accesses in a consistent
+//!   direction within the page, then issues prefetches ahead of the demand
+//!   position.
+//! * The lookahead **distance ramps up** with confirmations, up to
+//!   `max_distance` lines, and never crosses the 4 KiB page boundary.
+//! * Each stream keeps at most `per_stream_outstanding` prefetches in
+//!   flight (enforced by the engine's caller via the `stream` slot id).
+//!
+//! The paper's entire effect lives in the interplay of these limits: one
+//! stride = one trained stream = one stream's worth of in-flight lines;
+//! n strides = n streams = n× the in-flight lines, until DRAM bandwidth or
+//! the tracker table saturates.
+
+use std::collections::HashMap;
+
+use super::{Observation, PrefetchReq};
+use crate::mem::addr;
+
+/// Streamer tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamerConfig {
+    /// Stream tracker table entries (concurrent 4 KiB page streams).
+    pub table_size: u32,
+    /// Consistent accesses within a page before prefetching starts.
+    pub train_threshold: u32,
+    /// Initial lookahead distance (lines) once trained.
+    pub init_distance: u32,
+    /// Lookahead growth per confirmation (lines).
+    pub ramp: u32,
+    /// Maximum lookahead distance (lines).
+    pub max_distance: u32,
+    /// Maximum prefetches one stream may have in flight.
+    pub per_stream_outstanding: u32,
+    /// Carry a trained stream's state into the next sequential page
+    /// (next-page prefetch of recent cores): the stream re-arms in the new
+    /// page without paying the full training threshold again.
+    pub next_page_carry: bool,
+}
+
+impl Default for StreamerConfig {
+    fn default() -> Self {
+        Self {
+            // 32 architectural streams plus headroom for next-page carry
+            // transients (a tracker at exactly 32 thrashes when all 32
+            // streams cross page boundaries while carries pre-arm).
+            table_size: 48,
+            train_threshold: 2,
+            init_distance: 4,
+            ramp: 2,
+            max_distance: 24,
+            per_stream_outstanding: 16,
+            next_page_carry: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    Unknown,
+    Fwd,
+    Bwd,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct StreamEntry {
+    /// 4 KiB page this stream lives in.
+    page: u64,
+    valid: bool,
+    dir: Dir,
+    /// Last demand line observed (absolute line address).
+    last_line: u64,
+    /// Number of consistent observations (training + confirmations).
+    confirmations: u32,
+    /// Next line to prefetch (absolute line address).
+    next_prefetch: u64,
+    /// LRU stamp for table replacement.
+    stamp: u64,
+    /// Stream was carried over from the previous page fully trained.
+    carried: bool,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamerStats {
+    pub observations: u64,
+    pub streams_allocated: u64,
+    pub streams_evicted: u64,
+    /// Streams evicted before they ever trained — tracker thrashing.
+    pub streams_evicted_untrained: u64,
+    pub prefetches_issued: u64,
+    pub page_carries: u64,
+}
+
+/// The streamer engine.
+pub struct Streamer {
+    cfg: StreamerConfig,
+    table: Vec<StreamEntry>,
+    /// page -> table slot (§Perf: replaces a linear table scan on every
+    /// L2 observation).
+    index: HashMap<u64, usize>,
+    clock: u64,
+    pub stats: StreamerStats,
+}
+
+impl Streamer {
+    pub fn new(cfg: StreamerConfig) -> Self {
+        Self {
+            cfg,
+            table: Vec::with_capacity(cfg.table_size as usize),
+            index: HashMap::with_capacity(cfg.table_size as usize * 2),
+            clock: 0,
+            stats: StreamerStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> StreamerConfig {
+        self.cfg
+    }
+
+    /// Observe a demand access arriving at L2; push generated prefetch
+    /// requests into `out`. `inflight(slot)` reports how many prefetches the
+    /// given stream slot currently has outstanding, so the engine can hold
+    /// back requests beyond the per-stream budget.
+    pub fn observe(
+        &mut self,
+        obs: Observation,
+        inflight: impl Fn(u32) -> u32,
+        out: &mut Vec<PrefetchReq>,
+    ) {
+        self.clock += 1;
+        self.stats.observations += 1;
+        let line = obs.line;
+        let page = addr::page_of_line(line);
+
+        // Find or allocate the stream for this page.
+        let slot = match self.index.get(&page) {
+            Some(&i) => i,
+            None => self.allocate(page, line),
+        };
+        let clock = self.clock;
+        let cfg = self.cfg;
+        let e = &mut self.table[slot];
+        e.stamp = clock;
+
+        if e.confirmations == 0 && !e.carried {
+            // First observation in this page: record position, direction unknown.
+            e.last_line = line;
+            e.confirmations = 1;
+            return;
+        }
+
+        // Establish / confirm direction.
+        let dir = if line > e.last_line {
+            Dir::Fwd
+        } else if line < e.last_line {
+            Dir::Bwd
+        } else {
+            // Same line (e.g. second half of an unaligned pair): neutral.
+            e.last_line = line;
+            return;
+        };
+        if e.dir == Dir::Unknown {
+            e.dir = dir;
+        } else if e.dir != dir {
+            // Direction flip: retrain in the new direction.
+            e.dir = dir;
+            e.confirmations = 1;
+            e.last_line = line;
+            e.next_prefetch = line;
+            return;
+        }
+        e.last_line = line;
+        e.confirmations = e.confirmations.saturating_add(1);
+
+        if e.confirmations < cfg.train_threshold {
+            return;
+        }
+
+        // Trained: compute the lookahead window and emit requests.
+        let ramped = cfg.init_distance + cfg.ramp * (e.confirmations - cfg.train_threshold);
+        let distance = ramped.min(cfg.max_distance) as u64;
+        let budget = cfg.per_stream_outstanding.saturating_sub(inflight(slot as u32));
+        if budget == 0 {
+            return;
+        }
+
+        let mut issued = 0u32;
+        match e.dir {
+            Dir::Fwd => {
+                let page_end = addr::page_last_line(line);
+                let target_end = (line + distance).min(page_end);
+                let mut next = e.next_prefetch.max(line + 1);
+                while next <= target_end && issued < budget {
+                    out.push(PrefetchReq { line: next, stream: slot as u32, to_l1: false });
+                    next += 1;
+                    issued += 1;
+                }
+                e.next_prefetch = next;
+            }
+            Dir::Bwd => {
+                let page_start = addr::page_first_line(line);
+                let target_end = line.saturating_sub(distance).max(page_start);
+                let mut next = if e.next_prefetch == 0 || e.next_prefetch >= line {
+                    line.saturating_sub(1)
+                } else {
+                    e.next_prefetch
+                };
+                while next >= target_end && next < line && issued < budget {
+                    out.push(PrefetchReq { line: next, stream: slot as u32, to_l1: false });
+                    if next == 0 {
+                        break;
+                    }
+                    next -= 1;
+                    issued += 1;
+                }
+                e.next_prefetch = next;
+            }
+            Dir::Unknown => unreachable!(),
+        }
+        self.stats.prefetches_issued += issued as u64;
+
+        // Next-page carry: once the stream's prefetch cursor parks at the
+        // page boundary and demand is close behind, pre-arm the next page.
+        if cfg.next_page_carry && e.dir == Dir::Fwd {
+            let page_end = addr::page_last_line(line);
+            if e.next_prefetch > page_end && line + 4 >= page_end {
+                let next_page = page + 1;
+                let confirmed = e.confirmations;
+                if !self.index.contains_key(&next_page) {
+                    let ns = self.allocate(next_page, addr::page_first_line(line) + 64);
+                    let t = &mut self.table[ns];
+                    t.carried = true;
+                    t.dir = Dir::Fwd;
+                    t.confirmations = confirmed.min(cfg.train_threshold + 2);
+                    t.last_line = (next_page << (addr::PAGE_SHIFT - addr::LINE_SHIFT)).wrapping_sub(1);
+                    t.next_prefetch = next_page << (addr::PAGE_SHIFT - addr::LINE_SHIFT);
+                    self.stats.page_carries += 1;
+                }
+            }
+        }
+    }
+
+    fn allocate(&mut self, page: u64, line: u64) -> usize {
+        self.stats.streams_allocated += 1;
+        let fresh = StreamEntry {
+            page,
+            valid: true,
+            dir: Dir::Unknown,
+            last_line: line,
+            confirmations: 0,
+            next_prefetch: line,
+            stamp: self.clock,
+            carried: false,
+        };
+        if self.table.len() < self.cfg.table_size as usize {
+            self.table.push(fresh);
+            let idx = self.table.len() - 1;
+            self.index.insert(page, idx);
+            return idx;
+        }
+        // Evict LRU tracker — with more concurrent page streams than table
+        // entries, streams get evicted before they finish training, and the
+        // engine degrades (the >32-stride regime).
+        let (idx, _) = self
+            .table
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| if e.valid { e.stamp } else { 0 })
+            .expect("table non-empty");
+        self.stats.streams_evicted += 1;
+        if self.table[idx].valid
+            && self.table[idx].confirmations < self.cfg.train_threshold
+            && !self.table[idx].carried
+        {
+            self.stats.streams_evicted_untrained += 1;
+        }
+        if self.table[idx].valid {
+            self.index.remove(&self.table[idx].page);
+        }
+        self.table[idx] = fresh;
+        self.index.insert(page, idx);
+        idx
+    }
+
+    /// Number of currently trained streams (debug/test aid).
+    pub fn trained_streams(&self) -> usize {
+        self.table
+            .iter()
+            .filter(|e| e.valid && (e.confirmations >= self.cfg.train_threshold || e.carried))
+            .count()
+    }
+
+    pub fn reset(&mut self) {
+        self.table.clear();
+        self.index.clear();
+        self.clock = 0;
+        self.stats = StreamerStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(line: u64) -> Observation {
+        Observation { line, ip: 0, miss: true, store: false }
+    }
+
+    fn run_seq(s: &mut Streamer, lines: impl IntoIterator<Item = u64>) -> Vec<PrefetchReq> {
+        let mut out = Vec::new();
+        for l in lines {
+            s.observe(obs(l), |_| 0, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn trains_after_threshold_and_prefetches_ahead() {
+        let mut s = Streamer::new(StreamerConfig::default());
+        let reqs = run_seq(&mut s, [0, 1]);
+        assert!(!reqs.is_empty(), "trained after 2 consistent accesses");
+        assert!(reqs.iter().all(|r| r.line > 1), "prefetches are ahead of demand");
+        assert!(reqs.iter().all(|r| !r.to_l1), "streamer fills L2/L3");
+    }
+
+    #[test]
+    fn lookahead_ramps_with_confirmations() {
+        let cfg = StreamerConfig::default();
+        let mut s = Streamer::new(cfg);
+        let mut out = Vec::new();
+        for l in 0..12u64 {
+            out.clear();
+            s.observe(obs(l), |_| 0, &mut out);
+        }
+        // After many confirmations the cursor must be >= max_distance ahead.
+        let reqs = run_seq(&mut s, [12]);
+        if let Some(r) = reqs.last() {
+            assert!(r.line >= 12 + cfg.init_distance as u64);
+        }
+        // Cursor never exceeds max_distance beyond demand:
+        assert!(reqs.iter().all(|r| r.line <= 12 + cfg.max_distance as u64));
+    }
+
+    #[test]
+    fn never_crosses_page_boundary() {
+        let mut s = Streamer::new(StreamerConfig { next_page_carry: false, ..Default::default() });
+        // Train near the end of page 0 (lines 0..63).
+        let reqs = run_seq(&mut s, [58, 59, 60, 61, 62]);
+        assert!(reqs.iter().all(|r| r.line <= 63), "prefetch stays in page: {reqs:?}");
+    }
+
+    #[test]
+    fn backward_streams_train_too() {
+        let mut s = Streamer::new(StreamerConfig::default());
+        let reqs = run_seq(&mut s, [40, 39, 38]);
+        assert!(!reqs.is_empty());
+        // Every prefetch runs ahead of the demand that triggered it.
+        assert!(reqs.iter().all(|r| r.line < 39), "{reqs:?}");
+    }
+
+    #[test]
+    fn per_stream_outstanding_budget_respected() {
+        let cfg = StreamerConfig { per_stream_outstanding: 3, ..Default::default() };
+        let mut s = Streamer::new(cfg);
+        let mut out = Vec::new();
+        s.observe(obs(0), |_| 0, &mut out);
+        s.observe(obs(1), |_| 0, &mut out);
+        assert!(out.len() <= 3, "issued {} > budget", out.len());
+        // With the budget reported as exhausted, nothing is issued.
+        out.clear();
+        s.observe(obs(2), |_| 3, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn n_strides_train_n_streams() {
+        let mut s = Streamer::new(StreamerConfig::default());
+        let stride = 1 << 14; // lines; well beyond a page
+        let mut out = Vec::new();
+        for step in 0..4u64 {
+            for k in 0..8u64 {
+                s.observe(obs(k * stride + step), |_| 0, &mut out);
+            }
+        }
+        assert_eq!(s.trained_streams(), 8, "one trained stream per stride");
+    }
+
+    #[test]
+    fn table_thrashing_beyond_capacity() {
+        let cfg = StreamerConfig { table_size: 4, next_page_carry: false, ..Default::default() };
+        let mut s = Streamer::new(cfg);
+        let stride = 1 << 14;
+        let mut out = Vec::new();
+        // 8 interleaved streams with only 4 trackers: each stream's entry is
+        // evicted before its second access arrives -> no stream ever trains.
+        for step in 0..8u64 {
+            for k in 0..8u64 {
+                s.observe(obs(k * stride + step), |_| 0, &mut out);
+            }
+        }
+        assert_eq!(out.len(), 0, "no prefetches under tracker thrash");
+        assert!(s.stats.streams_evicted_untrained > 0);
+    }
+
+    #[test]
+    fn direction_flip_retrains() {
+        let mut s = Streamer::new(StreamerConfig::default());
+        let mut out = Vec::new();
+        s.observe(obs(10), |_| 0, &mut out);
+        s.observe(obs(11), |_| 0, &mut out);
+        out.clear();
+        s.observe(obs(9), |_| 0, &mut out); // flip
+        assert!(out.is_empty(), "flip must retrain, not prefetch");
+    }
+
+    #[test]
+    fn next_page_carry_rearms() {
+        let cfg = StreamerConfig::default();
+        let mut s = Streamer::new(cfg);
+        let mut out = Vec::new();
+        for l in 0..64u64 {
+            s.observe(obs(l), |_| 0, &mut out);
+        }
+        assert!(s.stats.page_carries >= 1, "stream carried into page 1");
+        // First access in page 1 resumes prefetching without retraining.
+        out.clear();
+        s.observe(obs(64), |_| 0, &mut out);
+        assert!(!out.is_empty(), "carried stream prefetches immediately");
+    }
+
+    #[test]
+    fn same_line_observation_is_neutral() {
+        let mut s = Streamer::new(StreamerConfig::default());
+        let mut out = Vec::new();
+        s.observe(obs(5), |_| 0, &mut out);
+        s.observe(obs(5), |_| 0, &mut out);
+        s.observe(obs(6), |_| 0, &mut out);
+        s.observe(obs(7), |_| 0, &mut out);
+        assert!(!out.is_empty(), "duplicate lines do not reset training");
+    }
+}

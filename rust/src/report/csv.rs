@@ -1,0 +1,47 @@
+//! CSV export of experiment series (for external plotting of the figures).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows of f64/string cells as CSV. Creates parent directories.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.iter().map(|c| escape(c)).collect::<Vec<_>>().join(","))?;
+    }
+    Ok(())
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("multistride_csv_test");
+        let path = dir.join("out.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1".into(), "x,y".into()], vec!["2".into(), "q\"z".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("\"x,y\""));
+        assert!(text.contains("\"q\"\"z\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,191 @@
+//! Renderers that print each figure's series in the paper's shape.
+
+use crate::coordinator::experiments::{ComparisonRow, KernelPoint, MicroPoint, MICRO_STRIDES};
+use crate::kernels::micro::MicroOp;
+
+use super::table::{gib, speedup, Table};
+
+/// Figure 2/5: throughput per op type across stride counts.
+pub fn render_micro_grid(points: &[MicroPoint], title: &str) -> String {
+    let mut out = String::new();
+    for prefetch in [true, false] {
+        let mut t = Table::new(
+            &std::iter::once("operation")
+                .chain(MICRO_STRIDES.iter().map(|s| match s {
+                    1 => "1 stride",
+                    2 => "2",
+                    4 => "4",
+                    8 => "8",
+                    16 => "16",
+                    32 => "32",
+                    _ => "?",
+                }))
+                .collect::<Vec<_>>(),
+        )
+        .with_title(&format!(
+            "{title} — hardware prefetching {} (GiB/s)",
+            if prefetch { "ENABLED" } else { "DISABLED" }
+        ));
+        for op in MicroOp::all() {
+            for interleaved in [false, true] {
+                let series: Vec<&MicroPoint> = points
+                    .iter()
+                    .filter(|p| p.op == op && p.prefetch == prefetch && p.interleaved == interleaved)
+                    .collect();
+                if series.is_empty() {
+                    continue;
+                }
+                let mut cells = vec![format!(
+                    "{}{}",
+                    op.label(),
+                    if interleaved { " [interleaved]" } else { "" }
+                )];
+                for &s in &MICRO_STRIDES {
+                    let v = series
+                        .iter()
+                        .find(|p| p.strides == s)
+                        .map(|p| gib(p.throughput_gib))
+                        .unwrap_or_else(|| "-".into());
+                    cells.push(v);
+                }
+                t.row(cells);
+            }
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Figure 3: stall-cycle series for the read micro-benchmark.
+pub fn render_stalls(points: &[MicroPoint]) -> String {
+    let mut t = Table::new(&[
+        "strides",
+        "prefetch",
+        "cycles (M)",
+        "stalls total (M)",
+        "w/ L1D miss (M)",
+        "w/ L2 miss (M)",
+        "w/ L3 miss (M)",
+        "L2-miss frac",
+        "L3-miss frac",
+    ])
+    .with_title("Figure 3 — execution stalls with outstanding loads (aligned reads)");
+    let m = 1e6;
+    for p in points {
+        let c = &p.result.counters;
+        t.row(vec![
+            p.strides.to_string(),
+            if p.prefetch { "on" } else { "off" }.into(),
+            format!("{:.1}", c.cycles as f64 / m),
+            format!("{:.1}", c.stalls_total as f64 / m),
+            format!("{:.1}", c.stalls_l1d_miss as f64 / m),
+            format!("{:.1}", c.stalls_l2_miss as f64 / m),
+            format!("{:.1}", c.stalls_l3_miss as f64 / m),
+            format!("{:.2}", c.l2_stall_fraction()),
+            format!("{:.2}", c.l3_stall_fraction()),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 4: hit ratios per cache level.
+pub fn render_hit_ratios(points: &[MicroPoint]) -> String {
+    let mut t = Table::new(&["strides", "prefetch", "L1 hit", "L2 hit", "L3 hit"])
+        .with_title("Figure 4 — cache hit ratio per level (aligned reads)");
+    for p in points {
+        t.row(vec![
+            p.strides.to_string(),
+            if p.prefetch { "on" } else { "off" }.into(),
+            format!("{:.3}", p.result.l1.hit_ratio()),
+            format!("{:.3}", p.result.l2.hit_ratio()),
+            format!("{:.3}", p.result.l3.hit_ratio()),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 6: a kernel's striding-sweep, one row per (stride, portion).
+pub fn render_kernel_sweep(kernel: &str, points: &[KernelPoint]) -> String {
+    let mut t = Table::new(&["strides", "portion", "total", "feasible", "GiB/s"])
+        .with_title(&format!("Figure 6 — {kernel}: striding optimization space"));
+    let mut sorted: Vec<&KernelPoint> = points.iter().collect();
+    sorted.sort_by_key(|p| (p.config.stride_unroll, p.config.portion_unroll));
+    for p in sorted {
+        t.row(vec![
+            p.config.stride_unroll.to_string(),
+            p.config.portion_unroll.to_string(),
+            p.config.total_unrolls().to_string(),
+            if p.feasible { "y" } else { "REG" }.into(),
+            if p.feasible { gib(p.throughput_gib) } else { "-".into() },
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 7: speedups of the best multi-strided configuration over each
+/// reference.
+pub fn render_comparison(machine: &str, rows: &[ComparisonRow]) -> String {
+    let mut t = Table::new(&["kernel", "reference", "ref GiB/s", "multi-strided GiB/s", "speedup"])
+        .with_title(&format!("Figure 7 — comparison with the state of the art ({machine})"));
+    for r in rows {
+        t.row(vec![
+            r.kernel.clone(),
+            r.reference.label().into(),
+            gib(r.reference_gib),
+            gib(r.multistrided_gib),
+            speedup(r.speedup()),
+        ]);
+    }
+    t.render()
+}
+
+/// CSV rows for a micro grid (external plotting).
+pub fn micro_csv_rows(points: &[MicroPoint]) -> Vec<Vec<String>> {
+    points
+        .iter()
+        .map(|p| {
+            vec![
+                p.op.label().to_string(),
+                p.strides.to_string(),
+                p.interleaved.to_string(),
+                p.prefetch.to_string(),
+                format!("{:.4}", p.throughput_gib),
+                format!("{:.4}", p.result.l1.hit_ratio()),
+                format!("{:.4}", p.result.l2.hit_ratio()),
+                format!("{:.4}", p.result.l3.hit_ratio()),
+                p.result.counters.stalls_total.to_string(),
+            ]
+        })
+        .collect()
+}
+
+pub const MICRO_CSV_HEADER: [&str; 9] = [
+    "op", "strides", "interleaved", "prefetch", "gib_s", "l1_hit", "l2_hit", "l3_hit",
+    "stalls_total",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+    use crate::coordinator::experiments::run_micro;
+
+    #[test]
+    fn micro_grid_renders() {
+        let pts = vec![
+            run_micro(coffee_lake(), MicroOp::LoadAligned, 1, 1 << 22, true, false),
+            run_micro(coffee_lake(), MicroOp::LoadAligned, 4, 1 << 22, true, false),
+        ];
+        let s = render_micro_grid(&pts, "Figure 2");
+        assert!(s.contains("aligned loads"));
+        assert!(s.contains("ENABLED"));
+        let s3 = render_stalls(&pts);
+        assert!(s3.contains("Figure 3"));
+        let s4 = render_hit_ratios(&pts);
+        assert!(s4.contains("L2 hit"));
+        let rows = micro_csv_rows(&pts);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), MICRO_CSV_HEADER.len());
+    }
+}

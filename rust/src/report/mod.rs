@@ -1,0 +1,11 @@
+//! Rendering experiment results in the paper's formats: ASCII tables that
+//! mirror Tables 1–2, series dumps that mirror the figure axes, and CSV
+//! export for external plotting.
+
+pub mod csv;
+pub mod figures;
+pub mod table;
+
+pub use csv::write_csv;
+pub use figures::*;
+pub use table::Table;

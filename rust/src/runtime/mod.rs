@@ -1,0 +1,214 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas kernel artifacts
+//! (`artifacts/*.hlo.txt`) and executes them numerically from Rust.
+//!
+//! This is the L3↔L2 bridge of the three-layer architecture: Python runs
+//! only at build time (`make artifacts`); the request path is this module.
+//! Interchange format is **HLO text** — jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod registry;
+
+pub use registry::ArtifactRegistry;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded, compiled kernel executable.
+pub struct LoadedKernel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (diagnostics).
+    pub path: std::path::PathBuf,
+}
+
+/// The PJRT CPU runtime with a cache of compiled kernels.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    kernels: HashMap<String, LoadedKernel>,
+}
+
+impl Runtime {
+    /// Construct a CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, kernels: HashMap::new() })
+    }
+
+    /// Platform diagnostics string.
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Load and compile an HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        self.kernels.insert(name.to_string(), LoadedKernel { exe, path: path.to_path_buf() });
+        Ok(())
+    }
+
+    /// Names of loaded kernels.
+    pub fn loaded(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.kernels.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Execute kernel `name` on f32 inputs with the given shapes; returns
+    /// the flattened f32 outputs (artifacts are lowered with
+    /// `return_tuple=True`, outputs unwrapped in declaration order).
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let k = self.kernels.get(name).ok_or_else(|| anyhow!("kernel {name} not loaded"))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape input to {shape:?}: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = k
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // Lowered with return_tuple=True: decompose the tuple.
+        let elems = out.decompose_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(elems.len());
+        for e in elems {
+            vecs.push(e.to_vec::<f32>().map_err(|e2| anyhow!("to_vec: {e2:?}"))?);
+        }
+        Ok(vecs)
+    }
+}
+
+/// Pure-Rust oracles for the numeric kernels — used by the integration
+/// tests and the e2e example to validate the PJRT-executed artifacts.
+pub mod oracle {
+    /// y = A · x (row-major A of shape m×n).
+    pub fn mxv(a: &[f32], x: &[f32], m: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0f32; m];
+        for i in 0..m {
+            let mut acc = 0f32;
+            for j in 0..n {
+                acc += a[i * n + j] * x[j];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// bicg: s = Aᵀ·r, q = A·p.
+    pub fn bicg(a: &[f32], r: &[f32], p: &[f32], m: usize, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut s = vec![0f32; n];
+        let mut q = vec![0f32; m];
+        for i in 0..m {
+            let mut acc = 0f32;
+            for j in 0..n {
+                s[j] += r[i] * a[i * n + j];
+                acc += a[i * n + j] * p[j];
+            }
+            q[i] = acc;
+        }
+        (s, q)
+    }
+
+    /// 3×3 valid convolution with weights w (row-major 3×3).
+    pub fn conv3x3(inp: &[f32], w: &[f32; 9], h: usize, wdt: usize) -> Vec<f32> {
+        let (oh, ow) = (h - 2, wdt - 2);
+        let mut out = vec![0f32; oh * ow];
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut acc = 0f32;
+                for di in 0..3 {
+                    for dj in 0..3 {
+                        acc += w[di * 3 + dj] * inp[(i + di) * wdt + (j + dj)];
+                    }
+                }
+                out[i * ow + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// One interior Jacobi sweep: b = 0.2·(c + n + s + e + w), borders copied.
+    pub fn jacobi2d(a: &[f32], h: usize, w: usize) -> Vec<f32> {
+        let mut b = a.to_vec();
+        for i in 1..h - 1 {
+            for j in 1..w - 1 {
+                b[i * w + j] = 0.2
+                    * (a[i * w + j]
+                        + a[i * w + j - 1]
+                        + a[i * w + j + 1]
+                        + a[(i - 1) * w + j]
+                        + a[(i + 1) * w + j]);
+            }
+        }
+        b
+    }
+
+    /// Relative max-abs error between two vectors.
+    pub fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let denom = x.abs().max(y.abs()).max(1e-6);
+                (x - y).abs() / denom
+            })
+            .fold(0f32, f32::max)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn mxv_identity() {
+            // 2x2 identity times [3, 4].
+            let y = mxv(&[1.0, 0.0, 0.0, 1.0], &[3.0, 4.0], 2, 2);
+            assert_eq!(y, vec![3.0, 4.0]);
+        }
+
+        #[test]
+        fn bicg_shapes() {
+            let (s, q) = bicg(&[1.0; 6], &[1.0, 2.0], &[1.0, 1.0, 1.0], 2, 3);
+            assert_eq!(s, vec![3.0, 3.0, 3.0]);
+            assert_eq!(q, vec![3.0, 3.0]);
+        }
+
+        #[test]
+        fn conv_averages() {
+            let inp = vec![1.0f32; 16];
+            let w = [1.0f32 / 9.0; 9];
+            let out = conv3x3(&inp, &w, 4, 4);
+            assert_eq!(out.len(), 4);
+            for v in out {
+                assert!((v - 1.0).abs() < 1e-6);
+            }
+        }
+
+        #[test]
+        fn jacobi_preserves_constant() {
+            let a = vec![2.0f32; 25];
+            let b = jacobi2d(&a, 5, 5);
+            for v in b {
+                assert!((v - 2.0).abs() < 1e-6);
+            }
+        }
+
+        #[test]
+        fn rel_err() {
+            assert_eq!(max_rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+            assert!(max_rel_err(&[1.0], &[1.1]) > 0.05);
+        }
+    }
+}

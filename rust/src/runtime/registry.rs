@@ -1,0 +1,78 @@
+//! Artifact discovery: maps kernel names to `artifacts/*.hlo.txt` files.
+
+use std::path::{Path, PathBuf};
+
+/// The artifact directory scanner.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+}
+
+impl ArtifactRegistry {
+    /// Default location: `$MULTISTRIDE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MULTISTRIDE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path an artifact for `name` would live at.
+    pub fn path_for(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Does the artifact exist?
+    pub fn has(&self, name: &str) -> bool {
+        self.path_for(name).is_file()
+    }
+
+    /// All available artifact names (sorted).
+    pub fn list(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if let Some(fname) = p.file_name().and_then(|f| f.to_str()) {
+                    if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_scans_dir() {
+        let dir = std::env::temp_dir().join("multistride_reg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mxv.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("ignore.bin"), "x").unwrap();
+        let reg = ArtifactRegistry::new(&dir);
+        assert_eq!(reg.list(), vec!["mxv".to_string()]);
+        assert!(reg.has("mxv"));
+        assert!(!reg.has("conv"));
+        assert!(reg.path_for("conv").to_string_lossy().ends_with("conv.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_empty() {
+        let reg = ArtifactRegistry::new("/nonexistent/multistride");
+        assert!(reg.list().is_empty());
+    }
+}

@@ -1,0 +1,102 @@
+//! `perf`-style event counters.
+//!
+//! The paper's Figures 3 and 4 are built from Intel performance events:
+//!
+//! * `CYCLE_ACTIVITY.STALLS_TOTAL` — stall cycles;
+//! * `CYCLE_ACTIVITY.STALLS_MEM_ANY` — stalls with ≥1 outstanding load;
+//! * `CYCLE_ACTIVITY.STALLS_L1D_MISS` / `STALLS_L2_MISS` / `STALLS_L3_MISS`
+//!   — stalls with an outstanding load that missed L1/L2/L3;
+//! * per-level hit ratios from the `MEM_LOAD_RETIRED.*` family.
+//!
+//! The simulator attributes each retirement-gap to the deepest level the
+//! blocking access had to reach, mirroring the subset semantics of those
+//! events (`STALLS_L3_MISS ⊆ STALLS_L2_MISS ⊆ STALLS_L1D_MISS ⊆ MEM_ANY ⊆
+//! TOTAL`).
+
+/// Aggregated event counts over one simulated run. All cycle values are in
+/// core cycles of the simulated machine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counters {
+    /// Total cycles of the run (fence-to-fence).
+    pub cycles: u64,
+    /// Stall cycles (no retirement progress).
+    pub stalls_total: u64,
+    /// Stall cycles with at least one outstanding memory load.
+    pub stalls_mem_any: u64,
+    /// Stall cycles while an outstanding load had missed L1D.
+    pub stalls_l1d_miss: u64,
+    /// … had missed L2.
+    pub stalls_l2_miss: u64,
+    /// … had missed L3.
+    pub stalls_l3_miss: u64,
+
+    /// Retired vector memory accesses.
+    pub accesses: u64,
+    /// Bytes moved by loads.
+    pub bytes_read: u64,
+    /// Bytes moved by stores.
+    pub bytes_written: u64,
+
+    /// Demand reads satisfied from DRAM (after any prefetch merge).
+    pub dram_demand_lines: u64,
+    /// Lines brought by prefetch engines.
+    pub prefetch_lines: u64,
+    /// Demand accesses that merged with an in-flight prefetch.
+    pub prefetch_merges: u64,
+    /// Added cycles spent in TLB misses/walks.
+    pub tlb_cycles: u64,
+}
+
+impl Counters {
+    /// Fraction of stall cycles attributable to outstanding L2 misses —
+    /// one of the Figure 3 series.
+    pub fn l2_stall_fraction(&self) -> f64 {
+        if self.stalls_total == 0 {
+            0.0
+        } else {
+            self.stalls_l2_miss as f64 / self.stalls_total as f64
+        }
+    }
+
+    /// Fraction of stall cycles attributable to outstanding L3 misses.
+    pub fn l3_stall_fraction(&self) -> f64 {
+        if self.stalls_total == 0 {
+            0.0
+        } else {
+            self.stalls_l3_miss as f64 / self.stalls_total as f64
+        }
+    }
+
+    /// Total bytes moved.
+    pub fn bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Check the event-subset invariant the hardware events obey.
+    pub fn subset_invariant_holds(&self) -> bool {
+        self.stalls_l3_miss <= self.stalls_l2_miss
+            && self.stalls_l2_miss <= self.stalls_l1d_miss
+            && self.stalls_l1d_miss <= self.stalls_mem_any
+            && self.stalls_mem_any <= self.stalls_total
+            && self.stalls_total <= self.cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_of_zero_are_zero() {
+        let c = Counters::default();
+        assert_eq!(c.l2_stall_fraction(), 0.0);
+        assert_eq!(c.l3_stall_fraction(), 0.0);
+        assert!(c.subset_invariant_holds());
+    }
+
+    #[test]
+    fn subset_invariant_detects_violation() {
+        let c = Counters { cycles: 10, stalls_total: 5, stalls_mem_any: 6, ..Default::default() };
+        assert!(!c.subset_invariant_holds());
+    }
+}

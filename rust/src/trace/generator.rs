@@ -1,0 +1,486 @@
+//! Lowering a transformed kernel to its vector access trace.
+//!
+//! This plays the role of the paper's parametrized assembly templates
+//! (§5.1.2): given a [`Transformed`] kernel (interchanged, vectorized,
+//! portion/stride unrolled), [`KernelTrace`] enumerates the exact sequence
+//! of 32-byte vector loads and stores the generated AVX2 loop would issue —
+//! lazily, so multi-GiB footprints never materialize.
+//!
+//! Emission rules:
+//!
+//! * Accesses that depend on the vectorized loop form the loop body; they
+//!   are emitted for every (stride replica × portion slot), in grouped or
+//!   interleaved arrangement (§4.1).
+//! * Accesses independent of the vectorized loop (reduction targets like
+//!   `C[i]`, broadcast operands like `r[i]`) are emitted once per iteration
+//!   of their deepest loop — modelling their register residency across the
+//!   inner loop, as the paper's generated kernels do.
+//! * With `eliminate_redundant` set, duplicate addresses within one body
+//!   iteration are emitted once (§5.1.2's redundancy elimination); without
+//!   it every unroll replica performs its loads/stores "even when
+//!   redundant" (the §6.3 isolated-experiment protocol).
+
+use std::collections::HashSet;
+
+use crate::kernels::spec::AccessMode;
+use crate::transform::{Transformed, VEC_ELEMS};
+use crate::trace::{Access, Arrangement, Op};
+
+/// A lazily-enumerable kernel trace.
+pub struct KernelTrace {
+    t: Transformed,
+    /// Indices of accesses that depend on the vectorized loop, split by
+    /// whether they also depend on the stride loop.
+    body_strided: Vec<usize>,
+    body_shared: Vec<usize>,
+    /// Accesses independent of the vectorized loop.
+    outer: Vec<usize>,
+}
+
+impl KernelTrace {
+    pub fn new(t: Transformed) -> Self {
+        let vec_loop = t.vector_loop;
+        let stride_loop = t.stride_loop;
+        let mut body_strided = Vec::new();
+        let mut body_shared = Vec::new();
+        let mut outer = Vec::new();
+        for (i, a) in t.spec.accesses.iter().enumerate() {
+            let on_vec = a.idx.iter().any(|e| e.uses(vec_loop));
+            let on_stride = a.idx.iter().any(|e| e.uses(stride_loop));
+            if on_vec {
+                if on_stride {
+                    body_strided.push(i);
+                } else {
+                    body_shared.push(i);
+                }
+            } else {
+                outer.push(i);
+            }
+        }
+        Self { t, body_strided, body_shared, outer }
+    }
+
+    pub fn transformed(&self) -> &Transformed {
+        &self.t
+    }
+
+    /// Estimated number of accesses (exact when no elimination applies).
+    pub fn len_estimate(&self) -> u64 {
+        let t = &self.t;
+        let s = t.config.stride_unroll as u64;
+        let p = t.config.portion_unroll as u64;
+        let mut outer_iters = 1u64;
+        for &l in &t.order[..t.order.len() - 1] {
+            let e = t.spec.loops[l].extent;
+            outer_iters *= if l == t.stride_loop { e / s } else { e };
+        }
+        let inner_iters = t.spec.loops[t.vector_loop].extent / (VEC_ELEMS * p);
+        // ReadWrite accesses emit a load and a store each.
+        let weight = |&i: &usize| -> u64 {
+            match t.spec.accesses[i].mode {
+                AccessMode::ReadWrite => 2,
+                _ => 1,
+            }
+        };
+        let strided_w: u64 = self.body_strided.iter().map(weight).sum();
+        let shared_w: u64 = self.body_shared.iter().map(weight).sum();
+        let shared_reps = if t.config.eliminate_redundant { 1 } else { s };
+        let body = (strided_w * s + shared_w * shared_reps) * p;
+        // Outer accesses fire once per outer iteration per replica (RW = 2).
+        let outer_per: u64 = self
+            .outer
+            .iter()
+            .map(|&i| match self.t.spec.accesses[i].mode {
+                AccessMode::ReadWrite => 2 * s,
+                _ => s,
+            })
+            .sum();
+        outer_iters * (inner_iters * body + outer_per)
+    }
+
+    /// Iterate the trace.
+    pub fn iter(&self) -> TraceCursor<'_> {
+        TraceCursor::new(self)
+    }
+}
+
+/// Iterator over a [`KernelTrace`].
+pub struct TraceCursor<'a> {
+    kt: &'a KernelTrace,
+    /// Trip counters for every loop in `order` (outermost first). The
+    /// stride loop counts in steps of `stride_unroll`, the vector loop in
+    /// steps of `VEC_ELEMS · portion_unroll`.
+    counters: Vec<u64>,
+    /// Concrete loop values (element units) derived from counters.
+    vals: Vec<u64>,
+    buf: Vec<Access>,
+    buf_pos: usize,
+    done: bool,
+    seen: HashSet<(u64, bool)>,
+}
+
+impl<'a> TraceCursor<'a> {
+    fn new(kt: &'a KernelTrace) -> Self {
+        let n = kt.t.order.len();
+        let mut c = Self {
+            kt,
+            counters: vec![0; n],
+            vals: vec![0; kt.t.spec.loops.len()],
+            buf: Vec::with_capacity(256),
+            buf_pos: 0,
+            done: false,
+            seen: HashSet::new(),
+        };
+        // Empty iteration space?
+        for &l in &kt.t.order {
+            if kt.t.spec.loops[l].extent == 0 {
+                c.done = true;
+            }
+        }
+        if !c.done {
+            c.refill();
+        }
+        c
+    }
+
+    /// Trip count of order-position `pos`.
+    fn trips(&self, pos: usize) -> u64 {
+        let t = &self.kt.t;
+        let l = t.order[pos];
+        let e = t.spec.loops[l].extent;
+        if l == t.stride_loop {
+            e / t.config.stride_unroll as u64
+        } else if l == t.vector_loop {
+            e / (VEC_ELEMS * t.config.portion_unroll as u64)
+        } else {
+            e
+        }
+    }
+
+    /// Recompute `vals` from `counters`.
+    fn sync_vals(&mut self) {
+        let t = &self.kt.t;
+        for (pos, &l) in t.order.iter().enumerate() {
+            let c = self.counters[pos];
+            self.vals[l] = if l == t.stride_loop {
+                c * t.config.stride_unroll as u64
+            } else if l == t.vector_loop {
+                c * VEC_ELEMS * t.config.portion_unroll as u64
+            } else {
+                c
+            };
+        }
+    }
+
+    fn emit(&mut self, addr: u64, store: bool, ip: u32) {
+        if self.kt.t.config.eliminate_redundant && !self.seen.insert((addr, store)) {
+            return;
+        }
+        let op = match (store, addr % 32 == 0) {
+            (false, true) => Op::Load,
+            (false, false) => Op::LoadU,
+            (true, true) => Op::Store,
+            (true, false) => Op::StoreU,
+        };
+        self.buf.push(Access::new(addr, op, 32, ip));
+    }
+
+    fn emit_access(&mut self, acc_idx: usize, vals: &[u64], ip: u32) {
+        let t = &self.kt.t;
+        let acc = &t.spec.accesses[acc_idx];
+        if let Some(addr) = t.spec.address(acc, vals) {
+            match acc.mode {
+                AccessMode::Read => self.emit(addr, false, ip),
+                AccessMode::Write => self.emit(addr, true, ip),
+                AccessMode::ReadWrite => {
+                    self.emit(addr, false, ip);
+                    self.emit(addr, true, ip);
+                }
+            }
+        } else {
+            debug_assert!(false, "library kernels are sized in-bounds");
+        }
+    }
+
+    /// Fill the buffer with one innermost-loop iteration's accesses.
+    fn refill(&mut self) {
+        self.buf.clear();
+        self.buf_pos = 0;
+        if self.kt.t.config.eliminate_redundant {
+            self.seen.clear();
+        }
+        self.sync_vals();
+
+        let t = &self.kt.t;
+        let s = t.config.stride_unroll as u64;
+        let p = t.config.portion_unroll as u64;
+        let vec_loop = t.vector_loop;
+        let stride_loop = t.stride_loop;
+        let inner_pos = t.order.len() - 1;
+        let at_inner_start = self.counters[inner_pos] == 0;
+        let base_vals = self.vals.clone();
+        let n_acc = t.spec.accesses.len() as u32;
+
+        // Outer accesses (register-resident across the inner loop): fire at
+        // the first inner iteration, once per stride replica.
+        if at_inner_start {
+            let outer = self.kt.outer.clone();
+            for k in 0..s {
+                let mut vals = base_vals.clone();
+                vals[stride_loop] = base_vals[stride_loop] + k;
+                for &ai in &outer {
+                    let ip = ai as u32 + (k as u32) * n_acc;
+                    self.emit_access(ai, &vals, ip);
+                }
+            }
+        }
+
+        // Body: shared accesses once per portion slot; strided accesses per
+        // (replica × portion slot) in the configured arrangement.
+        let shared = self.kt.body_shared.clone();
+        let strided = self.kt.body_strided.clone();
+        let eliminate = t.config.eliminate_redundant;
+        let arrangement = t.config.arrangement;
+
+        // Shared operands (e.g. x[j] in mxv): one load per portion slot
+        // when eliminating; otherwise each replica re-loads them.
+        let shared_reps = if eliminate { 1 } else { s };
+        match arrangement {
+            Arrangement::Grouped => {
+                for k in 0..shared_reps {
+                    for q in 0..p {
+                        let mut vals = base_vals.clone();
+                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
+                        vals[stride_loop] = base_vals[stride_loop] + k;
+                        for &ai in &shared {
+                            let ip = ai as u32 + (q as u32) * 64;
+                            self.emit_access(ai, &vals, ip);
+                        }
+                    }
+                }
+                for k in 0..s {
+                    for q in 0..p {
+                        let mut vals = base_vals.clone();
+                        vals[stride_loop] = base_vals[stride_loop] + k;
+                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
+                        for &ai in &strided {
+                            let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
+                            self.emit_access(ai, &vals, ip);
+                        }
+                    }
+                }
+            }
+            Arrangement::Interleaved => {
+                for q in 0..p {
+                    for k in 0..shared_reps {
+                        let mut vals = base_vals.clone();
+                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
+                        vals[stride_loop] = base_vals[stride_loop] + k;
+                        for &ai in &shared {
+                            let ip = ai as u32 + (q as u32) * 64;
+                            self.emit_access(ai, &vals, ip);
+                        }
+                    }
+                    for k in 0..s {
+                        let mut vals = base_vals.clone();
+                        vals[stride_loop] = base_vals[stride_loop] + k;
+                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
+                        for &ai in &strided {
+                            let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
+                            self.emit_access(ai, &vals, ip);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Advance the loop nest (innermost fastest).
+        let mut pos = inner_pos as isize;
+        while pos >= 0 {
+            self.counters[pos as usize] += 1;
+            if self.counters[pos as usize] < self.trips(pos as usize) {
+                return;
+            }
+            self.counters[pos as usize] = 0;
+            pos -= 1;
+        }
+        self.done = true;
+    }
+}
+
+impl Iterator for TraceCursor<'_> {
+    type Item = Access;
+
+    fn next(&mut self) -> Option<Access> {
+        loop {
+            if self.buf_pos < self.buf.len() {
+                let a = self.buf[self.buf_pos];
+                self.buf_pos += 1;
+                return Some(a);
+            }
+            if self.done {
+                return None;
+            }
+            self.refill();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::library::{self, paper_kernels};
+    use crate::transform::{transform, StridingConfig};
+
+    const MIB: u64 = 1 << 20;
+
+    fn trace_of(name: &str, budget: u64, cfg: StridingConfig) -> Vec<Access> {
+        let k = library::kernel_by_name(name, budget).unwrap();
+        let t = transform(&k.spec, cfg).unwrap();
+        KernelTrace::new(t).iter().collect()
+    }
+
+    #[test]
+    fn mxv_trace_covers_matrix_exactly_once() {
+        let budget = 4 * MIB;
+        let k = library::kernel_by_name("mxv", budget).unwrap();
+        let n = k.spec.loops[0].extent;
+        for cfg in [StridingConfig::new(1, 4), StridingConfig::new(4, 1), StridingConfig::new(2, 2)]
+        {
+            let t = transform(&k.spec, cfg).unwrap();
+            let a_base = t.spec.arrays[0].base;
+            let a_bytes = t.spec.arrays[0].bytes();
+            let mut a_accesses = 0u64;
+            for acc in KernelTrace::new(t).iter() {
+                if acc.addr >= a_base && acc.addr < a_base + a_bytes {
+                    a_accesses += 1;
+                }
+            }
+            assert_eq!(
+                a_accesses,
+                n * n / 8,
+                "cfg ({},{}) must touch every A vector once",
+                cfg.stride_unroll,
+                cfg.portion_unroll
+            );
+        }
+    }
+
+    #[test]
+    fn stride_replicas_walk_adjacent_rows() {
+        // Listing 2: stride unroll 3 over j touches rows jj, jj+1, jj+2.
+        let v = trace_of("gemvermxv1", 4 * MIB, StridingConfig::new(3, 1));
+        // First body accesses: three A-row loads far apart, plus y/x.
+        let k = library::kernel_by_name("gemvermxv1", 4 * MIB).unwrap();
+        let row_bytes = k.spec.arrays[0].dims[1] * 4;
+        let a_base = k.spec.arrays[0].base;
+        let a_rows: Vec<u64> = v
+            .iter()
+            .filter(|a| a.addr >= a_base && a.addr < a_base + k.spec.arrays[0].bytes())
+            .take(3)
+            .map(|a| (a.addr - a_base) / row_bytes)
+            .collect();
+        assert_eq!(a_rows, vec![0, 1, 2], "adjacent rows per paper Listing 2");
+    }
+
+    #[test]
+    fn elimination_reduces_shared_loads() {
+        let k = library::kernel_by_name("mxv", 4 * MIB).unwrap();
+        let mut cfg = StridingConfig::new(4, 1);
+        let plain = KernelTrace::new(transform(&k.spec, cfg).unwrap()).iter().count();
+        cfg.eliminate_redundant = true;
+        let elim = KernelTrace::new(transform(&k.spec, cfg).unwrap()).iter().count();
+        assert!(
+            elim < plain,
+            "eliminating x[j] reloads must shrink the trace: {elim} vs {plain}"
+        );
+    }
+
+    #[test]
+    fn len_estimate_matches_exact_count_without_elimination() {
+        for name in ["mxv", "bicg", "gemverouter", "gemversum", "init", "writeback"] {
+            for cfg in [StridingConfig::new(1, 2), StridingConfig::new(4, 2)] {
+                let k = library::kernel_by_name(name, 4 * MIB).unwrap();
+                let t = transform(&k.spec, cfg).unwrap();
+                let kt = KernelTrace::new(t);
+                let est = kt.len_estimate();
+                let exact = kt.iter().count() as u64;
+                assert_eq!(est, exact, "{name} cfg ({},{})", cfg.stride_unroll, cfg.portion_unroll);
+            }
+        }
+    }
+
+    #[test]
+    fn stencils_emit_unaligned_accesses() {
+        let v = trace_of("jacobi2d", 4 * MIB, StridingConfig::new(2, 1));
+        assert!(
+            v.iter().any(|a| matches!(a.op, Op::LoadU)),
+            "jacobi2d's ±1 offsets must produce unaligned loads"
+        );
+    }
+
+    #[test]
+    fn grouped_vs_interleaved_reorders_but_same_set() {
+        let k = library::kernel_by_name("writeback", 4 * MIB).unwrap();
+        let mut cfg = StridingConfig::new(4, 2);
+        let g: Vec<Access> = KernelTrace::new(transform(&k.spec, cfg).unwrap()).iter().collect();
+        cfg.arrangement = Arrangement::Interleaved;
+        let i: Vec<Access> = KernelTrace::new(transform(&k.spec, cfg).unwrap()).iter().collect();
+        assert_ne!(
+            g.iter().map(|a| a.addr).collect::<Vec<_>>(),
+            i.iter().map(|a| a.addr).collect::<Vec<_>>(),
+            "orderings differ"
+        );
+        let mut gs: Vec<(u64, bool)> = g.iter().map(|a| (a.addr, a.op.is_store())).collect();
+        let mut is_: Vec<(u64, bool)> = i.iter().map(|a| (a.addr, a.op.is_store())).collect();
+        gs.sort_unstable();
+        is_.sort_unstable();
+        assert_eq!(gs, is_, "same multiset of accesses");
+    }
+
+    #[test]
+    fn reduction_target_emitted_once_per_row() {
+        // mxv's y[i]: one load + one store per row (register accumulator).
+        let budget = 4 * MIB;
+        let k = library::kernel_by_name("mxv", budget).unwrap();
+        let t = transform(&k.spec, StridingConfig::new(2, 1)).unwrap();
+        let y_base = t.spec.arrays[2].base;
+        let y_bytes = t.spec.arrays[2].bytes();
+        let rows = t.spec.loops[0].extent;
+        let y_accesses = KernelTrace::new(t)
+            .iter()
+            .filter(|a| a.addr >= y_base && a.addr < y_base + y_bytes)
+            .count() as u64;
+        assert_eq!(y_accesses, rows * 2, "load+store once per row");
+    }
+
+    #[test]
+    fn prop_trace_addresses_in_bounds() {
+        use crate::util::proptest::{check, Config};
+        let ks = paper_kernels(2 * MIB);
+        check(
+            Config { cases: 48, seed: 0x7ACE },
+            |r, _size| {
+                let ki = r.below(ks.len() as u64) as usize;
+                let s = [1u32, 2, 4, 5, 8][r.below(5) as usize];
+                let p = [1u32, 2, 3, 4][r.below(4) as usize];
+                (ki, s, p)
+            },
+            |&(ki, s, p)| {
+                let k = &ks[ki];
+                let t = match transform(&k.spec, StridingConfig::new(s, p)) {
+                    Ok(t) => t,
+                    Err(_) => return true, // infeasible extent: fine
+                };
+                let hi: u64 = t
+                    .spec
+                    .arrays
+                    .iter()
+                    .map(|a| a.base + a.bytes())
+                    .max()
+                    .unwrap();
+                KernelTrace::new(t).iter().take(50_000).all(|a| a.addr + a.size as u64 <= hi)
+            },
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Vector memory-access traces.
+//!
+//! A *trace* is the sequence of data-movement operations the generated AVX2
+//! assembly of a kernel configuration performs. The simulator consumes
+//! traces; the [`generator`] expands kernel specs + striding configurations
+//! into them lazily (a 4 GiB-problem trace never materializes in memory).
+
+pub mod generator;
+
+pub use generator::{KernelTrace, TraceCursor};
+
+/// The AVX2 data-movement instruction classes of §3 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// `vmovaps` load: aligned 32 B read.
+    Load,
+    /// `vmovups` load at a +4 B offset: may straddle a line.
+    LoadU,
+    /// `vmovntdqa`: non-temporal (streaming) load.
+    LoadNt,
+    /// `vmovaps` store: aligned 32 B write (write-allocate, RFO).
+    Store,
+    /// `vmovups` store at a +4 B offset.
+    StoreU,
+    /// `vmovntdq`: non-temporal store (no-write-allocate, write-combining).
+    StoreNt,
+}
+
+impl Op {
+    /// Is this any kind of store?
+    pub fn is_store(self) -> bool {
+        matches!(self, Op::Store | Op::StoreU | Op::StoreNt)
+    }
+
+    /// Is this a non-temporal operation?
+    pub fn is_nt(self) -> bool {
+        matches!(self, Op::LoadNt | Op::StoreNt)
+    }
+
+    /// Byte offset this op applies to a nominally aligned address
+    /// (the paper's unaligned benchmarks use a fixed +4 B offset).
+    pub fn addr_offset(self) -> u64 {
+        match self {
+            Op::LoadU | Op::StoreU => 4,
+            _ => 0,
+        }
+    }
+}
+
+/// One vector memory access as issued by the core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    /// Byte address.
+    pub addr: u64,
+    /// Operation class.
+    pub op: Op,
+    /// Access width in bytes (32 for AVX2 ymm operations).
+    pub size: u32,
+    /// Synthetic instruction pointer: the unroll-slot index within the loop
+    /// body. Drives the IP-stride prefetcher and debugging.
+    pub ip: u32,
+}
+
+impl Access {
+    pub fn new(addr: u64, op: Op, size: u32, ip: u32) -> Self {
+        Self { addr, op, size, ip }
+    }
+}
+
+/// Arrangement of the unrolled accesses inside the loop body (§4.1/§4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Arrangement {
+    /// All accesses of one stride issue consecutively before the next
+    /// stride's ("grouped" — higher throughput for most ops).
+    #[default]
+    Grouped,
+    /// Strides are visited round-robin per offset ("interleaved" — the
+    /// arrangement that collapses NT-store throughput in §4.4).
+    Interleaved,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_classification() {
+        assert!(Op::Store.is_store() && Op::StoreNt.is_store() && Op::StoreU.is_store());
+        assert!(!Op::Load.is_store());
+        assert!(Op::LoadNt.is_nt() && Op::StoreNt.is_nt());
+        assert!(!Op::LoadU.is_nt());
+        assert_eq!(Op::LoadU.addr_offset(), 4);
+        assert_eq!(Op::Load.addr_offset(), 0);
+    }
+}

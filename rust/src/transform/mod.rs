@@ -1,0 +1,480 @@
+//! The multi-striding code transformation (§5 of the paper).
+//!
+//! Pipeline, exactly as §5.1 describes:
+//!
+//! 1. **Critical-access selection** ([`critical_access`]): pick the array
+//!    with the highest dimensionality whose last indexing variable appears
+//!    *exclusively* as the last dimension in every array indexed with it.
+//!    That variable's axis becomes the **contiguous data axis**.
+//! 2. **Loop interchange** ([`transform`]): make the contiguous axis the
+//!    innermost loop (always legal — specs are dependence-free).
+//! 3. **Vectorization**: the innermost loop advances in 8-float AVX2
+//!    vectors.
+//! 4. **Loop blocking** for one-dimensional kernels: the single loop is
+//!    split so a stride axis exists (Table 1's "LB" column).
+//! 5. **Portion / stride unrolling**: `portion_unroll` vectors of each
+//!    stride per iteration; `stride_unroll` concurrent strides via
+//!    unrolling the next-outer loop.
+//! 6. **Redundant-access elimination** + **register-pressure feasibility**
+//!    ([`register_pressure`]): configurations needing more than the
+//!    architectural 16 ymm registers are rejected ([`is_feasible`]).
+
+pub mod profile;
+
+pub use profile::{stride_profile, StrideProfile};
+
+use crate::kernels::spec::{AccessMode, IndexExpr, KernelSpec, LoopVar};
+use crate::trace::Arrangement;
+use anyhow::{bail, Result};
+
+/// AVX2 single-precision vector width in elements.
+pub const VEC_ELEMS: u64 = 8;
+/// Vector width in bytes.
+pub const VEC_BYTES: u64 = VEC_ELEMS * 4;
+
+/// One point of the paper's optimization space (§5.1.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StridingConfig {
+    /// Concurrent strides (unroll factor of the stride axis).
+    pub stride_unroll: u32,
+    /// Vectors of each stride processed per iteration (unroll factor of the
+    /// contiguous axis).
+    pub portion_unroll: u32,
+    /// Eliminate redundant loads/stores between unroll replicas (§5.1.2's
+    /// optimization; the isolated §6.3 experiments keep them).
+    pub eliminate_redundant: bool,
+    /// Arrangement of accesses within the loop body (§4.1).
+    pub arrangement: Arrangement,
+}
+
+impl StridingConfig {
+    pub fn new(stride_unroll: u32, portion_unroll: u32) -> Self {
+        Self {
+            stride_unroll,
+            portion_unroll,
+            eliminate_redundant: false,
+            arrangement: Arrangement::Grouped,
+        }
+    }
+
+    /// Single-strided baseline with `unrolls` portion unrolls.
+    pub fn single(unrolls: u32) -> Self {
+        Self::new(1, unrolls)
+    }
+
+    /// Total unroll slots this configuration occupies.
+    pub fn total_unrolls(&self) -> u32 {
+        self.stride_unroll * self.portion_unroll
+    }
+}
+
+/// The transformed kernel the trace generator lowers.
+#[derive(Debug, Clone)]
+pub struct Transformed {
+    /// Spec after any loop blocking (extents may be trimmed to step-size
+    /// multiples).
+    pub spec: KernelSpec,
+    /// Loop execution order after interchange, outermost first, as indices
+    /// into `spec.loops`.
+    pub order: Vec<usize>,
+    /// The vectorized (contiguous-axis) loop — always `order.last()`.
+    pub vector_loop: usize,
+    /// The stride-unrolled loop — second-innermost in `order`.
+    pub stride_loop: usize,
+    pub config: StridingConfig,
+    /// Index of the critical access in `spec.accesses`.
+    pub critical: usize,
+}
+
+/// §5.1.1: find the critical memory access. Returns `(access index,
+/// contiguous-axis loop index)`.
+pub fn critical_access(spec: &KernelSpec) -> Result<(usize, usize)> {
+    if spec.loop_carried_dep {
+        bail!("kernel {} has loop-carried dependencies; multi-striding inapplicable", spec.name);
+    }
+    // Candidates ordered by array dimensionality (highest first).
+    let mut cands: Vec<usize> = (0..spec.accesses.len()).collect();
+    cands.sort_by_key(|&a| std::cmp::Reverse(spec.arrays[spec.accesses[a].array].dims.len()));
+
+    for &a in &cands {
+        let acc = &spec.accesses[a];
+        let last = match acc.idx.last() {
+            Some(e) => e,
+            None => continue,
+        };
+        // The last indexing variable of this access…
+        let var = match last.terms.iter().rev().find(|&&(_, c)| c != 0) {
+            Some(&(v, _)) => v,
+            None => continue,
+        };
+        // …must appear exclusively as the last dimension in every array
+        // indexed with it (otherwise vectorizing over it would gather).
+        let ok = spec.accesses.iter().all(|other| {
+            other.idx.iter().enumerate().all(|(d, e)| {
+                !e.uses(var) || d == other.idx.len() - 1
+            })
+        });
+        if ok {
+            return Ok((a, var));
+        }
+    }
+    bail!("kernel {}: no valid critical access (gather required)", spec.name)
+}
+
+/// Apply the full §5.1 transformation for one configuration.
+pub fn transform(spec: &KernelSpec, config: StridingConfig) -> Result<Transformed> {
+    if config.stride_unroll == 0 || config.portion_unroll == 0 {
+        bail!("unroll factors must be ≥ 1");
+    }
+    let (critical, vec_loop) = critical_access(spec)?;
+    let mut spec = spec.clone();
+    let mut vec_loop = vec_loop;
+
+    // One-dimensional kernels need loop blocking to create a stride axis.
+    if spec.loops.len() == 1 {
+        block_single_loop(&mut spec, config.stride_unroll)?;
+        vec_loop = 1; // the inner loop of the blocked pair
+    }
+
+    // Loop interchange: contiguous axis innermost, others keep order.
+    let mut order: Vec<usize> = (0..spec.loops.len()).filter(|&l| l != vec_loop).collect();
+    order.push(vec_loop);
+    let stride_loop = order[order.len() - 2];
+
+    // Divisibility: trim extents to multiples of the step sizes (the paper
+    // "prevents the need to process leftover array parts").
+    let vstep = VEC_ELEMS * config.portion_unroll as u64;
+    let ve = &mut spec.loops[vec_loop].extent;
+    *ve = (*ve / vstep) * vstep;
+    let se = &mut spec.loops[stride_loop].extent;
+    *se = (*se / config.stride_unroll as u64) * config.stride_unroll as u64;
+    if spec.loops[vec_loop].extent == 0 || spec.loops[stride_loop].extent == 0 {
+        bail!(
+            "kernel {}: extents too small for config s={} p={}",
+            spec.name,
+            config.stride_unroll,
+            config.portion_unroll
+        );
+    }
+
+    Ok(Transformed { spec, order, vector_loop: vec_loop, stride_loop, config, critical })
+}
+
+/// Loop blocking for 1-D kernels (§5.1.1 last paragraph): split loop 0 of
+/// extent `N` into an outer partition loop (extent `n`, the stride count)
+/// and an inner loop of `N/n`, rewriting every subscript
+/// `j → part·(N/n) + j'`.
+fn block_single_loop(spec: &mut KernelSpec, n: u32) -> Result<()> {
+    let total = spec.loops[0].extent;
+    let inner = total / n as u64;
+    if inner == 0 {
+        bail!("kernel {}: extent {} too small to block into {} strides", spec.name, total, n);
+    }
+    let name = spec.loops[0].name.clone();
+    spec.loops = vec![
+        LoopVar::new(&format!("{name}_blk"), n as u64),
+        LoopVar::new(&format!("{name}_in"), inner),
+    ];
+    for acc in &mut spec.accesses {
+        for e in &mut acc.idx {
+            let mut terms = Vec::with_capacity(2);
+            let mut offset = e.offset;
+            for &(v, c) in &e.terms {
+                debug_assert_eq!(v, 0, "1-D kernel has a single loop var");
+                let _ = v;
+                terms.push((0usize, c * inner as i64)); // partition term
+                terms.push((1usize, c)); // inner term
+                offset = e.offset;
+            }
+            *e = IndexExpr { terms, offset };
+        }
+    }
+    Ok(())
+}
+
+/// §5.1.2 register-pressure model of a configuration, in ymm registers.
+///
+/// Mirrors what the paper's generated assembly keeps live (cf. Listing 2,
+/// which at stride unroll 3 holds `b0..b2` broadcasts and `c0..c2`
+/// accumulators):
+///
+/// * **Accumulators** — accesses written but independent of the contiguous
+///   axis (`C[i]`, `q[i]`): one vector register per stride replica, held
+///   across the whole inner loop.
+/// * **Broadcast operands** — reads independent of the contiguous axis
+///   (`B[j]`, `r[i]`): one broadcast register per stride replica.
+/// * **Shared vector operands** — reads that advance with the contiguous
+///   axis but are identical across stride replicas (`x[j]` in mxv): with
+///   redundant-access elimination they are loaded once and pinned, one
+///   register per portion slot; without it they re-load per use.
+/// * Two scratch registers for addresses/temporaries.
+pub fn register_pressure(t: &Transformed) -> u32 {
+    let s = t.config.stride_unroll;
+    let p = t.config.portion_unroll;
+    let mut regs = 2u32; // scratch
+
+    let on_vec =
+        |a: &crate::kernels::spec::ArrayAccess| a.idx.iter().any(|e| e.uses(t.vector_loop));
+    let on_stride =
+        |a: &crate::kernels::spec::ArrayAccess| a.idx.iter().any(|e| e.uses(t.stride_loop));
+
+    for a in &t.spec.accesses {
+        if !on_vec(a) {
+            // Broadcast operand (`B[j]`) or scalar accumulator (`q[i]`,
+            // `y[i]`): one register per stride replica, live across the
+            // entire inner loop.
+            regs += s;
+        } else if !on_stride(a) && a.mode != AccessMode::Read {
+            // Vector accumulator shared across replicas (`C[i:i+8]` in
+            // Listing 2): one register per portion slot, live across the
+            // body.
+            regs += p;
+        } else if !on_stride(a)
+            && a.mode == AccessMode::Read
+            && t.config.eliminate_redundant
+        {
+            // Shared vector operand (`x[j]` in mxv): pinned per portion
+            // slot once redundant reloads are eliminated.
+            regs += p;
+        }
+        // Strided vector operands (`A` rows) stream through a transient.
+    }
+    if !t.config.eliminate_redundant {
+        regs += 1; // transient operand register, reused per slot
+    }
+    regs
+}
+
+/// Is the configuration realizable within the architectural register file?
+pub fn is_feasible(t: &Transformed, simd_registers: u32) -> bool {
+    register_pressure(t) <= simd_registers
+}
+
+/// Enumerate the §6.3 optimization space: all `(stride, portion)` pairs
+/// whose product is `total`, for each `total` in `1..=max_total`.
+pub fn enumerate_configs(max_total: u32) -> Vec<StridingConfig> {
+    let mut out = Vec::new();
+    for total in 1..=max_total {
+        for d in 1..=total {
+            if total % d == 0 {
+                out.push(StridingConfig::new(d, total / d));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::library::{paper_kernels, PaperKernel};
+    use crate::kernels::spec::{AccessMode, Array, ArrayAccess, IndexExpr, KernelSpec, LoopVar};
+
+    fn mxv(n: u64, m: u64) -> KernelSpec {
+        let mut k = KernelSpec {
+            name: "mxv".into(),
+            loops: vec![LoopVar::new("i", n), LoopVar::new("j", m)],
+            arrays: vec![
+                Array::new("A", &[n, m], 4),
+                Array::new("x", &[m], 4),
+                Array::new("y", &[n], 4),
+            ],
+            accesses: vec![
+                ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Read),
+                ArrayAccess::new(1, vec![IndexExpr::var(1)], AccessMode::Read),
+                ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::ReadWrite),
+            ],
+            loop_carried_dep: false,
+        };
+        k.layout();
+        k
+    }
+
+    /// Transposed mxv: C[i] += A[j][i] * B[j] (the paper's Listing 1).
+    fn tmxv(n: u64, m: u64) -> KernelSpec {
+        let mut k = KernelSpec {
+            name: "tmxv".into(),
+            loops: vec![LoopVar::new("i", n), LoopVar::new("j", m)],
+            arrays: vec![
+                Array::new("A", &[m, n], 4),
+                Array::new("B", &[m], 4),
+                Array::new("C", &[n], 4),
+            ],
+            accesses: vec![
+                ArrayAccess::new(0, vec![IndexExpr::var(1), IndexExpr::var(0)], AccessMode::Read),
+                ArrayAccess::new(1, vec![IndexExpr::var(1)], AccessMode::Read),
+                ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::ReadWrite),
+            ],
+            loop_carried_dep: false,
+        };
+        k.layout();
+        k
+    }
+
+    /// Matrix transpose: A[i][j] = B[j][i] — must be rejected (§5.1.1's
+    /// gather example).
+    fn transpose(n: u64) -> KernelSpec {
+        let mut k = KernelSpec {
+            name: "transpose".into(),
+            loops: vec![LoopVar::new("i", n), LoopVar::new("j", n)],
+            arrays: vec![Array::new("A", &[n, n], 4), Array::new("B", &[n, n], 4)],
+            accesses: vec![
+                ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Write),
+                ArrayAccess::new(1, vec![IndexExpr::var(1), IndexExpr::var(0)], AccessMode::Read),
+            ],
+            loop_carried_dep: false,
+        };
+        k.layout();
+        k
+    }
+
+    #[test]
+    fn critical_access_picks_matrix_contiguous_axis() {
+        let k = mxv(256, 256);
+        let (a, v) = critical_access(&k).unwrap();
+        assert_eq!(a, 0, "A[i][j] is critical");
+        assert_eq!(v, 1, "contiguous axis is j");
+    }
+
+    #[test]
+    fn transposed_mxv_vectorizes_over_i_and_interchanges() {
+        let k = tmxv(256, 256);
+        let (a, v) = critical_access(&k).unwrap();
+        assert_eq!(a, 0, "A[j][i] is critical");
+        assert_eq!(v, 0, "contiguous axis is i (last dim of A)");
+        let t = transform(&k, StridingConfig::new(3, 2)).unwrap();
+        assert_eq!(*t.order.last().unwrap(), 0, "i innermost after interchange");
+        assert_eq!(t.stride_loop, 1, "j is the stride axis (paper's Listing 2)");
+    }
+
+    #[test]
+    fn transpose_kernel_rejected() {
+        let k = transpose(64);
+        assert!(critical_access(&k).is_err(), "transpose requires gathers");
+    }
+
+    #[test]
+    fn dependence_rejected() {
+        let mut k = mxv(64, 64);
+        k.loop_carried_dep = true;
+        assert!(critical_access(&k).is_err());
+    }
+
+    #[test]
+    fn extent_trimming_to_step_multiples() {
+        let k = mxv(250, 250); // not divisible by most steps
+        let t = transform(&k, StridingConfig::new(4, 3)).unwrap();
+        assert_eq!(t.spec.loops[1].extent % (8 * 3), 0);
+        assert_eq!(t.spec.loops[0].extent % 4, 0);
+    }
+
+    #[test]
+    fn blocking_creates_stride_axis_for_1d() {
+        // init kernel: A[j] = 0 over one loop.
+        let mut k = KernelSpec {
+            name: "init".into(),
+            loops: vec![LoopVar::new("j", 4096)],
+            arrays: vec![Array::new("A", &[4096], 4)],
+            accesses: vec![ArrayAccess::new(0, vec![IndexExpr::var(0)], AccessMode::Write)],
+            loop_carried_dep: false,
+        };
+        k.layout();
+        let t = transform(&k, StridingConfig::new(4, 1)).unwrap();
+        assert_eq!(t.spec.loops.len(), 2, "blocked into partition × inner");
+        assert_eq!(t.spec.loops[0].extent, 4);
+        assert_eq!(t.spec.loops[1].extent, 1024);
+        // Subscript rewrite: j -> part*1024 + j'.
+        let e = &t.spec.accesses[0].idx[0];
+        assert_eq!(e.eval(&[2, 5]), 2 * 1024 + 5);
+    }
+
+    #[test]
+    fn register_pressure_grows_with_unrolls() {
+        // tmxv holds an accumulator (C) and a broadcast (B) per replica.
+        let k = tmxv(512, 512);
+        let small = transform(&k, StridingConfig::new(2, 1)).unwrap();
+        let large = transform(&k, StridingConfig::new(16, 4)).unwrap();
+        assert!(register_pressure(&small) < register_pressure(&large));
+        assert!(is_feasible(&small, 16));
+        assert!(!is_feasible(&large, 16), "16 broadcasts + 4 slots cannot fit 16 ymm");
+    }
+
+    #[test]
+    fn listing2_configuration_is_feasible() {
+        // The paper's Listing 2: stride 3, portion 2 on transposed mxv —
+        // b0..b2 + c0..c2 + scratch fits 16 ymm comfortably.
+        let k = tmxv(512, 512);
+        let t = transform(&k, StridingConfig::new(3, 2)).unwrap();
+        // 2 scratch + 3 b-broadcasts + 2 c-accumulator slots + 1 transient.
+        assert_eq!(register_pressure(&t), 2 + 3 + 2 + 1);
+        assert!(is_feasible(&t, 16));
+    }
+
+    #[test]
+    fn elimination_raises_pressure() {
+        // mxv's x[j] is a shared vector operand: pinning it costs one
+        // register per portion slot.
+        let k = mxv(512, 512);
+        let mut cfg = StridingConfig::new(2, 2);
+        let plain = transform(&k, cfg).unwrap();
+        cfg.eliminate_redundant = true;
+        let elim = transform(&k, cfg).unwrap();
+        assert!(
+            register_pressure(&elim) > register_pressure(&plain),
+            "elim {} vs plain {}",
+            register_pressure(&elim),
+            register_pressure(&plain)
+        );
+    }
+
+    #[test]
+    fn enumerate_covers_divisor_structure() {
+        let cfgs = enumerate_configs(6);
+        // For total=6: (1,6),(2,3),(3,2),(6,1) present.
+        for (s, p) in [(1, 6), (2, 3), (3, 2), (6, 1)] {
+            assert!(cfgs.iter().any(|c| c.stride_unroll == s && c.portion_unroll == p));
+        }
+        // No non-divisor pairs.
+        assert!(cfgs.iter().all(|c| c.total_unrolls() <= 6));
+    }
+
+    #[test]
+    fn all_paper_kernels_transform() {
+        for pk in paper_kernels(1 << 22) {
+            if pk.name == "gemverouter" {
+                // outer product vectorizes over j; still must transform.
+            }
+            let t = transform(&pk.spec, StridingConfig::new(2, 2));
+            assert!(t.is_ok(), "{} failed: {:?}", pk.name, t.err());
+        }
+    }
+
+    #[test]
+    fn zero_unroll_rejected() {
+        let k = mxv(64, 64);
+        assert!(transform(&k, StridingConfig::new(0, 1)).is_err());
+        assert!(transform(&k, StridingConfig::new(1, 0)).is_err());
+    }
+
+    // Property: every enumerated feasible config transforms and the
+    // product decomposition is preserved.
+    #[test]
+    fn prop_transform_preserves_unroll_product() {
+        use crate::util::proptest::{check, Config};
+        let k = tmxv(2048, 2048);
+        check(
+            Config { cases: 64, seed: 0x57A1DE },
+            |r, size| {
+                let total = r.range(1, size as u64).max(1) as u32;
+                let divs: Vec<u32> = (1..=total).filter(|d| total % d == 0).collect();
+                let s = divs[r.below(divs.len() as u64) as usize];
+                (s, total / s)
+            },
+            |&(s, p)| {
+                let t = transform(&k, StridingConfig::new(s, p)).unwrap();
+                t.config.total_unrolls() == s * p
+                    && t.spec.loops[t.vector_loop].extent % (8 * p as u64) == 0
+            },
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities (no third-party crates are available
+//! offline): a PCG-style PRNG, summary statistics, a wall-clock timer and a
+//! tiny property-testing harness used by the test suite.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;

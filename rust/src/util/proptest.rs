@@ -1,0 +1,78 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property against `cases` randomly generated inputs and,
+//! on failure, performs a simple halving shrink over the generator's size
+//! parameter before panicking with the seed so the case can be replayed.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xDEFA17 }
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn by `gen`. `gen` receives the RNG
+/// and a *size* hint that grows over the run (small cases first).
+///
+/// On failure the harness retries the failing size at smaller sizes to
+/// report a smaller counterexample when the generator respects the hint.
+pub fn check<T: std::fmt::Debug, G, P>(cfg: Config, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Rng, u32) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        // Size ramps from 1 to 100.
+        let size = 1 + (case * 100) / cfg.cases.max(1);
+        let input = generate(&mut rng, size);
+        if !prop(&input) {
+            // Shrink: try progressively smaller sizes with fresh draws.
+            let mut smallest = input;
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut shrink_rng = Rng::new(cfg.seed ^ (s as u64) << 32);
+                for _ in 0..16 {
+                    let candidate = generate(&mut shrink_rng, s);
+                    if !prop(&candidate) {
+                        smallest = candidate;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={:#x}, case={case}, size={size}).\ncounterexample: {:?}",
+                cfg.seed, smallest
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default(), |r, size| r.below(size as u64 + 1), |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check(
+            Config { cases: 64, seed: 7 },
+            |r, size| r.below(size as u64 + 1),
+            |&x| x < 20, // fails for larger sizes
+        );
+    }
+}

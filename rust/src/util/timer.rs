@@ -1,0 +1,58 @@
+//! Wall-clock timing for the native probes and the bench harnesses
+//! (criterion is not available offline; the bench binaries use this).
+
+use std::time::Instant;
+
+/// Simple wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Seconds elapsed.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the previous elapsed seconds.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Measure a closure `reps` times, returning per-rep seconds.
+pub fn measure<F: FnMut()>(reps: u32, mut f: F) -> Vec<f64> {
+    let mut out = Vec::with_capacity(reps as usize);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        out.push(t.secs());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn measure_counts_reps() {
+        let xs = measure(5, || {});
+        assert_eq!(xs.len(), 5);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+}

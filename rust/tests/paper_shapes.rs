@@ -1,0 +1,187 @@
+//! Integration: the headline *shapes* of the paper's evaluation, end to
+//! end through transform → trace → simulator. These are the claims
+//! EXPERIMENTS.md reports; sizes use the smoke scale to stay fast.
+
+use multistride::config::{coffee_lake, ScaleConfig};
+use multistride::coordinator::experiments::{
+    best_point, figure6, run_kernel, run_micro, run_reference, summarize_kernel,
+};
+use multistride::kernels::micro::MicroOp;
+use multistride::kernels::reference::Reference;
+use multistride::transform::StridingConfig;
+
+const MIB: u64 = 1 << 20;
+
+#[test]
+fn micro_reads_gain_with_prefetch_and_strides() {
+    // Figure 2 top-left: multi-strided reads beat single-strided by tens of
+    // percent with the prefetcher on.
+    let m = coffee_lake();
+    let bytes = ScaleConfig::smoke().micro_bytes;
+    let s1 = run_micro(m, MicroOp::LoadAligned, 1, bytes, true, false).throughput_gib;
+    let s16 = run_micro(m, MicroOp::LoadAligned, 16, bytes, true, false).throughput_gib;
+    let gain = s16 / s1;
+    assert!(
+        (1.15..=1.8).contains(&gain),
+        "16-stride read gain {gain:.2} out of the paper's band (paper: 1.33)"
+    );
+}
+
+#[test]
+fn micro_reads_do_not_gain_without_prefetch() {
+    // Figure 2 bottom-left: no improvement, slight decline.
+    let m = coffee_lake();
+    let bytes = ScaleConfig::smoke().micro_bytes;
+    let s1 = run_micro(m, MicroOp::LoadAligned, 1, bytes, false, false).throughput_gib;
+    let s16 = run_micro(m, MicroOp::LoadAligned, 16, bytes, false, false).throughput_gib;
+    assert!(s16 <= s1 * 1.02, "pf-off: {s16:.2} must not beat {s1:.2}");
+}
+
+#[test]
+fn interleaved_nt_stores_collapse() {
+    // Figure 2 middle: interleaved NT stores beyond the WC pool plateau at
+    // a small fraction of the roofline (paper: ~1.74 GiB/s).
+    let m = coffee_lake();
+    let bytes = ScaleConfig::smoke().micro_bytes;
+    let grouped = run_micro(m, MicroOp::StoreNt, 16, bytes, true, false).throughput_gib;
+    let inter = run_micro(m, MicroOp::StoreNt, 16, bytes, true, true).throughput_gib;
+    assert!(
+        inter < grouped * 0.3,
+        "interleaved NT {inter:.2} must collapse vs grouped {grouped:.2}"
+    );
+}
+
+#[test]
+fn pow2_arrays_kill_multistriding() {
+    // Figure 5: power-of-two total size + power-of-two stride count puts
+    // every stride in the same cache sets. The damage grows with stride
+    // count (the paper: stalls double at 4 strides, +477% at 32; L3 misses
+    // +560% at 32): L2 conflicts expose latency at moderate counts, L3
+    // thrash collapses throughput at high counts.
+    let m = coffee_lake();
+    let scale = ScaleConfig::smoke();
+    let good =
+        run_micro(m, MicroOp::LoadAligned, 32, scale.micro_bytes, true, false).throughput_gib;
+    let bad =
+        run_micro(m, MicroOp::LoadAligned, 32, scale.micro_pow2_bytes, true, false).throughput_gib;
+    assert!(
+        bad < good * 0.85,
+        "pow2 collisions must hurt at 32 strides: {bad:.2} vs non-pow2 {good:.2}"
+    );
+    // And the pow2 stall count exceeds the non-pow2 one already at 8.
+    let s_good = run_micro(m, MicroOp::LoadAligned, 8, scale.micro_bytes, true, false)
+        .result
+        .counters
+        .stalls_total;
+    let s_bad = run_micro(m, MicroOp::LoadAligned, 8, scale.micro_pow2_bytes, true, false)
+        .result
+        .counters
+        .stalls_total;
+    assert!(
+        s_bad > s_good,
+        "pow2 must raise stall cycles at 8 strides: {s_bad} vs {s_good}"
+    );
+}
+
+#[test]
+fn hit_ratios_follow_figure4() {
+    let m = coffee_lake();
+    let bytes = ScaleConfig::smoke().micro_bytes;
+    let p1 = run_micro(m, MicroOp::LoadAligned, 1, bytes, true, false);
+    let p16 = run_micro(m, MicroOp::LoadAligned, 16, bytes, true, false);
+    // L1 pinned at 0.5 for both.
+    assert!((p1.result.l1.hit_ratio() - 0.5).abs() < 0.03);
+    assert!((p16.result.l1.hit_ratio() - 0.5).abs() < 0.03);
+    // L2 ratio rises with strides.
+    assert!(p16.result.l2.hit_ratio() > p1.result.l2.hit_ratio());
+    // Prefetch off: L2/L3 ratios ~0.
+    let off = run_micro(m, MicroOp::LoadAligned, 16, bytes, false, false);
+    assert!(off.result.l2.hit_ratio() < 0.05);
+    assert!(off.result.l3.hit_ratio() < 0.05);
+}
+
+#[test]
+fn stall_cycles_track_throughput_inverse() {
+    // Figure 3: total stalls fall as strides rise (while throughput rises).
+    let m = coffee_lake();
+    let bytes = ScaleConfig::smoke().micro_bytes;
+    let p1 = run_micro(m, MicroOp::LoadAligned, 1, bytes, true, false);
+    let p16 = run_micro(m, MicroOp::LoadAligned, 16, bytes, true, false);
+    assert!(p16.result.counters.stalls_total < p1.result.counters.stalls_total);
+    assert!(p1.result.counters.subset_invariant_holds());
+    assert!(p16.result.counters.subset_invariant_holds());
+}
+
+#[test]
+fn mxv_multistrided_beats_single_strided() {
+    // Figure 6 (mxv): the paper reports up to 1.58x over the best
+    // single-strided configuration.
+    let m = coffee_lake();
+    let s = summarize_kernel(m, "mxv", 16 * MIB, 8);
+    let gain = s.multi_over_single();
+    assert!(
+        gain > 1.05,
+        "multi-striding must beat single-striding on mxv: {gain:.3}"
+    );
+    assert!(
+        s.best_multi.config.stride_unroll >= 2 && s.best_multi.config.stride_unroll <= 16,
+        "best at a moderate stride count (paper: 1-10): {:?}",
+        s.best_multi.config
+    );
+}
+
+#[test]
+fn kernel_sweep_gains_vanish_without_prefetch() {
+    // Figure 6 top-right (bicg pf-off): no significant effect.
+    let m = coffee_lake();
+    let pts_on = figure6(m, "bicg", 8 * MIB, 6, true);
+    let pts_off = figure6(m, "bicg", 8 * MIB, 6, false);
+    let best_on = best_point(&pts_on).unwrap();
+    let single_on: f64 = pts_on
+        .iter()
+        .filter(|p| p.feasible && p.config.stride_unroll == 1)
+        .map(|p| p.throughput_gib)
+        .fold(0.0, f64::max);
+    let best_off = best_point(&pts_off).unwrap();
+    let single_off: f64 = pts_off
+        .iter()
+        .filter(|p| p.feasible && p.config.stride_unroll == 1)
+        .map(|p| p.throughput_gib)
+        .fold(0.0, f64::max);
+    let gain_on = best_on.throughput_gib / single_on;
+    let gain_off = best_off.throughput_gib / single_off;
+    assert!(
+        gain_on > gain_off,
+        "prefetcher drives the multi-striding gain: on {gain_on:.3} vs off {gain_off:.3}"
+    );
+    // "no significant effect" (§6.3) — allow modest noise from DRAM
+    // row-locality differences between schedules at smoke scale.
+    assert!(gain_off < 1.25, "pf-off gain must be insignificant: {gain_off:.3}");
+}
+
+#[test]
+fn multistrided_mxv_beats_reference_models() {
+    // Figure 7 shape: the tuned multi-strided mxv beats the MKL/OpenBLAS
+    // schedule models (which beat naive CLang).
+    let m = coffee_lake();
+    let budget = 16 * MIB;
+    let s = summarize_kernel(m, "mxv", budget, 8);
+    let mkl = run_reference(m, "mxv", budget, Reference::Mkl).unwrap();
+    let clang = run_reference(m, "mxv", budget, Reference::Clang).unwrap();
+    assert!(
+        s.best_multi.throughput_gib > mkl,
+        "multi-strided {:.2} must beat MKL model {mkl:.2}",
+        s.best_multi.throughput_gib
+    );
+    assert!(mkl > clang, "MKL model {mkl:.2} must beat scalar CLang {clang:.2}");
+}
+
+#[test]
+fn infeasible_region_matches_register_budget() {
+    let m = coffee_lake();
+    // mxv at stride 16, portion 4: 16 accumulators + … > 16 ymm.
+    let p = run_kernel(m, "mxv", 8 * MIB, StridingConfig::new(16, 4), true).unwrap();
+    assert!(!p.feasible);
+    let p = run_kernel(m, "mxv", 8 * MIB, StridingConfig::new(4, 2), true).unwrap();
+    assert!(p.feasible);
+}

@@ -1,0 +1,125 @@
+//! Integration: Rust PJRT runtime executes the AOT artifacts and matches
+//! the pure-Rust oracles. Requires `make artifacts`; tests skip (pass with
+//! a notice) when the artifact directory is absent so `cargo test` works in
+//! a fresh checkout.
+
+use multistride::runtime::{oracle, ArtifactRegistry, Runtime};
+use multistride::util::Rng;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let reg = ArtifactRegistry::new(ArtifactRegistry::default_dir());
+    if reg.list().is_empty() {
+        eprintln!("skipping runtime integration: no artifacts (run `make artifacts`)");
+        None
+    } else {
+        Some(reg)
+    }
+}
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.f64() as f32 - 0.5).collect()
+}
+
+#[test]
+fn artifacts_compile_on_pjrt_cpu() {
+    let Some(reg) = registry() else { return };
+    let mut rt = Runtime::new().expect("PJRT cpu client");
+    for name in reg.list() {
+        rt.load(&name, &reg.path_for(&name))
+            .unwrap_or_else(|e| panic!("load {name}: {e:#}"));
+    }
+    assert!(rt.loaded().len() >= 4, "expected the core kernels: {:?}", rt.loaded());
+}
+
+#[test]
+fn mxv_artifact_matches_oracle() {
+    let Some(reg) = registry() else { return };
+    if !reg.has("mxv") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load("mxv", &reg.path_for("mxv")).unwrap();
+    let (m, n) = (64usize, 128usize);
+    let mut rng = Rng::new(1);
+    let a = rand_vec(&mut rng, m * n);
+    let x = rand_vec(&mut rng, n);
+    let got = &rt.execute_f32("mxv", &[(&a, &[m as i64, n as i64]), (&x, &[n as i64])]).unwrap()[0];
+    let want = oracle::mxv(&a, &x, m, n);
+    assert!(oracle::max_rel_err(got, &want) < 5e-3);
+}
+
+#[test]
+fn bicg_artifact_matches_oracle() {
+    let Some(reg) = registry() else { return };
+    if !reg.has("bicg") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load("bicg", &reg.path_for("bicg")).unwrap();
+    let (m, n) = (64usize, 128usize);
+    let mut rng = Rng::new(2);
+    let a = rand_vec(&mut rng, m * n);
+    let r = rand_vec(&mut rng, m);
+    let p = rand_vec(&mut rng, n);
+    let out = rt
+        .execute_f32("bicg", &[(&a, &[m as i64, n as i64]), (&r, &[m as i64]), (&p, &[n as i64])])
+        .unwrap();
+    let (s_want, q_want) = oracle::bicg(&a, &r, &p, m, n);
+    assert!(oracle::max_rel_err(&out[0], &s_want) < 5e-3);
+    assert!(oracle::max_rel_err(&out[1], &q_want) < 5e-3);
+}
+
+#[test]
+fn conv_artifact_matches_oracle() {
+    let Some(reg) = registry() else { return };
+    if !reg.has("conv") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load("conv", &reg.path_for("conv")).unwrap();
+    let (h, w) = (34usize, 66usize);
+    let mut rng = Rng::new(3);
+    let img = rand_vec(&mut rng, h * w);
+    let wts = rand_vec(&mut rng, 9);
+    let got =
+        &rt.execute_f32("conv", &[(&img, &[h as i64, w as i64]), (&wts, &[3, 3])]).unwrap()[0];
+    let mut w9 = [0f32; 9];
+    w9.copy_from_slice(&wts);
+    let want = oracle::conv3x3(&img, &w9, h, w);
+    assert!(oracle::max_rel_err(got, &want) < 5e-3);
+}
+
+#[test]
+fn jacobi_artifact_matches_oracle_and_preserves_borders() {
+    let Some(reg) = registry() else { return };
+    if !reg.has("jacobi2d") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load("jacobi2d", &reg.path_for("jacobi2d")).unwrap();
+    let (h, w) = (32usize, 64usize);
+    let mut rng = Rng::new(4);
+    let a = rand_vec(&mut rng, h * w);
+    let got = &rt.execute_f32("jacobi2d", &[(&a, &[h as i64, w as i64])]).unwrap()[0];
+    let want = oracle::jacobi2d(&a, h, w);
+    assert!(oracle::max_rel_err(got, &want) < 5e-3);
+    // Borders untouched.
+    assert_eq!(&got[..w], &a[..w]);
+}
+
+#[test]
+fn executions_are_deterministic() {
+    let Some(reg) = registry() else { return };
+    if !reg.has("mxv") {
+        return;
+    }
+    let mut rt = Runtime::new().unwrap();
+    rt.load("mxv", &reg.path_for("mxv")).unwrap();
+    let (m, n) = (64usize, 128usize);
+    let mut rng = Rng::new(5);
+    let a = rand_vec(&mut rng, m * n);
+    let x = rand_vec(&mut rng, n);
+    let r1 = rt.execute_f32("mxv", &[(&a, &[m as i64, n as i64]), (&x, &[n as i64])]).unwrap();
+    let r2 = rt.execute_f32("mxv", &[(&a, &[m as i64, n as i64]), (&x, &[n as i64])]).unwrap();
+    assert_eq!(r1[0], r2[0]);
+}
