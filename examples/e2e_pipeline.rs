@@ -86,7 +86,7 @@ fn main() -> multistride::Result<()> {
         secs,
         reps as f64 / secs
     );
-    anyhow::ensure!(err < 1e-3, "mxv numeric mismatch");
+    multistride::ensure!(err < 1e-3, "mxv numeric mismatch");
 
     // bicg + conv + jacobi2d numeric validation.
     let r = rand_vec(m);
@@ -94,8 +94,8 @@ fn main() -> multistride::Result<()> {
     let out =
         rt.execute_f32("bicg", &[(&a, &[m as i64, n as i64]), (&r, &[m as i64]), (&p, &[n as i64])])?;
     let (s_want, q_want) = oracle::bicg(&a, &r, &p, m, n);
-    anyhow::ensure!(oracle::max_rel_err(&out[0], &s_want) < 1e-3, "bicg s mismatch");
-    anyhow::ensure!(oracle::max_rel_err(&out[1], &q_want) < 1e-3, "bicg q mismatch");
+    multistride::ensure!(oracle::max_rel_err(&out[0], &s_want) < 1e-3, "bicg s mismatch");
+    multistride::ensure!(oracle::max_rel_err(&out[1], &q_want) < 1e-3, "bicg q mismatch");
     println!("bicg artifact: OK");
 
     let (h, w) = (34usize, 66usize);
@@ -104,7 +104,7 @@ fn main() -> multistride::Result<()> {
     let got = &rt.execute_f32("conv", &[(&img, &[h as i64, w as i64]), (&wts, &[3, 3])])?[0];
     let mut w9 = [0f32; 9];
     w9.copy_from_slice(&wts);
-    anyhow::ensure!(
+    multistride::ensure!(
         oracle::max_rel_err(got, &oracle::conv3x3(&img, &w9, h, w)) < 1e-3,
         "conv mismatch"
     );
@@ -113,7 +113,7 @@ fn main() -> multistride::Result<()> {
     let (h, w) = (32usize, 64usize);
     let aj = rand_vec(h * w);
     let got = &rt.execute_f32("jacobi2d", &[(&aj, &[h as i64, w as i64])])?[0];
-    anyhow::ensure!(
+    multistride::ensure!(
         oracle::max_rel_err(got, &oracle::jacobi2d(&aj, h, w)) < 1e-3,
         "jacobi2d mismatch"
     );

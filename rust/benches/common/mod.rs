@@ -4,6 +4,9 @@
 //! is a self-timed harness that regenerates one paper table/figure and
 //! prints wall-clock cost. `MULTISTRIDE_BENCH_SMOKE=1` switches to the
 //! smoke scale for quick runs.
+//!
+//! Each bench compiles this module separately and uses a subset of it.
+#![allow(dead_code)]
 
 use multistride::config::ScaleConfig;
 use std::time::Instant;

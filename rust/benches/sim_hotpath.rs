@@ -2,12 +2,15 @@
 //! second, per configuration class. This is the §Perf instrument: the
 //! paper harnesses sweep hundreds of configurations, so the simulator's
 //! access rate bounds total experiment wall-clock.
-
-mod common;
+//!
+//! The final section measures the engine-reuse path the coordinator
+//! sweeps use ([`Engine::prepare`] via `EngineCache`) against fresh
+//! construction per configuration point.
 
 use std::time::Instant;
 
 use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::EngineCache;
 use multistride::kernels::library::kernel_by_name;
 use multistride::kernels::micro::{MicroBench, MicroOp};
 use multistride::sim::{Engine, EngineConfig};
@@ -18,7 +21,10 @@ fn rate(label: &str, accesses: u64, f: impl FnOnce()) {
     let t = Instant::now();
     f();
     let s = t.elapsed().as_secs_f64();
-    println!("{label:>42}: {:>8.2} M accesses/s ({accesses} accesses, {s:.3} s)", accesses as f64 / s / 1e6);
+    println!(
+        "{label:>42}: {:>8.2} M accesses/s ({accesses} accesses, {s:.3} s)",
+        accesses as f64 / s / 1e6
+    );
 }
 
 fn main() {
@@ -76,4 +82,25 @@ fn main() {
             });
         }
     }
+
+    // Sweep-style engine reuse: the same 8-point prefetch on/off sweep run
+    // with a fresh engine per point vs one warm engine prepared per point
+    // (what coordinator::EngineCache gives each worker).
+    let sweep_bytes = 8 * 1024 * 1024u64;
+    let b = MicroBench::new(MicroOp::LoadAligned, 8, sweep_bytes);
+    let points: Vec<bool> = [true, false].repeat(4);
+    let n = b.trace_len() * points.len() as u64;
+    rate("sweep x8, fresh engine per point", n, || {
+        for &pf in &points {
+            let mut e = Engine::new(EngineConfig::new(m).with_prefetch(pf).with_huge_pages(true));
+            let _ = e.run(b.trace());
+        }
+    });
+    let mut cache = EngineCache::new();
+    rate("sweep x8, reused engine (prepare)", n, || {
+        for &pf in &points {
+            let e = cache.engine_for(EngineConfig::new(m).with_prefetch(pf).with_huge_pages(true));
+            let _ = e.run(b.trace());
+        }
+    });
 }

@@ -42,7 +42,7 @@ impl MachinePreset {
 }
 
 /// Full description of one simulated machine (Table 2 row + model knobs).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MachineConfig {
     pub name: &'static str,
     pub vendor: &'static str,

@@ -9,10 +9,37 @@ use crate::sim::{Engine, EngineConfig, RunResult};
 use crate::trace::KernelTrace;
 use crate::transform::{enumerate_configs, is_feasible, transform, StridingConfig};
 
-use super::pool::{default_workers, parallel_map};
+use super::pool::{default_workers, parallel_map_with};
 
 /// The stride counts the micro-benchmarks sweep (divisors of 32).
 pub const MICRO_STRIDES: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Per-worker engine reuse for config sweeps: one warm [`Engine`] whose
+/// cache/TLB/DRAM allocations persist across sweep points. Each point is
+/// applied with [`Engine::prepare`], which resets to cold state
+/// bit-identically with a fresh construction, so results are unchanged —
+/// only the per-point construction cost (hierarchy allocation and zeroing)
+/// is gone.
+#[derive(Default)]
+pub struct EngineCache {
+    engine: Option<Engine>,
+}
+
+impl EngineCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cold engine for `cfg`, reusing the cached allocation when the
+    /// machine matches.
+    pub fn engine_for(&mut self, cfg: EngineConfig) -> &mut Engine {
+        match &mut self.engine {
+            Some(e) => e.prepare(cfg),
+            None => self.engine = Some(Engine::new(cfg)),
+        }
+        self.engine.as_mut().expect("engine present")
+    }
+}
 
 /// One measured micro-benchmark point.
 #[derive(Debug, Clone)]
@@ -34,12 +61,25 @@ pub fn run_micro(
     prefetch: bool,
     interleaved: bool,
 ) -> MicroPoint {
+    run_micro_with(&mut EngineCache::new(), machine, op, strides, bytes, prefetch, interleaved)
+}
+
+/// [`run_micro`] against a reusable per-worker engine.
+pub fn run_micro_with(
+    cache: &mut EngineCache,
+    machine: MachineConfig,
+    op: MicroOp,
+    strides: u32,
+    bytes: u64,
+    prefetch: bool,
+    interleaved: bool,
+) -> MicroPoint {
     let mut bench = MicroBench::new(op, strides, bytes);
     if interleaved {
         bench = bench.interleaved();
     }
-    let mut engine =
-        Engine::new(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(true));
+    let engine = cache
+        .engine_for(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(true));
     let result = engine.run(bench.trace());
     MicroPoint {
         op,
@@ -67,8 +107,8 @@ pub fn figure2(machine: MachineConfig, scale: ScaleConfig, pow2: bool) -> Vec<Mi
             }
         }
     }
-    parallel_map(jobs, default_workers(), |&(op, s, prefetch, inter)| {
-        run_micro(machine, op, s, bytes, prefetch, inter)
+    parallel_map_with(jobs, default_workers(), EngineCache::new, |cache, &(op, s, pf, inter)| {
+        run_micro_with(cache, machine, op, s, bytes, pf, inter)
     })
 }
 
@@ -81,8 +121,8 @@ pub fn figure3_4(machine: MachineConfig, scale: ScaleConfig) -> Vec<MicroPoint> 
             jobs.push((MicroOp::LoadAligned, s, prefetch, false));
         }
     }
-    parallel_map(jobs, default_workers(), |&(op, s, prefetch, inter)| {
-        run_micro(machine, op, s, scale.micro_bytes, prefetch, inter)
+    parallel_map_with(jobs, default_workers(), EngineCache::new, |cache, &(op, s, pf, inter)| {
+        run_micro_with(cache, machine, op, s, scale.micro_bytes, pf, inter)
     })
 }
 
@@ -99,6 +139,20 @@ pub struct KernelPoint {
 /// Run one kernel configuration through the simulator (§6 protocol:
 /// default 4 KiB pages, aligned+interleaved loop bodies kept as generated).
 pub fn run_kernel(
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    config: StridingConfig,
+    prefetch: bool,
+) -> Option<KernelPoint> {
+    run_kernel_with(&mut EngineCache::new(), machine, kernel, budget, config, prefetch)
+}
+
+/// [`run_kernel`] against a reusable per-worker engine. The kernel trace
+/// streams straight from [`KernelTrace::iter`] into [`Engine::run`] — no
+/// `Vec<Access>` is ever materialized, so multi-GiB footprints stay cheap.
+pub fn run_kernel_with(
+    cache: &mut EngineCache,
     machine: MachineConfig,
     kernel: &str,
     budget: u64,
@@ -123,8 +177,8 @@ pub fn run_kernel(
     // time"), i.e. each array counts once — not per-access traffic, which
     // would reward cache-hit reloads.
     let footprint = trace.transformed().spec.footprint();
-    let mut engine =
-        Engine::new(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(false));
+    let engine = cache
+        .engine_for(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(false));
     let result = engine.run(trace.iter());
     Some(KernelPoint {
         kernel: kernel.to_string(),
@@ -160,11 +214,9 @@ pub fn figure6(
     }
     cfgs.dedup_by_key(|c| (c.stride_unroll, c.portion_unroll));
     let kernel = kernel.to_string();
-    parallel_map(cfgs, default_workers(), |&cfg| {
-        run_kernel(machine, &kernel, budget, cfg, prefetch).expect("library kernel")
+    parallel_map_with(cfgs, default_workers(), EngineCache::new, |cache, &cfg| {
+        run_kernel_with(cache, machine, &kernel, budget, cfg, prefetch).expect("library kernel")
     })
-    .into_iter()
-    .collect()
 }
 
 /// Pick the best feasible configuration out of a sweep.

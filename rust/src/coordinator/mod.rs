@@ -2,13 +2,16 @@
 //!
 //! The paper's evaluation is a large parameter sweep: 9 isolated kernels ×
 //! ~200 striding configurations × 3 machines, plus the micro-benchmark
-//! grids. [`pool::parallel_map`] fans configurations out over worker
-//! threads (each simulation is independent and single-threaded);
-//! [`experiments`] contains one driver per paper figure/table, returning
-//! structured results the [`crate::report`] layer renders.
+//! grids. [`pool::parallel_map_with`] fans configurations out over worker
+//! threads (each simulation is independent and single-threaded), giving
+//! every worker one [`experiments::EngineCache`] so sweep points reuse the
+//! worker's warm [`crate::sim::Engine`] allocation instead of rebuilding
+//! caches, TLBs and DRAM state per point; [`experiments`] contains one
+//! driver per paper figure/table, returning structured results the
+//! [`crate::report`] layer renders.
 
 pub mod experiments;
 pub mod pool;
 
 pub use experiments::*;
-pub use pool::parallel_map;
+pub use pool::{parallel_map, parallel_map_with};

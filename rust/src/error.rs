@@ -1,0 +1,125 @@
+//! Crate-wide error type.
+//!
+//! No third-party crates are available offline, so instead of `anyhow`
+//! the crate ships this minimal equivalent: an opaque [`Error`] holding a
+//! message plus an optional source, a blanket `From` for any standard
+//! error (so `?` works on `io::Error` and friends), and the
+//! [`format_err!`] / [`bail!`] / [`ensure!`] macros.
+
+use std::fmt;
+
+/// An opaque error: a message plus an optional underlying cause.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string(), source: None }
+    }
+
+    /// The underlying cause, if one was recorded.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + Send + Sync + 'static)> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(s) = &self.source {
+            write!(f, "\n\ncaused by: {s}")?;
+        }
+        Ok(())
+    }
+}
+
+// Like `anyhow::Error`, `Error` intentionally does NOT implement
+// `std::error::Error`; that is what makes this blanket conversion legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Attach context to an `Option` or `Result`, producing a `crate::Result`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T, Error>;
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{msg}: {e}"), source: Some(Box::new(e)) })
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::format_err!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{bail, ensure};
+
+    fn io_fail() -> crate::Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/real/path/xyz")?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let f = || -> crate::Result<()> {
+            ensure!(1 + 1 == 2, "math broke");
+            bail!("reached {} as planned", "bail");
+        };
+        assert_eq!(f().unwrap_err().to_string(), "reached bail as planned");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing value").unwrap_err().to_string(), "missing value");
+    }
+}

@@ -22,13 +22,24 @@
 //!   stream of vector memory accesses the generated AVX2 assembly would
 //!   perform.
 //! * [`mem`] + [`prefetch`] + [`sim`] — a timestamp-driven simulator of a
-//!   Coffee-Lake-class memory subsystem: set-associative L1/L2/L3, TLBs,
-//!   DRAM banks with row buffers and a bandwidth-limited service queue,
-//!   line-fill buffers, write-combining buffers, and Intel-style hardware
-//!   prefetch engines (L2 streamer, DCU next-line, IP-stride) behind an
-//!   MSR-like enable switch.
-//! * [`coordinator`] — parallel experiment orchestration (config sweeps over
-//!   worker threads, result aggregation).
+//!   Coffee-Lake-class memory subsystem, organized as a layered pipeline
+//!   (see `ARCHITECTURE.md`):
+//!   - [`sim::issue`] — the core front: issue cursor, out-of-order window
+//!     and in-order retirement;
+//!   - [`sim::fills`] — outstanding-fill tracking: the in-flight line map,
+//!     line-fill-buffer occupancy and the lazy harvest of landed fills;
+//!   - [`sim::stalls`] — stall attribution, emulating the
+//!     `CYCLE_ACTIVITY.STALLS_*` counter family;
+//!   - [`sim::engine`] — the orchestrator walking each access through
+//!     TLB → L1 → L2 → L3 → DRAM against [`mem`]'s models;
+//!   - [`prefetch`] — hardware prefetch engines (L2 streamer,
+//!     adjacent-line, DCU next-line, IP-stride) behind the pluggable
+//!     [`prefetch::PrefetchEngine`] trait, so new prefetcher models
+//!     register with the engine without modifying it.
+//! * [`coordinator`] — parallel experiment orchestration: config sweeps
+//!   fan out over worker threads, each of which reuses one warm
+//!   [`sim::Engine`] allocation across sweep points via
+//!   [`sim::Engine::prepare`].
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas kernel
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them numerically.
 //! * [`native`] — real memory-bandwidth probes that run single- vs
@@ -38,6 +49,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod kernels;
 pub mod mem;
 pub mod native;
@@ -50,4 +62,4 @@ pub mod transform;
 pub mod util;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, error::Error>;

@@ -359,7 +359,7 @@ fn validate(opts: &Opts) -> multistride::Result<()> {
     let reg = ArtifactRegistry::new(&opts.artifacts);
     let names = reg.list();
     if names.is_empty() {
-        anyhow::bail!("no artifacts in {:?} — run `make artifacts` first", reg.dir());
+        multistride::bail!("no artifacts in {:?} — run `make artifacts` first", reg.dir());
     }
     let mut rt = Runtime::new()?;
     println!("PJRT: {}", rt.platform());
@@ -381,7 +381,7 @@ fn validate(opts: &Opts) -> multistride::Result<()> {
         let want = oracle::mxv(&a, &x, m, n);
         let err = oracle::max_rel_err(got, &want);
         println!("mxv: max rel err {err:.2e}");
-        anyhow::ensure!(err < 1e-3, "mxv mismatch");
+        multistride::ensure!(err < 1e-3, "mxv mismatch");
     }
     if names.iter().any(|s| s == "bicg") {
         let a = rand_vec(m * n);
@@ -395,7 +395,7 @@ fn validate(opts: &Opts) -> multistride::Result<()> {
         let es = oracle::max_rel_err(&out[0], &s_want);
         let eq = oracle::max_rel_err(&out[1], &q_want);
         println!("bicg: max rel err s={es:.2e} q={eq:.2e}");
-        anyhow::ensure!(es < 1e-3 && eq < 1e-3, "bicg mismatch");
+        multistride::ensure!(es < 1e-3 && eq < 1e-3, "bicg mismatch");
     }
     if names.iter().any(|s| s == "conv") {
         let (h, w) = (34usize, 66usize);
@@ -407,7 +407,7 @@ fn validate(opts: &Opts) -> multistride::Result<()> {
         let want = oracle::conv3x3(&img, &w9, h, w);
         let err = oracle::max_rel_err(got, &want);
         println!("conv: max rel err {err:.2e}");
-        anyhow::ensure!(err < 1e-3, "conv mismatch");
+        multistride::ensure!(err < 1e-3, "conv mismatch");
     }
     if names.iter().any(|s| s == "jacobi2d") {
         let (h, w) = (32usize, 64usize);
@@ -416,7 +416,7 @@ fn validate(opts: &Opts) -> multistride::Result<()> {
         let want = oracle::jacobi2d(&a, h, w);
         let err = oracle::max_rel_err(got, &want);
         println!("jacobi2d: max rel err {err:.2e}");
-        anyhow::ensure!(err < 1e-3, "jacobi2d mismatch");
+        multistride::ensure!(err < 1e-3, "jacobi2d mismatch");
     }
     println!("validate OK ({} artifacts)", names.len());
     Ok(())
@@ -447,7 +447,7 @@ fn run_config(opts: &Opts) -> multistride::Result<()> {
     let path = opts
         .config
         .clone()
-        .ok_or_else(|| anyhow::anyhow!("run requires --config FILE (see configs/)"))?;
+        .ok_or_else(|| multistride::format_err!("run requires --config FILE (see configs/)"))?;
     let file = ExperimentFile::load(&path)?;
     let get_str = |k: &str| file.get("experiment", k).and_then(|v| v.as_str().map(String::from));
     let machine = get_str("machine")

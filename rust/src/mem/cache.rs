@@ -23,7 +23,7 @@ pub enum Replacement {
 }
 
 /// Static geometry + policy of one cache level.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheConfig {
     /// Total capacity in bytes. Must be `ways * n_sets * 64`.
     pub size_bytes: u64,
@@ -71,7 +71,7 @@ struct Entry {
 }
 
 /// Aggregate statistics for one cache level.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub demand_hits: u64,
     pub demand_misses: u64,
@@ -331,9 +331,12 @@ impl Cache {
     }
 
     /// Drop all contents and statistics (between experiment repetitions).
+    /// Restores the exact post-construction state — including the
+    /// replacement RNG, so `Replacement::Random` runs reproduce too.
     pub fn reset(&mut self) {
         self.entries.fill(Entry::default());
         self.clock = 0;
+        self.rng = 0x9e3779b97f4a7c15;
         self.stats = CacheStats::default();
     }
 

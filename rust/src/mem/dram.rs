@@ -24,7 +24,7 @@
 use super::addr::{Cycle, LINE_SHIFT};
 
 /// DRAM timing + geometry.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DramConfig {
     /// Cycles the channel is occupied per 64-byte line *read* transfer.
     /// Sets the read-bandwidth roofline: `64 B / (service_cycles / f)`.
@@ -64,7 +64,7 @@ impl Default for DramConfig {
     }
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DramStats {
     pub reads: u64,
     pub writes: u64,

@@ -12,7 +12,7 @@
 use super::addr::{Addr, HUGE_PAGE_SHIFT, PAGE_SHIFT};
 
 /// Geometry and costs of the two-level TLB.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TlbConfig {
     /// L1 dTLB entries (e.g. 64 on Coffee Lake).
     pub l1_entries: u32,
@@ -51,7 +51,7 @@ struct TlbEntry {
     stamp: u64,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TlbStats {
     pub accesses: u64,
     pub l1_misses: u64,

@@ -18,7 +18,7 @@
 use super::addr::{Cycle, LINE_BYTES};
 
 /// Configuration of the WC buffer pool.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WriteCombineConfig {
     /// Number of concurrent WC buffers (≈ line-fill buffers on Intel).
     pub entries: u32,
@@ -50,7 +50,7 @@ pub struct WcFlush {
     pub at: Cycle,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct WcStats {
     pub stores: u64,
     pub full_flushes: u64,

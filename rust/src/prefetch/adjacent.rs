@@ -1,0 +1,66 @@
+//! L2 adjacent-line prefetcher.
+//!
+//! On every L2 demand *miss*, pull the other half of the 128-byte aligned
+//! line pair (line address XOR 1). Stateless — the simplest of the four
+//! MSR-0x1A4 engines, and the reference example of the
+//! [`PrefetchEngine`](super::PrefetchEngine) contract.
+
+use super::{Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, PrefetchReq};
+
+/// The adjacent-line engine: completes the 128-byte aligned pair on misses.
+pub struct AdjacentLine;
+
+impl PrefetchEngine for AdjacentLine {
+    fn name(&self) -> &'static str {
+        "l2-adjacent-line"
+    }
+
+    fn level(&self) -> PrefetchLevel {
+        PrefetchLevel::L2
+    }
+
+    fn observe(
+        &mut self,
+        obs: Observation,
+        ctx: &PrefetchContext<'_>,
+        out: &mut Vec<PrefetchReq>,
+    ) {
+        if !ctx.level_hit {
+            out.push(PrefetchReq { line: obs.line ^ 1, stream: u32::MAX, to_l1: false });
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(line: u64) -> Observation {
+        Observation { line, ip: 0, miss: true, store: false }
+    }
+
+    #[test]
+    fn completes_the_pair_on_miss() {
+        let none = |_: u32| 0u32;
+        let ctx = PrefetchContext { level_hit: false, outstanding: &none };
+        let mut a = AdjacentLine;
+        let mut out = Vec::new();
+        a.observe(obs(10), &ctx, &mut out);
+        assert_eq!(out, vec![PrefetchReq { line: 11, stream: u32::MAX, to_l1: false }]);
+        out.clear();
+        a.observe(obs(11), &ctx, &mut out);
+        assert_eq!(out[0].line, 10, "pairing is XOR, not +1");
+    }
+
+    #[test]
+    fn silent_on_hits() {
+        let none = |_: u32| 0u32;
+        let ctx = PrefetchContext { level_hit: true, outstanding: &none };
+        let mut a = AdjacentLine;
+        let mut out = Vec::new();
+        a.observe(obs(10), &ctx, &mut out);
+        assert!(out.is_empty());
+    }
+}

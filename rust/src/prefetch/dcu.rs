@@ -7,10 +7,10 @@
 //! disable it (see [`super::PrefetchConfig`]). It is still modeled fully so
 //! ablations can enable it.
 
-use super::{Observation, PrefetchReq};
+use super::{Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, PrefetchReq};
 
 /// DCU next-line knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DcuNextLineConfig {
     /// Only trigger on ascending accesses (hardware behaviour).
     pub ascending_only: bool,
@@ -67,6 +67,33 @@ impl DcuNextLine {
 
     pub fn reset(&mut self) {
         self.has_last = false;
+        self.stats = DcuStats::default();
+    }
+}
+
+impl PrefetchEngine for DcuNextLine {
+    fn name(&self) -> &'static str {
+        "dcu-next-line"
+    }
+
+    fn level(&self) -> PrefetchLevel {
+        PrefetchLevel::L1
+    }
+
+    fn observe(
+        &mut self,
+        obs: Observation,
+        _ctx: &PrefetchContext<'_>,
+        out: &mut Vec<PrefetchReq>,
+    ) {
+        DcuNextLine::observe(self, obs, out);
+    }
+
+    fn reset(&mut self) {
+        DcuNextLine::reset(self);
+    }
+
+    fn clear_stats(&mut self) {
         self.stats = DcuStats::default();
     }
 }

@@ -10,10 +10,10 @@
 //! (Figure 4's hard 0.5 L1 hit ratio shows its fills are not timely for
 //! these kernels) but is fully modeled for ablation studies.
 
-use super::{Observation, PrefetchReq};
+use super::{Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, PrefetchReq};
 
 /// IP-stride knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IpStrideConfig {
     /// Tracker table entries (indexed by IP hash).
     pub table_size: u32,
@@ -96,6 +96,33 @@ impl IpStride {
 
     pub fn reset(&mut self) {
         self.table.fill(IpEntry::default());
+        self.stats = IpStrideStats::default();
+    }
+}
+
+impl PrefetchEngine for IpStride {
+    fn name(&self) -> &'static str {
+        "dcu-ip-stride"
+    }
+
+    fn level(&self) -> PrefetchLevel {
+        PrefetchLevel::L1
+    }
+
+    fn observe(
+        &mut self,
+        obs: Observation,
+        _ctx: &PrefetchContext<'_>,
+        out: &mut Vec<PrefetchReq>,
+    ) {
+        IpStride::observe(self, obs, out);
+    }
+
+    fn reset(&mut self) {
+        IpStride::reset(self);
+    }
+
+    fn clear_stats(&mut self) {
         self.stats = IpStrideStats::default();
     }
 }

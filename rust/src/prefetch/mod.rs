@@ -1,4 +1,4 @@
-//! Hardware prefetch engines.
+//! Hardware prefetch engines behind a pluggable trait.
 //!
 //! Coffee Lake exposes four prefetchers via MSR 0x1A4 (the knob the paper
 //! toggles): the **L2 streamer**, the **L2 adjacent-line** prefetcher, the
@@ -10,13 +10,20 @@
 //! stream's lookahead; a multi-strided loop trains `n` streams whose
 //! lookaheads aggregate — that is the paper's mechanism.
 //!
-//! Engines produce [`PrefetchReq`]s; the simulation engine decides timing,
-//! budget and installation level.
+//! Every model implements [`PrefetchEngine`]; the simulation engine holds
+//! trait objects and decides timing, budget and installation level. New
+//! prefetcher models (an AMD-style region prefetcher, a next-page engine,
+//! …) implement the trait and register via
+//! [`crate::sim::Engine::register_prefetcher`] — no engine changes needed.
+//! [`PrefetchConfig::build_engines`] is the registry for the four built-in
+//! hardware models.
 
+pub mod adjacent;
 pub mod dcu;
 pub mod ipstride;
 pub mod streamer;
 
+pub use adjacent::AdjacentLine;
 pub use dcu::{DcuNextLine, DcuNextLineConfig};
 pub use ipstride::{IpStride, IpStrideConfig};
 pub use streamer::{Streamer, StreamerConfig};
@@ -47,8 +54,63 @@ pub struct Observation {
     pub store: bool,
 }
 
+/// Cache level an engine observes traffic at (and installs toward).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchLevel {
+    /// Observes L1 demand traffic; fills install into L1 (+L2).
+    L1,
+    /// Observes requests arriving at L2; fills install into L2 + L3.
+    L2,
+}
+
+/// Simulator-side context available to an engine at observation time.
+pub struct PrefetchContext<'a> {
+    /// The demand access hit the observing cache level (gates engines that
+    /// trigger on misses only, like adjacent-line).
+    pub level_hit: bool,
+    /// Live outstanding prefetches for a stream slot, so engines can hold
+    /// back requests beyond their per-stream budget.
+    pub outstanding: &'a dyn Fn(u32) -> u32,
+}
+
+/// A hardware prefetch engine model.
+///
+/// Contract (see `ARCHITECTURE.md` for the full write-up):
+///
+/// * [`observe`](Self::observe) is called for every demand access reaching
+///   the engine's [`level`](Self::level) — hits and misses, loads and RFOs
+///   — in trace order. The engine pushes any [`PrefetchReq`]s it wants
+///   issued into `out`; the simulator decides redundancy, timing and
+///   installation, and issues requests in the order pushed.
+/// * Engines must be deterministic: identical observation sequences must
+///   produce identical request sequences.
+/// * [`reset`](Self::reset) must restore the exact post-construction state
+///   (the engine-reuse path depends on it being bit-identical).
+pub trait PrefetchEngine: Send {
+    /// Stable identifier for diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Which cache level this engine observes.
+    fn level(&self) -> PrefetchLevel;
+
+    /// Observe one demand access; push generated requests into `out`.
+    fn observe(&mut self, obs: Observation, ctx: &PrefetchContext<'_>, out: &mut Vec<PrefetchReq>);
+
+    /// Restore the post-construction state.
+    fn reset(&mut self);
+
+    /// Zero statistics while keeping trained state (warmup protocol).
+    fn clear_stats(&mut self) {}
+
+    /// Streamer statistics, when this engine is the L2 streamer (reported
+    /// in [`crate::sim::RunResult`]).
+    fn streamer_stats(&self) -> Option<streamer::StreamerStats> {
+        None
+    }
+}
+
 /// The MSR-0x1A4-style master switch plus per-engine enables.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrefetchConfig {
     /// Master enable: when false, no engine observes or issues anything —
     /// equivalent to the paper's "hardware prefetching disabled" MSR state.
@@ -81,6 +143,78 @@ impl Default for PrefetchConfig {
             dcu_enabled: false,
             ipstride: IpStrideConfig::default(),
             ipstride_enabled: false,
+        }
+    }
+}
+
+impl PrefetchConfig {
+    /// Instantiate the enabled built-in hardware models, in observation
+    /// order (L1: DCU next-line, then IP-stride; L2: streamer, then
+    /// adjacent-line). The master `enabled` switch is enforced by the
+    /// simulation engine at observation time, matching the MSR semantics
+    /// of a present-but-disabled prefetcher.
+    pub fn build_engines(&self) -> Vec<Box<dyn PrefetchEngine>> {
+        let mut v: Vec<Box<dyn PrefetchEngine>> = Vec::new();
+        if self.dcu_enabled {
+            v.push(Box::new(DcuNextLine::new(self.dcu)));
+        }
+        if self.ipstride_enabled {
+            v.push(Box::new(IpStride::new(self.ipstride)));
+        }
+        if self.streamer_enabled {
+            v.push(Box::new(Streamer::new(self.streamer)));
+        }
+        if self.adjacent_enabled {
+            v.push(Box::new(AdjacentLine));
+        }
+        v
+    }
+}
+
+/// Partition engines by observation level, preserving order within each.
+pub fn partition_by_level(
+    engines: Vec<Box<dyn PrefetchEngine>>,
+) -> (Vec<Box<dyn PrefetchEngine>>, Vec<Box<dyn PrefetchEngine>>) {
+    let mut l1 = Vec::new();
+    let mut l2 = Vec::new();
+    for e in engines {
+        match e.level() {
+            PrefetchLevel::L1 => l1.push(e),
+            PrefetchLevel::L2 => l2.push(e),
+        }
+    }
+    (l1, l2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_respects_enable_flags() {
+        let cfg = PrefetchConfig::default();
+        let names: Vec<&str> = cfg.build_engines().iter().map(|e| e.name()).collect();
+        assert_eq!(names, vec!["l2-streamer", "l2-adjacent-line"]);
+
+        let all = PrefetchConfig { dcu_enabled: true, ipstride_enabled: true, ..cfg };
+        let names: Vec<&str> = all.build_engines().iter().map(|e| e.name()).collect();
+        assert_eq!(
+            names,
+            vec!["dcu-next-line", "dcu-ip-stride", "l2-streamer", "l2-adjacent-line"]
+        );
+    }
+
+    #[test]
+    fn levels_partition_l1_and_l2() {
+        let cfg = PrefetchConfig {
+            dcu_enabled: true,
+            ipstride_enabled: true,
+            ..PrefetchConfig::default()
+        };
+        for e in cfg.build_engines() {
+            let expect =
+                if e.name().starts_with("dcu") { PrefetchLevel::L1 } else { PrefetchLevel::L2 };
+            assert_eq!(e.level(), expect, "{}", e.name());
         }
     }
 }

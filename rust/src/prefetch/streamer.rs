@@ -20,11 +20,11 @@
 
 use std::collections::HashMap;
 
-use super::{Observation, PrefetchReq};
+use super::{Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, PrefetchReq};
 use crate::mem::addr;
 
 /// Streamer tuning knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StreamerConfig {
     /// Stream tracker table entries (concurrent 4 KiB page streams).
     pub table_size: u32,
@@ -86,7 +86,7 @@ struct StreamEntry {
     carried: bool,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StreamerStats {
     pub observations: u64,
     pub streams_allocated: u64,
@@ -301,6 +301,37 @@ impl Streamer {
         self.index.clear();
         self.clock = 0;
         self.stats = StreamerStats::default();
+    }
+}
+
+impl PrefetchEngine for Streamer {
+    fn name(&self) -> &'static str {
+        "l2-streamer"
+    }
+
+    fn level(&self) -> PrefetchLevel {
+        PrefetchLevel::L2
+    }
+
+    fn observe(
+        &mut self,
+        obs: Observation,
+        ctx: &PrefetchContext<'_>,
+        out: &mut Vec<PrefetchReq>,
+    ) {
+        Streamer::observe(self, obs, |slot| (ctx.outstanding)(slot), out);
+    }
+
+    fn reset(&mut self) {
+        Streamer::reset(self);
+    }
+
+    fn clear_stats(&mut self) {
+        self.stats = StreamerStats::default();
+    }
+
+    fn streamer_stats(&self) -> Option<StreamerStats> {
+        Some(self.stats)
     }
 }
 

@@ -6,17 +6,27 @@
 //! Interchange format is **HLO text** — jax ≥ 0.5 serializes protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT bridge needs the external `xla` crate, which offline builds do
+//! not have; it compiles only under the `pjrt` cargo feature. Without the
+//! feature an API-compatible stub is provided whose [`Runtime::new`]
+//! returns an error, so callers (which already skip gracefully when no
+//! artifacts are present) degrade cleanly.
 
 pub mod registry;
 
 pub use registry::ArtifactRegistry;
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use crate::error::Context;
+use crate::{format_err, Result};
 
 /// A loaded, compiled kernel executable.
+#[cfg(feature = "pjrt")]
 pub struct LoadedKernel {
     exe: xla::PjRtLoadedExecutable,
     /// Artifact path (diagnostics).
@@ -24,15 +34,54 @@ pub struct LoadedKernel {
 }
 
 /// The PJRT CPU runtime with a cache of compiled kernels.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     kernels: HashMap<String, LoadedKernel>,
 }
 
+/// Stub runtime compiled without the `pjrt` feature: construction fails
+/// with a clear error and nothing else is reachable.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn new() -> Result<Self> {
+        Err(format_err!(
+            "built without the `pjrt` feature: PJRT execution requires the external `xla` crate"
+        ))
+    }
+
+    /// Platform diagnostics string.
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".into()
+    }
+
+    /// Stub: always fails.
+    pub fn load(&mut self, _name: &str, _path: &Path) -> Result<()> {
+        Err(format_err!("pjrt feature disabled"))
+    }
+
+    /// Names of loaded kernels (always empty in the stub).
+    pub fn loaded(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Stub: always fails.
+    pub fn execute_f32(&self, _name: &str, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        Err(format_err!("pjrt feature disabled"))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Construct a CPU PJRT client.
     pub fn new() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format_err!("PJRT cpu client: {e:?}"))?;
         Ok(Self { client, kernels: HashMap::new() })
     }
 
@@ -44,12 +93,12 @@ impl Runtime {
     /// Load and compile an HLO-text artifact under `name`.
     pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
         let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            .map_err(|e| format_err!("parse {path:?}: {e:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+            .map_err(|e| format_err!("compile {path:?}: {e:?}"))?;
         self.kernels.insert(name.to_string(), LoadedKernel { exe, path: path.to_path_buf() });
         Ok(())
     }
@@ -65,26 +114,26 @@ impl Runtime {
     /// the flattened f32 outputs (artifacts are lowered with
     /// `return_tuple=True`, outputs unwrapped in declaration order).
     pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let k = self.kernels.get(name).ok_or_else(|| anyhow!("kernel {name} not loaded"))?;
+        let k = self.kernels.get(name).ok_or_else(|| format_err!("kernel {name} not loaded"))?;
         let mut lits = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs {
             let lit = xla::Literal::vec1(data)
                 .reshape(shape)
-                .map_err(|e| anyhow!("reshape input to {shape:?}: {e:?}"))?;
+                .map_err(|e| format_err!("reshape input to {shape:?}: {e:?}"))?;
             lits.push(lit);
         }
         let result = k
             .exe
             .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            .map_err(|e| format_err!("execute {name}: {e:?}"))?;
         let mut out = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            .map_err(|e| format_err!("fetch result: {e:?}"))?;
         // Lowered with return_tuple=True: decompose the tuple.
-        let elems = out.decompose_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let elems = out.decompose_tuple().map_err(|e| format_err!("untuple: {e:?}"))?;
         let mut vecs = Vec::with_capacity(elems.len());
         for e in elems {
-            vecs.push(e.to_vec::<f32>().map_err(|e2| anyhow!("to_vec: {e2:?}"))?);
+            vecs.push(e.to_vec::<f32>().map_err(|e2| format_err!("to_vec: {e2:?}"))?);
         }
         Ok(vecs)
     }

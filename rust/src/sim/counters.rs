@@ -15,7 +15,7 @@
 
 /// Aggregated event counts over one simulated run. All cycle values are in
 /// core cycles of the simulated machine.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Counters {
     /// Total cycles of the run (fence-to-fence).
     pub cycles: u64,

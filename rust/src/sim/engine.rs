@@ -1,204 +1,50 @@
-//! The simulation engine: plays an access trace against the modeled memory
-//! subsystem and produces throughput + counters.
+//! The simulation engine: orchestrates the issue → fill → stall pipeline
+//! (see [`super`] for the stage overview). Per access it asks the
+//! [`IssueUnit`] for the issue time, pays address translation, walks the
+//! line(s) through L1 → L2 → L3 → DRAM — merging with in-flight fills and
+//! acquiring line-fill buffers via [`FillTracker`] — then retires in order
+//! and hands the retirement gap to [`StallModel`].
 //!
-//! ## Timing model
-//!
-//! Time advances through **timestamps**, not stepped cycles. Internally the
-//! engine counts in *ticks* = 1/4 core cycle so that a 2-accesses-per-cycle
-//! issue rate is expressible exactly.
-//!
-//! * An **issue cursor** advances by `issue_ticks` per vector access.
-//! * Access *i* may not issue before access *i − W* has retired
-//!   (out-of-order window of `window_accesses`).
-//! * A demand L3 miss needs a **line-fill buffer**; with all `lfb_entries`
-//!   occupied the access waits for the earliest outstanding fill.
-//! * Retirement is in-order: `retire(i) = max(retire(i−1), data_ready(i))`.
-//!   Gaps between consecutive retirements beyond the issue cost are **stall
-//!   cycles**, attributed to the deepest level the blocking access reached
-//!   (the `CYCLE_ACTIVITY.STALLS_*` emulation of [`super::counters`]).
-//!
-//! ## Fill tracking
-//!
-//! Demand misses and prefetches enter an `inflight` map keyed by line
-//! address. A later demand to an in-flight line **merges**: it completes
-//! when the fill lands. Completed fills are *harvested lazily* — installed
-//! into the caches the next time the line is touched (plus periodic sweeps
-//! bounded by the prefetch budget), which is exact for a single-core trace.
-//!
-//! ## Prefetch plumbing
-//!
-//! The L2 streamer observes every access arriving at L2 (hit or miss, loads
-//! and RFOs). Its requests respect a per-stream in-flight budget; fills
-//! install into L2 + L3. DCU engines (next-line, IP-stride) observe L1
-//! traffic and install into L1; they are modeled but disabled in the
-//! calibrated presets (see [`crate::prefetch::PrefetchConfig`]).
+//! Prefetch engines observe traffic at their level: L1 engines see every
+//! L1 demand access, L2 engines see every request arriving at L2 (hit or
+//! miss, loads and RFOs). Requests respect the per-stream in-flight
+//! budget; streamer fills install into L2 + L3 *eagerly* at issue time —
+//! they occupy their cache set from the start, so aliasing streams evict
+//! each other's prefetched lines exactly as §4.5 of the paper describes —
+//! while demand and DCU fills install on harvest.
 
-use std::collections::{HashMap, VecDeque};
-use std::hash::{BuildHasherDefault, Hasher};
-
-/// Multiply-shift hasher for line-address keys (§Perf: the inflight map is
-/// on the hot path; SipHash costs ~3× more than the whole lookup).
-#[derive(Default)]
-pub struct LineHasher(u64);
-
-impl Hasher for LineHasher {
-    #[inline]
-    fn finish(&self) -> u64 {
-        self.0
-    }
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 = (self.0 ^ b as u64).wrapping_mul(0x9e3779b97f4a7c15);
-        }
-    }
-    #[inline]
-    fn write_u64(&mut self, v: u64) {
-        let h = v.wrapping_mul(0x9e3779b97f4a7c15);
-        self.0 = h ^ (h >> 29);
-    }
-}
-
-type LineMap<V> = HashMap<u64, V, BuildHasherDefault<LineHasher>>;
-
-use crate::config::MachineConfig;
 use crate::mem::addr;
-use crate::mem::{Cache, Dram, Tlb, WriteCombineBuffer};
 use crate::mem::dram::DramOp;
-use crate::prefetch::{DcuNextLine, IpStride, Observation, PrefetchConfig, PrefetchReq, Streamer};
+use crate::mem::{Tlb, WriteCombineBuffer};
+use crate::prefetch::{
+    partition_by_level, Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, PrefetchReq,
+};
 use crate::trace::{Access, Op};
 
-use super::Counters;
+use super::fills::{Fill, FillDest, FillTracker};
+use super::hierarchy::Hierarchy;
+use super::issue::IssueUnit;
+use super::stalls::{Depth, StallModel};
+use super::{EngineConfig, RunResult, TICKS};
 
-/// Ticks per core cycle (issue-slot resolution).
-const TICKS: u64 = 4;
-
-/// Engine construction parameters.
-#[derive(Debug, Clone, Copy)]
-pub struct EngineConfig {
-    /// The simulated machine (caches, DRAM, prefetchers, core limits).
-    pub machine: MachineConfig,
-    /// Prefetch configuration — override of `machine.prefetch`, so the
-    /// MSR-style enable bit can be flipped per run.
-    pub prefetch: PrefetchConfig,
-    /// Use huge pages for address translation (the paper's §4 setting).
-    pub huge_pages: bool,
-}
-
-impl EngineConfig {
-    pub fn new(machine: MachineConfig) -> Self {
-        Self { machine, prefetch: machine.prefetch, huge_pages: false }
-    }
-
-    pub fn with_prefetch(mut self, enabled: bool) -> Self {
-        self.prefetch.enabled = enabled;
-        self
-    }
-
-    pub fn with_huge_pages(mut self, huge: bool) -> Self {
-        self.huge_pages = huge;
-        self
-    }
-}
-
-/// Where a fill is headed once it lands.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum FillDest {
-    /// Demand fill: installs L1 + L2 + L3.
-    Demand,
-    /// Streamer prefetch: installs L2 + L3.
-    PrefetchL2,
-    /// DCU prefetch: installs L1 (+L2).
-    PrefetchL1,
-}
-
-#[derive(Debug, Clone, Copy)]
-struct Fill {
-    /// Completion time in ticks.
-    complete_ticks: u64,
-    dest: FillDest,
-    /// Streamer slot for outstanding accounting (`u32::MAX` if none).
-    #[allow(dead_code)]
-    stream: u32,
-    /// Store intent (RFO): install dirty.
-    dirty: bool,
-    /// A demand access already merged with this fill. Subsequent demands to
-    /// the same line are *fill-buffer hits* and count as L1 hits — the
-    /// mechanism behind Figure 4's 0.5 L1 ratio (first half of each line
-    /// misses, second half hits the LFB).
-    demanded: bool,
-}
-
-/// Result of one simulated run.
-#[derive(Debug, Clone)]
-pub struct RunResult {
-    pub counters: Counters,
-    pub l1: crate::mem::cache::CacheStats,
-    pub l2: crate::mem::cache::CacheStats,
-    pub l3: crate::mem::cache::CacheStats,
-    pub dram: crate::mem::dram::DramStats,
-    pub wc: crate::mem::writebuffer::WcStats,
-    pub tlb: crate::mem::tlb::TlbStats,
-    pub streamer: crate::prefetch::streamer::StreamerStats,
-    /// Locked frequency the cycle counts convert with.
-    pub freq_ghz: f64,
-}
-
-impl RunResult {
-    /// Achieved throughput over the run in GiB/s (the paper's unit:
-    /// gigibytes of *program data* moved per second).
-    pub fn throughput_gib(&self) -> f64 {
-        if self.counters.cycles == 0 {
-            return 0.0;
-        }
-        let secs = self.counters.cycles as f64 / (self.freq_ghz * 1e9);
-        self.counters.bytes() as f64 / (1u64 << 30) as f64 / secs
-    }
-}
-
-/// The engine. Construct once per configuration; `run` consumes a trace.
+/// The engine. Construct once; [`Engine::run`] consumes a trace. Reuse
+/// across configurations via [`Engine::prepare`] / [`Engine::reset`].
 pub struct Engine {
     cfg: EngineConfig,
-    l1: Cache,
-    l2: Cache,
-    l3: Cache,
+    mem: Hierarchy,
     tlb: Tlb,
-    dram: Dram,
     wc: WriteCombineBuffer,
-    streamer: Streamer,
-    dcu: DcuNextLine,
-    ipstride: IpStride,
-
-    /// In-flight fills keyed by line address.
-    inflight: LineMap<Fill>,
-    /// Outstanding *demand* fill completion times (ticks), min-heap via sort.
-    lfb: Vec<u64>,
-    /// Outstanding prefetch completion ticks per streamer slot.
-    stream_outstanding: Vec<Vec<u64>>,
-    /// Retirement times (ticks) of the last `window_accesses` accesses.
-    retire_ring: VecDeque<u64>,
-    /// Issue cursor in ticks.
-    issue_ticks_cursor: u64,
-    /// Ticks consumed per access by the issue ports.
-    issue_cost: u64,
-    /// Last in-order retirement time (ticks).
-    last_retire: u64,
-
-    counters: Counters,
+    /// Engines observing L1 demand traffic (DCU next-line, IP-stride, …).
+    l1_engines: Vec<Box<dyn PrefetchEngine>>,
+    /// Engines observing requests arriving at L2 (streamer, adjacent, …).
+    l2_engines: Vec<Box<dyn PrefetchEngine>>,
+    fills: FillTracker,
+    issue: IssueUnit,
+    stalls: StallModel,
     /// Scratch buffer for prefetch requests.
     pf_scratch: Vec<PrefetchReq>,
-    /// Accesses since the last completed-fill sweep.
-    sweep_counter: u32,
-    /// Observations since the last outstanding-prefetch cleanup.
-    outstanding_clean_counter: u32,
-}
-
-/// Deepest level a demand access had to reach (for stall attribution).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum Depth {
-    L1Hit,
-    L2Hit,
-    L3Hit,
-    Dram,
+    /// Scratch buffer for harvested fills.
+    landed_scratch: Vec<(u64, Fill)>,
 }
 
 impl Engine {
@@ -206,28 +52,18 @@ impl Engine {
         let m = &cfg.machine;
         let mut tlb_cfg = m.tlb;
         tlb_cfg.huge_pages = cfg.huge_pages;
-        let table = cfg.prefetch.streamer.table_size as usize;
+        let (l1_engines, l2_engines) = partition_by_level(cfg.prefetch.build_engines());
         Self {
-            l1: Cache::new(m.l1),
-            l2: Cache::new(m.l2),
-            l3: Cache::new(m.l3),
+            mem: Hierarchy::new(m),
             tlb: Tlb::new(tlb_cfg),
-            dram: Dram::new(m.dram),
             wc: WriteCombineBuffer::new(m.wc),
-            streamer: Streamer::new(cfg.prefetch.streamer),
-            dcu: DcuNextLine::new(cfg.prefetch.dcu),
-            ipstride: IpStride::new(cfg.prefetch.ipstride),
-            inflight: LineMap::with_capacity_and_hasher(1024, Default::default()),
-            lfb: Vec::with_capacity(m.lfb_entries as usize + 1),
-            stream_outstanding: vec![Vec::new(); table],
-            retire_ring: VecDeque::with_capacity(m.window_accesses as usize + 1),
-            issue_ticks_cursor: 0,
-            issue_cost: TICKS / m.issue_per_cycle as u64,
-            last_retire: 0,
-            counters: Counters::default(),
+            l1_engines,
+            l2_engines,
+            fills: FillTracker::new(m.lfb_entries, cfg.prefetch.streamer.table_size),
+            issue: IssueUnit::new(m.window_accesses, m.issue_per_cycle),
+            stalls: StallModel::new(),
             pf_scratch: Vec::with_capacity(64),
-            sweep_counter: 0,
-            outstanding_clean_counter: 0,
+            landed_scratch: Vec::with_capacity(64),
             cfg,
         }
     }
@@ -236,9 +72,60 @@ impl Engine {
         &self.cfg
     }
 
+    /// Register an extra prefetch engine at its level, after the
+    /// built-ins; the master prefetch enable still gates it. Registered
+    /// engines survive [`Engine::reset`], but every [`Engine::prepare`]
+    /// rebuilds the engine set from the config and drops them (prepare is
+    /// bit-identical with a fresh construction) — re-register afterwards.
+    pub fn register_prefetcher(&mut self, engine: Box<dyn PrefetchEngine>) {
+        match engine.level() {
+            PrefetchLevel::L1 => self.l1_engines.push(engine),
+            PrefetchLevel::L2 => self.l2_engines.push(engine),
+        }
+    }
+
+    /// Full reset: cold caches, cleared counters. Bit-identical to a
+    /// freshly constructed engine with the same configuration, unless
+    /// extra prefetchers were registered — those are reset in place but
+    /// kept (use [`Engine::prepare`] to drop them).
+    pub fn reset(&mut self) {
+        self.mem.reset();
+        self.tlb.reset();
+        self.wc.reset();
+        for e in self.l1_engines.iter_mut().chain(self.l2_engines.iter_mut()) {
+            e.reset();
+        }
+        self.fills.reset(self.cfg.prefetch.streamer.table_size);
+        self.issue.reset();
+        self.stalls.reset();
+    }
+
+    /// Reset to cold state under a (possibly different) configuration,
+    /// reusing allocations where the machine matches. The sweep-reuse
+    /// entry point: bit-identical with `*self = Engine::new(cfg)`.
+    pub fn prepare(&mut self, cfg: EngineConfig) {
+        if self.cfg.machine != cfg.machine {
+            *self = Engine::new(cfg);
+            return;
+        }
+        if self.cfg.huge_pages != cfg.huge_pages {
+            let mut tlb_cfg = cfg.machine.tlb;
+            tlb_cfg.huge_pages = cfg.huge_pages;
+            self.tlb = Tlb::new(tlb_cfg);
+        }
+        // Always rebuild the engine set from the config: a reused engine
+        // must match `Engine::new(cfg)` exactly, including dropping any
+        // extra engines added via `register_prefetcher`.
+        let (l1e, l2e) = partition_by_level(cfg.prefetch.build_engines());
+        self.l1_engines = l1e;
+        self.l2_engines = l2e;
+        self.cfg = cfg;
+        self.reset();
+    }
+
     /// Run a full trace to the closing memory fence; returns the metrics.
-    /// The engine retains warm state; call [`Engine::reset`] between
-    /// measurements, or rebuild.
+    /// The engine retains warm state; call [`Engine::reset`] or
+    /// [`Engine::prepare`] between measurements.
     pub fn run(&mut self, trace: impl IntoIterator<Item = Access>) -> RunResult {
         for acc in trace {
             self.step(acc);
@@ -255,63 +142,31 @@ impl Engine {
         }
         self.fence();
         // Keep cache/TLB/stream state; zero the measurement.
-        self.l1.stats = Default::default();
-        self.l2.stats = Default::default();
-        self.l3.stats = Default::default();
-        self.dram.stats = Default::default();
+        self.mem.l1.stats = Default::default();
+        self.mem.l2.stats = Default::default();
+        self.mem.l3.stats = Default::default();
+        self.mem.dram.stats = Default::default();
         self.wc.stats = Default::default();
         self.tlb.stats = Default::default();
-        self.streamer.stats = Default::default();
-        self.counters = Counters::default();
-        let t0 = self.issue_ticks_cursor;
-        self.issue_ticks_cursor = 0;
-        self.last_retire = self.last_retire.saturating_sub(t0);
-        for r in &mut self.retire_ring {
-            *r = r.saturating_sub(t0);
+        for e in self.l1_engines.iter_mut().chain(self.l2_engines.iter_mut()) {
+            e.clear_stats();
         }
-        for f in self.inflight.values_mut() {
-            f.complete_ticks = f.complete_ticks.saturating_sub(t0);
-        }
-        for l in &mut self.lfb {
-            *l = l.saturating_sub(t0);
-        }
-        for s in &mut self.stream_outstanding {
-            for t in s.iter_mut() {
-                *t = t.saturating_sub(t0);
-            }
-        }
-        // NOTE: Dram's internal service cursor is reset; its open-row state
-        // persists via reset-less stats clearing above.
-        self.rebase_dram(t0);
-    }
-
-    fn rebase_dram(&mut self, _t0: u64) {
-        // The DRAM service cursor is in cycles; after a warmup rebase the
-        // conservative choice is "channel idle at t=0".
-        let open_rows_kept = true;
-        let _ = open_rows_kept;
-        // Recreate with same config but preserve open-row locality by
-        // replaying nothing: the first accesses will re-open rows, which
-        // matches a measurement that starts at a row boundary.
-        self.dram = Dram::new(self.cfg.machine.dram);
+        self.stalls.reset();
+        let t0 = self.issue.rebase();
+        self.fills.rebase(t0);
+        // DRAM service cursor rebuilt idle at t = 0: the first accesses
+        // re-open rows, like a measurement starting at a row boundary.
+        self.mem.dram = crate::mem::Dram::new(self.cfg.machine.dram);
     }
 
     /// Process a single vector access.
     #[inline]
     pub fn step(&mut self, acc: Access) {
-        // ---- issue time -------------------------------------------------
-        let window = self.cfg.machine.window_accesses as usize;
-        let mut t_issue = self.issue_ticks_cursor;
-        if self.retire_ring.len() >= window {
-            let gate = self.retire_ring[self.retire_ring.len() - window];
-            if gate > t_issue {
-                t_issue = gate;
-            }
-        }
+        let t_issue = self.issue.next_issue();
 
         // ---- address translation ---------------------------------------
         let tlb_pen = self.tlb.translate(acc.addr);
-        self.counters.tlb_cycles += tlb_pen;
+        self.stalls.record_tlb(tlb_pen);
         let t_ready_base = t_issue + tlb_pen * TICKS;
 
         // ---- the access -------------------------------------------------
@@ -322,47 +177,13 @@ impl Engine {
         };
 
         // ---- retire + stall accounting ----------------------------------
-        self.counters.accesses += 1;
-        if acc.op.is_store() {
-            self.counters.bytes_written += acc.size as u64;
-        } else {
-            self.counters.bytes_read += acc.size as u64;
-        }
+        self.stalls.record_access(acc.op.is_store(), acc.size);
+        let stall_ticks = self.issue.retire(t_issue, data_ready);
+        self.stalls.attribute(depth, stall_ticks);
 
-        let retire = data_ready.max(self.last_retire);
-        let gap = retire.saturating_sub(self.last_retire);
-        let busy = self.issue_cost;
-        if gap > busy {
-            let stall = (gap - busy) / TICKS;
-            self.counters.stalls_total += stall;
-            self.counters.stalls_mem_any += stall;
-            match depth {
-                Depth::L1Hit => {}
-                Depth::L2Hit => self.counters.stalls_l1d_miss += stall,
-                Depth::L3Hit => {
-                    self.counters.stalls_l1d_miss += stall;
-                    self.counters.stalls_l2_miss += stall;
-                }
-                Depth::Dram => {
-                    self.counters.stalls_l1d_miss += stall;
-                    self.counters.stalls_l2_miss += stall;
-                    self.counters.stalls_l3_miss += stall;
-                }
-            }
-        }
-        self.last_retire = retire;
-        self.retire_ring.push_back(retire);
-        if self.retire_ring.len() > window {
-            self.retire_ring.pop_front();
-        }
-        self.issue_ticks_cursor = t_issue + self.issue_cost;
-
-        // Bounded lazy sweep: land completed fills so caches stay coherent
-        // with time even when lines are never touched again.
-        self.sweep_counter += 1;
-        if self.sweep_counter >= 512 {
-            self.sweep_counter = 0;
-            self.sweep_completed(self.last_retire);
+        // Bounded lazy sweep of completed fills (see sweep_completed).
+        if self.fills.tick_sweep() {
+            self.sweep_completed(self.issue.last_retire());
         }
     }
 
@@ -394,60 +215,49 @@ impl Engine {
     /// Resolve one line of a demand access.
     fn touch_line(&mut self, line: u64, ip: u32, is_store: bool, t: u64) -> (u64, Depth) {
         let m = self.cfg.machine;
-        let pf = self.cfg.prefetch;
+        let pf_enabled = self.cfg.prefetch.enabled;
 
-        // Harvest a completed in-flight fill for this line first.
-        // Streamer (L2) prefetches were installed *eagerly* at issue time —
-        // they occupy their cache set from the start, so aliasing streams
-        // evict each other's prefetched lines exactly as §4.5 describes;
-        // harvesting them is just dropping the transit record. Demand and
-        // DCU fills install on harvest.
-        if let Some(f) = self.inflight.get(&line).copied() {
-            if f.complete_ticks <= t {
-                self.inflight.remove(&line);
-                if f.dest != FillDest::PrefetchL2 {
-                    self.install_fill(line, f);
-                }
+        // Harvest a completed in-flight fill for this line first. L2
+        // prefetches installed eagerly at issue time — harvesting them just
+        // drops the transit record; demand and DCU fills install here.
+        if let Some(f) = self.fills.take_completed(line, t) {
+            if f.dest != FillDest::PrefetchL2 {
+                self.mem.install(line, f, self.issue.last_retire());
             }
         }
 
         // ---- L1 ----------------------------------------------------------
-        if self.l1.demand_lookup(line) {
+        if self.mem.l1.demand_lookup(line) {
             if is_store {
-                self.l1.mark_dirty(line);
+                self.mem.l1.mark_dirty(line);
             }
-            // DCU engines observe L1 traffic (hits included).
-            if pf.enabled {
+            // L1 engines observe L1 traffic (hits included).
+            if pf_enabled {
                 self.observe_l1(line, ip, false, is_store, t);
             }
             return (t + m.l1_lat * TICKS, Depth::L1Hit);
         }
-        if pf.enabled {
+        if pf_enabled {
             self.observe_l1(line, ip, true, is_store, t);
         }
 
         // ---- merge with in-flight fill ----------------------------------
-        if let Some(f) = self.inflight.get_mut(&line) {
-            let complete = f.complete_ticks;
-            let dest = f.dest;
-            let already_demanded = f.demanded;
-            f.dirty |= is_store;
-            f.demanded = true;
-            self.counters.prefetch_merges += 1;
+        if let Some(merge) = self.fills.merge_demand(line, is_store) {
+            self.stalls.counters_mut().prefetch_merges += 1;
             // Repeat demand to a line whose fill is outstanding: a
             // fill-buffer hit — architecturally an L1 hit (Figure 4's 0.5
             // ratio: first half of every line misses, second half FB-hits).
-            if already_demanded {
-                self.l1.stats.demand_hits += 1;
-                self.l1.stats.demand_misses -= 1; // undo the lookup's miss
-                return (complete.max(t + m.l1_lat * TICKS), Depth::L1Hit);
+            if merge.already_demanded {
+                self.mem.l1.stats.demand_hits += 1;
+                self.mem.l1.stats.demand_misses -= 1; // undo the lookup's miss
+                return (merge.complete_ticks.max(t + m.l1_lat * TICKS), Depth::L1Hit);
             }
             // First demand touching this fill: account by fill origin.
-            return match dest {
+            return match merge.dest {
                 FillDest::Demand | FillDest::PrefetchL1 => {
-                    self.l1.stats.demand_hits += 1;
-                    self.l1.stats.demand_misses -= 1;
-                    (complete.max(t + m.l1_lat * TICKS), Depth::L1Hit)
+                    self.mem.l1.stats.demand_hits += 1;
+                    self.mem.l1.stats.demand_misses -= 1;
+                    (merge.complete_ticks.max(t + m.l1_lat * TICKS), Depth::L1Hit)
                 }
                 FillDest::PrefetchL2 => {
                     // Merged with a streamer prefetch: data still in flight
@@ -455,119 +265,80 @@ impl Engine {
                     // remaining fill time, not a full DRAM round trip. The
                     // line is already resident (eager install); record the
                     // demand touch + RFO dirtiness there.
-                    self.l2.stats.demand_misses += 1;
-                    self.l3.stats.demand_misses += 1;
+                    self.mem.l2.stats.demand_misses += 1;
+                    self.mem.l3.stats.demand_misses += 1;
                     if is_store {
-                        self.l2.mark_dirty(line);
+                        self.mem.l2.mark_dirty(line);
                     }
                     self.observe_l2(line, is_store, false, t);
-                    (complete.max(t + m.l2_lat * TICKS), Depth::Dram)
+                    (merge.complete_ticks.max(t + m.l2_lat * TICKS), Depth::Dram)
                 }
             };
         }
 
         // ---- L2 ----------------------------------------------------------
-        // The streamer sits at L2 and sees every request arriving there.
-        if self.l2.demand_lookup(line) {
+        // The L2 engines see every request arriving there.
+        if self.mem.l2.demand_lookup(line) {
             self.observe_l2(line, is_store, true, t);
-            self.fill_l1(line, is_store);
+            self.mem.fill_l1(line, is_store);
             return (t + m.l2_lat * TICKS, Depth::L2Hit);
         }
         self.observe_l2(line, is_store, false, t);
 
         // ---- L3 ----------------------------------------------------------
-        if self.l3.demand_lookup(line) {
-            self.fill_l2(line, false, false);
-            self.fill_l1(line, is_store);
+        if self.mem.l3.demand_lookup(line) {
+            self.mem.fill_l2(line, false, false);
+            self.mem.fill_l1(line, is_store);
             return (t + m.l3_lat * TICKS, Depth::L3Hit);
         }
 
-        // ---- DRAM (demand) ----------------------------------------------
-        // Line-fill buffer gate.
-        let mut t_eff = t;
-        if self.lfb.len() >= m.lfb_entries as usize {
-            // Wait for the earliest outstanding demand fill.
-            let (idx, &earliest) =
-                self.lfb.iter().enumerate().min_by_key(|(_, &c)| c).expect("lfb non-empty");
-            self.lfb.swap_remove(idx);
-            if earliest > t_eff {
-                t_eff = earliest;
-            }
-        }
-        let complete_cycles = self.dram.access(t_eff / TICKS, line, DramOp::Read);
+        // ---- DRAM (demand), behind the line-fill buffer gate -------------
+        let t_eff = self.fills.lfb_acquire(t);
+        let complete_cycles = self.mem.dram.access(t_eff / TICKS, line, DramOp::Read);
         let complete = complete_cycles * TICKS + m.l3_lat * TICKS / 2;
-        self.lfb.push(complete);
-        self.counters.dram_demand_lines += 1;
-        self.inflight.insert(
-            line,
-            Fill {
-                complete_ticks: complete,
-                dest: FillDest::Demand,
-                stream: u32::MAX,
-                dirty: is_store,
-                demanded: true,
-            },
-        );
+        self.fills.insert_demand(line, complete, is_store);
+        self.stalls.counters_mut().dram_demand_lines += 1;
         (complete, Depth::Dram)
     }
 
-    /// DCU-level (L1) prefetcher observation + request issue.
+    /// L1-level engine observation + request issue.
     fn observe_l1(&mut self, line: u64, ip: u32, miss: bool, store: bool, t: u64) {
-        let pf = self.cfg.prefetch;
-        if !pf.dcu_enabled && !pf.ipstride_enabled {
+        if self.l1_engines.is_empty() {
             return;
         }
         let obs = Observation { line, ip, miss, store };
         self.pf_scratch.clear();
-        if pf.dcu_enabled {
-            self.dcu.observe(obs, &mut self.pf_scratch);
+        let none = |_: u32| 0u32;
+        let ctx = PrefetchContext { level_hit: !miss, outstanding: &none };
+        for e in &mut self.l1_engines {
+            e.observe(obs, &ctx, &mut self.pf_scratch);
         }
-        if pf.ipstride_enabled {
-            self.ipstride.observe(obs, &mut self.pf_scratch);
-        }
-        let reqs = std::mem::take(&mut self.pf_scratch);
-        for r in &reqs {
-            self.issue_prefetch(*r, t);
-        }
-        self.pf_scratch = reqs;
+        self.issue_scratch(t);
     }
 
-    /// L2-level (streamer + adjacent) observation + request issue.
-    /// `l2_hit` gates the adjacent-line engine (it triggers on misses).
+    /// L2-level engine observation + request issue. `l2_hit` gates the
+    /// engines that trigger on misses (adjacent-line).
     fn observe_l2(&mut self, line: u64, store: bool, l2_hit: bool, t: u64) {
-        let pf = self.cfg.prefetch;
-        if !pf.enabled {
+        if !self.cfg.prefetch.enabled || self.l2_engines.is_empty() {
             return;
         }
+        // Free up completed per-stream budget entries (amortized).
+        self.fills.maybe_clean_outstanding(t);
         self.pf_scratch.clear();
-        if pf.streamer_enabled {
-            // Clean completed outstanding entries so budgets free up —
-            // §Perf: amortized (every 32 observations) instead of per-
-            // observation; the budget closure counts live entries exactly.
-            self.outstanding_clean_counter += 1;
-            if self.outstanding_clean_counter >= 32 {
-                self.outstanding_clean_counter = 0;
-                for s in &mut self.stream_outstanding {
-                    s.retain(|&c| c > t);
-                }
-            }
-            let outstanding = &self.stream_outstanding;
-            let obs = Observation { line, ip: 0, miss: true, store };
-            self.streamer.observe(
-                obs,
-                |slot| {
-                    outstanding
-                        .get(slot as usize)
-                        .map_or(0, |v| v.iter().filter(|&&c| c > t).count() as u32)
-                },
-                &mut self.pf_scratch,
-            );
+        // L2 observations carry no instruction pointer (the request lost it
+        // on the way down); `miss` mirrors `ctx.level_hit` truthfully.
+        let obs = Observation { line, ip: 0, miss: !l2_hit, store };
+        let fills = &self.fills;
+        let outstanding = move |slot: u32| fills.outstanding(slot, t);
+        let ctx = PrefetchContext { level_hit: l2_hit, outstanding: &outstanding };
+        for e in &mut self.l2_engines {
+            e.observe(obs, &ctx, &mut self.pf_scratch);
         }
-        if pf.adjacent_enabled && !l2_hit {
-            // Adjacent-line: complete the 128-byte aligned pair on misses.
-            let pair = line ^ 1;
-            self.pf_scratch.push(PrefetchReq { line: pair, stream: u32::MAX, to_l1: false });
-        }
+        self.issue_scratch(t);
+    }
+
+    /// Issue every request accumulated in the scratch buffer.
+    fn issue_scratch(&mut self, t: u64) {
         let reqs = std::mem::take(&mut self.pf_scratch);
         for r in &reqs {
             self.issue_prefetch(*r, t);
@@ -579,165 +350,74 @@ impl Engine {
     fn issue_prefetch(&mut self, req: PrefetchReq, t: u64) {
         let m = self.cfg.machine;
         let line = req.line;
-        if self.inflight.contains_key(&line) {
+        if self.fills.is_inflight(line) {
             return;
         }
         if req.to_l1 {
-            if self.l1.contains(line) {
+            if self.mem.l1.contains(line) {
                 return;
             }
             // DCU prefetch: source from L2/L3/DRAM.
-            let complete = if self.l2.contains(line) {
+            let complete = if self.mem.l2.contains(line) {
                 t + m.l2_lat * TICKS
-            } else if self.l3.contains(line) {
+            } else if self.mem.l3.contains(line) {
                 t + m.l3_lat * TICKS
             } else {
-                self.dram.access(t / TICKS, line, DramOp::Read) * TICKS
+                self.mem.dram.access(t / TICKS, line, DramOp::Read) * TICKS
             };
-            self.counters.prefetch_lines += 1;
-            self.inflight.insert(
-                line,
-                Fill {
-                    complete_ticks: complete,
-                    dest: FillDest::PrefetchL1,
-                    stream: req.stream,
-                    dirty: false,
-                    demanded: false,
-                },
-            );
+            self.stalls.counters_mut().prefetch_lines += 1;
+            self.fills.insert_prefetch_l1(line, complete);
             return;
         }
         // Streamer/adjacent: target L2.
-        if self.l2.contains(line) {
+        if self.mem.l2.contains(line) {
             return;
         }
-        if self.l3.contains(line) {
+        if self.mem.l3.contains(line) {
             // LLC→L2 move: cheap, model as immediate install.
-            self.fill_l2(line, true, false);
+            self.mem.fill_l2(line, true, false);
             return;
         }
-        let complete = self.dram.access(t / TICKS, line, DramOp::Read) * TICKS;
-        self.counters.prefetch_lines += 1;
-        if let Some(slot) = self.stream_outstanding.get_mut(req.stream as usize) {
-            slot.push(complete);
-        }
+        let complete = self.mem.dram.access(t / TICKS, line, DramOp::Read) * TICKS;
+        self.stalls.counters_mut().prefetch_lines += 1;
         // Eager install: the prefetched line occupies its L2/L3 set from
-        // issue, so competing streams' prefetches conflict realistically
-        // (Figure 5). Timing stays in `inflight` until completion.
-        self.fill_l3_prefetch(line);
-        self.fill_l2(line, true, false);
-        self.inflight.insert(
-            line,
-            Fill {
-                complete_ticks: complete,
-                dest: FillDest::PrefetchL2,
-                stream: req.stream,
-                dirty: false,
-                demanded: false,
-            },
-        );
+        // issue (the Figure 5 conflicts); timing stays in the fill tracker.
+        self.mem.fill_l3_prefetch(line, self.issue.last_retire());
+        self.mem.fill_l2(line, true, false);
+        self.fills.insert_prefetch_l2(line, complete, req.stream);
     }
 
     /// Install every completed in-flight fill (bounded lazy sweep): demand
     /// fills must eventually land so dirty lines write back and warm state
     /// persists, even for lines the trace never touches again.
     fn sweep_completed(&mut self, t: u64) {
-        let mut landed: Vec<(u64, Fill)> = Vec::new();
-        self.inflight.retain(|&line, f| {
-            if f.complete_ticks <= t {
-                landed.push((line, *f));
-                false
-            } else {
-                true
-            }
-        });
-        for (line, f) in landed {
+        let mut landed = std::mem::take(&mut self.landed_scratch);
+        self.fills.collect_completed(t, &mut landed);
+        for (line, f) in landed.drain(..) {
             if f.dest != FillDest::PrefetchL2 {
-                self.install_fill(line, f);
+                self.mem.install(line, f, self.issue.last_retire());
             }
         }
-    }
-
-    /// Install a landed fill into the hierarchy.
-    fn install_fill(&mut self, line: u64, f: Fill) {
-        match f.dest {
-            FillDest::Demand => {
-                self.fill_l3(line);
-                self.fill_l2(line, false, false);
-                self.fill_l1(line, f.dirty);
-            }
-            FillDest::PrefetchL2 => {
-                // `dirty` set when an RFO merged with this prefetch.
-                self.fill_l3_prefetch(line);
-                self.fill_l2(line, true, f.dirty);
-            }
-            FillDest::PrefetchL1 => {
-                self.fill_l2(line, true, false);
-                self.fill_l1(line, f.dirty);
-            }
-        }
-    }
-
-    fn fill_l1(&mut self, line: u64, dirty: bool) {
-        if let Some(ev) = self.l1.insert(line, false, dirty) {
-            if ev.dirty {
-                // Write-back to L2 (present under inclusion; mark dirty).
-                self.l2.mark_dirty(ev.line);
-            }
-        }
-    }
-
-    fn fill_l2(&mut self, line: u64, prefetch: bool, dirty: bool) {
-        if let Some(ev) = self.l2.insert(line, prefetch, dirty) {
-            if ev.dirty {
-                self.l3.mark_dirty(ev.line);
-            }
-        }
-    }
-
-    fn fill_l3(&mut self, line: u64) {
-        self.fill_l3_inner(line, false);
-    }
-
-    fn fill_l3_prefetch(&mut self, line: u64) {
-        self.fill_l3_inner(line, true);
-    }
-
-    fn fill_l3_inner(&mut self, line: u64, prefetch: bool) {
-        if let Some(ev) = self.l3.insert(line, prefetch, false) {
-            // Inclusive LLC: back-invalidate inner levels.
-            let mut dirty = ev.dirty;
-            dirty |= self.l1.invalidate(ev.line);
-            dirty |= self.l2.invalidate(ev.line);
-            if dirty {
-                // Victim write-back consumes a DRAM service slot.
-                self.dram.access(self.last_retire / TICKS, ev.line, DramOp::WriteLine);
-            }
-        }
+        self.landed_scratch = landed;
     }
 
     /// Non-temporal store path: write-combining buffers, no allocation.
     fn step_nt_store(&mut self, acc: Access, t: u64) -> (u64, Depth) {
         let m = self.cfg.machine;
-        // Coherence: NT stores to cached lines must evict them first.
+        // Coherence: NT stores to cached lines must evict them first
+        // (invalidate is a no-op on absent lines).
         let line = addr::line_of(acc.addr);
-        if self.l1.contains(line) {
-            self.l1.invalidate(line);
-        }
-        if self.l2.contains(line) {
-            self.l2.invalidate(line);
-        }
-        if self.l3.contains(line) {
-            self.l3.invalidate(line);
-        }
+        self.mem.l1.invalidate(line);
+        self.mem.l2.invalidate(line);
+        self.mem.l3.invalidate(line);
         if let Some(flush) = self.wc.store(t / TICKS, acc.addr, acc.size) {
             let op = if flush.full { DramOp::WriteLine } else { DramOp::WritePartial };
-            self.dram.access(flush.at, flush.line, op);
+            self.mem.dram.access(flush.at, flush.line, op);
         }
         // The store itself retires quickly; backpressure appears when the
         // DRAM write queue runs far ahead of the core — model by gating on
         // the channel's next-free time once it exceeds a window.
-        let backlog_ticks = (self.dram.next_free() * TICKS).saturating_sub(t);
+        let backlog_ticks = (self.mem.dram.next_free() * TICKS).saturating_sub(t);
         let allowed = 64 * TICKS * m.wc.entries as u64;
         let ready = if backlog_ticks > allowed { t + (backlog_ticks - allowed) } else { t } + TICKS;
         (ready, if backlog_ticks > allowed { Depth::Dram } else { Depth::L1Hit })
@@ -746,295 +426,33 @@ impl Engine {
     /// Closing `mfence`: drain write-combining buffers and wait for every
     /// outstanding operation.
     pub fn fence(&mut self) {
-        let t = self.last_retire.max(self.issue_ticks_cursor);
+        let t = self.issue.last_retire().max(self.issue.cursor());
         let mut done = t;
         // Land everything outstanding so warm state persists across runs.
         self.sweep_completed(u64::MAX);
+        debug_assert!(self.fills.is_empty(), "fence left fills outstanding");
         for flush in self.wc.drain(t / TICKS) {
             let op = if flush.full { DramOp::WriteLine } else { DramOp::WritePartial };
-            let c = self.dram.access(flush.at, flush.line, op) * TICKS;
+            let c = self.mem.dram.access(flush.at, flush.line, op) * TICKS;
             done = done.max(c);
         }
-        for f in self.inflight.values() {
-            if f.dest == FillDest::Demand {
-                done = done.max(f.complete_ticks);
-            }
-        }
-        done = done.max(self.dram.next_free() * TICKS);
-        if done > self.last_retire {
-            let stall = (done - self.last_retire) / TICKS;
-            self.counters.stalls_total += stall;
-            self.counters.stalls_mem_any += stall;
-        }
-        self.last_retire = done;
+        done = done.max(self.mem.dram.next_free() * TICKS);
+        self.stalls.record_fence_wait(self.issue.last_retire(), done);
+        self.issue.force_retire(done);
     }
 
     /// Snapshot the metrics.
     pub fn result(&self) -> RunResult {
-        let mut c = self.counters;
-        c.cycles = self.last_retire / TICKS;
         RunResult {
-            counters: c,
-            l1: self.l1.stats,
-            l2: self.l2.stats,
-            l3: self.l3.stats,
-            dram: self.dram.stats,
+            counters: self.stalls.snapshot(self.issue.last_retire()),
+            l1: self.mem.l1.stats,
+            l2: self.mem.l2.stats,
+            l3: self.mem.l3.stats,
+            dram: self.mem.dram.stats,
             wc: self.wc.stats,
             tlb: self.tlb.stats,
-            streamer: self.streamer.stats,
+            streamer: self.l2_engines.iter().find_map(|e| e.streamer_stats()).unwrap_or_default(),
             freq_ghz: self.cfg.machine.freq_ghz,
         }
-    }
-
-    /// Full reset: cold caches, cleared counters.
-    pub fn reset(&mut self) {
-        self.l1.reset();
-        self.l2.reset();
-        self.l3.reset();
-        self.tlb.reset();
-        self.dram.reset();
-        self.wc.reset();
-        self.streamer.reset();
-        self.dcu.reset();
-        self.ipstride.reset();
-        self.inflight.clear();
-        self.lfb.clear();
-        for s in &mut self.stream_outstanding {
-            s.clear();
-        }
-        self.retire_ring.clear();
-        self.issue_ticks_cursor = 0;
-        self.last_retire = 0;
-        self.counters = Counters::default();
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::coffee_lake;
-    use crate::trace::{Access, Op};
-
-    fn engine(prefetch: bool) -> Engine {
-        Engine::new(EngineConfig::new(coffee_lake()).with_prefetch(prefetch).with_huge_pages(true))
-    }
-
-    /// Sequential aligned 32 B loads over `bytes` of memory.
-    fn seq_loads(bytes: u64) -> impl Iterator<Item = Access> {
-        (0..bytes / 32).map(|i| Access::new(i * 32, Op::Load, 32, (i % 32) as u32))
-    }
-
-    /// `n` concurrent strides covering `bytes` total, grouped arrangement,
-    /// 32 unroll slots. Stride spans use an odd line count so concurrent
-    /// streams spread over cache sets (the non-power-of-two §4 setup).
-    fn strided_loads(bytes: u64, n: u64) -> Vec<Access> {
-        let stride_bytes = ((bytes / n / 64) | 1) * 64;
-        let per = stride_bytes / 32; // vectors per stride
-        let unrolls_per_stride = 32 / n.min(32);
-        let mut out = Vec::new();
-        let mut pos = 0u64;
-        while pos < per {
-            for s in 0..n {
-                for u in 0..unrolls_per_stride {
-                    if pos + u < per {
-                        let ip = (s * unrolls_per_stride + u) as u32;
-                        out.push(Access::new(s * stride_bytes + (pos + u) * 32, Op::Load, 32, ip));
-                    }
-                }
-            }
-            pos += unrolls_per_stride;
-        }
-        out
-    }
-
-    const MIB: u64 = 1 << 20;
-
-    #[test]
-    fn sequential_read_beats_prefetch_off() {
-        let bytes = 8 * MIB;
-        let mut on = engine(true);
-        let r_on = on.run(seq_loads(bytes));
-        let mut off = engine(false);
-        let r_off = off.run(seq_loads(bytes));
-        assert!(
-            r_on.throughput_gib() > r_off.throughput_gib() * 1.2,
-            "prefetch on {:.2} GiB/s must beat off {:.2} GiB/s",
-            r_on.throughput_gib(),
-            r_off.throughput_gib()
-        );
-    }
-
-    #[test]
-    fn multi_stride_beats_single_stride_with_prefetch() {
-        let bytes = 16 * MIB;
-        let mut e1 = engine(true);
-        let r1 = e1.run(strided_loads(bytes, 1));
-        let mut e8 = engine(true);
-        let r8 = e8.run(strided_loads(bytes, 8));
-        assert!(
-            r8.throughput_gib() > r1.throughput_gib() * 1.1,
-            "8 strides {:.2} must beat 1 stride {:.2}",
-            r8.throughput_gib(),
-            r1.throughput_gib()
-        );
-    }
-
-    #[test]
-    fn multi_stride_does_not_help_without_prefetch() {
-        let bytes = 16 * MIB;
-        let mut e1 = engine(false);
-        let r1 = e1.run(strided_loads(bytes, 1));
-        let mut e8 = engine(false);
-        let r8 = e8.run(strided_loads(bytes, 8));
-        assert!(
-            r8.throughput_gib() <= r1.throughput_gib() * 1.05,
-            "without prefetch 8 strides {:.2} must not beat 1 stride {:.2}",
-            r8.throughput_gib(),
-            r1.throughput_gib()
-        );
-    }
-
-    #[test]
-    fn l1_hit_ratio_is_half_for_streaming_reads() {
-        let mut e = engine(true);
-        let r = e.run(seq_loads(8 * MIB));
-        let ratio = r.l1.hit_ratio();
-        assert!(
-            (ratio - 0.5).abs() < 0.02,
-            "Figure 4: L1 hit ratio pinned at 0.5, got {ratio:.3}"
-        );
-    }
-
-    #[test]
-    fn l2_hit_ratio_rises_with_strides() {
-        let bytes = 16 * MIB;
-        let mut e1 = engine(true);
-        let r1 = e1.run(strided_loads(bytes, 1));
-        let mut e16 = engine(true);
-        let r16 = e16.run(strided_loads(bytes, 16));
-        assert!(
-            r16.l2.hit_ratio() > r1.l2.hit_ratio() + 0.1,
-            "L2 hit ratio must rise: 1-stride {:.3} vs 16-stride {:.3}",
-            r1.l2.hit_ratio(),
-            r16.l2.hit_ratio()
-        );
-    }
-
-    #[test]
-    fn prefetch_off_zeroes_l2_l3_hit_ratio() {
-        let mut e = engine(false);
-        let r = e.run(seq_loads(8 * MIB));
-        assert!(r.l2.hit_ratio() < 0.05, "no reuse, no prefetch => no L2 hits");
-        assert!(r.l3.hit_ratio() < 0.05);
-    }
-
-    #[test]
-    fn counters_satisfy_subset_invariant() {
-        for pf in [false, true] {
-            for n in [1, 4, 16] {
-                let mut e = engine(pf);
-                let r = e.run(strided_loads(8 * MIB, n));
-                assert!(r.counters.subset_invariant_holds(), "pf={pf} n={n}: {:?}", r.counters);
-            }
-        }
-    }
-
-    #[test]
-    fn stores_consume_write_bandwidth() {
-        // Footprint must dwarf the 12 MiB L3 so most dirty lines actually
-        // write back (at 60 MiB, ~80% of lines are evicted dirty).
-        let bytes = 60 * MIB;
-        let mut e = engine(true);
-        let loads = e.run(seq_loads(bytes)).throughput_gib();
-        let mut e2 = engine(true);
-        let stores = e2
-            .run((0..bytes / 32).map(|i| Access::new(i * 32, Op::Store, 32, (i % 32) as u32)))
-            .throughput_gib();
-        assert!(
-            stores < loads * 0.85,
-            "RFO+writeback store stream {stores:.2} must trail read stream {loads:.2}"
-        );
-    }
-
-    #[test]
-    fn nt_store_grouped_beats_interleaved_many_strides() {
-        let bytes = 8 * MIB;
-        let n = 16u64;
-        let per = bytes / n; // bytes per stride
-        // Grouped: finish each line before next stride touches anything.
-        let mut grouped = Vec::new();
-        let mut interleaved = Vec::new();
-        let vectors_per_stride = per / 32;
-        for v in 0..vectors_per_stride {
-            for s in 0..n {
-                interleaved.push(Access::new(s * per + v * 32, Op::StoreNt, 32, s as u32));
-            }
-        }
-        for chunk in 0..vectors_per_stride / 2 {
-            for s in 0..n {
-                for half in 0..2u64 {
-                    grouped.push(Access::new(
-                        s * per + chunk * 64 + half * 32,
-                        Op::StoreNt,
-                        32,
-                        s as u32,
-                    ));
-                }
-            }
-        }
-        let mut eg = engine(true);
-        let tg = eg.run(grouped).throughput_gib();
-        let mut ei = engine(true);
-        let ti = ei.run(interleaved).throughput_gib();
-        assert!(
-            tg > ti * 2.0,
-            "grouped NT {tg:.2} GiB/s must dwarf interleaved NT {ti:.2} GiB/s (write-combining)"
-        );
-    }
-
-    #[test]
-    fn unaligned_loads_slightly_slower() {
-        let bytes = 8 * MIB;
-        let mut ea = engine(true);
-        let ta = ea.run(seq_loads(bytes)).throughput_gib();
-        let mut eu = engine(true);
-        let tu = eu
-            .run((0..bytes / 32 - 1).map(|i| Access::new(i * 32 + 4, Op::LoadU, 32, (i % 32) as u32)))
-            .throughput_gib();
-        assert!(tu < ta, "unaligned {tu:.2} must trail aligned {ta:.2}");
-        assert!(tu > ta * 0.7, "but not by much");
-    }
-
-    #[test]
-    fn throughput_below_model_roofline() {
-        let m = coffee_lake();
-        let mut e = engine(true);
-        let r = e.run(strided_loads(16 * MIB, 16));
-        assert!(r.throughput_gib() <= m.model_peak_gib() * 1.001);
-    }
-
-    #[test]
-    fn warmup_then_measure_keeps_cache_state() {
-        let mut e = engine(true);
-        // Warm with the first 4 MiB...
-        e.warmup(seq_loads(4 * MIB));
-        // ...measure re-reading the same 4 MiB minus what L3 can hold: the
-        // first 12 MiB fit nowhere fully, but re-reading 4 MiB after warmup
-        // finds a good chunk in L3 (12 MiB L3, nothing else touched).
-        let r = e.run(seq_loads(4 * MIB));
-        assert!(
-            r.l3.hit_ratio() > 0.5,
-            "warm L3 must serve re-read, ratio {:.3}",
-            r.l3.hit_ratio()
-        );
-    }
-
-    #[test]
-    fn reset_restores_cold_state() {
-        let mut e = engine(true);
-        e.run(seq_loads(MIB));
-        e.reset();
-        let r = e.run(seq_loads(MIB));
-        assert_eq!(r.l3.hit_ratio(), 0.0, "cold again after reset");
     }
 }

@@ -1,0 +1,362 @@
+//! Fill stage: everything outstanding between the core and DRAM.
+//!
+//! Demand misses and prefetches enter an **in-flight map** keyed by line
+//! address. A later demand to an in-flight line **merges**: it completes
+//! when the fill lands. Demand misses additionally occupy a **line-fill
+//! buffer**; with all `lfb_entries` occupied a new miss waits for the
+//! earliest outstanding fill. Completed fills are *harvested lazily* —
+//! handed back to the engine the next time the line is touched, plus
+//! periodic bounded sweeps — which is exact for a single-core trace.
+//!
+//! The tracker also carries the per-stream outstanding-prefetch budgets the
+//! L2 streamer consults (cleaned amortized, every 32 observations).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-shift hasher for line-address keys (§Perf: the inflight map is
+/// on the hot path; SipHash costs ~3× more than the whole lookup).
+#[derive(Default)]
+pub struct LineHasher(u64);
+
+impl Hasher for LineHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        }
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        let h = v.wrapping_mul(0x9e3779b97f4a7c15);
+        self.0 = h ^ (h >> 29);
+    }
+}
+
+/// Hot-path map from line address to value.
+pub type LineMap<V> = HashMap<u64, V, BuildHasherDefault<LineHasher>>;
+
+/// Where a fill is headed once it lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FillDest {
+    /// Demand fill: installs L1 + L2 + L3.
+    Demand,
+    /// Streamer prefetch: installs L2 + L3.
+    PrefetchL2,
+    /// DCU prefetch: installs L1 (+L2).
+    PrefetchL1,
+}
+
+/// One outstanding line transfer. (The originating stream slot is not
+/// recorded here: per-stream budget accounting lives in the tracker's
+/// `stream_outstanding` table, charged at insert time.)
+#[derive(Debug, Clone, Copy)]
+pub struct Fill {
+    /// Completion time in ticks.
+    pub complete_ticks: u64,
+    pub dest: FillDest,
+    /// Store intent (RFO): install dirty.
+    pub dirty: bool,
+    /// A demand access already merged with this fill. Subsequent demands to
+    /// the same line are *fill-buffer hits* and count as L1 hits — the
+    /// mechanism behind Figure 4's 0.5 L1 ratio (first half of each line
+    /// misses, second half hits the LFB).
+    pub demanded: bool,
+}
+
+/// Outcome of merging a demand access with an in-flight fill.
+#[derive(Debug, Clone, Copy)]
+pub struct Merge {
+    pub complete_ticks: u64,
+    pub dest: FillDest,
+    /// The fill had already absorbed a demand before this one.
+    pub already_demanded: bool,
+}
+
+/// In-flight map + LFB occupancy + per-stream budgets + lazy harvest.
+pub struct FillTracker {
+    /// In-flight fills keyed by line address.
+    inflight: LineMap<Fill>,
+    /// Outstanding *demand* fill completion times (ticks).
+    lfb: Vec<u64>,
+    lfb_entries: usize,
+    /// Outstanding prefetch completion ticks per streamer slot.
+    stream_outstanding: Vec<Vec<u64>>,
+    /// Accesses since the last completed-fill sweep.
+    sweep_counter: u32,
+    /// Observations since the last outstanding-prefetch cleanup.
+    clean_counter: u32,
+}
+
+/// Bounded lazy sweep period in accesses.
+const SWEEP_PERIOD: u32 = 512;
+/// Outstanding-prefetch cleanup period in L2 observations.
+const CLEAN_PERIOD: u32 = 32;
+
+impl FillTracker {
+    pub fn new(lfb_entries: u32, stream_slots: u32) -> Self {
+        Self {
+            inflight: LineMap::with_capacity_and_hasher(1024, Default::default()),
+            lfb: Vec::with_capacity(lfb_entries as usize + 1),
+            lfb_entries: lfb_entries as usize,
+            stream_outstanding: vec![Vec::new(); stream_slots as usize],
+            sweep_counter: 0,
+            clean_counter: 0,
+        }
+    }
+
+    /// Is any transfer outstanding for `line`?
+    pub fn is_inflight(&self, line: u64) -> bool {
+        self.inflight.contains_key(&line)
+    }
+
+    /// Harvest the fill for `line` if it has completed by `t`.
+    pub fn take_completed(&mut self, line: u64, t: u64) -> Option<Fill> {
+        let f = self.inflight.get(&line).copied()?;
+        if f.complete_ticks <= t {
+            self.inflight.remove(&line);
+            Some(f)
+        } else {
+            None
+        }
+    }
+
+    /// Merge a demand access into the in-flight fill for `line`, if any:
+    /// the fill absorbs store intent and records that a demand touched it.
+    pub fn merge_demand(&mut self, line: u64, is_store: bool) -> Option<Merge> {
+        let f = self.inflight.get_mut(&line)?;
+        let m = Merge {
+            complete_ticks: f.complete_ticks,
+            dest: f.dest,
+            already_demanded: f.demanded,
+        };
+        f.dirty |= is_store;
+        f.demanded = true;
+        Some(m)
+    }
+
+    /// Acquire a line-fill buffer for a demand miss wanting to start at
+    /// `t`: with all entries occupied, the miss waits for the earliest
+    /// outstanding fill. Returns the effective start time.
+    pub fn lfb_acquire(&mut self, t: u64) -> u64 {
+        if self.lfb.len() < self.lfb_entries {
+            return t;
+        }
+        let (idx, &earliest) =
+            self.lfb.iter().enumerate().min_by_key(|(_, &c)| c).expect("lfb non-empty");
+        self.lfb.swap_remove(idx);
+        earliest.max(t)
+    }
+
+    /// Record a demand fill completing at `complete` ticks.
+    pub fn insert_demand(&mut self, line: u64, complete: u64, dirty: bool) {
+        self.lfb.push(complete);
+        self.inflight.insert(
+            line,
+            Fill { complete_ticks: complete, dest: FillDest::Demand, dirty, demanded: true },
+        );
+    }
+
+    /// Record an L1 (DCU) prefetch completing at `complete` ticks.
+    pub fn insert_prefetch_l1(&mut self, line: u64, complete: u64) {
+        self.inflight.insert(
+            line,
+            Fill {
+                complete_ticks: complete,
+                dest: FillDest::PrefetchL1,
+                dirty: false,
+                demanded: false,
+            },
+        );
+    }
+
+    /// Record an L2 (streamer/adjacent) prefetch completing at `complete`
+    /// ticks, charged against the stream slot's outstanding budget.
+    pub fn insert_prefetch_l2(&mut self, line: u64, complete: u64, stream: u32) {
+        if let Some(slot) = self.stream_outstanding.get_mut(stream as usize) {
+            slot.push(complete);
+        }
+        self.inflight.insert(
+            line,
+            Fill {
+                complete_ticks: complete,
+                dest: FillDest::PrefetchL2,
+                dirty: false,
+                demanded: false,
+            },
+        );
+    }
+
+    /// Live outstanding prefetches for a stream slot at time `t`.
+    pub fn outstanding(&self, slot: u32, t: u64) -> u32 {
+        self.stream_outstanding
+            .get(slot as usize)
+            .map_or(0, |v| v.iter().filter(|&&c| c > t).count() as u32)
+    }
+
+    /// Amortized cleanup of completed outstanding entries so budgets free
+    /// up — §Perf: every [`CLEAN_PERIOD`] observations instead of per-
+    /// observation; [`FillTracker::outstanding`] counts live entries
+    /// exactly regardless.
+    pub fn maybe_clean_outstanding(&mut self, t: u64) {
+        self.clean_counter += 1;
+        if self.clean_counter >= CLEAN_PERIOD {
+            self.clean_counter = 0;
+            for s in &mut self.stream_outstanding {
+                s.retain(|&c| c > t);
+            }
+        }
+    }
+
+    /// Advance the lazy-sweep counter; `true` once per [`SWEEP_PERIOD`]
+    /// accesses, telling the engine to run [`FillTracker::collect_completed`].
+    pub fn tick_sweep(&mut self) -> bool {
+        self.sweep_counter += 1;
+        if self.sweep_counter >= SWEEP_PERIOD {
+            self.sweep_counter = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove every fill completed by `t`, appending them to `landed` for
+    /// the engine to install.
+    pub fn collect_completed(&mut self, t: u64, landed: &mut Vec<(u64, Fill)>) {
+        self.inflight.retain(|&line, f| {
+            if f.complete_ticks <= t {
+                landed.push((line, *f));
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Nothing in flight (post-fence invariant).
+    pub fn is_empty(&self) -> bool {
+        self.inflight.is_empty()
+    }
+
+    /// Shift all timestamps down by `t0` (warmup-then-measure rebase).
+    pub fn rebase(&mut self, t0: u64) {
+        for f in self.inflight.values_mut() {
+            f.complete_ticks = f.complete_ticks.saturating_sub(t0);
+        }
+        for l in &mut self.lfb {
+            *l = l.saturating_sub(t0);
+        }
+        for s in &mut self.stream_outstanding {
+            for t in s.iter_mut() {
+                *t = t.saturating_sub(t0);
+            }
+        }
+    }
+
+    /// Cold state; optionally resize the stream-slot table (engine reuse
+    /// under a different streamer configuration).
+    pub fn reset(&mut self, stream_slots: u32) {
+        self.inflight.clear();
+        self.lfb.clear();
+        if self.stream_outstanding.len() != stream_slots as usize {
+            self.stream_outstanding.resize(stream_slots as usize, Vec::new());
+        }
+        for s in &mut self.stream_outstanding {
+            s.clear();
+        }
+        self.sweep_counter = 0;
+        self.clean_counter = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lfb_gate_waits_for_earliest_when_full() {
+        let mut f = FillTracker::new(2, 4);
+        f.insert_demand(1, 100, false);
+        f.insert_demand(2, 60, false);
+        // Pool full: the next miss at t=10 waits for the earliest (60).
+        assert_eq!(f.lfb_acquire(10), 60);
+        // One slot was freed by the acquire.
+        assert_eq!(f.lfb_acquire(10), 10);
+    }
+
+    #[test]
+    fn lfb_gate_passes_through_when_free() {
+        let mut f = FillTracker::new(2, 4);
+        assert_eq!(f.lfb_acquire(42), 42);
+    }
+
+    #[test]
+    fn merge_accumulates_store_intent_and_demand() {
+        let mut f = FillTracker::new(8, 4);
+        f.insert_prefetch_l2(7, 500, 0);
+        let m1 = f.merge_demand(7, false).unwrap();
+        assert_eq!(m1.dest, FillDest::PrefetchL2);
+        assert!(!m1.already_demanded);
+        let m2 = f.merge_demand(7, true).unwrap();
+        assert!(m2.already_demanded, "second demand sees the first");
+        let fill = f.take_completed(7, 500).unwrap();
+        assert!(fill.dirty, "RFO merge marked the fill dirty");
+        assert!(fill.demanded);
+    }
+
+    #[test]
+    fn take_completed_respects_time() {
+        let mut f = FillTracker::new(8, 4);
+        f.insert_demand(3, 100, false);
+        assert!(f.take_completed(3, 99).is_none());
+        assert!(f.is_inflight(3));
+        assert!(f.take_completed(3, 100).is_some());
+        assert!(!f.is_inflight(3));
+    }
+
+    #[test]
+    fn outstanding_counts_only_live_entries() {
+        let mut f = FillTracker::new(8, 4);
+        f.insert_prefetch_l2(1, 50, 2);
+        f.insert_prefetch_l2(2, 150, 2);
+        assert_eq!(f.outstanding(2, 100), 1);
+        assert_eq!(f.outstanding(2, 10), 2);
+        assert_eq!(f.outstanding(2, 200), 0);
+        // Out-of-range slot is an empty budget.
+        assert_eq!(f.outstanding(99, 0), 0);
+    }
+
+    #[test]
+    fn collect_completed_drains_landed_fills() {
+        let mut f = FillTracker::new(8, 4);
+        f.insert_demand(1, 10, false);
+        f.insert_demand(2, 99, false);
+        let mut landed = Vec::new();
+        f.collect_completed(50, &mut landed);
+        assert_eq!(landed.len(), 1);
+        assert_eq!(landed[0].0, 1);
+        assert!(f.is_inflight(2));
+        landed.clear();
+        f.collect_completed(u64::MAX, &mut landed);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn sweep_ticks_once_per_period() {
+        let mut f = FillTracker::new(8, 4);
+        let fired = (0..2 * SWEEP_PERIOD).filter(|_| f.tick_sweep()).count();
+        assert_eq!(fired, 2);
+    }
+
+    #[test]
+    fn reset_resizes_stream_table() {
+        let mut f = FillTracker::new(8, 4);
+        f.insert_prefetch_l2(1, 50, 2);
+        f.reset(6);
+        assert_eq!(f.outstanding(2, 0), 0);
+        assert_eq!(f.outstanding(5, 0), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! The modeled cache/DRAM hierarchy and its fill-installation rules.
+//!
+//! Owns the three cache levels and the DRAM device, and implements the
+//! install paths shared by demand fills, prefetch fills and the lazy
+//! sweep: inclusive-LLC back-invalidation, dirty write-back chaining
+//! (L1 → L2 → L3 → DRAM), and the eager-install rule for streamer
+//! prefetches (handled by the engine; see [`super::engine`]).
+
+use crate::config::MachineConfig;
+use crate::mem::dram::DramOp;
+use crate::mem::{Cache, Dram};
+
+use super::fills::{Fill, FillDest};
+use super::TICKS;
+
+/// L1 + L2 + L3 + DRAM with the install/write-back rules between them.
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+    pub l3: Cache,
+    pub dram: Dram,
+}
+
+impl Hierarchy {
+    pub fn new(m: &MachineConfig) -> Self {
+        Self {
+            l1: Cache::new(m.l1),
+            l2: Cache::new(m.l2),
+            l3: Cache::new(m.l3),
+            dram: Dram::new(m.dram),
+        }
+    }
+
+    /// Install a landed fill into the hierarchy. `wb_ticks` is the current
+    /// retirement time, used to schedule victim write-backs.
+    pub fn install(&mut self, line: u64, f: Fill, wb_ticks: u64) {
+        match f.dest {
+            FillDest::Demand => {
+                self.fill_l3(line, wb_ticks);
+                self.fill_l2(line, false, false);
+                self.fill_l1(line, f.dirty);
+            }
+            FillDest::PrefetchL2 => {
+                // `dirty` set when an RFO merged with this prefetch.
+                self.fill_l3_prefetch(line, wb_ticks);
+                self.fill_l2(line, true, f.dirty);
+            }
+            FillDest::PrefetchL1 => {
+                self.fill_l2(line, true, false);
+                self.fill_l1(line, f.dirty);
+            }
+        }
+    }
+
+    pub fn fill_l1(&mut self, line: u64, dirty: bool) {
+        if let Some(ev) = self.l1.insert(line, false, dirty) {
+            if ev.dirty {
+                // Write-back to L2 (present under inclusion; mark dirty).
+                self.l2.mark_dirty(ev.line);
+            }
+        }
+    }
+
+    pub fn fill_l2(&mut self, line: u64, prefetch: bool, dirty: bool) {
+        if let Some(ev) = self.l2.insert(line, prefetch, dirty) {
+            if ev.dirty {
+                self.l3.mark_dirty(ev.line);
+            }
+        }
+    }
+
+    pub fn fill_l3(&mut self, line: u64, wb_ticks: u64) {
+        self.fill_l3_inner(line, false, wb_ticks);
+    }
+
+    pub fn fill_l3_prefetch(&mut self, line: u64, wb_ticks: u64) {
+        self.fill_l3_inner(line, true, wb_ticks);
+    }
+
+    fn fill_l3_inner(&mut self, line: u64, prefetch: bool, wb_ticks: u64) {
+        if let Some(ev) = self.l3.insert(line, prefetch, false) {
+            // Inclusive LLC: back-invalidate inner levels.
+            let mut dirty = ev.dirty;
+            dirty |= self.l1.invalidate(ev.line);
+            dirty |= self.l2.invalidate(ev.line);
+            if dirty {
+                // Victim write-back consumes a DRAM service slot.
+                self.dram.access(wb_ticks / TICKS, ev.line, DramOp::WriteLine);
+            }
+        }
+    }
+
+    /// Cold state, keeping all allocations.
+    pub fn reset(&mut self) {
+        self.l1.reset();
+        self.l2.reset();
+        self.l3.reset();
+        self.dram.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+
+    #[test]
+    fn demand_install_lands_in_all_levels() {
+        let mut h = Hierarchy::new(&coffee_lake());
+        let f = Fill { complete_ticks: 0, dest: FillDest::Demand, dirty: false, demanded: true };
+        h.install(7, f, 0);
+        assert!(h.l1.contains(7) && h.l2.contains(7) && h.l3.contains(7));
+    }
+
+    #[test]
+    fn l2_prefetch_install_skips_l1() {
+        let mut h = Hierarchy::new(&coffee_lake());
+        let f =
+            Fill { complete_ticks: 0, dest: FillDest::PrefetchL2, dirty: false, demanded: false };
+        h.install(7, f, 0);
+        assert!(!h.l1.contains(7) && h.l2.contains(7) && h.l3.contains(7));
+    }
+}

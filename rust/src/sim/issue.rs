@@ -1,0 +1,175 @@
+//! Issue stage: the core front end of the pipeline.
+//!
+//! * An **issue cursor** advances by the issue cost per vector access.
+//! * Access *i* may not issue before access *i − W* has retired
+//!   (out-of-order window of `window_accesses`) — the window gate.
+//! * Retirement is in-order: `retire(i) = max(retire(i−1), data_ready(i))`.
+//!   The gap between consecutive retirements beyond the issue cost is the
+//!   raw material of stall attribution ([`super::stalls`]).
+
+use std::collections::VecDeque;
+
+use super::TICKS;
+
+/// Issue cursor + out-of-order window + in-order retirement.
+pub struct IssueUnit {
+    /// Out-of-order window in accesses.
+    window: usize,
+    /// Ticks consumed per access by the issue ports.
+    issue_cost: u64,
+    /// Issue cursor in ticks.
+    cursor: u64,
+    /// Last in-order retirement time (ticks).
+    last_retire: u64,
+    /// Retirement times (ticks) of the last `window` accesses.
+    retire_ring: VecDeque<u64>,
+}
+
+impl IssueUnit {
+    pub fn new(window_accesses: u32, issue_per_cycle: u32) -> Self {
+        Self {
+            window: window_accesses as usize,
+            issue_cost: TICKS / issue_per_cycle as u64,
+            cursor: 0,
+            last_retire: 0,
+            retire_ring: VecDeque::with_capacity(window_accesses as usize + 1),
+        }
+    }
+
+    /// Ticks one access occupies the issue ports.
+    pub fn issue_cost(&self) -> u64 {
+        self.issue_cost
+    }
+
+    /// Last in-order retirement time (ticks).
+    pub fn last_retire(&self) -> u64 {
+        self.last_retire
+    }
+
+    /// Current issue-cursor position (ticks), ungated.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Issue time of the next access: the cursor, gated by the out-of-order
+    /// window (the access `window` positions back must have retired).
+    pub fn next_issue(&self) -> u64 {
+        let mut t = self.cursor;
+        if self.retire_ring.len() >= self.window {
+            let gate = self.retire_ring[self.retire_ring.len() - self.window];
+            if gate > t {
+                t = gate;
+            }
+        }
+        t
+    }
+
+    /// Retire an access issued at `t_issue` whose data is ready at
+    /// `data_ready`. Returns the stall ticks its retirement gap left beyond
+    /// the issue cost (0 when retirement kept pace with issue).
+    pub fn retire(&mut self, t_issue: u64, data_ready: u64) -> u64 {
+        let retire = data_ready.max(self.last_retire);
+        let gap = retire - self.last_retire;
+        let stall_ticks = gap.saturating_sub(self.issue_cost);
+        self.last_retire = retire;
+        self.retire_ring.push_back(retire);
+        if self.retire_ring.len() > self.window {
+            self.retire_ring.pop_front();
+        }
+        self.cursor = t_issue + self.issue_cost;
+        stall_ticks
+    }
+
+    /// Force the retirement cursor forward (a fence waiting on outstanding
+    /// work). Does not touch the window ring or the issue cursor.
+    pub fn force_retire(&mut self, t: u64) {
+        self.last_retire = t;
+    }
+
+    /// Rebase all internal timestamps so the current cursor becomes t = 0
+    /// (the warmup-then-measure protocol). Returns the subtracted offset.
+    pub fn rebase(&mut self) -> u64 {
+        let t0 = self.cursor;
+        self.cursor = 0;
+        self.last_retire = self.last_retire.saturating_sub(t0);
+        for r in &mut self.retire_ring {
+            *r = r.saturating_sub(t0);
+        }
+        t0
+    }
+
+    /// Cold state, keeping the configuration.
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+        self.last_retire = 0;
+        self.retire_ring.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(window: u32) -> IssueUnit {
+        IssueUnit::new(window, 2) // issue cost = 2 ticks
+    }
+
+    #[test]
+    fn cursor_advances_by_issue_cost() {
+        let mut u = unit(4);
+        assert_eq!(u.next_issue(), 0);
+        u.retire(0, 0);
+        assert_eq!(u.next_issue(), 2);
+        u.retire(2, 2);
+        assert_eq!(u.next_issue(), 4);
+    }
+
+    #[test]
+    fn window_gates_issue_on_oldest_unretired() {
+        let mut u = unit(2);
+        // Two slow accesses retire far in the future.
+        u.retire(0, 100);
+        u.retire(2, 200);
+        // The next access may not issue before access (i-2) retired at 100.
+        assert_eq!(u.next_issue(), 100.max(u.cursor()));
+    }
+
+    #[test]
+    fn retirement_is_in_order() {
+        let mut u = unit(8);
+        u.retire(0, 50);
+        // Data ready earlier than the previous retirement still retires
+        // after it (in-order).
+        u.retire(2, 10);
+        assert_eq!(u.last_retire(), 50);
+    }
+
+    #[test]
+    fn stall_ticks_exclude_issue_cost() {
+        let mut u = unit(8);
+        // Gap of 10 ticks, issue cost 2: 8 stall ticks.
+        assert_eq!(u.retire(0, 10), 8);
+        // Back-to-back retirement at the issue rate: no stall.
+        assert_eq!(u.retire(2, 10), 0);
+        assert_eq!(u.retire(4, 12), 0);
+    }
+
+    #[test]
+    fn rebase_shifts_everything() {
+        let mut u = unit(4);
+        u.retire(0, 40);
+        let t0 = u.rebase();
+        assert_eq!(t0, 2);
+        assert_eq!(u.cursor(), 0);
+        assert_eq!(u.last_retire(), 38);
+    }
+
+    #[test]
+    fn reset_restores_cold_state() {
+        let mut u = unit(4);
+        u.retire(0, 100);
+        u.reset();
+        assert_eq!(u.next_issue(), 0);
+        assert_eq!(u.last_retire(), 0);
+    }
+}

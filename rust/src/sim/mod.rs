@@ -1,4 +1,5 @@
-//! The timestamp-driven memory-subsystem simulator.
+//! The timestamp-driven memory-subsystem simulator, structured as a
+//! layered pipeline.
 //!
 //! [`engine::Engine`] consumes an [`crate::trace::Access`] stream and plays
 //! it against the modeled hierarchy ([`crate::mem`]) and prefetch engines
@@ -12,9 +13,107 @@
 //! through a bandwidth-limited service cursor. This keeps full-footprint
 //! runs (millions of vector accesses per configuration) in the tens of
 //! milliseconds while preserving the structural effects the paper measures.
+//!
+//! ## Pipeline stages
+//!
+//! Each access flows **issue → fill → stall**, one module per stage:
+//!
+//! * [`issue`] — the core front end: the issue cursor, the out-of-order
+//!   window gate, and in-order retirement. Produces, per access, its issue
+//!   time and the retirement gap left over after the issue cost.
+//! * [`fills`] — everything outstanding: the in-flight fill map keyed by
+//!   line address, line-fill-buffer occupancy for demand misses, per-stream
+//!   prefetch budgets, and the bounded lazy harvest of landed fills.
+//! * [`stalls`] — stall attribution: retirement gaps are charged to the
+//!   deepest level the blocking access reached, emulating the
+//!   `CYCLE_ACTIVITY.STALLS_*` event family ([`counters`]).
+//! * [`engine`] — the orchestrator: owns the cache/TLB/DRAM models and the
+//!   [`crate::prefetch::PrefetchEngine`] set, and walks each access through
+//!   the stages above.
+//!
+//! Traces stay fully streaming end to end: [`Engine::run`] takes any
+//! `IntoIterator<Item = Access>` ([`crate::trace::TraceCursor`],
+//! [`crate::kernels::micro::MicroBench::trace`], …) and never materializes
+//! a `Vec<Access>`.
+//!
+//! Engines are reusable across runs: [`Engine::reset`] restores cold state
+//! bit-identically to a fresh construction, and [`Engine::prepare`]
+//! additionally applies a new [`EngineConfig`] while keeping the existing
+//! cache/TLB/DRAM allocations — the [`crate::coordinator`] sweeps lean on
+//! this to avoid rebuilding the hierarchy for every sweep point.
 
 pub mod counters;
 pub mod engine;
+pub mod fills;
+pub mod hierarchy;
+pub mod issue;
+pub mod stalls;
 
+// Only the orchestration surface is re-exported; the pipeline-stage types
+// stay behind their modules (`sim::fills`, `sim::issue`, …) so external
+// code does not couple to the decomposition's internals.
 pub use counters::Counters;
-pub use engine::{Engine, EngineConfig, RunResult};
+pub use engine::Engine;
+
+use crate::config::MachineConfig;
+use crate::prefetch::PrefetchConfig;
+
+/// Ticks per core cycle (issue-slot resolution): time advances in
+/// *ticks* = 1/4 core cycle so a 2-accesses-per-cycle issue rate is
+/// expressible exactly.
+pub const TICKS: u64 = 4;
+
+/// Engine construction parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineConfig {
+    /// The simulated machine (caches, DRAM, prefetchers, core limits).
+    pub machine: MachineConfig,
+    /// Prefetch configuration — override of `machine.prefetch`, so the
+    /// MSR-style enable bit can be flipped per run.
+    pub prefetch: PrefetchConfig,
+    /// Use huge pages for address translation (the paper's §4 setting).
+    pub huge_pages: bool,
+}
+
+impl EngineConfig {
+    pub fn new(machine: MachineConfig) -> Self {
+        Self { machine, prefetch: machine.prefetch, huge_pages: false }
+    }
+
+    pub fn with_prefetch(mut self, enabled: bool) -> Self {
+        self.prefetch.enabled = enabled;
+        self
+    }
+
+    pub fn with_huge_pages(mut self, huge: bool) -> Self {
+        self.huge_pages = huge;
+        self
+    }
+}
+
+/// Result of one simulated run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub counters: Counters,
+    pub l1: crate::mem::cache::CacheStats,
+    pub l2: crate::mem::cache::CacheStats,
+    pub l3: crate::mem::cache::CacheStats,
+    pub dram: crate::mem::dram::DramStats,
+    pub wc: crate::mem::writebuffer::WcStats,
+    pub tlb: crate::mem::tlb::TlbStats,
+    pub streamer: crate::prefetch::streamer::StreamerStats,
+    /// Locked frequency the cycle counts convert with.
+    pub freq_ghz: f64,
+}
+
+impl RunResult {
+    /// Achieved throughput over the run in GiB/s (the paper's unit:
+    /// gigibytes of *program data* moved per second).
+    pub fn throughput_gib(&self) -> f64 {
+        if self.counters.cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.counters.cycles as f64 / (self.freq_ghz * 1e9);
+        self.counters.bytes() as f64 / (1u64 << 30) as f64 / secs
+    }
+}

@@ -1,0 +1,137 @@
+//! Stall stage: attribution of retirement gaps to the memory hierarchy.
+//!
+//! Each retirement gap beyond the issue cost (from [`super::issue`]) is
+//! charged to the deepest level the blocking access had to reach,
+//! mirroring the subset semantics of the `CYCLE_ACTIVITY.STALLS_*` events
+//! (`STALLS_L3_MISS ⊆ STALLS_L2_MISS ⊆ STALLS_L1D_MISS ⊆ MEM_ANY ⊆
+//! TOTAL`) — see [`super::counters`].
+
+use super::counters::Counters;
+use super::TICKS;
+
+/// Deepest level a demand access had to reach (for stall attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Depth {
+    L1Hit,
+    L2Hit,
+    L3Hit,
+    Dram,
+}
+
+/// Stall attribution and `perf`-style counter emulation. Owns the run's
+/// [`Counters`]; the engine funnels every event through here.
+#[derive(Debug, Default)]
+pub struct StallModel {
+    counters: Counters,
+}
+
+impl StallModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    /// Mutable access for events recorded outside this stage (prefetch
+    /// issue counts, DRAM demand lines, merges).
+    pub fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+
+    /// Account one retired access and its data movement.
+    pub fn record_access(&mut self, is_store: bool, size: u32) {
+        self.counters.accesses += 1;
+        if is_store {
+            self.counters.bytes_written += size as u64;
+        } else {
+            self.counters.bytes_read += size as u64;
+        }
+    }
+
+    /// Account added TLB translation cycles.
+    pub fn record_tlb(&mut self, cycles: u64) {
+        self.counters.tlb_cycles += cycles;
+    }
+
+    /// Attribute a retirement gap (`stall_ticks`, already net of the issue
+    /// cost) to the deepest level the blocking access reached.
+    pub fn attribute(&mut self, depth: Depth, stall_ticks: u64) {
+        if stall_ticks == 0 {
+            return;
+        }
+        let stall = stall_ticks / TICKS;
+        self.counters.stalls_total += stall;
+        self.counters.stalls_mem_any += stall;
+        match depth {
+            Depth::L1Hit => {}
+            Depth::L2Hit => self.counters.stalls_l1d_miss += stall,
+            Depth::L3Hit => {
+                self.counters.stalls_l1d_miss += stall;
+                self.counters.stalls_l2_miss += stall;
+            }
+            Depth::Dram => {
+                self.counters.stalls_l1d_miss += stall;
+                self.counters.stalls_l2_miss += stall;
+                self.counters.stalls_l3_miss += stall;
+            }
+        }
+    }
+
+    /// Account the closing-fence wait (`done` − `last_retire`) as memory
+    /// stall without a level attribution.
+    pub fn record_fence_wait(&mut self, last_retire: u64, done: u64) {
+        if done > last_retire {
+            let stall = (done - last_retire) / TICKS;
+            self.counters.stalls_total += stall;
+            self.counters.stalls_mem_any += stall;
+        }
+    }
+
+    /// Snapshot the counters with the final cycle count filled in.
+    pub fn snapshot(&self, last_retire_ticks: u64) -> Counters {
+        let mut c = self.counters;
+        c.cycles = last_retire_ticks / TICKS;
+        c
+    }
+
+    pub fn reset(&mut self) {
+        self.counters = Counters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_invariant_by_construction() {
+        let mut s = StallModel::new();
+        s.attribute(Depth::Dram, 40);
+        s.attribute(Depth::L2Hit, 12);
+        s.attribute(Depth::L1Hit, 8);
+        let c = s.snapshot(1000 * TICKS);
+        assert!(c.subset_invariant_holds(), "{c:?}");
+        assert_eq!(c.stalls_total, 15);
+        assert_eq!(c.stalls_l1d_miss, 13);
+        assert_eq!(c.stalls_l2_miss, 10);
+        assert_eq!(c.stalls_l3_miss, 10);
+    }
+
+    #[test]
+    fn sub_cycle_gaps_do_not_count() {
+        let mut s = StallModel::new();
+        s.attribute(Depth::Dram, TICKS - 1);
+        assert_eq!(s.counters().stalls_total, 0);
+    }
+
+    #[test]
+    fn fence_wait_counts_as_mem_any() {
+        let mut s = StallModel::new();
+        s.record_fence_wait(100, 100 + 8 * TICKS);
+        assert_eq!(s.counters().stalls_total, 8);
+        assert_eq!(s.counters().stalls_mem_any, 8);
+        assert_eq!(s.counters().stalls_l1d_miss, 0);
+    }
+}

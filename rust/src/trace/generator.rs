@@ -221,14 +221,19 @@ impl<'a> TraceCursor<'a> {
         let base_vals = self.vals.clone();
         let n_acc = t.spec.accesses.len() as u32;
 
+        // `kt` is a plain shared reference held by the cursor: copying it
+        // out lets the emit calls below borrow `self` mutably without
+        // cloning the access-index vectors every refill (§Perf: refill is
+        // the trace generator's hot path).
+        let kt = self.kt;
+
         // Outer accesses (register-resident across the inner loop): fire at
         // the first inner iteration, once per stride replica.
         if at_inner_start {
-            let outer = self.kt.outer.clone();
+            let mut vals = base_vals.clone();
             for k in 0..s {
-                let mut vals = base_vals.clone();
                 vals[stride_loop] = base_vals[stride_loop] + k;
-                for &ai in &outer {
+                for &ai in &kt.outer {
                     let ip = ai as u32 + (k as u32) * n_acc;
                     self.emit_access(ai, &vals, ip);
                 }
@@ -237,22 +242,20 @@ impl<'a> TraceCursor<'a> {
 
         // Body: shared accesses once per portion slot; strided accesses per
         // (replica × portion slot) in the configured arrangement.
-        let shared = self.kt.body_shared.clone();
-        let strided = self.kt.body_strided.clone();
         let eliminate = t.config.eliminate_redundant;
         let arrangement = t.config.arrangement;
 
         // Shared operands (e.g. x[j] in mxv): one load per portion slot
         // when eliminating; otherwise each replica re-loads them.
         let shared_reps = if eliminate { 1 } else { s };
+        let mut vals = base_vals.clone();
         match arrangement {
             Arrangement::Grouped => {
                 for k in 0..shared_reps {
                     for q in 0..p {
-                        let mut vals = base_vals.clone();
                         vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
                         vals[stride_loop] = base_vals[stride_loop] + k;
-                        for &ai in &shared {
+                        for &ai in &kt.body_shared {
                             let ip = ai as u32 + (q as u32) * 64;
                             self.emit_access(ai, &vals, ip);
                         }
@@ -260,10 +263,9 @@ impl<'a> TraceCursor<'a> {
                 }
                 for k in 0..s {
                     for q in 0..p {
-                        let mut vals = base_vals.clone();
                         vals[stride_loop] = base_vals[stride_loop] + k;
                         vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
-                        for &ai in &strided {
+                        for &ai in &kt.body_strided {
                             let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
                             self.emit_access(ai, &vals, ip);
                         }
@@ -273,19 +275,17 @@ impl<'a> TraceCursor<'a> {
             Arrangement::Interleaved => {
                 for q in 0..p {
                     for k in 0..shared_reps {
-                        let mut vals = base_vals.clone();
                         vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
                         vals[stride_loop] = base_vals[stride_loop] + k;
-                        for &ai in &shared {
+                        for &ai in &kt.body_shared {
                             let ip = ai as u32 + (q as u32) * 64;
                             self.emit_access(ai, &vals, ip);
                         }
                     }
                     for k in 0..s {
-                        let mut vals = base_vals.clone();
                         vals[stride_loop] = base_vals[stride_loop] + k;
                         vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
-                        for &ai in &strided {
+                        for &ai in &kt.body_strided {
                             let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
                             self.emit_access(ai, &vals, ip);
                         }

@@ -23,9 +23,10 @@ pub mod profile;
 
 pub use profile::{stride_profile, StrideProfile};
 
+use crate::bail;
 use crate::kernels::spec::{AccessMode, IndexExpr, KernelSpec, LoopVar};
 use crate::trace::Arrangement;
-use anyhow::{bail, Result};
+use crate::Result;
 
 /// AVX2 single-precision vector width in elements.
 pub const VEC_ELEMS: u64 = 8;

@@ -1,0 +1,350 @@
+//! Behavioral tests of the simulation engine: the paper's headline
+//! effects (multi-striding gains, hit-ratio shapes, NT-store collapse),
+//! plus the reuse (`reset`/`prepare`) and prefetcher-plugin contracts of
+//! the refactored pipeline. Moved out of `sim/engine.rs` when the engine
+//! was decomposed — everything here drives the public API only.
+
+use multistride::config::{cascade_lake, coffee_lake};
+use multistride::prefetch::{
+    Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, PrefetchReq,
+};
+use multistride::sim::{Engine, EngineConfig};
+use multistride::trace::{Access, Op};
+
+fn engine(prefetch: bool) -> Engine {
+    Engine::new(EngineConfig::new(coffee_lake()).with_prefetch(prefetch).with_huge_pages(true))
+}
+
+/// Sequential aligned 32 B loads over `bytes` of memory.
+fn seq_loads(bytes: u64) -> impl Iterator<Item = Access> {
+    (0..bytes / 32).map(|i| Access::new(i * 32, Op::Load, 32, (i % 32) as u32))
+}
+
+/// `n` concurrent strides covering `bytes` total, grouped arrangement,
+/// 32 unroll slots. Stride spans use an odd line count so concurrent
+/// streams spread over cache sets (the non-power-of-two §4 setup).
+fn strided_loads(bytes: u64, n: u64) -> Vec<Access> {
+    let stride_bytes = ((bytes / n / 64) | 1) * 64;
+    let per = stride_bytes / 32; // vectors per stride
+    let unrolls_per_stride = 32 / n.min(32);
+    let mut out = Vec::new();
+    let mut pos = 0u64;
+    while pos < per {
+        for s in 0..n {
+            for u in 0..unrolls_per_stride {
+                if pos + u < per {
+                    let ip = (s * unrolls_per_stride + u) as u32;
+                    out.push(Access::new(s * stride_bytes + (pos + u) * 32, Op::Load, 32, ip));
+                }
+            }
+        }
+        pos += unrolls_per_stride;
+    }
+    out
+}
+
+const MIB: u64 = 1 << 20;
+
+#[test]
+fn sequential_read_beats_prefetch_off() {
+    let bytes = 8 * MIB;
+    let mut on = engine(true);
+    let r_on = on.run(seq_loads(bytes));
+    let mut off = engine(false);
+    let r_off = off.run(seq_loads(bytes));
+    assert!(
+        r_on.throughput_gib() > r_off.throughput_gib() * 1.2,
+        "prefetch on {:.2} GiB/s must beat off {:.2} GiB/s",
+        r_on.throughput_gib(),
+        r_off.throughput_gib()
+    );
+}
+
+#[test]
+fn multi_stride_beats_single_stride_with_prefetch() {
+    let bytes = 16 * MIB;
+    let mut e1 = engine(true);
+    let r1 = e1.run(strided_loads(bytes, 1));
+    let mut e8 = engine(true);
+    let r8 = e8.run(strided_loads(bytes, 8));
+    assert!(
+        r8.throughput_gib() > r1.throughput_gib() * 1.1,
+        "8 strides {:.2} must beat 1 stride {:.2}",
+        r8.throughput_gib(),
+        r1.throughput_gib()
+    );
+}
+
+#[test]
+fn multi_stride_does_not_help_without_prefetch() {
+    let bytes = 16 * MIB;
+    let mut e1 = engine(false);
+    let r1 = e1.run(strided_loads(bytes, 1));
+    let mut e8 = engine(false);
+    let r8 = e8.run(strided_loads(bytes, 8));
+    assert!(
+        r8.throughput_gib() <= r1.throughput_gib() * 1.05,
+        "without prefetch 8 strides {:.2} must not beat 1 stride {:.2}",
+        r8.throughput_gib(),
+        r1.throughput_gib()
+    );
+}
+
+#[test]
+fn l1_hit_ratio_is_half_for_streaming_reads() {
+    let mut e = engine(true);
+    let r = e.run(seq_loads(8 * MIB));
+    let ratio = r.l1.hit_ratio();
+    assert!((ratio - 0.5).abs() < 0.02, "Figure 4: L1 hit ratio pinned at 0.5, got {ratio:.3}");
+}
+
+#[test]
+fn l2_hit_ratio_rises_with_strides() {
+    let bytes = 16 * MIB;
+    let mut e1 = engine(true);
+    let r1 = e1.run(strided_loads(bytes, 1));
+    let mut e16 = engine(true);
+    let r16 = e16.run(strided_loads(bytes, 16));
+    assert!(
+        r16.l2.hit_ratio() > r1.l2.hit_ratio() + 0.1,
+        "L2 hit ratio must rise: 1-stride {:.3} vs 16-stride {:.3}",
+        r1.l2.hit_ratio(),
+        r16.l2.hit_ratio()
+    );
+}
+
+#[test]
+fn prefetch_off_zeroes_l2_l3_hit_ratio() {
+    let mut e = engine(false);
+    let r = e.run(seq_loads(8 * MIB));
+    assert!(r.l2.hit_ratio() < 0.05, "no reuse, no prefetch => no L2 hits");
+    assert!(r.l3.hit_ratio() < 0.05);
+}
+
+#[test]
+fn counters_satisfy_subset_invariant() {
+    for pf in [false, true] {
+        for n in [1, 4, 16] {
+            let mut e = engine(pf);
+            let r = e.run(strided_loads(8 * MIB, n));
+            assert!(r.counters.subset_invariant_holds(), "pf={pf} n={n}: {:?}", r.counters);
+        }
+    }
+}
+
+#[test]
+fn stores_consume_write_bandwidth() {
+    // Footprint must dwarf the 12 MiB L3 so most dirty lines actually
+    // write back (at 60 MiB, ~80% of lines are evicted dirty).
+    let bytes = 60 * MIB;
+    let mut e = engine(true);
+    let loads = e.run(seq_loads(bytes)).throughput_gib();
+    let mut e2 = engine(true);
+    let stores = e2
+        .run((0..bytes / 32).map(|i| Access::new(i * 32, Op::Store, 32, (i % 32) as u32)))
+        .throughput_gib();
+    assert!(
+        stores < loads * 0.85,
+        "RFO+writeback store stream {stores:.2} must trail read stream {loads:.2}"
+    );
+}
+
+#[test]
+fn nt_store_grouped_beats_interleaved_many_strides() {
+    let bytes = 8 * MIB;
+    let n = 16u64;
+    let per = bytes / n; // bytes per stride
+    // Grouped: finish each line before next stride touches anything.
+    let mut grouped = Vec::new();
+    let mut interleaved = Vec::new();
+    let vectors_per_stride = per / 32;
+    for v in 0..vectors_per_stride {
+        for s in 0..n {
+            interleaved.push(Access::new(s * per + v * 32, Op::StoreNt, 32, s as u32));
+        }
+    }
+    for chunk in 0..vectors_per_stride / 2 {
+        for s in 0..n {
+            for half in 0..2u64 {
+                grouped.push(Access::new(
+                    s * per + chunk * 64 + half * 32,
+                    Op::StoreNt,
+                    32,
+                    s as u32,
+                ));
+            }
+        }
+    }
+    let mut eg = engine(true);
+    let tg = eg.run(grouped).throughput_gib();
+    let mut ei = engine(true);
+    let ti = ei.run(interleaved).throughput_gib();
+    assert!(
+        tg > ti * 2.0,
+        "grouped NT {tg:.2} GiB/s must dwarf interleaved NT {ti:.2} GiB/s (write-combining)"
+    );
+}
+
+#[test]
+fn unaligned_loads_slightly_slower() {
+    let bytes = 8 * MIB;
+    let mut ea = engine(true);
+    let ta = ea.run(seq_loads(bytes)).throughput_gib();
+    let mut eu = engine(true);
+    let tu = eu
+        .run((0..bytes / 32 - 1).map(|i| Access::new(i * 32 + 4, Op::LoadU, 32, (i % 32) as u32)))
+        .throughput_gib();
+    assert!(tu < ta, "unaligned {tu:.2} must trail aligned {ta:.2}");
+    assert!(tu > ta * 0.7, "but not by much");
+}
+
+#[test]
+fn throughput_below_model_roofline() {
+    let m = coffee_lake();
+    let mut e = engine(true);
+    let r = e.run(strided_loads(16 * MIB, 16));
+    assert!(r.throughput_gib() <= m.model_peak_gib() * 1.001);
+}
+
+#[test]
+fn warmup_then_measure_keeps_cache_state() {
+    let mut e = engine(true);
+    // Warm with the first 4 MiB...
+    e.warmup(seq_loads(4 * MIB));
+    // ...measure re-reading the same 4 MiB minus what L3 can hold: the
+    // first 12 MiB fit nowhere fully, but re-reading 4 MiB after warmup
+    // finds a good chunk in L3 (12 MiB L3, nothing else touched).
+    let r = e.run(seq_loads(4 * MIB));
+    assert!(r.l3.hit_ratio() > 0.5, "warm L3 must serve re-read, ratio {:.3}", r.l3.hit_ratio());
+}
+
+#[test]
+fn reset_restores_cold_state() {
+    let mut e = engine(true);
+    e.run(seq_loads(MIB));
+    e.reset();
+    let r = e.run(seq_loads(MIB));
+    assert_eq!(r.l3.hit_ratio(), 0.0, "cold again after reset");
+}
+
+// ---- engine reuse (`prepare`) ------------------------------------------
+
+/// Field-by-field comparison of two runs (RunResult has f64s, so no Eq).
+fn assert_results_identical(a: &multistride::sim::RunResult, b: &multistride::sim::RunResult) {
+    assert_eq!(a.counters, b.counters);
+    assert_eq!(a.l1, b.l1);
+    assert_eq!(a.l2, b.l2);
+    assert_eq!(a.l3, b.l3);
+    assert_eq!(a.dram, b.dram);
+    assert_eq!(a.wc, b.wc);
+    assert_eq!(a.tlb, b.tlb);
+    assert_eq!(a.streamer, b.streamer);
+}
+
+#[test]
+fn prepare_reuse_is_bit_identical_with_fresh_engines() {
+    let m = coffee_lake();
+    let configs = [
+        EngineConfig::new(m).with_prefetch(true).with_huge_pages(true),
+        EngineConfig::new(m).with_prefetch(false).with_huge_pages(true),
+        EngineConfig::new(m).with_prefetch(true).with_huge_pages(false),
+        EngineConfig::new(m).with_prefetch(true).with_huge_pages(true),
+    ];
+    let mut reused = Engine::new(configs[0]);
+    for cfg in configs {
+        reused.prepare(cfg);
+        let got = reused.run(strided_loads(2 * MIB, 4));
+        let mut fresh = Engine::new(cfg);
+        let want = fresh.run(strided_loads(2 * MIB, 4));
+        assert_results_identical(&got, &want);
+    }
+}
+
+#[test]
+fn prepare_across_machines_rebuilds() {
+    let mut e = Engine::new(EngineConfig::new(coffee_lake()).with_prefetch(true));
+    e.run(strided_loads(MIB, 2));
+    let cfg = EngineConfig::new(cascade_lake()).with_prefetch(true);
+    e.prepare(cfg);
+    let got = e.run(strided_loads(2 * MIB, 4));
+    let want = Engine::new(cfg).run(strided_loads(2 * MIB, 4));
+    assert_results_identical(&got, &want);
+}
+
+// ---- prefetcher plugins -------------------------------------------------
+
+/// A trait-only engine that never requests anything: registering it must
+/// not perturb the simulation.
+struct InertPrefetcher;
+
+impl PrefetchEngine for InertPrefetcher {
+    fn name(&self) -> &'static str {
+        "inert"
+    }
+    fn level(&self) -> PrefetchLevel {
+        PrefetchLevel::L2
+    }
+    fn observe(&mut self, _: Observation, _: &PrefetchContext<'_>, _: &mut Vec<PrefetchReq>) {}
+    fn reset(&mut self) {}
+}
+
+/// A toy next-N-lines L2 engine, registered purely through the public
+/// trait — the "new prefetcher model without touching the engine"
+/// contract of the refactor.
+struct NextLines(u64);
+
+impl PrefetchEngine for NextLines {
+    fn name(&self) -> &'static str {
+        "next-lines"
+    }
+    fn level(&self) -> PrefetchLevel {
+        PrefetchLevel::L2
+    }
+    fn observe(&mut self, obs: Observation, ctx: &PrefetchContext<'_>, out: &mut Vec<PrefetchReq>) {
+        if !ctx.level_hit {
+            for k in 1..=self.0 {
+                out.push(PrefetchReq { line: obs.line + k, stream: u32::MAX, to_l1: false });
+            }
+        }
+    }
+    fn reset(&mut self) {}
+}
+
+#[test]
+fn inert_plugin_changes_nothing() {
+    let mut plain = engine(true);
+    let want = plain.run(seq_loads(2 * MIB));
+    let mut with_plugin = engine(true);
+    with_plugin.register_prefetcher(Box::new(InertPrefetcher));
+    let got = with_plugin.run(seq_loads(2 * MIB));
+    assert_results_identical(&got, &want);
+}
+
+#[test]
+fn custom_prefetcher_plugs_in_and_prefetches() {
+    // Baseline: prefetching "on" but every built-in engine disabled.
+    let m = coffee_lake();
+    let mut cfg = EngineConfig::new(m).with_huge_pages(true);
+    cfg.prefetch.streamer_enabled = false;
+    cfg.prefetch.adjacent_enabled = false;
+    let mut off = Engine::new(cfg);
+    let r_off = off.run(seq_loads(4 * MIB));
+    assert_eq!(r_off.counters.prefetch_lines, 0, "no engines => no prefetches");
+
+    let mut with_plugin = Engine::new(cfg);
+    with_plugin.register_prefetcher(Box::new(NextLines(24)));
+    let r_on = with_plugin.run(seq_loads(4 * MIB));
+    assert!(r_on.counters.prefetch_lines > 0, "plugged-in engine must issue prefetches");
+    assert!(
+        r_on.throughput_gib() > r_off.throughput_gib(),
+        "24-deep lookahead must beat the LFB-limited baseline: {:.2} vs {:.2}",
+        r_on.throughput_gib(),
+        r_off.throughput_gib()
+    );
+
+    // The master MSR-style switch still gates registered plugins.
+    let mut gated = Engine::new(cfg.with_prefetch(false));
+    gated.register_prefetcher(Box::new(NextLines(24)));
+    let r_gated = gated.run(seq_loads(4 * MIB));
+    assert_eq!(r_gated.counters.prefetch_lines, 0, "master switch off gates plugins");
+}
