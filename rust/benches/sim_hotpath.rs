@@ -3,6 +3,17 @@
 //! paper harnesses sweep hundreds of configurations, so the simulator's
 //! access rate bounds total experiment wall-clock.
 //!
+//! Besides the human-readable table, the harness emits
+//! `BENCH_sim_hotpath.json` — accesses/s per scenario plus machine and
+//! git-revision metadata — so the perf trajectory is machine-diffable
+//! across commits (see ARCHITECTURE.md §Perf for how to read it).
+//!
+//! Knobs (environment):
+//! * `MULTISTRIDE_HOTPATH_BYTES` — per-scenario array footprint in bytes
+//!   (default 32 MiB; CI's advisory perf-smoke job runs a reduced size).
+//! * `MULTISTRIDE_BENCH_JSON` — output path for the JSON record
+//!   (default `BENCH_sim_hotpath.json` in the working directory).
+//!
 //! The final section measures the engine-reuse path the coordinator
 //! sweeps use ([`Engine::prepare`] via `EngineCache`) against fresh
 //! construction per configuration point.
@@ -17,7 +28,20 @@ use multistride::sim::{Engine, EngineConfig};
 use multistride::trace::KernelTrace;
 use multistride::transform::{transform, StridingConfig};
 
-fn rate(label: &str, accesses: u64, f: impl FnOnce()) {
+/// One measured scenario, kept for the JSON record.
+struct Scenario {
+    label: &'static str,
+    accesses: u64,
+    seconds: f64,
+}
+
+impl Scenario {
+    fn rate(&self) -> f64 {
+        self.accesses as f64 / self.seconds
+    }
+}
+
+fn rate(results: &mut Vec<Scenario>, label: &'static str, accesses: u64, f: impl FnOnce()) {
     let t = Instant::now();
     f();
     let s = t.elapsed().as_secs_f64();
@@ -25,11 +49,81 @@ fn rate(label: &str, accesses: u64, f: impl FnOnce()) {
         "{label:>42}: {:>8.2} M accesses/s ({accesses} accesses, {s:.3} s)",
         accesses as f64 / s / 1e6
     );
+    results.push(Scenario { label, accesses, seconds: s });
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Current git revision: `git rev-parse`, else CI's `GITHUB_SHA`, else
+/// "unknown". Best-effort — the record must never fail on it.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .or_else(|| std::env::var("GITHUB_SHA").ok())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Minimal JSON string escape (labels are plain ASCII, but stay correct).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn write_json(path: &str, bytes: u64, sweep_bytes: u64, results: &[Scenario]) {
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_hotpath\",\n  \"schema\": 1,\n");
+    s.push_str(&format!("  \"unix_time\": {unix_time},\n"));
+    s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&git_rev())));
+    s.push_str(&format!(
+        "  \"machine\": {{\"os\": \"{}\", \"arch\": \"{}\", \"cpus\": {cpus}}},\n",
+        std::env::consts::OS,
+        std::env::consts::ARCH
+    ));
+    s.push_str(&format!("  \"bytes\": {bytes},\n  \"sweep_bytes\": {sweep_bytes},\n"));
+    s.push_str("  \"scenarios\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"label\": \"{}\", \"accesses\": {}, \"seconds\": {:.6}, \"accesses_per_sec\": {:.1}}}{}\n",
+            json_escape(r.label),
+            r.accesses,
+            r.seconds,
+            r.rate(),
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
 }
 
 fn main() {
     let m = coffee_lake();
-    let bytes = 32 * 1024 * 1024u64;
+    let bytes = env_u64("MULTISTRIDE_HOTPATH_BYTES", 32 * 1024 * 1024);
+    let mut results = Vec::new();
 
     for (label, strides, pf) in [
         ("micro read, 1 stride, pf on", 1u32, true),
@@ -38,7 +132,7 @@ fn main() {
     ] {
         let b = MicroBench::new(MicroOp::LoadAligned, strides, bytes);
         let n = b.trace_len();
-        rate(label, n, || {
+        rate(&mut results, label, n, || {
             let mut e = Engine::new(EngineConfig::new(m).with_prefetch(pf).with_huge_pages(true));
             let _ = e.run(b.trace());
         });
@@ -51,7 +145,7 @@ fn main() {
         let strides = if op == MicroOp::StoreNt { 16 } else { 8 };
         let b = MicroBench::new(op, strides, bytes);
         let n = b.trace_len();
-        rate(label, n, || {
+        rate(&mut results, label, n, || {
             let mut e = Engine::new(EngineConfig::new(m).with_huge_pages(true));
             let _ = e.run(b.trace());
         });
@@ -68,7 +162,7 @@ fn main() {
         let kt = KernelTrace::new(t);
         let n = kt.len_estimate();
         if label.contains("gen only") {
-            rate(label, n, || {
+            rate(&mut results, label, n, || {
                 let mut sink = 0u64;
                 for a in kt.iter() {
                     sink ^= a.addr;
@@ -76,7 +170,7 @@ fn main() {
                 std::hint::black_box(sink);
             });
         } else {
-            rate(label, n, || {
+            rate(&mut results, label, n, || {
                 let mut e = Engine::new(EngineConfig::new(m));
                 let _ = e.run(kt.iter());
             });
@@ -86,21 +180,25 @@ fn main() {
     // Sweep-style engine reuse: the same 8-point prefetch on/off sweep run
     // with a fresh engine per point vs one warm engine prepared per point
     // (what coordinator::EngineCache gives each worker).
-    let sweep_bytes = 8 * 1024 * 1024u64;
+    let sweep_bytes = (bytes / 4).max(1024 * 1024);
     let b = MicroBench::new(MicroOp::LoadAligned, 8, sweep_bytes);
     let points: Vec<bool> = [true, false].repeat(4);
     let n = b.trace_len() * points.len() as u64;
-    rate("sweep x8, fresh engine per point", n, || {
+    rate(&mut results, "sweep x8, fresh engine per point", n, || {
         for &pf in &points {
             let mut e = Engine::new(EngineConfig::new(m).with_prefetch(pf).with_huge_pages(true));
             let _ = e.run(b.trace());
         }
     });
     let mut cache = EngineCache::new();
-    rate("sweep x8, reused engine (prepare)", n, || {
+    rate(&mut results, "sweep x8, reused engine (prepare)", n, || {
         for &pf in &points {
             let e = cache.engine_for(EngineConfig::new(m).with_prefetch(pf).with_huge_pages(true));
             let _ = e.run(b.trace());
         }
     });
+
+    let json_path =
+        std::env::var("MULTISTRIDE_BENCH_JSON").unwrap_or_else(|_| "BENCH_sim_hotpath.json".into());
+    write_json(&json_path, bytes, sweep_bytes, &results);
 }

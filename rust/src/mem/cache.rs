@@ -10,6 +10,12 @@
 //! whether it has been referenced by a demand access since. This lets the
 //! simulator report the *useless prefetch* (prefetched-but-evicted-unused)
 //! statistic that explains the Figure-5 collapse.
+//!
+//! §Perf: storage is struct-of-arrays (see ARCHITECTURE.md §Perf). Way
+//! lookup is a sentinel-tag scan over a contiguous `u64` slice — validity is
+//! folded into the tag, so the hot compare is a single branch-light equality
+//! pass with no per-way flag loads. Metadata bits and recency stamps live in
+//! separate parallel arrays and are only touched on the matched way.
 
 /// Replacement policy for a set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,19 +62,16 @@ pub struct Eviction {
     pub unused_prefetch: bool,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
-struct Entry {
-    /// Line address; `valid` gates interpretation.
-    tag: u64,
-    valid: bool,
-    dirty: bool,
-    /// Installed by a prefetch engine.
-    prefetched: bool,
-    /// Referenced by a demand access since installation.
-    referenced: bool,
-    /// LRU stamp (monotone counter) — also reused as PLRU hint.
-    stamp: u64,
-}
+/// Tag value marking an empty way. Line addresses are byte addresses
+/// shifted right by 6, so no reachable line can collide with it.
+const INVALID_TAG: u64 = u64::MAX;
+
+/// Per-way metadata bits (packed into one byte per way).
+const META_DIRTY: u8 = 1 << 0;
+/// Installed by a prefetch engine.
+const META_PREFETCHED: u8 = 1 << 1;
+/// Referenced by a demand access since installation.
+const META_REFERENCED: u8 = 1 << 2;
 
 /// Aggregate statistics for one cache level.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -96,7 +99,8 @@ impl CacheStats {
     }
 }
 
-/// One level of set-associative cache.
+/// One level of set-associative cache, stored struct-of-arrays: the three
+/// parallel vectors below are indexed `set * ways + way`.
 pub struct Cache {
     cfg: CacheConfig,
     n_sets: u64,
@@ -110,10 +114,23 @@ pub struct Cache {
     /// exactly as on the real part.
     n_slices: u64,
     shift: u32,
-    entries: Vec<Entry>,
+    /// Line tag per way; [`INVALID_TAG`] = empty way (validity folded in).
+    tags: Vec<u64>,
+    /// Packed `META_*` bits per way.
+    meta: Vec<u8>,
+    /// LRU stamp (monotone counter) per way — also reused as PLRU hint.
+    stamps: Vec<u64>,
     clock: u64,
     rng: u64,
     pub stats: CacheStats,
+}
+
+/// Index of `line` within one set's tag slice, if resident. Invalid ways
+/// hold [`INVALID_TAG`] and can never match a real line, so this is a pure
+/// equality scan — the shared way-scan helper of every lookup-shaped path.
+#[inline(always)]
+fn way_of(tags: &[u64], line: u64) -> Option<usize> {
+    tags.iter().position(|&t| t == line)
 }
 
 impl Cache {
@@ -126,13 +143,16 @@ impl Cache {
         // Largest power-of-two divisor = sets per slice.
         let sets_per_slice = n_sets & n_sets.wrapping_neg();
         let n_slices = n_sets / sets_per_slice;
+        let n_ways = (n_sets * cfg.ways as u64) as usize;
         Self {
             cfg,
             n_sets,
             set_mask: sets_per_slice - 1,
             n_slices,
             shift: sets_per_slice.trailing_zeros(),
-            entries: vec![Entry::default(); (n_sets * cfg.ways as u64) as usize],
+            tags: vec![INVALID_TAG; n_ways],
+            meta: vec![0; n_ways],
+            stamps: vec![0; n_ways],
             clock: 0,
             rng: 0x9e3779b97f4a7c15,
             stats: CacheStats::default(),
@@ -161,48 +181,47 @@ impl Cache {
         slice * (self.set_mask + 1) + within
     }
 
+    /// First way index (into the parallel arrays) of the set holding `line`.
     #[inline(always)]
-    fn set_range(&self, line: u64) -> std::ops::Range<usize> {
-        let set = self.set_index(line) as usize * self.cfg.ways as usize;
-        set..set + self.cfg.ways as usize
+    fn set_base(&self, line: u64) -> usize {
+        self.set_index(line) as usize * self.cfg.ways as usize
     }
 
     /// Demand lookup. Updates recency and statistics. Returns `true` on hit.
     pub fn demand_lookup(&mut self, line: u64) -> bool {
         self.clock += 1;
-        let clock = self.clock;
-        let range = self.set_range(line);
-        for e in &mut self.entries[range] {
-            if e.valid && e.tag == line {
-                e.stamp = clock;
-                if e.prefetched && !e.referenced {
+        let base = self.set_base(line);
+        let ways = self.cfg.ways as usize;
+        match way_of(&self.tags[base..base + ways], line) {
+            Some(w) => {
+                let i = base + w;
+                self.stamps[i] = self.clock;
+                let m = self.meta[i];
+                if m & (META_PREFETCHED | META_REFERENCED) == META_PREFETCHED {
                     self.stats.prefetch_hits += 1;
                 }
-                e.referenced = true;
+                self.meta[i] = m | META_REFERENCED;
                 self.stats.demand_hits += 1;
-                return true;
+                true
+            }
+            None => {
+                self.stats.demand_misses += 1;
+                false
             }
         }
-        self.stats.demand_misses += 1;
-        false
     }
 
     /// Non-destructive probe: no recency update, no statistics.
     pub fn contains(&self, line: u64) -> bool {
-        let set = self.set_index(line) as usize * self.cfg.ways as usize;
-        self.entries[set..set + self.cfg.ways as usize]
-            .iter()
-            .any(|e| e.valid && e.tag == line)
+        let base = self.set_base(line);
+        way_of(&self.tags[base..base + self.cfg.ways as usize], line).is_some()
     }
 
     /// Mark a resident line dirty (store hit). No-op when absent.
     pub fn mark_dirty(&mut self, line: u64) {
-        let range = self.set_range(line);
-        for e in &mut self.entries[range] {
-            if e.valid && e.tag == line {
-                e.dirty = true;
-                return;
-            }
+        let base = self.set_base(line);
+        if let Some(w) = way_of(&self.tags[base..base + self.cfg.ways as usize], line) {
+            self.meta[base + w] |= META_DIRTY;
         }
     }
 
@@ -210,81 +229,79 @@ impl Cache {
     /// victim if a valid line had to be evicted. Installing a line that is
     /// already resident refreshes it in place and returns `None`.
     pub fn insert(&mut self, line: u64, prefetch: bool, dirty: bool) -> Option<Eviction> {
+        debug_assert_ne!(line, INVALID_TAG, "line address collides with the empty-way sentinel");
         self.clock += 1;
         let clock = self.clock;
         if prefetch {
             self.stats.prefetch_installs += 1;
         }
-        let range = self.set_range(line);
+        let base = self.set_base(line);
+        let ways = self.cfg.ways as usize;
+        let set_tags = &self.tags[base..base + ways];
+        let install_meta = (dirty as u8 * META_DIRTY)
+            | (prefetch as u8 * META_PREFETCHED)
+            | (!prefetch as u8 * META_REFERENCED);
 
         // Already resident: refresh.
-        for e in &mut self.entries[range.clone()] {
-            if e.valid && e.tag == line {
-                e.stamp = clock;
-                e.dirty |= dirty;
-                if !prefetch {
-                    e.referenced = true;
-                }
-                return None;
-            }
+        if let Some(w) = way_of(set_tags, line) {
+            let i = base + w;
+            self.stamps[i] = clock;
+            self.meta[i] |= (dirty as u8 * META_DIRTY) | (!prefetch as u8 * META_REFERENCED);
+            return None;
         }
 
-        // Invalid way available.
-        for e in &mut self.entries[range.clone()] {
-            if !e.valid {
-                *e = Entry {
-                    tag: line,
-                    valid: true,
-                    dirty,
-                    prefetched: prefetch,
-                    referenced: !prefetch,
-                    stamp: clock,
-                };
-                return None;
-            }
+        // Invalid way available (first empty way in way order, as the AoS
+        // layout's scan picked it).
+        if let Some(w) = way_of(set_tags, INVALID_TAG) {
+            let i = base + w;
+            self.tags[i] = line;
+            self.meta[i] = install_meta;
+            self.stamps[i] = clock;
+            return None;
         }
 
-        // Choose a victim.
+        // Choose a victim (every way valid from here on).
+        let set_stamps = &self.stamps[base..base + ways];
         let victim_off = match self.cfg.replacement {
             Replacement::Lru => {
                 let mut best = 0usize;
                 let mut best_stamp = u64::MAX;
-                for (i, e) in self.entries[range.clone()].iter().enumerate() {
-                    if e.stamp < best_stamp {
-                        best_stamp = e.stamp;
+                for (i, &s) in set_stamps.iter().enumerate() {
+                    if s < best_stamp {
+                        best_stamp = s;
                         best = i;
                     }
                 }
                 best
             }
             Replacement::TreePlru => {
-                // Approximate tree-PLRU: victimize the way whose stamp is
-                // older than the set median — cheap and close enough to the
-                // hardware policy for the aggregate statistics we report.
-                let ways = self.cfg.ways as usize;
-                let mut best = 0usize;
-                let mut best_stamp = u64::MAX;
-                // Walk a tree-like halving: compare halves by max stamp.
-                let slice = &self.entries[range.clone()];
+                // Approximate tree-PLRU: descend away from the recently
+                // used half at every level (halves compared by max stamp,
+                // ties to the left) until a single way remains. The total
+                // work is the geometric series ways + ways/2 + … = O(ways)
+                // plain u64 maxes over the contiguous stamp slice.
                 let (mut lo, mut hi) = (0usize, ways);
                 while hi - lo > 1 {
                     let mid = (lo + hi) / 2;
-                    let left_max = slice[lo..mid].iter().map(|e| e.stamp).max().unwrap();
-                    let right_max = slice[mid..hi].iter().map(|e| e.stamp).max().unwrap();
+                    let mut left_max = 0u64;
+                    for &s in &set_stamps[lo..mid] {
+                        if s > left_max {
+                            left_max = s;
+                        }
+                    }
+                    let mut right_max = 0u64;
+                    for &s in &set_stamps[mid..hi] {
+                        if s > right_max {
+                            right_max = s;
+                        }
+                    }
                     if left_max <= right_max {
                         hi = mid;
                     } else {
                         lo = mid;
                     }
                 }
-                // Within the chosen leaf pair, take the older one.
-                for (i, e) in slice.iter().enumerate().take(hi).skip(lo) {
-                    if e.stamp < best_stamp {
-                        best_stamp = e.stamp;
-                        best = i;
-                    }
-                }
-                best
+                lo
             }
             Replacement::Random => {
                 // xorshift64*
@@ -295,37 +312,34 @@ impl Cache {
             }
         };
 
-        let idx = range.start + victim_off;
-        let victim = self.entries[idx];
+        let idx = base + victim_off;
+        let victim_meta = self.meta[idx];
+        let victim_line = self.tags[idx];
         self.stats.evictions += 1;
-        if victim.dirty {
+        let victim_dirty = victim_meta & META_DIRTY != 0;
+        if victim_dirty {
             self.stats.dirty_evictions += 1;
         }
-        let unused_prefetch = victim.prefetched && !victim.referenced;
+        let unused_prefetch =
+            victim_meta & (META_PREFETCHED | META_REFERENCED) == META_PREFETCHED;
         if unused_prefetch {
             self.stats.unused_prefetch_evictions += 1;
         }
-        self.entries[idx] = Entry {
-            tag: line,
-            valid: true,
-            dirty,
-            prefetched: prefetch,
-            referenced: !prefetch,
-            stamp: clock,
-        };
-        Some(Eviction { line: victim.tag, dirty: victim.dirty, unused_prefetch })
+        self.tags[idx] = line;
+        self.meta[idx] = install_meta;
+        self.stamps[idx] = clock;
+        Some(Eviction { line: victim_line, dirty: victim_dirty, unused_prefetch })
     }
 
     /// Invalidate a line (inclusive-hierarchy back-invalidation). Returns
     /// whether the line was present and dirty.
     pub fn invalidate(&mut self, line: u64) -> bool {
-        let range = self.set_range(line);
-        for e in &mut self.entries[range] {
-            if e.valid && e.tag == line {
-                let dirty = e.dirty;
-                e.valid = false;
-                return dirty;
-            }
+        let base = self.set_base(line);
+        if let Some(w) = way_of(&self.tags[base..base + self.cfg.ways as usize], line) {
+            let i = base + w;
+            let dirty = self.meta[i] & META_DIRTY != 0;
+            self.tags[i] = INVALID_TAG;
+            return dirty;
         }
         false
     }
@@ -334,7 +348,9 @@ impl Cache {
     /// Restores the exact post-construction state — including the
     /// replacement RNG, so `Replacement::Random` runs reproduce too.
     pub fn reset(&mut self) {
-        self.entries.fill(Entry::default());
+        self.tags.fill(INVALID_TAG);
+        self.meta.fill(0);
+        self.stamps.fill(0);
         self.clock = 0;
         self.rng = 0x9e3779b97f4a7c15;
         self.stats = CacheStats::default();
@@ -342,7 +358,7 @@ impl Cache {
 
     /// Number of valid lines currently resident (test / debug helper).
     pub fn resident_lines(&self) -> usize {
-        self.entries.iter().filter(|e| e.valid).count()
+        self.tags.iter().filter(|&&t| t != INVALID_TAG).count()
     }
 }
 
@@ -445,6 +461,17 @@ mod tests {
         assert!(c.invalidate(0), "was dirty");
         assert!(!c.contains(0));
         assert!(!c.invalidate(0));
+    }
+
+    #[test]
+    fn invalidated_way_is_refilled_first() {
+        let mut c = tiny();
+        c.insert(0, false, false);
+        c.insert(4, false, false);
+        c.invalidate(0);
+        // The freed way absorbs the next insert: no eviction.
+        assert!(c.insert(8, false, false).is_none());
+        assert!(c.contains(4) && c.contains(8));
     }
 
     #[test]

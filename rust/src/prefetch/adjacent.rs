@@ -10,6 +10,17 @@ use super::{Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, Prefetc
 /// The adjacent-line engine: completes the 128-byte aligned pair on misses.
 pub struct AdjacentLine;
 
+impl AdjacentLine {
+    /// Observe a request arriving at L2; `level_hit` mirrors
+    /// `PrefetchContext::level_hit` (misses trigger, hits stay silent).
+    #[inline]
+    pub fn observe(&mut self, obs: Observation, level_hit: bool, out: &mut Vec<PrefetchReq>) {
+        if !level_hit {
+            out.push(PrefetchReq { line: obs.line ^ 1, stream: u32::MAX, to_l1: false });
+        }
+    }
+}
+
 impl PrefetchEngine for AdjacentLine {
     fn name(&self) -> &'static str {
         "l2-adjacent-line"
@@ -25,9 +36,7 @@ impl PrefetchEngine for AdjacentLine {
         ctx: &PrefetchContext<'_>,
         out: &mut Vec<PrefetchReq>,
     ) {
-        if !ctx.level_hit {
-            out.push(PrefetchReq { line: obs.line ^ 1, stream: u32::MAX, to_l1: false });
-        }
+        AdjacentLine::observe(self, obs, ctx.level_hit, out);
     }
 
     fn reset(&mut self) {}

@@ -1,0 +1,216 @@
+//! Static dispatch for the four built-in hardware prefetchers.
+//!
+//! The simulation engine calls `observe` once (L1 engines) or twice (L2
+//! engines are consulted on every request arriving at L2) per simulated
+//! access — hot enough that the indirect call through `Box<dyn
+//! PrefetchEngine>` plus the `&dyn Fn` budget callback show up in profiles.
+//! [`BuiltinEngine`] wraps the four built-ins in an enum so the hot path
+//! dispatches with a match (inlinable, no vtable) and passes the budget
+//! query as a monomorphized closure.
+//!
+//! `Box<dyn PrefetchEngine>` remains the extension point for user models:
+//! [`crate::sim::Engine::register_prefetcher`] is unchanged and registered
+//! plugins observe right after the built-ins, in registration order.
+//! [`super::PrefetchConfig::build_engines`] still exists for code that
+//! wants trait objects for the built-ins too.
+
+use super::{
+    AdjacentLine, DcuNextLine, IpStride, Observation, PrefetchContext, PrefetchEngine,
+    PrefetchLevel, PrefetchReq, Streamer,
+};
+use crate::prefetch::streamer::StreamerStats;
+
+/// One of the four MSR-0x1A4 hardware prefetchers, statically dispatched.
+pub enum BuiltinEngine {
+    DcuNextLine(DcuNextLine),
+    IpStride(IpStride),
+    Streamer(Streamer),
+    AdjacentLine(AdjacentLine),
+}
+
+impl BuiltinEngine {
+    /// Stable identifier, delegated to the wrapped model's trait impl.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::DcuNextLine(e) => PrefetchEngine::name(e),
+            Self::IpStride(e) => PrefetchEngine::name(e),
+            Self::Streamer(e) => PrefetchEngine::name(e),
+            Self::AdjacentLine(e) => PrefetchEngine::name(e),
+        }
+    }
+
+    /// Which cache level this engine observes (trait-impl delegated).
+    pub fn level(&self) -> PrefetchLevel {
+        match self {
+            Self::DcuNextLine(e) => PrefetchEngine::level(e),
+            Self::IpStride(e) => PrefetchEngine::level(e),
+            Self::Streamer(e) => PrefetchEngine::level(e),
+            Self::AdjacentLine(e) => PrefetchEngine::level(e),
+        }
+    }
+
+    /// Observe one demand access; push generated requests into `out`.
+    /// Semantically identical to `PrefetchEngine::observe` with a context
+    /// of `{ level_hit, outstanding }`, but the budget query is a
+    /// monomorphized closure instead of a `&dyn Fn`.
+    #[inline]
+    pub fn observe(
+        &mut self,
+        obs: Observation,
+        level_hit: bool,
+        outstanding: impl Fn(u32) -> u32,
+        out: &mut Vec<PrefetchReq>,
+    ) {
+        match self {
+            Self::DcuNextLine(e) => e.observe(obs, out),
+            Self::IpStride(e) => e.observe(obs, out),
+            Self::Streamer(e) => e.observe(obs, outstanding, out),
+            Self::AdjacentLine(e) => e.observe(obs, level_hit, out),
+        }
+    }
+
+    /// Restore the post-construction state.
+    pub fn reset(&mut self) {
+        match self {
+            Self::DcuNextLine(e) => e.reset(),
+            Self::IpStride(e) => e.reset(),
+            Self::Streamer(e) => e.reset(),
+            Self::AdjacentLine(_) => {}
+        }
+    }
+
+    /// Zero statistics while keeping trained state (warmup protocol).
+    pub fn clear_stats(&mut self) {
+        match self {
+            Self::DcuNextLine(e) => e.stats = Default::default(),
+            Self::IpStride(e) => e.stats = Default::default(),
+            Self::Streamer(e) => e.stats = Default::default(),
+            Self::AdjacentLine(_) => {}
+        }
+    }
+
+    /// Streamer statistics, when this is the L2 streamer.
+    pub fn streamer_stats(&self) -> Option<StreamerStats> {
+        match self {
+            Self::Streamer(e) => Some(e.stats),
+            _ => None,
+        }
+    }
+}
+
+/// The enum is itself a [`PrefetchEngine`], delegating to the wrapped
+/// model — this is how [`super::PrefetchConfig::build_engines`] derives
+/// its boxed registry from [`super::PrefetchConfig::build_builtins`], so
+/// there is exactly one place that lists the built-ins.
+impl PrefetchEngine for BuiltinEngine {
+    fn name(&self) -> &'static str {
+        BuiltinEngine::name(self)
+    }
+
+    fn level(&self) -> PrefetchLevel {
+        BuiltinEngine::level(self)
+    }
+
+    fn observe(
+        &mut self,
+        obs: Observation,
+        ctx: &PrefetchContext<'_>,
+        out: &mut Vec<PrefetchReq>,
+    ) {
+        BuiltinEngine::observe(self, obs, ctx.level_hit, |slot| (ctx.outstanding)(slot), out);
+    }
+
+    fn reset(&mut self) {
+        BuiltinEngine::reset(self);
+    }
+
+    fn clear_stats(&mut self) {
+        BuiltinEngine::clear_stats(self);
+    }
+
+    fn streamer_stats(&self) -> Option<StreamerStats> {
+        BuiltinEngine::streamer_stats(self)
+    }
+}
+
+/// Partition builtin engines by observation level, preserving order within
+/// each (the devirtualized analogue of [`super::partition_by_level`]).
+pub fn partition_builtins_by_level(
+    engines: Vec<BuiltinEngine>,
+) -> (Vec<BuiltinEngine>, Vec<BuiltinEngine>) {
+    let mut l1 = Vec::new();
+    let mut l2 = Vec::new();
+    for e in engines {
+        match e.level() {
+            PrefetchLevel::L1 => l1.push(e),
+            PrefetchLevel::L2 => l2.push(e),
+        }
+    }
+    (l1, l2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefetch::{PrefetchConfig, PrefetchContext, PrefetchEngine};
+
+    fn obs(line: u64, ip: u32, miss: bool) -> Observation {
+        Observation { line, ip, miss, store: false }
+    }
+
+    /// Every builtin must behave identically through the enum and through
+    /// the trait object — same names, levels and request streams.
+    #[test]
+    fn enum_dispatch_matches_trait_dispatch() {
+        let cfg = PrefetchConfig {
+            dcu_enabled: true,
+            ipstride_enabled: true,
+            ..PrefetchConfig::default()
+        };
+        let mut builtins = cfg.build_builtins();
+        let mut dyns = cfg.build_engines();
+        assert_eq!(builtins.len(), dyns.len());
+        let none = |_: u32| 0u32;
+        for (b, d) in builtins.iter_mut().zip(dyns.iter_mut()) {
+            assert_eq!(b.name(), d.name());
+            assert_eq!(b.level(), d.level());
+            // A miss-y ascending sequence exercises all four models.
+            for (i, line) in [10u64, 11, 12, 13, 14].iter().enumerate() {
+                let mut out_b = Vec::new();
+                let mut out_d = Vec::new();
+                b.observe(obs(*line, i as u32 % 2, true), false, none, &mut out_b);
+                let ctx = PrefetchContext { level_hit: false, outstanding: &none };
+                d.observe(obs(*line, i as u32 % 2, true), &ctx, &mut out_d);
+                assert_eq!(out_b, out_d, "{} diverged at line {line}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_enum_respects_level_hit() {
+        let mut e = BuiltinEngine::AdjacentLine(AdjacentLine);
+        let mut out = Vec::new();
+        e.observe(obs(10, 0, false), true, |_| 0, &mut out);
+        assert!(out.is_empty(), "silent on hits");
+        e.observe(obs(10, 0, true), false, |_| 0, &mut out);
+        assert_eq!(out, vec![PrefetchReq { line: 11, stream: u32::MAX, to_l1: false }]);
+    }
+
+    #[test]
+    fn builtin_partition_matches_levels() {
+        let cfg = PrefetchConfig {
+            dcu_enabled: true,
+            ipstride_enabled: true,
+            ..PrefetchConfig::default()
+        };
+        let (l1, l2) = partition_builtins_by_level(cfg.build_builtins());
+        assert_eq!(
+            l1.iter().map(|e| e.name()).collect::<Vec<_>>(),
+            vec!["dcu-next-line", "dcu-ip-stride"]
+        );
+        assert_eq!(
+            l2.iter().map(|e| e.name()).collect::<Vec<_>>(),
+            vec!["l2-streamer", "l2-adjacent-line"]
+        );
+    }
+}

@@ -10,20 +10,25 @@
 //! stream's lookahead; a multi-strided loop trains `n` streams whose
 //! lookaheads aggregate — that is the paper's mechanism.
 //!
-//! Every model implements [`PrefetchEngine`]; the simulation engine holds
-//! trait objects and decides timing, budget and installation level. New
-//! prefetcher models (an AMD-style region prefetcher, a next-page engine,
-//! …) implement the trait and register via
-//! [`crate::sim::Engine::register_prefetcher`] — no engine changes needed.
-//! [`PrefetchConfig::build_engines`] is the registry for the four built-in
-//! hardware models.
+//! Every model implements [`PrefetchEngine`]; the simulation engine
+//! decides timing, budget and installation level. New prefetcher models
+//! (an AMD-style region prefetcher, a next-page engine, …) implement the
+//! trait and register via [`crate::sim::Engine::register_prefetcher`] — no
+//! engine changes needed. The four built-in hardware models additionally
+//! get **static dispatch** on the engine's hot path through the
+//! [`BuiltinEngine`] enum ([`PrefetchConfig::build_builtins`]); trait
+//! objects remain the plugin extension point, observing right after the
+//! built-ins ([`PrefetchConfig::build_engines`] still hands out boxed
+//! built-ins for code that wants uniform trait objects).
 
 pub mod adjacent;
+pub mod builtin;
 pub mod dcu;
 pub mod ipstride;
 pub mod streamer;
 
 pub use adjacent::AdjacentLine;
+pub use builtin::{partition_builtins_by_level, BuiltinEngine};
 pub use dcu::{DcuNextLine, DcuNextLineConfig};
 pub use ipstride::{IpStride, IpStrideConfig};
 pub use streamer::{Streamer, StreamerConfig};
@@ -154,18 +159,31 @@ impl PrefetchConfig {
     /// simulation engine at observation time, matching the MSR semantics
     /// of a present-but-disabled prefetcher.
     pub fn build_engines(&self) -> Vec<Box<dyn PrefetchEngine>> {
-        let mut v: Vec<Box<dyn PrefetchEngine>> = Vec::new();
+        // Derived from build_builtins (the single registry): the enum is
+        // itself a PrefetchEngine that delegates to the wrapped model.
+        self.build_builtins()
+            .into_iter()
+            .map(|e| Box::new(e) as Box<dyn PrefetchEngine>)
+            .collect()
+    }
+
+    /// The single registry of built-in hardware models, wrapped in the
+    /// statically dispatched [`BuiltinEngine`] the simulation engine
+    /// drives on its hot path ([`PrefetchConfig::build_engines`] boxes
+    /// the same values for code that wants trait objects).
+    pub fn build_builtins(&self) -> Vec<BuiltinEngine> {
+        let mut v = Vec::new();
         if self.dcu_enabled {
-            v.push(Box::new(DcuNextLine::new(self.dcu)));
+            v.push(BuiltinEngine::DcuNextLine(DcuNextLine::new(self.dcu)));
         }
         if self.ipstride_enabled {
-            v.push(Box::new(IpStride::new(self.ipstride)));
+            v.push(BuiltinEngine::IpStride(IpStride::new(self.ipstride)));
         }
         if self.streamer_enabled {
-            v.push(Box::new(Streamer::new(self.streamer)));
+            v.push(BuiltinEngine::Streamer(Streamer::new(self.streamer)));
         }
         if self.adjacent_enabled {
-            v.push(Box::new(AdjacentLine));
+            v.push(BuiltinEngine::AdjacentLine(AdjacentLine));
         }
         v
     }

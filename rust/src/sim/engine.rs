@@ -12,12 +12,21 @@
 //! they occupy their cache set from the start, so aliasing streams evict
 //! each other's prefetched lines exactly as §4.5 of the paper describes —
 //! while demand and DCU fills install on harvest.
+//!
+//! §Perf (see ARCHITECTURE.md §Perf for the invariants): the four built-in
+//! prefetchers are held as [`BuiltinEngine`] values and dispatched
+//! statically on the hot path; `Box<dyn PrefetchEngine>` is kept only for
+//! models added through [`Engine::register_prefetcher`], which observe
+//! right after the built-ins. The per-access completed-fill probe is
+//! gated by [`FillTracker::maybe_completed`], so an L1 hit with nothing
+//! harvestable costs one tag scan and zero HashMap traffic.
 
 use crate::mem::addr;
 use crate::mem::dram::DramOp;
 use crate::mem::{Tlb, WriteCombineBuffer};
 use crate::prefetch::{
-    partition_by_level, Observation, PrefetchContext, PrefetchEngine, PrefetchLevel, PrefetchReq,
+    partition_builtins_by_level, BuiltinEngine, Observation, PrefetchContext, PrefetchEngine,
+    PrefetchLevel, PrefetchReq,
 };
 use crate::trace::{Access, Op};
 
@@ -34,10 +43,16 @@ pub struct Engine {
     mem: Hierarchy,
     tlb: Tlb,
     wc: WriteCombineBuffer,
-    /// Engines observing L1 demand traffic (DCU next-line, IP-stride, …).
-    l1_engines: Vec<Box<dyn PrefetchEngine>>,
-    /// Engines observing requests arriving at L2 (streamer, adjacent, …).
-    l2_engines: Vec<Box<dyn PrefetchEngine>>,
+    /// Built-in engines observing L1 demand traffic (DCU next-line,
+    /// IP-stride), statically dispatched.
+    l1_builtin: Vec<BuiltinEngine>,
+    /// Built-in engines observing requests arriving at L2 (streamer,
+    /// adjacent-line), statically dispatched.
+    l2_builtin: Vec<BuiltinEngine>,
+    /// User-registered L1 engines; observe after the L1 built-ins.
+    l1_plugins: Vec<Box<dyn PrefetchEngine>>,
+    /// User-registered L2 engines; observe after the L2 built-ins.
+    l2_plugins: Vec<Box<dyn PrefetchEngine>>,
     fills: FillTracker,
     issue: IssueUnit,
     stalls: StallModel,
@@ -52,13 +67,15 @@ impl Engine {
         let m = &cfg.machine;
         let mut tlb_cfg = m.tlb;
         tlb_cfg.huge_pages = cfg.huge_pages;
-        let (l1_engines, l2_engines) = partition_by_level(cfg.prefetch.build_engines());
+        let (l1_builtin, l2_builtin) = partition_builtins_by_level(cfg.prefetch.build_builtins());
         Self {
             mem: Hierarchy::new(m),
             tlb: Tlb::new(tlb_cfg),
             wc: WriteCombineBuffer::new(m.wc),
-            l1_engines,
-            l2_engines,
+            l1_builtin,
+            l2_builtin,
+            l1_plugins: Vec::new(),
+            l2_plugins: Vec::new(),
             fills: FillTracker::new(m.lfb_entries, cfg.prefetch.streamer.table_size),
             issue: IssueUnit::new(m.window_accesses, m.issue_per_cycle),
             stalls: StallModel::new(),
@@ -72,6 +89,19 @@ impl Engine {
         &self.cfg
     }
 
+    /// Any engine observing L1 traffic (fast-path gate: skip observation
+    /// setup entirely when the lists are empty).
+    #[inline(always)]
+    fn l1_engines_active(&self) -> bool {
+        !self.l1_builtin.is_empty() || !self.l1_plugins.is_empty()
+    }
+
+    /// Any engine observing L2 traffic.
+    #[inline(always)]
+    fn l2_engines_active(&self) -> bool {
+        !self.l2_builtin.is_empty() || !self.l2_plugins.is_empty()
+    }
+
     /// Register an extra prefetch engine at its level, after the
     /// built-ins; the master prefetch enable still gates it. Registered
     /// engines survive [`Engine::reset`], but every [`Engine::prepare`]
@@ -79,8 +109,8 @@ impl Engine {
     /// bit-identical with a fresh construction) — re-register afterwards.
     pub fn register_prefetcher(&mut self, engine: Box<dyn PrefetchEngine>) {
         match engine.level() {
-            PrefetchLevel::L1 => self.l1_engines.push(engine),
-            PrefetchLevel::L2 => self.l2_engines.push(engine),
+            PrefetchLevel::L1 => self.l1_plugins.push(engine),
+            PrefetchLevel::L2 => self.l2_plugins.push(engine),
         }
     }
 
@@ -92,7 +122,10 @@ impl Engine {
         self.mem.reset();
         self.tlb.reset();
         self.wc.reset();
-        for e in self.l1_engines.iter_mut().chain(self.l2_engines.iter_mut()) {
+        for e in self.l1_builtin.iter_mut().chain(self.l2_builtin.iter_mut()) {
+            e.reset();
+        }
+        for e in self.l1_plugins.iter_mut().chain(self.l2_plugins.iter_mut()) {
             e.reset();
         }
         self.fills.reset(self.cfg.prefetch.streamer.table_size);
@@ -116,9 +149,11 @@ impl Engine {
         // Always rebuild the engine set from the config: a reused engine
         // must match `Engine::new(cfg)` exactly, including dropping any
         // extra engines added via `register_prefetcher`.
-        let (l1e, l2e) = partition_by_level(cfg.prefetch.build_engines());
-        self.l1_engines = l1e;
-        self.l2_engines = l2e;
+        let (l1b, l2b) = partition_builtins_by_level(cfg.prefetch.build_builtins());
+        self.l1_builtin = l1b;
+        self.l2_builtin = l2b;
+        self.l1_plugins.clear();
+        self.l2_plugins.clear();
         self.cfg = cfg;
         self.reset();
     }
@@ -145,10 +180,12 @@ impl Engine {
         self.mem.l1.stats = Default::default();
         self.mem.l2.stats = Default::default();
         self.mem.l3.stats = Default::default();
-        self.mem.dram.stats = Default::default();
         self.wc.stats = Default::default();
         self.tlb.stats = Default::default();
-        for e in self.l1_engines.iter_mut().chain(self.l2_engines.iter_mut()) {
+        for e in self.l1_builtin.iter_mut().chain(self.l2_builtin.iter_mut()) {
+            e.clear_stats();
+        }
+        for e in self.l1_plugins.iter_mut().chain(self.l2_plugins.iter_mut()) {
             e.clear_stats();
         }
         self.stalls.reset();
@@ -156,7 +193,10 @@ impl Engine {
         self.fills.rebase(t0);
         // DRAM service cursor rebuilt idle at t = 0: the first accesses
         // re-open rows, like a measurement starting at a row boundary.
-        self.mem.dram = crate::mem::Dram::new(self.cfg.machine.dram);
+        // In-place rebuild — identical to a fresh `Dram::new` with the
+        // same config, without churning the open-row allocation per
+        // warmup (§Perf).
+        self.mem.dram.reset();
     }
 
     /// Process a single vector access.
@@ -216,13 +256,22 @@ impl Engine {
     fn touch_line(&mut self, line: u64, ip: u32, is_store: bool, t: u64) -> (u64, Depth) {
         let m = self.cfg.machine;
         let pf_enabled = self.cfg.prefetch.enabled;
+        // The L1 observation gate, hoisted so the streaming-hit fast path
+        // pays two `len == 0` checks instead of an observation setup.
+        let l1_observes = pf_enabled && self.l1_engines_active();
 
         // Harvest a completed in-flight fill for this line first. L2
         // prefetches installed eagerly at issue time — harvesting them just
         // drops the transit record; demand and DCU fills install here.
-        if let Some(f) = self.fills.take_completed(line, t) {
-            if f.dest != FillDest::PrefetchL2 {
-                self.mem.install(line, f, self.issue.last_retire());
+        // `maybe_completed` bounds the probe: when nothing in flight can
+        // have landed by `t`, `take_completed` could only return `None`,
+        // so the HashMap probe is skipped outright (the dominant case on
+        // L1-hit-heavy traces).
+        if self.fills.maybe_completed(t) {
+            if let Some(f) = self.fills.take_completed(line, t) {
+                if f.dest != FillDest::PrefetchL2 {
+                    self.mem.install(line, f, self.issue.last_retire());
+                }
             }
         }
 
@@ -232,12 +281,12 @@ impl Engine {
                 self.mem.l1.mark_dirty(line);
             }
             // L1 engines observe L1 traffic (hits included).
-            if pf_enabled {
+            if l1_observes {
                 self.observe_l1(line, ip, false, is_store, t);
             }
             return (t + m.l1_lat * TICKS, Depth::L1Hit);
         }
-        if pf_enabled {
+        if l1_observes {
             self.observe_l1(line, ip, true, is_store, t);
         }
 
@@ -301,17 +350,21 @@ impl Engine {
         (complete, Depth::Dram)
     }
 
-    /// L1-level engine observation + request issue.
+    /// L1-level engine observation + request issue. Callers gate on
+    /// prefetch-enabled + [`Engine::l1_engines_active`].
     fn observe_l1(&mut self, line: u64, ip: u32, miss: bool, store: bool, t: u64) {
-        if self.l1_engines.is_empty() {
-            return;
-        }
         let obs = Observation { line, ip, miss, store };
         self.pf_scratch.clear();
-        let none = |_: u32| 0u32;
-        let ctx = PrefetchContext { level_hit: !miss, outstanding: &none };
-        for e in &mut self.l1_engines {
-            e.observe(obs, &ctx, &mut self.pf_scratch);
+        // L1 engines consult no per-stream budget.
+        for e in &mut self.l1_builtin {
+            e.observe(obs, !miss, |_| 0, &mut self.pf_scratch);
+        }
+        if !self.l1_plugins.is_empty() {
+            let none = |_: u32| 0u32;
+            let ctx = PrefetchContext { level_hit: !miss, outstanding: &none };
+            for e in &mut self.l1_plugins {
+                e.observe(obs, &ctx, &mut self.pf_scratch);
+            }
         }
         self.issue_scratch(t);
     }
@@ -319,7 +372,7 @@ impl Engine {
     /// L2-level engine observation + request issue. `l2_hit` gates the
     /// engines that trigger on misses (adjacent-line).
     fn observe_l2(&mut self, line: u64, store: bool, l2_hit: bool, t: u64) {
-        if !self.cfg.prefetch.enabled || self.l2_engines.is_empty() {
+        if !self.cfg.prefetch.enabled || !self.l2_engines_active() {
             return;
         }
         // Free up completed per-stream budget entries (amortized).
@@ -329,10 +382,15 @@ impl Engine {
         // on the way down); `miss` mirrors `ctx.level_hit` truthfully.
         let obs = Observation { line, ip: 0, miss: !l2_hit, store };
         let fills = &self.fills;
-        let outstanding = move |slot: u32| fills.outstanding(slot, t);
-        let ctx = PrefetchContext { level_hit: l2_hit, outstanding: &outstanding };
-        for e in &mut self.l2_engines {
-            e.observe(obs, &ctx, &mut self.pf_scratch);
+        for e in &mut self.l2_builtin {
+            e.observe(obs, l2_hit, |slot| fills.outstanding(slot, t), &mut self.pf_scratch);
+        }
+        if !self.l2_plugins.is_empty() {
+            let outstanding = move |slot: u32| fills.outstanding(slot, t);
+            let ctx = PrefetchContext { level_hit: l2_hit, outstanding: &outstanding };
+            for e in &mut self.l2_plugins {
+                e.observe(obs, &ctx, &mut self.pf_scratch);
+            }
         }
         self.issue_scratch(t);
     }
@@ -443,6 +501,12 @@ impl Engine {
 
     /// Snapshot the metrics.
     pub fn result(&self) -> RunResult {
+        let streamer = self
+            .l2_builtin
+            .iter()
+            .find_map(|e| e.streamer_stats())
+            .or_else(|| self.l2_plugins.iter().find_map(|e| e.streamer_stats()))
+            .unwrap_or_default();
         RunResult {
             counters: self.stalls.snapshot(self.issue.last_retire()),
             l1: self.mem.l1.stats,
@@ -451,7 +515,7 @@ impl Engine {
             dram: self.mem.dram.stats,
             wc: self.wc.stats,
             tlb: self.tlb.stats,
-            streamer: self.l2_engines.iter().find_map(|e| e.streamer_stats()).unwrap_or_default(),
+            streamer,
             freq_ghz: self.cfg.machine.freq_ghz,
         }
     }

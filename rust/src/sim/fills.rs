@@ -10,8 +10,20 @@
 //!
 //! The tracker also carries the per-stream outstanding-prefetch budgets the
 //! L2 streamer consults (cleaned amortized, every 32 observations).
+//!
+//! §Perf: two hot-path accelerators live here (see ARCHITECTURE.md §Perf):
+//!
+//! * [`FillTracker::maybe_completed`] — a monotone lower bound on the
+//!   earliest in-flight completion time. While `t` is below it (or nothing
+//!   is in flight), [`FillTracker::take_completed`] can only return `None`,
+//!   so the engine skips the per-access HashMap probe entirely.
+//! * Per-stream budgets are **sorted completion rings** ([`VecDeque`]s in
+//!   ascending completion order). [`FillTracker::outstanding`] answers the
+//!   streamer's budget query from the ring ends in O(1) in the common cases
+//!   (nothing expired / everything expired) and O(log budget) otherwise,
+//!   replacing the old per-query O(n) filter-count scan of an unsorted Vec.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::hash::{BuildHasherDefault, Hasher};
 
 /// Multiply-shift hasher for line-address keys (§Perf: the inflight map is
@@ -80,11 +92,18 @@ pub struct Merge {
 pub struct FillTracker {
     /// In-flight fills keyed by line address.
     inflight: LineMap<Fill>,
+    /// Lower bound on the earliest `complete_ticks` among `inflight`
+    /// entries; `u64::MAX` when the map is empty. May be stale-low after
+    /// removals (the true minimum only grows), so it is always safe to
+    /// probe when `t >= inflight_min_complete` — and always correct to
+    /// *skip* the probe when `t` is below it.
+    inflight_min_complete: u64,
     /// Outstanding *demand* fill completion times (ticks).
     lfb: Vec<u64>,
     lfb_entries: usize,
-    /// Outstanding prefetch completion ticks per streamer slot.
-    stream_outstanding: Vec<Vec<u64>>,
+    /// Per-slot sorted completion rings (ascending `complete_ticks`) of
+    /// outstanding prefetches; the ring length is the slot's live count.
+    stream_outstanding: Vec<VecDeque<u64>>,
     /// Accesses since the last completed-fill sweep.
     sweep_counter: u32,
     /// Observations since the last outstanding-prefetch cleanup.
@@ -100,9 +119,10 @@ impl FillTracker {
     pub fn new(lfb_entries: u32, stream_slots: u32) -> Self {
         Self {
             inflight: LineMap::with_capacity_and_hasher(1024, Default::default()),
+            inflight_min_complete: u64::MAX,
             lfb: Vec::with_capacity(lfb_entries as usize + 1),
             lfb_entries: lfb_entries as usize,
-            stream_outstanding: vec![Vec::new(); stream_slots as usize],
+            stream_outstanding: vec![VecDeque::new(); stream_slots as usize],
             sweep_counter: 0,
             clean_counter: 0,
         }
@@ -113,11 +133,38 @@ impl FillTracker {
         self.inflight.contains_key(&line)
     }
 
+    /// Could any in-flight fill have completed by `t`? `false` is a
+    /// guarantee that [`FillTracker::take_completed`] returns `None` for
+    /// every line — the engine's per-access fast-path gate that skips the
+    /// HashMap probe while nothing is in flight (or everything in flight
+    /// still has time to run).
+    #[inline(always)]
+    pub fn maybe_completed(&self, t: u64) -> bool {
+        t >= self.inflight_min_complete
+    }
+
+    /// Tighten the completion bound after an insert.
+    #[inline(always)]
+    fn note_inflight(&mut self, complete: u64) {
+        if complete < self.inflight_min_complete {
+            self.inflight_min_complete = complete;
+        }
+    }
+
+    /// Relax the (now possibly stale) bound once the map drains.
+    #[inline(always)]
+    fn note_removed(&mut self) {
+        if self.inflight.is_empty() {
+            self.inflight_min_complete = u64::MAX;
+        }
+    }
+
     /// Harvest the fill for `line` if it has completed by `t`.
     pub fn take_completed(&mut self, line: u64, t: u64) -> Option<Fill> {
         let f = self.inflight.get(&line).copied()?;
         if f.complete_ticks <= t {
             self.inflight.remove(&line);
+            self.note_removed();
             Some(f)
         } else {
             None
@@ -158,6 +205,7 @@ impl FillTracker {
             line,
             Fill { complete_ticks: complete, dest: FillDest::Demand, dirty, demanded: true },
         );
+        self.note_inflight(complete);
     }
 
     /// Record an L1 (DCU) prefetch completing at `complete` ticks.
@@ -171,13 +219,23 @@ impl FillTracker {
                 demanded: false,
             },
         );
+        self.note_inflight(complete);
     }
 
     /// Record an L2 (streamer/adjacent) prefetch completing at `complete`
     /// ticks, charged against the stream slot's outstanding budget.
     pub fn insert_prefetch_l2(&mut self, line: u64, complete: u64, stream: u32) {
-        if let Some(slot) = self.stream_outstanding.get_mut(stream as usize) {
-            slot.push(complete);
+        if let Some(ring) = self.stream_outstanding.get_mut(stream as usize) {
+            // Completion times are near-monotone (DRAM service starts are
+            // monotone; only the row hit/miss latency delta reorders), so
+            // this is a push_back in the overwhelmingly common case.
+            match ring.back() {
+                Some(&b) if b > complete => {
+                    let pos = ring.partition_point(|&c| c <= complete);
+                    ring.insert(pos, complete);
+                }
+                _ => ring.push_back(complete),
+            }
         }
         self.inflight.insert(
             line,
@@ -188,25 +246,37 @@ impl FillTracker {
                 demanded: false,
             },
         );
+        self.note_inflight(complete);
     }
 
-    /// Live outstanding prefetches for a stream slot at time `t`.
+    /// Live outstanding prefetches for a stream slot at time `t`: ring
+    /// entries with `complete > t`. O(1) when nothing or everything in the
+    /// ring has expired (the common cases), O(log len) otherwise.
     pub fn outstanding(&self, slot: u32, t: u64) -> u32 {
-        self.stream_outstanding
-            .get(slot as usize)
-            .map_or(0, |v| v.iter().filter(|&&c| c > t).count() as u32)
+        let Some(ring) = self.stream_outstanding.get(slot as usize) else { return 0 };
+        match (ring.front(), ring.back()) {
+            (None, _) => 0,
+            (Some(&first), _) if first > t => ring.len() as u32,
+            (_, Some(&last)) if last <= t => 0,
+            _ => (ring.len() - ring.partition_point(|&c| c <= t)) as u32,
+        }
     }
 
     /// Amortized cleanup of completed outstanding entries so budgets free
-    /// up — §Perf: every [`CLEAN_PERIOD`] observations instead of per-
-    /// observation; [`FillTracker::outstanding`] counts live entries
-    /// exactly regardless.
+    /// up — every [`CLEAN_PERIOD`] observations. The cadence is **pinned
+    /// semantics**, not a perf knob: observation times are not strictly
+    /// monotone (TLB-penalty jitter), so queries count `c > t` among the
+    /// entries *kept since the last cleanup* — cleaning eagerly would drop
+    /// entries a later lower-`t` query still counts and break the golden
+    /// oracle. Rings are sorted, so expiry pops a prefix.
     pub fn maybe_clean_outstanding(&mut self, t: u64) {
         self.clean_counter += 1;
         if self.clean_counter >= CLEAN_PERIOD {
             self.clean_counter = 0;
-            for s in &mut self.stream_outstanding {
-                s.retain(|&c| c > t);
+            for ring in &mut self.stream_outstanding {
+                while ring.front().is_some_and(|&c| c <= t) {
+                    ring.pop_front();
+                }
             }
         }
     }
@@ -234,6 +304,7 @@ impl FillTracker {
                 true
             }
         });
+        self.note_removed();
     }
 
     /// Nothing in flight (post-fence invariant).
@@ -246,11 +317,15 @@ impl FillTracker {
         for f in self.inflight.values_mut() {
             f.complete_ticks = f.complete_ticks.saturating_sub(t0);
         }
+        if self.inflight_min_complete != u64::MAX {
+            self.inflight_min_complete = self.inflight_min_complete.saturating_sub(t0);
+        }
         for l in &mut self.lfb {
             *l = l.saturating_sub(t0);
         }
-        for s in &mut self.stream_outstanding {
-            for t in s.iter_mut() {
+        for ring in &mut self.stream_outstanding {
+            // Saturating subtraction is monotone: the rings stay sorted.
+            for t in ring.iter_mut() {
                 *t = t.saturating_sub(t0);
             }
         }
@@ -260,12 +335,13 @@ impl FillTracker {
     /// under a different streamer configuration).
     pub fn reset(&mut self, stream_slots: u32) {
         self.inflight.clear();
+        self.inflight_min_complete = u64::MAX;
         self.lfb.clear();
         if self.stream_outstanding.len() != stream_slots as usize {
-            self.stream_outstanding.resize(stream_slots as usize, Vec::new());
+            self.stream_outstanding.resize(stream_slots as usize, VecDeque::new());
         }
-        for s in &mut self.stream_outstanding {
-            s.clear();
+        for ring in &mut self.stream_outstanding {
+            ring.clear();
         }
         self.sweep_counter = 0;
         self.clean_counter = 0;
@@ -318,6 +394,36 @@ mod tests {
     }
 
     #[test]
+    fn maybe_completed_bounds_the_probe() {
+        let mut f = FillTracker::new(8, 4);
+        assert!(!f.maybe_completed(u64::MAX - 1), "empty tracker: never probe");
+        f.insert_demand(1, 100, false);
+        f.insert_prefetch_l1(2, 70);
+        assert!(!f.maybe_completed(69), "everything still in flight");
+        assert!(f.maybe_completed(70), "earliest fill may have landed");
+        // Drain everything: the bound relaxes back to never-probe.
+        assert!(f.take_completed(2, 80).is_some());
+        assert!(f.maybe_completed(80), "stale-low bound stays probe-safe");
+        assert!(f.take_completed(1, 100).is_some());
+        assert!(!f.maybe_completed(u64::MAX - 1));
+    }
+
+    #[test]
+    fn maybe_completed_never_skips_a_harvestable_fill() {
+        // The gate contract: maybe_completed(t) == false must imply
+        // take_completed(line, t) == None for every line.
+        let mut f = FillTracker::new(8, 4);
+        f.insert_demand(1, 50, false);
+        f.insert_prefetch_l2(2, 90, 0);
+        for t in [0, 49, 50, 89, 90, 200] {
+            if !f.maybe_completed(t) {
+                assert!(f.take_completed(1, t).is_none());
+                assert!(f.take_completed(2, t).is_none());
+            }
+        }
+    }
+
+    #[test]
     fn outstanding_counts_only_live_entries() {
         let mut f = FillTracker::new(8, 4);
         f.insert_prefetch_l2(1, 50, 2);
@@ -327,6 +433,32 @@ mod tests {
         assert_eq!(f.outstanding(2, 200), 0);
         // Out-of-range slot is an empty budget.
         assert_eq!(f.outstanding(99, 0), 0);
+    }
+
+    #[test]
+    fn outstanding_ring_accepts_out_of_order_completions() {
+        // Row-miss/row-hit latency deltas can complete a later-issued
+        // prefetch earlier; the sorted ring must keep counts exact.
+        let mut f = FillTracker::new(8, 4);
+        f.insert_prefetch_l2(1, 300, 1);
+        f.insert_prefetch_l2(2, 210, 1); // issued later, completes earlier
+        f.insert_prefetch_l2(3, 250, 1);
+        assert_eq!(f.outstanding(1, 200), 3);
+        assert_eq!(f.outstanding(1, 210), 2);
+        assert_eq!(f.outstanding(1, 250), 1);
+        assert_eq!(f.outstanding(1, 300), 0);
+    }
+
+    #[test]
+    fn clean_preserves_counts_for_later_times() {
+        let mut f = FillTracker::new(8, 4);
+        f.insert_prefetch_l2(1, 50, 0);
+        f.insert_prefetch_l2(2, 150, 0);
+        for _ in 0..CLEAN_PERIOD {
+            f.maybe_clean_outstanding(100);
+        }
+        assert_eq!(f.outstanding(0, 100), 1, "expired entry cleaned, live one kept");
+        assert_eq!(f.outstanding(0, 150), 0);
     }
 
     #[test]
@@ -342,6 +474,7 @@ mod tests {
         landed.clear();
         f.collect_completed(u64::MAX, &mut landed);
         assert!(f.is_empty());
+        assert!(!f.maybe_completed(u64::MAX - 1), "drained tracker never probes");
     }
 
     #[test]
@@ -352,11 +485,24 @@ mod tests {
     }
 
     #[test]
+    fn rebase_shifts_bound_and_rings() {
+        let mut f = FillTracker::new(8, 4);
+        f.insert_demand(1, 100, false);
+        f.insert_prefetch_l2(2, 140, 0);
+        f.rebase(40);
+        assert!(!f.maybe_completed(59));
+        assert!(f.maybe_completed(60));
+        assert_eq!(f.outstanding(0, 99), 1);
+        assert_eq!(f.outstanding(0, 100), 0);
+    }
+
+    #[test]
     fn reset_resizes_stream_table() {
         let mut f = FillTracker::new(8, 4);
         f.insert_prefetch_l2(1, 50, 2);
         f.reset(6);
         assert_eq!(f.outstanding(2, 0), 0);
         assert_eq!(f.outstanding(5, 0), 0);
+        assert!(!f.maybe_completed(u64::MAX - 1));
     }
 }

@@ -19,12 +19,50 @@
 //!   iteration are emitted once (§5.1.2's redundancy elimination); without
 //!   it every unroll replica performs its loads/stores "even when
 //!   redundant" (the §6.3 isolated-experiment protocol).
+//!
+//! §Perf: the body of one inner-loop iteration is the same (access ×
+//! replica × portion slot × ip) sequence every time — only the loop-base
+//! values change. [`KernelTrace::new`] therefore compiles the body into an
+//! **emission plan** once: per access a flattened affine address form
+//! (`base + Σ coef·loop_val`, with the subscript bounds proven over the
+//! whole iteration domain so per-emission `Option` checks disappear), and
+//! per planned emission a precomputed address delta. `refill` evaluates
+//! each access's affine base once per iteration and then streams the plan
+//! with one add per emission — no `Vec` clones, no per-call bounds checks.
 
 use std::collections::HashSet;
 
 use crate::kernels::spec::AccessMode;
 use crate::transform::{Transformed, VEC_ELEMS};
 use crate::trace::{Access, Arrangement, Op};
+
+/// One array access as a flattened affine byte-address form:
+/// `addr(vals) = base + Σ coefs[l]·vals[l]`.
+struct FlatAccess {
+    base: i64,
+    /// One coefficient per spec loop (bytes per unit of the loop value).
+    coefs: Vec<i64>,
+    /// Every subscript proven in-bounds over the full iteration domain, so
+    /// evaluation can skip the per-dimension checks of
+    /// `KernelSpec::address`. The rare unproven access falls back to the
+    /// checked path.
+    safe: bool,
+}
+
+/// One planned emission of the per-iteration body (or outer prologue).
+struct PlanStep {
+    /// Index into `spec.accesses` / the `flat` table.
+    acc: u32,
+    /// Synthetic instruction pointer (unroll-slot id).
+    ip: u32,
+    /// Stride-loop delta (unroll replica index, in elements).
+    dk: u64,
+    /// Vector-loop delta (portion slot × [`VEC_ELEMS`], in elements).
+    dq: u64,
+    /// Precomputed `coefs[stride]·dk + coefs[vec]·dq` for the safe path.
+    daddr: i64,
+    mode: AccessMode,
+}
 
 /// A lazily-enumerable kernel trace.
 pub struct KernelTrace {
@@ -35,12 +73,19 @@ pub struct KernelTrace {
     body_shared: Vec<usize>,
     /// Accesses independent of the vectorized loop.
     outer: Vec<usize>,
+    /// Affine address form per access (parallel to `t.spec.accesses`).
+    flat: Vec<FlatAccess>,
+    /// Emissions fired once per *outer* iteration (inner-loop start).
+    outer_plan: Vec<PlanStep>,
+    /// Emissions fired every inner-loop iteration, in arrangement order.
+    body_plan: Vec<PlanStep>,
 }
 
 impl KernelTrace {
     pub fn new(t: Transformed) -> Self {
         let vec_loop = t.vector_loop;
         let stride_loop = t.stride_loop;
+        debug_assert_ne!(vec_loop, stride_loop, "transform guarantees distinct loops");
         let mut body_strided = Vec::new();
         let mut body_shared = Vec::new();
         let mut outer = Vec::new();
@@ -57,7 +102,106 @@ impl KernelTrace {
                 outer.push(i);
             }
         }
-        Self { t, body_strided, body_shared, outer }
+
+        // ---- flatten every access to an affine byte-address form --------
+        let n_loops = t.spec.loops.len();
+        let flat: Vec<FlatAccess> = t
+            .spec
+            .accesses
+            .iter()
+            .map(|acc| {
+                let arr = &t.spec.arrays[acc.array];
+                let eb = arr.elem_bytes as i64;
+                let mut base = arr.base as i64;
+                let mut coefs = vec![0i64; n_loops];
+                let mut safe = true;
+                for (d, e) in acc.idx.iter().enumerate() {
+                    let ds = arr.dim_stride(d) as i64;
+                    base += e.offset * ds * eb;
+                    for &(l, c) in &e.terms {
+                        coefs[l] += c * ds * eb;
+                    }
+                    // Interval bound of the subscript over the full domain
+                    // (loop values in [0, extent-1], conservatively).
+                    let (mut lo, mut hi) = (e.offset, e.offset);
+                    for &(l, c) in &e.terms {
+                        let max_v = t.spec.loops[l].extent.saturating_sub(1) as i64;
+                        if c >= 0 {
+                            hi += c * max_v;
+                        } else {
+                            lo += c * max_v;
+                        }
+                    }
+                    safe &= lo >= 0 && hi < arr.dims[d] as i64;
+                }
+                FlatAccess { base, coefs, safe }
+            })
+            .collect();
+
+        // ---- compile the emission plans ----------------------------------
+        let s = t.config.stride_unroll as u64;
+        let p = t.config.portion_unroll as u64;
+        let n_acc = t.spec.accesses.len() as u32;
+        let step = |ai: usize, dk: u64, dq: u64, ip: u32| PlanStep {
+            acc: ai as u32,
+            ip,
+            dk,
+            dq,
+            daddr: flat[ai].coefs[stride_loop] * dk as i64 + flat[ai].coefs[vec_loop] * dq as i64,
+            mode: t.spec.accesses[ai].mode,
+        };
+
+        // Outer accesses (register-resident across the inner loop): once
+        // per stride replica at the first inner iteration.
+        let mut outer_plan = Vec::new();
+        for k in 0..s {
+            for &ai in &outer {
+                outer_plan.push(step(ai, k, 0, ai as u32 + (k as u32) * n_acc));
+            }
+        }
+
+        // Body: shared accesses once per portion slot (per replica unless
+        // eliminating); strided accesses per (replica × portion slot), in
+        // the configured arrangement.
+        let shared_reps = if t.config.eliminate_redundant { 1 } else { s };
+        let mut body_plan = Vec::new();
+        let push_shared = |plan: &mut Vec<PlanStep>, k: u64, q: u64| {
+            for &ai in &body_shared {
+                plan.push(step(ai, k, q * VEC_ELEMS, ai as u32 + (q as u32) * 64));
+            }
+        };
+        let push_strided = |plan: &mut Vec<PlanStep>, k: u64, q: u64| {
+            for &ai in &body_strided {
+                let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
+                plan.push(step(ai, k, q * VEC_ELEMS, ip));
+            }
+        };
+        match t.config.arrangement {
+            Arrangement::Grouped => {
+                for k in 0..shared_reps {
+                    for q in 0..p {
+                        push_shared(&mut body_plan, k, q);
+                    }
+                }
+                for k in 0..s {
+                    for q in 0..p {
+                        push_strided(&mut body_plan, k, q);
+                    }
+                }
+            }
+            Arrangement::Interleaved => {
+                for q in 0..p {
+                    for k in 0..shared_reps {
+                        push_shared(&mut body_plan, k, q);
+                    }
+                    for k in 0..s {
+                        push_strided(&mut body_plan, k, q);
+                    }
+                }
+            }
+        }
+
+        Self { t, body_strided, body_shared, outer, flat, outer_plan, body_plan }
     }
 
     pub fn transformed(&self) -> &Transformed {
@@ -113,6 +257,8 @@ pub struct TraceCursor<'a> {
     counters: Vec<u64>,
     /// Concrete loop values (element units) derived from counters.
     vals: Vec<u64>,
+    /// Per-access affine base address at the refill-base loop values.
+    base_scratch: Vec<i64>,
     buf: Vec<Access>,
     buf_pos: usize,
     done: bool,
@@ -126,6 +272,7 @@ impl<'a> TraceCursor<'a> {
             kt,
             counters: vec![0; n],
             vals: vec![0; kt.t.spec.loops.len()],
+            base_scratch: Vec::with_capacity(kt.t.spec.accesses.len()),
             buf: Vec::with_capacity(256),
             buf_pos: 0,
             done: false,
@@ -185,24 +332,41 @@ impl<'a> TraceCursor<'a> {
         self.buf.push(Access::new(addr, op, 32, ip));
     }
 
-    fn emit_access(&mut self, acc_idx: usize, vals: &[u64], ip: u32) {
-        let t = &self.kt.t;
-        let acc = &t.spec.accesses[acc_idx];
-        if let Some(addr) = t.spec.address(acc, vals) {
-            match acc.mode {
-                AccessMode::Read => self.emit(addr, false, ip),
-                AccessMode::Write => self.emit(addr, true, ip),
-                AccessMode::ReadWrite => {
-                    self.emit(addr, false, ip);
-                    self.emit(addr, true, ip);
+    /// Fire one planned emission. `base_stride`/`base_vec` are the
+    /// refill-base values of the stride/vector loops (the only loop values
+    /// a plan step displaces).
+    fn emit_step(&mut self, step: &PlanStep, base_stride: u64, base_vec: u64) {
+        let kt = self.kt;
+        let ai = step.acc as usize;
+        let addr = if kt.flat[ai].safe {
+            // Affine fast path: per-iteration base + per-step delta.
+            (self.base_scratch[ai] + step.daddr) as u64
+        } else {
+            // Checked fallback (unproven bounds): evaluate like the
+            // pre-plan generator did, skipping out-of-bounds silently.
+            let t = &kt.t;
+            self.vals[t.stride_loop] = base_stride + step.dk;
+            self.vals[t.vector_loop] = base_vec + step.dq;
+            match t.spec.address(&t.spec.accesses[ai], &self.vals) {
+                Some(a) => a,
+                None => {
+                    debug_assert!(false, "library kernels are sized in-bounds");
+                    return;
                 }
             }
-        } else {
-            debug_assert!(false, "library kernels are sized in-bounds");
+        };
+        match step.mode {
+            AccessMode::Read => self.emit(addr, false, step.ip),
+            AccessMode::Write => self.emit(addr, true, step.ip),
+            AccessMode::ReadWrite => {
+                self.emit(addr, false, step.ip);
+                self.emit(addr, true, step.ip);
+            }
         }
     }
 
-    /// Fill the buffer with one innermost-loop iteration's accesses.
+    /// Fill the buffer with one innermost-loop iteration's accesses by
+    /// streaming the precompiled emission plan.
     fn refill(&mut self) {
         self.buf.clear();
         self.buf_pos = 0;
@@ -211,87 +375,36 @@ impl<'a> TraceCursor<'a> {
         }
         self.sync_vals();
 
-        let t = &self.kt.t;
-        let s = t.config.stride_unroll as u64;
-        let p = t.config.portion_unroll as u64;
-        let vec_loop = t.vector_loop;
-        let stride_loop = t.stride_loop;
+        // `kt` is a plain shared reference held by the cursor: copying it
+        // out lets the plan iteration below borrow `self` mutably.
+        let kt = self.kt;
+        let t = &kt.t;
         let inner_pos = t.order.len() - 1;
         let at_inner_start = self.counters[inner_pos] == 0;
-        let base_vals = self.vals.clone();
-        let n_acc = t.spec.accesses.len() as u32;
 
-        // `kt` is a plain shared reference held by the cursor: copying it
-        // out lets the emit calls below borrow `self` mutably without
-        // cloning the access-index vectors every refill (§Perf: refill is
-        // the trace generator's hot path).
-        let kt = self.kt;
+        // Per-access affine bases at the refill-base loop values.
+        self.base_scratch.clear();
+        for fa in &kt.flat {
+            let mut a = fa.base;
+            for (l, &c) in fa.coefs.iter().enumerate() {
+                if c != 0 {
+                    a += c * self.vals[l] as i64;
+                }
+            }
+            self.base_scratch.push(a);
+        }
+        let base_stride = self.vals[t.stride_loop];
+        let base_vec = self.vals[t.vector_loop];
 
         // Outer accesses (register-resident across the inner loop): fire at
         // the first inner iteration, once per stride replica.
         if at_inner_start {
-            let mut vals = base_vals.clone();
-            for k in 0..s {
-                vals[stride_loop] = base_vals[stride_loop] + k;
-                for &ai in &kt.outer {
-                    let ip = ai as u32 + (k as u32) * n_acc;
-                    self.emit_access(ai, &vals, ip);
-                }
+            for step in &kt.outer_plan {
+                self.emit_step(step, base_stride, base_vec);
             }
         }
-
-        // Body: shared accesses once per portion slot; strided accesses per
-        // (replica × portion slot) in the configured arrangement.
-        let eliminate = t.config.eliminate_redundant;
-        let arrangement = t.config.arrangement;
-
-        // Shared operands (e.g. x[j] in mxv): one load per portion slot
-        // when eliminating; otherwise each replica re-loads them.
-        let shared_reps = if eliminate { 1 } else { s };
-        let mut vals = base_vals.clone();
-        match arrangement {
-            Arrangement::Grouped => {
-                for k in 0..shared_reps {
-                    for q in 0..p {
-                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
-                        vals[stride_loop] = base_vals[stride_loop] + k;
-                        for &ai in &kt.body_shared {
-                            let ip = ai as u32 + (q as u32) * 64;
-                            self.emit_access(ai, &vals, ip);
-                        }
-                    }
-                }
-                for k in 0..s {
-                    for q in 0..p {
-                        vals[stride_loop] = base_vals[stride_loop] + k;
-                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
-                        for &ai in &kt.body_strided {
-                            let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
-                            self.emit_access(ai, &vals, ip);
-                        }
-                    }
-                }
-            }
-            Arrangement::Interleaved => {
-                for q in 0..p {
-                    for k in 0..shared_reps {
-                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
-                        vals[stride_loop] = base_vals[stride_loop] + k;
-                        for &ai in &kt.body_shared {
-                            let ip = ai as u32 + (q as u32) * 64;
-                            self.emit_access(ai, &vals, ip);
-                        }
-                    }
-                    for k in 0..s {
-                        vals[stride_loop] = base_vals[stride_loop] + k;
-                        vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
-                        for &ai in &kt.body_strided {
-                            let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
-                            self.emit_access(ai, &vals, ip);
-                        }
-                    }
-                }
-            }
+        for step in &kt.body_plan {
+            self.emit_step(step, base_stride, base_vec);
         }
 
         // Advance the loop nest (innermost fastest).
@@ -452,6 +565,200 @@ mod tests {
             .filter(|a| a.addr >= y_base && a.addr < y_base + y_bytes)
             .count() as u64;
         assert_eq!(y_accesses, rows * 2, "load+store once per row");
+    }
+
+    /// The pre-plan lowering, reimplemented on the checked
+    /// `KernelSpec::address` evaluator: nested (replica × portion) loops
+    /// over cloned loop-value vectors, exactly as `refill` worked before
+    /// the emission plan existed. The differential oracle for the plan.
+    fn reference_trace(kt: &KernelTrace, limit: usize) -> Vec<Access> {
+        let t = &kt.t;
+        let s = t.config.stride_unroll as u64;
+        let p = t.config.portion_unroll as u64;
+        let vec_loop = t.vector_loop;
+        let stride_loop = t.stride_loop;
+        let n_acc = t.spec.accesses.len() as u32;
+        let n = t.order.len();
+        if t.order.iter().any(|&l| t.spec.loops[l].extent == 0) {
+            return Vec::new();
+        }
+
+        let trips = |pos: usize| -> u64 {
+            let l = t.order[pos];
+            let e = t.spec.loops[l].extent;
+            if l == t.stride_loop {
+                e / s
+            } else if l == t.vector_loop {
+                e / (VEC_ELEMS * p)
+            } else {
+                e
+            }
+        };
+
+        fn emit_ref(
+            t: &Transformed,
+            seen: &mut HashSet<(u64, bool)>,
+            out: &mut Vec<Access>,
+            addr: u64,
+            store: bool,
+            ip: u32,
+        ) {
+            if t.config.eliminate_redundant && !seen.insert((addr, store)) {
+                return;
+            }
+            let op = match (store, addr % 32 == 0) {
+                (false, true) => Op::Load,
+                (false, false) => Op::LoadU,
+                (true, true) => Op::Store,
+                (true, false) => Op::StoreU,
+            };
+            out.push(Access::new(addr, op, 32, ip));
+        }
+
+        fn emit_access_ref(
+            t: &Transformed,
+            seen: &mut HashSet<(u64, bool)>,
+            out: &mut Vec<Access>,
+            ai: usize,
+            vals: &[u64],
+            ip: u32,
+        ) {
+            let acc = &t.spec.accesses[ai];
+            let addr = t.spec.address(acc, vals).expect("in-bounds by library sizing");
+            match acc.mode {
+                AccessMode::Read => emit_ref(t, seen, out, addr, false, ip),
+                AccessMode::Write => emit_ref(t, seen, out, addr, true, ip),
+                AccessMode::ReadWrite => {
+                    emit_ref(t, seen, out, addr, false, ip);
+                    emit_ref(t, seen, out, addr, true, ip);
+                }
+            }
+        }
+
+        let mut out: Vec<Access> = Vec::new();
+        let mut counters = vec![0u64; n];
+        let mut seen: HashSet<(u64, bool)> = HashSet::new();
+        'nest: loop {
+            // sync_vals
+            let mut base_vals = vec![0u64; t.spec.loops.len()];
+            for (pos, &l) in t.order.iter().enumerate() {
+                let c = counters[pos];
+                base_vals[l] = if l == t.stride_loop {
+                    c * s
+                } else if l == t.vector_loop {
+                    c * VEC_ELEMS * p
+                } else {
+                    c
+                };
+            }
+            seen.clear();
+
+            if counters[n - 1] == 0 {
+                let mut vals = base_vals.clone();
+                for k in 0..s {
+                    vals[stride_loop] = base_vals[stride_loop] + k;
+                    for &ai in &kt.outer {
+                        let ip = ai as u32 + (k as u32) * n_acc;
+                        emit_access_ref(t, &mut seen, &mut out, ai, &vals, ip);
+                    }
+                }
+            }
+            let shared_reps = if t.config.eliminate_redundant { 1 } else { s };
+            let mut vals = base_vals.clone();
+            // (k, q, strided?) emission order per arrangement.
+            let mut slots: Vec<(u64, u64, bool)> = Vec::new();
+            match t.config.arrangement {
+                Arrangement::Grouped => {
+                    for k in 0..shared_reps {
+                        for q in 0..p {
+                            slots.push((k, q, false));
+                        }
+                    }
+                    for k in 0..s {
+                        for q in 0..p {
+                            slots.push((k, q, true));
+                        }
+                    }
+                }
+                Arrangement::Interleaved => {
+                    for q in 0..p {
+                        for k in 0..shared_reps {
+                            slots.push((k, q, false));
+                        }
+                        for k in 0..s {
+                            slots.push((k, q, true));
+                        }
+                    }
+                }
+            }
+            for (k, q, is_strided) in slots {
+                vals[stride_loop] = base_vals[stride_loop] + k;
+                vals[vec_loop] = base_vals[vec_loop] + q * VEC_ELEMS;
+                if is_strided {
+                    for &ai in &kt.body_strided {
+                        let ip = 128 + ai as u32 + (k as u32 * p as u32 + q as u32) * 16;
+                        emit_access_ref(t, &mut seen, &mut out, ai, &vals, ip);
+                    }
+                } else {
+                    for &ai in &kt.body_shared {
+                        let ip = ai as u32 + (q as u32) * 64;
+                        emit_access_ref(t, &mut seen, &mut out, ai, &vals, ip);
+                    }
+                }
+            }
+            if out.len() >= limit {
+                break 'nest;
+            }
+            // advance
+            let mut pos = n as isize - 1;
+            loop {
+                if pos < 0 {
+                    break 'nest;
+                }
+                counters[pos as usize] += 1;
+                if counters[pos as usize] < trips(pos as usize) {
+                    break;
+                }
+                counters[pos as usize] = 0;
+                pos -= 1;
+            }
+        }
+        out.truncate(limit);
+        out
+    }
+
+    /// The emission plan (affine fast path + precompiled step order) must
+    /// reproduce the checked pre-plan lowering access-for-access — address,
+    /// op, ip and order — over the paper kernel library, both arrangements
+    /// and redundancy elimination on/off.
+    #[test]
+    fn planned_addresses_match_checked_evaluation() {
+        const LIMIT: usize = 20_000;
+        let ks = paper_kernels(2 * MIB);
+        for k in &ks {
+            for (s, p) in [(1, 1), (3, 2), (4, 1)] {
+                for arrangement in [Arrangement::Grouped, Arrangement::Interleaved] {
+                    for eliminate in [false, true] {
+                        let mut cfg = StridingConfig::new(s, p);
+                        cfg.arrangement = arrangement;
+                        cfg.eliminate_redundant = eliminate;
+                        let t = match transform(&k.spec, cfg) {
+                            Ok(t) => t,
+                            Err(_) => continue,
+                        };
+                        let kt = KernelTrace::new(t);
+                        let want = reference_trace(&kt, LIMIT);
+                        let got: Vec<Access> = kt.iter().take(want.len()).collect();
+                        assert_eq!(
+                            got, want,
+                            "{} s={s} p={p} {arrangement:?} elim={eliminate}: \
+                             plan diverged from checked lowering",
+                            k.name
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

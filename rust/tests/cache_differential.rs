@@ -1,0 +1,339 @@
+//! Differential property test for the SoA cache (§Perf overhaul).
+//!
+//! `mem::Cache` stores its ways struct-of-arrays with validity folded into
+//! a sentinel tag and an O(ways) Tree-PLRU victim walk. This test pins its
+//! observable behavior — every return value, every statistic, the resident
+//! set — against a deliberately naive array-of-structs reference model that
+//! re-implements the pre-SoA semantics line for line (padded `Entry`
+//! records, iterator-style victim picks, the same xorshift RNG), across
+//! random insert/lookup/dirty/invalidate sequences and all three
+//! replacement policies. The golden-determinism suite already pins the
+//! *engine* bit-for-bit; this covers the cache surface directly, including
+//! op interleavings (e.g. invalidate-then-refill) the engine rarely emits.
+
+use multistride::mem::{Cache, CacheConfig, Replacement};
+use multistride::util::proptest::{check, Config};
+use multistride::util::Rng;
+
+// ---- naive AoS reference model -----------------------------------------
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    prefetched: bool,
+    referenced: bool,
+    stamp: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct RefStats {
+    demand_hits: u64,
+    demand_misses: u64,
+    prefetch_hits: u64,
+    evictions: u64,
+    dirty_evictions: u64,
+    unused_prefetch_evictions: u64,
+    prefetch_installs: u64,
+}
+
+/// The pre-SoA cache, kept as simple as possible: one `Entry` per way,
+/// linear scans everywhere, the halving-walk PLRU pick.
+struct RefCache {
+    cfg: CacheConfig,
+    set_mask: u64,
+    n_slices: u64,
+    shift: u32,
+    entries: Vec<Entry>,
+    clock: u64,
+    rng: u64,
+    stats: RefStats,
+}
+
+impl RefCache {
+    fn new(cfg: CacheConfig) -> Self {
+        let n_sets = cfg.n_sets();
+        let sets_per_slice = n_sets & n_sets.wrapping_neg();
+        Self {
+            cfg,
+            set_mask: sets_per_slice - 1,
+            n_slices: n_sets / sets_per_slice,
+            shift: sets_per_slice.trailing_zeros(),
+            entries: vec![Entry::default(); (n_sets * cfg.ways as u64) as usize],
+            clock: 0,
+            rng: 0x9e3779b97f4a7c15,
+            stats: RefStats::default(),
+        }
+    }
+
+    fn set_range(&self, line: u64) -> std::ops::Range<usize> {
+        let within = line & self.set_mask;
+        let set = if self.n_slices == 1 {
+            within
+        } else {
+            ((line >> self.shift) & 3) % self.n_slices * (self.set_mask + 1) + within
+        };
+        let base = set as usize * self.cfg.ways as usize;
+        base..base + self.cfg.ways as usize
+    }
+
+    fn demand_lookup(&mut self, line: u64) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        for e in &mut self.entries[self.set_range(line)] {
+            if e.valid && e.tag == line {
+                e.stamp = clock;
+                if e.prefetched && !e.referenced {
+                    self.stats.prefetch_hits += 1;
+                }
+                e.referenced = true;
+                self.stats.demand_hits += 1;
+                return true;
+            }
+        }
+        self.stats.demand_misses += 1;
+        false
+    }
+
+    fn contains(&self, line: u64) -> bool {
+        self.entries[self.set_range(line)].iter().any(|e| e.valid && e.tag == line)
+    }
+
+    fn mark_dirty(&mut self, line: u64) {
+        for e in &mut self.entries[self.set_range(line)] {
+            if e.valid && e.tag == line {
+                e.dirty = true;
+                return;
+            }
+        }
+    }
+
+    /// Returns `Some((victim_line, dirty, unused_prefetch))` on eviction.
+    fn insert(&mut self, line: u64, prefetch: bool, dirty: bool) -> Option<(u64, bool, bool)> {
+        self.clock += 1;
+        let clock = self.clock;
+        if prefetch {
+            self.stats.prefetch_installs += 1;
+        }
+        let range = self.set_range(line);
+        for e in &mut self.entries[range.clone()] {
+            if e.valid && e.tag == line {
+                e.stamp = clock;
+                e.dirty |= dirty;
+                if !prefetch {
+                    e.referenced = true;
+                }
+                return None;
+            }
+        }
+        for e in &mut self.entries[range.clone()] {
+            if !e.valid {
+                *e = Entry {
+                    tag: line,
+                    valid: true,
+                    dirty,
+                    prefetched: prefetch,
+                    referenced: !prefetch,
+                    stamp: clock,
+                };
+                return None;
+            }
+        }
+        let victim_off = match self.cfg.replacement {
+            Replacement::Lru => {
+                let mut best = 0usize;
+                let mut best_stamp = u64::MAX;
+                for (i, e) in self.entries[range.clone()].iter().enumerate() {
+                    if e.stamp < best_stamp {
+                        best_stamp = e.stamp;
+                        best = i;
+                    }
+                }
+                best
+            }
+            Replacement::TreePlru => {
+                // The seed's halving walk: descend into the half whose max
+                // stamp is older (ties left), then take the older leaf.
+                let ways = self.cfg.ways as usize;
+                let slice = &self.entries[range.clone()];
+                let (mut lo, mut hi) = (0usize, ways);
+                while hi - lo > 1 {
+                    let mid = (lo + hi) / 2;
+                    let left_max = slice[lo..mid].iter().map(|e| e.stamp).max().unwrap();
+                    let right_max = slice[mid..hi].iter().map(|e| e.stamp).max().unwrap();
+                    if left_max <= right_max {
+                        hi = mid;
+                    } else {
+                        lo = mid;
+                    }
+                }
+                let mut best = 0usize;
+                let mut best_stamp = u64::MAX;
+                for (i, e) in slice.iter().enumerate().take(hi).skip(lo) {
+                    if e.stamp < best_stamp {
+                        best_stamp = e.stamp;
+                        best = i;
+                    }
+                }
+                best
+            }
+            Replacement::Random => {
+                self.rng ^= self.rng << 13;
+                self.rng ^= self.rng >> 7;
+                self.rng ^= self.rng << 17;
+                (self.rng % self.cfg.ways as u64) as usize
+            }
+        };
+        let idx = range.start + victim_off;
+        let victim = self.entries[idx];
+        self.stats.evictions += 1;
+        if victim.dirty {
+            self.stats.dirty_evictions += 1;
+        }
+        let unused = victim.prefetched && !victim.referenced;
+        if unused {
+            self.stats.unused_prefetch_evictions += 1;
+        }
+        self.entries[idx] = Entry {
+            tag: line,
+            valid: true,
+            dirty,
+            prefetched: prefetch,
+            referenced: !prefetch,
+            stamp: clock,
+        };
+        Some((victim.tag, victim.dirty, unused))
+    }
+
+    fn invalidate(&mut self, line: u64) -> bool {
+        for e in &mut self.entries[self.set_range(line)] {
+            if e.valid && e.tag == line {
+                let dirty = e.dirty;
+                e.valid = false;
+                return dirty;
+            }
+        }
+        false
+    }
+
+    fn resident_lines(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+}
+
+// ---- the differential driver --------------------------------------------
+
+/// Geometries under test: tiny power-of-two sets, wider PLRU-friendly
+/// associativity, and two non-power-of-two (sliced) set counts — including
+/// an odd way count so the PLRU halving walk sees uneven halves.
+const GEOMETRIES: [(u64, u32); 4] = [(512, 2), (2048, 8), (1536, 2), (1152, 3)];
+const POLICIES: [Replacement; 3] = [Replacement::Lru, Replacement::TreePlru, Replacement::Random];
+
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    geometry: usize,
+    policy: usize,
+    seed: u64,
+    ops: u32,
+}
+
+fn run_case(c: &Case) -> bool {
+    let (size, ways) = GEOMETRIES[c.geometry];
+    let cfg = CacheConfig::new(size, ways, POLICIES[c.policy]);
+    let mut soa = Cache::new(cfg);
+    let mut aos = RefCache::new(cfg);
+    let mut rng = Rng::new(c.seed);
+    // A small line universe (a few multiples of the set count) forces
+    // aliasing, evictions and reinsertion of previously invalidated lines.
+    let universe = cfg.n_sets() * ways as u64 * 3;
+    for _ in 0..c.ops {
+        let line = rng.below(universe);
+        match rng.below(8) {
+            0..=3 => {
+                let prefetch = rng.below(3) == 0;
+                let dirty = rng.below(3) == 0;
+                let got = soa.insert(line, prefetch, dirty);
+                let want = aos.insert(line, prefetch, dirty);
+                let got = got.map(|e| (e.line, e.dirty, e.unused_prefetch));
+                if got != want {
+                    return false;
+                }
+            }
+            4 | 5 => {
+                if soa.demand_lookup(line) != aos.demand_lookup(line) {
+                    return false;
+                }
+            }
+            6 => {
+                soa.mark_dirty(line);
+                aos.mark_dirty(line);
+            }
+            _ => {
+                if soa.invalidate(line) != aos.invalidate(line) {
+                    return false;
+                }
+            }
+        }
+        if soa.contains(line) != aos.contains(line) {
+            return false;
+        }
+    }
+    // End-state agreement: statistics, residency, full-universe membership.
+    let s = soa.stats;
+    let got = RefStats {
+        demand_hits: s.demand_hits,
+        demand_misses: s.demand_misses,
+        prefetch_hits: s.prefetch_hits,
+        evictions: s.evictions,
+        dirty_evictions: s.dirty_evictions,
+        unused_prefetch_evictions: s.unused_prefetch_evictions,
+        prefetch_installs: s.prefetch_installs,
+    };
+    if got != aos.stats {
+        return false;
+    }
+    if soa.resident_lines() != aos.resident_lines() {
+        return false;
+    }
+    (0..universe).all(|l| soa.contains(l) == aos.contains(l))
+}
+
+#[test]
+fn soa_cache_matches_naive_reference_model() {
+    check(
+        Config { cases: 96, seed: 0x5CA1AB1E },
+        |r, size| Case {
+            geometry: r.below(GEOMETRIES.len() as u64) as usize,
+            policy: r.below(POLICIES.len() as u64) as usize,
+            seed: r.next_u64(),
+            // Op count ramps with the size hint so shrinking finds small
+            // counterexamples first.
+            ops: 16 + size * 40,
+        },
+        run_case,
+    );
+}
+
+/// `reset` must restore post-construction behavior exactly (including the
+/// replacement RNG): a reset cache replays a fresh reference model.
+#[test]
+fn reset_cache_matches_fresh_reference_model() {
+    let cfg = CacheConfig::new(1536, 2, Replacement::Random);
+    let mut soa = Cache::new(cfg);
+    let mut rng = Rng::new(0xD1FF);
+    for _ in 0..4096 {
+        soa.insert(rng.below(256), rng.below(2) == 0, rng.below(2) == 0);
+    }
+    soa.reset();
+    assert_eq!(soa.resident_lines(), 0);
+    assert_eq!(soa.stats, Default::default());
+    let mut aos = RefCache::new(cfg);
+    let mut rng = Rng::new(0xFEED);
+    for _ in 0..4096 {
+        let line = rng.below(256);
+        let prefetch = rng.below(2) == 0;
+        let got = soa.insert(line, prefetch, false).map(|e| (e.line, e.dirty, e.unused_prefetch));
+        assert_eq!(got, aos.insert(line, prefetch, false), "replay diverged post-reset");
+    }
+}
