@@ -19,7 +19,7 @@ fn main() {
     let mut gains = Vec::new();
     for kernel in figure6_kernels() {
         let s = common::stage(&format!("sweep {kernel}"), || {
-            summarize_kernel(machine, kernel, scale.kernel_bytes, max_total)
+            summarize_kernel(machine, &kernel, scale.kernel_bytes, max_total)
         });
         println!(
             "{:>12} | {:>14} {:>3} x {:<3} | {:>12.2} | {:>10.2} | {:>7.2}x",

@@ -15,7 +15,7 @@ fn main() {
         let machine = preset.config();
         for kernel in figure7_kernels() {
             let rows = common::stage(&format!("{} / {kernel}", machine.name), || {
-                figure7(machine, kernel, scale.kernel_bytes, max_total)
+                figure7(machine, &kernel, scale.kernel_bytes, max_total)
             });
             print!("{}", render_comparison(machine.name, &rows));
             println!();

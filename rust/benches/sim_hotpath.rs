@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use multistride::config::coffee_lake;
 use multistride::coordinator::experiments::EngineCache;
-use multistride::kernels::library::kernel_by_name;
+use multistride::kernels::library::{all_kernels, kernel_by_name};
 use multistride::kernels::micro::{MicroBench, MicroOp};
 use multistride::sim::{Engine, EngineConfig};
 use multistride::trace::KernelTrace;
@@ -30,7 +30,7 @@ use multistride::transform::{transform, StridingConfig};
 
 /// One measured scenario, kept for the JSON record.
 struct Scenario {
-    label: &'static str,
+    label: String,
     accesses: u64,
     seconds: f64,
 }
@@ -41,7 +41,8 @@ impl Scenario {
     }
 }
 
-fn rate(results: &mut Vec<Scenario>, label: &'static str, accesses: u64, f: impl FnOnce()) {
+fn rate(results: &mut Vec<Scenario>, label: impl Into<String>, accesses: u64, f: impl FnOnce()) {
+    let label = label.into();
     let t = Instant::now();
     f();
     let s = t.elapsed().as_secs_f64();
@@ -106,7 +107,7 @@ fn write_json(path: &str, bytes: u64, sweep_bytes: u64, results: &[Scenario]) {
     for (i, r) in results.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"label\": \"{}\", \"accesses\": {}, \"seconds\": {:.6}, \"accesses_per_sec\": {:.1}}}{}\n",
-            json_escape(r.label),
+            json_escape(&r.label),
             r.accesses,
             r.seconds,
             r.rate(),
@@ -171,6 +172,31 @@ fn main() {
             });
         } else {
             rate(&mut results, label, n, || {
+                let mut e = Engine::new(EngineConfig::new(m));
+                let _ = e.run(kt.iter());
+            });
+        }
+    }
+
+    // Kernel-universe trajectory: every registered kernel (paper +
+    // extended) simulated at its single-stride baseline and the S=8
+    // multi-strided variant, so new kernels land in the perf JSON
+    // automatically (one `kernel <name> s=N` scenario each).
+    let kernel_budget = (bytes / 8).max(2 * 1024 * 1024);
+    for pk in all_kernels(kernel_budget) {
+        for s in [1u32, 8] {
+            let t = match transform(&pk.spec, StridingConfig::new(s, 1)) {
+                Ok(t) => t,
+                Err(e) => {
+                    // Visible skip: a missing scenario in the JSON must
+                    // never read as silent coverage.
+                    println!("{:>42}: SKIPPED ({e})", format!("kernel {} s={s}", pk.name));
+                    continue;
+                }
+            };
+            let kt = KernelTrace::new(t);
+            let n = kt.len_estimate();
+            rate(&mut results, format!("kernel {} s={s}", pk.name), n, || {
                 let mut e = Engine::new(EngineConfig::new(m));
                 let _ = e.run(kt.iter());
             });

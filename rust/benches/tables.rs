@@ -1,10 +1,11 @@
 //! Bench harness — Tables 1 and 2: the kernel overview (with stride-stream
-//! profiles computed from the transform) and the machine presets.
+//! profiles computed from the transform) and the machine presets, plus the
+//! extended kernel universe in the same stride-profile format.
 
 mod common;
 
 use multistride::config::MachinePreset;
-use multistride::kernels::library::paper_kernels;
+use multistride::kernels::library::{extended_kernels, paper_kernels};
 use multistride::report::table::Table;
 use multistride::transform::{stride_profile, transform, StridingConfig};
 
@@ -32,6 +33,31 @@ fn main() {
         ]);
     }
     t1.print();
+    println!();
+
+    let mut tu = Table::new(&["name", "AT", "L", "S", "L/S", "loops", "description"])
+        .with_title("Extended kernel universe — stride columns computed at n=4");
+    for pk in extended_kernels(scale.kernel_bytes) {
+        // Visible skip, not a panic: same no-silent-coverage policy as the
+        // figure6 / variant_sweep paths.
+        let prof = match transform(&pk.spec, StridingConfig::new(4, 2)) {
+            Ok(tr) => stride_profile(&tr),
+            Err(e) => {
+                eprintln!("[tables] SKIPPED {}: {e}", pk.name);
+                continue;
+            }
+        };
+        tu.row(vec![
+            pk.name.clone(),
+            if pk.aligned { "A" } else { "U" }.into(),
+            prof.loads.to_string(),
+            prof.stores.to_string(),
+            prof.loadstores.to_string(),
+            pk.spec.loops.len().to_string(),
+            pk.description.into(),
+        ]);
+    }
+    tu.print();
     println!();
 
     let mut t2 = Table::new(&["machine", "freq", "L2", "L3", "paper BW", "model BW"])

@@ -1,10 +1,19 @@
-//! The surveyed compute kernels of Table 1, expressed in the loop-nest IR.
+//! The kernel universe: the surveyed compute kernels of Table 1 plus an
+//! extended family of PolyBench-style memory-bound kernels, all expressed
+//! in the loop-nest IR and lowered through the same generic transform.
 //!
 //! Sizing: each constructor takes a byte budget for the kernel's dominant
 //! array (the paper uses 2–4 GiB; the default simulator scale is 48 MiB —
 //! see [`crate::config::ScaleConfig`] for why that preserves behaviour).
 //! Matrix extents are rounded to multiples of 1024 so every striding
 //! configuration the experiments sweep divides them cleanly.
+//!
+//! [`paper_kernels`] is exactly the Table 1 set (its profiles are pinned by
+//! tests); [`extended_kernels`] is the growth set; [`all_kernels`] is the
+//! registry-facing union. Adding a kernel means writing one constructor
+//! here and appending it to [`extended_kernels`] — the transform, trace
+//! lowering, sweeps and report tables pick it up mechanically (see
+//! ARCHITECTURE.md §Kernel universe).
 
 use super::spec::{AccessMode, Array, ArrayAccess, IndexExpr, KernelSpec, LoopVar};
 
@@ -28,7 +37,10 @@ pub struct PaperKernel {
     /// Loop blocking applied (LB column).
     pub loop_blocking: bool,
     /// Paper's data sizes in GiB (isolated, comparison) — for Table 1.
+    /// `(0, 0)` for extended kernels the paper did not survey.
     pub data_gib: (f64, f64),
+    /// `true` for the extended (beyond-Table-1) kernel family.
+    pub extended: bool,
     /// The kernel body.
     pub spec: KernelSpec,
 }
@@ -44,6 +56,12 @@ fn square_extent(budget_bytes: u64) -> u64 {
 fn vec_extent(budget_bytes: u64) -> u64 {
     let n = budget_bytes / 4;
     (n / (1024 * 64)).max(1) * 1024 * 64
+}
+
+/// Interior extent of an `n`-wide stencil axis (2 border elements
+/// removed), rounded down to a sweep-divisible multiple of 64.
+fn interior_extent(n: u64) -> u64 {
+    ((n - 2) / 64) * 64
 }
 
 fn finished(mut spec: KernelSpec) -> KernelSpec {
@@ -79,6 +97,7 @@ pub fn mxv(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: false,
         data_gib: (4.0, 4.0),
+        extended: false,
         spec,
     }
 }
@@ -117,6 +136,7 @@ pub fn bicg(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: false,
         data_gib: (4.0, 4.0),
+        extended: false,
         spec,
     }
 }
@@ -143,7 +163,7 @@ pub fn conv(budget: u64) -> PaperKernel {
         AccessMode::Write,
     ));
     // Interior extents rounded to sweep-divisible multiples of 64.
-    let (ih, iw) = (((h - 2) / 64) * 64, ((w - 2) / 64) * 64);
+    let (ih, iw) = (interior_extent(h), interior_extent(w));
     let spec = finished(KernelSpec {
         name: "conv".into(),
         loops: vec![LoopVar::new("i", ih), LoopVar::new("j", iw)],
@@ -161,6 +181,7 @@ pub fn conv(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: false,
         data_gib: (2.0, 2.0),
+        extended: false,
         spec,
     }
 }
@@ -195,6 +216,7 @@ pub fn doitgen(budget: u64) -> PaperKernel {
         loop_interchange: true,
         loop_blocking: false,
         data_gib: (4.0, 0.4),
+        extended: false,
         spec,
     }
 }
@@ -232,6 +254,7 @@ pub fn gemverouter(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: false,
         data_gib: (4.0, 4.0),
+        extended: false,
         spec,
     }
 }
@@ -265,6 +288,7 @@ pub fn gemvermxv1(budget: u64) -> PaperKernel {
         loop_interchange: true,
         loop_blocking: false,
         data_gib: (4.0, 4.0),
+        extended: false,
         spec,
     }
 }
@@ -295,6 +319,7 @@ pub fn gemversum(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: true,
         data_gib: (4.0, 4.0),
+        extended: false,
         spec,
     }
 }
@@ -314,7 +339,7 @@ pub fn gemvermxv2(budget: u64) -> PaperKernel {
 pub fn jacobi2d(budget: u64) -> PaperKernel {
     let n = square_extent(budget);
     let (h, w) = (n, n);
-    let (ih, iw) = (((h - 2) / 64) * 64, ((w - 2) / 64) * 64);
+    let (ih, iw) = (interior_extent(h), interior_extent(w));
     let spec = finished(KernelSpec {
         name: "jacobi2d".into(),
         loops: vec![LoopVar::new("i", ih), LoopVar::new("j", iw)],
@@ -364,6 +389,7 @@ pub fn jacobi2d(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: false,
         data_gib: (2.0, 2.0),
+        extended: false,
         spec,
     }
 }
@@ -388,6 +414,7 @@ pub fn init(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: true,
         data_gib: (2.0, 2.0),
+        extended: false,
         spec,
     }
 }
@@ -415,6 +442,238 @@ pub fn writeback(budget: u64) -> PaperKernel {
         loop_interchange: false,
         loop_blocking: true,
         data_gib: (2.0, 2.0),
+        extended: false,
+        spec,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Extended kernel universe: PolyBench-style memory-bound kernels beyond
+// Table 1. No per-kernel lowering exists anywhere — each is only a spec;
+// the generic transform derives its single-stride baseline and S ∈ {2,4,8}
+// multi-strided variants (see `transform::variants`).
+// ---------------------------------------------------------------------------
+
+/// `3mm`: C[i][j] += A[i][k] · B[k][j] — one matrix-multiply stage of
+/// PolyBench `3mm`, restricted to a rank-8 panel (K = 8, outermost) so the
+/// trace volume stays within a small constant factor of the 2-D kernels.
+/// The first 3-deep nest in the library: striding unrolls the row loop `i`,
+/// giving S concurrent C/A row streams against a B row shared across
+/// replicas — the multi-strided GEMM schedule.
+pub fn mm3(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    const K: u64 = 8;
+    let spec = finished(KernelSpec {
+        name: "3mm".into(),
+        loops: vec![LoopVar::new("k", K), LoopVar::new("i", n), LoopVar::new("j", n)],
+        arrays: vec![
+            Array::new("A", &[n, K], 4),
+            Array::new("B", &[K, n], 4),
+            Array::new("C", &[n, n], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(1), IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var(0), IndexExpr::var(2)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(1), IndexExpr::var(2)], AccessMode::ReadWrite),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "3mm".into(),
+        description: "PolyBench 3mm stage (rank-8 panel GEMM)",
+        aligned: true,
+        has_init: true,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (0.0, 0.0),
+        extended: true,
+        spec,
+    }
+}
+
+/// `atax`: y[j] += A[i][j]·tmp[i] — the second phase of PolyBench `atax`
+/// (y = Aᵀ·(A·x)), isolated per the repo's gemver precedent: the first
+/// phase (`tmp = A·x`, an mxv shape already covered by `mxv`) must
+/// complete before this one, so fusing the two nests would carry a flow
+/// dependence through `tmp` and §5.1 would reject it. Isolated, `tmp` is
+/// a pure input broadcast per row and `y[j]` a streamed reduction — the
+/// transposed update shape of bicg's `s` stream, without its second
+/// accumulator.
+pub fn atax(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "atax".into(),
+        loops: vec![LoopVar::new("i", n), LoopVar::new("j", n)],
+        arrays: vec![
+            Array::new("A", &[n, n], 4),
+            Array::new("tmp", &[n], 4),
+            Array::new("y", &[n], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(1)], AccessMode::ReadWrite),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "atax".into(),
+        description: "Matrix Transpose Vector Update, atax phase 2 (PolyBench)",
+        aligned: true,
+        has_init: true,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (0.0, 0.0),
+        extended: true,
+        spec,
+    }
+}
+
+/// `fdtd2d`: the magnetic-field update of the PolyBench 2-D
+/// finite-difference time-domain kernel — `hz[i][j] -= 0.7·(ex[i][j+1] −
+/// ex[i][j] + ey[i+1][j] − ey[i][j])` over the interior (subscripts
+/// shifted by +1 so every offset is non-negative). Only this statement of
+/// the fdtd-2d time step is dependence-free when isolated (the fused
+/// three-statement body carries flow dependences between the field
+/// arrays, which §5.1 excludes — same isolation the paper applies via its
+/// LE column). Unaligned like the stencils: the ±1-element window breaks
+/// 32-byte alignment.
+pub fn fdtd2d(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    let (h, w) = (n, n);
+    let (ih, iw) = (interior_extent(h), interior_extent(w));
+    let c = |di: i64, dj: i64| vec![IndexExpr::var_plus(0, 1 + di), IndexExpr::var_plus(1, 1 + dj)];
+    let spec = finished(KernelSpec {
+        name: "fdtd2d".into(),
+        loops: vec![LoopVar::new("i", ih), LoopVar::new("j", iw)],
+        arrays: vec![
+            Array::new("ex", &[h, w], 4),
+            Array::new("ey", &[h, w], 4),
+            Array::new("hz", &[h, w], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(2, c(0, 0), AccessMode::ReadWrite),
+            ArrayAccess::new(0, c(0, 0), AccessMode::Read),
+            ArrayAccess::new(0, c(0, 1), AccessMode::Read),
+            ArrayAccess::new(1, c(0, 0), AccessMode::Read),
+            ArrayAccess::new(1, c(1, 0), AccessMode::Read),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "fdtd2d".into(),
+        description: "2D FDTD magnetic-field update (PolyBench fdtd-2d)",
+        aligned: false,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 1,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (0.0, 0.0),
+        extended: true,
+        spec,
+    }
+}
+
+/// `jacobi1d`: B[i+1] = ⅓·(A[i] + A[i+1] + A[i+2]) — the 1-D 3-point
+/// Jacobi stencil (PolyBench `jacobi-1d`). One loop, so the transform's
+/// loop blocking creates the stride axis, and the ±1-element window makes
+/// it the only *unaligned blocked* kernel in the universe.
+pub fn jacobi1d(budget: u64) -> PaperKernel {
+    let e = vec_extent(budget);
+    let spec = finished(KernelSpec {
+        name: "jacobi1d".into(),
+        loops: vec![LoopVar::new("i", e)],
+        arrays: vec![Array::new("A", &[e + 2], 4), Array::new("B", &[e + 2], 4)],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(0, vec![IndexExpr::var_plus(0, 1)], AccessMode::Read),
+            ArrayAccess::new(0, vec![IndexExpr::var_plus(0, 2)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var_plus(0, 1)], AccessMode::Write),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "jacobi1d".into(),
+        description: "1D Jacobi Stencil (PolyBench)",
+        aligned: false,
+        has_init: false,
+        has_writeback: true,
+        loop_embedment: 1,
+        loop_interchange: false,
+        loop_blocking: true,
+        data_gib: (0.0, 0.0),
+        extended: true,
+        spec,
+    }
+}
+
+/// `stridedcopy`: dst[i][j] = src[i][j] where the source rows carry a
+/// 512-byte pitch pad — a 2-D sub-matrix memcpy. Even the single-stride
+/// baseline walks two streams whose row advances jump by different pitches,
+/// which is exactly the access shape DMA-style copies hand the prefetcher.
+pub fn stridedcopy(budget: u64) -> PaperKernel {
+    let n = square_extent(budget);
+    const PITCH_PAD: u64 = 128; // elements of row padding (512 B)
+    let spec = finished(KernelSpec {
+        name: "stridedcopy".into(),
+        loops: vec![LoopVar::new("i", n), LoopVar::new("j", n)],
+        arrays: vec![Array::new("src", &[n, n + PITCH_PAD], 4), Array::new("dst", &[n, n], 4)],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Read),
+            ArrayAccess::new(1, vec![IndexExpr::var(0), IndexExpr::var(1)], AccessMode::Write),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "stridedcopy".into(),
+        description: "Strided row copy (2D memcpy with row pitch)",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: false,
+        data_gib: (0.0, 0.0),
+        extended: true,
+        spec,
+    }
+}
+
+/// `triad`: a[i] = b[i] + α·c[i] — the STREAM triad (1-D, loop blocked):
+/// two load streams against one store stream per stride replica.
+pub fn triad(budget: u64) -> PaperKernel {
+    let e = vec_extent(budget / 3);
+    let spec = finished(KernelSpec {
+        name: "triad".into(),
+        loops: vec![LoopVar::new("i", e)],
+        arrays: vec![
+            Array::new("a", &[e], 4),
+            Array::new("b", &[e], 4),
+            Array::new("c", &[e], 4),
+        ],
+        accesses: vec![
+            ArrayAccess::new(0, vec![IndexExpr::var(0)], AccessMode::Write),
+            ArrayAccess::new(1, vec![IndexExpr::var(0)], AccessMode::Read),
+            ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::Read),
+        ],
+        loop_carried_dep: false,
+    });
+    PaperKernel {
+        name: "triad".into(),
+        description: "STREAM Triad",
+        aligned: true,
+        has_init: false,
+        has_writeback: false,
+        loop_embedment: 0,
+        loop_interchange: false,
+        loop_blocking: true,
+        data_gib: (0.0, 0.0),
+        extended: true,
         spec,
     }
 }
@@ -438,9 +697,28 @@ pub fn paper_kernels(budget: u64) -> Vec<PaperKernel> {
     ]
 }
 
-/// Look a kernel up by name.
+/// The extended (beyond-Table-1) kernel family.
+pub fn extended_kernels(budget: u64) -> Vec<PaperKernel> {
+    vec![
+        mm3(budget),
+        atax(budget),
+        fdtd2d(budget),
+        jacobi1d(budget),
+        stridedcopy(budget),
+        triad(budget),
+    ]
+}
+
+/// The whole kernel universe: Table 1 + extended family.
+pub fn all_kernels(budget: u64) -> Vec<PaperKernel> {
+    let mut v = paper_kernels(budget);
+    v.extend(extended_kernels(budget));
+    v
+}
+
+/// Look a kernel up by name, across the whole universe.
 pub fn kernel_by_name(name: &str, budget: u64) -> Option<PaperKernel> {
-    paper_kernels(budget).into_iter().find(|k| k.name == name)
+    all_kernels(budget).into_iter().find(|k| k.name == name)
 }
 
 #[cfg(test)]
@@ -536,5 +814,63 @@ mod tests {
     fn lookup_by_name() {
         assert!(kernel_by_name("mxv", 1 << 22).is_some());
         assert!(kernel_by_name("nope", 1 << 22).is_none());
+        // Extended kernels resolve through the same lookup.
+        assert!(kernel_by_name("3mm", 1 << 22).is_some());
+        assert!(kernel_by_name("triad", 1 << 22).is_some());
+    }
+
+    #[test]
+    fn universe_is_paper_plus_extended() {
+        let budget = 1 << 24;
+        let all = all_kernels(budget);
+        assert_eq!(all.len(), paper_kernels(budget).len() + extended_kernels(budget).len());
+        for k in ["3mm", "atax", "fdtd2d", "jacobi1d", "stridedcopy", "triad"] {
+            let pk = all.iter().find(|p| p.name == k).unwrap_or_else(|| panic!("missing {k}"));
+            assert!(pk.extended, "{k} must be flagged extended");
+        }
+        assert!(all.iter().filter(|k| !k.extended).all(|k| table_names().contains(&k.name.as_str())));
+    }
+
+    fn table_names() -> Vec<&'static str> {
+        vec![
+            "bicg",
+            "conv",
+            "doitgen",
+            "gemverouter",
+            "gemvermxv1",
+            "gemversum",
+            "gemvermxv2",
+            "jacobi2d",
+            "mxv",
+            "init",
+            "writeback",
+        ]
+    }
+
+    #[test]
+    fn extended_subscripts_stay_in_bounds() {
+        for k in extended_kernels(1 << 22) {
+            let maxes: Vec<u64> = k.spec.loops.iter().map(|l| l.extent - 1).collect();
+            let zeros = vec![0u64; k.spec.loops.len()];
+            for acc in &k.spec.accesses {
+                assert!(
+                    k.spec.address(acc, &maxes).is_some(),
+                    "{}: access to {} out of bounds at loop maxima",
+                    k.name,
+                    k.spec.arrays[acc.array].name
+                );
+                assert!(k.spec.address(acc, &zeros).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn extended_budgets_roughly_respected() {
+        let budget = 1u64 << 24;
+        for k in extended_kernels(budget) {
+            let main: u64 = k.spec.arrays.iter().map(|a| a.bytes()).max().unwrap();
+            assert!(main >= budget / 8, "{}: dominant array {} too small", k.name, main);
+            assert!(main <= 2 * budget, "{}: dominant array {} too large", k.name, main);
+        }
     }
 }

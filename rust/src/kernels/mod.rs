@@ -5,8 +5,11 @@
 //!   ([`crate::transform`]) operates on this IR exactly as §5 of the paper
 //!   describes (critical-access selection, interchange, vectorization,
 //!   portion/stride unrolling).
-//! * [`library`] — the six surveyed kernels of Table 1 (plus gemver's four
-//!   parts and the init/writeback micro-kernels) expressed in the IR.
+//! * [`library`] — the kernel universe: the six surveyed kernels of Table 1
+//!   (plus gemver's four parts and the init/writeback micro-kernels) and an
+//!   extended PolyBench-style family (3mm, atax, fdtd2d, jacobi1d,
+//!   stridedcopy, triad), all expressed in the IR and lowered through the
+//!   same generic transform.
 //! * [`micro`] — the §4 micro-benchmarks (pure load/store/copy loops with a
 //!   fixed 32-slot unroll budget) that Figures 2–5 are built from.
 //! * [`reference`] — access-pattern models of the state-of-the-art
@@ -19,7 +22,7 @@ pub mod micro;
 pub mod reference;
 pub mod spec;
 
-pub use library::{paper_kernels, PaperKernel};
+pub use library::{all_kernels, extended_kernels, kernel_by_name, paper_kernels, PaperKernel};
 pub use micro::{MicroBench, MicroOp};
 pub use reference::Reference;
 pub use spec::{Array, ArrayAccess, AccessMode, IndexExpr, KernelSpec, LoopVar};

@@ -1,5 +1,8 @@
-//! Access-pattern models of the state-of-the-art reference implementations
-//! Figure 7 compares against.
+//! Reference models: access-pattern models of the state-of-the-art
+//! implementations Figure 7 compares against, plus [`interp`] — the
+//! order-independent numeric reference execution that the
+//! transform-correctness oracle (`tests/transform_oracle.rs`) pins every
+//! derived variant against.
 //!
 //! **Substitution notice (DESIGN.md §2):** the paper benchmarks vendor
 //! binaries (MKL 2024.2, OpenBLAS 0.3.28, Halide 18, OpenCV 4.10, CLang /
@@ -47,19 +50,34 @@ pub enum Reference {
 }
 
 impl Reference {
+    /// The compiler baselines every kernel gets — the single source of
+    /// truth for the baseline/vendor split, shared by [`for_kernel`] and
+    /// [`is_vendor_model`].
+    ///
+    /// [`for_kernel`]: Reference::for_kernel
+    /// [`is_vendor_model`]: Reference::is_vendor_model
+    pub const COMPILER_BASELINES: [Reference; 4] = [
+        Reference::Clang,
+        Reference::Polly,
+        Reference::NoUnroll,
+        Reference::BestSingleStrided,
+    ];
+
+    /// Is this a vendor library model (MKL/OpenBLAS/Halide/OpenCV), as
+    /// opposed to one of the compiler baselines every kernel gets?
+    pub fn is_vendor_model(self) -> bool {
+        !Self::COMPILER_BASELINES.contains(&self)
+    }
+
     /// All references applicable to a given kernel (the paper compares
     /// BLAS-class kernels against MKL/OpenBLAS and stencils against
     /// Halide/OpenCV; every kernel gets CLang/Polly/NoUnroll/SingleStrided).
     pub fn for_kernel(kernel: &str) -> Vec<Reference> {
-        let mut v = vec![
-            Reference::Clang,
-            Reference::Polly,
-            Reference::NoUnroll,
-            Reference::BestSingleStrided,
-        ];
+        let mut v = Self::COMPILER_BASELINES.to_vec();
         match kernel {
+            // BLAS-class kernels (including the extended GEMM/atax family).
             "bicg" | "doitgen" | "gemver" | "gemverouter" | "gemvermxv1" | "gemvermxv2"
-            | "gemversum" | "mxv" => {
+            | "gemversum" | "mxv" | "3mm" | "atax" => {
                 v.push(Reference::Mkl);
                 v.push(Reference::OpenBlas);
             }
@@ -69,11 +87,14 @@ impl Reference {
                 v.push(Reference::HalideLi);
                 v.push(Reference::OpenCv);
             }
-            "jacobi2d" => {
+            // Stencil-class kernels compare against the Halide schedules.
+            "jacobi2d" | "fdtd2d" | "jacobi1d" => {
                 v.push(Reference::HalideMullapudi);
                 v.push(Reference::HalideAdams);
                 v.push(Reference::HalideLi);
             }
+            // Pure data-movement micros (stridedcopy, triad) only have the
+            // compiler baselines.
             _ => {}
         }
         v
@@ -140,6 +161,225 @@ impl Reference {
     }
 }
 
+/// Order-independent numeric interpreter for kernel specs — the
+/// transform-correctness oracle's execution model.
+///
+/// The striding transform is only allowed to *reorder* a dependence-free
+/// iteration space. To check that bit-exactly without floating-point
+/// rounding being order-sensitive, this interpreter gives every kernel a
+/// synthetic commutative semantics over `u64`s:
+///
+/// * untouched memory reads as a deterministic hash of its address
+///   ([`interp::initial`]);
+/// * at each iteration point, the reads of **pure input** arrays (arrays
+///   no access ever writes) fold into a per-point contribution;
+/// * every written element *accumulates* (wrapping add) the contribution
+///   mixed with its own address.
+///
+/// Wrapping addition is commutative and associative, so any execution
+/// order over the same iteration multiset yields the bit-identical final
+/// memory — while a transform that drops, duplicates or mis-addresses an
+/// iteration point changes it. `tests/transform_oracle.rs` uses this to
+/// pin every derived variant against the untransformed source nest.
+pub mod interp {
+    use std::collections::HashMap;
+
+    use crate::kernels::spec::{AccessMode, KernelSpec};
+    use crate::transform::{Transformed, VEC_ELEMS};
+
+    /// splitmix64 finalizer: the mixing primitive.
+    fn mix(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Deterministic "input data" for an address never written.
+    pub fn initial(addr: u64) -> u64 {
+        mix(addr ^ 0x5EED_5EED_5EED_5EED)
+    }
+
+    /// Final memory state: element byte address → value.
+    pub type Memory = HashMap<u64, u64>;
+
+    /// Which accesses read *pure input* arrays (never written by any
+    /// access of the spec)?
+    fn pure_inputs(spec: &KernelSpec) -> Vec<bool> {
+        let mut written = vec![false; spec.arrays.len()];
+        for a in &spec.accesses {
+            if a.mode != AccessMode::Read {
+                written[a.array] = true;
+            }
+        }
+        spec.accesses.iter().map(|a| !written[a.array]).collect()
+    }
+
+    /// Apply the body once at concrete loop values.
+    fn body(spec: &KernelSpec, pure: &[bool], mem: &mut Memory, vals: &[u64]) {
+        let mut contrib = 0x9e3779b97f4a7c15u64;
+        for (ai, acc) in spec.accesses.iter().enumerate() {
+            if acc.mode == AccessMode::Read && pure[ai] {
+                if let Some(addr) = spec.address(acc, vals) {
+                    // Pure-input arrays are never written, so their value
+                    // is always the synthetic initial data — by invariant,
+                    // not a memory probe.
+                    contrib = mix(contrib ^ initial(addr));
+                }
+            }
+        }
+        for acc in &spec.accesses {
+            if acc.mode == AccessMode::Read {
+                continue;
+            }
+            if let Some(addr) = spec.address(acc, vals) {
+                let old = mem.get(&addr).copied().unwrap_or_else(|| initial(addr));
+                mem.insert(addr, old.wrapping_add(mix(contrib ^ mix(addr))));
+            }
+        }
+    }
+
+    /// Execute the *source-order* nest at element granularity.
+    pub fn execute_source(spec: &KernelSpec) -> Memory {
+        let pure = pure_inputs(spec);
+        let mut mem = Memory::new();
+        if spec.loops.iter().any(|l| l.extent == 0) {
+            return mem;
+        }
+        let mut vals = vec![0u64; spec.loops.len()];
+        loop {
+            body(spec, &pure, &mut mem, &vals);
+            let mut i = spec.loops.len();
+            loop {
+                if i == 0 {
+                    return mem;
+                }
+                i -= 1;
+                vals[i] += 1;
+                if vals[i] < spec.loops[i].extent {
+                    break;
+                }
+                vals[i] = 0;
+            }
+        }
+    }
+
+    /// Execute a transformed kernel in its *transformed* visit order
+    /// (interchanged loop order, stride replicas and portion slots unrolled
+    /// in the body), at element granularity.
+    pub fn execute_transformed(t: &Transformed) -> Memory {
+        let spec = &t.spec;
+        let pure = pure_inputs(spec);
+        let mut mem = Memory::new();
+        let s = t.config.stride_unroll as u64;
+        let p = t.config.portion_unroll as u64;
+        let n = t.order.len();
+        let trips: Vec<u64> = t
+            .order
+            .iter()
+            .map(|&l| {
+                let e = spec.loops[l].extent;
+                if l == t.stride_loop {
+                    e / s
+                } else if l == t.vector_loop {
+                    e / (VEC_ELEMS * p)
+                } else {
+                    e
+                }
+            })
+            .collect();
+        if trips.iter().any(|&e| e == 0) {
+            return mem;
+        }
+        let mut counters = vec![0u64; n];
+        let mut vals = vec![0u64; spec.loops.len()];
+        loop {
+            for (pos, &l) in t.order.iter().enumerate() {
+                vals[l] = if l == t.stride_loop {
+                    counters[pos] * s
+                } else if l == t.vector_loop {
+                    counters[pos] * VEC_ELEMS * p
+                } else {
+                    counters[pos]
+                };
+            }
+            let (bs, bv) = (vals[t.stride_loop], vals[t.vector_loop]);
+            for k in 0..s {
+                for q in 0..p {
+                    for e in 0..VEC_ELEMS {
+                        vals[t.stride_loop] = bs + k;
+                        vals[t.vector_loop] = bv + q * VEC_ELEMS + e;
+                        body(spec, &pure, &mut mem, &vals);
+                    }
+                }
+            }
+            let mut pos = n;
+            loop {
+                if pos == 0 {
+                    return mem;
+                }
+                pos -= 1;
+                counters[pos] += 1;
+                if counters[pos] < trips[pos] {
+                    break;
+                }
+                counters[pos] = 0;
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::kernels::spec::{Array, ArrayAccess, IndexExpr, LoopVar};
+        use crate::transform::{transform, StridingConfig};
+
+        fn small_mxv() -> KernelSpec {
+            let mut k = KernelSpec {
+                name: "mxv".into(),
+                loops: vec![LoopVar::new("i", 32), LoopVar::new("j", 64)],
+                arrays: vec![
+                    Array::new("A", &[32, 64], 4),
+                    Array::new("x", &[64], 4),
+                    Array::new("y", &[32], 4),
+                ],
+                accesses: vec![
+                    ArrayAccess::new(
+                        0,
+                        vec![IndexExpr::var(0), IndexExpr::var(1)],
+                        AccessMode::Read,
+                    ),
+                    ArrayAccess::new(1, vec![IndexExpr::var(1)], AccessMode::Read),
+                    ArrayAccess::new(2, vec![IndexExpr::var(0)], AccessMode::ReadWrite),
+                ],
+                loop_carried_dep: false,
+            };
+            k.layout();
+            k
+        }
+
+        #[test]
+        fn transformed_matches_source_for_all_family_strides() {
+            let k = small_mxv();
+            let want = execute_source(&k);
+            assert!(!want.is_empty());
+            for s in [1u32, 2, 4, 8] {
+                let t = transform(&k, StridingConfig::new(s, 1)).unwrap();
+                assert_eq!(execute_transformed(&t), want, "S={s} diverged");
+            }
+        }
+
+        #[test]
+        fn dropped_iteration_changes_memory() {
+            // Sensitivity: shrinking the domain must not go unnoticed.
+            let k = small_mxv();
+            let mut smaller = k.clone();
+            smaller.loops[0].extent -= 1;
+            assert_ne!(execute_source(&k), execute_source(&smaller));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +430,16 @@ mod tests {
         ] {
             assert!(r.schedule().stride_unroll <= 2, "{:?}", r);
         }
+    }
+
+    #[test]
+    fn extended_kernels_get_reference_classes() {
+        assert!(Reference::for_kernel("3mm").contains(&Reference::Mkl));
+        assert!(Reference::for_kernel("atax").contains(&Reference::OpenBlas));
+        assert!(Reference::for_kernel("fdtd2d").contains(&Reference::HalideAdams));
+        assert!(!Reference::for_kernel("fdtd2d").contains(&Reference::OpenCv));
+        let t = Reference::for_kernel("triad");
+        assert!(t.contains(&Reference::Clang) && !t.contains(&Reference::Mkl));
     }
 
     #[test]

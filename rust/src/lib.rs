@@ -10,14 +10,17 @@
 //!
 //! This crate contains the full system described in `DESIGN.md`:
 //!
-//! * [`kernels`] — a loop-nest IR plus the paper's six surveyed compute
-//!   kernels, the Figure-2 micro-benchmarks and access-pattern models of the
-//!   reference implementations (CLang / Polly / MKL / OpenBLAS / Halide /
-//!   OpenCV).
+//! * [`kernels`] — a loop-nest IR plus the kernel universe: the paper's six
+//!   surveyed compute kernels and an extended PolyBench-style family (3mm,
+//!   atax, fdtd2d, jacobi1d, stridedcopy, triad), the Figure-2
+//!   micro-benchmarks and access-pattern models of the reference
+//!   implementations (CLang / Polly / MKL / OpenBLAS / Halide / OpenCV).
 //! * [`transform`] — the multi-striding code transformation: critical-access
 //!   selection, loop interchange, vectorization, loop blocking, portion /
 //!   stride unroll enumeration, redundant-access elimination and the
-//!   register-pressure feasibility check.
+//!   register-pressure feasibility check — plus [`transform::variants`],
+//!   which mechanically derives every spec's single-stride baseline and
+//!   S ∈ {2, 4, 8} multi-strided family (no per-kernel lowering anywhere).
 //! * [`trace`] — expands a transformed kernel configuration into the exact
 //!   stream of vector memory accesses the generated AVX2 assembly would
 //!   perform.

@@ -10,6 +10,7 @@
 //! repro figure6 [--kernel K]    # striding-space sweep per kernel
 //! repro figure7 [--kernel K]    # comparison with state-of-the-art models
 //! repro sweep --kernel K        # detailed sweep of one kernel
+//! repro universe                # kernel registry + derived variant family
 //! repro native                  # real host-memory multi-striding probe
 //! repro validate                # load + execute the PJRT artifacts
 //! repro all                     # everything (writes results/*.csv too)
@@ -42,6 +43,7 @@ fn main() {
         "figure5" => figure2(&opts, true),
         "figure6" | "sweep" => figure6(&opts),
         "figure7" => figure7(&opts),
+        "universe" => universe(&opts),
         "native" => native(&opts),
         "validate" => validate(&opts),
         "run" => run_config(&opts),
@@ -68,7 +70,7 @@ fn usage() {
          [--kernel NAME] [--smoke] [--max-total N] [--csv DIR] [--artifacts DIR] \
          [--no-prefetch] [--config FILE]\n\
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
-         sweep native validate all"
+         sweep universe native validate all"
     );
 }
 
@@ -238,12 +240,25 @@ fn figure3_4(opts: &Opts) -> multistride::Result<()> {
     Ok(())
 }
 
+/// Clean error (not the coordinator's backstop panic) on a typo'd
+/// `--kernel` name. Shared by every kernel-scoped command.
+fn ensure_known_kernel(kernel: Option<&str>, budget: u64) -> multistride::Result<()> {
+    if let Some(k) = kernel {
+        multistride::ensure!(
+            multistride::kernels::library::kernel_by_name(k, budget).is_some(),
+            "unknown kernel {k}"
+        );
+    }
+    Ok(())
+}
+
 fn figure6(opts: &Opts) -> multistride::Result<()> {
     let m = opts.machine.config();
     let budget = opts.scale().kernel_bytes;
+    ensure_known_kernel(opts.kernel.as_deref(), budget)?;
     let kernels: Vec<String> = match &opts.kernel {
         Some(k) => vec![k.clone()],
-        None => exp::figure6_kernels().iter().map(|s| s.to_string()).collect(),
+        None => exp::figure6_kernels(),
     };
     if !opts.prefetch {
         println!("[hardware prefetching DISABLED for this sweep]");
@@ -268,22 +283,10 @@ fn figure6(opts: &Opts) -> multistride::Result<()> {
             }
         }
         if let Some(dir) = &opts.csv_dir {
-            let rows: Vec<Vec<String>> = points
-                .iter()
-                .map(|p| {
-                    vec![
-                        p.kernel.clone(),
-                        p.config.stride_unroll.to_string(),
-                        p.config.portion_unroll.to_string(),
-                        p.feasible.to_string(),
-                        format!("{:.4}", p.throughput_gib),
-                    ]
-                })
-                .collect();
             report::write_csv(
                 &dir.join(format!("figure6_{k}.csv")),
-                &["kernel", "strides", "portion", "feasible", "gib_s"],
-                &rows,
+                &KERNEL_POINT_CSV_HEADER,
+                &kernel_point_csv_rows(&points),
             )?;
         }
     }
@@ -293,9 +296,10 @@ fn figure6(opts: &Opts) -> multistride::Result<()> {
 fn figure7(opts: &Opts) -> multistride::Result<()> {
     let m = opts.machine.config();
     let budget = opts.scale().kernel_bytes;
+    ensure_known_kernel(opts.kernel.as_deref(), budget)?;
     let kernels: Vec<String> = match &opts.kernel {
         Some(k) => vec![k.clone()],
-        None => exp::figure7_kernels().iter().map(|s| s.to_string()).collect(),
+        None => exp::figure7_kernels(),
     };
     let mut all_rows = Vec::new();
     for k in kernels {
@@ -321,6 +325,52 @@ fn figure7(opts: &Opts) -> multistride::Result<()> {
             &dir.join("figure7.csv"),
             &["kernel", "reference", "ref_gib_s", "multi_gib_s", "speedup"],
             &rows,
+        )?;
+    }
+    Ok(())
+}
+
+/// `repro universe`: the registered kernel universe (family, nest depth,
+/// artifact availability) plus each kernel's derived variant-family
+/// throughput trajectory. `--kernel NAME` restricts both views.
+fn universe(opts: &Opts) -> multistride::Result<()> {
+    let m = opts.machine.config();
+    let budget = opts.scale().kernel_bytes;
+    let reg = ArtifactRegistry::new(&opts.artifacts);
+    ensure_known_kernel(opts.kernel.as_deref(), budget)?;
+    let keep = |name: &str| opts.kernel.as_deref().map_or(true, |k| k == name);
+    let mut t = Table::new(&["kernel", "family", "loops", "footprint (MiB)", "artifact", "description"])
+        .with_title("Kernel universe — registry");
+    for k in multistride::runtime::kernel_universe(&reg, budget) {
+        if !keep(&k.name) {
+            continue;
+        }
+        t.row(vec![
+            k.name.clone(),
+            match k.family {
+                multistride::runtime::KernelFamily::Paper => "paper".into(),
+                multistride::runtime::KernelFamily::Extended => "extended".into(),
+            },
+            k.loop_depth.to_string(),
+            format!("{:.1}", k.footprint as f64 / 1048576.0),
+            if k.has_artifact { "Y" } else { "" }.into(),
+            k.description.into(),
+        ]);
+    }
+    t.print();
+    println!();
+    // With --kernel, simulate only that kernel's family (not the whole
+    // universe followed by a filter).
+    let points: Vec<exp::KernelPoint> = match opts.kernel.as_deref() {
+        Some(k) => exp::variant_sweep_for(m, budget, 2, opts.prefetch, &[k.to_string()]),
+        None => exp::variant_sweep(m, budget, 2, opts.prefetch),
+    };
+    print!("{}", figures::render_variant_trajectory(&points));
+    if let Some(dir) = &opts.csv_dir {
+        report::write_csv(
+            &dir.join("universe.csv"),
+            &KERNEL_POINT_CSV_HEADER,
+            &kernel_point_csv_rows(&points),
         )?;
     }
     Ok(())
@@ -433,6 +483,10 @@ fn all(opts: &Opts) -> multistride::Result<()> {
     figure2(opts, true)?;
     figure6(opts)?;
     figure7(opts)?;
+    // The universe trajectory re-simulates the 4 family configs per kernel
+    // that figure6's broader sweep also covers — a small fraction of
+    // figure6's config grid, accepted to keep the drivers independent.
+    universe(opts)?;
     if ArtifactRegistry::new(&opts.artifacts).list().is_empty() {
         println!("(skipping validate: no artifacts built)");
     } else {
@@ -467,6 +521,7 @@ fn run_config(opts: &Opts) -> multistride::Result<()> {
         .map(|m| m as u64 * 1024 * 1024)
         .unwrap_or(opts.scale().kernel_bytes);
 
+    ensure_known_kernel(Some(&kernel), budget)?;
     println!(
         "config {path:?}: kernel={kernel} machine={} max_total={max_total} prefetch={prefetch} budget={}",
         machine.name,
@@ -482,25 +537,31 @@ fn run_config(opts: &Opts) -> multistride::Result<()> {
     }
     let csv = file.get("report", "csv").and_then(|v| v.as_str().map(String::from));
     if let Some(dir) = csv.filter(|s| !s.is_empty()) {
-        let rows: Vec<Vec<String>> = points
-            .iter()
-            .map(|p| {
-                vec![
-                    p.kernel.clone(),
-                    p.config.stride_unroll.to_string(),
-                    p.config.portion_unroll.to_string(),
-                    p.feasible.to_string(),
-                    format!("{:.4}", p.throughput_gib),
-                ]
-            })
-            .collect();
         report::write_csv(
             &PathBuf::from(dir).join(format!("sweep_{kernel}.csv")),
-            &["kernel", "strides", "portion", "feasible", "gib_s"],
-            &rows,
+            &KERNEL_POINT_CSV_HEADER,
+            &kernel_point_csv_rows(&points),
         )?;
     }
     Ok(())
+}
+
+/// Shared CSV shape for kernel sweep points (figure6 / universe / run).
+const KERNEL_POINT_CSV_HEADER: [&str; 5] = ["kernel", "strides", "portion", "feasible", "gib_s"];
+
+fn kernel_point_csv_rows(points: &[exp::KernelPoint]) -> Vec<Vec<String>> {
+    points
+        .iter()
+        .map(|p| {
+            vec![
+                p.kernel.clone(),
+                p.config.stride_unroll.to_string(),
+                p.config.portion_unroll.to_string(),
+                p.feasible.to_string(),
+                format!("{:.4}", p.throughput_gib),
+            ]
+        })
+        .collect()
 }
 
 fn bytes_h(b: u64) -> String {

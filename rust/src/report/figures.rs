@@ -123,6 +123,57 @@ pub fn render_kernel_sweep(kernel: &str, points: &[KernelPoint]) -> String {
     t.render()
 }
 
+/// Kernel-universe variant trajectory: one row per kernel, one column per
+/// derived family member (S = 1 baseline, then S ∈ {2, 4, 8}), plus the
+/// best multi-over-single ratio. Input is [`variant_sweep`]'s point list
+/// (`crate::coordinator::experiments::variant_sweep`).
+pub fn render_variant_trajectory(points: &[KernelPoint]) -> String {
+    // Columns derive from the family definition — a new STRIDE_FAMILY
+    // member shows up here without touching this renderer.
+    let family: Vec<u32> = std::iter::once(1).chain(crate::transform::STRIDE_FAMILY).collect();
+    let header: Vec<String> = std::iter::once("kernel".to_string())
+        .chain(family.iter().map(|s| format!("S={s}")))
+        .chain(std::iter::once("best multi/single".to_string()))
+        .collect();
+    let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+        .with_title("Kernel universe — derived variant family throughput (GiB/s)");
+    let mut kernels: Vec<&str> = Vec::new();
+    for p in points {
+        if !kernels.contains(&p.kernel.as_str()) {
+            kernels.push(p.kernel.as_str());
+        }
+    }
+    for k in kernels {
+        let fam: Vec<&KernelPoint> = points.iter().filter(|p| p.kernel == k).collect();
+        let cell = |s: u32| -> String {
+            match fam.iter().find(|p| p.config.stride_unroll == s) {
+                Some(p) if p.feasible => gib(p.throughput_gib),
+                Some(_) => "REG".into(),
+                None => "-".into(),
+            }
+        };
+        let single = fam
+            .iter()
+            .find(|p| p.config.stride_unroll == 1)
+            .filter(|p| p.feasible)
+            .map(|p| p.throughput_gib);
+        let best_multi = fam
+            .iter()
+            .filter(|p| p.config.stride_unroll > 1 && p.feasible)
+            .map(|p| p.throughput_gib)
+            .fold(None::<f64>, |acc, v| Some(acc.map_or(v, |a| a.max(v))));
+        let ratio = match (single, best_multi) {
+            (Some(s), Some(m)) if s > 0.0 => speedup(m / s),
+            _ => "-".into(),
+        };
+        let mut row = vec![k.to_string()];
+        row.extend(family.iter().map(|&s| cell(s)));
+        row.push(ratio);
+        t.row(row);
+    }
+    t.render()
+}
+
 /// Figure 7: speedups of the best multi-strided configuration over each
 /// reference.
 pub fn render_comparison(machine: &str, rows: &[ComparisonRow]) -> String {
@@ -170,6 +221,22 @@ mod tests {
     use super::*;
     use crate::config::coffee_lake;
     use crate::coordinator::experiments::run_micro;
+
+    #[test]
+    fn variant_trajectory_renders_universe() {
+        use crate::coordinator::experiments::run_kernel;
+        use crate::transform::StridingConfig;
+        let m = coffee_lake();
+        let mut pts = Vec::new();
+        for name in ["mxv", "triad"] {
+            for s in [1u32, 2] {
+                pts.push(run_kernel(m, name, 1 << 20, StridingConfig::new(s, 1), true).unwrap());
+            }
+        }
+        let out = render_variant_trajectory(&pts);
+        assert!(out.contains("mxv") && out.contains("triad"));
+        assert!(out.contains("S=8"), "family columns present even when unswept");
+    }
 
     #[test]
     fn micro_grid_renders() {

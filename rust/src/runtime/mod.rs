@@ -15,7 +15,7 @@
 
 pub mod registry;
 
-pub use registry::ArtifactRegistry;
+pub use registry::{kernel_universe, ArtifactRegistry, KernelFamily, RegisteredKernel};
 
 #[cfg(feature = "pjrt")]
 use std::collections::HashMap;

@@ -1,6 +1,55 @@
-//! Artifact discovery: maps kernel names to `artifacts/*.hlo.txt` files.
+//! Runtime registry: the kernel universe (simulator specs from
+//! [`crate::kernels::library`]) joined with artifact discovery
+//! (`artifacts/*.hlo.txt` files for the PJRT execution path).
 
 use std::path::{Path, PathBuf};
+
+use crate::kernels::library::{all_kernels, PaperKernel};
+
+/// Which family a registered kernel belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFamily {
+    /// One of the paper's Table 1 kernels.
+    Paper,
+    /// The extended (beyond-Table-1) universe.
+    Extended,
+}
+
+/// One registered kernel: simulator spec metadata plus whether a compiled
+/// PJRT artifact exists for numeric execution.
+#[derive(Debug, Clone)]
+pub struct RegisteredKernel {
+    pub name: String,
+    pub family: KernelFamily,
+    pub description: &'static str,
+    /// Number of loops in the (untransformed) nest.
+    pub loop_depth: usize,
+    /// Total data footprint in bytes at the registry's budget.
+    pub footprint: u64,
+    /// An `artifacts/<name>.hlo.txt` file exists.
+    pub has_artifact: bool,
+}
+
+/// Enumerate the whole kernel universe at `budget` bytes, marking which
+/// kernels also have a compiled artifact in `artifacts` — the registry
+/// view joining simulator specs with runtime executability (rendered by
+/// `repro universe`). Sweeps and benches enumerate the simulator-side
+/// universe directly via `kernels::library::all_kernels`; this function
+/// adds the artifact dimension on top and must stay a pure view (no
+/// filtering), or the two enumerations would diverge.
+pub fn kernel_universe(artifacts: &ArtifactRegistry, budget: u64) -> Vec<RegisteredKernel> {
+    all_kernels(budget)
+        .iter()
+        .map(|k: &PaperKernel| RegisteredKernel {
+            name: k.name.clone(),
+            family: if k.extended { KernelFamily::Extended } else { KernelFamily::Paper },
+            description: k.description,
+            loop_depth: k.spec.loops.len(),
+            footprint: k.spec.footprint(),
+            has_artifact: artifacts.has(&k.name),
+        })
+        .collect()
+}
 
 /// The artifact directory scanner.
 #[derive(Debug, Clone)]
@@ -74,5 +123,32 @@ mod tests {
     fn missing_dir_is_empty() {
         let reg = ArtifactRegistry::new("/nonexistent/multistride");
         assert!(reg.list().is_empty());
+    }
+
+    #[test]
+    fn kernel_universe_covers_both_families() {
+        let reg = ArtifactRegistry::new("/nonexistent/multistride");
+        let universe = kernel_universe(&reg, 1 << 22);
+        assert!(universe.iter().any(|k| k.name == "mxv" && k.family == KernelFamily::Paper));
+        assert!(universe.iter().any(|k| k.name == "3mm" && k.family == KernelFamily::Extended));
+        assert!(universe.iter().any(|k| k.loop_depth == 3), "3-deep nest registered");
+        assert!(universe.iter().all(|k| !k.has_artifact), "no artifacts on disk");
+        assert!(universe.iter().all(|k| k.footprint > 0));
+    }
+
+    #[test]
+    fn kernel_universe_sees_artifacts() {
+        // Per-process dir: two concurrent `cargo test` runs must not race.
+        let dir = std::env::temp_dir()
+            .join(format!("multistride_universe_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mxv.hlo.txt"), "x").unwrap();
+        let reg = ArtifactRegistry::new(&dir);
+        let universe = kernel_universe(&reg, 1 << 22);
+        let mxv = universe.iter().find(|k| k.name == "mxv").unwrap();
+        assert!(mxv.has_artifact);
+        let triad = universe.iter().find(|k| k.name == "triad").unwrap();
+        assert!(!triad.has_artifact);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -442,7 +442,7 @@ impl Iterator for TraceCursor<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::library::{self, paper_kernels};
+    use crate::kernels::library::{self, all_kernels};
     use crate::transform::{transform, StridingConfig};
 
     const MIB: u64 = 1 << 20;
@@ -511,7 +511,9 @@ mod tests {
 
     #[test]
     fn len_estimate_matches_exact_count_without_elimination() {
-        for name in ["mxv", "bicg", "gemverouter", "gemversum", "init", "writeback"] {
+        for name in
+            ["mxv", "bicg", "gemverouter", "gemversum", "init", "writeback", "stridedcopy", "triad"]
+        {
             for cfg in [StridingConfig::new(1, 2), StridingConfig::new(4, 2)] {
                 let k = library::kernel_by_name(name, 4 * MIB).unwrap();
                 let t = transform(&k.spec, cfg).unwrap();
@@ -729,14 +731,17 @@ mod tests {
 
     /// The emission plan (affine fast path + precompiled step order) must
     /// reproduce the checked pre-plan lowering access-for-access — address,
-    /// op, ip and order — over the paper kernel library, both arrangements
-    /// and redundancy elimination on/off.
+    /// op, ip and order — over the **entire kernel registry** (Table 1 plus
+    /// the extended universe), the full derived stride family S ∈
+    /// {1, 2, 4, 8} plus a mixed odd config, both arrangements and
+    /// redundancy elimination on/off.
     #[test]
     fn planned_addresses_match_checked_evaluation() {
-        const LIMIT: usize = 20_000;
-        let ks = paper_kernels(2 * MIB);
+        const LIMIT: usize = 12_000;
+        let ks = all_kernels(2 * MIB);
+        assert!(ks.len() >= 16, "registry must span paper + extended kernels");
         for k in &ks {
-            for (s, p) in [(1, 1), (3, 2), (4, 1)] {
+            for (s, p) in [(1, 1), (2, 1), (3, 2), (4, 1), (8, 1)] {
                 for arrangement in [Arrangement::Grouped, Arrangement::Interleaved] {
                     for eliminate in [false, true] {
                         let mut cfg = StridingConfig::new(s, p);
@@ -764,7 +769,7 @@ mod tests {
     #[test]
     fn prop_trace_addresses_in_bounds() {
         use crate::util::proptest::{check, Config};
-        let ks = paper_kernels(2 * MIB);
+        let ks = all_kernels(2 * MIB);
         check(
             Config { cases: 48, seed: 0x7ACE },
             |r, _size| {

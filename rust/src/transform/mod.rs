@@ -20,8 +20,13 @@
 //!    architectural 16 ymm registers are rejected ([`is_feasible`]).
 
 pub mod profile;
+pub mod variants;
 
 pub use profile::{stride_profile, StrideProfile};
+pub use variants::{
+    universe_variants, variant_configs, variant_set, variant_set_on, KernelVariant, VariantSet,
+    STRIDE_FAMILY,
+};
 
 use crate::bail;
 use crate::kernels::spec::{AccessMode, IndexExpr, KernelSpec, LoopVar};

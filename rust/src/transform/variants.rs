@@ -1,0 +1,196 @@
+//! Mechanical derivation of a kernel's striding **variant family**.
+//!
+//! The paper's claim is that the multi-stride rewrite generalizes across a
+//! whole family of memory-bound kernels, not a handful of hand-tuned
+//! specializations. This module makes that a first-class artifact: given
+//! *any* dependence-free affine [`KernelSpec`], [`variant_set`] derives the
+//! single-stride baseline plus the S ∈ {2, 4, 8} multi-strided variants
+//! ([`STRIDE_FAMILY`]) — unroll the stride axis by S, interchange so the S
+//! copies issue concurrently — purely through the generic
+//! [`transform`](super::transform). There is **no per-kernel lowering**:
+//! every variant flows through the same emission-plan compiler in
+//! [`crate::trace::generator`], and the differential test wall
+//! (`tests/transform_oracle.rs`, the registry-wide planned-vs-checked test)
+//! pins each variant's trace against the baseline.
+
+use super::{is_feasible, transform, StridingConfig, Transformed};
+use crate::kernels::spec::KernelSpec;
+use crate::Result;
+
+/// The stride-unroll counts every kernel derives beyond its baseline.
+/// **Single source of truth for family membership**: sweeps
+/// (`coordinator::experiments::variant_sweep`), the trajectory renderer
+/// and the test wall all derive their configs from this constant via
+/// [`variant_configs`]; only the feasibility *lens* may differ per
+/// machine (see [`variant_set_on`]).
+pub const STRIDE_FAMILY: [u32; 3] = [2, 4, 8];
+
+/// Architectural SIMD register file the feasibility flag is computed
+/// against (16 ymm registers on every Table 2 machine).
+pub const SIMD_REGISTERS: u32 = 16;
+
+/// One derived variant of a kernel.
+#[derive(Debug, Clone)]
+pub struct KernelVariant {
+    pub config: StridingConfig,
+    pub transformed: Transformed,
+    /// Fits the architectural register file ([`SIMD_REGISTERS`])? High
+    /// stride counts on accumulator-heavy kernels (e.g. bicg at S=8) are
+    /// derivable but not realizable; sweeps skip them, tests still lower
+    /// them (the trace machinery is register-agnostic).
+    pub feasible: bool,
+}
+
+impl KernelVariant {
+    /// Stride-unroll count (1 for the baseline).
+    pub fn strides(&self) -> u32 {
+        self.config.stride_unroll
+    }
+}
+
+/// A kernel's full derived family: baseline first, then one variant per
+/// [`STRIDE_FAMILY`] entry.
+#[derive(Debug, Clone)]
+pub struct VariantSet {
+    pub kernel: String,
+    pub variants: Vec<KernelVariant>,
+}
+
+impl VariantSet {
+    /// The single-stride baseline (S = 1).
+    pub fn baseline(&self) -> &KernelVariant {
+        &self.variants[0]
+    }
+
+    /// The multi-strided variants (S ∈ [`STRIDE_FAMILY`]).
+    pub fn multi(&self) -> &[KernelVariant] {
+        &self.variants[1..]
+    }
+}
+
+/// The configurations a variant set derives, in order: the baseline
+/// `(1, portion)` followed by `(S, portion)` for each family member.
+pub fn variant_configs(portion: u32) -> Vec<StridingConfig> {
+    std::iter::once(1)
+        .chain(STRIDE_FAMILY)
+        .map(|s| StridingConfig::new(s, portion))
+        .collect()
+}
+
+/// Derive the full variant family for `spec` mechanically. Fails only if
+/// the *baseline* is untransformable (loop-carried dependence, gather);
+/// a family member the spec's extents cannot host is skipped with a
+/// visible notice — the same no-silent-coverage policy as the runtime
+/// sweeps. Feasibility is judged against [`SIMD_REGISTERS`]; use
+/// [`variant_set_on`] for a machine with a different register file (the
+/// sweep path already uses the machine's own `simd_registers`).
+pub fn variant_set(spec: &KernelSpec, portion: u32) -> Result<VariantSet> {
+    variant_set_on(spec, portion, SIMD_REGISTERS)
+}
+
+/// [`variant_set`] with an explicit SIMD register-file size, so variant
+/// feasibility cannot diverge from a machine-config-driven sweep.
+pub fn variant_set_on(spec: &KernelSpec, portion: u32, simd_registers: u32) -> Result<VariantSet> {
+    let mut variants = Vec::with_capacity(1 + STRIDE_FAMILY.len());
+    for config in variant_configs(portion) {
+        let transformed = match transform(spec, config) {
+            Ok(t) => t,
+            Err(e) if config.stride_unroll > 1 => {
+                eprintln!(
+                    "[variant_set] SKIPPED {} S={}: {e}",
+                    spec.name, config.stride_unroll
+                );
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        let feasible = is_feasible(&transformed, simd_registers);
+        variants.push(KernelVariant { config, transformed, feasible });
+    }
+    Ok(VariantSet { kernel: spec.name.clone(), variants })
+}
+
+/// Derive variant sets for the whole kernel universe at `budget` bytes —
+/// the "every registered spec derives its family" invariant, pinned by
+/// this module's tests. The trace-level oracle
+/// (`tests/transform_oracle.rs`) derives per-kernel via [`variant_set`]
+/// on extent-shrunk specs instead, and runtime sweeps go through
+/// `coordinator::experiments::variant_sweep`; all three share
+/// [`variant_configs`], so family membership cannot drift.
+pub fn universe_variants(budget: u64, portion: u32) -> Result<Vec<VariantSet>> {
+    crate::kernels::library::all_kernels(budget)
+        .iter()
+        .map(|k| variant_set(&k.spec, portion))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::library::all_kernels;
+    use crate::transform::VEC_ELEMS;
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn every_kernel_derives_the_full_family() {
+        let sets = universe_variants(2 * MIB, 1).expect("universe derives");
+        assert_eq!(sets.len(), all_kernels(2 * MIB).len());
+        for set in &sets {
+            assert_eq!(set.variants.len(), 1 + STRIDE_FAMILY.len(), "{}", set.kernel);
+            assert_eq!(set.baseline().strides(), 1, "{}", set.kernel);
+            for (v, s) in set.multi().iter().zip(STRIDE_FAMILY) {
+                assert_eq!(v.strides(), s, "{}", set.kernel);
+                assert_eq!(v.config.stride_unroll, s);
+            }
+        }
+    }
+
+    #[test]
+    fn family_preserves_iteration_domain_at_portion_1() {
+        // Library extents are multiples of 64, so no variant trims its
+        // stride or vector axis at portion 1 — the permutation oracle
+        // relies on this.
+        for set in universe_variants(2 * MIB, 1).unwrap() {
+            let base = &set.baseline().transformed;
+            let domain = |t: &Transformed| -> u64 {
+                t.spec.loops.iter().map(|l| l.extent).product()
+            };
+            for v in set.multi() {
+                assert_eq!(
+                    domain(&v.transformed),
+                    domain(base),
+                    "{} S={} trimmed its domain",
+                    set.kernel,
+                    v.strides()
+                );
+                let t = &v.transformed;
+                assert_eq!(t.spec.loops[t.stride_loop].extent % v.strides() as u64, 0);
+                assert_eq!(t.spec.loops[t.vector_loop].extent % VEC_ELEMS, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn baselines_are_feasible_everywhere() {
+        for set in universe_variants(2 * MIB, 1).unwrap() {
+            assert!(set.baseline().feasible, "{} baseline must fit 16 ymm", set.kernel);
+        }
+    }
+
+    #[test]
+    fn feasibility_flag_reflects_register_pressure() {
+        use crate::transform::register_pressure;
+        for set in universe_variants(2 * MIB, 1).unwrap() {
+            for v in &set.variants {
+                assert_eq!(
+                    v.feasible,
+                    register_pressure(&v.transformed) <= SIMD_REGISTERS,
+                    "{} S={}",
+                    set.kernel,
+                    v.strides()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Differential property test for the two-level TLB (`mem::tlb`).
+//!
+//! Same pattern as `tests/cache_differential.rs`: `mem::Tlb` (flat entry
+//! arrays, shared probe/fill helpers) is pinned against a deliberately
+//! naive reference model — per-set `Vec`s of entries, linear scans,
+//! explicit LRU bookkeeping — across random access sequences. Every
+//! `translate` return value (dTLB hit / STLB hit / full walk latency) and
+//! every statistic must agree, across small set-aliased geometries that
+//! force capacity evictions, a single-set L1, an STLB smaller than the
+//! working set, and both page sizes (4 KiB / 2 MiB huge pages), including
+//! page-boundary-straddling address patterns.
+
+use multistride::mem::{Tlb, TlbConfig};
+use multistride::util::proptest::{check, Config};
+use multistride::util::Rng;
+
+const PAGE: u64 = 4096;
+const HUGE: u64 = 2 * 1024 * 1024;
+
+// ---- naive per-set reference model ---------------------------------------
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Entry {
+    page: u64,
+    valid: bool,
+    stamp: u64,
+}
+
+struct RefTlb {
+    cfg: TlbConfig,
+    l1: Vec<Vec<Entry>>,
+    l2: Vec<Vec<Entry>>,
+    clock: u64,
+    page_shift: u32,
+    accesses: u64,
+    l1_misses: u64,
+    walks: u64,
+}
+
+impl RefTlb {
+    fn new(cfg: TlbConfig) -> Self {
+        let l1_sets = (cfg.l1_entries / cfg.l1_ways) as usize;
+        let l2_sets = (cfg.l2_entries / cfg.l2_ways) as usize;
+        Self {
+            cfg,
+            l1: vec![vec![Entry::default(); cfg.l1_ways as usize]; l1_sets],
+            l2: vec![vec![Entry::default(); cfg.l2_ways as usize]; l2_sets],
+            clock: 0,
+            page_shift: if cfg.huge_pages { 21 } else { 12 },
+            accesses: 0,
+            l1_misses: 0,
+            walks: 0,
+        }
+    }
+
+    fn probe(set: &mut [Entry], page: u64, clock: u64) -> bool {
+        for e in set {
+            if e.valid && e.page == page {
+                e.stamp = clock;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn fill(set: &mut [Entry], page: u64, clock: u64) {
+        let mut victim = 0usize;
+        let mut best = u64::MAX;
+        for (i, e) in set.iter().enumerate() {
+            if e.valid && e.page == page {
+                return;
+            }
+            if !e.valid {
+                victim = i;
+                break;
+            }
+            if e.stamp < best {
+                best = e.stamp;
+                victim = i;
+            }
+        }
+        set[victim] = Entry { page, valid: true, stamp: clock };
+    }
+
+    fn translate(&mut self, addr: u64) -> u64 {
+        self.accesses += 1;
+        self.clock += 1;
+        let page = addr >> self.page_shift;
+        let s1 = (page % self.l1.len() as u64) as usize;
+        if Self::probe(&mut self.l1[s1], page, self.clock) {
+            return 0;
+        }
+        self.l1_misses += 1;
+        let s2 = (page % self.l2.len() as u64) as usize;
+        if Self::probe(&mut self.l2[s2], page, self.clock) {
+            Self::fill(&mut self.l1[s1], page, self.clock);
+            return self.cfg.stlb_hit_cycles;
+        }
+        self.walks += 1;
+        Self::fill(&mut self.l2[s2], page, self.clock);
+        Self::fill(&mut self.l1[s1], page, self.clock);
+        self.cfg.walk_cycles
+    }
+}
+
+// ---- the differential driver --------------------------------------------
+
+/// Geometries: tiny set-aliased L1, a single-set L1, an STLB smaller than
+/// the page universe (capacity evictions through both levels), and the
+/// Coffee Lake shape. All set counts are powers of two (a `Tlb::new`
+/// invariant), which makes `page % sets == page & (sets - 1)`, so the
+/// naive modulo model and the masked implementation must agree.
+const GEOMETRIES: [(u32, u32, u32, u32); 4] =
+    [(8, 4, 32, 4), (4, 4, 16, 8), (64, 4, 64, 16), (64, 4, 1536, 12)];
+
+fn cfg_for(geometry: usize, huge: bool) -> TlbConfig {
+    let (e1, w1, e2, w2) = GEOMETRIES[geometry];
+    TlbConfig {
+        l1_entries: e1,
+        l1_ways: w1,
+        l2_entries: e2,
+        l2_ways: w2,
+        stlb_hit_cycles: 7,
+        walk_cycles: 70,
+        huge_pages: huge,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    geometry: usize,
+    huge: bool,
+    seed: u64,
+    ops: u32,
+}
+
+fn run_case(c: &Case) -> bool {
+    let cfg = cfg_for(c.geometry, c.huge);
+    let mut real = Tlb::new(cfg);
+    let mut naive = RefTlb::new(cfg);
+    let mut rng = Rng::new(c.seed);
+    let page_bytes = if c.huge { HUGE } else { PAGE };
+    // More page streams than the STLB can hold forces capacity evictions
+    // through both levels; the stride spacing aliases sets.
+    let streams = (cfg.l2_entries as u64) * 2;
+    for _ in 0..c.ops {
+        let addr = match rng.below(4) {
+            // A strided page stream (aliases sets when spacing is even).
+            0 => rng.below(streams) * 2 * page_bytes + rng.below(page_bytes),
+            // Page-boundary edges: the last/first bytes around a boundary.
+            1 => {
+                let boundary = (1 + rng.below(streams)) * page_bytes;
+                boundary - 1 + rng.below(2)
+            }
+            // Dense low pages (re-references that should hit).
+            2 => rng.below(4 * page_bytes),
+            // Far random address.
+            _ => rng.below(1 << 40),
+        };
+        if real.translate(addr) != naive.translate(addr) {
+            return false;
+        }
+        let s = real.stats;
+        if (s.accesses, s.l1_misses, s.walks) != (naive.accesses, naive.l1_misses, naive.walks) {
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn tlb_matches_naive_reference_model() {
+    check(
+        Config { cases: 96, seed: 0x71B_D1FF },
+        |r, size| Case {
+            geometry: r.below(GEOMETRIES.len() as u64) as usize,
+            huge: r.below(2) == 0,
+            seed: r.next_u64(),
+            ops: 32 + size * 60,
+        },
+        run_case,
+    );
+}
+
+/// Directed capacity sweep: touching twice the STLB's page capacity in
+/// sequence, twice over, must walk on every touch of the second round in
+/// both models — and the models must agree access-for-access.
+#[test]
+fn capacity_sweep_walks_agree() {
+    for huge in [false, true] {
+        let cfg = cfg_for(2, huge); // 64-entry STLB
+        let page_bytes = if huge { HUGE } else { PAGE };
+        let mut real = Tlb::new(cfg);
+        let mut naive = RefTlb::new(cfg);
+        let pages = cfg.l2_entries as u64 * 2;
+        for round in 0..2 {
+            for p in 0..pages {
+                let a = p * page_bytes;
+                assert_eq!(real.translate(a), naive.translate(a), "round {round} page {p}");
+            }
+        }
+        assert_eq!(real.stats.walks, naive.walks);
+        assert!(
+            real.stats.walks >= pages + pages / 2,
+            "LRU cannot retain a working set twice the capacity: {} walks",
+            real.stats.walks
+        );
+    }
+}
+
+/// Page-size edge: 4 KiB-page streams that straddle a 2 MiB huge-page
+/// frame collapse to one translation with huge pages on. Both models must
+/// agree on the exact walk count either way.
+#[test]
+fn huge_page_collapse_agrees() {
+    for huge in [false, true] {
+        let cfg = cfg_for(3, huge);
+        let mut real = Tlb::new(cfg);
+        let mut naive = RefTlb::new(cfg);
+        for a in (0..8 * HUGE).step_by(PAGE as usize) {
+            assert_eq!(real.translate(a), naive.translate(a));
+        }
+        assert_eq!(real.stats.walks, naive.walks);
+        if huge {
+            assert_eq!(real.stats.walks, 8, "one walk per huge page");
+        } else {
+            assert_eq!(real.stats.walks, 8 * (HUGE / PAGE), "one walk per 4 KiB page");
+        }
+    }
+}
+
+/// `reset` restores post-construction behavior exactly: a reset TLB
+/// replays a fresh reference model.
+#[test]
+fn reset_tlb_matches_fresh_reference_model() {
+    let cfg = cfg_for(0, false);
+    let mut real = Tlb::new(cfg);
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..2048 {
+        real.translate(rng.below(1 << 30));
+    }
+    real.reset();
+    assert_eq!(real.stats, Default::default());
+    let mut naive = RefTlb::new(cfg);
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..2048 {
+        let a = rng.below(1 << 30);
+        assert_eq!(real.translate(a), naive.translate(a), "replay diverged post-reset");
+    }
+}

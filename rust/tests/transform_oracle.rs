@@ -1,0 +1,176 @@
+//! Transform-correctness oracle over the whole kernel registry.
+//!
+//! The §5.1 multi-striding rewrite may only *reorder* a dependence-free
+//! iteration space. Two independent pins enforce that for every kernel in
+//! the universe (Table 1 + extended) and every derived variant S ∈ {2,4,8}:
+//!
+//! 1. **Trace permutation** — the multi-strided variant's access trace is
+//!    an exact permutation of the single-stride baseline trace: the same
+//!    multiset of (address, load/store) pairs, at the same multiplicities,
+//!    and full coverage of the critical access's iteration image.
+//! 2. **Numeric bit-identity** — executing each variant under the
+//!    order-independent interpreter of `kernels::reference::interp`
+//!    (commutative wrapping-add semantics, deterministic synthetic inputs)
+//!    produces memory bit-identical to the untransformed source nest.
+//!
+//! Loop extents are shrunk (to multiples that keep every family stride
+//! divisor exact, so no extent trimming perturbs the domain) to keep full
+//! traces and element-level interpretation cheap.
+
+use std::collections::HashMap;
+
+use multistride::kernels::library::all_kernels;
+use multistride::kernels::reference::interp;
+use multistride::kernels::spec::{AccessMode, KernelSpec};
+use multistride::trace::KernelTrace;
+use multistride::transform::{variant_set, Transformed, VariantSet, VEC_ELEMS};
+
+/// Cap loop extents so full traces and element-level interpretation stay
+/// cheap. Caps are multiples of 64, so every family config (S ∈ {1,2,4,8},
+/// portion 1) divides the domain exactly and the transform trims nothing.
+fn shrunk(mut spec: KernelSpec) -> KernelSpec {
+    let cap = if spec.loops.len() == 1 { 4096 } else { 128 };
+    for l in &mut spec.loops {
+        l.extent = l.extent.min(cap);
+    }
+    spec
+}
+
+/// Multiset of (address, is_store) pairs of a full trace.
+fn trace_multiset(t: &Transformed) -> HashMap<(u64, bool), i64> {
+    let mut counts: HashMap<(u64, bool), i64> = HashMap::new();
+    for a in KernelTrace::new(t.clone()).iter() {
+        *counts.entry((a.addr, a.op.is_store())).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Every address the critical access touches over the (vector-granular)
+/// iteration domain of `t`, paired with whether it is read / written.
+fn critical_image(t: &Transformed) -> Vec<(u64, AccessMode)> {
+    let spec = &t.spec;
+    let acc = &spec.accesses[t.critical];
+    let mut out = Vec::new();
+    let extents: Vec<u64> = spec.loops.iter().map(|l| l.extent).collect();
+    let mut vals = vec![0u64; extents.len()];
+    if extents.iter().any(|&e| e == 0) {
+        return out;
+    }
+    loop {
+        if let Some(addr) = spec.address(acc, &vals) {
+            out.push((addr, acc.mode));
+        }
+        // Odometer, vector axis in steps of one vector slot.
+        let mut i = extents.len();
+        loop {
+            if i == 0 {
+                return out;
+            }
+            i -= 1;
+            let step = if i == t.vector_loop { VEC_ELEMS } else { 1 };
+            vals[i] += step;
+            if vals[i] < extents[i] {
+                break;
+            }
+            vals[i] = 0;
+        }
+    }
+}
+
+fn family(spec: &KernelSpec) -> VariantSet {
+    variant_set(&shrunk(spec.clone()), 1)
+        .unwrap_or_else(|e| panic!("{}: family must derive: {e}", spec.name))
+}
+
+#[test]
+fn multistrided_traces_are_permutations_of_the_baseline() {
+    for pk in all_kernels(2 << 20) {
+        let set = family(&pk.spec);
+        let base = &set.baseline().transformed;
+        let want = trace_multiset(base);
+        assert!(!want.is_empty(), "{}: baseline trace empty", pk.name);
+        for v in set.multi() {
+            // Same iteration domain: nothing was trimmed away.
+            assert_eq!(
+                v.transformed.spec.loops.iter().map(|l| l.extent).product::<u64>(),
+                base.spec.loops.iter().map(|l| l.extent).product::<u64>(),
+                "{} S={}: domain changed",
+                pk.name,
+                v.strides()
+            );
+            let mut remaining = want.clone();
+            let mut total = 0u64;
+            for a in KernelTrace::new(v.transformed.clone()).iter() {
+                total += 1;
+                let slot = remaining.get_mut(&(a.addr, a.op.is_store())).unwrap_or_else(|| {
+                    panic!(
+                        "{} S={}: access {:#x} ({:?}) not in baseline",
+                        pk.name, v.strides(), a.addr, a.op
+                    )
+                });
+                *slot -= 1;
+            }
+            assert_eq!(
+                total,
+                want.values().sum::<i64>() as u64,
+                "{} S={}: trace length differs",
+                pk.name,
+                v.strides()
+            );
+            assert!(
+                remaining.values().all(|&c| c == 0),
+                "{} S={}: multiset multiplicities differ",
+                pk.name,
+                v.strides()
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_covers_the_critical_access_image() {
+    for pk in all_kernels(2 << 20) {
+        let set = family(&pk.spec);
+        let base = &set.baseline().transformed;
+        let counts = trace_multiset(base);
+        for (addr, mode) in critical_image(base) {
+            let (need_load, need_store) = match mode {
+                AccessMode::Read => (true, false),
+                AccessMode::Write => (false, true),
+                AccessMode::ReadWrite => (true, true),
+            };
+            if need_load {
+                assert!(
+                    counts.get(&(addr, false)).copied().unwrap_or(0) > 0,
+                    "{}: critical load of {addr:#x} missing",
+                    pk.name
+                );
+            }
+            if need_store {
+                assert!(
+                    counts.get(&(addr, true)).copied().unwrap_or(0) > 0,
+                    "{}: critical store of {addr:#x} missing",
+                    pk.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn numeric_execution_is_bit_identical_across_variants() {
+    for pk in all_kernels(2 << 20) {
+        let spec = shrunk(pk.spec.clone());
+        let want = interp::execute_source(&spec);
+        assert!(!want.is_empty(), "{}: source execution wrote nothing", pk.name);
+        let set = family(&pk.spec);
+        for v in &set.variants {
+            let got = interp::execute_transformed(&v.transformed);
+            assert_eq!(
+                got, want,
+                "{} S={}: transformed execution diverged from source order",
+                pk.name, v.strides()
+            );
+        }
+    }
+}
