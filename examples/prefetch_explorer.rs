@@ -1,14 +1,20 @@
 //! Prefetch explorer: the §4 micro-benchmark analysis in one binary —
 //! throughput, stall cycles, hit ratios and streamer statistics for every
-//! stride count, with the prefetcher MSR-style switch flipped both ways.
+//! stride count, with the prefetcher MSR-style switch flipped both ways —
+//! followed by the tuner acting on that analysis: instead of merely
+//! *enumerating* the variant space, it **selects** from it (successive
+//! halving with the simulator as cost model) and serves the second
+//! request from the persistent plan cache.
 //!
 //! ```sh
 //! cargo run --release --example prefetch_explorer [-- <machine>]
 //! ```
 
 use multistride::config::{MachinePreset, ScaleConfig};
-use multistride::coordinator::experiments::{run_micro, MICRO_STRIDES};
+use multistride::coordinator::experiments::{run_micro, EngineCache, MICRO_STRIDES};
 use multistride::kernels::micro::MicroOp;
+use multistride::report::figures::render_search_trace;
+use multistride::tune::{PlanCache, Tuner};
 
 fn main() {
     let machine = std::env::args()
@@ -53,4 +59,36 @@ fn main() {
     }
     println!("reading: multi-striding raises GiB/s and L2/L3 hit ratios and cuts stalls");
     println!("only while the prefetcher is on — the paper's central causal claim.");
+
+    // Selection, not just enumeration: let the tuner pick mxv's variant
+    // with the simulator as cost model, then serve the plan from cache.
+    let budget = 8 * 1024 * 1024u64;
+    let dir = std::env::temp_dir()
+        .join(format!("multistride_explorer_plans_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = PlanCache::new(&dir);
+    let tuner = Tuner::new(machine, budget);
+    let mut engines = EngineCache::new();
+
+    let cold = tuner.tune(&mut engines, &cache, "mxv", false).expect("tune mxv");
+    println!(
+        "\ntuned mxv at {} MiB: chose s={} p={} -> {:.2} GiB/s predicted \
+         ({} probe + {} full simulations, {:.1} M simulated accesses)",
+        budget >> 20,
+        cold.plan.config.stride_unroll,
+        cold.plan.config.portion_unroll,
+        cold.plan.predicted_gib,
+        cold.plan.probe_runs,
+        cold.plan.full_runs,
+        cold.plan.search_sim_accesses as f64 / 1e6
+    );
+    print!("{}", render_search_trace("mxv", &cold.steps));
+
+    let hit = tuner.tune(&mut engines, &cache, "mxv", false).expect("tune mxv again");
+    println!(
+        "second request: cache hit = {}, identical plan = {} (zero simulations)",
+        hit.cache_hit,
+        hit.plan.serialize() == cold.plan.serialize()
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }

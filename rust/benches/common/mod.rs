@@ -28,3 +28,101 @@ pub fn stage<T>(name: &str, f: impl FnOnce() -> T) -> T {
     eprintln!("[bench] {name}: {:.2} s", t.elapsed().as_secs_f64());
     v
 }
+
+/// u64 knob from the environment, with a default.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Current git revision: `git rev-parse`, else CI's `GITHUB_SHA`, else
+/// "unknown". Best-effort — a bench record must never fail on it.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .or_else(|| std::env::var("GITHUB_SHA").ok())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Minimal JSON string escape (labels are plain ASCII, but stay correct).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One scenario row of a bench JSON record, rendered as
+/// `{"label": …, "<unit>": count, "seconds": …, "<unit>_per_sec": rate}`
+/// — `unit` is the bench's work unit ("accesses", "plans", …).
+pub struct JsonScenario {
+    pub label: String,
+    pub unit: &'static str,
+    pub count: u64,
+    pub seconds: f64,
+}
+
+impl JsonScenario {
+    pub fn rate(&self) -> f64 {
+        self.count as f64 / self.seconds
+    }
+}
+
+/// Write the shared bench-JSON envelope every harness emits:
+/// `{bench, schema, unix_time, git_rev, machine, <extra numeric fields>,
+/// scenarios: [...]}` — one format, so per-label rates stay diffable
+/// across benches and commits (see ARCHITECTURE.md §Perf).
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    extra: &[(&str, u64)],
+    scenarios: &[JsonScenario],
+) {
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"{}\",\n  \"schema\": 1,\n", json_escape(bench)));
+    s.push_str(&format!("  \"unix_time\": {unix_time},\n"));
+    s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&git_rev())));
+    s.push_str(&format!(
+        "  \"machine\": {{\"os\": \"{}\", \"arch\": \"{}\", \"cpus\": {cpus}}},\n",
+        std::env::consts::OS,
+        std::env::consts::ARCH
+    ));
+    for (k, v) in extra {
+        s.push_str(&format!("  \"{}\": {v},\n", json_escape(k)));
+    }
+    s.push_str("  \"scenarios\": [\n");
+    for (i, r) in scenarios.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"label\": \"{}\", \"{}\": {}, \"seconds\": {:.6}, \"{}_per_sec\": {:.3}}}{}\n",
+            json_escape(&r.label),
+            r.unit,
+            r.count,
+            r.seconds,
+            r.unit,
+            r.rate(),
+            if i + 1 == scenarios.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}

@@ -18,8 +18,11 @@
 //! sweeps use ([`Engine::prepare`] via `EngineCache`) against fresh
 //! construction per configuration point.
 
+mod common;
+
 use std::time::Instant;
 
+use common::{env_u64, write_bench_json, JsonScenario};
 use multistride::config::coffee_lake;
 use multistride::coordinator::experiments::EngineCache;
 use multistride::kernels::library::{all_kernels, kernel_by_name};
@@ -28,20 +31,7 @@ use multistride::sim::{Engine, EngineConfig};
 use multistride::trace::KernelTrace;
 use multistride::transform::{transform, StridingConfig};
 
-/// One measured scenario, kept for the JSON record.
-struct Scenario {
-    label: String,
-    accesses: u64,
-    seconds: f64,
-}
-
-impl Scenario {
-    fn rate(&self) -> f64 {
-        self.accesses as f64 / self.seconds
-    }
-}
-
-fn rate(results: &mut Vec<Scenario>, label: impl Into<String>, accesses: u64, f: impl FnOnce()) {
+fn rate(results: &mut Vec<JsonScenario>, label: impl Into<String>, accesses: u64, f: impl FnOnce()) {
     let label = label.into();
     let t = Instant::now();
     f();
@@ -50,75 +40,7 @@ fn rate(results: &mut Vec<Scenario>, label: impl Into<String>, accesses: u64, f:
         "{label:>42}: {:>8.2} M accesses/s ({accesses} accesses, {s:.3} s)",
         accesses as f64 / s / 1e6
     );
-    results.push(Scenario { label, accesses, seconds: s });
-}
-
-fn env_u64(name: &str, default: u64) -> u64 {
-    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-/// Current git revision: `git rev-parse`, else CI's `GITHUB_SHA`, else
-/// "unknown". Best-effort — the record must never fail on it.
-fn git_rev() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .or_else(|| std::env::var("GITHUB_SHA").ok())
-        .unwrap_or_else(|| "unknown".to_string())
-}
-
-/// Minimal JSON string escape (labels are plain ASCII, but stay correct).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
-fn write_json(path: &str, bytes: u64, sweep_bytes: u64, results: &[Scenario]) {
-    let unix_time = std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0);
-    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let mut s = String::new();
-    s.push_str("{\n");
-    s.push_str("  \"bench\": \"sim_hotpath\",\n  \"schema\": 1,\n");
-    s.push_str(&format!("  \"unix_time\": {unix_time},\n"));
-    s.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&git_rev())));
-    s.push_str(&format!(
-        "  \"machine\": {{\"os\": \"{}\", \"arch\": \"{}\", \"cpus\": {cpus}}},\n",
-        std::env::consts::OS,
-        std::env::consts::ARCH
-    ));
-    s.push_str(&format!("  \"bytes\": {bytes},\n  \"sweep_bytes\": {sweep_bytes},\n"));
-    s.push_str("  \"scenarios\": [\n");
-    for (i, r) in results.iter().enumerate() {
-        s.push_str(&format!(
-            "    {{\"label\": \"{}\", \"accesses\": {}, \"seconds\": {:.6}, \"accesses_per_sec\": {:.1}}}{}\n",
-            json_escape(&r.label),
-            r.accesses,
-            r.seconds,
-            r.rate(),
-            if i + 1 == results.len() { "" } else { "," }
-        ));
-    }
-    s.push_str("  ]\n}\n");
-    match std::fs::write(path, &s) {
-        Ok(()) => println!("\n[bench] wrote {path}"),
-        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
-    }
+    results.push(JsonScenario { label, unit: "accesses", count: accesses, seconds: s });
 }
 
 fn main() {
@@ -226,5 +148,10 @@ fn main() {
 
     let json_path =
         std::env::var("MULTISTRIDE_BENCH_JSON").unwrap_or_else(|_| "BENCH_sim_hotpath.json".into());
-    write_json(&json_path, bytes, sweep_bytes, &results);
+    write_bench_json(
+        &json_path,
+        "sim_hotpath",
+        &[("bytes", bytes), ("sweep_bytes", sweep_bytes)],
+        &results,
+    );
 }

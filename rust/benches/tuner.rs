@@ -1,0 +1,128 @@
+//! Bench harness — tuner serving path: cold-search latency vs cache-hit
+//! latency, in plans per second. This is the tune-once/serve-forever
+//! claim made measurable: the cold column is what a first request for a
+//! (kernel, machine, budget) pays, the hit column is what every
+//! subsequent request pays.
+//!
+//! Besides the human-readable table, the harness emits `BENCH_tuner.json`
+//! (same envelope as `BENCH_sim_hotpath.json`: per-scenario rates plus
+//! machine and git-revision metadata), and asserts the plan cache
+//! round-trips: every persisted plan re-parses to the exact bytes on
+//! disk, and the warm pass serves byte-identical plans to the cold pass.
+//!
+//! Knobs (environment):
+//! * `MULTISTRIDE_TUNER_BYTES` — per-kernel tuning budget in bytes
+//!   (default 8 MiB; CI's advisory tuner-smoke job runs a reduced size).
+//! * `MULTISTRIDE_BENCH_JSON` — output path for the JSON record
+//!   (default `BENCH_tuner.json` in the working directory).
+
+mod common;
+
+use std::time::Instant;
+
+use common::{env_u64, write_bench_json, JsonScenario};
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::{tune_kernel, tune_universe};
+use multistride::runtime::universe_names;
+use multistride::tune::{PlanCache, TunedPlan};
+
+fn main() {
+    let m = coffee_lake();
+    let budget = env_u64("MULTISTRIDE_TUNER_BYTES", 8 * 1024 * 1024);
+    let dir = std::env::temp_dir()
+        .join(format!("multistride_tuner_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = PlanCache::new(&dir);
+    let n_kernels = universe_names(budget).len() as u64;
+    let mut results = Vec::new();
+
+    // Cold: every kernel in the registry searched in parallel.
+    let t = Instant::now();
+    let cold = tune_universe(m, budget, true, &cache, false);
+    let cold_secs = t.elapsed().as_secs_f64();
+    let failures = cold.iter().filter(|r| r.is_err()).count();
+    assert_eq!(failures, 0, "cold tune must cover the whole registry");
+    assert!(cold.iter().all(|r| !r.as_ref().unwrap().cache_hit));
+    println!(
+        "{:>42}: {:>8.2} plans/s ({n_kernels} plans, {cold_secs:.3} s)",
+        "tune universe, cold search",
+        n_kernels as f64 / cold_secs
+    );
+    results.push(JsonScenario {
+        label: "tune universe, cold search".into(),
+        unit: "plans",
+        count: n_kernels,
+        seconds: cold_secs,
+    });
+
+    // Round-trip wall: every persisted plan re-parses to its exact bytes.
+    let files = cache.list();
+    assert_eq!(files.len() as u64, n_kernels, "one plan per (kernel, machine)");
+    for f in &files {
+        let text = std::fs::read_to_string(f).unwrap();
+        let plan = TunedPlan::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", f.display()));
+        assert_eq!(plan.serialize(), text, "{}: disk round trip", f.display());
+    }
+    println!("{:>42}: {} plans verified", "plan-cache round trip", files.len());
+
+    // Warm: the same universe served entirely from the plan cache.
+    let t = Instant::now();
+    let warm = tune_universe(m, budget, true, &cache, false);
+    let warm_secs = t.elapsed().as_secs_f64();
+    for (c, w) in cold.iter().zip(&warm) {
+        let (c, w) = (c.as_ref().unwrap(), w.as_ref().unwrap());
+        assert!(w.cache_hit, "{}: second pass must hit", w.plan.kernel);
+        assert_eq!(
+            c.plan.serialize(),
+            w.plan.serialize(),
+            "{}: hit serves the cold plan exactly",
+            w.plan.kernel
+        );
+    }
+    println!(
+        "{:>42}: {:>8.2} plans/s ({n_kernels} plans, {warm_secs:.3} s)",
+        "tune universe, cache hit",
+        n_kernels as f64 / warm_secs
+    );
+    results.push(JsonScenario {
+        label: "tune universe, cache hit".into(),
+        unit: "plans",
+        count: n_kernels,
+        seconds: warm_secs,
+    });
+
+    // Single-plan hit latency, amortized over repeats (the serving-path
+    // number: lookup + parse + staleness check, no simulation).
+    let reps = 200u64;
+    let t = Instant::now();
+    for _ in 0..reps {
+        let out = tune_kernel(m, "mxv", budget, true, &cache, false).unwrap();
+        assert!(out.cache_hit);
+    }
+    let hit_secs = t.elapsed().as_secs_f64();
+    println!(
+        "{:>42}: {:>8.2} plans/s ({reps} hits, {:.1} us/hit)",
+        "single-kernel cache hit (mxv)",
+        reps as f64 / hit_secs,
+        hit_secs / reps as f64 * 1e6
+    );
+    results.push(JsonScenario {
+        label: "single-kernel cache hit (mxv)".into(),
+        unit: "plans",
+        count: reps,
+        seconds: hit_secs,
+    });
+
+    println!(
+        "\ncold search amortizes after {:.1} hits per kernel (cold {:.3} s vs hit {:.3} s per plan)",
+        (cold_secs / n_kernels as f64) / (hit_secs / reps as f64),
+        cold_secs / n_kernels as f64,
+        hit_secs / reps as f64
+    );
+
+    let json_path =
+        std::env::var("MULTISTRIDE_BENCH_JSON").unwrap_or_else(|_| "BENCH_tuner.json".into());
+    write_bench_json(&json_path, "tuner", &[("budget_bytes", budget)], &results);
+    std::fs::remove_dir_all(&dir).ok();
+}

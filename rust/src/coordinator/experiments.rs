@@ -414,15 +414,17 @@ pub fn figure7(machine: MachineConfig, kernel: &str, budget: u64, max_total: u32
 /// (the add-a-kernel recipe reaches the sweeps without touching this
 /// file): the paper's Figure 6 panel set **plus the extended universe**.
 /// Only gemver's mxv-shaped sub-kernels are excluded, as duplicate shapes
-/// of `mxv` (the paper's own panel choice).
+/// of `mxv` (the paper's own panel choice). The name source is
+/// [`crate::runtime::universe_names`] — the same projection
+/// `runtime::kernel_universe` and [`tune_universe`] use — so the three
+/// kernel lists cannot drift.
 pub fn figure6_kernels() -> Vec<String> {
     const EXCLUDE: [&str; 2] = ["gemvermxv1", "gemvermxv2"];
     // Specs are metadata-only (no data arrays), so enumerating the
     // registry at the smallest scale just to harvest names is cheap.
     const NAME_BUDGET: u64 = 1 << 20;
-    all_kernels(NAME_BUDGET)
-        .iter()
-        .map(|k| k.name.clone())
+    crate::runtime::universe_names(NAME_BUDGET)
+        .into_iter()
         .filter(|n| !EXCLUDE.contains(&n.as_str()))
         .collect()
 }
@@ -437,6 +439,53 @@ pub fn figure7_kernels() -> Vec<String> {
     let has_vendor_model =
         |k: &str| Reference::for_kernel(k).iter().any(|r| r.is_vendor_model());
     figure6_kernels().into_iter().filter(|k| k != "gemversum" && has_vendor_model(k)).collect()
+}
+
+/// Tune one kernel against the plan cache (cold-search on miss/stale,
+/// persist the winner). One-shot convenience over [`crate::tune::Tuner`];
+/// batch callers should prefer [`tune_universe`] / [`tune_kernels`],
+/// which reuse warm engines across kernels.
+pub fn tune_kernel(
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    prefetch: bool,
+    cache: &crate::tune::PlanCache,
+    force: bool,
+) -> crate::Result<crate::tune::TuneOutcome> {
+    let tuner = crate::tune::Tuner { machine, budget, prefetch, params: Default::default() };
+    tuner.tune(&mut EngineCache::new(), cache, kernel, force)
+}
+
+/// Tune the whole registry universe in parallel: one job per kernel, one
+/// warm engine per worker, each winner persisted to `cache`. Results come
+/// back in registry order; per-kernel failures are reported per slot, not
+/// by poisoning the batch.
+pub fn tune_universe(
+    machine: MachineConfig,
+    budget: u64,
+    prefetch: bool,
+    cache: &crate::tune::PlanCache,
+    force: bool,
+) -> Vec<crate::Result<crate::tune::TuneOutcome>> {
+    let names = crate::runtime::universe_names(budget);
+    tune_kernels(machine, budget, prefetch, cache, force, &names)
+}
+
+/// [`tune_universe`] restricted to an explicit kernel-name list.
+pub fn tune_kernels(
+    machine: MachineConfig,
+    budget: u64,
+    prefetch: bool,
+    cache: &crate::tune::PlanCache,
+    force: bool,
+    kernels: &[String],
+) -> Vec<crate::Result<crate::tune::TuneOutcome>> {
+    let tuner = crate::tune::Tuner { machine, budget, prefetch, params: Default::default() };
+    let jobs: Vec<String> = kernels.to_vec();
+    parallel_map_with(jobs, default_workers(), EngineCache::new, |engines, name| {
+        tuner.tune(engines, cache, name, force)
+    })
 }
 
 /// Sanity: the whole kernel universe (Table 1 subset included) transforms
@@ -510,6 +559,44 @@ mod tests {
     #[test]
     fn selfcheck_passes() {
         selfcheck(4 * MIB).unwrap();
+    }
+
+    #[test]
+    fn kernel_lists_derive_from_the_registry_universe() {
+        // figure6 = universe minus exactly the two mxv-shaped gemver
+        // parts; figure7 ⊆ figure6. All three lists share the
+        // runtime::universe_names projection, so they cannot drift.
+        let names = crate::runtime::universe_names(1 << 20);
+        let f6 = figure6_kernels();
+        assert!(f6.iter().all(|k| names.contains(k)));
+        assert_eq!(f6.len() + 2, names.len());
+        assert!(!f6.contains(&"gemvermxv1".to_string()));
+        assert!(!f6.contains(&"gemvermxv2".to_string()));
+        let f7 = figure7_kernels();
+        assert!(f7.iter().all(|k| f6.contains(k)));
+    }
+
+    #[test]
+    fn tune_kernels_batch_reports_per_slot() {
+        let dir = std::env::temp_dir()
+            .join(format!("multistride_tune_batch_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = crate::tune::PlanCache::new(&dir);
+        let names: Vec<String> = ["mxv", "init"].map(String::from).to_vec();
+        let cold = tune_kernels(coffee_lake(), MIB, true, &cache, false, &names);
+        assert_eq!(cold.len(), 2);
+        for (name, out) in names.iter().zip(&cold) {
+            let o = out.as_ref().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!o.cache_hit);
+            assert_eq!(&o.plan.kernel, name);
+        }
+        // One plan per kernel persisted; a second batch is all hits.
+        assert_eq!(cache.list().len(), 2);
+        let warm = tune_kernels(coffee_lake(), MIB, true, &cache, false, &names);
+        for out in &warm {
+            assert!(out.as_ref().unwrap().cache_hit);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -43,6 +43,12 @@
 //!   fan out over worker threads, each of which reuses one warm
 //!   [`sim::Engine`] allocation across sweep points via
 //!   [`sim::Engine::prepare`].
+//! * [`tune`] — the auto-tuning planner: successive-halving search over
+//!   each kernel's derived variant family with the simulator as cost
+//!   model, winning [`tune::TunedPlan`]s persisted to an on-disk
+//!   [`tune::PlanCache`] keyed by (spec hash, machine fingerprint,
+//!   budget class) so repeated requests are cache hits and stale plans
+//!   are re-tuned, never silently served.
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas kernel
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them numerically.
 //! * [`native`] — real memory-bandwidth probes that run single- vs
@@ -62,6 +68,7 @@ pub mod runtime;
 pub mod sim;
 pub mod trace;
 pub mod transform;
+pub mod tune;
 pub mod util;
 
 /// Crate-wide result alias.

@@ -11,6 +11,7 @@
 //! repro figure7 [--kernel K]    # comparison with state-of-the-art models
 //! repro sweep --kernel K        # detailed sweep of one kernel
 //! repro universe                # kernel registry + derived variant family
+//! repro tune [--kernel K]       # auto-tune variants, persist plans (--force re-tunes)
 //! repro native                  # real host-memory multi-striding probe
 //! repro validate                # load + execute the PJRT artifacts
 //! repro all                     # everything (writes results/*.csv too)
@@ -44,6 +45,7 @@ fn main() {
         "figure6" | "sweep" => figure6(&opts),
         "figure7" => figure7(&opts),
         "universe" => universe(&opts),
+        "tune" => tune(&opts),
         "native" => native(&opts),
         "validate" => validate(&opts),
         "run" => run_config(&opts),
@@ -68,9 +70,9 @@ fn usage() {
     eprintln!(
         "usage: repro <command> [--machine coffee-lake|cascade-lake|zen2] \
          [--kernel NAME] [--smoke] [--max-total N] [--csv DIR] [--artifacts DIR] \
-         [--no-prefetch] [--config FILE]\n\
+         [--plans DIR] [--force] [--no-prefetch] [--config FILE]\n\
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
-         sweep universe native validate all"
+         sweep universe tune native validate all"
     );
 }
 
@@ -86,6 +88,10 @@ struct Opts {
     /// MSR-style prefetcher switch for the kernel sweeps (the Figure 6
     /// bicg top-right panel runs with it off).
     prefetch: bool,
+    /// Plan-cache directory for `repro tune` (default: `<artifacts>/plans`).
+    plans: Option<PathBuf>,
+    /// `repro tune --force`: bypass the plan cache and re-search.
+    force: bool,
 }
 
 impl Opts {
@@ -99,6 +105,8 @@ impl Opts {
             artifacts: ArtifactRegistry::default_dir(),
             config: None,
             prefetch: true,
+            plans: None,
+            force: false,
         };
         let mut it = args.iter();
         while let Some(a) = it.next() {
@@ -121,6 +129,10 @@ impl Opts {
                 "--config" => {
                     o.config = Some(PathBuf::from(it.next().expect("--config needs a value")))
                 }
+                "--plans" => {
+                    o.plans = Some(PathBuf::from(it.next().expect("--plans needs a value")))
+                }
+                "--force" => o.force = true,
                 "--no-prefetch" => o.prefetch = false,
                 other => {
                     eprintln!("unknown option {other}");
@@ -241,15 +253,24 @@ fn figure3_4(opts: &Opts) -> multistride::Result<()> {
 }
 
 /// Clean error (not the coordinator's backstop panic) on a typo'd
-/// `--kernel` name. Shared by every kernel-scoped command.
+/// `--kernel` name, listing the registered universe (names + family) so
+/// the user sees what *is* available. Shared by every kernel-scoped
+/// command.
 fn ensure_known_kernel(kernel: Option<&str>, budget: u64) -> multistride::Result<()> {
-    if let Some(k) = kernel {
-        multistride::ensure!(
-            multistride::kernels::library::kernel_by_name(k, budget).is_some(),
-            "unknown kernel {k}"
-        );
+    let Some(k) = kernel else { return Ok(()) };
+    if multistride::kernels::library::kernel_by_name(k, budget).is_some() {
+        return Ok(());
     }
-    Ok(())
+    let mut listing = String::new();
+    for pk in multistride::kernels::library::all_kernels(budget) {
+        listing.push_str(&format!(
+            "\n  {:<12} [{}] {}",
+            pk.name,
+            if pk.extended { "extended" } else { "paper" },
+            pk.description
+        ));
+    }
+    multistride::bail!("unknown kernel {k}; the registered kernel universe is:{listing}")
 }
 
 fn figure6(opts: &Opts) -> multistride::Result<()> {
@@ -376,6 +397,97 @@ fn universe(opts: &Opts) -> multistride::Result<()> {
     Ok(())
 }
 
+/// `repro tune`: auto-tune the variant space of one kernel (`--kernel`)
+/// or the whole registry, with the simulator as cost model. Winning plans
+/// persist to the plan cache (`--plans DIR`, default `<artifacts>/plans`)
+/// keyed by (spec hash, machine fingerprint, budget class); repeated
+/// invocations are served from the cache unless `--force`.
+fn tune(opts: &Opts) -> multistride::Result<()> {
+    use multistride::tune::PlanCache;
+    let m = opts.machine.config();
+    let budget = opts.scale().kernel_bytes;
+    ensure_known_kernel(opts.kernel.as_deref(), budget)?;
+    let cache = match &opts.plans {
+        Some(dir) => PlanCache::new(dir),
+        None => PlanCache::default_under(&opts.artifacts),
+    };
+    let plans_dir = cache.dir().to_path_buf();
+    let kernels: Vec<String> = match &opts.kernel {
+        Some(k) => vec![k.clone()],
+        None => multistride::runtime::universe_names(budget),
+    };
+    if !opts.prefetch {
+        println!("[hardware prefetching DISABLED for this tuning run]");
+    }
+    let outcomes = exp::tune_kernels(m, budget, opts.prefetch, &cache, opts.force, &kernels);
+    let mut rows = Vec::new();
+    let mut failures = 0u32;
+    for (name, out) in kernels.iter().zip(outcomes) {
+        match out {
+            Ok(o) => rows.push(o),
+            Err(e) => {
+                failures += 1;
+                eprintln!("[tune] {name}: FAILED: {e}");
+            }
+        }
+    }
+    print!("{}", figures::render_tuning_table(m.name, &rows));
+    // With a single kernel requested, show the full search audit trace.
+    if opts.kernel.is_some() {
+        for o in &rows {
+            if o.cache_hit {
+                println!("({}: served from the plan cache — use --force to re-search)", o.plan.kernel);
+            } else {
+                print!("{}", figures::render_search_trace(&o.plan.kernel, &o.steps));
+            }
+        }
+    }
+    println!("plans dir: {}", plans_dir.display());
+    if let Some(dir) = &opts.csv_dir {
+        report::write_csv(&dir.join("tune.csv"), &TUNE_CSV_HEADER, &tune_csv_rows(&rows))?;
+    }
+    multistride::ensure!(failures == 0, "{failures} kernel(s) failed to tune");
+    Ok(())
+}
+
+const TUNE_CSV_HEADER: [&str; 10] = [
+    "kernel",
+    "machine",
+    "strides",
+    "portion",
+    "cache_hit",
+    "predicted_gib",
+    "speedup_vs_single",
+    "probe_runs",
+    "full_runs",
+    "search_accesses",
+];
+
+fn tune_csv_rows(rows: &[multistride::tune::TuneOutcome]) -> Vec<Vec<String>> {
+    rows.iter()
+        .map(|o| {
+            let p = &o.plan;
+            vec![
+                p.kernel.clone(),
+                p.machine.clone(),
+                p.config.stride_unroll.to_string(),
+                p.config.portion_unroll.to_string(),
+                o.cache_hit.to_string(),
+                format!("{:.4}", p.predicted_gib),
+                p.speedup_over_single()
+                    .map(|s| format!("{s:.4}"))
+                    .unwrap_or_else(|| "-".into()),
+                // Cost columns report THIS request's cost (zero on a
+                // hit), matching the rendered table; the plan file keeps
+                // the original search's provenance.
+                if o.cache_hit { "0".into() } else { p.probe_runs.to_string() },
+                if o.cache_hit { "0".into() } else { p.full_runs.to_string() },
+                if o.cache_hit { "0".into() } else { p.search_sim_accesses.to_string() },
+            ]
+        })
+        .collect()
+}
+
 fn native(opts: &Opts) -> multistride::Result<()> {
     use multistride::native::NativeProbe;
     let probe = if opts.smoke {
@@ -487,6 +599,9 @@ fn all(opts: &Opts) -> multistride::Result<()> {
     // that figure6's broader sweep also covers — a small fraction of
     // figure6's config grid, accepted to keep the drivers independent.
     universe(opts)?;
+    // Consume (or, on first run, populate) the persistent plan cache: a
+    // re-run of `repro all` serves every kernel's tuned variant from disk.
+    tune(opts)?;
     if ArtifactRegistry::new(&opts.artifacts).list().is_empty() {
         println!("(skipping validate: no artifacts built)");
     } else {

@@ -174,6 +174,77 @@ pub fn render_variant_trajectory(points: &[KernelPoint]) -> String {
     t.render()
 }
 
+/// Tuner results: one row per tuned kernel — the chosen (S, P), whether
+/// the plan came from the cache or a cold search, the predicted
+/// throughput, the probe-rung speedup over the single-stride baseline,
+/// and the search cost in simulated accesses. The cost columns report
+/// *this request's* cost — all zero on cache hits (the persisted plan
+/// keeps the original search's provenance); `tune.csv` follows the same
+/// convention.
+pub fn render_tuning_table(machine: &str, rows: &[crate::tune::TuneOutcome]) -> String {
+    let mut t = Table::new(&[
+        "kernel",
+        "S",
+        "P",
+        "source",
+        "GiB/s",
+        "vs single",
+        "probe sims",
+        "full sims",
+        "search cost (Macc)",
+    ])
+    .with_title(&format!("Tuner — chosen variant per kernel ({machine})"));
+    for o in rows {
+        let p = &o.plan;
+        t.row(vec![
+            p.kernel.clone(),
+            p.config.stride_unroll.to_string(),
+            p.config.portion_unroll.to_string(),
+            if o.cache_hit { "cache" } else { "search" }.into(),
+            gib(p.predicted_gib),
+            p.speedup_over_single().map(speedup).unwrap_or_else(|| "-".into()),
+            if o.cache_hit { "0".into() } else { p.probe_runs.to_string() },
+            if o.cache_hit { "0".into() } else { p.full_runs.to_string() },
+            if o.cache_hit {
+                "0.00".into()
+            } else {
+                format!("{:.2}", p.search_sim_accesses as f64 / 1e6)
+            },
+        ]);
+    }
+    t.render()
+}
+
+/// A cold search's audit trace: every candidate visited, at which rung
+/// and budget, its score, and why it was kept or pruned.
+pub fn render_search_trace(kernel: &str, steps: &[crate::tune::SearchStep]) -> String {
+    use crate::tune::Verdict;
+    let mut t = Table::new(&["rung", "budget (MiB)", "S", "P", "GiB/s", "verdict"])
+        .with_title(&format!("Tuner search trace — {kernel}"));
+    for s in steps {
+        t.row(vec![
+            s.rung.to_string(),
+            if s.budget == 0 {
+                "-".into()
+            } else {
+                format!("{:.1}", s.budget as f64 / 1048576.0)
+            },
+            s.config.stride_unroll.to_string(),
+            s.config.portion_unroll.to_string(),
+            s.score_gib.map(gib).unwrap_or_else(|| "-".into()),
+            match s.verdict {
+                Verdict::Infeasible => "infeasible (register file)".into(),
+                Verdict::Pruned { cutoff_gib } => {
+                    format!("pruned (cutoff {cutoff_gib:.2} GiB/s)")
+                }
+                Verdict::Advanced => "advanced".into(),
+                Verdict::Winner => "WINNER".into(),
+            },
+        ]);
+    }
+    t.render()
+}
+
 /// Figure 7: speedups of the best multi-strided configuration over each
 /// reference.
 pub fn render_comparison(machine: &str, rows: &[ComparisonRow]) -> String {
@@ -236,6 +307,26 @@ mod tests {
         let out = render_variant_trajectory(&pts);
         assert!(out.contains("mxv") && out.contains("triad"));
         assert!(out.contains("S=8"), "family columns present even when unswept");
+    }
+
+    #[test]
+    fn tuning_table_and_trace_render() {
+        use crate::coordinator::experiments::EngineCache;
+        use crate::tune::{search, SearchParams, TuneOutcome};
+        let out = search(
+            &mut EngineCache::new(),
+            coffee_lake(),
+            "mxv",
+            1 << 21,
+            true,
+            &SearchParams::default(),
+        )
+        .unwrap();
+        let outcome = TuneOutcome { plan: out.plan, cache_hit: false, steps: out.steps };
+        let s = render_tuning_table("Coffee Lake", std::slice::from_ref(&outcome));
+        assert!(s.contains("mxv") && s.contains("search"));
+        let tr = render_search_trace("mxv", &outcome.steps);
+        assert!(tr.contains("WINNER"));
     }
 
     #[test]

@@ -15,7 +15,9 @@
 
 pub mod registry;
 
-pub use registry::{kernel_universe, ArtifactRegistry, KernelFamily, RegisteredKernel};
+pub use registry::{
+    kernel_universe, universe_names, ArtifactRegistry, KernelFamily, RegisteredKernel,
+};
 
 #[cfg(feature = "pjrt")]
 use std::collections::HashMap;

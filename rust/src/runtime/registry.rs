@@ -30,6 +30,15 @@ pub struct RegisteredKernel {
     pub has_artifact: bool,
 }
 
+/// The simulator-side universe's kernel names at `budget` bytes, in
+/// registry order. **The single name source** for every registry-driven
+/// kernel list: [`kernel_universe`] joins it with artifacts, and the
+/// coordinator's `figure6_kernels`/`figure7_kernels`/`tune_universe`
+/// derive from it (with documented filters), so the lists cannot drift.
+pub fn universe_names(budget: u64) -> Vec<String> {
+    all_kernels(budget).iter().map(|k| k.name.clone()).collect()
+}
+
 /// Enumerate the whole kernel universe at `budget` bytes, marking which
 /// kernels also have a compiled artifact in `artifacts` — the registry
 /// view joining simulator specs with runtime executability (rendered by
@@ -134,6 +143,16 @@ mod tests {
         assert!(universe.iter().any(|k| k.loop_depth == 3), "3-deep nest registered");
         assert!(universe.iter().all(|k| !k.has_artifact), "no artifacts on disk");
         assert!(universe.iter().all(|k| k.footprint > 0));
+    }
+
+    #[test]
+    fn universe_names_is_the_registry_projection() {
+        let reg = ArtifactRegistry::new("/nonexistent/multistride");
+        let universe = kernel_universe(&reg, 1 << 22);
+        assert_eq!(
+            universe_names(1 << 22),
+            universe.iter().map(|k| k.name.clone()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

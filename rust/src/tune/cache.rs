@@ -1,0 +1,188 @@
+//! The persistent on-disk plan cache.
+//!
+//! One file per `(kernel, machine, prefetch, budget-class)` key under a
+//! root directory (by default `<artifacts>/plans`, i.e. under the
+//! [`crate::runtime::ArtifactRegistry`] dir). File names are a
+//! human-readable projection of the key; the *authoritative* identity is
+//! the plan's `(spec_hash, machine_fingerprint, budget_class)` triple,
+//! which [`super::Tuner`] re-checks on every load — a renamed or copied
+//! file can therefore never smuggle a stale plan past the tuner.
+//!
+//! Durability: [`PlanCache::store`] writes to a temp file and renames
+//! over the destination, so a reader never observes a half-written plan;
+//! a plan that *is* damaged on disk fails [`TunedPlan::parse`]'s checksum
+//! with a recoverable error ([`PlanCache::load`] returns `Err`, never
+//! panics), which the tuner treats as a miss and re-tunes.
+
+use std::path::{Path, PathBuf};
+
+use super::plan::TunedPlan;
+use crate::error::Context;
+use crate::{format_err, Result};
+
+/// Handle to a plan-cache directory (which need not exist yet).
+#[derive(Debug, Clone)]
+pub struct PlanCache {
+    dir: PathBuf,
+}
+
+impl PlanCache {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// The conventional location under an artifact directory.
+    pub fn default_under(artifacts_dir: &Path) -> Self {
+        Self::new(artifacts_dir.join("plans"))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path a plan for this key lives at.
+    pub fn path_for(&self, kernel: &str, machine: &str, prefetch: bool, budget_class: u32) -> PathBuf {
+        let slug: String = machine
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+            .collect();
+        let pf = if prefetch { "pf" } else { "nopf" };
+        self.dir.join(format!("{kernel}_{slug}_{pf}_b{budget_class}.plan"))
+    }
+
+    /// Load the plan for a key. `Ok(None)` when absent; `Err` (recoverable)
+    /// when present but unreadable or corrupt.
+    pub fn load(
+        &self,
+        kernel: &str,
+        machine: &str,
+        prefetch: bool,
+        budget_class: u32,
+    ) -> Result<Option<TunedPlan>> {
+        let path = self.path_for(kernel, machine, prefetch, budget_class);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format_err!("plan cache: cannot read {path:?}: {e}")),
+        };
+        TunedPlan::parse(&text)
+            .map(Some)
+            .map_err(|e| format_err!("plan cache: {path:?}: {e}"))
+    }
+
+    /// Persist a plan under its own key, atomically (temp file + rename).
+    /// Parallel tuners write distinct keys, so distinct temp names.
+    pub fn store(&self, plan: &TunedPlan) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)
+            .context(format!("plan cache: cannot create {:?}", self.dir))?;
+        let path =
+            self.path_for(&plan.kernel, &plan.machine, plan.prefetch, plan.budget_class);
+        let tmp = path.with_extension("plan.tmp");
+        std::fs::write(&tmp, plan.serialize())
+            .context(format!("plan cache: cannot write {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .context(format!("plan cache: cannot move plan into place at {path:?}"))?;
+        Ok(path)
+    }
+
+    /// All plan files currently cached (sorted; for benches and CI).
+    pub fn list(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.extension().and_then(|x| x.to_str()) == Some("plan") {
+                    out.push(p);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+    use crate::kernels::library::mxv;
+    use crate::transform::StridingConfig;
+    use crate::tune::plan::{budget_class, machine_fingerprint, spec_hash};
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("multistride_plancache_{tag}_{}", std::process::id()))
+    }
+
+    fn plan() -> TunedPlan {
+        TunedPlan {
+            kernel: "mxv".into(),
+            machine: "Coffee Lake".into(),
+            machine_fingerprint: machine_fingerprint(&coffee_lake(), true),
+            spec_hash: spec_hash(&mxv(1 << 22).spec),
+            budget_class: budget_class(1 << 22),
+            budget_bytes: 1 << 22,
+            prefetch: true,
+            config: StridingConfig::new(8, 2),
+            predicted_gib: 10.0,
+            winner_probe_gib: 9.0,
+            baseline_probe_gib: 4.0,
+            predicted_accesses_per_sec: 1e9,
+            l1_hit: 0.8,
+            l2_hit: 0.4,
+            l3_hit: 0.2,
+            probe_runs: 4,
+            full_runs: 2,
+            search_sim_accesses: 1000,
+        }
+    }
+
+    #[test]
+    fn store_then_load_roundtrips() {
+        let dir = tmp("roundtrip");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = PlanCache::new(&dir);
+        let p = plan();
+        assert!(cache.load("mxv", "Coffee Lake", true, p.budget_class).unwrap().is_none());
+        let path = cache.store(&p).unwrap();
+        assert!(path.starts_with(&dir));
+        let q = cache
+            .load("mxv", "Coffee Lake", true, p.budget_class)
+            .unwrap()
+            .expect("plan present");
+        assert_eq!(p.serialize(), q.serialize());
+        assert_eq!(cache.list(), vec![path]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn keys_separate_prefetch_and_class() {
+        let cache = PlanCache::new("/nonexistent");
+        let a = cache.path_for("mxv", "Coffee Lake", true, 22);
+        let b = cache.path_for("mxv", "Coffee Lake", false, 22);
+        let c = cache.path_for("mxv", "Coffee Lake", true, 26);
+        let d = cache.path_for("mxv", "Zen 2", true, 22);
+        assert!(a != b && a != c && a != d && b != c);
+        assert!(a.to_string_lossy().ends_with("mxv_coffee-lake_pf_b22.plan"));
+    }
+
+    #[test]
+    fn corrupt_file_is_a_recoverable_error() {
+        let dir = tmp("corrupt");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = PlanCache::new(&dir);
+        let p = plan();
+        let path = cache.store(&p).unwrap();
+        // Truncate the stored file mid-way.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let err = cache.load("mxv", "Coffee Lake", true, p.budget_class);
+        assert!(err.is_err(), "corruption must surface as a recoverable error");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_lists_empty() {
+        let cache = PlanCache::new("/nonexistent/multistride_plans");
+        assert!(cache.list().is_empty());
+    }
+}

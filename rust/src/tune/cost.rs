@@ -1,0 +1,132 @@
+//! The tuner's cost model: the warm-engine simulator itself.
+//!
+//! [`evaluate`] runs one `(kernel, config)` point through the exact §6
+//! kernel protocol the sweeps use (`coordinator::experiments::
+//! run_kernel_with`: default 4 KiB pages, footprint-based throughput) and
+//! additionally surfaces the counters a [`super::plan::TunedPlan`]
+//! records — simulated accesses/s, per-level hit ratios, and the access
+//! count the search charges as its cost. Because the simulator is
+//! deterministic and the engine-reuse protocol is bit-identical to fresh
+//! construction (`tests/golden_determinism.rs`), a winner's
+//! [`CostSample::throughput_gib`] equals the exhaustive sweep's
+//! `KernelPoint::throughput_gib` for the same point *exactly* — the
+//! tuner's predictions are the sweep's measurements, not an
+//! approximation of them.
+
+use crate::config::MachineConfig;
+use crate::coordinator::experiments::EngineCache;
+use crate::kernels::library::kernel_by_name;
+use crate::sim::EngineConfig;
+use crate::trace::KernelTrace;
+use crate::transform::{is_feasible, transform, StridingConfig};
+use crate::{ensure, format_err, Result};
+
+/// One simulated data point of the search.
+#[derive(Debug, Clone, Copy)]
+pub struct CostSample {
+    /// Footprint-based throughput (the sweep's scoring unit).
+    pub throughput_gib: f64,
+    /// Simulated vector accesses per simulated second.
+    pub accesses_per_sec: f64,
+    /// Per-level demand hit ratios.
+    pub l1_hit: f64,
+    pub l2_hit: f64,
+    pub l3_hit: f64,
+    /// Simulated accesses this run cost (charged to the search budget).
+    pub sim_accesses: u64,
+}
+
+/// Simulate one configuration of `kernel` at `budget` bytes on a warm
+/// per-worker engine. Errors on unknown kernels, untransformable or
+/// register-infeasible configurations — the search layer decides whether
+/// that prunes the candidate or merely skips a probe.
+pub fn evaluate(
+    engines: &mut EngineCache,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    config: StridingConfig,
+    prefetch: bool,
+) -> Result<CostSample> {
+    let pk = kernel_by_name(kernel, budget)
+        .ok_or_else(|| format_err!("unknown kernel {kernel}"))?;
+    let t = transform(&pk.spec, config)?;
+    ensure!(
+        is_feasible(&t, machine.simd_registers),
+        "{kernel} s={} p={} exceeds the {}-register file",
+        config.stride_unroll,
+        config.portion_unroll,
+        machine.simd_registers
+    );
+    let trace = KernelTrace::new(t);
+    // Same throughput convention as run_kernel_with: data size is the
+    // allocation (spec footprint), not per-access traffic.
+    let footprint = trace.transformed().spec.footprint();
+    let engine = engines
+        .engine_for(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(false));
+    let result = engine.run(trace.iter());
+    let cycles = result.counters.cycles;
+    let accesses = result.counters.accesses;
+    let accesses_per_sec = if cycles == 0 {
+        0.0
+    } else {
+        accesses as f64 / (cycles as f64 / machine.freq_hz())
+    };
+    Ok(CostSample {
+        throughput_gib: machine.gib_per_s(footprint, cycles),
+        accesses_per_sec,
+        l1_hit: result.l1.hit_ratio(),
+        l2_hit: result.l2.hit_ratio(),
+        l3_hit: result.l3.hit_ratio(),
+        sim_accesses: accesses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+    use crate::coordinator::experiments::run_kernel;
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn cost_model_is_the_sweep_simulator_exactly() {
+        let m = coffee_lake();
+        let cfg = StridingConfig::new(4, 1);
+        let sample =
+            evaluate(&mut EngineCache::new(), m, "mxv", 2 * MIB, cfg, true).unwrap();
+        let point = run_kernel(m, "mxv", 2 * MIB, cfg, true).unwrap();
+        assert_eq!(
+            sample.throughput_gib.to_bits(),
+            point.throughput_gib.to_bits(),
+            "tuner score must be bit-identical to the sweep's measurement"
+        );
+        assert!(sample.sim_accesses > 0);
+        assert!(sample.accesses_per_sec > 0.0);
+        assert!((0.0..=1.0).contains(&sample.l1_hit));
+    }
+
+    #[test]
+    fn infeasible_and_unknown_are_errors_not_panics() {
+        let m = coffee_lake();
+        assert!(evaluate(
+            &mut EngineCache::new(),
+            m,
+            "mxv",
+            2 * MIB,
+            StridingConfig::new(16, 4),
+            true
+        )
+        .is_err());
+        assert!(evaluate(
+            &mut EngineCache::new(),
+            m,
+            "nope",
+            2 * MIB,
+            StridingConfig::new(1, 1),
+            true
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Auto-tuning planner: search the multi-stride variant space with the
+//! simulator as cost model, backed by a persistent plan cache.
+//!
+//! The paper's transformation is mechanical (`transform::variants`), but
+//! *selection* — which family member to run on which machine — was until
+//! now an exhaustive sweep whose answer was thrown away. This subsystem
+//! makes selection a served artifact: tune once, cache the
+//! [`TunedPlan`], and answer every later request for the same
+//! `(kernel, machine, budget-class)` from disk.
+//!
+//! Layering (one module per concern):
+//!
+//! * [`plan`] — the [`TunedPlan`] record, its bit-exact on-disk format,
+//!   and the identity hashes (spec content hash, machine fingerprint,
+//!   budget class) that define the staleness contract.
+//! * [`cost`] — the cost model: the warm-engine simulator itself, run
+//!   under the exact sweep protocol so predictions *are* measurements.
+//! * [`search`] — successive-halving over the derived variant family:
+//!   feasibility gate → reduced-budget probe rung → prune dominated
+//!   candidates → full-budget rung, with an audit trace of every visit.
+//! * [`cache`] — the on-disk [`PlanCache`] under the artifact dir.
+//!
+//! [`Tuner`] ties them together: consult the cache, validate the stored
+//! identity triple, and either serve the hit or cold-search and persist.
+//! `coordinator::experiments::{tune_kernel, tune_universe}` fan tuning
+//! out across the registry on the worker pool, and `repro tune` is the
+//! CLI surface. See ARCHITECTURE.md §Tuner.
+
+pub mod cache;
+pub mod cost;
+pub mod plan;
+pub mod search;
+
+pub use cache::PlanCache;
+pub use plan::{budget_class, machine_fingerprint, spec_hash, TunedPlan};
+pub use search::{probe_budget, search, SearchOutcome, SearchParams, SearchStep, Verdict};
+
+use crate::config::MachineConfig;
+use crate::coordinator::experiments::EngineCache;
+use crate::kernels::library::kernel_by_name;
+use crate::{format_err, Result};
+
+/// One tuning request's result: the plan, plus whether it came from the
+/// cache (in which case the search trace is empty).
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub plan: TunedPlan,
+    pub cache_hit: bool,
+    pub steps: Vec<SearchStep>,
+}
+
+/// A tuning endpoint for one `(machine, budget, prefetch)` context.
+#[derive(Debug, Clone, Copy)]
+pub struct Tuner {
+    pub machine: MachineConfig,
+    pub budget: u64,
+    pub prefetch: bool,
+    pub params: SearchParams,
+}
+
+impl Tuner {
+    /// Prefetch-on tuner with default search parameters.
+    pub fn new(machine: MachineConfig, budget: u64) -> Self {
+        Self { machine, budget, prefetch: true, params: SearchParams::default() }
+    }
+
+    /// Serve a plan for `kernel`: a validated cache hit when possible,
+    /// otherwise a cold search whose winner is persisted before
+    /// returning. `force` bypasses the cache lookup (the search result
+    /// still overwrites the cached plan).
+    ///
+    /// Cache handling is deliberately forgiving: a stale plan (identity
+    /// triple mismatch — see [`plan`]) or an unreadable/corrupt file is
+    /// reported on stderr and re-tuned, never served and never fatal.
+    pub fn tune(
+        &self,
+        engines: &mut EngineCache,
+        cache: &PlanCache,
+        kernel: &str,
+        force: bool,
+    ) -> Result<TuneOutcome> {
+        let pk = kernel_by_name(kernel, self.budget)
+            .ok_or_else(|| format_err!("unknown kernel {kernel}"))?;
+        let class = budget_class(self.budget);
+        let want_spec = spec_hash(&pk.spec);
+        let want_machine = machine_fingerprint(&self.machine, self.prefetch);
+        if !force {
+            match cache.load(kernel, self.machine.name, self.prefetch, class) {
+                Ok(Some(p)) => {
+                    if p.spec_hash == want_spec
+                        && p.machine_fingerprint == want_machine
+                        && p.budget_class == class
+                    {
+                        return Ok(TuneOutcome { plan: p, cache_hit: true, steps: Vec::new() });
+                    }
+                    eprintln!(
+                        "[tune] stale plan for {kernel} on {} (spec or machine changed) — re-tuning",
+                        self.machine.name
+                    );
+                }
+                Ok(None) => {}
+                Err(e) => eprintln!("[tune] {e} — re-tuning"),
+            }
+        }
+        let out = search::search(
+            engines,
+            self.machine,
+            kernel,
+            self.budget,
+            self.prefetch,
+            &self.params,
+        )?;
+        cache.store(&out.plan)?;
+        Ok(TuneOutcome { plan: out.plan, cache_hit: false, steps: out.steps })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+
+    const MIB: u64 = 1 << 20;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("multistride_tuner_mod_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn cold_then_hit_then_force() {
+        let dir = tmp("basic");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = PlanCache::new(&dir);
+        let tuner = Tuner::new(coffee_lake(), 2 * MIB);
+        let mut engines = EngineCache::new();
+
+        let cold = tuner.tune(&mut engines, &cache, "mxv", false).unwrap();
+        assert!(!cold.cache_hit);
+        assert!(!cold.steps.is_empty());
+
+        let hit = tuner.tune(&mut engines, &cache, "mxv", false).unwrap();
+        assert!(hit.cache_hit);
+        assert!(hit.steps.is_empty());
+        assert_eq!(hit.plan.serialize(), cold.plan.serialize(), "hit serves the exact plan");
+
+        let forced = tuner.tune(&mut engines, &cache, "mxv", true).unwrap();
+        assert!(!forced.cache_hit, "--force bypasses the cache");
+        assert_eq!(forced.plan.serialize(), cold.plan.serialize(), "search is deterministic");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_and_corrupt_plans_are_retuned() {
+        let dir = tmp("stale");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = PlanCache::new(&dir);
+        let tuner = Tuner::new(coffee_lake(), 2 * MIB);
+        let mut engines = EngineCache::new();
+        let cold = tuner.tune(&mut engines, &cache, "triad", false).unwrap();
+
+        // Stale: valid file, wrong spec hash — must re-search, not serve.
+        let mut stale = cold.plan.clone();
+        stale.spec_hash ^= 1;
+        cache.store(&stale).unwrap();
+        let re = tuner.tune(&mut engines, &cache, "triad", false).unwrap();
+        assert!(!re.cache_hit, "stale plans are re-tuned, not served");
+        assert_eq!(re.plan.serialize(), cold.plan.serialize());
+        // ... and the refreshed plan was persisted over the stale one.
+        let hit = tuner.tune(&mut engines, &cache, "triad", false).unwrap();
+        assert!(hit.cache_hit);
+
+        // Corrupt: garbage on disk — recoverable, re-tuned.
+        let path = cache.path_for("triad", "Coffee Lake", true, budget_class(2 * MIB));
+        std::fs::write(&path, "not a plan at all").unwrap();
+        let re = tuner.tune(&mut engines, &cache, "triad", false).unwrap();
+        assert!(!re.cache_hit);
+        assert_eq!(re.plan.serialize(), cold.plan.serialize());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_kernel_is_an_error() {
+        let cache = PlanCache::new(tmp("unknown"));
+        let tuner = Tuner::new(coffee_lake(), 2 * MIB);
+        assert!(tuner.tune(&mut EngineCache::new(), &cache, "nope", false).is_err());
+    }
+}

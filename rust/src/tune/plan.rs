@@ -1,0 +1,520 @@
+//! The persistent artifact of a tuning run: a [`TunedPlan`] plus its
+//! hand-rolled, dependency-free on-disk format.
+//!
+//! ## Format (`multistride-tuned-plan v1`)
+//!
+//! One plan per file: a fixed header line, a fixed-order sequence of
+//! `key = value` lines, and a terminating `checksum` line (FNV-1a 64 over
+//! every preceding byte). Floating-point fields are serialized as the hex
+//! IEEE-754 bit pattern (`{:#018x}` of `f64::to_bits`), never as decimal
+//! text, so serialize → parse → serialize is **bit-identical** — the
+//! property `tests/plan_cache_roundtrip.rs` pins for randomized plans.
+//! The human-readable view of a plan is the `repro tune` table, not the
+//! file.
+//!
+//! ## Invalidation contract
+//!
+//! A cached plan is only served when all three of its identity fields
+//! match the current request:
+//!
+//! * [`TunedPlan::spec_hash`] — content hash of the (untransformed)
+//!   [`KernelSpec`] at the request budget ([`spec_hash`]);
+//! * [`TunedPlan::machine_fingerprint`] — hash of the full
+//!   [`MachineConfig`] *and* the prefetch enable bit
+//!   ([`machine_fingerprint`]), so tuning with the prefetcher off never
+//!   masquerades as the prefetch-on plan;
+//! * [`TunedPlan::budget_class`] — the power-of-two ceiling class of the
+//!   byte budget ([`budget_class`]).
+//!
+//! Any mismatch means the plan is *stale*: the tuner re-searches and
+//! overwrites rather than silently serving it. A corrupted or truncated
+//! file fails the checksum (or strict field parse) with a recoverable
+//! [`crate::error::Error`] — never a panic — and is likewise re-tuned.
+
+use crate::config::MachineConfig;
+use crate::kernels::spec::{AccessMode, KernelSpec};
+use crate::trace::Arrangement;
+use crate::transform::StridingConfig;
+use crate::{ensure, format_err, Result};
+
+/// First line of every plan file; doubles as the format version. Bump it
+/// when adding a field (old files then fail the header check and re-tune,
+/// which is the intended migration path).
+pub const PLAN_HEADER: &str = "multistride-tuned-plan v1";
+
+/// The winning variant of one `(kernel, machine, budget-class)` tuning
+/// request, with enough provenance to detect staleness and report search
+/// cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPlan {
+    /// Kernel name in the registry universe.
+    pub kernel: String,
+    /// Machine preset name (human key; [`Self::machine_fingerprint`] is
+    /// the authoritative identity).
+    pub machine: String,
+    /// [`machine_fingerprint`] of the machine + prefetch bit tuned on.
+    pub machine_fingerprint: u64,
+    /// [`spec_hash`] of the untransformed spec at [`Self::budget_bytes`].
+    pub spec_hash: u64,
+    /// [`budget_class`] of the tuning budget.
+    pub budget_class: u32,
+    /// Exact byte budget the search ran at.
+    pub budget_bytes: u64,
+    /// Hardware prefetching enabled during the search.
+    pub prefetch: bool,
+    /// The chosen variant configuration.
+    pub config: StridingConfig,
+    /// Winner's full-budget throughput (the simulator's prediction).
+    pub predicted_gib: f64,
+    /// Winner's probe-rung score. NaN if the winner advanced unprobed
+    /// (the probe-scale spec could not host it); equal to
+    /// [`Self::predicted_gib`] when the probe rung was skipped entirely
+    /// (single-candidate search, where the speedup is 1 by definition).
+    pub winner_probe_gib: f64,
+    /// Single-stride baseline's probe-rung score (NaN when unavailable).
+    /// Speedup is reported probe-vs-probe so both sides share a budget.
+    pub baseline_probe_gib: f64,
+    /// Winner's simulated vector accesses per simulated second.
+    pub predicted_accesses_per_sec: f64,
+    /// Winner's cache hit ratios at full budget.
+    pub l1_hit: f64,
+    pub l2_hit: f64,
+    pub l3_hit: f64,
+    /// Probe-rung simulations the search ran.
+    pub probe_runs: u32,
+    /// Full-budget simulations the search ran.
+    pub full_runs: u32,
+    /// Total simulated accesses spent searching (the search-cost column).
+    pub search_sim_accesses: u64,
+}
+
+impl TunedPlan {
+    /// Predicted speedup of the chosen variant over the single-stride
+    /// baseline, measured at the probe rung (both sides share a budget).
+    /// `None` when the baseline score is unavailable.
+    pub fn speedup_over_single(&self) -> Option<f64> {
+        if self.baseline_probe_gib.is_finite()
+            && self.winner_probe_gib.is_finite()
+            && self.baseline_probe_gib > 0.0
+        {
+            Some(self.winner_probe_gib / self.baseline_probe_gib)
+        } else {
+            None
+        }
+    }
+
+    /// Serialize to the on-disk format (see the module docs).
+    pub fn serialize(&self) -> String {
+        fn kv(out: &mut String, k: &str, v: impl std::fmt::Display) {
+            use std::fmt::Write;
+            let _ = writeln!(out, "{k} = {v}");
+        }
+        let mut out = String::with_capacity(640);
+        out.push_str(PLAN_HEADER);
+        out.push('\n');
+        kv(&mut out, "kernel", &self.kernel);
+        kv(&mut out, "machine", &self.machine);
+        kv(&mut out, "machine_fingerprint", hex(self.machine_fingerprint));
+        kv(&mut out, "spec_hash", hex(self.spec_hash));
+        kv(&mut out, "budget_class", self.budget_class);
+        kv(&mut out, "budget_bytes", self.budget_bytes);
+        kv(&mut out, "prefetch", self.prefetch);
+        kv(&mut out, "stride_unroll", self.config.stride_unroll);
+        kv(&mut out, "portion_unroll", self.config.portion_unroll);
+        kv(&mut out, "eliminate_redundant", self.config.eliminate_redundant);
+        kv(&mut out, "arrangement", arrangement_str(self.config.arrangement));
+        kv(&mut out, "predicted_gib", hex(self.predicted_gib.to_bits()));
+        kv(&mut out, "winner_probe_gib", hex(self.winner_probe_gib.to_bits()));
+        kv(&mut out, "baseline_probe_gib", hex(self.baseline_probe_gib.to_bits()));
+        kv(&mut out, "predicted_accesses_per_sec", hex(self.predicted_accesses_per_sec.to_bits()));
+        kv(&mut out, "l1_hit", hex(self.l1_hit.to_bits()));
+        kv(&mut out, "l2_hit", hex(self.l2_hit.to_bits()));
+        kv(&mut out, "l3_hit", hex(self.l3_hit.to_bits()));
+        kv(&mut out, "probe_runs", self.probe_runs);
+        kv(&mut out, "full_runs", self.full_runs);
+        kv(&mut out, "search_sim_accesses", self.search_sim_accesses);
+        let sum = fnv64(out.as_bytes());
+        kv(&mut out, "checksum", hex(sum));
+        out
+    }
+
+    /// Parse the on-disk format. Verification order: checksum first (so
+    /// any corruption or truncation is one clear error), then the strict
+    /// fixed-order field walk. Never panics on malformed input.
+    pub fn parse(text: &str) -> Result<TunedPlan> {
+        let idx = text
+            .rfind("checksum = ")
+            .ok_or_else(|| format_err!("plan corrupt: no checksum line (truncated?)"))?;
+        ensure!(
+            idx == 0 || text[..idx].ends_with('\n'),
+            "plan corrupt: checksum marker not at line start"
+        );
+        let prefix = &text[..idx];
+        // The checksum line must be exactly `checksum = 0x<hex>\n` and
+        // must end the file — no sloppy trailing bytes, or corruption in
+        // the final line could slip past the digest it guards.
+        let val = text[idx..]
+            .strip_prefix("checksum = ")
+            .expect("rfind guarantees the prefix");
+        let val = val
+            .strip_suffix('\n')
+            .ok_or_else(|| format_err!("plan corrupt: checksum line not newline-terminated"))?;
+        let want = parse_u64(val)?;
+        // Canonical form only: `from_str_radix` is case-insensitive (and
+        // the value could be decimal), so a byte of the checksum line —
+        // which sits outside the digest it carries — could otherwise be
+        // tampered without changing the parsed value.
+        ensure!(val == hex(want), "plan corrupt: checksum line not in canonical form");
+        ensure!(
+            fnv64(prefix.as_bytes()) == want,
+            "plan corrupt: checksum mismatch (file edited or truncated)"
+        );
+
+        let mut lines = prefix.lines();
+        ensure!(
+            lines.next() == Some(PLAN_HEADER),
+            "plan corrupt or wrong version: expected header {PLAN_HEADER:?}"
+        );
+        let kernel = expect_field(&mut lines, "kernel")?.to_string();
+        let machine = expect_field(&mut lines, "machine")?.to_string();
+        let machine_fingerprint = parse_u64(expect_field(&mut lines, "machine_fingerprint")?)?;
+        let spec_hash = parse_u64(expect_field(&mut lines, "spec_hash")?)?;
+        let budget_class = parse_u32(expect_field(&mut lines, "budget_class")?)?;
+        let budget_bytes = parse_u64(expect_field(&mut lines, "budget_bytes")?)?;
+        let prefetch = parse_bool(expect_field(&mut lines, "prefetch")?)?;
+        let stride_unroll = parse_u32(expect_field(&mut lines, "stride_unroll")?)?;
+        let portion_unroll = parse_u32(expect_field(&mut lines, "portion_unroll")?)?;
+        let eliminate_redundant = parse_bool(expect_field(&mut lines, "eliminate_redundant")?)?;
+        let arrangement = parse_arrangement(expect_field(&mut lines, "arrangement")?)?;
+        let predicted_gib = parse_f64(expect_field(&mut lines, "predicted_gib")?)?;
+        let winner_probe_gib = parse_f64(expect_field(&mut lines, "winner_probe_gib")?)?;
+        let baseline_probe_gib = parse_f64(expect_field(&mut lines, "baseline_probe_gib")?)?;
+        let predicted_accesses_per_sec =
+            parse_f64(expect_field(&mut lines, "predicted_accesses_per_sec")?)?;
+        let l1_hit = parse_f64(expect_field(&mut lines, "l1_hit")?)?;
+        let l2_hit = parse_f64(expect_field(&mut lines, "l2_hit")?)?;
+        let l3_hit = parse_f64(expect_field(&mut lines, "l3_hit")?)?;
+        let probe_runs = parse_u32(expect_field(&mut lines, "probe_runs")?)?;
+        let full_runs = parse_u32(expect_field(&mut lines, "full_runs")?)?;
+        let search_sim_accesses = parse_u64(expect_field(&mut lines, "search_sim_accesses")?)?;
+        ensure!(lines.next().is_none(), "plan corrupt: trailing content after the field block");
+
+        let config = StridingConfig {
+            stride_unroll,
+            portion_unroll,
+            eliminate_redundant,
+            arrangement,
+        };
+        Ok(TunedPlan {
+            kernel,
+            machine,
+            machine_fingerprint,
+            spec_hash,
+            budget_class,
+            budget_bytes,
+            prefetch,
+            config,
+            predicted_gib,
+            winner_probe_gib,
+            baseline_probe_gib,
+            predicted_accesses_per_sec,
+            l1_hit,
+            l2_hit,
+            l3_hit,
+            probe_runs,
+            full_runs,
+            search_sim_accesses,
+        })
+    }
+}
+
+fn hex(v: u64) -> String {
+    format!("{v:#018x}")
+}
+
+fn arrangement_str(a: Arrangement) -> &'static str {
+    match a {
+        Arrangement::Grouped => "grouped",
+        Arrangement::Interleaved => "interleaved",
+    }
+}
+
+fn parse_arrangement(s: &str) -> Result<Arrangement> {
+    match s {
+        "grouped" => Ok(Arrangement::Grouped),
+        "interleaved" => Ok(Arrangement::Interleaved),
+        other => Err(format_err!("plan corrupt: unknown arrangement {other:?}")),
+    }
+}
+
+fn expect_field<'a>(lines: &mut std::str::Lines<'a>, key: &str) -> Result<&'a str> {
+    let l = lines
+        .next()
+        .ok_or_else(|| format_err!("plan truncated before field `{key}`"))?;
+    l.strip_prefix(key)
+        .and_then(|rest| rest.strip_prefix(" = "))
+        .ok_or_else(|| format_err!("plan corrupt: expected field `{key}`, found {l:?}"))
+}
+
+// Deliberately no whitespace trimming anywhere below: the serializer
+// emits exact values, so any stray byte (e.g. a flipped trailing
+// newline) must fail the parse rather than be forgiven.
+fn parse_u64(s: &str) -> Result<u64> {
+    let parsed = match s.strip_prefix("0x") {
+        Some(h) => u64::from_str_radix(h, 16),
+        None => s.parse(),
+    };
+    parsed.map_err(|e| format_err!("plan corrupt: bad number {s:?}: {e}"))
+}
+
+fn parse_u32(s: &str) -> Result<u32> {
+    let v = parse_u64(s)?;
+    u32::try_from(v).map_err(|_| format_err!("plan corrupt: {v} out of u32 range"))
+}
+
+fn parse_bool(s: &str) -> Result<bool> {
+    match s {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => Err(format_err!("plan corrupt: bad bool {other:?}")),
+    }
+}
+
+fn parse_f64(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_u64(s)?))
+}
+
+/// FNV-1a 64-bit over a byte slice. Hand-rolled so hashes are stable
+/// across processes and Rust versions (std's `DefaultHasher` promises
+/// neither) — plan staleness detection depends on that stability.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(bytes);
+    h.0
+}
+
+/// Structured FNV-1a: length-prefixed strings and little-endian integers,
+/// so field boundaries cannot alias.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Content hash of an (untransformed) kernel spec: loop nest, array
+/// layout and every access's affine subscripts. Two specs hash equal iff
+/// the trace universe they generate is identical, so a budget change that
+/// re-sizes extents — or any library edit — invalidates cached plans.
+pub fn spec_hash(spec: &KernelSpec) -> u64 {
+    let mut h = Fnv::new();
+    h.str(&spec.name);
+    h.u64(spec.loops.len() as u64);
+    for l in &spec.loops {
+        h.str(&l.name);
+        h.u64(l.extent);
+    }
+    h.u64(spec.arrays.len() as u64);
+    for a in &spec.arrays {
+        h.str(&a.name);
+        h.u64(a.dims.len() as u64);
+        for &d in &a.dims {
+            h.u64(d);
+        }
+        h.u64(a.elem_bytes as u64);
+        h.u64(a.base);
+    }
+    h.u64(spec.accesses.len() as u64);
+    for acc in &spec.accesses {
+        h.u64(acc.array as u64);
+        h.u64(acc.idx.len() as u64);
+        for e in &acc.idx {
+            h.u64(e.terms.len() as u64);
+            for &(l, c) in &e.terms {
+                h.u64(l as u64);
+                h.i64(c);
+            }
+            h.i64(e.offset);
+        }
+        h.u64(match acc.mode {
+            AccessMode::Read => 0,
+            AccessMode::Write => 1,
+            AccessMode::ReadWrite => 2,
+        });
+    }
+    h.u64(spec.loop_carried_dep as u64);
+    h.0
+}
+
+/// Fingerprint of everything machine-side that shapes a tuning result:
+/// every [`MachineConfig`] field plus the prefetch enable bit of the
+/// run. Floats are hashed by bit pattern (their `Debug` rendering is not
+/// stable across Rust releases, and the fingerprint must be); the
+/// integer/bool/enum remainder goes through `Debug`, which *is* stable
+/// for those types.
+pub fn machine_fingerprint(m: &MachineConfig, prefetch: bool) -> u64 {
+    // Exhaustive destructuring: adding a MachineConfig field breaks this
+    // build until the fingerprint learns about it — a new machine knob
+    // must invalidate cached plans, never be silently ignored.
+    let MachineConfig {
+        name,
+        vendor,
+        model,
+        freq_ghz,
+        bandwidth_gib,
+        mem_channels,
+        ram_gib,
+        max_fma_gflops,
+        l1,
+        l2,
+        l3,
+        l1_lat,
+        l2_lat,
+        l3_lat,
+        dram,
+        tlb,
+        wc,
+        prefetch: machine_prefetch,
+        lfb_entries,
+        window_accesses,
+        issue_per_cycle,
+        simd_registers,
+    } = *m;
+    let mut h = Fnv::new();
+    h.str(name);
+    h.str(vendor);
+    h.str(model);
+    h.u64(freq_ghz.to_bits());
+    h.u64(bandwidth_gib.to_bits());
+    h.u64(max_fma_gflops.to_bits());
+    h.str(&format!(
+        "{:?}",
+        (mem_channels, ram_gib, l1, l2, l3, l1_lat, l2_lat, l3_lat)
+    ));
+    h.str(&format!(
+        "{:?}",
+        (dram, tlb, wc, machine_prefetch, lfb_entries, window_accesses, issue_per_cycle, simd_registers)
+    ));
+    h.bytes(&[prefetch as u8]);
+    h.0
+}
+
+/// Power-of-two ceiling class of a byte budget: budgets rounding up to
+/// the same power of two share a plan-cache slot (their specs almost
+/// always coincide anyway thanks to extent rounding; when they don't,
+/// the spec-hash check catches it and re-tunes).
+pub fn budget_class(budget_bytes: u64) -> u32 {
+    budget_bytes.max(1).next_power_of_two().trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{cascade_lake, coffee_lake};
+    use crate::kernels::library::{kernel_by_name, mxv};
+
+    fn sample_plan() -> TunedPlan {
+        TunedPlan {
+            kernel: "mxv".into(),
+            machine: "Coffee Lake".into(),
+            machine_fingerprint: machine_fingerprint(&coffee_lake(), true),
+            spec_hash: spec_hash(&mxv(1 << 22).spec),
+            budget_class: 22,
+            budget_bytes: 1 << 22,
+            prefetch: true,
+            config: StridingConfig::new(8, 2),
+            predicted_gib: 12.34,
+            winner_probe_gib: 11.0,
+            baseline_probe_gib: 5.5,
+            predicted_accesses_per_sec: 1.5e9,
+            l1_hit: 0.75,
+            l2_hit: 0.5,
+            l3_hit: 0.25,
+            probe_runs: 4,
+            full_runs: 2,
+            search_sim_accesses: 123_456,
+        }
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip_exact() {
+        let p = sample_plan();
+        let s = p.serialize();
+        let q = TunedPlan::parse(&s).expect("parses");
+        assert_eq!(p, q);
+        assert_eq!(s, q.serialize(), "round trip is bit-identical");
+    }
+
+    #[test]
+    fn truncation_is_a_recoverable_error() {
+        let s = sample_plan().serialize();
+        for cut in [0, 1, PLAN_HEADER.len(), s.len() / 2, s.len() - 2] {
+            assert!(TunedPlan::parse(&s[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn edits_fail_the_checksum() {
+        let s = sample_plan().serialize();
+        let tampered = s.replace("stride_unroll = 8", "stride_unroll = 4");
+        assert!(TunedPlan::parse(&tampered).is_err());
+    }
+
+    #[test]
+    fn spec_hash_tracks_content() {
+        let a = kernel_by_name("mxv", 1 << 22).unwrap();
+        let b = kernel_by_name("mxv", 1 << 22).unwrap();
+        assert_eq!(spec_hash(&a.spec), spec_hash(&b.spec), "same budget, same hash");
+        let big = kernel_by_name("mxv", 1 << 26).unwrap();
+        assert_ne!(spec_hash(&a.spec), spec_hash(&big.spec), "extents feed the hash");
+        let other = kernel_by_name("bicg", 1 << 22).unwrap();
+        assert_ne!(spec_hash(&a.spec), spec_hash(&other.spec));
+    }
+
+    #[test]
+    fn machine_fingerprint_tracks_machine_and_prefetch() {
+        let cl = coffee_lake();
+        assert_eq!(machine_fingerprint(&cl, true), machine_fingerprint(&coffee_lake(), true));
+        assert_ne!(machine_fingerprint(&cl, true), machine_fingerprint(&cl, false));
+        assert_ne!(machine_fingerprint(&cl, true), machine_fingerprint(&cascade_lake(), true));
+    }
+
+    #[test]
+    fn budget_class_is_pow2_ceiling() {
+        assert_eq!(budget_class(1), 0);
+        assert_eq!(budget_class(4096), 12);
+        assert_eq!(budget_class(4097), 13);
+        assert_eq!(budget_class(48 * 1024 * 1024), 26);
+        assert_eq!(budget_class(40 * 1024 * 1024), 26);
+    }
+
+    #[test]
+    fn nan_and_inf_survive_the_bits_encoding() {
+        let mut p = sample_plan();
+        p.baseline_probe_gib = f64::NAN;
+        p.winner_probe_gib = f64::INFINITY;
+        let s = p.serialize();
+        let q = TunedPlan::parse(&s).unwrap();
+        assert!(q.baseline_probe_gib.is_nan());
+        assert_eq!(q.winner_probe_gib, f64::INFINITY);
+        assert_eq!(s, q.serialize());
+        assert_eq!(q.speedup_over_single(), None, "NaN baseline yields no speedup claim");
+    }
+}

@@ -1,0 +1,396 @@
+//! Successive-halving search over a kernel's derived variant family.
+//!
+//! The lattice is exactly what `transform::variants` derives: the
+//! single-stride baseline plus the `STRIDE_FAMILY` multi-strided variants
+//! at [`SearchParams::portion`] portion unrolls — the same family the
+//! exhaustive `variant_sweep` simulates in full. The search spends less:
+//!
+//! 1. **Feasibility gate** (free): register-infeasible variants are
+//!    pruned before any simulation, as the sweeps already skip them.
+//! 2. **Probe rung**: every surviving candidate runs at a reduced budget
+//!    ([`probe_budget`]: `budget / probe_divisor`, floored to 2× the L3
+//!    whenever the full run is DRAM-bound, so the probe measures prefetch
+//!    behaviour in the same memory regime, not cache residency; capped at
+//!    `budget / 2` so a probe is never a full-budget run in disguise).
+//! 3. **Pruning rule**: candidates scoring below `best × prune_ratio` at
+//!    the probe are dominated and dropped. If none falls below the
+//!    cutoff, the rung *minimum* is dropped instead — so whenever the
+//!    probe rung scores at least two candidates (always, in practice:
+//!    the library's extent floors host every family probe), the final
+//!    rung runs strictly fewer full-budget simulations than the
+//!    exhaustive sweep. The probe-best is never prunable by either
+//!    rule, and a candidate whose probe *fails* (probe-scale spec
+//!    cannot host it) advances unscored — it cannot be safely pruned.
+//! 4. **Full rung**: survivors run at the full budget; the winner is the
+//!    throughput argmax with the same tie-breaking as
+//!    `experiments::best_point`.
+//!
+//! Every candidate visit is recorded as a [`SearchStep`] — score, rung
+//! budget, and the verdict (kept or pruned, and why) — so a tuning run is
+//! auditable (`repro tune --kernel K` renders the trace). The whole
+//! search is deterministic: no randomness anywhere, and the simulator's
+//! engine-reuse protocol is bit-identical to fresh construction, so two
+//! cold searches of the same request produce byte-identical plans
+//! (`tests/tuner_determinism.rs`).
+
+use crate::config::MachineConfig;
+use crate::coordinator::experiments::EngineCache;
+use crate::kernels::library::kernel_by_name;
+use crate::transform::{variant_set_on, StridingConfig};
+use crate::{ensure, format_err, Result};
+
+use super::cost;
+use super::plan::{budget_class, machine_fingerprint, spec_hash, TunedPlan};
+
+/// Knobs of the successive-halving search.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    /// Portion unrolls of every family member (matches `repro universe`,
+    /// which sweeps the family at portion 2).
+    pub portion: u32,
+    /// Probe budget = full budget / this (before the regime floor).
+    pub probe_divisor: u64,
+    /// Absolute floor on the probe budget in bytes.
+    pub min_probe_bytes: u64,
+    /// Probe-rung cutoff: candidates below `best × prune_ratio` are
+    /// dominated and dropped before the full-budget rung.
+    pub prune_ratio: f64,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self {
+            portion: 2,
+            probe_divisor: 8,
+            min_probe_bytes: 1 << 20,
+            prune_ratio: 0.8,
+        }
+    }
+}
+
+/// Why a candidate left (or won) the search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Verdict {
+    /// Rejected by the register-pressure gate; never simulated.
+    Infeasible,
+    /// Dropped at the probe rung: scored below the cutoff, or was the
+    /// rung minimum when nothing else fell below it.
+    Pruned { cutoff_gib: f64 },
+    /// Survived this rung.
+    Advanced,
+    /// The chosen configuration (full rung only).
+    Winner,
+}
+
+/// One candidate visit in the search trace.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchStep {
+    pub config: StridingConfig,
+    /// 0 = probe rung, 1 = full-budget rung. The feasibility gate records
+    /// at rung 0 with `budget` 0 (nothing was simulated).
+    pub rung: u32,
+    /// Byte budget this visit simulated at (0 for the feasibility gate).
+    pub budget: u64,
+    /// Score, when the visit actually simulated (`None` for the
+    /// feasibility gate and for probes the probe-scale spec cannot host).
+    pub score_gib: Option<f64>,
+    /// Simulated accesses this visit charged to the search cost.
+    pub sim_accesses: u64,
+    pub verdict: Verdict,
+}
+
+/// A completed cold search: the winning plan plus the audit trace.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub plan: TunedPlan,
+    pub steps: Vec<SearchStep>,
+}
+
+/// The rung-0 budget for a search (see the module docs for the rule).
+pub fn probe_budget(machine: &MachineConfig, budget: u64, params: &SearchParams) -> u64 {
+    let mut probe = budget / params.probe_divisor.max(1);
+    let regime_floor = 2 * machine.l3.size_bytes;
+    // `>=`: at budget == 2×L3 the full run already leaves the LLC, so the
+    // floor must engage (capped to budget/2 below, i.e. the L3 boundary).
+    if budget >= regime_floor {
+        probe = probe.max(regime_floor);
+    }
+    probe.max(params.min_probe_bytes).min(budget / 2).max(1)
+}
+
+/// Cold-search the variant family of `kernel` at `budget` bytes on
+/// `machine`, using the simulator as cost model. Deterministic; never
+/// consults or writes the plan cache (that is [`super::Tuner`]'s job).
+pub fn search(
+    engines: &mut EngineCache,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    prefetch: bool,
+    params: &SearchParams,
+) -> Result<SearchOutcome> {
+    let pk = kernel_by_name(kernel, budget)
+        .ok_or_else(|| format_err!("unknown kernel {kernel}"))?;
+    let family = variant_set_on(&pk.spec, params.portion, machine.simd_registers)?;
+    let probe = probe_budget(&machine, budget, params);
+
+    let mut steps: Vec<SearchStep> = Vec::new();
+    let mut live: Vec<StridingConfig> = Vec::new();
+    for v in &family.variants {
+        if v.feasible {
+            live.push(v.config);
+        } else {
+            steps.push(SearchStep {
+                config: v.config,
+                rung: 0,
+                budget: 0,
+                score_gib: None,
+                sim_accesses: 0,
+                verdict: Verdict::Infeasible,
+            });
+        }
+    }
+    ensure!(!live.is_empty(), "kernel {kernel}: no feasible variant to tune");
+
+    let mut sim_accesses = 0u64;
+    let mut probe_runs = 0u32;
+    let mut baseline_probe_gib = f64::NAN;
+    // (config, probe score) for every candidate that actually probed.
+    let mut probe_scores: Vec<(StridingConfig, f64)> = Vec::new();
+
+    // Probe rung — skipped when the feasibility gate already left a
+    // single candidate (probing it would decide nothing).
+    let survivors: Vec<StridingConfig> = if live.len() == 1 {
+        live.clone()
+    } else {
+        let mut scored: Vec<(StridingConfig, Option<f64>, u64)> = Vec::new();
+        for &cfg in &live {
+            match cost::evaluate(engines, machine, kernel, probe, cfg, prefetch) {
+                Ok(s) => {
+                    probe_runs += 1;
+                    sim_accesses += s.sim_accesses;
+                    if cfg.stride_unroll == 1 {
+                        baseline_probe_gib = s.throughput_gib;
+                    }
+                    probe_scores.push((cfg, s.throughput_gib));
+                    scored.push((cfg, Some(s.throughput_gib), s.sim_accesses));
+                }
+                Err(e) => {
+                    // The probe-scale spec cannot host this config (tiny
+                    // extents); advance it unprobed rather than dropping
+                    // it silently.
+                    eprintln!(
+                        "[tune] {kernel} s={} p={}: probe at {probe} B failed ({e}); advancing unprobed",
+                        cfg.stride_unroll, cfg.portion_unroll
+                    );
+                    scored.push((cfg, None, 0));
+                }
+            }
+        }
+        let best = scored
+            .iter()
+            .filter_map(|&(_, s, _)| s)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let cutoff = best * params.prune_ratio;
+        let mut pruned: Vec<bool> = scored
+            .iter()
+            .map(|&(_, s, _)| matches!(s, Some(v) if v < cutoff))
+            .collect();
+        // Nothing dominated? Drop the rung minimum so the full rung is
+        // always strictly cheaper than the exhaustive sweep.
+        if best.is_finite() && !pruned.iter().any(|&p| p) {
+            let n_scored = scored.iter().filter(|&&(_, s, _)| s.is_some()).count();
+            if n_scored > 1 {
+                let min_i = scored
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(j, &(_, s, _))| s.map(|v| (j, v)))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN scores"))
+                    .map(|(j, _)| j)
+                    .expect("n_scored > 1");
+                pruned[min_i] = true;
+            }
+        }
+        let mut surv = Vec::new();
+        for (j, &(cfg, score, acc)) in scored.iter().enumerate() {
+            steps.push(SearchStep {
+                config: cfg,
+                rung: 0,
+                budget: probe,
+                score_gib: score,
+                sim_accesses: acc,
+                verdict: if pruned[j] {
+                    Verdict::Pruned { cutoff_gib: cutoff }
+                } else {
+                    Verdict::Advanced
+                },
+            });
+            if !pruned[j] {
+                surv.push(cfg);
+            }
+        }
+        surv
+    };
+
+    // Full-budget rung.
+    let mut full_runs = 0u32;
+    let mut finals: Vec<(StridingConfig, cost::CostSample)> = Vec::new();
+    for &cfg in &survivors {
+        let s = cost::evaluate(engines, machine, kernel, budget, cfg, prefetch)?;
+        full_runs += 1;
+        sim_accesses += s.sim_accesses;
+        steps.push(SearchStep {
+            config: cfg,
+            rung: 1,
+            budget,
+            score_gib: Some(s.throughput_gib),
+            sim_accesses: s.sim_accesses,
+            verdict: Verdict::Advanced,
+        });
+        finals.push((cfg, s));
+    }
+    // Same tie-breaking as experiments::best_point: max_by keeps the last
+    // maximal element in family order.
+    let (winner_cfg, winner) = finals
+        .iter()
+        .max_by(|a, b| a.1.throughput_gib.partial_cmp(&b.1.throughput_gib).expect("no NaN"))
+        .map(|&(c, s)| (c, s))
+        .expect("at least one survivor ran at full budget");
+    for st in steps.iter_mut() {
+        if st.rung == 1 && st.config == winner_cfg {
+            st.verdict = Verdict::Winner;
+        }
+    }
+
+    // Probe-rung scores backing the speedup claim. When the probe rung
+    // was skipped entirely (single feasible candidate — necessarily the
+    // baseline), the speedup is 1 by definition and both sides carry the
+    // full-budget score. A winner that advanced *unprobed* reports NaN
+    // instead — `speedup_over_single` then abstains rather than dividing
+    // scores from different budgets.
+    let (winner_probe_gib, baseline_probe_gib) = if live.len() == 1 {
+        (winner.throughput_gib, winner.throughput_gib)
+    } else {
+        let wp = probe_scores
+            .iter()
+            .find(|&&(c, _)| c == winner_cfg)
+            .map(|&(_, v)| v)
+            .unwrap_or(f64::NAN);
+        (wp, baseline_probe_gib)
+    };
+
+    let plan = TunedPlan {
+        kernel: kernel.to_string(),
+        machine: machine.name.to_string(),
+        machine_fingerprint: machine_fingerprint(&machine, prefetch),
+        spec_hash: spec_hash(&pk.spec),
+        budget_class: budget_class(budget),
+        budget_bytes: budget,
+        prefetch,
+        config: winner_cfg,
+        predicted_gib: winner.throughput_gib,
+        winner_probe_gib,
+        baseline_probe_gib,
+        predicted_accesses_per_sec: winner.accesses_per_sec,
+        l1_hit: winner.l1_hit,
+        l2_hit: winner.l2_hit,
+        l3_hit: winner.l3_hit,
+        probe_runs,
+        full_runs,
+        search_sim_accesses: sim_accesses,
+    };
+    Ok(SearchOutcome { plan, steps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+    use crate::transform::STRIDE_FAMILY;
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn probe_budget_stays_under_full_and_respects_regime() {
+        let m = coffee_lake();
+        let p = SearchParams::default();
+        // Small budgets: divisor floor wins, capped at half.
+        assert_eq!(probe_budget(&m, 2 * MIB, &p), MIB);
+        // DRAM-bound budgets: floored to 2× L3 (24 MiB), capped at half.
+        assert_eq!(probe_budget(&m, 48 * MIB, &p), 24 * MIB);
+        assert_eq!(probe_budget(&m, 512 * MIB, &p), 64 * MIB);
+        // The smoke scale sits exactly at 2× L3: the floor engages and
+        // the half-cap leaves the probe at the L3 boundary, not 4× inside.
+        assert_eq!(probe_budget(&m, 24 * MIB, &p), 12 * MIB);
+        for b in [1, 2 * MIB, 48 * MIB, 512 * MIB] {
+            assert!(probe_budget(&m, b, &p) < b.max(2));
+        }
+    }
+
+    #[test]
+    fn search_records_every_candidate_and_picks_a_feasible_winner() {
+        let m = coffee_lake();
+        let out = search(
+            &mut EngineCache::new(),
+            m,
+            "mxv",
+            2 * MIB,
+            true,
+            &SearchParams::default(),
+        )
+        .unwrap();
+        let fam_len = 1 + STRIDE_FAMILY.len();
+        // Every family member appears at the probe rung (mxv is feasible
+        // across the whole family).
+        let rung0: Vec<_> = out.steps.iter().filter(|s| s.rung == 0).collect();
+        assert_eq!(rung0.len(), fam_len);
+        assert!(rung0.iter().all(|s| s.score_gib.is_some()));
+        // Something was pruned, and strictly fewer full runs than family.
+        assert!(out.steps.iter().any(|s| matches!(s.verdict, Verdict::Pruned { .. })));
+        assert!((out.plan.full_runs as usize) < fam_len);
+        assert_eq!(
+            out.steps.iter().filter(|s| matches!(s.verdict, Verdict::Winner)).count(),
+            1
+        );
+        assert!(out.plan.predicted_gib > 0.0);
+        assert!(out.plan.search_sim_accesses > 0);
+        assert!(out.plan.speedup_over_single().is_some());
+    }
+
+    #[test]
+    fn infeasible_variants_are_gated_without_simulation() {
+        // bicg at S=8 exceeds the 16-register file.
+        let m = coffee_lake();
+        let out = search(
+            &mut EngineCache::new(),
+            m,
+            "bicg",
+            2 * MIB,
+            true,
+            &SearchParams::default(),
+        )
+        .unwrap();
+        let gated: Vec<_> = out
+            .steps
+            .iter()
+            .filter(|s| matches!(s.verdict, Verdict::Infeasible))
+            .collect();
+        assert!(!gated.is_empty(), "bicg has an infeasible family member");
+        assert!(gated.iter().all(|s| s.sim_accesses == 0 && s.score_gib.is_none()));
+        assert!(out.plan.config.stride_unroll != 8 || out.plan.config.portion_unroll != 2);
+    }
+
+    #[test]
+    fn unknown_kernel_is_an_error() {
+        let m = coffee_lake();
+        assert!(search(
+            &mut EngineCache::new(),
+            m,
+            "nope",
+            2 * MIB,
+            true,
+            &SearchParams::default()
+        )
+        .is_err());
+    }
+}

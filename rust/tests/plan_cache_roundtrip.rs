@@ -1,0 +1,158 @@
+//! Property wall for the on-disk plan format (`tune::plan`):
+//!
+//! * serialize → parse → serialize is **bit-identical** for randomized
+//!   [`TunedPlan`]s, including the identity fields (spec hash, machine
+//!   fingerprint) and arbitrary-bit-pattern floats (NaN, ±inf,
+//!   subnormals);
+//! * a corrupted or truncated plan file is rejected with a recoverable
+//!   error — never a panic, and never a silently-different plan;
+//! * the [`PlanCache`] file layer preserves both properties through disk.
+
+use multistride::trace::Arrangement;
+use multistride::transform::StridingConfig;
+use multistride::tune::{PlanCache, TunedPlan};
+use multistride::util::proptest::{check, Config};
+use multistride::util::Rng;
+
+/// Random printable name: alphanumerics plus the separators real kernel
+/// and machine names use (kernel names feed file paths, so no slashes).
+fn rand_name(r: &mut Rng, max_len: u64, file_safe: bool) -> String {
+    const SAFE: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789";
+    const LOOSE: &[u8] = b"abcdefghijklmnopqrstuvwxyz ABC-XYZ_0123456789().";
+    let chars = if file_safe { SAFE } else { LOOSE };
+    let len = r.range(1, max_len) as usize;
+    (0..len).map(|_| chars[r.below(chars.len() as u64) as usize] as char).collect()
+}
+
+fn rand_plan(r: &mut Rng, size: u32) -> TunedPlan {
+    let arrangement =
+        if r.chance(0.5) { Arrangement::Grouped } else { Arrangement::Interleaved };
+    TunedPlan {
+        kernel: rand_name(r, 2 + size as u64 / 8, true),
+        machine: rand_name(r, 2 + size as u64 / 4, false),
+        machine_fingerprint: r.next_u64(),
+        spec_hash: r.next_u64(),
+        budget_class: r.below(64) as u32,
+        budget_bytes: r.next_u64() >> r.below(40),
+        prefetch: r.chance(0.5),
+        config: StridingConfig {
+            stride_unroll: r.range(1, 64) as u32,
+            portion_unroll: r.range(1, 64) as u32,
+            eliminate_redundant: r.chance(0.5),
+            arrangement,
+        },
+        // Raw bit patterns: NaNs, infinities and subnormals must all
+        // survive, which is exactly why floats are stored as bits.
+        predicted_gib: f64::from_bits(r.next_u64()),
+        winner_probe_gib: f64::from_bits(r.next_u64()),
+        baseline_probe_gib: f64::from_bits(r.next_u64()),
+        predicted_accesses_per_sec: f64::from_bits(r.next_u64()),
+        l1_hit: f64::from_bits(r.next_u64()),
+        l2_hit: f64::from_bits(r.next_u64()),
+        l3_hit: f64::from_bits(r.next_u64()),
+        probe_runs: r.below(1 << 16) as u32,
+        full_runs: r.below(1 << 16) as u32,
+        search_sim_accesses: r.next_u64(),
+    }
+}
+
+#[test]
+fn serialize_parse_serialize_is_bit_identical() {
+    check(
+        Config { cases: 256, seed: 0x9_1A_57_1D },
+        rand_plan,
+        |p| {
+            let s = p.serialize();
+            let parsed = match TunedPlan::parse(&s) {
+                Ok(q) => q,
+                Err(_) => return false,
+            };
+            parsed.serialize() == s
+        },
+    );
+}
+
+#[test]
+fn every_truncation_is_rejected_not_panicking() {
+    let mut r = Rng::new(0x7A0);
+    let p = rand_plan(&mut r, 50);
+    let s = p.serialize();
+    // Exhaustive over one plan (every byte boundary that is also a char
+    // boundary — the format is ASCII, so that is every byte).
+    assert!(s.is_ascii(), "format stays ASCII; truncation test slices bytes");
+    for cut in 0..s.len() {
+        assert!(
+            TunedPlan::parse(&s[..cut]).is_err(),
+            "truncation at {cut}/{} must be rejected",
+            s.len()
+        );
+    }
+}
+
+#[test]
+fn random_single_byte_flips_are_rejected() {
+    check(
+        Config { cases: 192, seed: 0xF11B },
+        |r, size| {
+            let p = rand_plan(r, size);
+            let s = p.serialize();
+            let pos = r.below(s.len() as u64) as usize;
+            let old = s.as_bytes()[pos];
+            // Flip to a different printable ASCII byte so the result is
+            // still valid UTF-8 (the fs layer rejects non-UTF-8 uploads
+            // before parse even runs).
+            let mut new = old;
+            while new == old {
+                new = 0x20 + (r.below(95)) as u8;
+            }
+            let mut bytes = s.clone().into_bytes();
+            bytes[pos] = new;
+            (String::from_utf8(bytes).expect("printable ASCII"), pos)
+        },
+        |(tampered, _pos)| TunedPlan::parse(tampered).is_err(),
+    );
+}
+
+#[test]
+fn disk_roundtrip_through_the_cache_is_exact() {
+    let dir = std::env::temp_dir()
+        .join(format!("multistride_plan_roundtrip_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = PlanCache::new(&dir);
+    let mut r = Rng::new(0xD15C);
+    for case in 0..32 {
+        let p = rand_plan(&mut r, 1 + case * 3);
+        cache.store(&p).unwrap();
+        let q = cache
+            .load(&p.kernel, &p.machine, p.prefetch, p.budget_class)
+            .unwrap()
+            .expect("stored plan loads");
+        assert_eq!(p.serialize(), q.serialize(), "disk round trip is bit-identical");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_file_on_disk_is_a_recoverable_error() {
+    let dir = std::env::temp_dir()
+        .join(format!("multistride_plan_corrupt_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = PlanCache::new(&dir);
+    let mut r = Rng::new(0xBAD);
+    let p = rand_plan(&mut r, 40);
+    let path = cache.store(&p).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+
+    // Truncated file.
+    std::fs::write(&path, &text[..text.len() * 2 / 3]).unwrap();
+    assert!(cache.load(&p.kernel, &p.machine, p.prefetch, p.budget_class).is_err());
+
+    // Appended garbage.
+    std::fs::write(&path, format!("{text}extra junk\n")).unwrap();
+    assert!(cache.load(&p.kernel, &p.machine, p.prefetch, p.budget_class).is_err());
+
+    // Entirely foreign content.
+    std::fs::write(&path, "hello world").unwrap();
+    assert!(cache.load(&p.kernel, &p.machine, p.prefetch, p.budget_class).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}

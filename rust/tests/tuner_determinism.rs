@@ -1,0 +1,137 @@
+//! Tuner determinism wall + the pruned-search acceptance criterion.
+//!
+//! Same seed discipline as `golden_determinism`: every input is pinned
+//! (the search itself uses no randomness), so
+//!
+//! * two cold searches of the same request — fresh caches, fresh or
+//!   reused engines — must produce **byte-identical** plans;
+//! * a cache hit must return the exact plan the cold search persisted;
+//! * on every paper kernel, the pruned search must select the *same
+//!   winner* as the exhaustive `variant_sweep` while running **strictly
+//!   fewer full-budget simulations**, and the winner's predicted
+//!   throughput must be bit-identical to the sweep's measurement.
+
+use std::path::PathBuf;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::{self as exp, EngineCache};
+use multistride::kernels::library::paper_kernels;
+use multistride::tune::{search, PlanCache, SearchParams, Tuner, Verdict};
+
+const MIB: u64 = 1 << 20;
+/// Small but ≥ the smoke floor: probe and full rungs sit in the same
+/// (cache-resident) regime at this scale, as they do beyond-L3 at the
+/// default scale — see `tune::search::probe_budget`.
+const BUDGET: u64 = 2 * MIB;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("multistride_tuner_det_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn fresh_cold_searches_are_byte_identical_and_hits_serve_them_exactly() {
+    let m = coffee_lake();
+    let (d1, d2) = (tmp("a"), tmp("b"));
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d2).ok();
+    let (c1, c2) = (PlanCache::new(&d1), PlanCache::new(&d2));
+    let tuner = Tuner::new(m, BUDGET);
+    // One warm engine threaded through many searches on one side, fresh
+    // engines per search on the other: reuse must not leak into plans.
+    let mut warm = EngineCache::new();
+    for kernel in ["mxv", "triad", "3mm", "jacobi1d"] {
+        let a = tuner.tune(&mut warm, &c1, kernel, false).unwrap();
+        let b = tuner.tune(&mut EngineCache::new(), &c2, kernel, false).unwrap();
+        assert!(!a.cache_hit && !b.cache_hit);
+        assert_eq!(
+            a.plan.serialize(),
+            b.plan.serialize(),
+            "{kernel}: two fresh cold searches must be byte-identical"
+        );
+        let hit = tuner.tune(&mut warm, &c1, kernel, false).unwrap();
+        assert!(hit.cache_hit, "{kernel}: second request must be a cache hit");
+        assert!(hit.steps.is_empty(), "{kernel}: a hit runs no search");
+        assert_eq!(
+            hit.plan.serialize(),
+            a.plan.serialize(),
+            "{kernel}: the hit must return the exact plan the cold search produced"
+        );
+    }
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d2).ok();
+}
+
+#[test]
+fn pruned_search_matches_exhaustive_winner_on_every_paper_kernel() {
+    let m = coffee_lake();
+    let params = SearchParams::default();
+    for pk in paper_kernels(BUDGET) {
+        // Exhaustive: the full variant family at full budget (what
+        // `repro universe` simulates), winner by best_point.
+        let points =
+            exp::variant_sweep_for(m, BUDGET, params.portion, true, &[pk.name.clone()]);
+        let best = exp::best_point(&points)
+            .unwrap_or_else(|| panic!("{}: no feasible point", pk.name));
+        let exhaustive_sims = points.iter().filter(|p| p.feasible).count();
+
+        let out = search(&mut EngineCache::new(), m, &pk.name, BUDGET, true, &params)
+            .unwrap_or_else(|e| panic!("{}: search failed: {e}", pk.name));
+
+        assert_eq!(
+            (out.plan.config.stride_unroll, out.plan.config.portion_unroll),
+            (best.config.stride_unroll, best.config.portion_unroll),
+            "{}: pruned search must select the exhaustive winner",
+            pk.name
+        );
+        assert_eq!(
+            out.plan.predicted_gib.to_bits(),
+            best.throughput_gib.to_bits(),
+            "{}: the winner's prediction IS the sweep's measurement",
+            pk.name
+        );
+        assert!(
+            (out.plan.full_runs as usize) < exhaustive_sims,
+            "{}: {} full-budget sims must be strictly fewer than the exhaustive {}",
+            pk.name,
+            out.plan.full_runs,
+            exhaustive_sims
+        );
+        // The trace accounts for every family member exactly once per rung
+        // it visited, and names a single winner.
+        assert_eq!(
+            out.steps.iter().filter(|s| matches!(s.verdict, Verdict::Winner)).count(),
+            1,
+            "{}",
+            pk.name
+        );
+        let visited: usize = out
+            .steps
+            .iter()
+            .filter(|s| s.rung == 0)
+            .count();
+        assert_eq!(
+            visited,
+            points.len(),
+            "{}: every family member is visible in the rung-0 trace (gated or probed)",
+            pk.name
+        );
+    }
+}
+
+#[test]
+fn force_reproduces_the_cached_plan_bit_for_bit() {
+    let m = coffee_lake();
+    let dir = tmp("force");
+    std::fs::remove_dir_all(&dir).ok();
+    let cache = PlanCache::new(&dir);
+    let tuner = Tuner::new(m, BUDGET);
+    let mut engines = EngineCache::new();
+    let cold = tuner.tune(&mut engines, &cache, "mxv", false).unwrap();
+    let forced = tuner.tune(&mut engines, &cache, "mxv", true).unwrap();
+    assert!(!forced.cache_hit);
+    assert_eq!(forced.plan.serialize(), cold.plan.serialize());
+    // The persisted file equals the serialized plan byte-for-byte.
+    let path = cache.path_for("mxv", m.name, true, cold.plan.budget_class);
+    assert_eq!(std::fs::read_to_string(path).unwrap(), cold.plan.serialize());
+    std::fs::remove_dir_all(&dir).ok();
+}
