@@ -1,0 +1,161 @@
+//! Bench harness — result-store serving path: cold plan execution vs
+//! warm-store serving (memory tier and disk tier), in points per second,
+//! plus single-hit latency. This is the simulate-once/serve-forever
+//! claim of the execution layer made measurable: the cold column is what
+//! the first `repro all` pays per point, the warm columns are what every
+//! overlapping sweep, re-run, or tune pays afterwards.
+//!
+//! Besides the human-readable table, the harness emits
+//! `BENCH_result_store.json` (same envelope as the other bench records)
+//! and asserts the transparency contract: warm passes perform **zero**
+//! engine runs and serve results byte-identical to the cold pass.
+//!
+//! Knobs (environment):
+//! * `MULTISTRIDE_STORE_BYTES` — array/budget size per point in bytes
+//!   (default 8 MiB; CI-scale runs can shrink it).
+//! * `MULTISTRIDE_BENCH_JSON` — output path for the JSON record
+//!   (default `BENCH_result_store.json` in the working directory).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use common::{env_u64, write_bench_json, JsonScenario};
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::{EngineCache, MICRO_STRIDES};
+use multistride::exec::format::serialize_result;
+use multistride::exec::{Planner, ResultStore, SimPoint};
+use multistride::kernels::library::kernel_by_name;
+use multistride::kernels::micro::MicroOp;
+use multistride::sim::RunResult;
+use multistride::transform::{transform, variant_configs};
+
+/// A `repro all`-shaped point set: the figure2 micro grid (sans the NT
+/// interleave variant) plus every kernel family at portion 2.
+fn build_points(bytes: u64) -> Vec<SimPoint> {
+    let m = coffee_lake();
+    let mut points = Vec::new();
+    for prefetch in [true, false] {
+        for op in MicroOp::all() {
+            for &s in &MICRO_STRIDES {
+                points.push(SimPoint::micro(m, op, s, bytes, prefetch, false));
+            }
+        }
+    }
+    for name in ["mxv", "bicg", "triad", "3mm"] {
+        let pk = kernel_by_name(name, bytes).expect("registry kernel");
+        for cfg in variant_configs(2) {
+            if transform(&pk.spec, cfg).is_ok() {
+                points.push(
+                    SimPoint::kernel(m, name, bytes, cfg, true).expect("validated name"),
+                );
+            }
+        }
+    }
+    points
+}
+
+fn run_plan(store: &ResultStore, points: &[SimPoint], label: &str) -> (Vec<Arc<RunResult>>, f64) {
+    let t = Instant::now();
+    let out = Planner::new(store).run(points).expect("plan executes");
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "{label:>42}: {:>10.1} points/s ({} points, {secs:.3} s)",
+        points.len() as f64 / secs,
+        points.len()
+    );
+    (out, secs)
+}
+
+fn main() {
+    let bytes = env_u64("MULTISTRIDE_STORE_BYTES", 8 * 1024 * 1024);
+    let dir = std::env::temp_dir()
+        .join(format!("multistride_store_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let points = build_points(bytes);
+    let n = points.len() as u64;
+    let mut scenarios = Vec::new();
+
+    // Cold: every distinct point simulates, write-through to disk.
+    let cold_store = ResultStore::persistent(&dir);
+    let (cold, cold_secs) = run_plan(&cold_store, &points, "cold plan (simulate + store)");
+    let distinct = cold_store.stats().engine_runs;
+    assert!(distinct > 0 && distinct <= n);
+    scenarios.push(JsonScenario {
+        label: "cold plan (simulate + store)".into(),
+        unit: "points",
+        count: n,
+        seconds: cold_secs,
+    });
+
+    // Warm, memory tier: the same store instance re-serves the plan.
+    let (warm_mem, mem_secs) = run_plan(&cold_store, &points, "warm plan (memory tier)");
+    assert_eq!(
+        cold_store.stats().engine_runs,
+        distinct,
+        "memory-tier pass must perform zero fresh engine runs"
+    );
+    scenarios.push(JsonScenario {
+        label: "warm plan (memory tier)".into(),
+        unit: "points",
+        count: n,
+        seconds: mem_secs,
+    });
+
+    // Warm, disk tier: a fresh store over the same directory (cold
+    // memory) — what a second `repro all` invocation pays.
+    let disk_store = ResultStore::persistent(&dir);
+    let (warm_disk, disk_secs) = run_plan(&disk_store, &points, "warm plan (disk tier)");
+    let s = disk_store.stats();
+    assert_eq!(s.engine_runs, 0, "disk-tier pass must perform zero engine runs");
+    assert_eq!(s.disk_hits, distinct);
+    scenarios.push(JsonScenario {
+        label: "warm plan (disk tier)".into(),
+        unit: "points",
+        count: n,
+        seconds: disk_secs,
+    });
+
+    // Transparency: warm results are byte-identical to cold ones.
+    for ((p, c), (m, d)) in points.iter().zip(&cold).zip(warm_mem.iter().zip(&warm_disk)) {
+        let want = serialize_result(p.key(), c);
+        assert_eq!(want, serialize_result(p.key(), m), "memory tier diverged: {}", p.label());
+        assert_eq!(want, serialize_result(p.key(), d), "disk tier diverged: {}", p.label());
+    }
+    println!("{:>42}: warm results byte-identical to cold", "transparency wall");
+
+    // Single-hit latency: repeated service of one point from the memory
+    // tier (the cost a tuner rung pays to re-read a sweep's point).
+    let hot = &points[0];
+    let mut engines = EngineCache::new();
+    let reps = 100_000u64;
+    let t = Instant::now();
+    for _ in 0..reps {
+        let r = disk_store.get_or_run(&mut engines, hot).expect("hit");
+        std::hint::black_box(&r);
+    }
+    let hit_secs = t.elapsed().as_secs_f64();
+    println!(
+        "{:>42}: {:>10.0} hits/s ({reps} hits, {hit_secs:.3} s, {:.2} µs/hit)",
+        "single-hit latency (memory tier)",
+        reps as f64 / hit_secs,
+        hit_secs / reps as f64 * 1e6
+    );
+    scenarios.push(JsonScenario {
+        label: "single-hit latency (memory tier)".into(),
+        unit: "hits",
+        count: reps,
+        seconds: hit_secs,
+    });
+
+    let json_path = std::env::var("MULTISTRIDE_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_result_store.json".into());
+    write_bench_json(
+        &json_path,
+        "result_store",
+        &[("point_bytes", bytes), ("plan_points", n), ("distinct_points", distinct)],
+        &scenarios,
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

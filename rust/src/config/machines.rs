@@ -39,6 +39,40 @@ impl MachinePreset {
             _ => None,
         }
     }
+
+    /// Canonical CLI spelling of the preset (the one `--machine` help
+    /// advertises; [`Self::from_name`] accepts aliases too).
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            Self::CoffeeLake => "coffee-lake",
+            Self::CascadeLake => "cascade-lake",
+            Self::Zen2 => "zen2",
+        }
+    }
+
+    /// [`Self::from_name`] with a CLI-grade error: an unknown name lists
+    /// the registered presets (names from [`Self::all`]) instead of
+    /// leaving the user to guess — the same policy as the unknown
+    /// `--kernel` listing ([`crate::kernels::library::ensure_known_kernel`]).
+    pub fn from_name_or_listing(name: &str) -> crate::Result<Self> {
+        if let Some(p) = Self::from_name(name) {
+            return Ok(p);
+        }
+        let mut listing = String::new();
+        for p in Self::all() {
+            let m = p.config();
+            listing.push_str(&format!(
+                "\n  {:<13} {} {} ({})",
+                p.cli_name(),
+                m.vendor,
+                m.model,
+                m.name
+            ));
+        }
+        Err(crate::format_err!(
+            "unknown machine {name}; the registered machine presets are:{listing}"
+        ))
+    }
 }
 
 /// Full description of one simulated machine (Table 2 row + model knobs).
@@ -262,6 +296,26 @@ mod tests {
         assert_eq!(MachinePreset::from_name("i7-8700"), Some(MachinePreset::CoffeeLake));
         assert_eq!(MachinePreset::from_name("zen2"), Some(MachinePreset::Zen2));
         assert_eq!(MachinePreset::from_name("m1"), None);
+    }
+
+    #[test]
+    fn unknown_machine_error_lists_every_preset() {
+        // The `--machine` boundary: a typo must come back with the whole
+        // registered preset list, not a bare panic.
+        let err = MachinePreset::from_name_or_listing("m1").unwrap_err().to_string();
+        assert!(err.contains("unknown machine m1"), "{err}");
+        for p in MachinePreset::all() {
+            assert!(err.contains(p.cli_name()), "listing must include {:?}: {err}", p);
+            assert!(err.contains(p.config().model), "listing must include the model: {err}");
+        }
+        // Known names (canonical and alias) still resolve.
+        for p in MachinePreset::all() {
+            assert_eq!(MachinePreset::from_name_or_listing(p.cli_name()).unwrap(), p);
+        }
+        assert_eq!(
+            MachinePreset::from_name_or_listing("EPYC").unwrap(),
+            MachinePreset::Zen2
+        );
     }
 
     #[test]

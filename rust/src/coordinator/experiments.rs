@@ -1,12 +1,25 @@
-//! One driver per paper figure/table. Each returns structured data; the
-//! [`crate::report`] layer renders it in the paper's format.
+//! One driver per paper figure/table. Each driver is a thin
+//! **plan-builder + result-formatter** around the execution layer
+//! ([`crate::exec`]): it expands its request into a batch of
+//! content-addressed [`SimPoint`] jobs, hands the batch to
+//! [`Planner::run`] (which dedups against the whole batch and the
+//! [`ResultStore`] before scheduling misses over the warm-engine worker
+//! pool), and formats the returned [`RunResult`]s into the figure's
+//! shape for the [`crate::report`] layer.
+//!
+//! Every driver exists in two forms: `foo_on(store, …)` executes against
+//! a caller-owned store (the CLI threads one store through a whole
+//! `repro all` invocation, so overlapping sweeps and the tuner share
+//! results), and the historical `foo(…)` signature is a compatibility
+//! wrapper over a fresh [`ResultStore::ephemeral`] — same execution
+//! path, same results, in-batch dedup only.
 
 use crate::config::{MachineConfig, ScaleConfig};
+use crate::exec::{Planner, ResultStore, SimPoint};
 use crate::kernels::library::{all_kernels, kernel_by_name};
-use crate::kernels::micro::{MicroBench, MicroOp};
+use crate::kernels::micro::MicroOp;
 use crate::kernels::reference::Reference;
 use crate::sim::{Engine, EngineConfig, RunResult};
-use crate::trace::KernelTrace;
 use crate::transform::{
     enumerate_configs, is_feasible, transform, variant_configs, StridingConfig,
 };
@@ -54,6 +67,24 @@ pub struct MicroPoint {
     pub result: RunResult,
 }
 
+/// Format one stored/simulated result as a [`MicroPoint`].
+fn micro_point(
+    op: MicroOp,
+    strides: u32,
+    interleaved: bool,
+    prefetch: bool,
+    result: &RunResult,
+) -> MicroPoint {
+    MicroPoint {
+        op,
+        strides,
+        interleaved,
+        prefetch,
+        throughput_gib: result.throughput_gib(),
+        result: result.clone(),
+    }
+}
+
 /// Run one micro-benchmark configuration (§4 protocol: huge pages on).
 pub fn run_micro(
     machine: MachineConfig,
@@ -76,28 +107,63 @@ pub fn run_micro_with(
     prefetch: bool,
     interleaved: bool,
 ) -> MicroPoint {
-    let mut bench = MicroBench::new(op, strides, bytes);
-    if interleaved {
-        bench = bench.interleaved();
-    }
-    let engine = cache
-        .engine_for(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(true));
-    let result = engine.run(bench.trace());
-    MicroPoint {
-        op,
-        strides,
-        interleaved,
-        prefetch,
-        throughput_gib: result.throughput_gib(),
-        result,
-    }
+    run_micro_on(&ResultStore::ephemeral(), cache, machine, op, strides, bytes, prefetch, interleaved)
+}
+
+/// [`run_micro`] through a result store: served when present, simulated
+/// (and stored) when not.
+#[allow(clippy::too_many_arguments)]
+pub fn run_micro_on(
+    store: &ResultStore,
+    cache: &mut EngineCache,
+    machine: MachineConfig,
+    op: MicroOp,
+    strides: u32,
+    bytes: u64,
+    prefetch: bool,
+    interleaved: bool,
+) -> MicroPoint {
+    let point = SimPoint::micro(machine, op, strides, bytes, prefetch, interleaved);
+    let result = store.get_or_run(cache, &point).expect("micro points always simulate");
+    micro_point(op, strides, interleaved, prefetch, &result)
+}
+
+/// The micro job tuple the Figure 2/3/4/5 plans expand into.
+type MicroJob = (MicroOp, u32, bool, bool);
+
+/// Execute a batch of micro jobs at one array size through the store.
+fn micro_batch_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    bytes: u64,
+    jobs: &[MicroJob],
+) -> Vec<MicroPoint> {
+    let points: Vec<SimPoint> = jobs
+        .iter()
+        .map(|&(op, s, pf, inter)| SimPoint::micro(machine, op, s, bytes, pf, inter))
+        .collect();
+    let results = Planner::new(store).run(&points).expect("micro points always simulate");
+    jobs.iter()
+        .zip(&results)
+        .map(|(&(op, s, pf, inter), r)| micro_point(op, s, inter, pf, r))
+        .collect()
 }
 
 /// Figure 2 / Figure 5: the micro-benchmark throughput grid for one array
 /// size. `pow2 = true` reproduces Figure 5's 2-GiB-analog collision setup.
 pub fn figure2(machine: MachineConfig, scale: ScaleConfig, pow2: bool) -> Vec<MicroPoint> {
+    figure2_on(&ResultStore::ephemeral(), machine, scale, pow2)
+}
+
+/// [`figure2`] against a caller-owned result store.
+pub fn figure2_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    scale: ScaleConfig,
+    pow2: bool,
+) -> Vec<MicroPoint> {
     let bytes = if pow2 { scale.micro_pow2_bytes } else { scale.micro_bytes };
-    let mut jobs = Vec::new();
+    let mut jobs: Vec<MicroJob> = Vec::new();
     for prefetch in [true, false] {
         for op in MicroOp::all() {
             for &s in &MICRO_STRIDES {
@@ -109,23 +175,30 @@ pub fn figure2(machine: MachineConfig, scale: ScaleConfig, pow2: bool) -> Vec<Mi
             }
         }
     }
-    parallel_map_with(jobs, default_workers(), EngineCache::new, |cache, &(op, s, pf, inter)| {
-        run_micro_with(cache, machine, op, s, bytes, pf, inter)
-    })
+    micro_batch_on(store, machine, bytes, &jobs)
 }
 
 /// Figure 3 + Figure 4 series: stall cycles and hit ratios for the aligned
 /// read micro-benchmark across stride counts, prefetch on/off.
 pub fn figure3_4(machine: MachineConfig, scale: ScaleConfig) -> Vec<MicroPoint> {
-    let mut jobs = Vec::new();
+    figure3_4_on(&ResultStore::ephemeral(), machine, scale)
+}
+
+/// [`figure3_4`] against a caller-owned result store. Note the jobs here
+/// are a strict subset of [`figure2`]'s grid at the same scale: with a
+/// shared store the whole figure is served from figure2's results.
+pub fn figure3_4_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    scale: ScaleConfig,
+) -> Vec<MicroPoint> {
+    let mut jobs: Vec<MicroJob> = Vec::new();
     for prefetch in [true, false] {
         for &s in &MICRO_STRIDES {
             jobs.push((MicroOp::LoadAligned, s, prefetch, false));
         }
     }
-    parallel_map_with(jobs, default_workers(), EngineCache::new, |cache, &(op, s, pf, inter)| {
-        run_micro_with(cache, machine, op, s, scale.micro_bytes, pf, inter)
-    })
+    micro_batch_on(store, machine, scale.micro_bytes, &jobs)
 }
 
 /// One point of the Figure 6 kernel sweep.
@@ -150,10 +223,29 @@ pub fn run_kernel(
     run_kernel_with(&mut EngineCache::new(), machine, kernel, budget, config, prefetch)
 }
 
-/// [`run_kernel`] against a reusable per-worker engine. The kernel trace
-/// streams straight from [`KernelTrace::iter`] into [`Engine::run`] — no
-/// `Vec<Access>` is ever materialized, so multi-GiB footprints stay cheap.
+/// [`run_kernel`] against a reusable per-worker engine.
 pub fn run_kernel_with(
+    cache: &mut EngineCache,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    config: StridingConfig,
+    prefetch: bool,
+) -> Option<KernelPoint> {
+    run_kernel_on(&ResultStore::ephemeral(), cache, machine, kernel, budget, config, prefetch)
+}
+
+/// [`run_kernel`] through a result store. The plan-builder half:
+/// validate the kernel exists (`None` otherwise), transform it (`None`
+/// when the spec cannot host the config), gate register feasibility
+/// (reported without simulating, as the sweeps always have) — and only
+/// then consult/run the point. The formatter half scores throughput as
+/// *data size / time* with data size = the **allocation** (transformed
+/// spec footprint), the same §6.3 convention for every kernel: conv and
+/// jacobi2d count their full arrays while sweeping trimmed interiors,
+/// and stridedcopy counts its row-pitch pad.
+pub fn run_kernel_on(
+    store: &ResultStore,
     cache: &mut EngineCache,
     machine: MachineConfig,
     kernel: &str,
@@ -173,18 +265,9 @@ pub fn run_kernel_with(
             throughput_gib: 0.0,
         });
     }
-    let trace = KernelTrace::new(t);
-    // The paper reports kernel throughput as *data size / time* (§6.3
-    // compares kernels across data sizes "we report throughput rather than
-    // time"), i.e. each array counts once — not per-access traffic, which
-    // would reward cache-hit reloads. "Data size" is the *allocation*
-    // (spec footprint), the same convention for every kernel: conv and
-    // jacobi2d count their full arrays while sweeping trimmed interiors,
-    // and stridedcopy counts its row-pitch pad.
-    let footprint = trace.transformed().spec.footprint();
-    let engine = cache
-        .engine_for(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(false));
-    let result = engine.run(trace.iter());
+    let footprint = t.spec.footprint();
+    let point = SimPoint::kernel_from_spec(machine, kernel, budget, config, prefetch, &pk.spec);
+    let result = store.get_or_run(cache, &point).expect("validated kernel point simulates");
     Some(KernelPoint {
         kernel: kernel.to_string(),
         config,
@@ -192,6 +275,83 @@ pub fn run_kernel_with(
         feasible,
         throughput_gib: machine.gib_per_s(footprint, result.counters.cycles),
     })
+}
+
+/// The no-silent-coverage policy: a config the kernel's extents cannot
+/// host is absent from the sweep, but never silently (every sweep path
+/// prints this line, so the policy cannot drift between them).
+fn report_skip(ctx: &str, kernel: &str, budget: u64, cfg: StridingConfig) {
+    eprintln!(
+        "[{ctx}] SKIPPED {kernel} s={} p={} at budget {budget}",
+        cfg.stride_unroll, cfg.portion_unroll
+    );
+}
+
+/// Shared batch plan-builder + formatter behind every kernel sweep
+/// ([`figure6_on`], [`variant_sweep_on`] / [`variant_sweep_for_on`],
+/// which also back `repro universe`): classify each `(kernel, config)`
+/// job as simulate / infeasible / skip, execute the simulate set as one
+/// deduplicated batch, and format per-job results in input order.
+/// Unknown kernel names fail loudly (a typo'd `--kernel` must not
+/// produce an empty sweep).
+pub fn kernel_points_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    ctx: &str,
+    budget: u64,
+    prefetch: bool,
+    jobs: &[(String, StridingConfig)],
+) -> Vec<Option<KernelPoint>> {
+    enum Slot {
+        Sim { idx: usize, footprint: u64 },
+        Ready(KernelPoint),
+        Skip,
+    }
+    let mut points: Vec<SimPoint> = Vec::new();
+    let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
+    for (name, cfg) in jobs {
+        let pk = kernel_by_name(name, budget)
+            .unwrap_or_else(|| panic!("unknown kernel {name}"));
+        match transform(&pk.spec, *cfg) {
+            Err(_) => {
+                report_skip(ctx, name, budget, *cfg);
+                slots.push(Slot::Skip);
+            }
+            Ok(t) if !is_feasible(&t, machine.simd_registers) => {
+                slots.push(Slot::Ready(KernelPoint {
+                    kernel: name.clone(),
+                    config: *cfg,
+                    prefetch,
+                    feasible: false,
+                    throughput_gib: 0.0,
+                }));
+            }
+            Ok(t) => {
+                let footprint = t.spec.footprint();
+                let point =
+                    SimPoint::kernel_from_spec(machine, name, budget, *cfg, prefetch, &pk.spec);
+                slots.push(Slot::Sim { idx: points.len(), footprint });
+                points.push(point);
+            }
+        }
+    }
+    let results =
+        Planner::new(store).run(&points).expect("validated kernel points simulate");
+    slots
+        .into_iter()
+        .zip(jobs)
+        .map(|(slot, (name, cfg))| match slot {
+            Slot::Skip => None,
+            Slot::Ready(p) => Some(p),
+            Slot::Sim { idx, footprint } => Some(KernelPoint {
+                kernel: name.clone(),
+                config: *cfg,
+                prefetch,
+                feasible: true,
+                throughput_gib: machine.gib_per_s(footprint, results[idx].counters.cycles),
+            }),
+        })
+        .collect()
 }
 
 /// The Figure 6 unroll totals swept (the paper sweeps 1..=50; the default
@@ -209,6 +369,18 @@ pub fn figure6(
     max_total: u32,
     prefetch: bool,
 ) -> Vec<KernelPoint> {
+    figure6_on(&ResultStore::ephemeral(), machine, kernel, budget, max_total, prefetch)
+}
+
+/// [`figure6`] against a caller-owned result store.
+pub fn figure6_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    max_total: u32,
+    prefetch: bool,
+) -> Vec<KernelPoint> {
     let mut cfgs: Vec<StridingConfig> = Vec::new();
     for t in figure6_totals(max_total) {
         for c in enumerate_configs(t) {
@@ -218,24 +390,17 @@ pub fn figure6(
         }
     }
     cfgs.dedup_by_key(|c| (c.stride_unroll, c.portion_unroll));
-    // Unknown kernel names fail loudly (a typo'd `--kernel` must not
-    // produce an empty sweep)…
-    assert!(kernel_by_name(kernel, budget).is_some(), "unknown kernel {kernel}");
-    let kernel = kernel.to_string();
-    // …while a config the kernel's extents cannot host (e.g. a stride
-    // count past a short axis) is absent, not a panic — but never
-    // silently (the shared run_point_reported policy).
-    let points = parallel_map_with(cfgs, default_workers(), EngineCache::new, |cache, &cfg| {
-        run_point_reported(cache, machine, "figure6", &kernel, budget, cfg, prefetch)
-    });
-    points.into_iter().flatten().collect()
+    let jobs: Vec<(String, StridingConfig)> =
+        cfgs.into_iter().map(|c| (kernel.to_string(), c)).collect();
+    kernel_points_on(store, machine, "figure6", budget, prefetch, &jobs)
+        .into_iter()
+        .flatten()
+        .collect()
 }
 
 /// Run one sweep point, printing a visible SKIPPED line when the kernel
-/// cannot host the config. Every sweep path ([`figure6`],
-/// [`variant_sweep`] / [`variant_sweep_for`], which also backs
-/// `repro universe`) goes through this, so the no-silent-coverage policy
-/// cannot drift between them.
+/// cannot host the config — the single-point face of the shared
+/// no-silent-coverage policy ([`kernel_points_on`] is the batch face).
 pub fn run_point_reported(
     cache: &mut EngineCache,
     machine: MachineConfig,
@@ -245,12 +410,24 @@ pub fn run_point_reported(
     cfg: StridingConfig,
     prefetch: bool,
 ) -> Option<KernelPoint> {
-    let p = run_kernel_with(cache, machine, kernel, budget, cfg, prefetch);
+    run_point_reported_on(&ResultStore::ephemeral(), cache, machine, ctx, kernel, budget, cfg, prefetch)
+}
+
+/// [`run_point_reported`] through a result store.
+#[allow(clippy::too_many_arguments)]
+pub fn run_point_reported_on(
+    store: &ResultStore,
+    cache: &mut EngineCache,
+    machine: MachineConfig,
+    ctx: &str,
+    kernel: &str,
+    budget: u64,
+    cfg: StridingConfig,
+    prefetch: bool,
+) -> Option<KernelPoint> {
+    let p = run_kernel_on(store, cache, machine, kernel, budget, cfg, prefetch);
     if p.is_none() {
-        eprintln!(
-            "[{ctx}] SKIPPED {kernel} s={} p={} at budget {budget}",
-            cfg.stride_unroll, cfg.portion_unroll
-        );
+        report_skip(ctx, kernel, budget, cfg);
     }
     p
 }
@@ -266,8 +443,19 @@ pub fn variant_sweep(
     portion: u32,
     prefetch: bool,
 ) -> Vec<KernelPoint> {
+    variant_sweep_on(&ResultStore::ephemeral(), machine, budget, portion, prefetch)
+}
+
+/// [`variant_sweep`] against a caller-owned result store.
+pub fn variant_sweep_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    budget: u64,
+    portion: u32,
+    prefetch: bool,
+) -> Vec<KernelPoint> {
     let names: Vec<String> = all_kernels(budget).iter().map(|k| k.name.clone()).collect();
-    variant_sweep_for(machine, budget, portion, prefetch, &names)
+    variant_sweep_for_on(store, machine, budget, portion, prefetch, &names)
 }
 
 /// [`variant_sweep`] restricted to an explicit kernel-name list (tests
@@ -281,20 +469,28 @@ pub fn variant_sweep_for(
     prefetch: bool,
     kernels: &[String],
 ) -> Vec<KernelPoint> {
+    variant_sweep_for_on(&ResultStore::ephemeral(), machine, budget, portion, prefetch, kernels)
+}
+
+/// [`variant_sweep_for`] against a caller-owned result store.
+pub fn variant_sweep_for_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    budget: u64,
+    portion: u32,
+    prefetch: bool,
+    kernels: &[String],
+) -> Vec<KernelPoint> {
     let mut jobs: Vec<(String, StridingConfig)> = Vec::new();
     for name in kernels {
-        // Same loud-failure policy as figure6: an unknown name must not
-        // yield an empty sweep dressed up as per-config skips.
-        assert!(kernel_by_name(name, budget).is_some(), "unknown kernel {name}");
         for cfg in variant_configs(portion) {
             jobs.push((name.clone(), cfg));
         }
     }
-    let points = parallel_map_with(jobs, default_workers(), EngineCache::new, |cache, job| {
-        let (name, cfg) = job;
-        run_point_reported(cache, machine, "variant_sweep", name, budget, *cfg, prefetch)
-    });
-    points.into_iter().flatten().collect()
+    kernel_points_on(store, machine, "variant_sweep", budget, prefetch, &jobs)
+        .into_iter()
+        .flatten()
+        .collect()
 }
 
 /// Pick the best feasible configuration out of a sweep.
@@ -325,7 +521,20 @@ impl KernelSummary {
 
 /// Summarize a kernel's sweep into the Figure 6 reference lines.
 pub fn summarize_kernel(machine: MachineConfig, kernel: &str, budget: u64, max_total: u32) -> KernelSummary {
-    let points = figure6(machine, kernel, budget, max_total, true);
+    summarize_kernel_on(&ResultStore::ephemeral(), machine, kernel, budget, max_total)
+}
+
+/// [`summarize_kernel`] against a caller-owned result store (after a
+/// warm [`figure6_on`] at the same scale this formats without a single
+/// engine run).
+pub fn summarize_kernel_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    max_total: u32,
+) -> KernelSummary {
+    let points = figure6_on(store, machine, kernel, budget, max_total, true);
     let best_multi = best_point(&points).expect("at least one feasible config").clone();
     let best_single = points
         .iter()
@@ -364,13 +573,43 @@ pub fn run_reference(
     budget: u64,
     reference: Reference,
 ) -> Option<f64> {
+    run_reference_on(
+        &ResultStore::ephemeral(),
+        &mut EngineCache::new(),
+        machine,
+        kernel,
+        budget,
+        reference,
+    )
+}
+
+/// [`run_reference`] through a result store. A reference's schedule is
+/// an ordinary [`StridingConfig`], so its point dedups against sweep
+/// points that happen to share it. References run with the machine's own
+/// prefetch setting (the pre-store protocol: `EngineConfig::new` leaves
+/// `machine.prefetch` untouched), passed explicitly so the point key
+/// says what actually ran.
+pub fn run_reference_on(
+    store: &ResultStore,
+    cache: &mut EngineCache,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    reference: Reference,
+) -> Option<f64> {
     let pk = kernel_by_name(kernel, budget)?;
     let cfg = reference.schedule();
     let t = transform(&pk.spec, cfg).ok()?;
-    let trace = KernelTrace::new(t);
-    let footprint = trace.transformed().spec.footprint();
-    let mut engine = Engine::new(EngineConfig::new(machine).with_huge_pages(false));
-    let result = engine.run(trace.iter());
+    let footprint = t.spec.footprint();
+    let point = SimPoint::kernel_from_spec(
+        machine,
+        kernel,
+        budget,
+        cfg,
+        machine.prefetch.enabled,
+        &pk.spec,
+    );
+    let result = store.get_or_run(cache, &point).expect("validated reference point simulates");
     let mut gib = machine.gib_per_s(footprint, result.counters.cycles);
     // References that fail to vectorize (the paper verified Polly/CLang
     // emitted no AVX2 for these kernels) stream 4-byte elements through a
@@ -388,14 +627,27 @@ pub fn run_reference(
 /// Figure 7: compare the tuned multi-strided kernel against every
 /// applicable reference on one machine.
 pub fn figure7(machine: MachineConfig, kernel: &str, budget: u64, max_total: u32) -> Vec<ComparisonRow> {
-    let summary = summarize_kernel(machine, kernel, budget, max_total);
+    figure7_on(&ResultStore::ephemeral(), machine, kernel, budget, max_total)
+}
+
+/// [`figure7`] against a caller-owned result store (the sweep half is
+/// shared with [`figure6_on`] / [`summarize_kernel_on`] verbatim).
+pub fn figure7_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    max_total: u32,
+) -> Vec<ComparisonRow> {
+    let summary = summarize_kernel_on(store, machine, kernel, budget, max_total);
     let refs = Reference::for_kernel(kernel);
+    let mut engines = EngineCache::new();
     let mut rows = Vec::new();
     for r in refs {
         let reference_gib = match r {
             Reference::BestSingleStrided => summary.best_single.throughput_gib,
             Reference::NoUnroll => summary.no_unroll.throughput_gib,
-            _ => match run_reference(machine, kernel, budget, r) {
+            _ => match run_reference_on(store, &mut engines, machine, kernel, budget, r) {
                 Some(g) => g,
                 None => continue,
             },
@@ -453,8 +705,22 @@ pub fn tune_kernel(
     cache: &crate::tune::PlanCache,
     force: bool,
 ) -> crate::Result<crate::tune::TuneOutcome> {
+    tune_kernel_on(&ResultStore::ephemeral(), machine, kernel, budget, prefetch, cache, force)
+}
+
+/// [`tune_kernel`] with the search's cost-model reads flowing through a
+/// result store (a tune after a sweep at the same budget is nearly free).
+pub fn tune_kernel_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    prefetch: bool,
+    cache: &crate::tune::PlanCache,
+    force: bool,
+) -> crate::Result<crate::tune::TuneOutcome> {
     let tuner = crate::tune::Tuner { machine, budget, prefetch, params: Default::default() };
-    tuner.tune(&mut EngineCache::new(), cache, kernel, force)
+    tuner.tune_on(store, &mut EngineCache::new(), cache, kernel, force)
 }
 
 /// Tune the whole registry universe in parallel: one job per kernel, one
@@ -468,8 +734,20 @@ pub fn tune_universe(
     cache: &crate::tune::PlanCache,
     force: bool,
 ) -> Vec<crate::Result<crate::tune::TuneOutcome>> {
+    tune_universe_on(&ResultStore::ephemeral(), machine, budget, prefetch, cache, force)
+}
+
+/// [`tune_universe`] against a caller-owned result store.
+pub fn tune_universe_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    budget: u64,
+    prefetch: bool,
+    cache: &crate::tune::PlanCache,
+    force: bool,
+) -> Vec<crate::Result<crate::tune::TuneOutcome>> {
     let names = crate::runtime::universe_names(budget);
-    tune_kernels(machine, budget, prefetch, cache, force, &names)
+    tune_kernels_on(store, machine, budget, prefetch, cache, force, &names)
 }
 
 /// [`tune_universe`] restricted to an explicit kernel-name list.
@@ -481,10 +759,24 @@ pub fn tune_kernels(
     force: bool,
     kernels: &[String],
 ) -> Vec<crate::Result<crate::tune::TuneOutcome>> {
+    tune_kernels_on(&ResultStore::ephemeral(), machine, budget, prefetch, cache, force, kernels)
+}
+
+/// [`tune_kernels`] against a caller-owned result store.
+#[allow(clippy::too_many_arguments)]
+pub fn tune_kernels_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    budget: u64,
+    prefetch: bool,
+    cache: &crate::tune::PlanCache,
+    force: bool,
+    kernels: &[String],
+) -> Vec<crate::Result<crate::tune::TuneOutcome>> {
     let tuner = crate::tune::Tuner { machine, budget, prefetch, params: Default::default() };
     let jobs: Vec<String> = kernels.to_vec();
     parallel_map_with(jobs, default_workers(), EngineCache::new, |engines, name| {
-        tuner.tune(engines, cache, name, force)
+        tuner.tune_on(store, engines, cache, name, force)
     })
 }
 
@@ -644,5 +936,59 @@ mod tests {
         // The registry-driven entry point enumerates the whole universe.
         let universe = crate::kernels::library::all_kernels(budget);
         assert!(universe.len() * fam_len > kernels.len() * fam_len);
+    }
+
+    #[test]
+    fn warm_store_serves_sweeps_without_engine_work_bit_identically() {
+        // The acceptance shape at unit scale: a sweep against a warm
+        // store performs zero fresh simulations and formats results
+        // bit-identical to the cold pass.
+        let store = ResultStore::ephemeral();
+        let m = coffee_lake();
+        let kernels: Vec<String> = ["mxv"].map(String::from).to_vec();
+        let cold = variant_sweep_for_on(&store, m, MIB, 1, true, &kernels);
+        let cold_runs = store.stats().engine_runs;
+        assert!(cold_runs > 0, "cold sweep simulates");
+        let warm = variant_sweep_for_on(&store, m, MIB, 1, true, &kernels);
+        assert_eq!(
+            store.stats().engine_runs,
+            cold_runs,
+            "warm sweep performs no engine runs"
+        );
+        assert!(store.stats().hits() >= cold_runs);
+        assert_eq!(cold.len(), warm.len());
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.throughput_gib.to_bits(), b.throughput_gib.to_bits(), "{}", a.kernel);
+            assert_eq!(a.feasible, b.feasible);
+        }
+    }
+
+    #[test]
+    fn figure3_4_is_served_from_figure2s_grid() {
+        // figure3_4's jobs ⊂ figure2's at the same scale: with a shared
+        // store the whole figure formats from stored results.
+        let store = ResultStore::ephemeral();
+        let m = coffee_lake();
+        let scale = ScaleConfig { micro_bytes: MIB, micro_pow2_bytes: MIB, kernel_bytes: MIB, repetitions: 1 };
+        let _grid = figure2_on(&store, m, scale, false);
+        let runs = store.stats().engine_runs;
+        let series = figure3_4_on(&store, m, scale);
+        assert_eq!(store.stats().engine_runs, runs, "no new simulations");
+        assert_eq!(series.len(), 2 * MICRO_STRIDES.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown kernel")]
+    fn sweep_panics_loudly_on_unknown_kernel() {
+        // A typo'd kernel name must not produce an empty sweep.
+        let jobs = vec![("nope".to_string(), StridingConfig::new(1, 1))];
+        kernel_points_on(
+            &ResultStore::ephemeral(),
+            coffee_lake(),
+            "test",
+            MIB,
+            true,
+            &jobs,
+        );
     }
 }

@@ -1,0 +1,273 @@
+//! Bit-exact on-disk format for stored simulation results
+//! (`multistride-simresult v1`).
+//!
+//! Same discipline as the tuner's plan format ([`crate::tune::plan`]),
+//! whose field-walk helpers this module reuses: a fixed header line, a
+//! fixed-order `key = value` block, and a terminating FNV-1a `checksum`
+//! line over every preceding byte. Integers are decimal `u64`s; the one
+//! float ([`RunResult::freq_ghz`]) is serialized as its IEEE-754 bit
+//! pattern so serialize → parse → serialize is **bit-identical** — the
+//! property that lets a store hit stand in for a fresh simulation and
+//! lets the debug-build verification compare serialized bytes.
+//!
+//! The first field is the owning [`super::SimPoint`] key: a result file
+//! that was renamed, copied between shards, or otherwise detached from
+//! its key fails the load-time identity check and degrades to a miss —
+//! the same can-never-smuggle-a-stale-entry stance the plan cache takes.
+
+use crate::sim::RunResult;
+use crate::tune::plan::{expect_field, fnv64, hex, parse_f64, parse_u64};
+use crate::{ensure, format_err, Result};
+
+/// First line of every result file; doubles as the format version. Bump
+/// on any field change — old files then fail the header check, which is
+/// a miss (re-simulate), the intended migration path.
+pub const RESULT_HEADER: &str = "multistride-simresult v1";
+
+/// Serialize a result under its owning point key.
+pub fn serialize_result(key: u64, r: &RunResult) -> String {
+    fn kv(out: &mut String, k: &str, v: impl std::fmt::Display) {
+        use std::fmt::Write;
+        let _ = writeln!(out, "{k} = {v}");
+    }
+    let mut out = String::with_capacity(1536);
+    out.push_str(RESULT_HEADER);
+    out.push('\n');
+    kv(&mut out, "point_key", hex(key));
+    let c = &r.counters;
+    kv(&mut out, "cycles", c.cycles);
+    kv(&mut out, "stalls_total", c.stalls_total);
+    kv(&mut out, "stalls_mem_any", c.stalls_mem_any);
+    kv(&mut out, "stalls_l1d_miss", c.stalls_l1d_miss);
+    kv(&mut out, "stalls_l2_miss", c.stalls_l2_miss);
+    kv(&mut out, "stalls_l3_miss", c.stalls_l3_miss);
+    kv(&mut out, "accesses", c.accesses);
+    kv(&mut out, "bytes_read", c.bytes_read);
+    kv(&mut out, "bytes_written", c.bytes_written);
+    kv(&mut out, "dram_demand_lines", c.dram_demand_lines);
+    kv(&mut out, "prefetch_lines", c.prefetch_lines);
+    kv(&mut out, "prefetch_merges", c.prefetch_merges);
+    kv(&mut out, "tlb_cycles", c.tlb_cycles);
+    for (tag, s) in [("l1", &r.l1), ("l2", &r.l2), ("l3", &r.l3)] {
+        kv(&mut out, &format!("{tag}_demand_hits"), s.demand_hits);
+        kv(&mut out, &format!("{tag}_demand_misses"), s.demand_misses);
+        kv(&mut out, &format!("{tag}_prefetch_hits"), s.prefetch_hits);
+        kv(&mut out, &format!("{tag}_evictions"), s.evictions);
+        kv(&mut out, &format!("{tag}_dirty_evictions"), s.dirty_evictions);
+        kv(&mut out, &format!("{tag}_unused_prefetch_evictions"), s.unused_prefetch_evictions);
+        kv(&mut out, &format!("{tag}_prefetch_installs"), s.prefetch_installs);
+    }
+    kv(&mut out, "dram_reads", r.dram.reads);
+    kv(&mut out, "dram_writes", r.dram.writes);
+    kv(&mut out, "dram_row_hits", r.dram.row_hits);
+    kv(&mut out, "dram_row_misses", r.dram.row_misses);
+    kv(&mut out, "dram_busy_cycles", r.dram.busy_cycles);
+    kv(&mut out, "wc_stores", r.wc.stores);
+    kv(&mut out, "wc_full_flushes", r.wc.full_flushes);
+    kv(&mut out, "wc_partial_flushes", r.wc.partial_flushes);
+    kv(&mut out, "tlb_accesses", r.tlb.accesses);
+    kv(&mut out, "tlb_l1_misses", r.tlb.l1_misses);
+    kv(&mut out, "tlb_walks", r.tlb.walks);
+    kv(&mut out, "streamer_observations", r.streamer.observations);
+    kv(&mut out, "streamer_streams_allocated", r.streamer.streams_allocated);
+    kv(&mut out, "streamer_streams_evicted", r.streamer.streams_evicted);
+    kv(&mut out, "streamer_streams_evicted_untrained", r.streamer.streams_evicted_untrained);
+    kv(&mut out, "streamer_prefetches_issued", r.streamer.prefetches_issued);
+    kv(&mut out, "streamer_page_carries", r.streamer.page_carries);
+    kv(&mut out, "freq_ghz", hex(r.freq_ghz.to_bits()));
+    let sum = fnv64(out.as_bytes());
+    kv(&mut out, "checksum", hex(sum));
+    out
+}
+
+/// Parse the on-disk format back into `(point key, result)`. Checksum is
+/// verified first (one clear error for any corruption or truncation),
+/// then the strict fixed-order field walk. Never panics on bad input.
+pub fn parse_result(text: &str) -> Result<(u64, RunResult)> {
+    let idx = text
+        .rfind("checksum = ")
+        .ok_or_else(|| format_err!("result corrupt: no checksum line (truncated?)"))?;
+    ensure!(
+        idx == 0 || text[..idx].ends_with('\n'),
+        "result corrupt: checksum marker not at line start"
+    );
+    let prefix = &text[..idx];
+    let val = text[idx..].strip_prefix("checksum = ").expect("rfind guarantees the prefix");
+    let val = val
+        .strip_suffix('\n')
+        .ok_or_else(|| format_err!("result corrupt: checksum line not newline-terminated"))?;
+    let want = parse_u64(val)?;
+    ensure!(val == hex(want), "result corrupt: checksum line not in canonical form");
+    ensure!(
+        fnv64(prefix.as_bytes()) == want,
+        "result corrupt: checksum mismatch (file edited or truncated)"
+    );
+
+    let mut lines = prefix.lines();
+    ensure!(
+        lines.next() == Some(RESULT_HEADER),
+        "result corrupt or wrong version: expected header {RESULT_HEADER:?}"
+    );
+    let key = parse_u64(expect_field(&mut lines, "point_key")?)?;
+    let mut next_u64 = |field: &str| -> Result<u64> { parse_u64(expect_field(&mut lines, field)?) };
+    let counters = crate::sim::Counters {
+        cycles: next_u64("cycles")?,
+        stalls_total: next_u64("stalls_total")?,
+        stalls_mem_any: next_u64("stalls_mem_any")?,
+        stalls_l1d_miss: next_u64("stalls_l1d_miss")?,
+        stalls_l2_miss: next_u64("stalls_l2_miss")?,
+        stalls_l3_miss: next_u64("stalls_l3_miss")?,
+        accesses: next_u64("accesses")?,
+        bytes_read: next_u64("bytes_read")?,
+        bytes_written: next_u64("bytes_written")?,
+        dram_demand_lines: next_u64("dram_demand_lines")?,
+        prefetch_lines: next_u64("prefetch_lines")?,
+        prefetch_merges: next_u64("prefetch_merges")?,
+        tlb_cycles: next_u64("tlb_cycles")?,
+    };
+    let mut cache_stats = |tag: &str| -> Result<crate::mem::cache::CacheStats> {
+        Ok(crate::mem::cache::CacheStats {
+            demand_hits: next_u64(&format!("{tag}_demand_hits"))?,
+            demand_misses: next_u64(&format!("{tag}_demand_misses"))?,
+            prefetch_hits: next_u64(&format!("{tag}_prefetch_hits"))?,
+            evictions: next_u64(&format!("{tag}_evictions"))?,
+            dirty_evictions: next_u64(&format!("{tag}_dirty_evictions"))?,
+            unused_prefetch_evictions: next_u64(&format!("{tag}_unused_prefetch_evictions"))?,
+            prefetch_installs: next_u64(&format!("{tag}_prefetch_installs"))?,
+        })
+    };
+    let l1 = cache_stats("l1")?;
+    let l2 = cache_stats("l2")?;
+    let l3 = cache_stats("l3")?;
+    let dram = crate::mem::dram::DramStats {
+        reads: next_u64("dram_reads")?,
+        writes: next_u64("dram_writes")?,
+        row_hits: next_u64("dram_row_hits")?,
+        row_misses: next_u64("dram_row_misses")?,
+        busy_cycles: next_u64("dram_busy_cycles")?,
+    };
+    let wc = crate::mem::writebuffer::WcStats {
+        stores: next_u64("wc_stores")?,
+        full_flushes: next_u64("wc_full_flushes")?,
+        partial_flushes: next_u64("wc_partial_flushes")?,
+    };
+    let tlb = crate::mem::tlb::TlbStats {
+        accesses: next_u64("tlb_accesses")?,
+        l1_misses: next_u64("tlb_l1_misses")?,
+        walks: next_u64("tlb_walks")?,
+    };
+    let streamer = crate::prefetch::streamer::StreamerStats {
+        observations: next_u64("streamer_observations")?,
+        streams_allocated: next_u64("streamer_streams_allocated")?,
+        streams_evicted: next_u64("streamer_streams_evicted")?,
+        streams_evicted_untrained: next_u64("streamer_streams_evicted_untrained")?,
+        prefetches_issued: next_u64("streamer_prefetches_issued")?,
+        page_carries: next_u64("streamer_page_carries")?,
+    };
+    let freq_ghz = parse_f64(expect_field(&mut lines, "freq_ghz")?)?;
+    ensure!(lines.next().is_none(), "result corrupt: trailing content after the field block");
+    Ok((key, RunResult { counters, l1, l2, l3, dram, wc, tlb, streamer, freq_ghz }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A result with every field distinct (catches swapped-field bugs)
+    /// plus boundary values on the extremes.
+    pub(crate) fn sample_result() -> RunResult {
+        let mut n = 100u64;
+        let mut next = || {
+            n += 1;
+            n
+        };
+        let counters = crate::sim::Counters {
+            cycles: next(),
+            stalls_total: next(),
+            stalls_mem_any: next(),
+            stalls_l1d_miss: next(),
+            stalls_l2_miss: next(),
+            stalls_l3_miss: next(),
+            accesses: next(),
+            bytes_read: next(),
+            bytes_written: u64::MAX,
+            dram_demand_lines: next(),
+            prefetch_lines: next(),
+            prefetch_merges: 0,
+            tlb_cycles: next(),
+        };
+        let mut cache = || crate::mem::cache::CacheStats {
+            demand_hits: next(),
+            demand_misses: next(),
+            prefetch_hits: next(),
+            evictions: next(),
+            dirty_evictions: next(),
+            unused_prefetch_evictions: next(),
+            prefetch_installs: next(),
+        };
+        let (l1, l2, l3) = (cache(), cache(), cache());
+        RunResult {
+            counters,
+            l1,
+            l2,
+            l3,
+            dram: crate::mem::dram::DramStats {
+                reads: next(),
+                writes: next(),
+                row_hits: next(),
+                row_misses: next(),
+                busy_cycles: next(),
+            },
+            wc: crate::mem::writebuffer::WcStats {
+                stores: next(),
+                full_flushes: next(),
+                partial_flushes: next(),
+            },
+            tlb: crate::mem::tlb::TlbStats {
+                accesses: next(),
+                l1_misses: next(),
+                walks: next(),
+            },
+            streamer: crate::prefetch::streamer::StreamerStats {
+                observations: next(),
+                streams_allocated: next(),
+                streams_evicted: next(),
+                streams_evicted_untrained: next(),
+                prefetches_issued: next(),
+                page_carries: next(),
+            },
+            freq_ghz: 3.2,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let r = sample_result();
+        let s = serialize_result(0xDEAD_BEEF_0123_4567, &r);
+        let (key, q) = parse_result(&s).expect("parses");
+        assert_eq!(key, 0xDEAD_BEEF_0123_4567);
+        assert_eq!(s, serialize_result(key, &q));
+    }
+
+    #[test]
+    fn nan_and_inf_freq_survive_the_bits_encoding() {
+        for f in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0] {
+            let mut r = sample_result();
+            r.freq_ghz = f;
+            let s = serialize_result(7, &r);
+            let (_, q) = parse_result(&s).unwrap();
+            assert_eq!(q.freq_ghz.to_bits(), f.to_bits());
+            assert_eq!(s, serialize_result(7, &q));
+        }
+    }
+
+    #[test]
+    fn truncation_and_edits_are_recoverable_errors() {
+        let s = serialize_result(7, &sample_result());
+        for cut in [0, 1, RESULT_HEADER.len(), s.len() / 3, s.len() / 2, s.len() - 2] {
+            assert!(parse_result(&s[..cut]).is_err(), "cut at {cut}");
+        }
+        let tampered = s.replace("dram_reads", "dram_rXads");
+        assert!(parse_result(&tampered).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! The execution layer: every experiment is a set of content-addressed
+//! [`SimPoint`] jobs resolved through a deduplicating [`ResultStore`].
+//!
+//! Before this layer, each entry point (figure drivers, `universe`, the
+//! tuner's cost model, benches) hand-rolled its own simulate-points loop,
+//! so a `repro all` run re-simulated identical `(workload, machine,
+//! prefetch, budget)` points many times, and nothing except the tuner's
+//! winner-only plan cache survived a process exit. The paper's whole
+//! methodology is a large grid of *deterministic* simulations; this
+//! module makes the grid incremental:
+//!
+//! * [`point`] — the [`SimPoint`] job and its FNV content key (spec
+//!   content hash × variant × machine fingerprint × prefetch ×
+//!   translation regime), built on the tuner's identity machinery.
+//! * [`store`] — the [`ResultStore`]: an in-memory tier for in-process
+//!   reuse plus a persistent tier under `<artifacts>/results/` (sharded
+//!   by key prefix, atomic writes, corrupt shard = miss). Exposes
+//!   [`ExecStats`] so runs can report their hit/dedup economy.
+//! * [`format`] — the bit-exact `multistride-simresult v1` file format.
+//! * [`planner`] — [`Planner`]: batch dedup + scheduling over the
+//!   existing warm-engine worker pool, and [`simulate`], the single
+//!   place a point becomes an engine run.
+//!
+//! Consumers (`coordinator::experiments`, `tune::cost`) are thin
+//! plan-builders and result-formatters around this layer; the CLI picks
+//! the store (`--results DIR`, `--cold`) and prints the stats summary.
+//! Correctness rests on determinism: a store hit must be bit-identical
+//! to a fresh simulation, and debug builds re-simulate every hit to
+//! assert exactly that. See ARCHITECTURE.md §Execution layer.
+
+pub mod format;
+pub mod planner;
+pub mod point;
+pub mod store;
+
+pub use planner::{simulate, Planner};
+pub use point::{SimPoint, Workload, SIM_REVISION};
+pub use store::{ExecStats, ResultStore};

@@ -1,0 +1,219 @@
+//! Batch planning: dedup a request's job set against itself and the
+//! store, then schedule only the survivors over the warm-engine pool.
+//!
+//! [`Planner::run`] is the execution path behind every multi-point
+//! experiment driver (`figure2`, `figure3_4`, `figure6`,
+//! `variant_sweep`, …): the driver expands its request into an ordered
+//! `Vec<SimPoint>` (the *plan-builder* half), the planner resolves each
+//! point to an `Arc<RunResult>` in input order (this module), and the
+//! driver formats the results (the *result-formatter* half). Identical
+//! points — inside one batch, across batches in one process, or across
+//! processes via the persistent tier — simulate **once**.
+//!
+//! Scheduling reuses the existing coordinator machinery unchanged:
+//! [`parallel_map_with`] with one [`EngineCache`] per worker, so every
+//! missing point runs on a warm engine exactly as the pre-store sweeps
+//! did (bit-identically — that is the engine-reuse contract
+//! `tests/golden_determinism.rs` pins).
+//!
+//! [`simulate`] is the single place a [`SimPoint`] becomes an engine
+//! run; both the planner and the store's single-point
+//! [`ResultStore::get_or_run`] path go through it.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::experiments::EngineCache;
+use crate::coordinator::pool::{default_workers, parallel_map_with};
+use crate::kernels::library::kernel_by_name;
+use crate::kernels::micro::MicroBench;
+use crate::sim::{EngineConfig, RunResult};
+use crate::trace::KernelTrace;
+use crate::transform::transform;
+use crate::{format_err, Result};
+
+use super::point::{SimPoint, Workload};
+use super::store::ResultStore;
+
+/// Run one point on a (warm) engine. Deterministic: equal keys produce
+/// bit-identical results, in fresh or reused engines alike.
+pub fn simulate(engines: &mut EngineCache, point: &SimPoint) -> Result<RunResult> {
+    let cfg = EngineConfig::new(point.machine)
+        .with_prefetch(point.prefetch)
+        .with_huge_pages(point.huge_pages);
+    match &point.workload {
+        Workload::Micro { op, strides, bytes, interleaved } => {
+            let mut bench = MicroBench::new(*op, *strides, *bytes);
+            if *interleaved {
+                bench = bench.interleaved();
+            }
+            Ok(engines.engine_for(cfg).run(bench.trace()))
+        }
+        Workload::Kernel { name, budget, config } => {
+            let pk = kernel_by_name(name, *budget)
+                .ok_or_else(|| format_err!("unknown kernel {name}"))?;
+            let t = transform(&pk.spec, *config)
+                .map_err(|e| format_err!("kernel {name}: untransformable point: {e}"))?;
+            let trace = KernelTrace::new(t);
+            Ok(engines.engine_for(cfg).run(trace.iter()))
+        }
+    }
+}
+
+/// Batch executor over one [`ResultStore`].
+pub struct Planner<'a> {
+    store: &'a ResultStore,
+    workers: usize,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(store: &'a ResultStore) -> Self {
+        Self { store, workers: default_workers() }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Resolve every point to its result, in input order. Duplicate keys
+    /// collapse to one simulation; points already in the store are
+    /// served without any engine work. Errors only if a point fails to
+    /// simulate (drivers validate transformability before enqueueing, so
+    /// an error here is a bug, not a data condition) — or, debug builds
+    /// only, panics if a served hit diverges from a fresh simulation.
+    pub fn run(&self, points: &[SimPoint]) -> Result<Vec<Arc<RunResult>>> {
+        // Phase 1 — resolve against the store, dedup within the batch.
+        // `None` marks a key scheduled for simulation below.
+        let mut resolved: HashMap<u64, Option<Arc<RunResult>>> = HashMap::new();
+        let mut to_run: Vec<&SimPoint> = Vec::new();
+        #[cfg(debug_assertions)]
+        let mut to_verify: Vec<&SimPoint> = Vec::new();
+        for p in points {
+            if resolved.contains_key(&p.key()) {
+                self.store.note_dedup();
+                continue;
+            }
+            match self.store.lookup(p.key()) {
+                Some(r) => {
+                    #[cfg(debug_assertions)]
+                    to_verify.push(p);
+                    resolved.insert(p.key(), Some(r));
+                }
+                None => {
+                    self.store.note_miss();
+                    resolved.insert(p.key(), None);
+                    to_run.push(p);
+                }
+            }
+        }
+
+        // Phase 2 — simulate the survivors on the worker pool, one warm
+        // engine per worker, and write each result through the store.
+        let fresh = parallel_map_with(to_run, self.workers, EngineCache::new, |engines, p| {
+            self.store.note_engine_run();
+            simulate(engines, p).map(|r| (p.key(), Arc::new(r)))
+        });
+        // (`p` above is `&&SimPoint`: the pool hands `&J` with `J = &SimPoint`;
+        // auto-deref covers the calls.)
+        for item in fresh {
+            let (key, r) = item?;
+            self.store.insert(key, Arc::clone(&r));
+            resolved.insert(key, Some(r));
+        }
+
+        // Debug safety net: every distinct hit re-simulates on the same
+        // pool and must match the served bytes (see the store docs).
+        #[cfg(debug_assertions)]
+        parallel_map_with(to_verify, self.workers, EngineCache::new, |engines, p| {
+            let hit = resolved[&p.key()].as_ref().expect("hit resolved in phase 1");
+            self.store.verify_hit(engines, p, hit);
+        });
+
+        // Phase 3 — serve the batch in input order.
+        Ok(points
+            .iter()
+            .map(|p| {
+                Arc::clone(
+                    resolved[&p.key()].as_ref().expect("every scheduled key simulated"),
+                )
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+    use crate::exec::format::serialize_result;
+    use crate::kernels::micro::MicroOp;
+    use crate::transform::StridingConfig;
+
+    const MIB: u64 = 1 << 20;
+
+    fn batch() -> Vec<SimPoint> {
+        let m = coffee_lake();
+        vec![
+            SimPoint::micro(m, MicroOp::LoadAligned, 1, MIB, true, false),
+            SimPoint::micro(m, MicroOp::LoadAligned, 4, MIB, true, false),
+            // Deliberate duplicate of the first point.
+            SimPoint::micro(m, MicroOp::LoadAligned, 1, MIB, true, false),
+            SimPoint::kernel(m, "init", MIB, StridingConfig::new(2, 1), true).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn batch_dedups_and_preserves_input_order() {
+        let store = ResultStore::ephemeral();
+        let points = batch();
+        let out = Planner::new(&store).with_workers(2).run(&points).unwrap();
+        assert_eq!(out.len(), points.len());
+        assert!(
+            Arc::ptr_eq(&out[0], &out[2]),
+            "duplicate points share one simulation"
+        );
+        let s = store.stats();
+        assert_eq!(s.engine_runs, 3, "3 distinct keys in a 4-point batch");
+        assert_eq!(s.deduped, 1);
+        assert_eq!(s.requests, 4);
+
+        // Re-running the identical batch is all memory hits, zero sims.
+        let again = Planner::new(&store).with_workers(2).run(&points).unwrap();
+        let s = store.stats();
+        assert_eq!(s.engine_runs, 3, "warm batch performs no engine runs");
+        assert_eq!(s.mem_hits, 3);
+        assert_eq!(s.deduped, 2);
+        for (a, b) in out.iter().zip(&again) {
+            assert!(Arc::ptr_eq(a, b));
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_cold_run_bit_for_bit() {
+        let points = batch();
+        let serial_store = ResultStore::ephemeral();
+        let serial = Planner::new(&serial_store).with_workers(1).run(&points).unwrap();
+        let par_store = ResultStore::ephemeral();
+        let parallel = Planner::new(&par_store).with_workers(4).run(&points).unwrap();
+        for ((p, a), b) in points.iter().zip(&serial).zip(&parallel) {
+            assert_eq!(
+                serialize_result(p.key(), a),
+                serialize_result(p.key(), b),
+                "{}",
+                p.label()
+            );
+        }
+    }
+
+    #[test]
+    fn single_point_path_agrees_with_the_batch_path() {
+        let store = ResultStore::ephemeral();
+        let points = batch();
+        let out = Planner::new(&store).run(&points).unwrap();
+        let solo = store
+            .get_or_run(&mut EngineCache::new(), &points[3])
+            .unwrap();
+        assert!(Arc::ptr_eq(&out[3], &solo), "get_or_run hits the batch's entry");
+    }
+}

@@ -1,0 +1,266 @@
+//! The canonical unit of simulation work: a [`SimPoint`] and its
+//! content-addressed key.
+//!
+//! Every experiment in the repo — micro grids, kernel sweeps, reference
+//! models, tuner rungs — ultimately runs *one deterministic simulation*
+//! of a workload on a machine. A `SimPoint` captures exactly the inputs
+//! that determine that simulation's [`crate::sim::RunResult`], and
+//! [`SimPoint::key`] is an FNV-1a content hash over them:
+//!
+//! * the **workload content** — for kernels the [`spec_hash`] of the
+//!   untransformed spec *at the request budget* plus every
+//!   [`StridingConfig`] field (so a kernel-library edit or a budget
+//!   change that re-sizes extents changes the key); for micro benchmarks
+//!   the op / stride-count / byte-size / arrangement tuple;
+//! * the **machine fingerprint** — [`machine_fingerprint`] over the full
+//!   [`MachineConfig`] and the prefetch enable bit, the same identity the
+//!   tuner's plan cache validates against;
+//! * the **translation regime** — the huge-pages bit (§4 micro protocol
+//!   uses huge pages, §6 kernel protocol does not).
+//!
+//! Two points with equal keys produce bit-identical results (the
+//! simulator is deterministic and the engine-reuse protocol is pinned by
+//! `tests/golden_determinism.rs`), which is what lets the
+//! [`super::ResultStore`] serve a stored result in place of a fresh
+//! simulation — and what the store's debug-build verification re-checks
+//! on every hit.
+//!
+//! Register feasibility is deliberately *not* part of a point: it gates
+//! whether a consumer enqueues a point at all (infeasible variants are
+//! reported without simulating, as the sweeps always have), not what the
+//! simulation would compute. `machine.simd_registers` still feeds the
+//! machine fingerprint, so the keying stays conservative.
+
+use crate::config::MachineConfig;
+use crate::kernels::library::kernel_by_name;
+use crate::kernels::micro::MicroOp;
+use crate::kernels::spec::KernelSpec;
+use crate::trace::Arrangement;
+use crate::transform::StridingConfig;
+use crate::tune::plan::{machine_fingerprint, spec_hash, Fnv};
+use crate::{format_err, Result};
+
+/// Simulator-behavior revision, salted into every point key. The inputs
+/// a key hashes (spec, variant, machine, prefetch, pages) pin *what* is
+/// simulated, not *how*: an intentional engine/model change (one that
+/// moves the golden oracle) changes results without changing any input.
+/// **Bump this constant in the same commit as any such change** — every
+/// persisted result then becomes a clean miss, instead of a stale serve
+/// in release builds or a verify-hit panic in debug builds.
+pub const SIM_REVISION: u64 = 1;
+
+/// What a [`SimPoint`] simulates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// A §4 micro-benchmark configuration ([`crate::kernels::micro`]).
+    Micro { op: MicroOp, strides: u32, bytes: u64, interleaved: bool },
+    /// A transformed kernel from the registry universe at `budget` bytes.
+    Kernel { name: String, budget: u64, config: StridingConfig },
+}
+
+/// One schedulable simulation job: workload × machine × run regime, with
+/// its content key computed at construction.
+#[derive(Debug, Clone)]
+pub struct SimPoint {
+    pub machine: MachineConfig,
+    pub prefetch: bool,
+    pub huge_pages: bool,
+    pub workload: Workload,
+    key: u64,
+}
+
+impl SimPoint {
+    /// A micro-benchmark point (the §4 protocol: huge pages on).
+    pub fn micro(
+        machine: MachineConfig,
+        op: MicroOp,
+        strides: u32,
+        bytes: u64,
+        prefetch: bool,
+        interleaved: bool,
+    ) -> SimPoint {
+        let workload = Workload::Micro { op, strides, bytes, interleaved };
+        let key = point_key(&machine, prefetch, true, &workload, 0);
+        SimPoint { machine, prefetch, huge_pages: true, workload, key }
+    }
+
+    /// A kernel-variant point (the §6 protocol: default 4 KiB pages).
+    /// Errors on unknown kernel names — the spec must exist to be
+    /// content-hashed. Callers that additionally need the transform to
+    /// succeed (always, before scheduling) validate that themselves.
+    pub fn kernel(
+        machine: MachineConfig,
+        name: &str,
+        budget: u64,
+        config: StridingConfig,
+        prefetch: bool,
+    ) -> Result<SimPoint> {
+        let pk = kernel_by_name(name, budget)
+            .ok_or_else(|| format_err!("unknown kernel {name}"))?;
+        Ok(Self::kernel_from_spec(machine, name, budget, config, prefetch, &pk.spec))
+    }
+
+    /// [`SimPoint::kernel`] when the caller already holds the registry
+    /// spec (sweep drivers fetch it for transform/feasibility anyway) —
+    /// skips the second registry lookup. `spec` must be what
+    /// [`kernel_by_name`]`(name, budget)` returns; the key is its
+    /// content hash, so a mismatched spec would mis-address the point.
+    pub fn kernel_from_spec(
+        machine: MachineConfig,
+        name: &str,
+        budget: u64,
+        config: StridingConfig,
+        prefetch: bool,
+        spec: &KernelSpec,
+    ) -> SimPoint {
+        let spec = spec_hash(spec);
+        let workload = Workload::Kernel { name: name.to_string(), budget, config };
+        let key = point_key(&machine, prefetch, false, &workload, spec);
+        SimPoint { machine, prefetch, huge_pages: false, workload, key }
+    }
+
+    /// The content-addressed identity of this point (see the module docs
+    /// for what feeds it).
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    /// Short human-readable label for diagnostics.
+    pub fn label(&self) -> String {
+        match &self.workload {
+            Workload::Micro { op, strides, bytes, interleaved } => format!(
+                "micro {} n={strides} {} MiB{}",
+                op.label(),
+                bytes >> 20,
+                if *interleaved { " [interleaved]" } else { "" }
+            ),
+            Workload::Kernel { name, budget, config } => format!(
+                "kernel {name} s={} p={} {} MiB",
+                config.stride_unroll,
+                config.portion_unroll,
+                budget >> 20
+            ),
+        }
+    }
+}
+
+/// The key function. `spec` is the kernel spec's content hash (ignored
+/// for micro workloads, whose content is fully captured by the enum
+/// fields). Discriminants and field order are part of the persistent
+/// store format — changing them orphans on-disk results (a safe miss,
+/// but a full re-simulation), so extend only by appending.
+fn point_key(
+    machine: &MachineConfig,
+    prefetch: bool,
+    huge_pages: bool,
+    workload: &Workload,
+    spec: u64,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(SIM_REVISION);
+    h.u64(machine_fingerprint(machine, prefetch));
+    h.bytes(&[huge_pages as u8]);
+    match workload {
+        Workload::Micro { op, strides, bytes, interleaved } => {
+            h.u64(0);
+            h.u64(micro_op_code(*op));
+            h.u64(*strides as u64);
+            h.u64(*bytes);
+            h.bytes(&[*interleaved as u8]);
+        }
+        Workload::Kernel { name: _, budget: _, config } => {
+            // The spec content hash covers the kernel name and every
+            // extent the budget produced; the exact byte budget is
+            // deliberately absent so budgets that round to the same spec
+            // share one entry (their traces are identical).
+            h.u64(1);
+            h.u64(spec);
+            h.u64(config.stride_unroll as u64);
+            h.u64(config.portion_unroll as u64);
+            h.bytes(&[config.eliminate_redundant as u8]);
+            h.u64(match config.arrangement {
+                Arrangement::Grouped => 0,
+                Arrangement::Interleaved => 1,
+            });
+        }
+    }
+    h.finish()
+}
+
+/// Stable code per micro op (enum discriminants are not a persistence
+/// contract; this mapping is).
+fn micro_op_code(op: MicroOp) -> u64 {
+    match op {
+        MicroOp::LoadAligned => 0,
+        MicroOp::LoadUnaligned => 1,
+        MicroOp::LoadNt => 2,
+        MicroOp::StoreAligned => 3,
+        MicroOp::StoreUnaligned => 4,
+        MicroOp::StoreNt => 5,
+        MicroOp::CopyAligned => 6,
+        MicroOp::CopyNt => 7,
+        MicroOp::CopyNtBoth => 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{cascade_lake, coffee_lake};
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn micro_keys_separate_every_axis() {
+        let m = coffee_lake();
+        let base = SimPoint::micro(m, MicroOp::LoadAligned, 4, 8 * MIB, true, false);
+        let same = SimPoint::micro(m, MicroOp::LoadAligned, 4, 8 * MIB, true, false);
+        assert_eq!(base.key(), same.key(), "identical content, identical key");
+        for other in [
+            SimPoint::micro(m, MicroOp::StoreNt, 4, 8 * MIB, true, false),
+            SimPoint::micro(m, MicroOp::LoadAligned, 8, 8 * MIB, true, false),
+            SimPoint::micro(m, MicroOp::LoadAligned, 4, 16 * MIB, true, false),
+            SimPoint::micro(m, MicroOp::LoadAligned, 4, 8 * MIB, false, false),
+            SimPoint::micro(m, MicroOp::LoadAligned, 4, 8 * MIB, true, true),
+            SimPoint::micro(cascade_lake(), MicroOp::LoadAligned, 4, 8 * MIB, true, false),
+        ] {
+            assert_ne!(base.key(), other.key(), "{}", other.label());
+        }
+    }
+
+    #[test]
+    fn kernel_keys_track_spec_content_and_variant() {
+        let m = coffee_lake();
+        let cfg = StridingConfig::new(4, 2);
+        let base = SimPoint::kernel(m, "mxv", 8 * MIB, cfg, true).unwrap();
+        let same = SimPoint::kernel(m, "mxv", 8 * MIB, cfg, true).unwrap();
+        assert_eq!(base.key(), same.key());
+        let other_cfg = SimPoint::kernel(m, "mxv", 8 * MIB, StridingConfig::new(2, 2), true)
+            .unwrap();
+        let other_budget = SimPoint::kernel(m, "mxv", 128 * MIB, cfg, true).unwrap();
+        let other_kernel = SimPoint::kernel(m, "bicg", 8 * MIB, cfg, true).unwrap();
+        let no_pf = SimPoint::kernel(m, "mxv", 8 * MIB, cfg, false).unwrap();
+        assert_ne!(base.key(), other_cfg.key());
+        assert_ne!(base.key(), other_budget.key(), "extents feed the spec hash");
+        assert_ne!(base.key(), other_kernel.key());
+        assert_ne!(base.key(), no_pf.key());
+    }
+
+    #[test]
+    fn kernel_and_micro_workloads_never_collide_on_tag() {
+        // Same machine, same prefetch: the workload tag separates the
+        // two key families even under adversarially equal field values.
+        let m = coffee_lake();
+        let micro = SimPoint::micro(m, MicroOp::LoadAligned, 1, MIB, true, false);
+        let kernel =
+            SimPoint::kernel(m, "init", MIB, StridingConfig::new(1, 1), true).unwrap();
+        assert_ne!(micro.key(), kernel.key());
+        assert!(micro.huge_pages && !kernel.huge_pages);
+    }
+
+    #[test]
+    fn unknown_kernel_is_an_error() {
+        assert!(SimPoint::kernel(coffee_lake(), "nope", MIB, StridingConfig::new(1, 1), true)
+            .is_err());
+    }
+}

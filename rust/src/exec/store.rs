@@ -1,0 +1,373 @@
+//! The two-tier, deduplicating result store.
+//!
+//! Tier 1 is an in-process map (`key → Arc<RunResult>`): every result
+//! simulated or loaded during this process is served from memory for the
+//! rest of the run, which is what collapses the overlap between `repro
+//! all`'s sweeps (figure6 and `universe` share family points; the tuner's
+//! full rung re-visits `universe`'s measurements) from re-simulation to a
+//! map probe.
+//!
+//! Tier 2 is a persistent directory (by default `<artifacts>/results/`),
+//! sharded by the first key byte (`results/<xx>/<16-hex-key>.simres`) so
+//! no directory grows unboundedly. Writes are write-through and atomic
+//! (temp file + rename, unique temp names per process); a shard that is
+//! corrupt, truncated, renamed or from an old format version fails
+//! [`super::format::parse_result`]'s checksum/identity checks and
+//! degrades to a **miss** — the same recoverability contract as
+//! [`crate::tune::cache::PlanCache`]. Disk *write* failures are reported
+//! on stderr and tolerated (persistence is an optimization; losing it
+//! must never fail an experiment).
+//!
+//! Safety net: the simulator is deterministic, so a store hit must be
+//! bit-identical to a fresh simulation. Debug builds re-simulate every
+//! hit and assert exactly that (serialized-byte equality); release
+//! builds trust the determinism wall (`tests/golden_determinism.rs`,
+//! `tests/result_store_roundtrip.rs`). Verification runs are counted
+//! separately from [`ExecStats::engine_runs`] so the fewer-sims-when-warm
+//! property stays observable in any build.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::experiments::EngineCache;
+use crate::sim::RunResult;
+use crate::Result;
+
+use super::format::{parse_result, serialize_result};
+use super::planner::simulate;
+use super::point::SimPoint;
+
+/// Counter snapshot of one store's traffic (all monotonically increasing
+/// over the store's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Point requests answered (hit or simulated), including batch
+    /// duplicates.
+    pub requests: u64,
+    /// Hits served from the in-memory tier.
+    pub mem_hits: u64,
+    /// Hits served from the persistent tier (promoted to memory).
+    pub disk_hits: u64,
+    /// Requests that found nothing and simulated.
+    pub misses: u64,
+    /// Duplicate points inside one batch, served from the first
+    /// occurrence without a separate lookup.
+    pub deduped: u64,
+    /// Fresh engine simulations performed (excludes debug verification).
+    pub engine_runs: u64,
+    /// Results written to the persistent tier.
+    pub disk_writes: u64,
+    /// Disk entries discarded as corrupt/stale (each counted as a miss).
+    pub corrupt_discards: u64,
+    /// Debug-build hit verifications performed (each one a re-simulation
+    /// compared bit-for-bit against the served result).
+    pub verified_hits: u64,
+}
+
+impl ExecStats {
+    /// Total hits across both tiers.
+    pub fn hits(&self) -> u64 {
+        self.mem_hits + self.disk_hits
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    mem_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+    deduped: AtomicU64,
+    engine_runs: AtomicU64,
+    disk_writes: AtomicU64,
+    corrupt_discards: AtomicU64,
+    verified_hits: AtomicU64,
+}
+
+/// The store. Cheap to share across the worker pool (`&ResultStore` is
+/// `Sync`); one instance should live for a whole CLI invocation so the
+/// memory tier spans every experiment in it.
+pub struct ResultStore {
+    mem: Mutex<HashMap<u64, Arc<RunResult>>>,
+    /// Persistent tier root; `None` = memory-only (ephemeral) store.
+    dir: Option<PathBuf>,
+    stats: Counters,
+}
+
+impl ResultStore {
+    /// Memory-only store: in-run dedup and cross-request reuse, nothing
+    /// on disk. What `--cold` gives the CLI, and what the compatibility
+    /// wrappers in `coordinator::experiments` use.
+    pub fn ephemeral() -> Self {
+        Self { mem: Mutex::new(HashMap::new()), dir: None, stats: Counters::default() }
+    }
+
+    /// Store with a persistent tier rooted at `dir` (created lazily on
+    /// first write; a missing directory just means every disk probe
+    /// misses).
+    pub fn persistent(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            mem: Mutex::new(HashMap::new()),
+            dir: Some(dir.into()),
+            stats: Counters::default(),
+        }
+    }
+
+    /// The conventional location under an artifact directory
+    /// (`<artifacts>/results`), next to the tuner's `plans/`.
+    pub fn default_under(artifacts_dir: &Path) -> Self {
+        Self::persistent(artifacts_dir.join("results"))
+    }
+
+    /// Persistent-tier root, when one is configured.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Where `key`'s shard file lives (`None` for ephemeral stores).
+    /// Exposed so tests and tooling can inspect/corrupt specific shards.
+    pub fn disk_path(&self, key: u64) -> Option<PathBuf> {
+        self.dir
+            .as_ref()
+            .map(|d| d.join(format!("{:02x}", key >> 56)).join(format!("{key:016x}.simres")))
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ExecStats {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        ExecStats {
+            requests: g(&self.stats.requests),
+            mem_hits: g(&self.stats.mem_hits),
+            disk_hits: g(&self.stats.disk_hits),
+            misses: g(&self.stats.misses),
+            deduped: g(&self.stats.deduped),
+            engine_runs: g(&self.stats.engine_runs),
+            disk_writes: g(&self.stats.disk_writes),
+            corrupt_discards: g(&self.stats.corrupt_discards),
+            verified_hits: g(&self.stats.verified_hits),
+        }
+    }
+
+    pub(crate) fn note_dedup(&self) {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.deduped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_miss(&self) {
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_engine_run(&self) {
+        self.stats.engine_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Probe both tiers. Counts the request and the hit/nothing outcome;
+    /// a disk hit is promoted into the memory tier.
+    pub fn lookup(&self, key: u64) -> Option<Arc<RunResult>> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        if let Some(r) = self.mem.lock().expect("store lock").get(&key) {
+            self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Arc::clone(r));
+        }
+        let r = self.load_disk(key)?;
+        self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+        self.mem.lock().expect("store lock").insert(key, Arc::clone(&r));
+        Some(r)
+    }
+
+    /// Disk probe only (no counters beyond corruption): absent, corrupt,
+    /// or mis-keyed entries are all a `None`.
+    fn load_disk(&self, key: u64) -> Option<Arc<RunResult>> {
+        let path = self.disk_path(key)?;
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                self.stats.corrupt_discards.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[exec] unreadable result shard {path:?}: {e} — treating as miss");
+                return None;
+            }
+        };
+        match parse_result(&text) {
+            Ok((stored_key, r)) if stored_key == key => Some(Arc::new(r)),
+            Ok((stored_key, _)) => {
+                self.stats.corrupt_discards.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "[exec] result shard {path:?} carries key {stored_key:#x}, expected {key:#x} — treating as miss"
+                );
+                None
+            }
+            Err(e) => {
+                self.stats.corrupt_discards.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[exec] corrupt result shard {path:?}: {e} — treating as miss");
+                None
+            }
+        }
+    }
+
+    /// Insert into the memory tier and write through to disk. Disk
+    /// failures are reported and swallowed (see the module docs);
+    /// concurrent writers of the same key are harmless because the
+    /// content is identical and the rename is atomic.
+    pub fn insert(&self, key: u64, result: Arc<RunResult>) {
+        self.mem.lock().expect("store lock").insert(key, Arc::clone(&result));
+        let Some(path) = self.disk_path(key) else { return };
+        if let Err(e) = self.write_shard(&path, key, &result) {
+            eprintln!("[exec] could not persist result {key:#x} to {path:?}: {e}");
+        } else {
+            self.stats.disk_writes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn write_shard(&self, path: &Path, key: u64, result: &RunResult) -> Result<()> {
+        let shard_dir = path.parent().expect("shard path has a parent");
+        std::fs::create_dir_all(shard_dir)?;
+        // Unique temp name per process: two processes landing the same
+        // key concurrently each rename their own complete file.
+        let tmp = shard_dir.join(format!("{key:016x}.tmp{}", std::process::id()));
+        std::fs::write(&tmp, serialize_result(key, result))?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Serve `point` from the store, simulating (and inserting) on a
+    /// miss. The single-point entry path: `run_kernel_with`, the micro
+    /// drivers and the tuner's cost model all come through here; batch
+    /// callers use [`super::Planner`], which dedups first.
+    pub fn get_or_run(
+        &self,
+        engines: &mut EngineCache,
+        point: &SimPoint,
+    ) -> Result<Arc<RunResult>> {
+        if let Some(hit) = self.lookup(point.key()) {
+            #[cfg(debug_assertions)]
+            self.verify_hit(engines, point, &hit);
+            return Ok(hit);
+        }
+        self.note_miss();
+        self.note_engine_run();
+        let r = Arc::new(simulate(engines, point)?);
+        self.insert(point.key(), Arc::clone(&r));
+        Ok(r)
+    }
+
+    /// Debug-build safety net: a served hit must be bit-identical to a
+    /// fresh simulation. Panics on mismatch — a divergence here means
+    /// either the simulator lost determinism or the store served the
+    /// wrong bytes, and both must fail loudly, not skew results.
+    #[cfg(debug_assertions)]
+    pub(crate) fn verify_hit(&self, engines: &mut EngineCache, point: &SimPoint, hit: &RunResult) {
+        self.stats.verified_hits.fetch_add(1, Ordering::Relaxed);
+        let fresh = simulate(engines, point)
+            .unwrap_or_else(|e| panic!("store hit for unsimulatable point {}: {e}", point.label()));
+        let key = point.key();
+        assert_eq!(
+            serialize_result(key, &fresh),
+            serialize_result(key, hit),
+            "store hit diverged from a fresh simulation for {} (key {key:#x})",
+            point.label()
+        );
+    }
+}
+
+/// `Debug` renders the tier configuration + live counters (the map
+/// contents are not interesting and may be huge).
+impl std::fmt::Debug for ResultStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultStore")
+            .field("dir", &self.dir)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::coffee_lake;
+    use crate::kernels::micro::MicroOp;
+
+    const MIB: u64 = 1 << 20;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("multistride_resultstore_{tag}_{}", std::process::id()))
+    }
+
+    fn point() -> SimPoint {
+        SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, 2, MIB, true, false)
+    }
+
+    #[test]
+    fn miss_simulates_then_memory_hit_serves_same_arc() {
+        let store = ResultStore::ephemeral();
+        let mut engines = EngineCache::new();
+        let p = point();
+        let a = store.get_or_run(&mut engines, &p).unwrap();
+        let s = store.stats();
+        assert_eq!((s.misses, s.engine_runs, s.hits()), (1, 1, 0));
+        let b = store.get_or_run(&mut engines, &p).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "memory tier serves the stored allocation");
+        let s = store.stats();
+        assert_eq!((s.misses, s.engine_runs, s.mem_hits), (1, 1, 1));
+        assert_eq!(s.disk_writes, 0, "ephemeral store never touches disk");
+    }
+
+    #[test]
+    fn disk_tier_round_trips_across_store_instances() {
+        let dir = tmp("roundtrip");
+        std::fs::remove_dir_all(&dir).ok();
+        let p = point();
+        let cold = ResultStore::persistent(&dir);
+        let a = cold.get_or_run(&mut EngineCache::new(), &p).unwrap();
+        assert_eq!(cold.stats().disk_writes, 1);
+        let path = cold.disk_path(p.key()).unwrap();
+        assert!(path.starts_with(&dir) && path.exists());
+
+        // A fresh store over the same dir: pure disk hit, zero sims.
+        let warm = ResultStore::persistent(&dir);
+        let b = warm.get_or_run(&mut EngineCache::new(), &p).unwrap();
+        assert_eq!(
+            serialize_result(p.key(), &a),
+            serialize_result(p.key(), &b),
+            "disk round trip is bit-identical"
+        );
+        let s = warm.stats();
+        assert_eq!((s.disk_hits, s.engine_runs), (1, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_and_mis_keyed_shards_degrade_to_misses() {
+        let dir = tmp("corrupt");
+        std::fs::remove_dir_all(&dir).ok();
+        let p = point();
+        let store = ResultStore::persistent(&dir);
+        let first = store.get_or_run(&mut EngineCache::new(), &p).unwrap();
+        let path = store.disk_path(p.key()).unwrap();
+
+        // Truncate: a fresh store must miss, re-simulate, and heal the shard.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let healed = ResultStore::persistent(&dir);
+        let again = healed.get_or_run(&mut EngineCache::new(), &p).unwrap();
+        let s = healed.stats();
+        assert_eq!((s.corrupt_discards, s.misses, s.engine_runs), (1, 1, 1));
+        assert_eq!(
+            serialize_result(p.key(), &first),
+            serialize_result(p.key(), &again)
+        );
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text, "shard healed in place");
+
+        // Mis-keyed: copy the (valid) shard under a different point's key.
+        let q = SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, 4, MIB, true, false);
+        let qpath = healed.disk_path(q.key()).unwrap();
+        std::fs::create_dir_all(qpath.parent().unwrap()).unwrap();
+        std::fs::copy(&path, &qpath).unwrap();
+        let fresh = ResultStore::persistent(&dir);
+        assert!(fresh.lookup(q.key()).is_none(), "smuggled shard must not serve");
+        assert_eq!(fresh.stats().corrupt_discards, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

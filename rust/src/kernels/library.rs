@@ -721,9 +721,48 @@ pub fn kernel_by_name(name: &str, budget: u64) -> Option<PaperKernel> {
     all_kernels(budget).into_iter().find(|k| k.name == name)
 }
 
+/// Clean CLI-boundary check for kernel-scoped commands: `Ok` for `None`
+/// (no restriction) or a registered name; an unknown name errors with
+/// the whole registered universe (names + family + description) so the
+/// user sees what *is* available — the same policy as the unknown
+/// `--machine` listing (`MachinePreset::from_name_or_listing`).
+pub fn ensure_known_kernel(kernel: Option<&str>, budget: u64) -> crate::Result<()> {
+    let Some(k) = kernel else { return Ok(()) };
+    if kernel_by_name(k, budget).is_some() {
+        return Ok(());
+    }
+    let mut listing = String::new();
+    for pk in all_kernels(budget) {
+        listing.push_str(&format!(
+            "\n  {:<12} [{}] {}",
+            pk.name,
+            if pk.extended { "extended" } else { "paper" },
+            pk.description
+        ));
+    }
+    crate::bail!("unknown kernel {k}; the registered kernel universe is:{listing}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn unknown_kernel_error_lists_the_whole_universe() {
+        // The `--kernel` boundary: a typo must come back with the full
+        // registered universe, never an empty sweep or a bare panic.
+        let budget = 1 << 20;
+        let err = ensure_known_kernel(Some("nope"), budget).unwrap_err().to_string();
+        assert!(err.contains("unknown kernel nope"), "{err}");
+        for pk in all_kernels(budget) {
+            assert!(err.contains(&pk.name), "listing must include {}: {err}", pk.name);
+        }
+        assert!(err.contains("[extended]") && err.contains("[paper]"), "{err}");
+        // No restriction and known names pass.
+        assert!(ensure_known_kernel(None, budget).is_ok());
+        assert!(ensure_known_kernel(Some("mxv"), budget).is_ok());
+        assert!(ensure_known_kernel(Some("3mm"), budget).is_ok());
+    }
 
     #[test]
     fn all_kernels_present() {

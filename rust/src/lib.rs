@@ -39,6 +39,11 @@
 //!     adjacent-line, DCU next-line, IP-stride) behind the pluggable
 //!     [`prefetch::PrefetchEngine`] trait, so new prefetcher models
 //!     register with the engine without modifying it.
+//! * [`exec`] — the execution layer: every experiment expands into
+//!   content-addressed [`exec::SimPoint`] jobs resolved through the
+//!   two-tier, deduplicating [`exec::ResultStore`] (in-memory +
+//!   `<artifacts>/results/`), so identical simulation points run once
+//!   per store lifetime instead of once per request.
 //! * [`coordinator`] — parallel experiment orchestration: config sweeps
 //!   fan out over worker threads, each of which reuses one warm
 //!   [`sim::Engine`] allocation across sweep points via
@@ -59,6 +64,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod exec;
 pub mod kernels;
 pub mod mem;
 pub mod native;

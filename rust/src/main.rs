@@ -21,7 +21,8 @@ use std::path::PathBuf;
 
 use multistride::config::{MachinePreset, ScaleConfig};
 use multistride::coordinator::experiments as exp;
-use multistride::kernels::library::paper_kernels;
+use multistride::exec::ResultStore;
+use multistride::kernels::library::{ensure_known_kernel, paper_kernels};
 use multistride::kernels::micro::UNROLL_SLOTS;
 use multistride::report::{self, figures, table::Table};
 use multistride::runtime::{oracle, ArtifactRegistry, Runtime};
@@ -36,20 +37,24 @@ fn main() {
     }
     let cmd = args[0].as_str();
     let opts = Opts::parse(&args[1..]);
+    // One result store per invocation: the memory tier spans every
+    // command `repro all` chains, so overlapping sweeps dedup in-process
+    // and the persistent tier carries results across invocations.
+    let store = opts.result_store();
     let result = match cmd {
         "table1" => table1(&opts),
         "table2" => table2(),
-        "figure2" => figure2(&opts, false),
-        "figure3" | "figure4" => figure3_4(&opts),
-        "figure5" => figure2(&opts, true),
-        "figure6" | "sweep" => figure6(&opts),
-        "figure7" => figure7(&opts),
-        "universe" => universe(&opts),
-        "tune" => tune(&opts),
+        "figure2" => figure2(&opts, &store, false),
+        "figure3" | "figure4" => figure3_4(&opts, &store),
+        "figure5" => figure2(&opts, &store, true),
+        "figure6" | "sweep" => figure6(&opts, &store),
+        "figure7" => figure7(&opts, &store),
+        "universe" => universe(&opts, &store),
+        "tune" => tune(&opts, &store),
         "native" => native(&opts),
         "validate" => validate(&opts),
-        "run" => run_config(&opts),
-        "all" => all(&opts),
+        "run" => run_config(&opts, &store),
+        "all" => all(&opts, &store),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -60,6 +65,12 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // The hit/dedup economy summary: how much engine work this
+    // invocation actually performed vs served from the store.
+    let stats = store.stats();
+    if result.is_ok() && stats.requests > 0 {
+        print!("{}", figures::render_exec_summary(&stats, store.dir()));
+    }
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -70,7 +81,8 @@ fn usage() {
     eprintln!(
         "usage: repro <command> [--machine coffee-lake|cascade-lake|zen2] \
          [--kernel NAME] [--smoke] [--max-total N] [--csv DIR] [--artifacts DIR] \
-         [--plans DIR] [--force] [--no-prefetch] [--config FILE]\n\
+         [--plans DIR] [--results DIR] [--cold] [--force] [--no-prefetch] \
+         [--config FILE]\n\
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
          sweep universe tune native validate all"
     );
@@ -92,6 +104,12 @@ struct Opts {
     plans: Option<PathBuf>,
     /// `repro tune --force`: bypass the plan cache and re-search.
     force: bool,
+    /// Result-store directory (default: `<artifacts>/results`).
+    results: Option<PathBuf>,
+    /// `--cold`: run against an ephemeral store — no persistent tier is
+    /// read or written, so nothing from previous invocations is served
+    /// (in-process dedup across this invocation's commands still applies).
+    cold: bool,
 }
 
 impl Opts {
@@ -107,14 +125,21 @@ impl Opts {
             prefetch: true,
             plans: None,
             force: false,
+            results: None,
+            cold: false,
         };
         let mut it = args.iter();
         while let Some(a) = it.next() {
             match a.as_str() {
                 "--machine" => {
                     let v = it.next().expect("--machine needs a value");
-                    o.machine = MachinePreset::from_name(v)
-                        .unwrap_or_else(|| panic!("unknown machine {v}"));
+                    o.machine = match MachinePreset::from_name_or_listing(v) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            eprintln!("error: {e}");
+                            std::process::exit(2);
+                        }
+                    };
                 }
                 "--kernel" => o.kernel = Some(it.next().expect("--kernel needs a value").clone()),
                 "--smoke" => o.smoke = true,
@@ -132,6 +157,10 @@ impl Opts {
                 "--plans" => {
                     o.plans = Some(PathBuf::from(it.next().expect("--plans needs a value")))
                 }
+                "--results" => {
+                    o.results = Some(PathBuf::from(it.next().expect("--results needs a value")))
+                }
+                "--cold" => o.cold = true,
                 "--force" => o.force = true,
                 "--no-prefetch" => o.prefetch = false,
                 other => {
@@ -139,6 +168,17 @@ impl Opts {
                     std::process::exit(2);
                 }
             }
+        }
+        // `--cold` means "no persistent tier at all"; silently ignoring
+        // an explicit `--results DIR` alongside it would leave the named
+        // directory untouched with no hint why.
+        if o.cold && o.results.is_some() {
+            eprintln!(
+                "error: --cold and --results are mutually exclusive \
+                 (--cold runs with no persistent result store; to force a \
+                 fresh populate of a store, delete its directory instead)"
+            );
+            std::process::exit(2);
         }
         o
     }
@@ -148,6 +188,18 @@ impl Opts {
             ScaleConfig::smoke()
         } else {
             ScaleConfig::default()
+        }
+    }
+
+    /// The invocation's result store: persistent under `--results DIR`
+    /// (default `<artifacts>/results`), or memory-only under `--cold`.
+    fn result_store(&self) -> ResultStore {
+        if self.cold {
+            return ResultStore::ephemeral();
+        }
+        match &self.results {
+            Some(dir) => ResultStore::persistent(dir),
+            None => ResultStore::default_under(&self.artifacts),
         }
     }
 }
@@ -210,7 +262,7 @@ fn table2() -> multistride::Result<()> {
     Ok(())
 }
 
-fn figure2(opts: &Opts, pow2: bool) -> multistride::Result<()> {
+fn figure2(opts: &Opts, store: &ResultStore, pow2: bool) -> multistride::Result<()> {
     let m = opts.machine.config();
     let scale = opts.scale();
     let title = if pow2 {
@@ -223,7 +275,7 @@ fn figure2(opts: &Opts, pow2: bool) -> multistride::Result<()> {
         UNROLL_SLOTS,
         if pow2 { "IS" } else { "is NOT" }
     );
-    let points = exp::figure2(m, scale, pow2);
+    let points = exp::figure2_on(store, m, scale, pow2);
     print!("{}", figures::render_micro_grid(&points, &title));
     if let Some(dir) = &opts.csv_dir {
         let name = if pow2 { "figure5.csv" } else { "figure2.csv" };
@@ -236,9 +288,9 @@ fn figure2(opts: &Opts, pow2: bool) -> multistride::Result<()> {
     Ok(())
 }
 
-fn figure3_4(opts: &Opts) -> multistride::Result<()> {
+fn figure3_4(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     let m = opts.machine.config();
-    let points = exp::figure3_4(m, opts.scale());
+    let points = exp::figure3_4_on(store, m, opts.scale());
     print!("{}", figures::render_stalls(&points));
     println!();
     print!("{}", figures::render_hit_ratios(&points));
@@ -252,28 +304,7 @@ fn figure3_4(opts: &Opts) -> multistride::Result<()> {
     Ok(())
 }
 
-/// Clean error (not the coordinator's backstop panic) on a typo'd
-/// `--kernel` name, listing the registered universe (names + family) so
-/// the user sees what *is* available. Shared by every kernel-scoped
-/// command.
-fn ensure_known_kernel(kernel: Option<&str>, budget: u64) -> multistride::Result<()> {
-    let Some(k) = kernel else { return Ok(()) };
-    if multistride::kernels::library::kernel_by_name(k, budget).is_some() {
-        return Ok(());
-    }
-    let mut listing = String::new();
-    for pk in multistride::kernels::library::all_kernels(budget) {
-        listing.push_str(&format!(
-            "\n  {:<12} [{}] {}",
-            pk.name,
-            if pk.extended { "extended" } else { "paper" },
-            pk.description
-        ));
-    }
-    multistride::bail!("unknown kernel {k}; the registered kernel universe is:{listing}")
-}
-
-fn figure6(opts: &Opts) -> multistride::Result<()> {
+fn figure6(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     let m = opts.machine.config();
     let budget = opts.scale().kernel_bytes;
     ensure_known_kernel(opts.kernel.as_deref(), budget)?;
@@ -285,7 +316,7 @@ fn figure6(opts: &Opts) -> multistride::Result<()> {
         println!("[hardware prefetching DISABLED for this sweep]");
     }
     for k in kernels {
-        let points = exp::figure6(m, &k, budget, opts.max_total, opts.prefetch);
+        let points = exp::figure6_on(store, m, &k, budget, opts.max_total, opts.prefetch);
         print!("{}", figures::render_kernel_sweep(&k, &points));
         if let Some(best) = exp::best_point(&points) {
             let single = points
@@ -314,7 +345,7 @@ fn figure6(opts: &Opts) -> multistride::Result<()> {
     Ok(())
 }
 
-fn figure7(opts: &Opts) -> multistride::Result<()> {
+fn figure7(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     let m = opts.machine.config();
     let budget = opts.scale().kernel_bytes;
     ensure_known_kernel(opts.kernel.as_deref(), budget)?;
@@ -324,7 +355,7 @@ fn figure7(opts: &Opts) -> multistride::Result<()> {
     };
     let mut all_rows = Vec::new();
     for k in kernels {
-        let rows = exp::figure7(m, &k, budget, opts.max_total);
+        let rows = exp::figure7_on(store, m, &k, budget, opts.max_total);
         print!("{}", figures::render_comparison(m.name, &rows));
         println!();
         all_rows.extend(rows);
@@ -354,7 +385,7 @@ fn figure7(opts: &Opts) -> multistride::Result<()> {
 /// `repro universe`: the registered kernel universe (family, nest depth,
 /// artifact availability) plus each kernel's derived variant-family
 /// throughput trajectory. `--kernel NAME` restricts both views.
-fn universe(opts: &Opts) -> multistride::Result<()> {
+fn universe(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     let m = opts.machine.config();
     let budget = opts.scale().kernel_bytes;
     let reg = ArtifactRegistry::new(&opts.artifacts);
@@ -383,8 +414,10 @@ fn universe(opts: &Opts) -> multistride::Result<()> {
     // With --kernel, simulate only that kernel's family (not the whole
     // universe followed by a filter).
     let points: Vec<exp::KernelPoint> = match opts.kernel.as_deref() {
-        Some(k) => exp::variant_sweep_for(m, budget, 2, opts.prefetch, &[k.to_string()]),
-        None => exp::variant_sweep(m, budget, 2, opts.prefetch),
+        Some(k) => {
+            exp::variant_sweep_for_on(store, m, budget, 2, opts.prefetch, &[k.to_string()])
+        }
+        None => exp::variant_sweep_on(store, m, budget, 2, opts.prefetch),
     };
     print!("{}", figures::render_variant_trajectory(&points));
     if let Some(dir) = &opts.csv_dir {
@@ -402,7 +435,7 @@ fn universe(opts: &Opts) -> multistride::Result<()> {
 /// persist to the plan cache (`--plans DIR`, default `<artifacts>/plans`)
 /// keyed by (spec hash, machine fingerprint, budget class); repeated
 /// invocations are served from the cache unless `--force`.
-fn tune(opts: &Opts) -> multistride::Result<()> {
+fn tune(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     use multistride::tune::PlanCache;
     let m = opts.machine.config();
     let budget = opts.scale().kernel_bytes;
@@ -419,7 +452,8 @@ fn tune(opts: &Opts) -> multistride::Result<()> {
     if !opts.prefetch {
         println!("[hardware prefetching DISABLED for this tuning run]");
     }
-    let outcomes = exp::tune_kernels(m, budget, opts.prefetch, &cache, opts.force, &kernels);
+    let outcomes =
+        exp::tune_kernels_on(store, m, budget, opts.prefetch, &cache, opts.force, &kernels);
     let mut rows = Vec::new();
     let mut failures = 0u32;
     for (name, out) in kernels.iter().zip(outcomes) {
@@ -584,24 +618,27 @@ fn validate(opts: &Opts) -> multistride::Result<()> {
     Ok(())
 }
 
-fn all(opts: &Opts) -> multistride::Result<()> {
+fn all(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     table1(opts)?;
     println!();
     table2()?;
     println!();
-    figure2(opts, false)?;
-    figure3_4(opts)?;
+    figure2(opts, store, false)?;
+    // figure3_4's points are a subset of figure2's grid: pure store hits.
+    figure3_4(opts, store)?;
     println!();
-    figure2(opts, true)?;
-    figure6(opts)?;
-    figure7(opts)?;
-    // The universe trajectory re-simulates the 4 family configs per kernel
-    // that figure6's broader sweep also covers — a small fraction of
-    // figure6's config grid, accepted to keep the drivers independent.
-    universe(opts)?;
+    figure2(opts, store, true)?;
+    figure6(opts, store)?;
+    // figure7 re-summarizes figure6's sweeps and universe re-visits the
+    // family configs figure6 covered; with the shared store both format
+    // from stored results instead of re-simulating the overlap.
+    figure7(opts, store)?;
+    universe(opts, store)?;
     // Consume (or, on first run, populate) the persistent plan cache: a
-    // re-run of `repro all` serves every kernel's tuned variant from disk.
-    tune(opts)?;
+    // re-run of `repro all` serves every kernel's tuned variant from
+    // disk, and the search's full-budget rung reads universe's stored
+    // measurements through the result store.
+    tune(opts, store)?;
     if ArtifactRegistry::new(&opts.artifacts).list().is_empty() {
         println!("(skipping validate: no artifacts built)");
     } else {
@@ -611,7 +648,7 @@ fn all(opts: &Opts) -> multistride::Result<()> {
 }
 
 /// `repro run --config FILE`: a TOML-driven kernel sweep.
-fn run_config(opts: &Opts) -> multistride::Result<()> {
+fn run_config(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     use multistride::config::ExperimentFile;
     let path = opts
         .config
@@ -642,7 +679,7 @@ fn run_config(opts: &Opts) -> multistride::Result<()> {
         machine.name,
         bytes_h(budget)
     );
-    let points = exp::figure6(machine, &kernel, budget, max_total, prefetch);
+    let points = exp::figure6_on(store, machine, &kernel, budget, max_total, prefetch);
     print!("{}", figures::render_kernel_sweep(&kernel, &points));
     if let Some(best) = exp::best_point(&points) {
         println!(

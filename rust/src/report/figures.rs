@@ -262,6 +262,35 @@ pub fn render_comparison(machine: &str, rows: &[ComparisonRow]) -> String {
     t.render()
 }
 
+/// One-line execution-layer economy summary (the `[exec]` line `repro`
+/// prints after every store-backed command; CI's store-smoke job greps
+/// the `store hits:` and `engine runs:` figures out of it, so keep those
+/// labels stable).
+pub fn render_exec_summary(stats: &crate::exec::ExecStats, dir: Option<&std::path::Path>) -> String {
+    let mut s = format!(
+        "[exec] sim points: {} requests, engine runs: {}, store hits: {} (mem {} / disk {}), deduped: {}, written: {}",
+        stats.requests,
+        stats.engine_runs,
+        stats.hits(),
+        stats.mem_hits,
+        stats.disk_hits,
+        stats.deduped,
+        stats.disk_writes,
+    );
+    if stats.corrupt_discards > 0 {
+        s.push_str(&format!(", corrupt discards: {}", stats.corrupt_discards));
+    }
+    if stats.verified_hits > 0 {
+        s.push_str(&format!(", debug-verified hits: {}", stats.verified_hits));
+    }
+    match dir {
+        Some(d) => s.push_str(&format!("; results dir: {}", d.display())),
+        None => s.push_str("; results dir: (none — cold/ephemeral store)"),
+    }
+    s.push('\n');
+    s
+}
+
 /// CSV rows for a micro grid (external plotting).
 pub fn micro_csv_rows(points: &[MicroPoint]) -> Vec<Vec<String>> {
     points

@@ -1,9 +1,10 @@
-//! The tuner's cost model: the warm-engine simulator itself.
+//! The tuner's cost model: the warm-engine simulator itself, read
+//! through the execution layer's result store.
 //!
-//! [`evaluate`] runs one `(kernel, config)` point through the exact §6
-//! kernel protocol the sweeps use (`coordinator::experiments::
-//! run_kernel_with`: default 4 KiB pages, footprint-based throughput) and
-//! additionally surfaces the counters a [`super::plan::TunedPlan`]
+//! [`evaluate_on`] runs one `(kernel, config)` point through the exact §6
+//! kernel protocol the sweeps use (the same [`crate::exec::SimPoint`] a
+//! sweep would enqueue: default 4 KiB pages, footprint-based throughput)
+//! and additionally surfaces the counters a [`super::plan::TunedPlan`]
 //! records — simulated accesses/s, per-level hit ratios, and the access
 //! count the search charges as its cost. Because the simulator is
 //! deterministic and the engine-reuse protocol is bit-identical to fresh
@@ -12,12 +13,20 @@
 //! `KernelPoint::throughput_gib` for the same point *exactly* — the
 //! tuner's predictions are the sweep's measurements, not an
 //! approximation of them.
+//!
+//! Sharing the store with the sweeps makes that identity *cheap*, not
+//! just true: a tune after a sweep at the same budget scores its
+//! full-budget rung from stored results, and repeated probe budgets
+//! (rung-1 probes re-visited by later requests) never re-run. Search
+//! *cost* accounting is unchanged by store hits — [`CostSample::
+//! sim_accesses`] comes from the result's counters, which are identical
+//! served or fresh — so plans stay byte-identical however warm the store
+//! was (`tests/tuner_determinism.rs`).
 
 use crate::config::MachineConfig;
 use crate::coordinator::experiments::EngineCache;
+use crate::exec::{ResultStore, SimPoint};
 use crate::kernels::library::kernel_by_name;
-use crate::sim::EngineConfig;
-use crate::trace::KernelTrace;
 use crate::transform::{is_feasible, transform, StridingConfig};
 use crate::{ensure, format_err, Result};
 
@@ -32,15 +41,31 @@ pub struct CostSample {
     pub l1_hit: f64,
     pub l2_hit: f64,
     pub l3_hit: f64,
-    /// Simulated accesses this run cost (charged to the search budget).
+    /// Simulated accesses this run cost (charged to the search budget;
+    /// identical whether the result was simulated or served).
     pub sim_accesses: u64,
 }
 
-/// Simulate one configuration of `kernel` at `budget` bytes on a warm
-/// per-worker engine. Errors on unknown kernels, untransformable or
+/// [`evaluate_on`] against a throwaway ephemeral store (compatibility
+/// surface; the search threads the caller's store through).
+pub fn evaluate(
+    engines: &mut EngineCache,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    config: StridingConfig,
+    prefetch: bool,
+) -> Result<CostSample> {
+    evaluate_on(&ResultStore::ephemeral(), engines, machine, kernel, budget, config, prefetch)
+}
+
+/// Score one configuration of `kernel` at `budget` bytes: served from
+/// `store` when present, simulated on the warm per-worker engine (and
+/// stored) when not. Errors on unknown kernels, untransformable or
 /// register-infeasible configurations — the search layer decides whether
 /// that prunes the candidate or merely skips a probe.
-pub fn evaluate(
+pub fn evaluate_on(
+    store: &ResultStore,
     engines: &mut EngineCache,
     machine: MachineConfig,
     kernel: &str,
@@ -58,13 +83,11 @@ pub fn evaluate(
         config.portion_unroll,
         machine.simd_registers
     );
-    let trace = KernelTrace::new(t);
-    // Same throughput convention as run_kernel_with: data size is the
-    // allocation (spec footprint), not per-access traffic.
-    let footprint = trace.transformed().spec.footprint();
-    let engine = engines
-        .engine_for(EngineConfig::new(machine).with_prefetch(prefetch).with_huge_pages(false));
-    let result = engine.run(trace.iter());
+    // Same throughput convention as run_kernel_on: data size is the
+    // allocation (transformed spec footprint), not per-access traffic.
+    let footprint = t.spec.footprint();
+    let point = SimPoint::kernel_from_spec(machine, kernel, budget, config, prefetch, &pk.spec);
+    let result = store.get_or_run(engines, &point)?;
     let cycles = result.counters.cycles;
     let accesses = result.counters.accesses;
     let accesses_per_sec = if cycles == 0 {
@@ -105,6 +128,25 @@ mod tests {
         assert!(sample.sim_accesses > 0);
         assert!(sample.accesses_per_sec > 0.0);
         assert!((0.0..=1.0).contains(&sample.l1_hit));
+    }
+
+    #[test]
+    fn warm_store_scores_are_bit_identical_and_free() {
+        // A sweep-primed store serves the cost model without engine work,
+        // and the sample is bit-identical to the cold one.
+        let m = coffee_lake();
+        let cfg = StridingConfig::new(4, 1);
+        let store = ResultStore::ephemeral();
+        let cold =
+            evaluate_on(&store, &mut EngineCache::new(), m, "mxv", 2 * MIB, cfg, true).unwrap();
+        let runs = store.stats().engine_runs;
+        assert_eq!(runs, 1);
+        let warm =
+            evaluate_on(&store, &mut EngineCache::new(), m, "mxv", 2 * MIB, cfg, true).unwrap();
+        assert_eq!(store.stats().engine_runs, runs, "served, not re-simulated");
+        assert_eq!(cold.throughput_gib.to_bits(), warm.throughput_gib.to_bits());
+        assert_eq!(cold.sim_accesses, warm.sim_accesses);
+        assert_eq!(cold.l3_hit.to_bits(), warm.l3_hit.to_bits());
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //!   and the identity hashes (spec content hash, machine fingerprint,
 //!   budget class) that define the staleness contract.
 //! * [`cost`] — the cost model: the warm-engine simulator itself, run
-//!   under the exact sweep protocol so predictions *are* measurements.
+//!   under the exact sweep protocol so predictions *are* measurements —
+//!   read through the [`crate::exec::ResultStore`], so points a sweep
+//!   (or an earlier search) already simulated are served, not re-run.
 //! * [`search`] — successive-halving over the derived variant family:
 //!   feasibility gate → reduced-budget probe rung → prune dominated
 //!   candidates → full-budget rung, with an audit trace of every visit.
@@ -33,7 +35,7 @@ pub mod search;
 
 pub use cache::PlanCache;
 pub use plan::{budget_class, machine_fingerprint, spec_hash, TunedPlan};
-pub use search::{probe_budget, search, SearchOutcome, SearchParams, SearchStep, Verdict};
+pub use search::{probe_budget, search, search_on, SearchOutcome, SearchParams, SearchStep, Verdict};
 
 use crate::config::MachineConfig;
 use crate::coordinator::experiments::EngineCache;
@@ -64,16 +66,33 @@ impl Tuner {
         Self { machine, budget, prefetch: true, params: SearchParams::default() }
     }
 
+    /// [`Tuner::tune_on`] against a throwaway ephemeral result store
+    /// (compatibility surface; the search still flows through the
+    /// execution layer, with in-search dedup only).
+    pub fn tune(
+        &self,
+        engines: &mut EngineCache,
+        cache: &PlanCache,
+        kernel: &str,
+        force: bool,
+    ) -> Result<TuneOutcome> {
+        self.tune_on(&crate::exec::ResultStore::ephemeral(), engines, cache, kernel, force)
+    }
+
     /// Serve a plan for `kernel`: a validated cache hit when possible,
     /// otherwise a cold search whose winner is persisted before
     /// returning. `force` bypasses the cache lookup (the search result
-    /// still overwrites the cached plan).
+    /// still overwrites the cached plan). The search's cost-model reads
+    /// flow through `store`, so points a sweep (or an earlier search)
+    /// already simulated are served, not re-run — the resulting plan is
+    /// byte-identical either way.
     ///
     /// Cache handling is deliberately forgiving: a stale plan (identity
     /// triple mismatch — see [`plan`]) or an unreadable/corrupt file is
     /// reported on stderr and re-tuned, never served and never fatal.
-    pub fn tune(
+    pub fn tune_on(
         &self,
+        store: &crate::exec::ResultStore,
         engines: &mut EngineCache,
         cache: &PlanCache,
         kernel: &str,
@@ -102,7 +121,8 @@ impl Tuner {
                 Err(e) => eprintln!("[tune] {e} — re-tuning"),
             }
         }
-        let out = search::search(
+        let out = search::search_on(
+            store,
             engines,
             self.machine,
             kernel,

@@ -228,7 +228,7 @@ impl TunedPlan {
     }
 }
 
-fn hex(v: u64) -> String {
+pub(crate) fn hex(v: u64) -> String {
     format!("{v:#018x}")
 }
 
@@ -247,7 +247,10 @@ fn parse_arrangement(s: &str) -> Result<Arrangement> {
     }
 }
 
-fn expect_field<'a>(lines: &mut std::str::Lines<'a>, key: &str) -> Result<&'a str> {
+// The field-walk helpers below are shared with `exec::format`, which
+// serializes simulation results under the same strict key=value +
+// checksum discipline (pub(crate) for that reason).
+pub(crate) fn expect_field<'a>(lines: &mut std::str::Lines<'a>, key: &str) -> Result<&'a str> {
     let l = lines
         .next()
         .ok_or_else(|| format_err!("plan truncated before field `{key}`"))?;
@@ -259,7 +262,7 @@ fn expect_field<'a>(lines: &mut std::str::Lines<'a>, key: &str) -> Result<&'a st
 // Deliberately no whitespace trimming anywhere below: the serializer
 // emits exact values, so any stray byte (e.g. a flipped trailing
 // newline) must fail the parse rather than be forgiven.
-fn parse_u64(s: &str) -> Result<u64> {
+pub(crate) fn parse_u64(s: &str) -> Result<u64> {
     let parsed = match s.strip_prefix("0x") {
         Some(h) => u64::from_str_radix(h, 16),
         None => s.parse(),
@@ -267,7 +270,7 @@ fn parse_u64(s: &str) -> Result<u64> {
     parsed.map_err(|e| format_err!("plan corrupt: bad number {s:?}: {e}"))
 }
 
-fn parse_u32(s: &str) -> Result<u32> {
+pub(crate) fn parse_u32(s: &str) -> Result<u32> {
     let v = parse_u64(s)?;
     u32::try_from(v).map_err(|_| format_err!("plan corrupt: {v} out of u32 range"))
 }
@@ -280,7 +283,7 @@ fn parse_bool(s: &str) -> Result<bool> {
     }
 }
 
-fn parse_f64(s: &str) -> Result<f64> {
+pub(crate) fn parse_f64(s: &str) -> Result<f64> {
     Ok(f64::from_bits(parse_u64(s)?))
 }
 
@@ -294,20 +297,22 @@ pub fn fnv64(bytes: &[u8]) -> u64 {
 }
 
 /// Structured FNV-1a: length-prefixed strings and little-endian integers,
-/// so field boundaries cannot alias.
-struct Fnv(u64);
+/// so field boundaries cannot alias. Shared with [`crate::exec`], whose
+/// `SimPoint` content keys are built from the same primitives (and must
+/// stay process-stable for the same reason plans must).
+pub(crate) struct Fnv(u64);
 
 impl Fnv {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self(0xcbf2_9ce4_8422_2325)
     }
-    fn bytes(&mut self, bytes: &[u8]) {
+    pub(crate) fn bytes(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
         }
     }
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.bytes(&v.to_le_bytes());
     }
     fn i64(&mut self, v: i64) {
@@ -316,6 +321,10 @@ impl Fnv {
     fn str(&mut self, s: &str) {
         self.u64(s.len() as u64);
         self.bytes(s.as_bytes());
+    }
+    /// The digest so far.
+    pub(crate) fn finish(&self) -> u64 {
+        self.0
     }
 }
 

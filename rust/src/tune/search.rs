@@ -35,6 +35,7 @@
 
 use crate::config::MachineConfig;
 use crate::coordinator::experiments::EngineCache;
+use crate::exec::ResultStore;
 use crate::kernels::library::kernel_by_name;
 use crate::transform::{variant_set_on, StridingConfig};
 use crate::{ensure, format_err, Result};
@@ -118,10 +119,29 @@ pub fn probe_budget(machine: &MachineConfig, budget: u64, params: &SearchParams)
     probe.max(params.min_probe_bytes).min(budget / 2).max(1)
 }
 
-/// Cold-search the variant family of `kernel` at `budget` bytes on
-/// `machine`, using the simulator as cost model. Deterministic; never
-/// consults or writes the plan cache (that is [`super::Tuner`]'s job).
+/// [`search_on`] against a throwaway ephemeral store (compatibility
+/// surface; every sample still flows through the execution layer).
 pub fn search(
+    engines: &mut EngineCache,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    prefetch: bool,
+    params: &SearchParams,
+) -> Result<SearchOutcome> {
+    search_on(&ResultStore::ephemeral(), engines, machine, kernel, budget, prefetch, params)
+}
+
+/// Cold-search the variant family of `kernel` at `budget` bytes on
+/// `machine`, using the simulator as cost model — every candidate score
+/// read through `store`, so rungs that revisit already-simulated points
+/// (a sweep at the same budget, an earlier search's probes) are served,
+/// not re-run. The search is deterministic *and store-oblivious*: hits
+/// are bit-identical to fresh simulations, so plans come out byte-equal
+/// however warm the store is. Never consults or writes the plan cache
+/// (that is [`super::Tuner`]'s job).
+pub fn search_on(
+    store: &ResultStore,
     engines: &mut EngineCache,
     machine: MachineConfig,
     kernel: &str,
@@ -165,7 +185,7 @@ pub fn search(
     } else {
         let mut scored: Vec<(StridingConfig, Option<f64>, u64)> = Vec::new();
         for &cfg in &live {
-            match cost::evaluate(engines, machine, kernel, probe, cfg, prefetch) {
+            match cost::evaluate_on(store, engines, machine, kernel, probe, cfg, prefetch) {
                 Ok(s) => {
                     probe_runs += 1;
                     sim_accesses += s.sim_accesses;
@@ -236,7 +256,7 @@ pub fn search(
     let mut full_runs = 0u32;
     let mut finals: Vec<(StridingConfig, cost::CostSample)> = Vec::new();
     for &cfg in &survivors {
-        let s = cost::evaluate(engines, machine, kernel, budget, cfg, prefetch)?;
+        let s = cost::evaluate_on(store, engines, machine, kernel, budget, cfg, prefetch)?;
         full_runs += 1;
         sim_accesses += s.sim_accesses;
         steps.push(SearchStep {

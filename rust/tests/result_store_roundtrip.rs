@@ -1,0 +1,321 @@
+//! Result-store wall: the persistent tier must be a *transparent* cache.
+//!
+//! Three properties pinned here, mirroring `plan_cache_roundtrip.rs` for
+//! the execution layer:
+//!
+//! * the `multistride-simresult v1` format round-trips **bit-exactly**
+//!   for randomized results (every counter, and the one float as IEEE
+//!   bits — NaN/±inf/−0.0 included), and the disk tier serves back the
+//!   exact bytes it stored;
+//! * corrupt, truncated, byte-flipped or mis-keyed shards degrade to
+//!   **misses** (recoverable, self-healing), never to panics or wrong
+//!   results;
+//! * a parallel `repro all`-shaped plan — micro grids and kernel
+//!   families with deliberate overlap — returns results bit-identical to
+//!   serial cold execution, and a warm store serves the same plan with
+//!   **zero** fresh engine runs.
+
+use std::path::PathBuf;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::EngineCache;
+use multistride::exec::format::{parse_result, serialize_result};
+use multistride::exec::{Planner, ResultStore, SimPoint};
+use multistride::kernels::micro::MicroOp;
+use multistride::sim::RunResult;
+use multistride::transform::StridingConfig;
+use multistride::util::Rng;
+
+const MIB: u64 = 1 << 20;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("multistride_store_rt_{tag}_{}", std::process::id()))
+}
+
+/// A randomized result: every field independently random so any
+/// swapped/dropped field in the format shows up as a mismatch.
+fn random_result(rng: &mut Rng) -> RunResult {
+    let freq_ghz = match rng.below(6) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => -0.0,
+        4 => f64::from_bits(rng.next_u64()),
+        _ => rng.f64() * 5.0,
+    };
+    // Mix magnitudes: small counts, u64::MAX-range counts, zeros.
+    let mut n = |_label: &str| match rng.below(4) {
+        0 => 0,
+        1 => rng.below(1 << 20),
+        2 => rng.next_u64() >> 20,
+        _ => rng.next_u64(),
+    };
+    RunResult {
+        counters: multistride::sim::Counters {
+            cycles: n("cycles"),
+            stalls_total: n("st"),
+            stalls_mem_any: n("sm"),
+            stalls_l1d_miss: n("s1"),
+            stalls_l2_miss: n("s2"),
+            stalls_l3_miss: n("s3"),
+            accesses: n("acc"),
+            bytes_read: n("br"),
+            bytes_written: n("bw"),
+            dram_demand_lines: n("ddl"),
+            prefetch_lines: n("pl"),
+            prefetch_merges: n("pm"),
+            tlb_cycles: n("tc"),
+        },
+        l1: multistride::mem::cache::CacheStats {
+            demand_hits: n("h"),
+            demand_misses: n("m"),
+            prefetch_hits: n("p"),
+            evictions: n("e"),
+            dirty_evictions: n("d"),
+            unused_prefetch_evictions: n("u"),
+            prefetch_installs: n("i"),
+        },
+        l2: multistride::mem::cache::CacheStats {
+            demand_hits: n("h"),
+            demand_misses: n("m"),
+            prefetch_hits: n("p"),
+            evictions: n("e"),
+            dirty_evictions: n("d"),
+            unused_prefetch_evictions: n("u"),
+            prefetch_installs: n("i"),
+        },
+        l3: multistride::mem::cache::CacheStats {
+            demand_hits: n("h"),
+            demand_misses: n("m"),
+            prefetch_hits: n("p"),
+            evictions: n("e"),
+            dirty_evictions: n("d"),
+            unused_prefetch_evictions: n("u"),
+            prefetch_installs: n("i"),
+        },
+        dram: multistride::mem::dram::DramStats {
+            reads: n("r"),
+            writes: n("w"),
+            row_hits: n("rh"),
+            row_misses: n("rm"),
+            busy_cycles: n("bc"),
+        },
+        wc: multistride::mem::writebuffer::WcStats {
+            stores: n("s"),
+            full_flushes: n("f"),
+            partial_flushes: n("p"),
+        },
+        tlb: multistride::mem::tlb::TlbStats {
+            accesses: n("a"),
+            l1_misses: n("l"),
+            walks: n("w"),
+        },
+        streamer: multistride::prefetch::streamer::StreamerStats {
+            observations: n("o"),
+            streams_allocated: n("sa"),
+            streams_evicted: n("se"),
+            streams_evicted_untrained: n("su"),
+            prefetches_issued: n("pi"),
+            page_carries: n("pc"),
+        },
+        freq_ghz,
+    }
+}
+
+#[test]
+fn randomized_format_roundtrip_is_bit_exact() {
+    let mut rng = Rng::new(0x5708E);
+    for i in 0..200 {
+        let r = random_result(&mut rng);
+        let key = rng.next_u64();
+        let s = serialize_result(key, &r);
+        let (got_key, q) = parse_result(&s)
+            .unwrap_or_else(|e| panic!("round {i}: parse failed: {e}\n{s}"));
+        assert_eq!(got_key, key, "round {i}");
+        assert_eq!(s, serialize_result(got_key, &q), "round {i}: not bit-identical");
+    }
+}
+
+#[test]
+fn disk_tier_serves_the_exact_bytes_it_stored() {
+    let dir = tmp("bytes");
+    std::fs::remove_dir_all(&dir).ok();
+    let point = SimPoint::micro(coffee_lake(), MicroOp::CopyNt, 4, MIB, true, false);
+    let store = ResultStore::persistent(&dir);
+    let fresh = store.get_or_run(&mut EngineCache::new(), &point).unwrap();
+    let shard = store.disk_path(point.key()).unwrap();
+    let on_disk = std::fs::read_to_string(&shard).unwrap();
+    assert_eq!(
+        on_disk,
+        serialize_result(point.key(), &fresh),
+        "shard bytes are the serialization of the fresh result"
+    );
+    // A second store (cold memory tier) re-reads and re-serializes to
+    // the identical bytes.
+    let reread = ResultStore::persistent(&dir);
+    let served = reread.get_or_run(&mut EngineCache::new(), &point).unwrap();
+    assert_eq!(on_disk, serialize_result(point.key(), &served));
+    assert_eq!(reread.stats().engine_runs, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_flipped_and_mis_keyed_shards_are_misses_and_self_heal() {
+    let dir = tmp("corrupt");
+    std::fs::remove_dir_all(&dir).ok();
+    let point = SimPoint::kernel(coffee_lake(), "mxv", MIB, StridingConfig::new(2, 1), true)
+        .unwrap();
+    let store = ResultStore::persistent(&dir);
+    let good = store.get_or_run(&mut EngineCache::new(), &point).unwrap();
+    let good_bytes = serialize_result(point.key(), &good);
+    let shard = store.disk_path(point.key()).unwrap();
+
+    // Exhaustive-ish truncation.
+    for cut in [0, 1, 10, good_bytes.len() / 2, good_bytes.len() - 1] {
+        std::fs::write(&shard, &good_bytes[..cut]).unwrap();
+        let s = ResultStore::persistent(&dir);
+        assert!(s.lookup(point.key()).is_none(), "cut at {cut} must miss");
+        assert_eq!(s.stats().corrupt_discards, 1, "cut at {cut}");
+    }
+
+    // Random single-byte flips: the checksum (or the UTF-8 read, or the
+    // strict field walk) must catch every one.
+    let mut rng = Rng::new(0xF11);
+    for round in 0..40 {
+        let mut bytes = good_bytes.clone().into_bytes();
+        let i = rng.below(bytes.len() as u64) as usize;
+        let flip = 1u8 << rng.below(8);
+        bytes[i] ^= flip;
+        if bytes == good_bytes.as_bytes() {
+            continue; // zero flip cannot happen (1<<k != 0), but stay safe
+        }
+        std::fs::write(&shard, &bytes).unwrap();
+        let s = ResultStore::persistent(&dir);
+        assert!(
+            s.lookup(point.key()).is_none(),
+            "round {round}: flipped bit {flip:#x} at byte {i} must miss"
+        );
+    }
+
+    // Mis-keyed: a valid shard copied under another point's path.
+    let other = SimPoint::kernel(coffee_lake(), "mxv", MIB, StridingConfig::new(4, 1), true)
+        .unwrap();
+    assert_ne!(point.key(), other.key());
+    let other_shard = store.disk_path(other.key()).unwrap();
+    std::fs::create_dir_all(other_shard.parent().unwrap()).unwrap();
+    std::fs::write(&shard, &good_bytes).unwrap();
+    std::fs::copy(&shard, &other_shard).unwrap();
+    let s = ResultStore::persistent(&dir);
+    assert!(s.lookup(other.key()).is_none(), "smuggled shard must not serve");
+
+    // Self-heal: a corrupted shard is rewritten by the next miss, and
+    // the healed result is bit-identical to the original.
+    std::fs::write(&shard, "garbage").unwrap();
+    let healing = ResultStore::persistent(&dir);
+    let healed = healing.get_or_run(&mut EngineCache::new(), &point).unwrap();
+    assert_eq!(serialize_result(point.key(), &healed), good_bytes);
+    assert_eq!(std::fs::read_to_string(&shard).unwrap(), good_bytes);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A `repro all`-shaped batch at unit scale: micro grid points (with the
+/// figure3_4 subset duplicated, as `repro all` requests it twice) plus
+/// kernel variant families at two portion levels (universe overlaps
+/// figure6, as in the real driver).
+fn repro_all_shaped_batch() -> Vec<SimPoint> {
+    let m = coffee_lake();
+    let mut points = Vec::new();
+    for prefetch in [true, false] {
+        for op in [MicroOp::LoadAligned, MicroOp::StoreNt, MicroOp::CopyAligned] {
+            for strides in [1, 4, 32] {
+                points.push(SimPoint::micro(m, op, strides, MIB, prefetch, false));
+            }
+        }
+        // The figure3_4 re-request of figure2's aligned-load series.
+        for strides in [1, 4, 32] {
+            points.push(SimPoint::micro(m, MicroOp::LoadAligned, strides, MIB, prefetch, false));
+        }
+    }
+    for kernel in ["mxv", "init", "3mm"] {
+        for s in [1u32, 2, 4, 8] {
+            for portion in [1u32, 2] {
+                let cfg = StridingConfig::new(s, portion);
+                // Only enqueue what a sweep would: transformable points.
+                if let Ok(p) = SimPoint::kernel(m, kernel, MIB, cfg, true) {
+                    if multistride::transform::transform(
+                        &multistride::kernels::library::kernel_by_name(kernel, MIB)
+                            .unwrap()
+                            .spec,
+                        cfg,
+                    )
+                    .is_ok()
+                    {
+                        points.push(p);
+                    }
+                }
+            }
+        }
+        // Universe re-visits the portion-2 family.
+        for s in [1u32, 2, 4, 8] {
+            let cfg = StridingConfig::new(s, 2);
+            if let Ok(p) = SimPoint::kernel(m, kernel, MIB, cfg, true) {
+                if multistride::transform::transform(
+                    &multistride::kernels::library::kernel_by_name(kernel, MIB).unwrap().spec,
+                    cfg,
+                )
+                .is_ok()
+                {
+                    points.push(p);
+                }
+            }
+        }
+    }
+    points
+}
+
+#[test]
+fn parallel_plan_matches_serial_cold_execution_bit_for_bit() {
+    let dir = tmp("parallel");
+    std::fs::remove_dir_all(&dir).ok();
+    let points = repro_all_shaped_batch();
+    let distinct: std::collections::HashSet<u64> = points.iter().map(|p| p.key()).collect();
+    assert!(
+        distinct.len() < points.len(),
+        "the batch must contain overlap to be repro-all-shaped"
+    );
+
+    let serial_store = ResultStore::ephemeral();
+    let serial = Planner::new(&serial_store).with_workers(1).run(&points).unwrap();
+    assert_eq!(serial_store.stats().engine_runs, distinct.len() as u64);
+
+    let par_store = ResultStore::persistent(&dir);
+    let parallel = Planner::new(&par_store).with_workers(8).run(&points).unwrap();
+    assert_eq!(par_store.stats().engine_runs, distinct.len() as u64);
+    for ((p, a), b) in points.iter().zip(&serial).zip(&parallel) {
+        assert_eq!(
+            serialize_result(p.key(), a),
+            serialize_result(p.key(), b),
+            "parallel vs serial diverged on {}",
+            p.label()
+        );
+    }
+
+    // Warm pass over the persistent tier: a fresh store instance serves
+    // the whole plan from disk with zero fresh engine runs, and the
+    // summary counters expose exactly that economy.
+    let warm_store = ResultStore::persistent(&dir);
+    let warm = Planner::new(&warm_store).with_workers(8).run(&points).unwrap();
+    let s = warm_store.stats();
+    assert_eq!(s.engine_runs, 0, "warm plan performs strictly fewer (zero) engine runs");
+    assert_eq!(s.disk_hits, distinct.len() as u64);
+    assert_eq!(s.deduped, (points.len() - distinct.len()) as u64);
+    for ((p, a), b) in points.iter().zip(&serial).zip(&warm) {
+        assert_eq!(
+            serialize_result(p.key(), a),
+            serialize_result(p.key(), b),
+            "warm vs cold diverged on {}",
+            p.label()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
