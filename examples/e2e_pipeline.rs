@@ -91,8 +91,10 @@ fn main() -> multistride::Result<()> {
     // bicg + conv + jacobi2d numeric validation.
     let r = rand_vec(m);
     let p = rand_vec(n);
-    let out =
-        rt.execute_f32("bicg", &[(&a, &[m as i64, n as i64]), (&r, &[m as i64]), (&p, &[n as i64])])?;
+    let out = rt.execute_f32(
+        "bicg",
+        &[(&a, &[m as i64, n as i64]), (&r, &[m as i64]), (&p, &[n as i64])],
+    )?;
     let (s_want, q_want) = oracle::bicg(&a, &r, &p, m, n);
     multistride::ensure!(oracle::max_rel_err(&out[0], &s_want) < 1e-3, "bicg s mismatch");
     multistride::ensure!(oracle::max_rel_err(&out[1], &q_want) < 1e-3, "bicg q mismatch");

@@ -18,7 +18,9 @@ fn main() {
         use multistride::coordinator::experiments::run_micro;
         [8u32, 16, 32]
             .iter()
-            .map(|&s| run_micro(coffee_lake(), MicroOp::LoadAligned, s, scale.micro_bytes, true, false))
+            .map(|&s| {
+                run_micro(coffee_lake(), MicroOp::LoadAligned, s, scale.micro_bytes, true, false)
+            })
             .collect::<Vec<_>>()
     });
     println!("\naligned reads, pow2 vs non-pow2 array (pf on):");
@@ -26,7 +28,10 @@ fn main() {
         let bad = pow2
             .iter()
             .find(|q| {
-                q.op == MicroOp::LoadAligned && q.strides == p.strides && q.prefetch && !q.interleaved
+                q.op == MicroOp::LoadAligned
+                    && q.strides == p.strides
+                    && q.prefetch
+                    && !q.interleaved
             })
             .unwrap();
         println!(

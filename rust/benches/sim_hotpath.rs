@@ -31,7 +31,12 @@ use multistride::sim::{Engine, EngineConfig};
 use multistride::trace::KernelTrace;
 use multistride::transform::{transform, StridingConfig};
 
-fn rate(results: &mut Vec<JsonScenario>, label: impl Into<String>, accesses: u64, f: impl FnOnce()) {
+fn rate(
+    results: &mut Vec<JsonScenario>,
+    label: impl Into<String>,
+    accesses: u64,
+    f: impl FnOnce(),
+) {
     let label = label.into();
     let t = Instant::now();
     f();

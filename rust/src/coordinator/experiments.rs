@@ -107,7 +107,8 @@ pub fn run_micro_with(
     prefetch: bool,
     interleaved: bool,
 ) -> MicroPoint {
-    run_micro_on(&ResultStore::ephemeral(), cache, machine, op, strides, bytes, prefetch, interleaved)
+    let store = ResultStore::ephemeral();
+    run_micro_on(&store, cache, machine, op, strides, bytes, prefetch, interleaved)
 }
 
 /// [`run_micro`] through a result store: served when present, simulated
@@ -358,7 +359,10 @@ pub fn kernel_points_on(
 /// driver covers the same range more sparsely past 12 where divisor pairs
 /// explode — override with `max_total` for the full grid).
 pub fn figure6_totals(max_total: u32) -> Vec<u32> {
-    (1..=max_total.min(12)).chain([16, 18, 20, 24, 30, 32, 36, 40, 48, 50]).filter(|&t| t <= max_total).collect()
+    (1..=max_total.min(12))
+        .chain([16, 18, 20, 24, 30, 32, 36, 40, 48, 50])
+        .filter(|&t| t <= max_total)
+        .collect()
 }
 
 /// Figure 6: sweep the striding optimization space of one isolated kernel.
@@ -410,7 +414,8 @@ pub fn run_point_reported(
     cfg: StridingConfig,
     prefetch: bool,
 ) -> Option<KernelPoint> {
-    run_point_reported_on(&ResultStore::ephemeral(), cache, machine, ctx, kernel, budget, cfg, prefetch)
+    let store = ResultStore::ephemeral();
+    run_point_reported_on(&store, cache, machine, ctx, kernel, budget, cfg, prefetch)
 }
 
 /// [`run_point_reported`] through a result store.
@@ -520,7 +525,12 @@ impl KernelSummary {
 }
 
 /// Summarize a kernel's sweep into the Figure 6 reference lines.
-pub fn summarize_kernel(machine: MachineConfig, kernel: &str, budget: u64, max_total: u32) -> KernelSummary {
+pub fn summarize_kernel(
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    max_total: u32,
+) -> KernelSummary {
     summarize_kernel_on(&ResultStore::ephemeral(), machine, kernel, budget, max_total)
 }
 
@@ -626,7 +636,12 @@ pub fn run_reference_on(
 
 /// Figure 7: compare the tuned multi-strided kernel against every
 /// applicable reference on one machine.
-pub fn figure7(machine: MachineConfig, kernel: &str, budget: u64, max_total: u32) -> Vec<ComparisonRow> {
+pub fn figure7(
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    max_total: u32,
+) -> Vec<ComparisonRow> {
     figure7_on(&ResultStore::ephemeral(), machine, kernel, budget, max_total)
 }
 
@@ -969,7 +984,12 @@ mod tests {
         // store the whole figure formats from stored results.
         let store = ResultStore::ephemeral();
         let m = coffee_lake();
-        let scale = ScaleConfig { micro_bytes: MIB, micro_pow2_bytes: MIB, kernel_bytes: MIB, repetitions: 1 };
+        let scale = ScaleConfig {
+            micro_bytes: MIB,
+            micro_pow2_bytes: MIB,
+            kernel_bytes: MIB,
+            repetitions: 1,
+        };
         let _grid = figure2_on(&store, m, scale, false);
         let runs = store.stats().engine_runs;
         let series = figure3_4_on(&store, m, scale);

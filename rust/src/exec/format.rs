@@ -14,6 +14,16 @@
 //! that was renamed, copied between shards, or otherwise detached from
 //! its key fails the load-time identity check and degrades to a miss —
 //! the same can-never-smuggle-a-stale-entry stance the plan cache takes.
+//!
+//! The module also defines the format's fixed-width **binary twin**
+//! ([`encode_result_bin`] / [`decode_result_bin`]): the same fields in
+//! the same order, each as a little-endian `u64`. It is the payload the
+//! segment tier ([`super::segment`]) packs — decoding is a bounds check
+//! plus [`RESULT_BIN_FIELDS`] byte-copies, so a memory-mapped store hit
+//! never walks text. Both encodings reconstruct the identical
+//! [`RunResult`] (`tests/result_store_roundtrip.rs` cross-checks them
+//! through re-serialization); the text form remains the interchange and
+//! legacy file-per-point representation.
 
 use crate::sim::RunResult;
 use crate::tune::plan::{expect_field, fnv64, hex, parse_f64, parse_u64};
@@ -169,6 +179,155 @@ pub fn parse_result(text: &str) -> Result<(u64, RunResult)> {
     Ok((key, RunResult { counters, l1, l2, l3, dram, wc, tlb, streamer, freq_ghz }))
 }
 
+/// Number of `u64` words in the binary encoding: the 13 core counters,
+/// 3 × 7 cache levels, 5 DRAM, 3 write-combining, 3 TLB, 6 streamer
+/// fields, and `freq_ghz` as its bit pattern. Mirrors the field order of
+/// [`serialize_result`] exactly.
+pub const RESULT_BIN_FIELDS: usize = 52;
+
+/// Byte length of the fixed-width binary encoding.
+pub const RESULT_BIN_BYTES: usize = RESULT_BIN_FIELDS * 8;
+
+/// The 52 field values in [`serialize_result`] order. Single source of
+/// truth for the binary layout: encode writes these words, decode reads
+/// them back positionally.
+fn field_words(r: &RunResult) -> [u64; RESULT_BIN_FIELDS] {
+    let c = &r.counters;
+    [
+        c.cycles,
+        c.stalls_total,
+        c.stalls_mem_any,
+        c.stalls_l1d_miss,
+        c.stalls_l2_miss,
+        c.stalls_l3_miss,
+        c.accesses,
+        c.bytes_read,
+        c.bytes_written,
+        c.dram_demand_lines,
+        c.prefetch_lines,
+        c.prefetch_merges,
+        c.tlb_cycles,
+        r.l1.demand_hits,
+        r.l1.demand_misses,
+        r.l1.prefetch_hits,
+        r.l1.evictions,
+        r.l1.dirty_evictions,
+        r.l1.unused_prefetch_evictions,
+        r.l1.prefetch_installs,
+        r.l2.demand_hits,
+        r.l2.demand_misses,
+        r.l2.prefetch_hits,
+        r.l2.evictions,
+        r.l2.dirty_evictions,
+        r.l2.unused_prefetch_evictions,
+        r.l2.prefetch_installs,
+        r.l3.demand_hits,
+        r.l3.demand_misses,
+        r.l3.prefetch_hits,
+        r.l3.evictions,
+        r.l3.dirty_evictions,
+        r.l3.unused_prefetch_evictions,
+        r.l3.prefetch_installs,
+        r.dram.reads,
+        r.dram.writes,
+        r.dram.row_hits,
+        r.dram.row_misses,
+        r.dram.busy_cycles,
+        r.wc.stores,
+        r.wc.full_flushes,
+        r.wc.partial_flushes,
+        r.tlb.accesses,
+        r.tlb.l1_misses,
+        r.tlb.walks,
+        r.streamer.observations,
+        r.streamer.streams_allocated,
+        r.streamer.streams_evicted,
+        r.streamer.streams_evicted_untrained,
+        r.streamer.prefetches_issued,
+        r.streamer.page_carries,
+        r.freq_ghz.to_bits(),
+    ]
+}
+
+/// Encode a result as [`RESULT_BIN_BYTES`] little-endian bytes. The
+/// point key is NOT part of the payload — the segment record frame
+/// carries it ([`super::segment`]), keeping the key check in the framing
+/// layer where the checksum lives.
+pub fn encode_result_bin(r: &RunResult) -> [u8; RESULT_BIN_BYTES] {
+    let mut out = [0u8; RESULT_BIN_BYTES];
+    for (slot, word) in out.chunks_exact_mut(8).zip(field_words(r)) {
+        slot.copy_from_slice(&word.to_le_bytes());
+    }
+    out
+}
+
+/// Decode the fixed-width binary encoding. Only the length is validated
+/// here — integrity is the framing checksum's job, which callers verify
+/// before decoding. Never panics on bad input.
+pub fn decode_result_bin(bytes: &[u8]) -> Result<RunResult> {
+    ensure!(
+        bytes.len() == RESULT_BIN_BYTES,
+        "binary result corrupt: {} bytes, expected {RESULT_BIN_BYTES}",
+        bytes.len()
+    );
+    let mut words = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact yields 8-byte slices")));
+    let mut next = move || words.next().expect("length checked above");
+    let counters = crate::sim::Counters {
+        cycles: next(),
+        stalls_total: next(),
+        stalls_mem_any: next(),
+        stalls_l1d_miss: next(),
+        stalls_l2_miss: next(),
+        stalls_l3_miss: next(),
+        accesses: next(),
+        bytes_read: next(),
+        bytes_written: next(),
+        dram_demand_lines: next(),
+        prefetch_lines: next(),
+        prefetch_merges: next(),
+        tlb_cycles: next(),
+    };
+    let mut cache_stats = || crate::mem::cache::CacheStats {
+        demand_hits: next(),
+        demand_misses: next(),
+        prefetch_hits: next(),
+        evictions: next(),
+        dirty_evictions: next(),
+        unused_prefetch_evictions: next(),
+        prefetch_installs: next(),
+    };
+    let (l1, l2, l3) = (cache_stats(), cache_stats(), cache_stats());
+    let dram = crate::mem::dram::DramStats {
+        reads: next(),
+        writes: next(),
+        row_hits: next(),
+        row_misses: next(),
+        busy_cycles: next(),
+    };
+    let wc = crate::mem::writebuffer::WcStats {
+        stores: next(),
+        full_flushes: next(),
+        partial_flushes: next(),
+    };
+    let tlb = crate::mem::tlb::TlbStats {
+        accesses: next(),
+        l1_misses: next(),
+        walks: next(),
+    };
+    let streamer = crate::prefetch::streamer::StreamerStats {
+        observations: next(),
+        streams_allocated: next(),
+        streams_evicted: next(),
+        streams_evicted_untrained: next(),
+        prefetches_issued: next(),
+        page_carries: next(),
+    };
+    let freq_ghz = f64::from_bits(next());
+    Ok(RunResult { counters, l1, l2, l3, dram, wc, tlb, streamer, freq_ghz })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +418,34 @@ mod tests {
             assert_eq!(q.freq_ghz.to_bits(), f.to_bits());
             assert_eq!(s, serialize_result(7, &q));
         }
+    }
+
+    #[test]
+    fn binary_twin_reconstructs_the_exact_text_serialization() {
+        let r = sample_result();
+        let bin = encode_result_bin(&r);
+        assert_eq!(bin.len(), RESULT_BIN_BYTES);
+        let q = decode_result_bin(&bin).expect("decodes");
+        assert_eq!(serialize_result(7, &r), serialize_result(7, &q));
+        // Distinct-valued sample: any field swap or offset slip in the
+        // binary layout shows up as a serialization mismatch above, and
+        // re-encoding must be byte-identical.
+        assert_eq!(bin, encode_result_bin(&q));
+    }
+
+    #[test]
+    fn binary_decode_rejects_wrong_lengths_and_preserves_nan_bits() {
+        let bin = encode_result_bin(&sample_result());
+        assert!(decode_result_bin(&bin[..RESULT_BIN_BYTES - 1]).is_err());
+        assert!(decode_result_bin(&[]).is_err());
+        let mut long = bin.to_vec();
+        long.push(0);
+        assert!(decode_result_bin(&long).is_err());
+
+        let mut r = sample_result();
+        r.freq_ghz = f64::from_bits(0x7FF8_0000_DEAD_BEEF); // NaN payload
+        let q = decode_result_bin(&encode_result_bin(&r)).unwrap();
+        assert_eq!(q.freq_ghz.to_bits(), 0x7FF8_0000_DEAD_BEEF);
     }
 
     #[test]

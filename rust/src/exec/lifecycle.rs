@@ -1,0 +1,538 @@
+//! Store lifecycle tooling: the library side of `repro store
+//! {stats,gc,verify,compact}`.
+//!
+//! Each operation works on a results *directory* (not a live
+//! [`super::ResultStore`]) and composes the segment tier's own
+//! primitives:
+//!
+//! * **stats** — one [`SegmentStore`] open plus a legacy-shard walk;
+//!   pure read (the only writes are the open's own self-healing).
+//! * **gc** — bounded eviction. Refused without an explicit bound (the
+//!   CLI enforces this): age (`--max-age-days`) drops records stamped
+//!   older than the cutoff, size (`--max-bytes`) evicts oldest-first
+//!   until the live payload fits. Evicted segment records become dead
+//!   bytes until `compact`; evicted legacy shards are deleted outright.
+//! * **verify** — two phases. Integrity: every live segment record must
+//!   validate and decode, every legacy shard must parse; failures are
+//!   dropped/reported (self-healing misses). Semantics: the canonical
+//!   experiment plan is re-simulated point by point and compared
+//!   bit-for-bit against what the store would serve — the release-build
+//!   equivalent of the debug-build verify-every-hit wall. Mismatches
+//!   are healed with the fresh result and reported as an error.
+//! * **compact** — folds legacy shards into segments (stamped with their
+//!   file mtime), rewrites live records into fresh segments, deletes the
+//!   old segments and the now-redundant legacy tree. This is the
+//!   explicit end of the PR-5 → segment migration; until it runs, old
+//!   directories serve through the read-only legacy fallback.
+//!
+//! Because a rebuild-from-scan resurrects gc'd records (the bytes are
+//! still there), eviction is durable only after `compact` — the docs
+//! and CLI recipe pair them. That is safe cache semantics either way:
+//! a resurrected record can only re-serve what a simulation would
+//! recompute.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::config::{MachineConfig, ScaleConfig};
+use crate::coordinator::experiments::{EngineCache, MICRO_STRIDES};
+use crate::coordinator::pool::{default_workers, parallel_map_with};
+use crate::kernels::library::kernel_by_name;
+use crate::kernels::micro::MicroOp;
+use crate::runtime::universe_names;
+use crate::transform::{transform, variant_configs};
+use crate::{ensure, format_err, Result};
+
+use super::format::{parse_result, serialize_result};
+use super::point::SimPoint;
+use super::segment::{unix_now, SegmentStore, DEFAULT_ROLL_BYTES};
+use super::store::ResultStore;
+
+/// A parsed `repro store` subcommand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreCommand {
+    Stats,
+    Gc { max_bytes: Option<u64>, max_age_days: Option<u64> },
+    Verify,
+    Compact,
+}
+
+/// The valid subcommand set, for error messages and usage text.
+pub const STORE_SUBCOMMANDS: &[&str] = &["stats", "gc", "verify", "compact"];
+
+/// Parse `repro store …` argv: the subcommand plus the store-specific
+/// flags, returning the leftover args for the generic option parser
+/// (`--results`, `--machine`, `--smoke`, …).
+pub fn parse_store_cli(args: &[String]) -> Result<(StoreCommand, Vec<String>)> {
+    let sub = args.first().ok_or_else(|| {
+        format_err!("store: missing subcommand (expected one of: {})", STORE_SUBCOMMANDS.join(", "))
+    })?;
+    let mut max_bytes = None;
+    let mut max_age_days = None;
+    let mut rest = Vec::new();
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--max-bytes" => {
+                let v = it.next().ok_or_else(|| format_err!("--max-bytes needs a value"))?;
+                max_bytes =
+                    Some(v.parse().map_err(|_| format_err!("--max-bytes: not a number: {v}"))?);
+            }
+            "--max-age-days" => {
+                let v = it.next().ok_or_else(|| format_err!("--max-age-days needs a value"))?;
+                max_age_days =
+                    Some(v.parse().map_err(|_| format_err!("--max-age-days: not a number: {v}"))?);
+            }
+            _ => rest.push(a.clone()),
+        }
+    }
+    let cmd = match sub.as_str() {
+        "stats" => StoreCommand::Stats,
+        "gc" => {
+            ensure!(
+                max_bytes.is_some() || max_age_days.is_some(),
+                "store gc refuses to run without an explicit bound: \
+                 pass --max-bytes N and/or --max-age-days N"
+            );
+            StoreCommand::Gc { max_bytes, max_age_days }
+        }
+        "verify" => StoreCommand::Verify,
+        "compact" => StoreCommand::Compact,
+        other => {
+            return Err(format_err!(
+                "store: unknown subcommand `{other}` (expected one of: {})",
+                STORE_SUBCOMMANDS.join(", ")
+            ))
+        }
+    };
+    if !matches!(cmd, StoreCommand::Gc { .. }) {
+        ensure!(
+            max_bytes.is_none() && max_age_days.is_none(),
+            "--max-bytes/--max-age-days only apply to `store gc`"
+        );
+    }
+    Ok((cmd, rest))
+}
+
+/// Directory-wide inventory, as `repro store stats` renders it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DirStats {
+    pub segments: u64,
+    pub segment_bytes: u64,
+    pub sealed_segments: u64,
+    pub live_records: u64,
+    pub live_bytes: u64,
+    pub dead_bytes: u64,
+    pub legacy_files: u64,
+    pub legacy_bytes: u64,
+    /// Whether the index file was usable (vs. rebuilt from scans).
+    pub index_loaded: bool,
+}
+
+/// Take stock of a results directory.
+pub fn dir_stats(dir: &Path) -> DirStats {
+    let seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+    let mut s = DirStats {
+        segments: seg.segment_count(),
+        segment_bytes: seg.segment_bytes(),
+        sealed_segments: seg.sealed_count(),
+        live_records: seg.entry_count(),
+        live_bytes: seg.live_bytes(),
+        dead_bytes: seg.dead_bytes(),
+        index_loaded: seg.index_loaded(),
+        ..DirStats::default()
+    };
+    walk_legacy(dir, |_p, m| {
+        s.legacy_files += 1;
+        s.legacy_bytes += m.len();
+    });
+    s
+}
+
+/// What `repro store gc` did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GcReport {
+    /// Segment records dropped from the index.
+    pub evicted_records: u64,
+    /// Legacy shard files deleted.
+    pub deleted_legacy: u64,
+    /// Live records remaining.
+    pub live_records: u64,
+    /// Live payload bytes remaining (segment + legacy).
+    pub live_bytes: u64,
+    /// Dead segment bytes a `compact` would reclaim.
+    pub reclaimable_bytes: u64,
+}
+
+/// Bounded eviction. At least one bound must be given (the CLI parser
+/// guarantees it; this function also refuses). Age first, then
+/// oldest-first down to the size bound, counting segment records and
+/// legacy shards against the same budget.
+pub fn gc(dir: &Path, max_bytes: Option<u64>, max_age_days: Option<u64>) -> Result<GcReport> {
+    ensure!(max_bytes.is_some() || max_age_days.is_some(), "gc needs an explicit bound");
+    let mut seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+    let mut report = GcReport::default();
+    // (path, stamp, bytes) for every legacy shard still standing.
+    let mut legacy: Vec<(PathBuf, u64, u64)> = Vec::new();
+    walk_legacy(dir, |p, m| {
+        legacy.push((p.to_path_buf(), mtime_secs(m), m.len()));
+    });
+
+    if let Some(days) = max_age_days {
+        let cutoff = unix_now().saturating_sub(days.saturating_mul(86_400));
+        for (key, loc) in seg.entries() {
+            if loc.stamp < cutoff {
+                seg.remove(key);
+                report.evicted_records += 1;
+            }
+        }
+        legacy.retain(|(p, stamp, _)| {
+            if *stamp < cutoff {
+                if std::fs::remove_file(p).is_ok() {
+                    report.deleted_legacy += 1;
+                }
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    if let Some(bound) = max_bytes {
+        enum Victim {
+            Record { key: u64, bytes: u64 },
+            Shard { at: usize, bytes: u64 },
+        }
+        let mut victims: Vec<(u64, Victim)> = seg
+            .entries()
+            .into_iter()
+            .map(|(key, loc)| (loc.stamp, Victim::Record { key, bytes: loc.len as u64 }))
+            .collect();
+        for (at, (_, stamp, bytes)) in legacy.iter().enumerate() {
+            victims.push((*stamp, Victim::Shard { at, bytes: *bytes }));
+        }
+        let mut total: u64 = victims
+            .iter()
+            .map(|(_, v)| match v {
+                Victim::Record { bytes, .. } | Victim::Shard { bytes, .. } => *bytes,
+            })
+            .sum();
+        victims.sort_unstable_by_key(|&(stamp, _)| stamp);
+        for (_, victim) in victims {
+            if total <= bound {
+                break;
+            }
+            match victim {
+                Victim::Record { key, bytes } => {
+                    if seg.remove(key) {
+                        report.evicted_records += 1;
+                        total -= bytes;
+                    }
+                }
+                Victim::Shard { at, bytes } => {
+                    if std::fs::remove_file(&legacy[at].0).is_ok() {
+                        report.deleted_legacy += 1;
+                    }
+                    total -= bytes;
+                }
+            }
+        }
+    }
+
+    seg.flush_index()?;
+    report.live_records = seg.entry_count();
+    report.live_bytes = seg.live_bytes();
+    walk_legacy(dir, |_p, m| report.live_bytes += m.len());
+    report.reclaimable_bytes = seg.dead_bytes();
+    Ok(report)
+}
+
+/// What `repro store verify` found.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VerifyReport {
+    /// Segment records that validated and decoded.
+    pub records_ok: u64,
+    /// Segment records dropped as corrupt (now misses).
+    pub records_corrupt: u64,
+    /// Legacy shards that parsed.
+    pub legacy_ok: u64,
+    /// Legacy shards that failed to parse (served as misses anyway).
+    pub legacy_corrupt: u64,
+    /// Canonical-plan points checked against a fresh simulation.
+    pub resimulated: u64,
+    /// … of which the stored bytes matched exactly.
+    pub verified: u64,
+    /// … of which diverged (healed with the fresh result; an error).
+    pub mismatched: u64,
+    /// … of which the store simply does not hold (not an error).
+    pub absent: u64,
+}
+
+impl VerifyReport {
+    /// A verify run is clean when nothing was corrupt and nothing
+    /// diverged from a fresh simulation.
+    pub fn is_clean(&self) -> bool {
+        self.records_corrupt == 0 && self.legacy_corrupt == 0 && self.mismatched == 0
+    }
+}
+
+/// The re-simulate-and-compare sweep (phase 1: integrity over every
+/// stored byte; phase 2: bit-exact comparison against fresh simulations
+/// of the canonical plan for `machine` at `scale`).
+pub fn verify(dir: &Path, machine: MachineConfig, scale: ScaleConfig) -> Result<VerifyReport> {
+    let mut report = VerifyReport::default();
+    {
+        let mut seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+        for (key, _) in seg.entries() {
+            match seg.lookup_result(key) {
+                Some(Ok(_)) => report.records_ok += 1,
+                Some(Err(e)) => {
+                    report.records_corrupt += 1;
+                    eprintln!("[store] corrupt record {key:#018x} dropped: {e}");
+                }
+                None => {}
+            }
+        }
+        seg.flush_index()?; // persist any drops (self-healed index)
+    }
+    walk_legacy(dir, |p, _m| {
+        let ok = std::fs::read_to_string(p).ok().and_then(|t| parse_result(&t).ok()).is_some();
+        if ok {
+            report.legacy_ok += 1;
+        } else {
+            report.legacy_corrupt += 1;
+            eprintln!("[store] corrupt legacy shard {} (serves as a miss)", p.display());
+        }
+    });
+
+    let store = ResultStore::persistent(dir);
+    let points = canonical_points(machine, scale);
+    report.resimulated = points.len() as u64;
+    enum Outcome {
+        Verified,
+        Mismatched(String),
+        Absent,
+    }
+    let outcomes = parallel_map_with(points, default_workers(), EngineCache::new, |engines, p| {
+        let Some(hit) = store.lookup(p.key()) else { return Ok(Outcome::Absent) };
+        let fresh = super::planner::simulate(engines, p)?;
+        if serialize_result(p.key(), &fresh) == serialize_result(p.key(), &hit) {
+            Ok(Outcome::Verified)
+        } else {
+            // Heal with the truth; still reported as a mismatch.
+            store.insert(p.key(), Arc::new(fresh));
+            Ok(Outcome::Mismatched(p.label()))
+        }
+    });
+    for outcome in outcomes {
+        match outcome? {
+            Outcome::Verified => report.verified += 1,
+            Outcome::Absent => report.absent += 1,
+            Outcome::Mismatched(label) => {
+                report.mismatched += 1;
+                eprintln!("[store] MISMATCH: stored result for {label} diverged (healed)");
+            }
+        }
+    }
+    store.flush();
+    Ok(report)
+}
+
+/// What `repro store compact` did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompactReport {
+    /// Live records rewritten into fresh segments.
+    pub rewritten: u64,
+    /// Records dropped during the rewrite (failed validation).
+    pub dropped: u64,
+    /// Legacy shards folded into the segment tier.
+    pub migrated_legacy: u64,
+    /// Legacy files deleted after migration.
+    pub deleted_legacy: u64,
+    /// On-disk bytes reclaimed.
+    pub reclaimed_bytes: u64,
+    /// Segments and bytes after compaction.
+    pub segments: u64,
+    pub segment_bytes: u64,
+}
+
+/// Fold legacy shards into the segment tier, rewrite live records into
+/// fresh segments, and delete the dead weight. The durable form of gc's
+/// eviction and the final step of the PR-5 → segment migration.
+pub fn compact(dir: &Path) -> Result<CompactReport> {
+    let mut seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+    let mut report = CompactReport::default();
+    let mut legacy: Vec<(PathBuf, u64, u64)> = Vec::new();
+    walk_legacy(dir, |p, m| legacy.push((p.to_path_buf(), mtime_secs(m), m.len())));
+    let legacy_bytes: u64 = legacy.iter().map(|(_, _, b)| b).sum();
+    for (path, stamp, _) in &legacy {
+        let Ok(text) = std::fs::read_to_string(path) else { continue };
+        let Ok((key, result)) = parse_result(&text) else { continue };
+        // The segment copy wins on conflict — identical content by
+        // determinism, and segments are the write tier.
+        if !seg.contains(key) {
+            seg.append_result(key, *stamp, &result)?;
+            report.migrated_legacy += 1;
+        }
+    }
+    let stats = seg.compact()?;
+    report.rewritten = stats.rewritten;
+    report.dropped = stats.dropped;
+    report.reclaimed_bytes = stats.reclaimed_bytes + legacy_bytes;
+    for (path, ..) in &legacy {
+        if std::fs::remove_file(path).is_ok() {
+            report.deleted_legacy += 1;
+        }
+    }
+    prune_empty_shard_dirs(dir);
+    report.segments = seg.segment_count();
+    report.segment_bytes = seg.segment_bytes();
+    Ok(report)
+}
+
+/// The canonical verification plan: the micro grids `repro all` stores
+/// (figure2's non-pow2 size and figure5's pow2 size, every op × stride ×
+/// prefetch setting) plus the kernel-universe variant family at the
+/// paper's default portion. Points for other machines or sweeps are
+/// covered by the integrity phase only.
+pub fn canonical_points(machine: MachineConfig, scale: ScaleConfig) -> Vec<SimPoint> {
+    let mut points = Vec::new();
+    for bytes in [scale.micro_bytes, scale.micro_pow2_bytes] {
+        for prefetch in [true, false] {
+            for op in MicroOp::all() {
+                for &s in &MICRO_STRIDES {
+                    points.push(SimPoint::micro(machine, op, s, bytes, prefetch, false));
+                    if op == MicroOp::StoreNt {
+                        points.push(SimPoint::micro(machine, op, s, bytes, prefetch, true));
+                    }
+                }
+            }
+        }
+    }
+    let budget = scale.kernel_bytes;
+    for name in universe_names(budget) {
+        let Some(pk) = kernel_by_name(&name, budget) else { continue };
+        for config in variant_configs(2) {
+            if transform(&pk.spec, config).is_ok() {
+                let p =
+                    SimPoint::kernel_from_spec(machine, &name, budget, config, true, &pk.spec);
+                points.push(p);
+            }
+        }
+    }
+    points
+}
+
+fn mtime_secs(m: &std::fs::Metadata) -> u64 {
+    m.modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Visit every legacy `<xx>/<16-hex-key>.simres` shard under `dir`.
+fn walk_legacy(dir: &Path, mut f: impl FnMut(&Path, &std::fs::Metadata)) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for sub in rd.flatten() {
+        let name = sub.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.len() != 2 || !name.bytes().all(|b| b.is_ascii_hexdigit()) {
+            continue;
+        }
+        let Ok(files) = std::fs::read_dir(sub.path()) else { continue };
+        for fe in files.flatten() {
+            let path = fe.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("simres") {
+                if let Ok(m) = fe.metadata() {
+                    f(&path, &m);
+                }
+            }
+        }
+    }
+}
+
+/// Best-effort removal of shard directories compaction emptied
+/// (`remove_dir` refuses non-empty ones, which is exactly right).
+fn prune_empty_shard_dirs(dir: &Path) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for sub in rd.flatten() {
+        let name = sub.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.len() == 2 && name.bytes().all(|b| b.is_ascii_hexdigit()) {
+            let _ = std::fs::remove_dir(sub.path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn cli_parses_every_subcommand_and_passes_leftovers_through() {
+        let (cmd, rest) = parse_store_cli(&args(&["stats", "--results", "x"])).unwrap();
+        assert_eq!(cmd, StoreCommand::Stats);
+        assert_eq!(rest, args(&["--results", "x"]));
+
+        let (cmd, rest) =
+            parse_store_cli(&args(&["gc", "--max-bytes", "1024", "--smoke"])).unwrap();
+        assert_eq!(cmd, StoreCommand::Gc { max_bytes: Some(1024), max_age_days: None });
+        assert_eq!(rest, args(&["--smoke"]));
+
+        let (cmd, _) = parse_store_cli(&args(&["gc", "--max-age-days", "30"])).unwrap();
+        assert_eq!(cmd, StoreCommand::Gc { max_bytes: None, max_age_days: Some(30) });
+
+        assert_eq!(parse_store_cli(&args(&["verify"])).unwrap().0, StoreCommand::Verify);
+        assert_eq!(parse_store_cli(&args(&["compact"])).unwrap().0, StoreCommand::Compact);
+    }
+
+    #[test]
+    fn cli_unknown_subcommand_lists_the_valid_set() {
+        for bad in [&["frobnicate"][..], &[][..]] {
+            let e = parse_store_cli(&args(bad)).unwrap_err().to_string();
+            for sub in STORE_SUBCOMMANDS {
+                assert!(e.contains(sub), "error {e:?} must list {sub}");
+            }
+        }
+    }
+
+    #[test]
+    fn cli_gc_refuses_to_run_without_an_explicit_bound() {
+        let e = parse_store_cli(&args(&["gc"])).unwrap_err().to_string();
+        assert!(e.contains("refuses"), "got: {e}");
+        assert!(e.contains("--max-bytes") && e.contains("--max-age-days"), "got: {e}");
+        // …and the bounds are rejected where they make no sense.
+        assert!(parse_store_cli(&args(&["stats", "--max-bytes", "1"])).is_err());
+        assert!(parse_store_cli(&args(&["gc", "--max-bytes", "NaN"])).is_err());
+        assert!(parse_store_cli(&args(&["gc", "--max-bytes"])).is_err());
+    }
+
+    #[test]
+    fn canonical_plan_covers_both_micro_sizes_and_the_universe() {
+        let scale = ScaleConfig::smoke();
+        let points = canonical_points(crate::config::coffee_lake(), scale);
+        assert!(points.len() > 200, "got {}", points.len());
+        use crate::exec::point::Workload;
+        let pow2 = scale.micro_pow2_bytes;
+        let micro_pow2 = points
+            .iter()
+            .filter(|p| matches!(p.workload, Workload::Micro { bytes, .. } if bytes == pow2))
+            .count();
+        assert!(micro_pow2 >= MicroOp::all().len() * MICRO_STRIDES.len() * 2);
+        let kernels = points
+            .iter()
+            .filter(|p| matches!(p.workload, Workload::Kernel { .. }))
+            .count();
+        assert!(kernels > 0, "universe kernels must be in the canonical plan");
+        // Content keys must be unique across the plan.
+        let mut keys: Vec<u64> = points.iter().map(|p| p.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), points.len());
+    }
+}

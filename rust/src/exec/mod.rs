@@ -13,13 +13,22 @@
 //!   content hash × variant × machine fingerprint × prefetch ×
 //!   translation regime), built on the tuner's identity machinery.
 //! * [`store`] — the [`ResultStore`]: an in-memory tier for in-process
-//!   reuse plus a persistent tier under `<artifacts>/results/` (sharded
-//!   by key prefix, atomic writes, corrupt shard = miss). Exposes
-//!   [`ExecStats`] so runs can report their hit/dedup economy.
-//! * [`format`] — the bit-exact `multistride-simresult v1` file format.
+//!   reuse plus a persistent tier under `<artifacts>/results/`, packed
+//!   into append-only segment files (legacy PR-5 file-per-point shards
+//!   stay readable as a fallback). Exposes [`ExecStats`] so runs can
+//!   report their hit/dedup economy.
+//! * [`segment`] — the segment tier itself: checksummed record frames,
+//!   the rebuildable `index.msidx`, memory-mapped reads (default-on
+//!   `mmap` feature) with a positioned-read fallback, and compaction.
+//! * [`format`] — the bit-exact `multistride-simresult v1` text format
+//!   and its fixed-width binary twin (the segment record payload).
 //! * [`planner`] — [`Planner`]: batch dedup + scheduling over the
 //!   existing warm-engine worker pool, and [`simulate`], the single
 //!   place a point becomes an engine run.
+//! * [`lifecycle`] — directory-wide tooling behind `repro store
+//!   {stats,gc,verify,compact}`: stats, bounded eviction, the
+//!   re-simulate-and-compare verification sweep, and compaction (which
+//!   also folds legacy shards into segments).
 //!
 //! Consumers (`coordinator::experiments`, `tune::cost`) are thin
 //! plan-builders and result-formatters around this layer; the CLI picks
@@ -29,8 +38,10 @@
 //! assert exactly that. See ARCHITECTURE.md §Execution layer.
 
 pub mod format;
+pub mod lifecycle;
 pub mod planner;
 pub mod point;
+pub mod segment;
 pub mod store;
 
 pub use planner::{simulate, Planner};

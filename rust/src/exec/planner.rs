@@ -17,8 +17,11 @@
 //! `tests/golden_determinism.rs` pins).
 //!
 //! [`simulate`] is the single place a [`SimPoint`] becomes an engine
-//! run; both the planner and the store's single-point
-//! [`ResultStore::get_or_run`] path go through it.
+//! run; the planner, the store's single-point
+//! [`ResultStore::get_or_run`] path, and `lifecycle::verify`'s
+//! re-simulate-and-compare sweep all go through it. Misses write
+//! through to the store's segment tier (`exec::segment`), so a batch's
+//! results persist as packed records, not a file per point.
 
 use std::collections::HashMap;
 use std::sync::Arc;

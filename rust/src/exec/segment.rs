@@ -1,0 +1,921 @@
+//! Append-only segment files: the packed persistent tier of the result
+//! store.
+//!
+//! PR 5's disk tier paid a file-open-read-parse round trip per
+//! [`super::SimPoint`] — fine at figure scale, hopeless at the
+//! million-point scale the ROADMAP's serving daemon needs. This module
+//! packs records into sequentially-laid-out segments instead, the same
+//! burst-friendly-layout move the paper makes for DRAM:
+//!
+//! ```text
+//! <results>/seg-0000.bin   8-byte magic, then back-to-back records
+//! <results>/seg-0001.bin   … (a new segment starts when one reaches
+//! <results>/index.msidx        the roll size)
+//! ```
+//!
+//! **Record frame** (all integers little-endian):
+//!
+//! ```text
+//! key: u64 | stamp: u64 (unix seconds) | len: u32 | payload | fnv64: u64
+//! ```
+//!
+//! The checksum covers header + payload, so torn writes, bit flips and
+//! key/payload mismatches are all one failure mode: the record does not
+//! validate and the point degrades to a self-healing miss. The payload
+//! is [`super::format::encode_result_bin`]'s fixed-width encoding —
+//! serving a hit is checksum + 52 word copies, no text walk.
+//!
+//! **Index** (`index.msidx`): a flat binary map `point_key → (segment,
+//! offset, len, stamp)` plus per-segment scan coverage, FNV-checksummed
+//! and written atomically (tmp + rename) when the in-memory state is
+//! dirty. The index is a pure cache of what a segment scan would find:
+//! [`SegmentStore::open`] loads it once, distrusts anything implausible
+//! (bad checksum, entries past a segment's scanned coverage, segments
+//! that shrank) and rebuilds the missing knowledge by scanning exactly
+//! the uncovered byte ranges. A scan stops at the first invalid record
+//! and **seals** the segment — the writer never appends past damage; it
+//! rolls to a fresh segment instead, which is what makes a torn tail
+//! self-healing rather than contagious.
+//!
+//! **Reads** are zero-copy where the platform allows: segments are
+//! memory-mapped (default-on `mmap` cargo feature; raw `libc` bindings,
+//! the crate takes no dependencies) and a hit validates its checksum in
+//! place. With `--no-default-features`, or past the mapped length of a
+//! segment that grew after mapping, the same bytes come from a
+//! positioned file read — both paths serve identical bytes.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::sim::RunResult;
+use crate::tune::plan::fnv64;
+use crate::{ensure, Result};
+
+use super::format::{decode_result_bin, encode_result_bin};
+
+/// First bytes of every segment file; doubles as the format version.
+pub const SEGMENT_MAGIC: [u8; 8] = *b"MSSEG01\n";
+
+/// First bytes of the index file.
+pub const INDEX_MAGIC: [u8; 8] = *b"MSIDX01\n";
+
+/// Index file name inside the results directory.
+pub const INDEX_FILE: &str = "index.msidx";
+
+/// Default segment roll size. At today's ~444-byte records a million
+/// points pack into a handful of segments, each mapped once.
+pub const DEFAULT_ROLL_BYTES: u64 = 64 << 20;
+
+/// key + stamp + len prefix.
+const RECORD_HEADER_BYTES: usize = 20;
+
+/// Trailing FNV-1a checksum.
+const RECORD_TRAILER_BYTES: usize = 8;
+
+/// Scan sanity cap: a length prefix beyond this is treated as garbage
+/// rather than chased across the file.
+const MAX_PAYLOAD_BYTES: usize = 1 << 20;
+
+/// Canonical file name of segment `id`.
+pub fn segment_file_name(id: u32) -> String {
+    format!("seg-{id:04}.bin")
+}
+
+fn parse_segment_name(name: &std::ffi::OsStr) -> Option<u32> {
+    let digits = name.to_str()?.strip_prefix("seg-")?.strip_suffix(".bin")?;
+    if digits.len() < 4 || digits.len() > 9 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Seconds since the UNIX epoch — the record stamp gc ages against.
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Where a live record lives, as the index maps it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Loc {
+    /// Segment id (`seg-NNNN.bin`).
+    pub seg: u32,
+    /// Byte offset of the record frame inside the segment.
+    pub offset: u64,
+    /// Total frame length (header + payload + checksum).
+    pub len: u32,
+    /// Unix seconds at append time; gc's age signal.
+    pub stamp: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SegMeta {
+    /// Current file length in bytes.
+    len: u64,
+    /// Bytes known to hold valid records (from the index or a scan).
+    covered: u64,
+    /// A scan hit invalid bytes at `covered`; never append here again.
+    sealed: bool,
+}
+
+struct SegmentWriter {
+    id: u32,
+    file: fs::File,
+    len: u64,
+}
+
+/// What [`SegmentStore::compact`] did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompactStats {
+    /// Live records rewritten into fresh segments.
+    pub rewritten: u64,
+    /// Records that failed validation during the rewrite and were dropped.
+    pub dropped: u64,
+    /// On-disk bytes reclaimed by deleting the old segments.
+    pub reclaimed_bytes: u64,
+}
+
+/// One directory of segment files plus its index, owned exclusively by
+/// the opener. All mutation is in-memory except record appends (written
+/// immediately, unbuffered) and [`SegmentStore::flush_index`].
+pub struct SegmentStore {
+    dir: PathBuf,
+    roll_bytes: u64,
+    map: HashMap<u64, Loc>,
+    segments: BTreeMap<u32, SegMeta>,
+    readers: HashMap<u32, SegmentReader>,
+    writer: Option<SegmentWriter>,
+    /// Floor for new writer segments; compaction raises it so rewritten
+    /// records never land in a segment scheduled for deletion.
+    min_writer_seg: u32,
+    dirty: bool,
+    open_corruption: u64,
+    index_loaded: bool,
+}
+
+impl SegmentStore {
+    /// Open (or implicitly create) the segment store under `dir`. Never
+    /// fails: a missing directory is an empty store, and any damage —
+    /// corrupt index, torn records, shrunken segments — is absorbed by
+    /// rescanning and counted in [`SegmentStore::take_open_corruption`].
+    pub fn open(dir: impl Into<PathBuf>, roll_bytes: u64) -> Self {
+        let mut st = SegmentStore {
+            dir: dir.into(),
+            roll_bytes: roll_bytes.max(1),
+            map: HashMap::new(),
+            segments: BTreeMap::new(),
+            readers: HashMap::new(),
+            writer: None,
+            min_writer_seg: 0,
+            dirty: false,
+            open_corruption: 0,
+            index_loaded: false,
+        };
+        if let Ok(rd) = fs::read_dir(&st.dir) {
+            for entry in rd.flatten() {
+                if let Some(id) = parse_segment_name(&entry.file_name()) {
+                    let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
+                    st.segments.insert(id, SegMeta { len, covered: 0, sealed: false });
+                }
+            }
+        }
+        match load_index(&st.dir.join(INDEX_FILE)) {
+            Ok(None) => {}
+            Ok(Some(idx)) => {
+                st.index_loaded = true;
+                let mut trusted: HashMap<u32, u64> = HashMap::new();
+                for (id, covered, sealed) in idx.segs {
+                    if let Some(meta) = st.segments.get_mut(&id) {
+                        if covered <= meta.len {
+                            meta.covered = covered;
+                            meta.sealed = sealed;
+                            trusted.insert(id, covered);
+                        } else {
+                            // The segment shrank under the index: the
+                            // index's offsets are fiction, rescan it.
+                            st.open_corruption += 1;
+                            st.dirty = true;
+                        }
+                    }
+                }
+                for (key, loc) in idx.entries {
+                    let end = loc.offset.saturating_add(loc.len as u64);
+                    let ok = matches!(trusted.get(&loc.seg), Some(&cov) if end <= cov);
+                    if ok {
+                        st.map.insert(key, loc);
+                    } else {
+                        // Entry points at a missing/distrusted segment or
+                        // past its coverage; a scan below re-derives the
+                        // truth.
+                        st.dirty = true;
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!(
+                    "[exec] corrupt segment index under {}: {e} — rebuilding from segment scans",
+                    st.dir.display()
+                );
+                st.open_corruption += 1;
+                st.dirty = true;
+            }
+        }
+        let ids: Vec<u32> = st.segments.keys().copied().collect();
+        for id in ids {
+            let meta = *st.segments.get(&id).expect("listed above");
+            if meta.sealed || meta.covered >= meta.len {
+                continue;
+            }
+            let scan = scan_segment(&st.segment_path(id), id, meta.covered);
+            for (key, loc) in scan.entries {
+                st.map.insert(key, loc);
+            }
+            let m = st.segments.get_mut(&id).expect("listed above");
+            m.covered = scan.covered;
+            if !scan.clean {
+                m.sealed = true;
+                st.open_corruption += 1;
+            }
+            st.dirty = true;
+        }
+        st
+    }
+
+    /// Directory this store owns.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn segment_path(&self, id: u32) -> PathBuf {
+        self.dir.join(segment_file_name(id))
+    }
+
+    /// Number of live (indexed) records.
+    pub fn entry_count(&self) -> u64 {
+        self.map.len() as u64
+    }
+
+    /// Total frame bytes of live records.
+    pub fn live_bytes(&self) -> u64 {
+        self.map.values().map(|l| l.len as u64).sum()
+    }
+
+    pub fn segment_count(&self) -> u64 {
+        self.segments.len() as u64
+    }
+
+    pub fn segment_bytes(&self) -> u64 {
+        self.segments.values().map(|m| m.len).sum()
+    }
+
+    pub fn sealed_count(&self) -> u64 {
+        self.segments.values().filter(|m| m.sealed).count() as u64
+    }
+
+    /// Bytes not attributable to live records or file headers: dead
+    /// (removed, superseded or damaged) weight compaction reclaims.
+    pub fn dead_bytes(&self) -> u64 {
+        let overhead = self.segment_count() * SEGMENT_MAGIC.len() as u64;
+        self.segment_bytes().saturating_sub(self.live_bytes() + overhead)
+    }
+
+    /// Whether open() found a usable index (vs. rebuilding from scans).
+    pub fn index_loaded(&self) -> bool {
+        self.index_loaded
+    }
+
+    /// Corruption events absorbed while opening; resets the counter.
+    pub fn take_open_corruption(&mut self) -> u64 {
+        std::mem::take(&mut self.open_corruption)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    /// Snapshot of every live entry (arbitrary order).
+    pub fn entries(&self) -> Vec<(u64, Loc)> {
+        self.map.iter().map(|(&k, &l)| (k, l)).collect()
+    }
+
+    /// Physical location of a live record, for tests and tooling.
+    pub fn locate(&self, key: u64) -> Option<(PathBuf, u64, u32)> {
+        let loc = self.map.get(&key)?;
+        Some((self.segment_path(loc.seg), loc.offset, loc.len))
+    }
+
+    /// Serve a record: `None` for an absent key, `Some(Err(_))` when the
+    /// stored bytes fail validation — in which case the entry is dropped
+    /// so the point degrades to a self-healing miss instead of erroring
+    /// forever.
+    pub fn lookup_result(&mut self, key: u64) -> Option<Result<RunResult>> {
+        let loc = *self.map.get(&key)?;
+        match self.read_checked(key, loc, |rec| decode_result_bin(rec.payload)) {
+            Ok(r) => Some(Ok(r)),
+            Err(e) => {
+                self.map.remove(&key);
+                self.dirty = true;
+                Some(Err(e))
+            }
+        }
+    }
+
+    /// Append a result under its point key. One unbuffered write per
+    /// record: every append is immediately visible to concurrently-open
+    /// stores, and a torn write can only damage the final record, which
+    /// the next scan seals off.
+    pub fn append_result(&mut self, key: u64, stamp: u64, r: &RunResult) -> Result<()> {
+        self.append_payload(key, stamp, &encode_result_bin(r))
+    }
+
+    fn append_payload(&mut self, key: u64, stamp: u64, payload: &[u8]) -> Result<()> {
+        self.ensure_writer()?;
+        let rec = encode_record(key, stamp, payload);
+        let w = self.writer.as_mut().expect("ensure_writer left a writer");
+        let offset = w.len;
+        w.file.write_all(&rec)?;
+        w.len += rec.len() as u64;
+        let (id, new_len) = (w.id, w.len);
+        if new_len >= self.roll_bytes {
+            self.writer = None;
+        }
+        let meta = self.segments.get_mut(&id).expect("writer segment is registered");
+        meta.len = new_len;
+        meta.covered = new_len;
+        self.map.insert(key, Loc { seg: id, offset, len: rec.len() as u32, stamp });
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// Drop a key from the index. The record bytes stay until the next
+    /// compaction — and until then a rebuild-from-scan would resurrect
+    /// the entry, which is safe for a cache (it can only re-serve what a
+    /// simulation would recompute).
+    pub fn remove(&mut self, key: u64) -> bool {
+        let hit = self.map.remove(&key).is_some();
+        if hit {
+            self.dirty = true;
+        }
+        hit
+    }
+
+    /// Rewrite every live record into fresh segments (numbered after the
+    /// current maximum) and delete the old files. A kill at any point
+    /// leaves a directory [`SegmentStore::open`] recovers: before the
+    /// index flush the old segments still hold every record; after it
+    /// the orphaned old files are either gone or rediscovered by the
+    /// scan as duplicates of the rewritten entries.
+    pub fn compact(&mut self) -> Result<CompactStats> {
+        let mut entries: Vec<(u64, Loc)> = self.map.iter().map(|(&k, &l)| (k, l)).collect();
+        entries.sort_unstable_by_key(|&(_, l)| (l.seg, l.offset));
+        let old_ids: Vec<u32> = self.segments.keys().copied().collect();
+        let old_bytes: u64 = self.segments.values().map(|m| m.len).sum();
+        self.writer = None;
+        self.min_writer_seg = old_ids.last().map_or(0, |&hi| hi + 1);
+        let mut stats = CompactStats::default();
+        for (key, loc) in entries {
+            match self.read_checked(key, loc, |rec| Ok((rec.stamp, rec.payload.to_vec()))) {
+                Ok((stamp, payload)) => {
+                    self.append_payload(key, stamp, &payload)?;
+                    stats.rewritten += 1;
+                }
+                Err(_) => {
+                    self.map.remove(&key);
+                    stats.dropped += 1;
+                }
+            }
+        }
+        for id in &old_ids {
+            self.segments.remove(id);
+            self.readers.remove(id);
+        }
+        self.dirty = true;
+        self.flush_index()?;
+        for id in &old_ids {
+            let _ = fs::remove_file(self.segment_path(*id));
+        }
+        self.min_writer_seg = 0;
+        let new_bytes: u64 = self.segments.values().map(|m| m.len).sum();
+        stats.reclaimed_bytes = old_bytes.saturating_sub(new_bytes);
+        Ok(stats)
+    }
+
+    /// Write the index (atomically, tmp + rename) if anything changed.
+    pub fn flush_index(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        fs::create_dir_all(&self.dir)?;
+        let mut out = Vec::with_capacity(32 + self.segments.len() * 13 + self.map.len() * 32);
+        out.extend_from_slice(&INDEX_MAGIC);
+        out.extend_from_slice(&(self.segments.len() as u64).to_le_bytes());
+        for (&id, m) in &self.segments {
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&m.covered.to_le_bytes());
+            out.push(u8::from(m.sealed));
+        }
+        out.extend_from_slice(&(self.map.len() as u64).to_le_bytes());
+        for (&key, loc) in &self.map {
+            out.extend_from_slice(&key.to_le_bytes());
+            out.extend_from_slice(&loc.seg.to_le_bytes());
+            out.extend_from_slice(&loc.offset.to_le_bytes());
+            out.extend_from_slice(&loc.len.to_le_bytes());
+            out.extend_from_slice(&loc.stamp.to_le_bytes());
+        }
+        let sum = fnv64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        let tmp = self.dir.join(format!("{INDEX_FILE}.tmp{}", std::process::id()));
+        fs::write(&tmp, &out)?;
+        fs::rename(&tmp, self.dir.join(INDEX_FILE))?;
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Validate and read the record at `loc`, handing the parsed frame
+    /// to `f`. Zero-copy when the segment is memory-mapped.
+    fn read_checked<T>(
+        &mut self,
+        key: u64,
+        loc: Loc,
+        f: impl FnOnce(&RawRecord<'_>) -> Result<T>,
+    ) -> Result<T> {
+        let path = self.segment_path(loc.seg);
+        let reader = match self.readers.entry(loc.seg) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(v) => v.insert(SegmentReader::open(&path)?),
+        };
+        reader.with_bytes(loc.offset, loc.len as usize, |bytes| {
+            let (rec, total) = validate_record(bytes)?;
+            ensure!(total == bytes.len(), "record frame length disagrees with the index");
+            ensure!(
+                rec.key == key,
+                "record key {:#018x} does not match index key {key:#018x}",
+                rec.key
+            );
+            f(&rec)
+        })?
+    }
+
+    /// Make sure `self.writer` targets an appendable segment: the
+    /// highest clean, unsealed, unfull one, or a fresh id past both the
+    /// maximum and `min_writer_seg`.
+    fn ensure_writer(&mut self) -> Result<()> {
+        if let Some(w) = &self.writer {
+            if w.len < self.roll_bytes {
+                return Ok(());
+            }
+            self.writer = None;
+        }
+        fs::create_dir_all(&self.dir)?;
+        let reuse = self.segments.iter().next_back().and_then(|(&id, m)| {
+            let ok = id >= self.min_writer_seg
+                && !m.sealed
+                && m.covered == m.len
+                && m.len < self.roll_bytes;
+            ok.then_some(id)
+        });
+        let id = reuse.unwrap_or_else(|| {
+            let next = self.segments.keys().next_back().map_or(0, |&hi| hi + 1);
+            next.max(self.min_writer_seg)
+        });
+        let path = self.segment_path(id);
+        let mut file = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        let mut len = file.metadata()?.len();
+        if len == 0 {
+            file.write_all(&SEGMENT_MAGIC)?;
+            len = SEGMENT_MAGIC.len() as u64;
+        }
+        let meta = self.segments.entry(id).or_insert(SegMeta { len: 0, covered: 0, sealed: false });
+        meta.len = len;
+        meta.covered = len;
+        self.writer = Some(SegmentWriter { id, file, len });
+        Ok(())
+    }
+}
+
+/// A validated record frame borrowed from segment bytes.
+struct RawRecord<'a> {
+    key: u64,
+    stamp: u64,
+    payload: &'a [u8],
+}
+
+fn encode_record(key: u64, stamp: u64, payload: &[u8]) -> Vec<u8> {
+    let mut rec =
+        Vec::with_capacity(RECORD_HEADER_BYTES + payload.len() + RECORD_TRAILER_BYTES);
+    rec.extend_from_slice(&key.to_le_bytes());
+    rec.extend_from_slice(&stamp.to_le_bytes());
+    rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    rec.extend_from_slice(payload);
+    let sum = fnv64(&rec);
+    rec.extend_from_slice(&sum.to_le_bytes());
+    rec
+}
+
+/// Validate one record at the start of `bytes` (which may extend past
+/// it); returns the parsed frame plus its total on-disk length. Framing
+/// damage of any kind — truncation, implausible length, checksum
+/// mismatch — is one recoverable error.
+fn validate_record(bytes: &[u8]) -> Result<(RawRecord<'_>, usize)> {
+    ensure!(
+        bytes.len() >= RECORD_HEADER_BYTES + RECORD_TRAILER_BYTES,
+        "record truncated: {} bytes",
+        bytes.len()
+    );
+    let len = u32::from_le_bytes(bytes[16..20].try_into().expect("4 bytes")) as usize;
+    ensure!(len <= MAX_PAYLOAD_BYTES, "record payload length {len} implausible");
+    let total = RECORD_HEADER_BYTES + len + RECORD_TRAILER_BYTES;
+    ensure!(bytes.len() >= total, "record truncated mid-payload");
+    let body = &bytes[..RECORD_HEADER_BYTES + len];
+    let want =
+        u64::from_le_bytes(bytes[RECORD_HEADER_BYTES + len..total].try_into().expect("8 bytes"));
+    ensure!(fnv64(body) == want, "record checksum mismatch");
+    let key = u64::from_le_bytes(bytes[0..8].try_into().expect("8 bytes"));
+    let stamp = u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes"));
+    let payload = &bytes[RECORD_HEADER_BYTES..RECORD_HEADER_BYTES + len];
+    Ok((RawRecord { key, stamp, payload }, total))
+}
+
+struct Scan {
+    entries: Vec<(u64, Loc)>,
+    covered: u64,
+    clean: bool,
+}
+
+/// Walk records from byte `from` (0 = validate the magic first) to the
+/// end of the segment. Stops at the first invalid record: everything
+/// before it is trusted, everything after is unreachable garbage the
+/// caller seals off.
+fn scan_segment(path: &Path, id: u32, from: u64) -> Scan {
+    let Ok(bytes) = fs::read(path) else {
+        return Scan { entries: Vec::new(), covered: from, clean: false };
+    };
+    let mut off = from as usize;
+    if off == 0 {
+        if bytes.len() < SEGMENT_MAGIC.len() || bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+            return Scan { entries: Vec::new(), covered: 0, clean: false };
+        }
+        off = SEGMENT_MAGIC.len();
+    }
+    let mut entries = Vec::new();
+    loop {
+        if off >= bytes.len() {
+            return Scan { entries, covered: off as u64, clean: true };
+        }
+        match validate_record(&bytes[off..]) {
+            Ok((rec, total)) => {
+                entries.push((
+                    rec.key,
+                    Loc { seg: id, offset: off as u64, len: total as u32, stamp: rec.stamp },
+                ));
+                off += total;
+            }
+            Err(_) => return Scan { entries, covered: off as u64, clean: false },
+        }
+    }
+}
+
+struct IndexContents {
+    segs: Vec<(u32, u64, bool)>,
+    entries: Vec<(u64, Loc)>,
+}
+
+/// Strictly parse the index file. `Ok(None)` when absent; any anomaly —
+/// bad checksum, bad magic, truncation, trailing bytes — is an `Err`
+/// the caller answers with a full rescan.
+fn load_index(path: &Path) -> Result<Option<IndexContents>> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    ensure!(bytes.len() >= INDEX_MAGIC.len() + 8, "index truncated");
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(sum_bytes.try_into().expect("8 bytes"));
+    ensure!(fnv64(body) == want, "index checksum mismatch");
+    let mut cur = Cursor { bytes: body, at: 0 };
+    ensure!(cur.take(INDEX_MAGIC.len())? == &INDEX_MAGIC[..], "index magic mismatch");
+    let n_segs = cur.u64()?;
+    let mut segs = Vec::new();
+    for _ in 0..n_segs {
+        segs.push((cur.u32()?, cur.u64()?, cur.u8()? != 0));
+    }
+    let n_entries = cur.u64()?;
+    let mut entries = Vec::with_capacity(usize::try_from(n_entries).unwrap_or(0).min(1 << 24));
+    for _ in 0..n_entries {
+        let key = cur.u64()?;
+        let seg = cur.u32()?;
+        let offset = cur.u64()?;
+        let len = cur.u32()?;
+        let stamp = cur.u64()?;
+        entries.push((key, Loc { seg, offset, len, stamp }));
+    }
+    ensure!(cur.at == body.len(), "index has trailing bytes");
+    Ok(Some(IndexContents { segs, entries }))
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.bytes.len() - self.at >= n, "index truncated");
+        let s = &self.bytes[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Read-side handle on one segment: the file plus, when the `mmap`
+/// feature is on and the platform supports it, a whole-file read-only
+/// mapping taken at open time.
+struct SegmentReader {
+    file: fs::File,
+    #[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
+    mapped: Option<mm::Mmap>,
+}
+
+impl SegmentReader {
+    fn open(path: &Path) -> Result<Self> {
+        let file = fs::File::open(path)?;
+        #[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
+        let reader = {
+            let mapped = mm::map_file(&file);
+            SegmentReader { file, mapped }
+        };
+        #[cfg(not(all(feature = "mmap", unix, target_pointer_width = "64")))]
+        let reader = SegmentReader { file };
+        Ok(reader)
+    }
+
+    /// Hand `f` the `len` bytes at `offset`: straight out of the mapping
+    /// when they fall inside it, otherwise via a positioned file read
+    /// (the fallback build, or bytes appended after the mapping was
+    /// taken).
+    fn with_bytes<R>(&self, offset: u64, len: usize, f: impl FnOnce(&[u8]) -> R) -> Result<R> {
+        #[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
+        if let Some(m) = &self.mapped {
+            let start = usize::try_from(offset).unwrap_or(usize::MAX);
+            if let Some(end) = start.checked_add(len) {
+                if end <= m.len() {
+                    return Ok(f(&m.as_slice()[start..end]));
+                }
+            }
+        }
+        let mut buf = vec![0u8; len];
+        self.read_exact_at(offset, &mut buf)?;
+        Ok(f(&buf))
+    }
+
+    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            self.file.read_exact_at(buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut file = &self.file;
+            file.seek(SeekFrom::Start(offset))?;
+            file.read_exact(buf)?;
+        }
+        Ok(())
+    }
+}
+
+/// Minimal read-only `mmap` over the C library std already links on
+/// unix. The crate is dependency-free by policy, so this stands in for
+/// `memmap2`; the non-mmap build path proves nothing above depends on
+/// it.
+#[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
+mod mm {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 0x1;
+    const MAP_SHARED: i32 = 0x1;
+
+    extern "C" {
+        fn mmap(addr: *mut u8, len: usize, prot: i32, flags: i32, fd: i32, offset: i64)
+            -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    /// A read-only mapping of a file's length at map time. Appends after
+    /// mapping extend the file, not the mapping; callers fall back to
+    /// file reads past `len`.
+    pub struct Mmap {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ and never mutated or remapped for
+    // its lifetime; concurrent reads of immutable bytes are safe.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            // SAFETY: ptr..ptr+len is a live PROT_READ mapping owned by
+            // self; unmapped only on drop.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: exactly the region mmap returned.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+
+    /// Map `file` read-only; `None` (callers use file reads) for empty
+    /// files or on any mmap failure.
+    pub fn map_file(file: &File) -> Option<Mmap> {
+        let len = usize::try_from(file.metadata().ok()?.len()).ok()?;
+        if len == 0 {
+            return None;
+        }
+        // SAFETY: null addr lets the kernel pick; fd is open for read;
+        // failure returns MAP_FAILED (-1), checked below.
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            return None;
+        }
+        Some(Mmap { ptr, len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("multistride_seg_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn payload(i: u64) -> Vec<u8> {
+        (0..48u64).map(|j| (i.wrapping_mul(31).wrapping_add(j) & 0xFF) as u8).collect()
+    }
+
+    #[test]
+    fn record_frame_roundtrips_and_rejects_tampering() {
+        let rec = encode_record(0xAB, 1234, &payload(7));
+        let (raw, total) = validate_record(&rec).expect("valid");
+        assert_eq!((raw.key, raw.stamp, total), (0xAB, 1234, rec.len()));
+        assert_eq!(raw.payload, &payload(7)[..]);
+        for cut in [0, 1, RECORD_HEADER_BYTES, rec.len() - 1] {
+            assert!(validate_record(&rec[..cut]).is_err(), "cut at {cut}");
+        }
+        for flip in [0, 8, 16, RECORD_HEADER_BYTES + 3, rec.len() - 1] {
+            let mut bad = rec.clone();
+            bad[flip] ^= 0x40;
+            assert!(validate_record(&bad).is_err(), "flip at {flip}");
+        }
+    }
+
+    #[test]
+    fn scan_recovers_without_index_and_truncation_seals_the_tail() {
+        let dir = test_dir("scan");
+        let mut st = SegmentStore::open(&dir, DEFAULT_ROLL_BYTES);
+        for i in 0..5u64 {
+            st.append_payload(i, 100 + i, &payload(i)).unwrap();
+        }
+        let (seg_path, ..) = st.locate(0).unwrap();
+        drop(st); // no flush_index call: recovery must come from the scan
+
+        let mut st = SegmentStore::open(&dir, DEFAULT_ROLL_BYTES);
+        assert!(!st.index_loaded());
+        assert_eq!((st.entry_count(), st.take_open_corruption()), (5, 0));
+
+        // Tear the final record: earlier records survive, the segment is
+        // sealed, and the next append rolls to a fresh segment.
+        let bytes = fs::read(&seg_path).unwrap();
+        fs::write(&seg_path, &bytes[..bytes.len() - 5]).unwrap();
+        let mut st = SegmentStore::open(&dir, DEFAULT_ROLL_BYTES);
+        assert_eq!((st.entry_count(), st.take_open_corruption()), (4, 1));
+        assert_eq!(st.sealed_count(), 1);
+        assert!(st.locate(4).is_none());
+        st.append_payload(4, 104, &payload(4)).unwrap();
+        let (new_seg, ..) = st.locate(4).unwrap();
+        assert_ne!(new_seg, seg_path, "writer must not touch a sealed segment");
+        assert_eq!(st.entry_count(), 5);
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn index_roundtrip_and_corrupt_index_fall_back_to_scan() {
+        let dir = test_dir("index");
+        let mut st = SegmentStore::open(&dir, DEFAULT_ROLL_BYTES);
+        for i in 0..6u64 {
+            st.append_payload(i, i, &payload(i)).unwrap();
+        }
+        st.flush_index().unwrap();
+        let want = {
+            let mut e = st.entries();
+            e.sort_unstable();
+            e
+        };
+        drop(st);
+
+        let mut st = SegmentStore::open(&dir, DEFAULT_ROLL_BYTES);
+        assert!(st.index_loaded());
+        assert_eq!(st.take_open_corruption(), 0);
+        let mut got = st.entries();
+        got.sort_unstable();
+        assert_eq!(got, want);
+
+        // Any damage to the index byte stream must fall back to a scan
+        // that re-derives the identical entries.
+        let idx = dir.join(INDEX_FILE);
+        let mut bytes = fs::read(&idx).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        fs::write(&idx, &bytes).unwrap();
+        let mut st = SegmentStore::open(&dir, DEFAULT_ROLL_BYTES);
+        assert!(!st.index_loaded());
+        assert_eq!(st.take_open_corruption(), 1);
+        let mut got = st.entries();
+        got.sort_unstable();
+        assert_eq!(got, want);
+
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn small_roll_size_spreads_records_across_segments() {
+        let dir = test_dir("roll");
+        let mut st = SegmentStore::open(&dir, 200);
+        for i in 0..8u64 {
+            st.append_payload(i, i, &payload(i)).unwrap();
+        }
+        assert!(st.segment_count() >= 3, "roll=200 must split 8 × ~76-byte records");
+        assert_eq!(st.entry_count(), 8);
+        drop(st);
+        let st = SegmentStore::open(&dir, 200);
+        assert_eq!(st.entry_count(), 8);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_reclaims_removed_records_and_survives_reopen() {
+        let dir = test_dir("compact");
+        let mut st = SegmentStore::open(&dir, 256);
+        for i in 0..10u64 {
+            st.append_payload(i, i, &payload(i)).unwrap();
+        }
+        for i in 0..5u64 {
+            assert!(st.remove(i * 2));
+        }
+        let before = st.segment_bytes();
+        let stats = st.compact().unwrap();
+        assert_eq!((stats.rewritten, stats.dropped), (5, 0));
+        assert!(stats.reclaimed_bytes > 0);
+        assert!(st.segment_bytes() < before);
+        drop(st);
+
+        let mut st = SegmentStore::open(&dir, 256);
+        assert!(st.index_loaded());
+        assert_eq!(st.entry_count(), 5);
+        for i in 0..10u64 {
+            assert_eq!(st.contains(i), i % 2 == 1, "key {i}");
+        }
+        // The compacted bytes must still validate end to end.
+        for i in [1u64, 3, 5, 7, 9] {
+            let loc = *st.map.get(&i).unwrap();
+            let got = st.read_checked(i, loc, |rec| Ok(rec.payload.to_vec())).unwrap();
+            assert_eq!(got, payload(i));
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

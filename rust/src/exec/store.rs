@@ -7,16 +7,24 @@
 //! full rung re-visits `universe`'s measurements) from re-simulation to a
 //! map probe.
 //!
-//! Tier 2 is a persistent directory (by default `<artifacts>/results/`),
-//! sharded by the first key byte (`results/<xx>/<16-hex-key>.simres`) so
-//! no directory grows unboundedly. Writes are write-through and atomic
-//! (temp file + rename, unique temp names per process); a shard that is
-//! corrupt, truncated, renamed or from an old format version fails
-//! [`super::format::parse_result`]'s checksum/identity checks and
-//! degrades to a **miss** — the same recoverability contract as
+//! Tier 2 is persistent (by default `<artifacts>/results/`), packed into
+//! append-only **segment files** with a per-directory index — see
+//! [`super::segment`] for the on-disk format and recovery contract.
+//! Writes are write-through appends; reads validate the per-record
+//! checksum in place (memory-mapped under the default `mmap` feature)
+//! instead of the PR-5 file-open-read-parse round trip per point. Any
+//! damage — torn record, corrupt index, mis-keyed bytes — degrades to a
+//! **miss**, the same recoverability contract as
 //! [`crate::tune::cache::PlanCache`]. Disk *write* failures are reported
 //! on stderr and tolerated (persistence is an optimization; losing it
 //! must never fail an experiment).
+//!
+//! The PR-5 sharded file-per-point format
+//! (`results/<xx>/<16-hex-key>.simres`) remains readable as a **legacy
+//! fallback tier**: a key absent from the segments is probed there, so
+//! old stores keep serving with zero engine runs. New results are only
+//! ever appended to segments, and `repro store compact` folds legacy
+//! shards in wholesale — that pair is the transparent migration path.
 //!
 //! Safety net: the simulator is deterministic, so a store hit must be
 //! bit-identical to a fresh simulation. Debug builds re-simulate every
@@ -33,11 +41,12 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::experiments::EngineCache;
 use crate::sim::RunResult;
-use crate::Result;
+use crate::{format_err, Result};
 
 use super::format::{parse_result, serialize_result};
 use super::planner::simulate;
 use super::point::SimPoint;
+use super::segment::{unix_now, SegmentStore, DEFAULT_ROLL_BYTES};
 
 /// Counter snapshot of one store's traffic (all monotonically increasing
 /// over the store's lifetime).
@@ -48,8 +57,12 @@ pub struct ExecStats {
     pub requests: u64,
     /// Hits served from the in-memory tier.
     pub mem_hits: u64,
-    /// Hits served from the persistent tier (promoted to memory).
+    /// Hits served from the persistent tier (promoted to memory),
+    /// segment and legacy combined.
     pub disk_hits: u64,
+    /// The subset of `disk_hits` served by legacy file-per-point shards
+    /// (a migrated directory should drive this to zero).
+    pub legacy_hits: u64,
     /// Requests that found nothing and simulated.
     pub misses: u64,
     /// Duplicate points inside one batch, served from the first
@@ -78,6 +91,7 @@ struct Counters {
     requests: AtomicU64,
     mem_hits: AtomicU64,
     disk_hits: AtomicU64,
+    legacy_hits: AtomicU64,
     misses: AtomicU64,
     deduped: AtomicU64,
     engine_runs: AtomicU64,
@@ -93,6 +107,8 @@ pub struct ResultStore {
     mem: Mutex<HashMap<u64, Arc<RunResult>>>,
     /// Persistent tier root; `None` = memory-only (ephemeral) store.
     dir: Option<PathBuf>,
+    /// Segment tier over `dir`; present exactly when `dir` is.
+    seg: Option<Mutex<SegmentStore>>,
     stats: Counters,
 }
 
@@ -101,18 +117,36 @@ impl ResultStore {
     /// on disk. What `--cold` gives the CLI, and what the compatibility
     /// wrappers in `coordinator::experiments` use.
     pub fn ephemeral() -> Self {
-        Self { mem: Mutex::new(HashMap::new()), dir: None, stats: Counters::default() }
-    }
-
-    /// Store with a persistent tier rooted at `dir` (created lazily on
-    /// first write; a missing directory just means every disk probe
-    /// misses).
-    pub fn persistent(dir: impl Into<PathBuf>) -> Self {
         Self {
             mem: Mutex::new(HashMap::new()),
-            dir: Some(dir.into()),
+            dir: None,
+            seg: None,
             stats: Counters::default(),
         }
+    }
+
+    /// Store with a persistent tier rooted at `dir`. The segment index
+    /// is loaded (or rebuilt from scans) once, here; a missing directory
+    /// just means every disk probe misses until the first write creates
+    /// it.
+    pub fn persistent(dir: impl Into<PathBuf>) -> Self {
+        Self::persistent_with_roll(dir, DEFAULT_ROLL_BYTES)
+    }
+
+    /// [`ResultStore::persistent`] with an explicit segment roll size;
+    /// tests use small rolls to exercise multi-segment layouts cheaply.
+    pub fn persistent_with_roll(dir: impl Into<PathBuf>, roll_bytes: u64) -> Self {
+        let dir = dir.into();
+        let mut seg = SegmentStore::open(&dir, roll_bytes);
+        let damage = seg.take_open_corruption();
+        let store = Self {
+            mem: Mutex::new(HashMap::new()),
+            dir: Some(dir),
+            seg: Some(Mutex::new(seg)),
+            stats: Counters::default(),
+        };
+        store.stats.corrupt_discards.fetch_add(damage, Ordering::Relaxed);
+        store
     }
 
     /// The conventional location under an artifact directory
@@ -126,12 +160,20 @@ impl ResultStore {
         self.dir.as_deref()
     }
 
-    /// Where `key`'s shard file lives (`None` for ephemeral stores).
-    /// Exposed so tests and tooling can inspect/corrupt specific shards.
-    pub fn disk_path(&self, key: u64) -> Option<PathBuf> {
+    /// Where `key`'s **legacy** (PR-5 file-per-point) shard would live
+    /// (`None` for ephemeral stores). New results never land here; the
+    /// path exists for the fallback read tier, migration tests and the
+    /// bench's baseline.
+    pub fn legacy_shard_path(&self, key: u64) -> Option<PathBuf> {
         self.dir
             .as_ref()
             .map(|d| d.join(format!("{:02x}", key >> 56)).join(format!("{key:016x}.simres")))
+    }
+
+    /// Physical location of `key`'s segment record, for tests and
+    /// tooling: `(segment path, byte offset, frame length)`.
+    pub fn segment_location(&self, key: u64) -> Option<(PathBuf, u64, u32)> {
+        self.seg.as_ref()?.lock().expect("segment lock").locate(key)
     }
 
     /// Counter snapshot.
@@ -141,6 +183,7 @@ impl ResultStore {
             requests: g(&self.stats.requests),
             mem_hits: g(&self.stats.mem_hits),
             disk_hits: g(&self.stats.disk_hits),
+            legacy_hits: g(&self.stats.legacy_hits),
             misses: g(&self.stats.misses),
             deduped: g(&self.stats.deduped),
             engine_runs: g(&self.stats.engine_runs),
@@ -163,8 +206,9 @@ impl ResultStore {
         self.stats.engine_runs.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Probe both tiers. Counts the request and the hit/nothing outcome;
-    /// a disk hit is promoted into the memory tier.
+    /// Probe every tier: memory, then segments, then legacy shards.
+    /// Counts the request and the hit/nothing outcome; a disk hit is
+    /// promoted into the memory tier.
     pub fn lookup(&self, key: u64) -> Option<Arc<RunResult>> {
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         if let Some(r) = self.mem.lock().expect("store lock").get(&key) {
@@ -177,10 +221,31 @@ impl ResultStore {
         Some(r)
     }
 
-    /// Disk probe only (no counters beyond corruption): absent, corrupt,
-    /// or mis-keyed entries are all a `None`.
+    /// Disk probe only (no counters beyond corruption and the legacy
+    /// split): absent, corrupt, or mis-keyed entries are all a `None`.
     fn load_disk(&self, key: u64) -> Option<Arc<RunResult>> {
-        let path = self.disk_path(key)?;
+        if let Some(seg) = &self.seg {
+            match seg.lock().expect("segment lock").lookup_result(key) {
+                Some(Ok(r)) => return Some(Arc::new(r)),
+                Some(Err(e)) => {
+                    // The entry was dropped by the segment store; fall
+                    // through to the legacy tier, then (usually) miss.
+                    self.stats.corrupt_discards.fetch_add(1, Ordering::Relaxed);
+                    eprintln!(
+                        "[exec] corrupt segment record for {key:#018x}: {e} — treating as miss"
+                    );
+                }
+                None => {}
+            }
+        }
+        let r = self.load_legacy(key)?;
+        self.stats.legacy_hits.fetch_add(1, Ordering::Relaxed);
+        Some(r)
+    }
+
+    /// Legacy file-per-point probe (read-only tier).
+    fn load_legacy(&self, key: u64) -> Option<Arc<RunResult>> {
+        let path = self.legacy_shard_path(key)?;
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
@@ -207,29 +272,52 @@ impl ResultStore {
         }
     }
 
-    /// Insert into the memory tier and write through to disk. Disk
-    /// failures are reported and swallowed (see the module docs);
-    /// concurrent writers of the same key are harmless because the
-    /// content is identical and the rename is atomic.
+    /// Insert into the memory tier and append to the segment tier. Disk
+    /// failures are reported and swallowed (see the module docs). The
+    /// index itself is flushed by [`ResultStore::flush`]/`Drop` — a
+    /// crash before that loses only the index, which the next open
+    /// rebuilds from the already-durable records.
     pub fn insert(&self, key: u64, result: Arc<RunResult>) {
         self.mem.lock().expect("store lock").insert(key, Arc::clone(&result));
-        let Some(path) = self.disk_path(key) else { return };
-        if let Err(e) = self.write_shard(&path, key, &result) {
-            eprintln!("[exec] could not persist result {key:#x} to {path:?}: {e}");
-        } else {
-            self.stats.disk_writes.fetch_add(1, Ordering::Relaxed);
+        let Some(seg) = &self.seg else { return };
+        let r = seg.lock().expect("segment lock").append_result(key, unix_now(), &result);
+        match r {
+            Ok(()) => {
+                self.stats.disk_writes.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                eprintln!("[exec] could not persist result {key:#x}: {e}");
+            }
         }
     }
 
-    fn write_shard(&self, path: &Path, key: u64, result: &RunResult) -> Result<()> {
+    /// Write `result` in the **legacy** file-per-point format. Not on
+    /// any hot path: exists so the bench can build a PR-5-shaped
+    /// baseline and migration tests can fabricate old directories.
+    pub fn write_legacy_shard(&self, key: u64, result: &RunResult) -> Result<PathBuf> {
+        let path = self
+            .legacy_shard_path(key)
+            .ok_or_else(|| format_err!("ephemeral store has no disk tier"))?;
         let shard_dir = path.parent().expect("shard path has a parent");
         std::fs::create_dir_all(shard_dir)?;
         // Unique temp name per process: two processes landing the same
         // key concurrently each rename their own complete file.
         let tmp = shard_dir.join(format!("{key:016x}.tmp{}", std::process::id()));
         std::fs::write(&tmp, serialize_result(key, result))?;
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        std::fs::rename(&tmp, &path)?;
+        self.stats.disk_writes.fetch_add(1, Ordering::Relaxed);
+        Ok(path)
+    }
+
+    /// Flush the segment index to disk. Called on drop; callers that
+    /// outlive interesting work (the CLI, benches) may flush earlier so
+    /// a later crash cannot cost the index.
+    pub fn flush(&self) {
+        if let Some(seg) = &self.seg {
+            if let Err(e) = seg.lock().expect("segment lock").flush_index() {
+                eprintln!("[exec] could not flush segment index: {e}");
+            }
+        }
     }
 
     /// Serve `point` from the store, simulating (and inserting) on a
@@ -269,6 +357,12 @@ impl ResultStore {
             "store hit diverged from a fresh simulation for {} (key {key:#x})",
             point.label()
         );
+    }
+}
+
+impl Drop for ResultStore {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -322,10 +416,12 @@ mod tests {
         let cold = ResultStore::persistent(&dir);
         let a = cold.get_or_run(&mut EngineCache::new(), &p).unwrap();
         assert_eq!(cold.stats().disk_writes, 1);
-        let path = cold.disk_path(p.key()).unwrap();
-        assert!(path.starts_with(&dir) && path.exists());
+        let (seg_path, offset, len) = cold.segment_location(p.key()).unwrap();
+        assert!(seg_path.starts_with(&dir) && seg_path.exists());
+        assert!(offset >= 8 && len > 0, "record sits past the segment magic");
 
-        // A fresh store over the same dir: pure disk hit, zero sims.
+        // A fresh store over the same dir, opened while the writer is
+        // still alive (appends are unbuffered): pure disk hit, zero sims.
         let warm = ResultStore::persistent(&dir);
         let b = warm.get_or_run(&mut EngineCache::new(), &p).unwrap();
         assert_eq!(
@@ -334,40 +430,110 @@ mod tests {
             "disk round trip is bit-identical"
         );
         let s = warm.stats();
-        assert_eq!((s.disk_hits, s.engine_runs), (1, 0));
+        assert_eq!((s.disk_hits, s.legacy_hits, s.engine_runs), (1, 0, 0));
+        drop((cold, warm));
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn corrupt_and_mis_keyed_shards_degrade_to_misses() {
+    fn corrupt_record_with_live_index_degrades_at_lookup() {
         let dir = tmp("corrupt");
         std::fs::remove_dir_all(&dir).ok();
         let p = point();
-        let store = ResultStore::persistent(&dir);
-        let first = store.get_or_run(&mut EngineCache::new(), &p).unwrap();
-        let path = store.disk_path(p.key()).unwrap();
+        let first = {
+            let store = ResultStore::persistent(&dir);
+            store.get_or_run(&mut EngineCache::new(), &p).unwrap()
+        };
 
-        // Truncate: a fresh store must miss, re-simulate, and heal the shard.
-        let text = std::fs::read_to_string(&path).unwrap();
-        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        // Flip a payload byte. The index still covers the record, so the
+        // damage surfaces at lookup (checksum validation in place), not
+        // at open; the point degrades to a miss that re-simulates
+        // bit-identically and re-appends.
+        let (seg_path, offset, _) =
+            ResultStore::persistent(&dir).segment_location(p.key()).unwrap();
+        let mut bytes = std::fs::read(&seg_path).unwrap();
+        bytes[offset as usize + 21] ^= 0x01;
+        std::fs::write(&seg_path, &bytes).unwrap();
+
         let healed = ResultStore::persistent(&dir);
+        assert_eq!(healed.stats().corrupt_discards, 0, "index hides in-record damage until read");
         let again = healed.get_or_run(&mut EngineCache::new(), &p).unwrap();
         let s = healed.stats();
-        assert_eq!((s.corrupt_discards, s.misses, s.engine_runs), (1, 1, 1));
-        assert_eq!(
-            serialize_result(p.key(), &first),
-            serialize_result(p.key(), &again)
-        );
-        assert_eq!(std::fs::read_to_string(&path).unwrap(), text, "shard healed in place");
+        assert_eq!((s.corrupt_discards, s.misses, s.engine_runs, s.legacy_hits), (1, 1, 1, 0));
+        assert_eq!(serialize_result(p.key(), &first), serialize_result(p.key(), &again));
+        drop(healed); // flushes the index with the re-appended record
+
+        let warm = ResultStore::persistent(&dir);
+        let served = warm.get_or_run(&mut EngineCache::new(), &p).unwrap();
+        assert_eq!(serialize_result(p.key(), &first), serialize_result(p.key(), &served));
+        assert_eq!((warm.stats().disk_hits, warm.stats().engine_runs), (1, 0));
+        drop(warm);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_without_index_is_sealed_at_open() {
+        let dir = tmp("torn");
+        std::fs::remove_dir_all(&dir).ok();
+        let p = point();
+        let first = {
+            let store = ResultStore::persistent(&dir);
+            store.get_or_run(&mut EngineCache::new(), &p).unwrap()
+        };
+        let (seg_path, ..) = ResultStore::persistent(&dir).segment_location(p.key()).unwrap();
+        std::fs::remove_file(dir.join(crate::exec::segment::INDEX_FILE)).unwrap();
+        let bytes = std::fs::read(&seg_path).unwrap();
+        std::fs::write(&seg_path, &bytes[..bytes.len() - 5]).unwrap();
+
+        // No index: the open-time scan hits the torn record, seals the
+        // segment, and the re-simulated record rolls to a fresh one.
+        let healed = ResultStore::persistent(&dir);
+        assert_eq!(healed.stats().corrupt_discards, 1, "scan detects the torn tail");
+        let again = healed.get_or_run(&mut EngineCache::new(), &p).unwrap();
+        let s = healed.stats();
+        assert_eq!((s.misses, s.engine_runs, s.legacy_hits), (1, 1, 0));
+        assert_eq!(serialize_result(p.key(), &first), serialize_result(p.key(), &again));
+        let (new_seg, ..) = healed.segment_location(p.key()).unwrap();
+        assert_ne!(new_seg, seg_path, "writer must not append to a sealed segment");
+        drop(healed);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_shards_serve_and_mis_keyed_ones_do_not() {
+        let dir = tmp("legacy");
+        std::fs::remove_dir_all(&dir).ok();
+        let p = point();
+        // Fabricate a PR-5-shaped directory: legacy shard, no segments.
+        let r = {
+            let store = ResultStore::persistent(&dir);
+            let r = store.get_or_run(&mut EngineCache::new(), &p).unwrap();
+            store.write_legacy_shard(p.key(), &r).unwrap();
+            r
+        };
+        let seg_path = {
+            let probe = ResultStore::persistent(&dir);
+            probe.segment_location(p.key()).unwrap().0
+        };
+        std::fs::remove_file(&seg_path).unwrap();
+        std::fs::remove_file(dir.join(crate::exec::segment::INDEX_FILE)).unwrap();
+
+        let old = ResultStore::persistent(&dir);
+        let served = old.lookup(p.key()).expect("legacy shard serves");
+        let s = old.stats();
+        assert_eq!((s.disk_hits, s.legacy_hits, s.engine_runs), (1, 1, 0));
+        assert_eq!(serialize_result(p.key(), &r), serialize_result(p.key(), &served));
 
         // Mis-keyed: copy the (valid) shard under a different point's key.
         let q = SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, 4, MIB, true, false);
-        let qpath = healed.disk_path(q.key()).unwrap();
+        let path = old.legacy_shard_path(p.key()).unwrap();
+        let qpath = old.legacy_shard_path(q.key()).unwrap();
         std::fs::create_dir_all(qpath.parent().unwrap()).unwrap();
         std::fs::copy(&path, &qpath).unwrap();
         let fresh = ResultStore::persistent(&dir);
         assert!(fresh.lookup(q.key()).is_none(), "smuggled shard must not serve");
         assert_eq!(fresh.stats().corrupt_discards, 1);
+        drop((old, fresh));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -36,6 +36,12 @@ fn main() {
         std::process::exit(2);
     }
     let cmd = args[0].as_str();
+    // `repro store <sub>` owns its own grammar (`--max-bytes`, …), so it
+    // is parsed before — and never constructs — the shared result store:
+    // lifecycle operations work on the directory itself.
+    if cmd == "store" {
+        std::process::exit(store_command(&args[1..]));
+    }
     let opts = Opts::parse(&args[1..]);
     // One result store per invocation: the memory tier spans every
     // command `repro all` chains, so overlapping sweeps dedup in-process
@@ -44,9 +50,9 @@ fn main() {
     let result = match cmd {
         "table1" => table1(&opts),
         "table2" => table2(),
-        "figure2" => figure2(&opts, &store, false),
+        "figure2" => figure2(&opts, &store),
         "figure3" | "figure4" => figure3_4(&opts, &store),
-        "figure5" => figure2(&opts, &store, true),
+        "figure5" => figure5(&opts, &store),
         "figure6" | "sweep" => figure6(&opts, &store),
         "figure7" => figure7(&opts, &store),
         "universe" => universe(&opts, &store),
@@ -84,8 +90,97 @@ fn usage() {
          [--plans DIR] [--results DIR] [--cold] [--force] [--no-prefetch] \
          [--config FILE]\n\
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
-         sweep universe tune native validate all"
+         sweep universe tune native validate all\n\
+         store:    repro store stats|verify|compact [--results DIR]\n\
+         \u{20}         repro store gc --max-bytes N and/or --max-age-days N"
     );
+}
+
+/// `repro store {stats,gc,verify,compact}`: lifecycle tooling for a
+/// persistent results directory. Returns the process exit code (verify
+/// exits nonzero when it finds corruption or a semantic mismatch).
+fn store_command(args: &[String]) -> i32 {
+    use multistride::exec::lifecycle::{self, StoreCommand};
+    let (cmd, rest) = match lifecycle::parse_store_cli(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let opts = Opts::parse(&rest);
+    if opts.cold {
+        eprintln!("error: repro store needs a persistent results directory (drop --cold)");
+        return 2;
+    }
+    let dir = opts.results.clone().unwrap_or_else(|| opts.artifacts.join("results"));
+    let result: multistride::Result<i32> = match cmd {
+        StoreCommand::Stats => {
+            print!("{}", figures::render_store_stats(&dir, &lifecycle::dir_stats(&dir)));
+            Ok(0)
+        }
+        StoreCommand::Gc { max_bytes, max_age_days } => {
+            lifecycle::gc(&dir, max_bytes, max_age_days).map(|r| {
+                println!(
+                    "[store] gc: evicted {} record(s), deleted {} legacy shard(s); \
+                     {} live record(s) ({}) remain; {} reclaimable via `repro store compact`",
+                    r.evicted_records,
+                    r.deleted_legacy,
+                    r.live_records,
+                    bytes_h(r.live_bytes),
+                    bytes_h(r.reclaimable_bytes),
+                );
+                0
+            })
+        }
+        StoreCommand::Verify => {
+            lifecycle::verify(&dir, opts.machine.config(), opts.scale()).map(|r| {
+                println!(
+                    "[store] verify: {} record(s) ok, {} corrupt; {} legacy shard(s) ok, \
+                     {} corrupt; canonical plan: {} point(s), {} verified bit-exact, \
+                     {} mismatched (healed), {} absent",
+                    r.records_ok,
+                    r.records_corrupt,
+                    r.legacy_ok,
+                    r.legacy_corrupt,
+                    r.resimulated,
+                    r.verified,
+                    r.mismatched,
+                    r.absent,
+                );
+                if r.is_clean() {
+                    println!("[store] verify: OK");
+                    0
+                } else {
+                    eprintln!("[store] verify: FAILED (store contents diverged)");
+                    1
+                }
+            })
+        }
+        StoreCommand::Compact => {
+            lifecycle::compact(&dir).map(|r| {
+                println!(
+                    "[store] compact: {} record(s) rewritten, {} dropped, {} legacy shard(s) \
+                     migrated ({} deleted); reclaimed {}; now {} segment(s) ({})",
+                    r.rewritten,
+                    r.dropped,
+                    r.migrated_legacy,
+                    r.deleted_legacy,
+                    bytes_h(r.reclaimed_bytes),
+                    r.segments,
+                    bytes_h(r.segment_bytes),
+                );
+                0
+            })
+        }
+    };
+    match result {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
 }
 
 /// Parsed command-line options.
@@ -213,7 +308,8 @@ fn table1(opts: &Opts) -> multistride::Result<()> {
     .with_title("Table 1 — surveyed compute kernels (stride columns at n=4 via stride_profile)");
     let n = 4u32;
     for pk in paper_kernels(opts.scale().kernel_bytes) {
-        let prof = transform(&pk.spec, StridingConfig::new(n, 2)).map(|tr| stride_profile(&tr)).ok();
+        let prof =
+            transform(&pk.spec, StridingConfig::new(n, 2)).map(|tr| stride_profile(&tr)).ok();
         let (l, s, ls) = prof.map_or((0, 0, 0), |p| (p.loads, p.stores, p.loadstores));
         let yn = |b: bool| if b { "Y" } else { "" }.to_string();
         t.row(vec![
@@ -251,7 +347,9 @@ fn table2() -> multistride::Result<()> {
     t.row(row("Bandwidth (GiB/s, paper)", &|m| format!("{:.2}", m.bandwidth_gib)));
     t.row(row("Bandwidth (GiB/s, model roofline)", &|m| format!("{:.2}", m.model_peak_gib())));
     t.row(row("Memory channels", &|m| m.mem_channels.to_string()));
-    t.row(row("L1D size/assoc", &|m| format!("{} KiB / {}-way", m.l1.size_bytes / 1024, m.l1.ways)));
+    t.row(row("L1D size/assoc", &|m| {
+        format!("{} KiB / {}-way", m.l1.size_bytes / 1024, m.l1.ways)
+    }));
     t.row(row("L2 size/assoc", &|m| format!("{} KiB / {}-way", m.l2.size_bytes / 1024, m.l2.ways)));
     t.row(row("L3 size/assoc", &|m| {
         format!("{:.1} MiB / {}-way", m.l3.size_bytes as f64 / 1048576.0, m.l3.ways)
@@ -262,28 +360,57 @@ fn table2() -> multistride::Result<()> {
     Ok(())
 }
 
-fn figure2(opts: &Opts, store: &ResultStore, pow2: bool) -> multistride::Result<()> {
+fn figure2(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     let m = opts.machine.config();
     let scale = opts.scale();
-    let title = if pow2 {
-        format!("Figure 5 — {} of power-of-two data, {}", bytes_h(scale.micro_pow2_bytes), m.name)
-    } else {
-        format!("Figure 2 — micro-benchmark throughput ({}, {})", bytes_h(scale.micro_bytes), m.name)
-    };
-    println!(
-        "[{} unroll slots over n strides; huge pages; array size {} a power of two]",
-        UNROLL_SLOTS,
-        if pow2 { "IS" } else { "is NOT" }
+    let title = format!(
+        "Figure 2 — micro-benchmark throughput ({}, {})",
+        bytes_h(scale.micro_bytes),
+        m.name
     );
-    let points = exp::figure2_on(store, m, scale, pow2);
+    println!(
+        "[{} unroll slots over n strides; huge pages; array size is NOT a power of two]",
+        UNROLL_SLOTS
+    );
+    let points = exp::figure2_on(store, m, scale, false);
     print!("{}", figures::render_micro_grid(&points, &title));
     if let Some(dir) = &opts.csv_dir {
-        let name = if pow2 { "figure5.csv" } else { "figure2.csv" };
         report::write_csv(
-            &dir.join(name),
+            &dir.join("figure2.csv"),
             &figures::MICRO_CSV_HEADER,
             &figures::micro_csv_rows(&points),
         )?;
+    }
+    Ok(())
+}
+
+/// Figure 5: the power-of-two collision grid, swept over ALL machine
+/// presets in one invocation — the paper's §4.5 point is that the
+/// collision pattern follows the cache geometry, so the three machines
+/// belong side by side (`--machine` is ignored here by design). The CSV
+/// carries the §4.5 set-collision diagnostics next to the throughput
+/// columns.
+fn figure5(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
+    let scale = opts.scale();
+    println!(
+        "[{} unroll slots over n strides; huge pages; array size IS a power of two; \
+         sweeping all machine presets]",
+        UNROLL_SLOTS
+    );
+    let mut rows = Vec::new();
+    for preset in MachinePreset::all() {
+        let m = preset.config();
+        let title = format!(
+            "Figure 5 — {} of power-of-two data, {}",
+            bytes_h(scale.micro_pow2_bytes),
+            m.name
+        );
+        let points = exp::figure2_on(store, m, scale, true);
+        print!("{}", figures::render_micro_grid(&points, &title));
+        rows.extend(figures::figure5_csv_rows(&m, scale.micro_pow2_bytes, &points));
+    }
+    if let Some(dir) = &opts.csv_dir {
+        report::write_csv(&dir.join("figure5.csv"), &figures::FIG5_CSV_HEADER, &rows)?;
     }
     Ok(())
 }
@@ -391,8 +518,9 @@ fn universe(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     let reg = ArtifactRegistry::new(&opts.artifacts);
     ensure_known_kernel(opts.kernel.as_deref(), budget)?;
     let keep = |name: &str| opts.kernel.as_deref().map_or(true, |k| k == name);
-    let mut t = Table::new(&["kernel", "family", "loops", "footprint (MiB)", "artifact", "description"])
-        .with_title("Kernel universe — registry");
+    let mut t =
+        Table::new(&["kernel", "family", "loops", "footprint (MiB)", "artifact", "description"])
+            .with_title("Kernel universe — registry");
     for k in multistride::runtime::kernel_universe(&reg, budget) {
         if !keep(&k.name) {
             continue;
@@ -470,7 +598,10 @@ fn tune(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     if opts.kernel.is_some() {
         for o in &rows {
             if o.cache_hit {
-                println!("({}: served from the plan cache — use --force to re-search)", o.plan.kernel);
+                println!(
+                    "({}: served from the plan cache — use --force to re-search)",
+                    o.plan.kernel
+                );
             } else {
                 print!("{}", figures::render_search_trace(&o.plan.kernel, &o.steps));
             }
@@ -623,11 +754,11 @@ fn all(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     println!();
     table2()?;
     println!();
-    figure2(opts, store, false)?;
+    figure2(opts, store)?;
     // figure3_4's points are a subset of figure2's grid: pure store hits.
     figure3_4(opts, store)?;
     println!();
-    figure2(opts, store, true)?;
+    figure5(opts, store)?;
     figure6(opts, store)?;
     // figure7 re-summarizes figure6's sweeps and universe re-visits the
     // family configs figure6 covered; with the shared store both format

@@ -48,6 +48,37 @@ impl CacheConfig {
     pub fn n_sets(&self) -> u64 {
         self.size_bytes / super::addr::LINE_BYTES / self.ways as u64
     }
+
+    /// §4.5 collision diagnostic: how many *distinct* sets the head
+    /// lines of an `strides`-way decomposition of a `bytes` array index
+    /// into. Stream k starts at byte `k * (bytes / strides)`; when the
+    /// span is a power of two that spacing is a multiple of the set
+    /// period, every head aliases to one set, and the streams fight over
+    /// its `ways` lines. Mirrors [`Cache::set_index`]'s mask-plus-slice
+    /// math exactly, so figure5.csv reports what the simulated cache
+    /// actually does (including sliced non-power-of-two LLCs).
+    pub fn stride_head_sets(&self, strides: u32, bytes: u64) -> u64 {
+        let n_sets = self.n_sets();
+        let sets_per_slice = n_sets & n_sets.wrapping_neg();
+        let n_slices = n_sets / sets_per_slice;
+        let set_mask = sets_per_slice - 1;
+        let shift = sets_per_slice.trailing_zeros();
+        let strides = strides.max(1) as u64;
+        let span = bytes / strides;
+        let mut sets = std::collections::HashSet::new();
+        for k in 0..strides {
+            let line = (k * span) / super::addr::LINE_BYTES;
+            let within = line & set_mask;
+            let set = if n_slices == 1 {
+                within
+            } else {
+                let slice = ((line >> shift) & 3) % n_slices;
+                slice * (set_mask + 1) + within
+            };
+            sets.insert(set);
+        }
+        sets.len() as u64
+    }
 }
 
 /// A line evicted by [`Cache::insert`].
@@ -375,6 +406,21 @@ mod tests {
     fn geometry() {
         let c = tiny();
         assert_eq!(c.config().n_sets(), 4);
+    }
+
+    #[test]
+    fn stride_head_sets_collapse_on_pow2_spans() {
+        // 32 KiB / 8-way = 64 sets (an L1-shaped geometry).
+        let cfg = CacheConfig::new(32 * 1024, 8, Replacement::Lru);
+        // Power-of-two span: every head offset is a multiple of 2 MiB,
+        // so all 32 streams alias to one set — total collapse.
+        assert_eq!(cfg.stride_head_sets(32, 64 * 1024 * 1024), 1);
+        // The paper's odd-span arrays (32 × 30517 lines) spread the
+        // heads: 30517 ≡ 53 (mod 64) and gcd(53, 64) = 1, so all 32
+        // heads land in distinct sets.
+        assert_eq!(cfg.stride_head_sets(32, 32 * 30517 * 64), 32);
+        // One stream trivially touches one set.
+        assert_eq!(cfg.stride_head_sets(1, 64 * 1024 * 1024), 1);
     }
 
     #[test]

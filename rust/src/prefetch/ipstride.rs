@@ -55,7 +55,11 @@ pub struct IpStride {
 
 impl IpStride {
     pub fn new(cfg: IpStrideConfig) -> Self {
-        Self { cfg, table: vec![IpEntry::default(); cfg.table_size as usize], stats: IpStrideStats::default() }
+        Self {
+            cfg,
+            table: vec![IpEntry::default(); cfg.table_size as usize],
+            stats: IpStrideStats::default(),
+        }
     }
 
     /// Observe an L1 access from instruction `obs.ip`.

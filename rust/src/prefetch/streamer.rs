@@ -238,7 +238,8 @@ impl Streamer {
                     t.carried = true;
                     t.dir = Dir::Fwd;
                     t.confirmations = confirmed.min(cfg.train_threshold + 2);
-                    t.last_line = (next_page << (addr::PAGE_SHIFT - addr::LINE_SHIFT)).wrapping_sub(1);
+                    t.last_line =
+                        (next_page << (addr::PAGE_SHIFT - addr::LINE_SHIFT)).wrapping_sub(1);
                     t.next_prefetch = next_page << (addr::PAGE_SHIFT - addr::LINE_SHIFT);
                     self.stats.page_carries += 1;
                 }

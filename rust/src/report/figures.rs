@@ -30,7 +30,9 @@ pub fn render_micro_grid(points: &[MicroPoint], title: &str) -> String {
             for interleaved in [false, true] {
                 let series: Vec<&MicroPoint> = points
                     .iter()
-                    .filter(|p| p.op == op && p.prefetch == prefetch && p.interleaved == interleaved)
+                    .filter(|p| {
+                        p.op == op && p.prefetch == prefetch && p.interleaved == interleaved
+                    })
                     .collect();
                 if series.is_empty() {
                     continue;
@@ -266,7 +268,10 @@ pub fn render_comparison(machine: &str, rows: &[ComparisonRow]) -> String {
 /// prints after every store-backed command; CI's store-smoke job greps
 /// the `store hits:` and `engine runs:` figures out of it, so keep those
 /// labels stable).
-pub fn render_exec_summary(stats: &crate::exec::ExecStats, dir: Option<&std::path::Path>) -> String {
+pub fn render_exec_summary(
+    stats: &crate::exec::ExecStats,
+    dir: Option<&std::path::Path>,
+) -> String {
     let mut s = format!(
         "[exec] sim points: {} requests, engine runs: {}, store hits: {} (mem {} / disk {}), deduped: {}, written: {}",
         stats.requests,
@@ -277,6 +282,12 @@ pub fn render_exec_summary(stats: &crate::exec::ExecStats, dir: Option<&std::pat
         stats.deduped,
         stats.disk_writes,
     );
+    if stats.legacy_hits > 0 {
+        s.push_str(&format!(
+            ", legacy-shard hits: {} (pack with `repro store compact`)",
+            stats.legacy_hits
+        ));
+    }
     if stats.corrupt_discards > 0 {
         s.push_str(&format!(", corrupt discards: {}", stats.corrupt_discards));
     }
@@ -315,6 +326,68 @@ pub const MICRO_CSV_HEADER: [&str; 9] = [
     "op", "strides", "interleaved", "prefetch", "gib_s", "l1_hit", "l2_hit", "l3_hit",
     "stalls_total",
 ];
+
+/// figure5.csv: the micro columns prefixed with the machine (the grid is
+/// swept over every preset in one invocation) and suffixed with the
+/// paper's §4.5 set-collision diagnostics — how many distinct cache sets
+/// the stride heads land in per level, and the per-level eviction counts
+/// those collisions drive.
+pub const FIG5_CSV_HEADER: [&str; 16] = [
+    "machine", "op", "strides", "interleaved", "prefetch", "gib_s", "l1_hit", "l2_hit", "l3_hit",
+    "stalls_total", "l1_stride_sets", "l2_stride_sets", "l3_stride_sets", "l1_evictions",
+    "l2_evictions", "l3_evictions",
+];
+
+/// CSV rows for one machine's power-of-two grid ([`FIG5_CSV_HEADER`]).
+pub fn figure5_csv_rows(
+    machine: &crate::config::MachineConfig,
+    bytes: u64,
+    points: &[MicroPoint],
+) -> Vec<Vec<String>> {
+    points
+        .iter()
+        .zip(micro_csv_rows(points))
+        .map(|(p, micro)| {
+            let mut row = vec![machine.name.to_string()];
+            row.extend(micro);
+            for cache in [&machine.l1, &machine.l2, &machine.l3] {
+                row.push(cache.stride_head_sets(p.strides, bytes).to_string());
+            }
+            for level in [&p.result.l1, &p.result.l2, &p.result.l3] {
+                row.push(level.evictions.to_string());
+            }
+            row
+        })
+        .collect()
+}
+
+/// `repro store stats` rendering. The `[store]` labels are grepped by
+/// CI's store-smoke job — keep them stable.
+pub fn render_store_stats(dir: &std::path::Path, s: &crate::exec::lifecycle::DirStats) -> String {
+    let mib = |b: u64| format!("{:.1} MiB", b as f64 / 1048576.0);
+    let mut out = format!("[store] dir: {}\n", dir.display());
+    out.push_str(&format!(
+        "[store] segments: {} ({}, {} sealed)\n",
+        s.segments,
+        mib(s.segment_bytes),
+        s.sealed_segments
+    ));
+    out.push_str(&format!("[store] live records: {} ({})\n", s.live_records, mib(s.live_bytes)));
+    out.push_str(&format!(
+        "[store] dead bytes: {} (reclaim with `repro store compact`)\n",
+        mib(s.dead_bytes)
+    ));
+    out.push_str(&format!(
+        "[store] legacy shards: {} ({} — fold in with `repro store compact`)\n",
+        s.legacy_files,
+        mib(s.legacy_bytes)
+    ));
+    out.push_str(&format!(
+        "[store] index: {}\n",
+        if s.index_loaded { "loaded" } else { "rebuilt from segment scan" }
+    ));
+    out
+}
 
 #[cfg(test)]
 mod tests {

@@ -41,7 +41,13 @@ impl PlanCache {
     }
 
     /// Path a plan for this key lives at.
-    pub fn path_for(&self, kernel: &str, machine: &str, prefetch: bool, budget_class: u32) -> PathBuf {
+    pub fn path_for(
+        &self,
+        kernel: &str,
+        machine: &str,
+        prefetch: bool,
+        budget_class: u32,
+    ) -> PathBuf {
         let slug: String = machine
             .chars()
             .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })

@@ -419,7 +419,16 @@ pub fn machine_fingerprint(m: &MachineConfig, prefetch: bool) -> u64 {
     ));
     h.str(&format!(
         "{:?}",
-        (dram, tlb, wc, machine_prefetch, lfb_entries, window_accesses, issue_per_cycle, simd_registers)
+        (
+            dram,
+            tlb,
+            wc,
+            machine_prefetch,
+            lfb_entries,
+            window_accesses,
+            issue_per_cycle,
+            simd_registers,
+        )
     ));
     h.bytes(&[prefetch as u8]);
     h.0

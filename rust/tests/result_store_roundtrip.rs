@@ -1,15 +1,18 @@
 //! Result-store wall: the persistent tier must be a *transparent* cache.
 //!
-//! Three properties pinned here, mirroring `plan_cache_roundtrip.rs` for
-//! the execution layer:
+//! Properties pinned here, mirroring `plan_cache_roundtrip.rs` for the
+//! execution layer:
 //!
 //! * the `multistride-simresult v1` format round-trips **bit-exactly**
 //!   for randomized results (every counter, and the one float as IEEE
-//!   bits — NaN/±inf/−0.0 included), and the disk tier serves back the
-//!   exact bytes it stored;
-//! * corrupt, truncated, byte-flipped or mis-keyed shards degrade to
-//!   **misses** (recoverable, self-healing), never to panics or wrong
-//!   results;
+//!   bits — NaN/±inf/−0.0 included), its fixed-width binary twin
+//!   reconstructs the identical serialization, and the segment tier
+//!   serves back exactly the bytes it stored;
+//! * every crash/corruption shape — truncated segment tails, a torn
+//!   index, mid-compaction kill states, corrupt/truncated/mis-keyed
+//!   legacy shards, mixed old-format/segment directories — degrades to
+//!   **self-healing misses** that re-serve bit-identical results, never
+//!   to panics or wrong data;
 //! * a parallel `repro all`-shaped plan — micro grids and kernel
 //!   families with deliberate overlap — returns results bit-identical to
 //!   serial cold execution, and a warm store serves the same plan with
@@ -19,8 +22,11 @@ use std::path::PathBuf;
 
 use multistride::config::coffee_lake;
 use multistride::coordinator::experiments::EngineCache;
-use multistride::exec::format::{parse_result, serialize_result};
-use multistride::exec::{Planner, ResultStore, SimPoint};
+use multistride::exec::format::{
+    decode_result_bin, encode_result_bin, parse_result, serialize_result, RESULT_BIN_BYTES,
+};
+use multistride::exec::segment::INDEX_FILE;
+use multistride::exec::{lifecycle, Planner, ResultStore, SimPoint};
 use multistride::kernels::micro::MicroOp;
 use multistride::sim::RunResult;
 use multistride::transform::StridingConfig;
@@ -137,30 +143,55 @@ fn randomized_format_roundtrip_is_bit_exact() {
 }
 
 #[test]
-fn disk_tier_serves_the_exact_bytes_it_stored() {
+fn randomized_binary_twin_reconstructs_the_text_serialization() {
+    let mut rng = Rng::new(0xB117);
+    for i in 0..200 {
+        let r = random_result(&mut rng);
+        let bin = encode_result_bin(&r);
+        assert_eq!(bin.len(), RESULT_BIN_BYTES);
+        let q = decode_result_bin(&bin)
+            .unwrap_or_else(|e| panic!("round {i}: binary decode failed: {e}"));
+        let key = rng.next_u64();
+        assert_eq!(
+            serialize_result(key, &r),
+            serialize_result(key, &q),
+            "round {i}: binary twin must reconstruct the exact text serialization"
+        );
+        assert_eq!(bin.to_vec(), encode_result_bin(&q).to_vec(), "round {i}: re-encode differs");
+    }
+}
+
+#[test]
+fn segment_tier_serves_the_exact_bytes_it_stored() {
     let dir = tmp("bytes");
     std::fs::remove_dir_all(&dir).ok();
     let point = SimPoint::micro(coffee_lake(), MicroOp::CopyNt, 4, MIB, true, false);
     let store = ResultStore::persistent(&dir);
     let fresh = store.get_or_run(&mut EngineCache::new(), &point).unwrap();
-    let shard = store.disk_path(point.key()).unwrap();
-    let on_disk = std::fs::read_to_string(&shard).unwrap();
+    // The record's payload in the segment file is the binary twin of the
+    // fresh result, byte for byte.
+    let (seg_path, offset, len) = store.segment_location(point.key()).expect("record located");
+    assert_eq!(len as usize, RESULT_BIN_BYTES);
+    let seg_bytes = std::fs::read(&seg_path).unwrap();
+    let payload = &seg_bytes[offset as usize..offset as usize + len as usize];
+    let decoded = decode_result_bin(payload).expect("payload decodes in place");
     assert_eq!(
-        on_disk,
+        serialize_result(point.key(), &decoded),
         serialize_result(point.key(), &fresh),
-        "shard bytes are the serialization of the fresh result"
+        "segment payload is the binary serialization of the fresh result"
     );
+    drop(store);
     // A second store (cold memory tier) re-reads and re-serializes to
-    // the identical bytes.
+    // the identical bytes, with zero engine runs.
     let reread = ResultStore::persistent(&dir);
     let served = reread.get_or_run(&mut EngineCache::new(), &point).unwrap();
-    assert_eq!(on_disk, serialize_result(point.key(), &served));
+    assert_eq!(serialize_result(point.key(), &served), serialize_result(point.key(), &fresh));
     assert_eq!(reread.stats().engine_runs, 0);
     std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
-fn truncated_flipped_and_mis_keyed_shards_are_misses_and_self_heal() {
+fn truncated_flipped_and_mis_keyed_legacy_shards_are_misses_and_self_heal() {
     let dir = tmp("corrupt");
     std::fs::remove_dir_all(&dir).ok();
     let point = SimPoint::kernel(coffee_lake(), "mxv", MIB, StridingConfig::new(2, 1), true)
@@ -168,7 +199,13 @@ fn truncated_flipped_and_mis_keyed_shards_are_misses_and_self_heal() {
     let store = ResultStore::persistent(&dir);
     let good = store.get_or_run(&mut EngineCache::new(), &point).unwrap();
     let good_bytes = serialize_result(point.key(), &good);
-    let shard = store.disk_path(point.key()).unwrap();
+    let shard = store.write_legacy_shard(point.key(), &good).unwrap();
+    let seg_file = store.segment_location(point.key()).unwrap().0;
+    drop(store);
+    // Strip the segment tier so only the legacy tree remains — this test
+    // pins the PR-5 fallback read path.
+    std::fs::remove_file(&seg_file).unwrap();
+    std::fs::remove_file(dir.join(INDEX_FILE)).unwrap();
 
     // Exhaustive-ish truncation.
     for cut in [0, 1, 10, good_bytes.len() / 2, good_bytes.len() - 1] {
@@ -201,20 +238,204 @@ fn truncated_flipped_and_mis_keyed_shards_are_misses_and_self_heal() {
     let other = SimPoint::kernel(coffee_lake(), "mxv", MIB, StridingConfig::new(4, 1), true)
         .unwrap();
     assert_ne!(point.key(), other.key());
-    let other_shard = store.disk_path(other.key()).unwrap();
-    std::fs::create_dir_all(other_shard.parent().unwrap()).unwrap();
     std::fs::write(&shard, &good_bytes).unwrap();
+    let smuggle_store = ResultStore::persistent(&dir);
+    let other_shard = smuggle_store.write_legacy_shard(other.key(), &good).unwrap();
     std::fs::copy(&shard, &other_shard).unwrap();
+    drop(smuggle_store);
     let s = ResultStore::persistent(&dir);
     assert!(s.lookup(other.key()).is_none(), "smuggled shard must not serve");
+    drop(s);
+    std::fs::remove_file(&other_shard).unwrap();
 
-    // Self-heal: a corrupted shard is rewritten by the next miss, and
-    // the healed result is bit-identical to the original.
+    // Self-heal: a corrupted shard degrades to a miss; the re-simulated
+    // result is bit-identical and lands in the segment tier, which then
+    // shadows the still-corrupt shard for good.
     std::fs::write(&shard, "garbage").unwrap();
     let healing = ResultStore::persistent(&dir);
     let healed = healing.get_or_run(&mut EngineCache::new(), &point).unwrap();
     assert_eq!(serialize_result(point.key(), &healed), good_bytes);
-    assert_eq!(std::fs::read_to_string(&shard).unwrap(), good_bytes);
+    assert_eq!(healing.stats().engine_runs, 1);
+    drop(healing);
+    let warm = ResultStore::persistent(&dir);
+    let served = warm.get_or_run(&mut EngineCache::new(), &point).unwrap();
+    assert_eq!(serialize_result(point.key(), &served), good_bytes);
+    let ws = warm.stats();
+    assert_eq!((ws.engine_runs, ws.legacy_hits), (0, 0), "segment record shadows the bad shard");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_segment_tail_degrades_to_a_self_healing_miss() {
+    let dir = tmp("seg_tail");
+    std::fs::remove_dir_all(&dir).ok();
+    let m = coffee_lake();
+    let p1 = SimPoint::micro(m, MicroOp::LoadAligned, 2, MIB, true, false);
+    let p2 = SimPoint::micro(m, MicroOp::LoadAligned, 8, MIB, true, false);
+    let store = ResultStore::persistent(&dir);
+    let mut engines = EngineCache::new();
+    let r1 = store.get_or_run(&mut engines, &p1).unwrap();
+    let r2 = store.get_or_run(&mut engines, &p2).unwrap();
+    let seg_file = store.segment_location(p1.key()).unwrap().0;
+    assert_eq!(seg_file, store.segment_location(p2.key()).unwrap().0, "one segment");
+    drop(store);
+
+    // Kill-during-append: the tail record loses its last 5 bytes. The
+    // index says the segment covers more than the file holds, so the
+    // open distrusts it, rescans, seals the torn tail, and keeps p1.
+    let bytes = std::fs::read(&seg_file).unwrap();
+    std::fs::write(&seg_file, &bytes[..bytes.len() - 5]).unwrap();
+
+    let warm = ResultStore::persistent(&dir);
+    // Two discard events: the index's coverage claim is distrusted, then
+    // the rescan hits the torn record itself.
+    assert!(warm.stats().corrupt_discards >= 1, "torn tail detected at open");
+    let got1 = warm.lookup(p1.key()).expect("intact head record still serves");
+    assert_eq!(serialize_result(p1.key(), &got1), serialize_result(p1.key(), &r1));
+    let healed = warm.get_or_run(&mut engines, &p2).unwrap();
+    assert_eq!(
+        serialize_result(p2.key(), &healed),
+        serialize_result(p2.key(), &r2),
+        "re-simulated tail record must be bit-identical"
+    );
+    assert_eq!(warm.stats().engine_runs, 1, "exactly the torn record re-simulates");
+    drop(warm);
+
+    // The heal is durable: a third store serves both from disk.
+    let third = ResultStore::persistent(&dir);
+    assert!(third.lookup(p1.key()).is_some() && third.lookup(p2.key()).is_some());
+    assert_eq!(third.stats().engine_runs, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_index_falls_back_to_segment_scans_with_zero_engine_runs() {
+    let dir = tmp("torn_index");
+    std::fs::remove_dir_all(&dir).ok();
+    let m = coffee_lake();
+    let points: Vec<SimPoint> = [1u32, 2, 4, 8, 16, 32]
+        .iter()
+        .map(|&s| SimPoint::micro(m, MicroOp::CopyAligned, s, MIB, true, false))
+        .collect();
+    let store = ResultStore::persistent(&dir);
+    let cold = Planner::new(&store).run(&points).unwrap();
+    drop(store);
+
+    // Tear the index mid-byte; the open must fall back to full scans.
+    let index = dir.join(INDEX_FILE);
+    let mut bytes = std::fs::read(&index).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&index, &bytes).unwrap();
+
+    let warm = ResultStore::persistent(&dir);
+    let served = Planner::new(&warm).run(&points).unwrap();
+    for ((p, a), b) in points.iter().zip(&cold).zip(&served) {
+        assert_eq!(
+            serialize_result(p.key(), a),
+            serialize_result(p.key(), b),
+            "scan-rebuilt store diverged on {}",
+            p.label()
+        );
+    }
+    assert_eq!(warm.stats().engine_runs, 0, "a torn index never costs engine runs");
+    warm.flush(); // rewrite a good index
+    drop(warm);
+    let reopened = ResultStore::persistent(&dir);
+    assert!(reopened.lookup(points[0].key()).is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_compaction_kill_states_serve_identically_and_recompact() {
+    let dir = tmp("kill_compact");
+    std::fs::remove_dir_all(&dir).ok();
+    let m = coffee_lake();
+    let points: Vec<SimPoint> = [1u32, 4, 32]
+        .iter()
+        .map(|&s| SimPoint::micro(m, MicroOp::StoreAligned, s, MIB, false, false))
+        .collect();
+    let store = ResultStore::persistent(&dir);
+    let cold = Planner::new(&store).run(&points).unwrap();
+    let seg0 = store.segment_location(points[0].key()).unwrap().0;
+    drop(store);
+
+    // A compaction killed after rewriting but before deleting the source
+    // leaves the same records duplicated across two segments, and an
+    // index that predates both. Fabricate exactly that state.
+    let seg1 = seg0.with_file_name(multistride::exec::segment::segment_file_name(1));
+    std::fs::copy(&seg0, &seg1).unwrap();
+    std::fs::remove_file(dir.join(INDEX_FILE)).unwrap();
+
+    let warm = ResultStore::persistent(&dir);
+    let served = Planner::new(&warm).run(&points).unwrap();
+    for ((p, a), b) in points.iter().zip(&cold).zip(&served) {
+        assert_eq!(
+            serialize_result(p.key(), a),
+            serialize_result(p.key(), b),
+            "duplicated-segment store diverged on {}",
+            p.label()
+        );
+    }
+    assert_eq!(warm.stats().engine_runs, 0);
+    drop(warm);
+
+    // Re-running compaction from the kill state converges: duplicates
+    // fold to one live copy each and the result still serves bit-exact.
+    let report = lifecycle::compact(&dir).unwrap();
+    assert_eq!(report.rewritten, points.len() as u64);
+    let after = ResultStore::persistent(&dir);
+    let again = Planner::new(&after).run(&points).unwrap();
+    for ((p, a), b) in points.iter().zip(&cold).zip(&again) {
+        assert_eq!(serialize_result(p.key(), a), serialize_result(p.key(), b));
+    }
+    assert_eq!(after.stats().engine_runs, 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mixed_legacy_and_segment_directories_serve_then_migrate() {
+    let dir = tmp("mixed");
+    std::fs::remove_dir_all(&dir).ok();
+    let m = coffee_lake();
+    let seg_point = SimPoint::micro(m, MicroOp::LoadUnaligned, 4, MIB, true, false);
+    let old_point = SimPoint::micro(m, MicroOp::LoadUnaligned, 16, MIB, true, false);
+    let mut engines = EngineCache::new();
+
+    // The old point's result exists only as a PR-5 file-per-point shard;
+    // the new point's only as a segment record.
+    let oracle = ResultStore::ephemeral();
+    let old_result = oracle.get_or_run(&mut engines, &old_point).unwrap();
+    let store = ResultStore::persistent(&dir);
+    let seg_result = store.get_or_run(&mut engines, &seg_point).unwrap();
+    store.write_legacy_shard(old_point.key(), &old_result).unwrap();
+    drop(store);
+
+    let want_seg = serialize_result(seg_point.key(), &seg_result);
+    let want_old = serialize_result(old_point.key(), &old_result);
+    let warm = ResultStore::persistent(&dir);
+    let got_seg = warm.lookup(seg_point.key()).expect("segment record serves");
+    let got_old = warm.lookup(old_point.key()).expect("legacy shard serves");
+    assert_eq!(serialize_result(seg_point.key(), &got_seg), want_seg);
+    assert_eq!(serialize_result(old_point.key(), &got_old), want_old);
+    let ws = warm.stats();
+    assert_eq!((ws.engine_runs, ws.disk_hits, ws.legacy_hits), (0, 2, 1));
+    drop(warm);
+
+    // `repro store compact` folds the shard into the segment tier.
+    let report = lifecycle::compact(&dir).unwrap();
+    assert_eq!(report.migrated_legacy, 1);
+    assert_eq!(report.deleted_legacy, 1);
+    let stats = lifecycle::dir_stats(&dir);
+    assert_eq!((stats.legacy_files, stats.live_records), (0, 2));
+
+    let migrated = ResultStore::persistent(&dir);
+    let a = migrated.lookup(seg_point.key()).expect("still serves");
+    let b = migrated.lookup(old_point.key()).expect("migrated record serves");
+    assert_eq!(serialize_result(seg_point.key(), &a), want_seg);
+    assert_eq!(serialize_result(old_point.key(), &b), want_old);
+    let ms = migrated.stats();
+    assert_eq!((ms.engine_runs, ms.legacy_hits), (0, 0), "migration leaves no legacy reads");
     std::fs::remove_dir_all(&dir).ok();
 }
 
