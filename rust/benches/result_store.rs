@@ -15,6 +15,8 @@
 //!   (default 8 MiB; CI-scale runs can shrink it).
 //! * `MULTISTRIDE_STORE_SYNTH_POINTS` — synthetic-load size for the
 //!   segment-vs-file-per-point section (default one million records).
+//! * `MULTISTRIDE_STORE_MERGE_POINTS` — synthetic-load size for the
+//!   grid merge-throughput section (default 200k records).
 //! * `MULTISTRIDE_BENCH_JSON` — output path for the JSON record
 //!   (default `BENCH_result_store.json` in the working directory).
 //!
@@ -32,7 +34,7 @@ use common::{env_u64, write_bench_json, JsonScenario};
 use multistride::config::coffee_lake;
 use multistride::coordinator::experiments::{EngineCache, MICRO_STRIDES};
 use multistride::exec::format::{decode_result_bin, serialize_result, RESULT_BIN_BYTES};
-use multistride::exec::{Planner, ResultStore, SimPoint};
+use multistride::exec::{grid, lifecycle, Planner, ResultStore, SimPoint};
 use multistride::kernels::library::kernel_by_name;
 use multistride::kernels::micro::MicroOp;
 use multistride::sim::RunResult;
@@ -256,6 +258,75 @@ fn main() {
          (got {warm_rate:.0} vs {base_rate:.0} points/s)"
     );
 
+    // ——— Grid merge throughput: the synthetic load split across two
+    // disjoint shard stores by the grid partition function, then folded
+    // back into one store by content key — what a two-host grid run
+    // pays to reassemble a single results directory.
+    let merge_n = env_u64("MULTISTRIDE_STORE_MERGE_POINTS", 200_000);
+    let pid = std::process::id();
+    let shard_dirs = [
+        std::env::temp_dir().join(format!("multistride_store_bench_sh1_{pid}")),
+        std::env::temp_dir().join(format!("multistride_store_bench_sh2_{pid}")),
+    ];
+    let merged_dir = std::env::temp_dir().join(format!("multistride_store_bench_merged_{pid}"));
+    for d in &shard_dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+    std::fs::remove_dir_all(&merged_dir).ok();
+    {
+        let shards =
+            [ResultStore::persistent(&shard_dirs[0]), ResultStore::persistent(&shard_dirs[1])];
+        for i in 0..merge_n {
+            let key = synth_key(i);
+            shards[grid::shard_of(key, 2) as usize - 1].insert(key, Arc::new(synth_result(i)));
+        }
+    } // drop seals both shard stores: indexes flushed
+    let sources = shard_dirs.to_vec();
+    let t = Instant::now();
+    let report = grid::merge(&sources, &merged_dir).expect("merge runs");
+    let merge_secs = t.elapsed().as_secs_f64();
+    assert!(report.is_clean(), "disjoint shards cannot conflict");
+    assert_eq!(report.merged, merge_n, "every shard record folds in");
+    println!(
+        "{:>42}: {:>10.1} points/s ({merge_n} points, {merge_secs:.3} s)",
+        "grid merge (two disjoint shards)",
+        merge_n as f64 / merge_secs
+    );
+    scenarios.push(JsonScenario {
+        label: "grid merge (two disjoint shards)".into(),
+        unit: "points",
+        count: merge_n,
+        seconds: merge_secs,
+    });
+
+    let t = Instant::now();
+    let again = grid::merge(&sources, &merged_dir).expect("re-merge runs");
+    let remerge_secs = t.elapsed().as_secs_f64();
+    assert_eq!((again.merged, again.already_present), (0, merge_n), "re-merge is a pure no-op");
+    println!(
+        "{:>42}: {:>10.1} points/s ({merge_n} points, {remerge_secs:.3} s)",
+        "grid re-merge (idempotent no-op)",
+        merge_n as f64 / remerge_secs
+    );
+    scenarios.push(JsonScenario {
+        label: "grid re-merge (idempotent no-op)".into(),
+        unit: "points",
+        count: merge_n,
+        seconds: remerge_secs,
+    });
+    let merged_stats = lifecycle::dir_stats(&merged_dir);
+    assert_eq!(merged_stats.live_records, merge_n, "merged store holds the full set");
+    let merged_store = ResultStore::persistent(&merged_dir);
+    for i in [0, merge_n / 2, merge_n - 1] {
+        let got = merged_store.lookup(synth_key(i)).expect("merged record serves");
+        assert_eq!(
+            serialize_result(synth_key(i), &got),
+            serialize_result(synth_key(i), &synth_result(i)),
+            "merged record {i} diverged"
+        );
+    }
+    drop(merged_store);
+
     let json_path = std::env::var("MULTISTRIDE_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_result_store.json".into());
     write_bench_json(
@@ -267,12 +338,17 @@ fn main() {
             ("distinct_points", distinct),
             ("synthetic_points", synth_n),
             ("baseline_points", base_n),
+            ("merge_points", merge_n),
         ],
         &scenarios,
     );
     std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_dir_all(&base_dir).ok();
     std::fs::remove_dir_all(&seg_dir).ok();
+    for d in &shard_dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+    std::fs::remove_dir_all(&merged_dir).ok();
 }
 
 /// Synthetic content key i — a splitmix-style spread keeps the shard

@@ -376,15 +376,10 @@ pub fn figure6(
     figure6_on(&ResultStore::ephemeral(), machine, kernel, budget, max_total, prefetch)
 }
 
-/// [`figure6`] against a caller-owned result store.
-pub fn figure6_on(
-    store: &ResultStore,
-    machine: MachineConfig,
-    kernel: &str,
-    budget: u64,
-    max_total: u32,
-    prefetch: bool,
-) -> Vec<KernelPoint> {
+/// The Figure 6 config set at `max_total` — extracted from
+/// [`figure6_on`] so the sharded grid plan ([`repro_all_points`])
+/// enumerates exactly the sweep's configurations.
+pub fn figure6_configs(max_total: u32) -> Vec<StridingConfig> {
     let mut cfgs: Vec<StridingConfig> = Vec::new();
     for t in figure6_totals(max_total) {
         for c in enumerate_configs(t) {
@@ -394,8 +389,22 @@ pub fn figure6_on(
         }
     }
     cfgs.dedup_by_key(|c| (c.stride_unroll, c.portion_unroll));
-    let jobs: Vec<(String, StridingConfig)> =
-        cfgs.into_iter().map(|c| (kernel.to_string(), c)).collect();
+    cfgs
+}
+
+/// [`figure6`] against a caller-owned result store.
+pub fn figure6_on(
+    store: &ResultStore,
+    machine: MachineConfig,
+    kernel: &str,
+    budget: u64,
+    max_total: u32,
+    prefetch: bool,
+) -> Vec<KernelPoint> {
+    let jobs: Vec<(String, StridingConfig)> = figure6_configs(max_total)
+        .into_iter()
+        .map(|c| (kernel.to_string(), c))
+        .collect();
     kernel_points_on(store, machine, "figure6", budget, prefetch, &jobs)
         .into_iter()
         .flatten()
@@ -708,6 +717,85 @@ pub fn figure7_kernels() -> Vec<String> {
     figure6_kernels().into_iter().filter(|k| k != "gemversum" && has_vendor_model(k)).collect()
 }
 
+/// The simulate-or-skip classification every kernel sweep applies,
+/// reduced to its point: `None` when the kernel cannot host the config
+/// or the variant is infeasible (those rows never reach an engine).
+fn kernel_sim_point(
+    machine: MachineConfig,
+    name: &str,
+    budget: u64,
+    cfg: StridingConfig,
+    prefetch: bool,
+) -> Option<SimPoint> {
+    let pk = kernel_by_name(name, budget)?;
+    let t = transform(&pk.spec, cfg).ok()?;
+    if !is_feasible(&t, machine.simd_registers) {
+        return None;
+    }
+    Some(SimPoint::kernel_from_spec(machine, name, budget, cfg, prefetch, &pk.spec))
+}
+
+/// The full `repro all` simulation plan as one flat, key-deduplicated
+/// point batch — the partitionable face of the reproduction: the micro
+/// grids (figure2/3/4 at the machine's array size, figure5's pow2 grid
+/// across every preset), every Figure 6 sweep point (figure7's sweep
+/// half is a subset), the registry-wide universe variant family, and
+/// the Figure 7 reference schedules. `repro grid --shard k/n` hands
+/// this plan to [`crate::exec::grid::run_shard`]; a store populated by
+/// all shards then serves `repro all` without engine work. Tuner probe
+/// points are excluded by design: probes run at tuner-chosen reduced
+/// budgets, and the search's full-budget rung reads these points.
+pub fn repro_all_points(
+    machine: MachineConfig,
+    scale: ScaleConfig,
+    max_total: u32,
+    prefetch: bool,
+) -> Vec<SimPoint> {
+    let mut points: Vec<SimPoint> = Vec::new();
+    let mut micro_grid = |m: MachineConfig, bytes: u64| {
+        for pf in [true, false] {
+            for op in MicroOp::all() {
+                for &s in &MICRO_STRIDES {
+                    points.push(SimPoint::micro(m, op, s, bytes, pf, false));
+                    if op == MicroOp::StoreNt {
+                        points.push(SimPoint::micro(m, op, s, bytes, pf, true));
+                    }
+                }
+            }
+        }
+    };
+    micro_grid(machine, scale.micro_bytes);
+    for preset in crate::config::MachinePreset::all() {
+        micro_grid(preset.config(), scale.micro_pow2_bytes);
+    }
+    let budget = scale.kernel_bytes;
+    let cfgs = figure6_configs(max_total);
+    for name in figure6_kernels() {
+        for &cfg in &cfgs {
+            points.extend(kernel_sim_point(machine, &name, budget, cfg, prefetch));
+        }
+    }
+    for name in crate::runtime::universe_names(budget) {
+        for cfg in variant_configs(2) {
+            points.extend(kernel_sim_point(machine, &name, budget, cfg, prefetch));
+        }
+    }
+    // References run at the machine's own prefetch setting (see
+    // [`run_reference_on`]); the sweep-derived baselines need no points.
+    for name in figure7_kernels() {
+        for r in Reference::for_kernel(&name) {
+            if matches!(r, Reference::BestSingleStrided | Reference::NoUnroll) {
+                continue;
+            }
+            let pf = machine.prefetch.enabled;
+            points.extend(kernel_sim_point(machine, &name, budget, r.schedule(), pf));
+        }
+    }
+    let mut seen = std::collections::HashSet::new();
+    points.retain(|p| seen.insert(p.key()));
+    points
+}
+
 /// Tune one kernel against the plan cache (cold-search on miss/stale,
 /// persist the winner). One-shot convenience over [`crate::tune::Tuner`];
 /// batch callers should prefer [`tune_universe`] / [`tune_kernels`],
@@ -831,6 +919,34 @@ mod tests {
             run_kernel(coffee_lake(), "mxv", 8 * MIB, StridingConfig::new(16, 4), true).unwrap();
         assert!(!p.feasible);
         assert_eq!(p.throughput_gib, 0.0);
+    }
+
+    #[test]
+    fn repro_all_plan_is_deduped_and_covers_the_sweeps() {
+        let scale = ScaleConfig::smoke();
+        let m = coffee_lake();
+        let points = repro_all_points(m, scale, 6, true);
+        let mut keys: Vec<u64> = points.iter().map(|p| p.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), points.len(), "plan must be key-deduplicated");
+        // Every figure2/3/4 micro point is in the plan…
+        for pf in [true, false] {
+            for &s in &MICRO_STRIDES {
+                let p = SimPoint::micro(m, MicroOp::LoadAligned, s, scale.micro_bytes, pf, false);
+                assert!(points.iter().any(|q| q.key() == p.key()), "missing micro s={s}");
+            }
+        }
+        // …as is figure5's pow2 grid on every preset…
+        for preset in crate::config::MachinePreset::all() {
+            let mc = preset.config();
+            let pow2 = scale.micro_pow2_bytes;
+            let p = SimPoint::micro(mc, MicroOp::LoadAligned, 1, pow2, true, false);
+            assert!(points.iter().any(|q| q.key() == p.key()), "missing pow2 on {}", mc.name);
+        }
+        // …and the kernel sweeps contribute points too.
+        use crate::exec::point::Workload;
+        assert!(points.iter().any(|p| matches!(p.workload, Workload::Kernel { .. })));
     }
 
     #[test]

@@ -1,0 +1,531 @@
+//! Sharded grid execution and conflict-free store merge: the library
+//! side of `repro grid --shard k/n` and `repro store merge`.
+//!
+//! The experiment grid is embarrassingly partitionable because every
+//! job already has a content key ([`SimPoint::key`]): *partition the
+//! key space, not the plan order*. [`shard_of`] maps a key to exactly
+//! one of `n` shards by fixed-point range partition — deterministic,
+//! total, and independent of how the plan was enumerated, so any two
+//! hosts that agree on `n` agree on ownership without coordination.
+//!
+//! A shard run ([`run_shard`]) simulates only its owned subset and
+//! writes a checksummed ownership manifest
+//! (`shard-0001-of-0002.manifest`) next to the segment files: magic
+//! line, `shard`/`plan_points`/`owned` fields, one sorted `key =` line
+//! per owned point, and a trailing FNV-64 checksum over everything
+//! above it. The manifest is an audit artifact — merge works on the
+//! segment bytes themselves and only *validates* manifests it finds.
+//!
+//! [`merge`] unions segment directories by content key, idempotent by
+//! construction: a record already present with identical payload bytes
+//! counts as `already_present` and nothing is written, so re-running a
+//! merge is a no-op. Same-key/different-bytes is a **conflict**: the
+//! destination copy is kept, the source bytes are quarantined under
+//! `<dst>/quarantine/` as a full record frame, and the report turns
+//! unclean ([`MergeReport::is_clean`]) — a conflicting byte is never
+//! silently chosen, because by the determinism contract it can only
+//! mean corruption or a simulator-revision mismatch. Legacy
+//! file-per-point shards fold in through the same path. All I/O goes
+//! through [`StoreIo`], so `tests/chaos_store.rs` can crash and corrupt
+//! every step of a merge.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::tune::plan::fnv64;
+use crate::{ensure, format_err, Result};
+
+use super::format::{encode_result_bin, parse_result};
+use super::lifecycle::walk_legacy;
+use super::planner::Planner;
+use super::point::SimPoint;
+use super::segment::{encode_record, SegmentStore, DEFAULT_ROLL_BYTES};
+use super::store::ResultStore;
+use super::vfs::{default_io, with_retry, StoreIo};
+
+/// First line of a shard-ownership manifest.
+pub const MANIFEST_MAGIC: &str = "MSGRID01";
+
+/// Directory under the merge destination holding conflicting records.
+pub const QUARANTINE_DIR: &str = "quarantine";
+
+/// Which shard of `count` a key belongs to (1-based). Fixed-point range
+/// partition: shard `k` owns keys in `[(k-1)/n, k/n)` of the u64 space,
+/// so ownership is total, disjoint, and independent of plan order.
+pub fn shard_of(key: u64, count: u32) -> u32 {
+    ((key as u128 * count as u128) >> 64) as u32 + 1
+}
+
+/// One shard identity, as `--shard k/n` names it (1-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: u32,
+    pub count: u32,
+}
+
+impl ShardSpec {
+    pub fn new(index: u32, count: u32) -> Result<Self> {
+        ensure!(count >= 1, "shard: the shard count must be at least 1");
+        ensure!(
+            (1..=count).contains(&index),
+            "shard: index {index} out of range 1..={count}"
+        );
+        Ok(Self { index, count })
+    }
+
+    /// Parse the CLI form `k/n`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (k, n) = s
+            .split_once('/')
+            .ok_or_else(|| format_err!("shard: expected k/n (e.g. 1/2), got {s:?}"))?;
+        let index: u32 =
+            k.parse().map_err(|_| format_err!("shard: not a number: {k:?} in {s:?}"))?;
+        let count: u32 =
+            n.parse().map_err(|_| format_err!("shard: not a number: {n:?} in {s:?}"))?;
+        Self::new(index, count)
+    }
+
+    pub fn owns(&self, key: u64) -> bool {
+        shard_of(key, self.count) == self.index
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.index, self.count)
+    }
+}
+
+/// Conventional manifest file name for a shard.
+pub fn manifest_file_name(shard: ShardSpec) -> String {
+    format!("shard-{:04}-of-{:04}.manifest", shard.index, shard.count)
+}
+
+/// A shard run's ownership record: which keys of the plan this shard
+/// owned (sorted, deduped), self-checksummed against damage in transit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GridManifest {
+    pub shard: ShardSpec,
+    /// Total points in the plan the shard partitioned (all shards).
+    pub plan_points: u64,
+    /// Owned content keys, strictly increasing.
+    pub keys: Vec<u64>,
+}
+
+impl GridManifest {
+    pub fn serialize(&self) -> String {
+        let mut body = String::new();
+        body.push_str(MANIFEST_MAGIC);
+        body.push('\n');
+        body.push_str(&format!("shard = {}\n", self.shard.label()));
+        body.push_str(&format!("plan_points = {}\n", self.plan_points));
+        body.push_str(&format!("owned = {}\n", self.keys.len()));
+        for k in &self.keys {
+            body.push_str(&format!("key = {k:016x}\n"));
+        }
+        let sum = fnv64(body.as_bytes());
+        format!("{body}checksum = {sum:016x}\n")
+    }
+
+    /// Strict parse: checksum, magic, field order, and key monotonicity
+    /// all verified. Any damage is an error, never a partial manifest.
+    pub fn parse(text: &str) -> Result<Self> {
+        let at = text
+            .rfind("checksum = ")
+            .ok_or_else(|| format_err!("manifest: missing checksum line"))?;
+        ensure!(
+            at > 0 && text.as_bytes()[at - 1] == b'\n',
+            "manifest: checksum must start its own line"
+        );
+        let (body, sum_line) = text.split_at(at);
+        let sum_hex = sum_line
+            .strip_prefix("checksum = ")
+            .and_then(|s| s.strip_suffix('\n'))
+            .ok_or_else(|| format_err!("manifest: malformed checksum line"))?;
+        let sum = u64::from_str_radix(sum_hex, 16)
+            .map_err(|_| format_err!("manifest: checksum is not 64-bit hex"))?;
+        ensure!(
+            sum == fnv64(body.as_bytes()),
+            "manifest: checksum mismatch (file damaged or truncated)"
+        );
+        let mut lines = body.lines();
+        ensure!(
+            lines.next() == Some(MANIFEST_MAGIC),
+            "manifest: bad magic (want {MANIFEST_MAGIC})"
+        );
+        let shard = lines
+            .next()
+            .and_then(|l| l.strip_prefix("shard = "))
+            .ok_or_else(|| format_err!("manifest: missing shard field"))
+            .and_then(ShardSpec::parse)?;
+        let plan_points: u64 = lines
+            .next()
+            .and_then(|l| l.strip_prefix("plan_points = "))
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| format_err!("manifest: missing plan_points field"))?;
+        let owned: u64 = lines
+            .next()
+            .and_then(|l| l.strip_prefix("owned = "))
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| format_err!("manifest: missing owned field"))?;
+        let mut keys = Vec::new();
+        for line in lines {
+            let hex = line
+                .strip_prefix("key = ")
+                .ok_or_else(|| format_err!("manifest: unexpected line {line:?}"))?;
+            let k = u64::from_str_radix(hex, 16)
+                .map_err(|_| format_err!("manifest: bad key {hex:?}"))?;
+            if let Some(&prev) = keys.last() {
+                ensure!(k > prev, "manifest: keys must be strictly increasing");
+            }
+            keys.push(k);
+        }
+        ensure!(
+            keys.len() as u64 == owned,
+            "manifest: owned = {owned} but {} key lines",
+            keys.len()
+        );
+        Ok(Self { shard, plan_points, keys })
+    }
+}
+
+/// Write a manifest atomically (temp file + rename) into `dir`.
+pub fn write_manifest(io: &dyn StoreIo, dir: &Path, m: &GridManifest) -> Result<PathBuf> {
+    with_retry(|| io.create_dir_all(dir))
+        .map_err(|e| format_err!("manifest: cannot create {dir:?}: {e}"))?;
+    let name = manifest_file_name(m.shard);
+    let path = dir.join(&name);
+    let tmp = dir.join(format!("{name}.tmp{}", std::process::id()));
+    with_retry(|| io.write(&tmp, m.serialize().as_bytes()))
+        .map_err(|e| format_err!("manifest: cannot write {tmp:?}: {e}"))?;
+    with_retry(|| io.rename(&tmp, &path))
+        .map_err(|e| format_err!("manifest: cannot move into place at {path:?}: {e}"))?;
+    Ok(path)
+}
+
+/// Load and strictly validate a manifest file.
+pub fn load_manifest(io: &dyn StoreIo, path: &Path) -> Result<GridManifest> {
+    let bytes =
+        with_retry(|| io.read(path)).map_err(|e| format_err!("manifest {path:?}: {e}"))?;
+    let text = String::from_utf8(bytes)
+        .map_err(|_| format_err!("manifest {path:?}: not valid UTF-8"))?;
+    GridManifest::parse(&text).map_err(|e| format_err!("manifest {path:?}: {e}"))
+}
+
+/// What `repro grid --shard k/n` did.
+#[derive(Debug, Clone)]
+pub struct GridReport {
+    pub shard: ShardSpec,
+    pub plan_points: u64,
+    pub owned: u64,
+    pub manifest: PathBuf,
+}
+
+/// Simulate the shard-owned subset of `points` through `store` and
+/// write this shard's ownership manifest next to the segments.
+pub fn run_shard(store: &ResultStore, shard: ShardSpec, points: &[SimPoint]) -> Result<GridReport> {
+    let dir = store
+        .dir()
+        .ok_or_else(|| format_err!("grid requires a persistent result store (--results DIR)"))?
+        .to_path_buf();
+    let owned: Vec<SimPoint> = points.iter().filter(|p| shard.owns(p.key())).cloned().collect();
+    Planner::new(store).run(&owned)?;
+    store.flush();
+    let mut keys: Vec<u64> = owned.iter().map(|p| p.key()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let manifest = GridManifest { shard, plan_points: points.len() as u64, keys };
+    let owned_count = manifest.keys.len() as u64;
+    let path = write_manifest(&*store.io(), &dir, &manifest)?;
+    Ok(GridReport { shard, plan_points: points.len() as u64, owned: owned_count, manifest: path })
+}
+
+/// What a `repro store merge` did, per invariant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeReport {
+    /// Source directories visited.
+    pub sources: u64,
+    /// Records appended to the destination.
+    pub merged: u64,
+    /// Records already present with identical bytes (the no-op case).
+    pub already_present: u64,
+    /// Same-key/different-bytes records quarantined, never applied.
+    pub conflicts: u64,
+    /// Source or destination records dropped as corrupt along the way.
+    pub corrupt_skipped: u64,
+    /// … of `merged`, records folded from legacy file-per-point shards.
+    pub legacy_folded: u64,
+    /// Shard manifests found and validated in the sources.
+    pub manifests_seen: u64,
+    /// Shard manifests that failed validation (reported, not fatal).
+    pub manifests_corrupt: u64,
+}
+
+impl MergeReport {
+    /// Clean means no quarantined conflicts — the gate `repro store
+    /// merge` exits nonzero on.
+    pub fn is_clean(&self) -> bool {
+        self.conflicts == 0
+    }
+}
+
+enum MergeOutcome {
+    Merged,
+    AlreadyPresent,
+    Conflict,
+    /// The destination copy failed validation and was dropped; the
+    /// source copy healed it.
+    ReplacedCorrupt,
+}
+
+/// Union `sources` into `dest` by content key (real filesystem).
+pub fn merge(sources: &[PathBuf], dest: &Path) -> Result<MergeReport> {
+    merge_with(default_io(), sources, dest)
+}
+
+/// [`merge`] over an explicit I/O backend.
+pub fn merge_with(io: Arc<dyn StoreIo>, sources: &[PathBuf], dest: &Path) -> Result<MergeReport> {
+    ensure!(!sources.is_empty(), "merge: at least one SRC directory is required");
+    for s in sources {
+        ensure!(
+            s.as_path() != dest,
+            "merge: source {} is also the destination",
+            s.display()
+        );
+    }
+    let mut dst = SegmentStore::open_with(dest, DEFAULT_ROLL_BYTES, Arc::clone(&io));
+    let mut report = MergeReport { sources: sources.len() as u64, ..MergeReport::default() };
+    for src_dir in sources {
+        let tag = source_tag(src_dir);
+        // Manifests ride along for audit; a corrupt one is reported but
+        // does not block the byte-level union below.
+        if let Ok(entries) = io.list_dir(src_dir) {
+            for e in entries {
+                let p = src_dir.join(&e.name);
+                if e.is_dir || p.extension().and_then(|x| x.to_str()) != Some("manifest") {
+                    continue;
+                }
+                match load_manifest(&*io, &p) {
+                    Ok(_) => report.manifests_seen += 1,
+                    Err(err) => {
+                        report.manifests_corrupt += 1;
+                        eprintln!("[merge] corrupt manifest {}: {err}", p.display());
+                    }
+                }
+            }
+        }
+        let mut src = SegmentStore::open_with(src_dir, DEFAULT_ROLL_BYTES, Arc::clone(&io));
+        let mut keys: Vec<u64> = src.entries().into_iter().map(|(k, _)| k).collect();
+        keys.sort_unstable();
+        for key in keys {
+            match src.read_raw(key) {
+                None => {}
+                Some(Err(e)) => {
+                    report.corrupt_skipped += 1;
+                    eprintln!("[merge] corrupt source record {key:#018x} skipped: {e}");
+                }
+                Some(Ok((stamp, payload))) => {
+                    match merge_one(&*io, &mut dst, dest, &tag, key, stamp, &payload)? {
+                        MergeOutcome::Merged => report.merged += 1,
+                        MergeOutcome::AlreadyPresent => report.already_present += 1,
+                        MergeOutcome::Conflict => report.conflicts += 1,
+                        MergeOutcome::ReplacedCorrupt => {
+                            report.merged += 1;
+                            report.corrupt_skipped += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // Legacy file-per-point shards fold in through the same path.
+        let mut failed = None;
+        walk_legacy(&*io, src_dir, |p, e| {
+            if failed.is_some() {
+                return;
+            }
+            let parsed = io
+                .read(p)
+                .ok()
+                .and_then(|b| String::from_utf8(b).ok())
+                .and_then(|t| parse_result(&t).ok());
+            let Some((key, result)) = parsed else {
+                report.corrupt_skipped += 1;
+                eprintln!("[merge] corrupt legacy shard {} skipped", p.display());
+                return;
+            };
+            let payload = encode_result_bin(&result);
+            match merge_one(&*io, &mut dst, dest, &tag, key, e.mtime_secs, &payload) {
+                Ok(MergeOutcome::Merged) => {
+                    report.merged += 1;
+                    report.legacy_folded += 1;
+                }
+                Ok(MergeOutcome::AlreadyPresent) => report.already_present += 1,
+                Ok(MergeOutcome::Conflict) => report.conflicts += 1,
+                Ok(MergeOutcome::ReplacedCorrupt) => {
+                    report.merged += 1;
+                    report.legacy_folded += 1;
+                    report.corrupt_skipped += 1;
+                }
+                Err(err) => failed = Some(err),
+            }
+        });
+        if let Some(e) = failed {
+            return Err(e);
+        }
+    }
+    dst.flush_index()?;
+    Ok(report)
+}
+
+/// Merge one record into the destination: append when absent, no-op on
+/// identical bytes, quarantine on divergent bytes (the destination copy
+/// always survives), heal when the destination copy itself is corrupt.
+fn merge_one(
+    io: &dyn StoreIo,
+    dst: &mut SegmentStore,
+    dest: &Path,
+    src_tag: &str,
+    key: u64,
+    stamp: u64,
+    payload: &[u8],
+) -> Result<MergeOutcome> {
+    match dst.read_raw(key) {
+        None => {
+            dst.append_payload(key, stamp, payload)?;
+            Ok(MergeOutcome::Merged)
+        }
+        Some(Ok((_stamp, existing))) if existing == payload => Ok(MergeOutcome::AlreadyPresent),
+        Some(Ok(_)) => {
+            quarantine(io, dest, src_tag, key, stamp, payload);
+            Ok(MergeOutcome::Conflict)
+        }
+        Some(Err(e)) => {
+            eprintln!("[merge] dest record {key:#018x} was corrupt ({e}); healed from source");
+            dst.append_payload(key, stamp, payload)?;
+            Ok(MergeOutcome::ReplacedCorrupt)
+        }
+    }
+}
+
+/// Park a conflicting source record under `<dest>/quarantine/` as a
+/// full checksummed record frame. Best-effort: the conflict is counted
+/// either way, and the source bytes are never applied.
+fn quarantine(io: &dyn StoreIo, dest: &Path, src_tag: &str, key: u64, stamp: u64, payload: &[u8]) {
+    let dir = dest.join(QUARANTINE_DIR);
+    let path = dir.join(format!("{key:016x}-{src_tag}.rec"));
+    let frame = encode_record(key, stamp, payload);
+    let wrote = with_retry(|| io.create_dir_all(&dir))
+        .and_then(|()| with_retry(|| io.write(&path, &frame)));
+    match wrote {
+        Ok(()) => eprintln!(
+            "[merge] CONFLICT: key {key:#018x} differs between source and destination; \
+             source bytes quarantined at {} (never silently chosen)",
+            path.display()
+        ),
+        Err(e) => eprintln!(
+            "[merge] CONFLICT: key {key:#018x} differs between source and destination; \
+             quarantine write failed ({e}) — source bytes NOT applied"
+        ),
+    }
+}
+
+/// A filesystem-safe tag naming a source directory in quarantine files.
+fn source_tag(dir: &Path) -> String {
+    let name = dir.file_name().and_then(|n| n.to_str()).unwrap_or("src");
+    let tag: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    if tag.is_empty() {
+        "src".to_string()
+    } else {
+        tag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_key(i: u64) -> u64 {
+        (i + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    #[test]
+    fn partition_is_total_and_disjoint() {
+        for n in [1u32, 2, 3, 7, 16] {
+            for i in 0..500u64 {
+                let key = synth_key(i);
+                let owner = shard_of(key, n);
+                assert!((1..=n).contains(&owner), "owner {owner} of {n} for {key:#x}");
+                let owners = (1..=n)
+                    .filter(|&k| ShardSpec::new(k, n).unwrap().owns(key))
+                    .count();
+                assert_eq!(owners, 1, "key {key:#x} must have exactly one owner of {n}");
+            }
+        }
+        assert_eq!(shard_of(0, 8), 1, "the low edge lands in the first shard");
+        assert_eq!(shard_of(u64::MAX, 8), 8, "the high edge lands in the last shard");
+    }
+
+    #[test]
+    fn shard_spec_parses_and_rejects() {
+        assert_eq!(ShardSpec::parse("2/4").unwrap(), ShardSpec { index: 2, count: 4 });
+        for bad in ["0/2", "3/2", "2", "a/b", "", "1/0", "1/2/3"] {
+            assert!(ShardSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_detects_tampering() {
+        let m = GridManifest {
+            shard: ShardSpec::new(2, 3).unwrap(),
+            plan_points: 100,
+            keys: vec![1, 5, 0xdead_beef],
+        };
+        let text = m.serialize();
+        assert_eq!(GridManifest::parse(&text).unwrap(), m);
+        let tampered = text.replace("key = 0000000000000005", "key = 0000000000000006");
+        assert_ne!(tampered, text, "the tamper target line must exist");
+        assert!(GridManifest::parse(&tampered).is_err(), "checksum catches a flipped key");
+        assert!(GridManifest::parse(&text[..text.len() - 3]).is_err(), "truncation caught");
+    }
+
+    #[test]
+    fn merge_unions_disjoint_dirs_and_is_idempotent() {
+        let base = std::env::temp_dir().join(format!("msgrid_merge_{}", std::process::id()));
+        std::fs::remove_dir_all(&base).ok();
+        let (a, b, dst) = (base.join("a"), base.join("b"), base.join("dst"));
+        {
+            let io = default_io();
+            let mut sa = SegmentStore::open_with(&a, DEFAULT_ROLL_BYTES, Arc::clone(&io));
+            let mut sb = SegmentStore::open_with(&b, DEFAULT_ROLL_BYTES, io);
+            for i in 0..10u64 {
+                let key = synth_key(i);
+                let store = if shard_of(key, 2) == 1 { &mut sa } else { &mut sb };
+                store.append_payload(key, 7, format!("payload-{i}").as_bytes()).unwrap();
+            }
+            sa.flush_index().unwrap();
+            sb.flush_index().unwrap();
+        }
+        let r = merge(&[a.clone(), b.clone()], &dst).unwrap();
+        assert_eq!(r.merged, 10);
+        assert_eq!(r.conflicts, 0);
+        assert!(r.is_clean());
+        let again = merge(&[a, b], &dst).unwrap();
+        assert_eq!(again.merged, 0, "re-merge is a no-op");
+        assert_eq!(again.already_present, 10);
+        let mut d = SegmentStore::open(&dst, DEFAULT_ROLL_BYTES);
+        for i in 0..10u64 {
+            let (stamp, payload) = d.read_raw(synth_key(i)).unwrap().unwrap();
+            assert_eq!(stamp, 7);
+            assert_eq!(payload, format!("payload-{i}").into_bytes());
+        }
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn merge_refuses_a_source_equal_to_the_destination() {
+        let d = PathBuf::from("/tmp/msgrid_same");
+        assert!(merge(&[d.clone()], &d).is_err());
+        assert!(merge(&[], Path::new("/tmp/msgrid_empty")).is_err());
+    }
+}

@@ -1,5 +1,6 @@
 //! Store lifecycle tooling: the library side of `repro store
-//! {stats,gc,verify,compact}`.
+//! {stats,gc,verify,compact}` (the CLI parser here also covers `store
+//! merge`, whose implementation lives in [`super::grid`]).
 //!
 //! Each operation works on a results *directory* (not a live
 //! [`super::ResultStore`]) and composes the segment tier's own
@@ -47,18 +48,20 @@ use super::format::{parse_result, serialize_result};
 use super::point::SimPoint;
 use super::segment::{unix_now, SegmentStore, DEFAULT_ROLL_BYTES};
 use super::store::ResultStore;
+use super::vfs::{default_io, DirEntryInfo, StoreIo};
 
 /// A parsed `repro store` subcommand.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StoreCommand {
     Stats,
     Gc { max_bytes: Option<u64>, max_age_days: Option<u64> },
     Verify,
     Compact,
+    Merge { sources: Vec<PathBuf>, into: PathBuf },
 }
 
 /// The valid subcommand set, for error messages and usage text.
-pub const STORE_SUBCOMMANDS: &[&str] = &["stats", "gc", "verify", "compact"];
+pub const STORE_SUBCOMMANDS: &[&str] = &["stats", "gc", "verify", "compact", "merge"];
 
 /// Parse `repro store …` argv: the subcommand plus the store-specific
 /// flags, returning the leftover args for the generic option parser
@@ -67,6 +70,30 @@ pub fn parse_store_cli(args: &[String]) -> Result<(StoreCommand, Vec<String>)> {
     let sub = args.first().ok_or_else(|| {
         format_err!("store: missing subcommand (expected one of: {})", STORE_SUBCOMMANDS.join(", "))
     })?;
+    if sub == "merge" {
+        // Merge names its directories explicitly, so it takes no
+        // generic options: SRC... positionals plus the required --into.
+        let mut sources = Vec::new();
+        let mut into = None;
+        let mut it = args[1..].iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--into" => {
+                    let v = it.next().ok_or_else(|| format_err!("--into needs a value"))?;
+                    into = Some(PathBuf::from(v));
+                }
+                s if s.starts_with("--") => {
+                    return Err(format_err!(
+                        "store merge: unknown flag {s} (usage: store merge SRC... --into DST)"
+                    ))
+                }
+                _ => sources.push(PathBuf::from(a)),
+            }
+        }
+        ensure!(!sources.is_empty(), "store merge: at least one SRC directory is required");
+        let into = into.ok_or_else(|| format_err!("store merge: --into DST is required"))?;
+        return Ok((StoreCommand::Merge { sources, into }, Vec::new()));
+    }
     let mut max_bytes = None;
     let mut max_age_days = None;
     let mut rest = Vec::new();
@@ -131,7 +158,12 @@ pub struct DirStats {
 
 /// Take stock of a results directory.
 pub fn dir_stats(dir: &Path) -> DirStats {
-    let seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+    dir_stats_with(default_io(), dir)
+}
+
+/// [`dir_stats`] over an explicit I/O backend.
+pub fn dir_stats_with(io: Arc<dyn StoreIo>, dir: &Path) -> DirStats {
+    let seg = SegmentStore::open_with(dir, DEFAULT_ROLL_BYTES, Arc::clone(&io));
     let mut s = DirStats {
         segments: seg.segment_count(),
         segment_bytes: seg.segment_bytes(),
@@ -142,9 +174,9 @@ pub fn dir_stats(dir: &Path) -> DirStats {
         index_loaded: seg.index_loaded(),
         ..DirStats::default()
     };
-    walk_legacy(dir, |_p, m| {
+    walk_legacy(&*io, dir, |_p, e| {
         s.legacy_files += 1;
-        s.legacy_bytes += m.len();
+        s.legacy_bytes += e.len;
     });
     s
 }
@@ -169,13 +201,23 @@ pub struct GcReport {
 /// oldest-first down to the size bound, counting segment records and
 /// legacy shards against the same budget.
 pub fn gc(dir: &Path, max_bytes: Option<u64>, max_age_days: Option<u64>) -> Result<GcReport> {
+    gc_with(default_io(), dir, max_bytes, max_age_days)
+}
+
+/// [`gc`] over an explicit I/O backend.
+pub fn gc_with(
+    io: Arc<dyn StoreIo>,
+    dir: &Path,
+    max_bytes: Option<u64>,
+    max_age_days: Option<u64>,
+) -> Result<GcReport> {
     ensure!(max_bytes.is_some() || max_age_days.is_some(), "gc needs an explicit bound");
-    let mut seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+    let mut seg = SegmentStore::open_with(dir, DEFAULT_ROLL_BYTES, Arc::clone(&io));
     let mut report = GcReport::default();
     // (path, stamp, bytes) for every legacy shard still standing.
     let mut legacy: Vec<(PathBuf, u64, u64)> = Vec::new();
-    walk_legacy(dir, |p, m| {
-        legacy.push((p.to_path_buf(), mtime_secs(m), m.len()));
+    walk_legacy(&*io, dir, |p, e| {
+        legacy.push((p.to_path_buf(), e.mtime_secs, e.len));
     });
 
     if let Some(days) = max_age_days {
@@ -188,7 +230,7 @@ pub fn gc(dir: &Path, max_bytes: Option<u64>, max_age_days: Option<u64>) -> Resu
         }
         legacy.retain(|(p, stamp, _)| {
             if *stamp < cutoff {
-                if std::fs::remove_file(p).is_ok() {
+                if io.remove_file(p).is_ok() {
                     report.deleted_legacy += 1;
                 }
                 false
@@ -230,7 +272,7 @@ pub fn gc(dir: &Path, max_bytes: Option<u64>, max_age_days: Option<u64>) -> Resu
                     }
                 }
                 Victim::Shard { at, bytes } => {
-                    if std::fs::remove_file(&legacy[at].0).is_ok() {
+                    if io.remove_file(&legacy[at].0).is_ok() {
                         report.deleted_legacy += 1;
                     }
                     total -= bytes;
@@ -242,7 +284,7 @@ pub fn gc(dir: &Path, max_bytes: Option<u64>, max_age_days: Option<u64>) -> Resu
     seg.flush_index()?;
     report.live_records = seg.entry_count();
     report.live_bytes = seg.live_bytes();
-    walk_legacy(dir, |_p, m| report.live_bytes += m.len());
+    walk_legacy(&*io, dir, |_p, e| report.live_bytes += e.len);
     report.reclaimable_bytes = seg.dead_bytes();
     Ok(report)
 }
@@ -280,9 +322,19 @@ impl VerifyReport {
 /// stored byte; phase 2: bit-exact comparison against fresh simulations
 /// of the canonical plan for `machine` at `scale`).
 pub fn verify(dir: &Path, machine: MachineConfig, scale: ScaleConfig) -> Result<VerifyReport> {
+    verify_with(default_io(), dir, machine, scale)
+}
+
+/// [`verify`] over an explicit I/O backend.
+pub fn verify_with(
+    io: Arc<dyn StoreIo>,
+    dir: &Path,
+    machine: MachineConfig,
+    scale: ScaleConfig,
+) -> Result<VerifyReport> {
     let mut report = VerifyReport::default();
     {
-        let mut seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+        let mut seg = SegmentStore::open_with(dir, DEFAULT_ROLL_BYTES, Arc::clone(&io));
         for (key, _) in seg.entries() {
             match seg.lookup_result(key) {
                 Some(Ok(_)) => report.records_ok += 1,
@@ -295,8 +347,13 @@ pub fn verify(dir: &Path, machine: MachineConfig, scale: ScaleConfig) -> Result<
         }
         seg.flush_index()?; // persist any drops (self-healed index)
     }
-    walk_legacy(dir, |p, _m| {
-        let ok = std::fs::read_to_string(p).ok().and_then(|t| parse_result(&t).ok()).is_some();
+    walk_legacy(&*io, dir, |p, _e| {
+        let ok = io
+            .read(p)
+            .ok()
+            .and_then(|b| String::from_utf8(b).ok())
+            .and_then(|t| parse_result(&t).ok())
+            .is_some();
         if ok {
             report.legacy_ok += 1;
         } else {
@@ -305,7 +362,7 @@ pub fn verify(dir: &Path, machine: MachineConfig, scale: ScaleConfig) -> Result<
         }
     });
 
-    let store = ResultStore::persistent(dir);
+    let store = ResultStore::persistent_with_io(dir, DEFAULT_ROLL_BYTES, Arc::clone(&io));
     let points = canonical_points(machine, scale);
     report.resimulated = points.len() as u64;
     enum Outcome {
@@ -360,13 +417,19 @@ pub struct CompactReport {
 /// fresh segments, and delete the dead weight. The durable form of gc's
 /// eviction and the final step of the PR-5 → segment migration.
 pub fn compact(dir: &Path) -> Result<CompactReport> {
-    let mut seg = SegmentStore::open(dir, DEFAULT_ROLL_BYTES);
+    compact_with(default_io(), dir)
+}
+
+/// [`compact`] over an explicit I/O backend.
+pub fn compact_with(io: Arc<dyn StoreIo>, dir: &Path) -> Result<CompactReport> {
+    let mut seg = SegmentStore::open_with(dir, DEFAULT_ROLL_BYTES, Arc::clone(&io));
     let mut report = CompactReport::default();
     let mut legacy: Vec<(PathBuf, u64, u64)> = Vec::new();
-    walk_legacy(dir, |p, m| legacy.push((p.to_path_buf(), mtime_secs(m), m.len())));
+    walk_legacy(&*io, dir, |p, e| legacy.push((p.to_path_buf(), e.mtime_secs, e.len)));
     let legacy_bytes: u64 = legacy.iter().map(|(_, _, b)| b).sum();
     for (path, stamp, _) in &legacy {
-        let Ok(text) = std::fs::read_to_string(path) else { continue };
+        let Ok(bytes) = io.read(path) else { continue };
+        let Ok(text) = String::from_utf8(bytes) else { continue };
         let Ok((key, result)) = parse_result(&text) else { continue };
         // The segment copy wins on conflict — identical content by
         // determinism, and segments are the write tier.
@@ -380,11 +443,11 @@ pub fn compact(dir: &Path) -> Result<CompactReport> {
     report.dropped = stats.dropped;
     report.reclaimed_bytes = stats.reclaimed_bytes + legacy_bytes;
     for (path, ..) in &legacy {
-        if std::fs::remove_file(path).is_ok() {
+        if io.remove_file(path).is_ok() {
             report.deleted_legacy += 1;
         }
     }
-    prune_empty_shard_dirs(dir);
+    prune_empty_shard_dirs(&*io, dir);
     report.segments = seg.segment_count();
     report.segment_bytes = seg.segment_bytes();
     Ok(report)
@@ -423,30 +486,20 @@ pub fn canonical_points(machine: MachineConfig, scale: ScaleConfig) -> Vec<SimPo
     points
 }
 
-fn mtime_secs(m: &std::fs::Metadata) -> u64 {
-    m.modified()
-        .ok()
-        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
-        .map(|d| d.as_secs())
-        .unwrap_or(0)
-}
-
 /// Visit every legacy `<xx>/<16-hex-key>.simres` shard under `dir`.
-fn walk_legacy(dir: &Path, mut f: impl FnMut(&Path, &std::fs::Metadata)) {
-    let Ok(rd) = std::fs::read_dir(dir) else { return };
-    for sub in rd.flatten() {
-        let name = sub.file_name();
-        let Some(name) = name.to_str() else { continue };
-        if name.len() != 2 || !name.bytes().all(|b| b.is_ascii_hexdigit()) {
+pub(crate) fn walk_legacy(io: &dyn StoreIo, dir: &Path, mut f: impl FnMut(&Path, &DirEntryInfo)) {
+    let Ok(entries) = io.list_dir(dir) else { return };
+    for sub in entries {
+        let Some(name) = sub.name.to_str() else { continue };
+        if !sub.is_dir || name.len() != 2 || !name.bytes().all(|b| b.is_ascii_hexdigit()) {
             continue;
         }
-        let Ok(files) = std::fs::read_dir(sub.path()) else { continue };
-        for fe in files.flatten() {
-            let path = fe.path();
-            if path.extension().and_then(|e| e.to_str()) == Some("simres") {
-                if let Ok(m) = fe.metadata() {
-                    f(&path, &m);
-                }
+        let subdir = dir.join(&sub.name);
+        let Ok(files) = io.list_dir(&subdir) else { continue };
+        for fe in files {
+            let path = subdir.join(&fe.name);
+            if !fe.is_dir && path.extension().and_then(|e| e.to_str()) == Some("simres") {
+                f(&path, &fe);
             }
         }
     }
@@ -454,13 +507,12 @@ fn walk_legacy(dir: &Path, mut f: impl FnMut(&Path, &std::fs::Metadata)) {
 
 /// Best-effort removal of shard directories compaction emptied
 /// (`remove_dir` refuses non-empty ones, which is exactly right).
-fn prune_empty_shard_dirs(dir: &Path) {
-    let Ok(rd) = std::fs::read_dir(dir) else { return };
-    for sub in rd.flatten() {
-        let name = sub.file_name();
-        let Some(name) = name.to_str() else { continue };
-        if name.len() == 2 && name.bytes().all(|b| b.is_ascii_hexdigit()) {
-            let _ = std::fs::remove_dir(sub.path());
+fn prune_empty_shard_dirs(io: &dyn StoreIo, dir: &Path) {
+    let Ok(entries) = io.list_dir(dir) else { return };
+    for sub in entries {
+        let Some(name) = sub.name.to_str() else { continue };
+        if sub.is_dir && name.len() == 2 && name.bytes().all(|b| b.is_ascii_hexdigit()) {
+            let _ = io.remove_dir(&dir.join(&sub.name));
         }
     }
 }
@@ -489,6 +541,26 @@ mod tests {
 
         assert_eq!(parse_store_cli(&args(&["verify"])).unwrap().0, StoreCommand::Verify);
         assert_eq!(parse_store_cli(&args(&["compact"])).unwrap().0, StoreCommand::Compact);
+    }
+
+    #[test]
+    fn cli_merge_takes_sources_and_a_required_destination() {
+        let (cmd, rest) =
+            parse_store_cli(&args(&["merge", "a", "b", "--into", "dst"])).unwrap();
+        assert_eq!(
+            cmd,
+            StoreCommand::Merge {
+                sources: vec![PathBuf::from("a"), PathBuf::from("b")],
+                into: PathBuf::from("dst"),
+            }
+        );
+        assert!(rest.is_empty(), "merge consumes its whole argv");
+
+        // --into is required, sources are required, stray flags refused.
+        assert!(parse_store_cli(&args(&["merge", "a", "b"])).is_err());
+        assert!(parse_store_cli(&args(&["merge", "--into", "dst"])).is_err());
+        assert!(parse_store_cli(&args(&["merge", "a", "--into"])).is_err());
+        assert!(parse_store_cli(&args(&["merge", "a", "--smoke", "--into", "d"])).is_err());
     }
 
     #[test]

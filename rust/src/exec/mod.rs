@@ -29,6 +29,12 @@
 //!   {stats,gc,verify,compact}`: stats, bounded eviction, the
 //!   re-simulate-and-compare verification sweep, and compaction (which
 //!   also folds legacy shards into segments).
+//! * [`vfs`] — the [`vfs::StoreIo`] seam every filesystem touch goes
+//!   through: the real impl, the bounded retry policy, and the seeded
+//!   fault injector the chaos wall (`tests/chaos_store.rs`) drives.
+//! * [`grid`] — sharded grid execution (`repro grid --shard k/n`):
+//!   deterministic key-range partitioning, checksummed shard-ownership
+//!   manifests, and the conflict-quarantining `repro store merge`.
 //!
 //! Consumers (`coordinator::experiments`, `tune::cost`) are thin
 //! plan-builders and result-formatters around this layer; the CLI picks
@@ -38,11 +44,13 @@
 //! assert exactly that. See ARCHITECTURE.md §Execution layer.
 
 pub mod format;
+pub mod grid;
 pub mod lifecycle;
 pub mod planner;
 pub mod point;
 pub mod segment;
 pub mod store;
+pub mod vfs;
 
 pub use planner::{simulate, Planner};
 pub use point::{SimPoint, Workload, SIM_REVISION};

@@ -126,12 +126,19 @@ impl<'a> Planner<'a> {
         }
 
         // Debug safety net: every distinct hit re-simulates on the same
-        // pool and must match the served bytes (see the store docs).
+        // pool and must match the served bytes (see the store docs). An
+        // unsimulatable hit self-heals to a miss and surfaces as an error.
         #[cfg(debug_assertions)]
-        parallel_map_with(to_verify, self.workers, EngineCache::new, |engines, p| {
-            let hit = resolved[&p.key()].as_ref().expect("hit resolved in phase 1");
-            self.store.verify_hit(engines, p, hit);
-        });
+        {
+            let checks =
+                parallel_map_with(to_verify, self.workers, EngineCache::new, |engines, p| {
+                    let hit = resolved[&p.key()].as_ref().expect("hit resolved in phase 1");
+                    self.store.verify_hit(engines, p, hit)
+                });
+            for c in checks {
+                c?;
+            }
+        }
 
         // Phase 3 — serve the batch in input order.
         Ok(points

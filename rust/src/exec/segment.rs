@@ -43,17 +43,24 @@
 //! place. With `--no-default-features`, or past the mapped length of a
 //! segment that grew after mapping, the same bytes come from a
 //! positioned file read — both paths serve identical bytes.
+//!
+//! **I/O** goes through [`super::vfs::StoreIo`] exclusively — the real
+//! filesystem in production, a seeded fault injector under the chaos
+//! wall. Transient errors are absorbed by [`super::vfs::with_retry`]; a
+//! failed append seals the segment (the bytes on disk are suspect) and
+//! the writer rolls to a fresh one, so torn writes stay self-healing
+//! even while the process keeps running.
 
 use std::collections::{BTreeMap, HashMap};
-use std::fs;
-use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::sim::RunResult;
 use crate::tune::plan::fnv64;
 use crate::{ensure, Result};
 
 use super::format::{decode_result_bin, encode_result_bin};
+use super::vfs::{default_io, with_retry, SegmentMap, StoreIo};
 
 /// First bytes of every segment file; doubles as the format version.
 pub const SEGMENT_MAGIC: [u8; 8] = *b"MSSEG01\n";
@@ -124,7 +131,6 @@ struct SegMeta {
 
 struct SegmentWriter {
     id: u32,
-    file: fs::File,
     len: u64,
 }
 
@@ -145,9 +151,12 @@ pub struct CompactStats {
 pub struct SegmentStore {
     dir: PathBuf,
     roll_bytes: u64,
+    io: Arc<dyn StoreIo>,
     map: HashMap<u64, Loc>,
     segments: BTreeMap<u32, SegMeta>,
-    readers: HashMap<u32, SegmentReader>,
+    /// Per-segment read mapping (`None`: mapping unavailable, reads go
+    /// through [`StoreIo::read_range`]).
+    readers: HashMap<u32, Option<Arc<dyn SegmentMap>>>,
     writer: Option<SegmentWriter>,
     /// Floor for new writer segments; compaction raises it so rewritten
     /// records never land in a segment scheduled for deletion.
@@ -158,14 +167,23 @@ pub struct SegmentStore {
 }
 
 impl SegmentStore {
-    /// Open (or implicitly create) the segment store under `dir`. Never
-    /// fails: a missing directory is an empty store, and any damage —
-    /// corrupt index, torn records, shrunken segments — is absorbed by
-    /// rescanning and counted in [`SegmentStore::take_open_corruption`].
+    /// Open (or implicitly create) the segment store under `dir` with
+    /// the default (real) I/O. Never fails: a missing directory is an
+    /// empty store, and any damage — corrupt index, torn records,
+    /// shrunken segments — is absorbed by rescanning and counted in
+    /// [`SegmentStore::take_open_corruption`].
     pub fn open(dir: impl Into<PathBuf>, roll_bytes: u64) -> Self {
+        Self::open_with(dir, roll_bytes, default_io())
+    }
+
+    /// [`SegmentStore::open`] over an explicit [`StoreIo`] (the fault
+    /// injector in chaos tests). Unreadable directories or segments
+    /// degrade to an empty/partial view, never a panic.
+    pub fn open_with(dir: impl Into<PathBuf>, roll_bytes: u64, io: Arc<dyn StoreIo>) -> Self {
         let mut st = SegmentStore {
             dir: dir.into(),
             roll_bytes: roll_bytes.max(1),
+            io,
             map: HashMap::new(),
             segments: BTreeMap::new(),
             readers: HashMap::new(),
@@ -175,15 +193,17 @@ impl SegmentStore {
             open_corruption: 0,
             index_loaded: false,
         };
-        if let Ok(rd) = fs::read_dir(&st.dir) {
-            for entry in rd.flatten() {
-                if let Some(id) = parse_segment_name(&entry.file_name()) {
-                    let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
-                    st.segments.insert(id, SegMeta { len, covered: 0, sealed: false });
+        if let Ok(entries) = st.io.list_dir(&st.dir) {
+            for e in entries {
+                if e.is_dir {
+                    continue;
+                }
+                if let Some(id) = parse_segment_name(&e.name) {
+                    st.segments.insert(id, SegMeta { len: e.len, covered: 0, sealed: false });
                 }
             }
         }
-        match load_index(&st.dir.join(INDEX_FILE)) {
+        match load_index(&*st.io, &st.dir.join(INDEX_FILE)) {
             Ok(None) => {}
             Ok(Some(idx)) => {
                 st.index_loaded = true;
@@ -230,7 +250,7 @@ impl SegmentStore {
             if meta.sealed || meta.covered >= meta.len {
                 continue;
             }
-            let scan = scan_segment(&st.segment_path(id), id, meta.covered);
+            let scan = scan_segment(&*st.io, &st.segment_path(id), id, meta.covered);
             for (key, loc) in scan.entries {
                 st.map.insert(key, loc);
             }
@@ -332,14 +352,53 @@ impl SegmentStore {
         self.append_payload(key, stamp, &encode_result_bin(r))
     }
 
-    fn append_payload(&mut self, key: u64, stamp: u64, payload: &[u8]) -> Result<()> {
+    /// Raw `(stamp, payload)` of a live record, for merge tooling. Same
+    /// degradation contract as [`SegmentStore::lookup_result`]: a record
+    /// that fails validation is dropped (`Some(Err(_))`) so the key
+    /// heals to a miss.
+    pub(crate) fn read_raw(&mut self, key: u64) -> Option<Result<(u64, Vec<u8>)>> {
+        let loc = *self.map.get(&key)?;
+        match self.read_checked(key, loc, |rec| Ok((rec.stamp, rec.payload.to_vec()))) {
+            Ok(v) => Some(Ok(v)),
+            Err(e) => {
+                self.map.remove(&key);
+                self.dirty = true;
+                Some(Err(e))
+            }
+        }
+    }
+
+    pub(crate) fn append_payload(&mut self, key: u64, stamp: u64, payload: &[u8]) -> Result<()> {
         self.ensure_writer()?;
         let rec = encode_record(key, stamp, payload);
-        let w = self.writer.as_mut().expect("ensure_writer left a writer");
-        let offset = w.len;
-        w.file.write_all(&rec)?;
+        let (id, offset) = {
+            let w = self.writer.as_ref().expect("ensure_writer left a writer");
+            (w.id, w.len)
+        };
+        let path = self.segment_path(id);
+        let append = {
+            let io = &self.io;
+            with_retry(|| io.append(&path, &rec))
+        };
+        if let Err(e) = append {
+            // The failed call may still have landed a prefix of the
+            // frame (a torn write). Seal the segment so nothing ever
+            // appends after the suspect bytes; the next append rolls to
+            // a fresh segment, and a reopen's scan confirms the seal.
+            self.writer = None;
+            let refreshed = self.io.file_len(&path).ok();
+            if let Some(meta) = self.segments.get_mut(&id) {
+                meta.sealed = true;
+                if let Some(len) = refreshed {
+                    meta.len = len;
+                }
+            }
+            self.dirty = true;
+            return Err(e.into());
+        }
+        let w = self.writer.as_mut().expect("writer survives a successful append");
         w.len += rec.len() as u64;
-        let (id, new_len) = (w.id, w.len);
+        let new_len = w.len;
         if new_len >= self.roll_bytes {
             self.writer = None;
         }
@@ -396,7 +455,7 @@ impl SegmentStore {
         self.dirty = true;
         self.flush_index()?;
         for id in &old_ids {
-            let _ = fs::remove_file(self.segment_path(*id));
+            let _ = self.io.remove_file(&self.segment_path(*id));
         }
         self.min_writer_seg = 0;
         let new_bytes: u64 = self.segments.values().map(|m| m.len).sum();
@@ -409,7 +468,10 @@ impl SegmentStore {
         if !self.dirty {
             return Ok(());
         }
-        fs::create_dir_all(&self.dir)?;
+        {
+            let io = &self.io;
+            with_retry(|| io.create_dir_all(&self.dir))?;
+        }
         let mut out = Vec::with_capacity(32 + self.segments.len() * 13 + self.map.len() * 32);
         out.extend_from_slice(&INDEX_MAGIC);
         out.extend_from_slice(&(self.segments.len() as u64).to_le_bytes());
@@ -429,14 +491,18 @@ impl SegmentStore {
         let sum = fnv64(&out);
         out.extend_from_slice(&sum.to_le_bytes());
         let tmp = self.dir.join(format!("{INDEX_FILE}.tmp{}", std::process::id()));
-        fs::write(&tmp, &out)?;
-        fs::rename(&tmp, self.dir.join(INDEX_FILE))?;
+        let dst = self.dir.join(INDEX_FILE);
+        let io = &self.io;
+        with_retry(|| io.write(&tmp, &out))?;
+        with_retry(|| io.rename(&tmp, &dst))?;
         self.dirty = false;
         Ok(())
     }
 
     /// Validate and read the record at `loc`, handing the parsed frame
-    /// to `f`. Zero-copy when the segment is memory-mapped.
+    /// to `f`. Zero-copy when the segment is memory-mapped; otherwise
+    /// (no mapping, or bytes appended after the mapping was taken) a
+    /// positioned read through the I/O seam serves identical bytes.
     fn read_checked<T>(
         &mut self,
         key: u64,
@@ -444,25 +510,30 @@ impl SegmentStore {
         f: impl FnOnce(&RawRecord<'_>) -> Result<T>,
     ) -> Result<T> {
         let path = self.segment_path(loc.seg);
-        let reader = match self.readers.entry(loc.seg) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(v) => v.insert(SegmentReader::open(&path)?),
-        };
-        reader.with_bytes(loc.offset, loc.len as usize, |bytes| {
-            let (rec, total) = validate_record(bytes)?;
-            ensure!(total == bytes.len(), "record frame length disagrees with the index");
-            ensure!(
-                rec.key == key,
-                "record key {:#018x} does not match index key {key:#018x}",
-                rec.key
-            );
-            f(&rec)
-        })?
+        if !self.readers.contains_key(&loc.seg) {
+            let mapped = self.io.map_segment(&path);
+            self.readers.insert(loc.seg, mapped);
+        }
+        let mapped = self.readers.get(&loc.seg).and_then(|m| m.clone());
+        let len = loc.len as usize;
+        if let Some(m) = mapped {
+            let s = m.as_slice();
+            let start = usize::try_from(loc.offset).unwrap_or(usize::MAX);
+            if let Some(end) = start.checked_add(len) {
+                if end <= s.len() {
+                    return check_frame(key, &s[start..end], f);
+                }
+            }
+        }
+        let io = &self.io;
+        let buf = with_retry(|| io.read_range(&path, loc.offset, len))?;
+        check_frame(key, &buf, f)
     }
 
     /// Make sure `self.writer` targets an appendable segment: the
     /// highest clean, unsealed, unfull one, or a fresh id past both the
-    /// maximum and `min_writer_seg`.
+    /// maximum and `min_writer_seg`. Bounded roll-forward: a stub left
+    /// by a torn magic write is sealed and skipped, never appended to.
     fn ensure_writer(&mut self) -> Result<()> {
         if let Some(w) = &self.writer {
             if w.len < self.roll_bytes {
@@ -470,31 +541,69 @@ impl SegmentStore {
             }
             self.writer = None;
         }
-        fs::create_dir_all(&self.dir)?;
-        let reuse = self.segments.iter().next_back().and_then(|(&id, m)| {
-            let ok = id >= self.min_writer_seg
-                && !m.sealed
-                && m.covered == m.len
-                && m.len < self.roll_bytes;
-            ok.then_some(id)
-        });
-        let id = reuse.unwrap_or_else(|| {
-            let next = self.segments.keys().next_back().map_or(0, |&hi| hi + 1);
-            next.max(self.min_writer_seg)
-        });
-        let path = self.segment_path(id);
-        let mut file = fs::OpenOptions::new().create(true).append(true).open(&path)?;
-        let mut len = file.metadata()?.len();
-        if len == 0 {
-            file.write_all(&SEGMENT_MAGIC)?;
-            len = SEGMENT_MAGIC.len() as u64;
+        {
+            let io = &self.io;
+            with_retry(|| io.create_dir_all(&self.dir))?;
         }
-        let meta = self.segments.entry(id).or_insert(SegMeta { len: 0, covered: 0, sealed: false });
-        meta.len = len;
-        meta.covered = len;
-        self.writer = Some(SegmentWriter { id, file, len });
-        Ok(())
+        for _ in 0..4 {
+            let reuse = self.segments.iter().next_back().and_then(|(&id, m)| {
+                let ok = id >= self.min_writer_seg
+                    && !m.sealed
+                    && m.covered == m.len
+                    && m.len < self.roll_bytes;
+                ok.then_some(id)
+            });
+            let id = reuse.unwrap_or_else(|| {
+                let next = self.segments.keys().next_back().map_or(0, |&hi| hi + 1);
+                next.max(self.min_writer_seg)
+            });
+            let path = self.segment_path(id);
+            let mut len = match self.io.file_len(&path) {
+                Ok(l) => l,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => 0,
+                Err(e) => return Err(e.into()),
+            };
+            if len > 0 && len < SEGMENT_MAGIC.len() as u64 {
+                // A torn magic write from an earlier failed provision:
+                // records appended after a broken header would be
+                // unreachable to a scan. Seal the stub and roll on.
+                let meta =
+                    self.segments.entry(id).or_insert(SegMeta { len, covered: 0, sealed: false });
+                meta.len = len;
+                meta.sealed = true;
+                self.dirty = true;
+                continue;
+            }
+            if len == 0 {
+                let io = &self.io;
+                with_retry(|| io.append(&path, &SEGMENT_MAGIC))?;
+                len = SEGMENT_MAGIC.len() as u64;
+            }
+            let meta =
+                self.segments.entry(id).or_insert(SegMeta { len: 0, covered: 0, sealed: false });
+            meta.len = len;
+            meta.covered = len;
+            self.writer = Some(SegmentWriter { id, len });
+            return Ok(());
+        }
+        Err(crate::format_err!(
+            "segment store: could not provision a writable segment under {}",
+            self.dir.display()
+        ))
     }
+}
+
+/// Validate a full record frame read from `bytes` against the index's
+/// expectations (exact frame length, matching key), then hand it to `f`.
+fn check_frame<T>(
+    key: u64,
+    bytes: &[u8],
+    f: impl FnOnce(&RawRecord<'_>) -> Result<T>,
+) -> Result<T> {
+    let (rec, total) = validate_record(bytes)?;
+    ensure!(total == bytes.len(), "record frame length disagrees with the index");
+    ensure!(rec.key == key, "record key {:#018x} does not match index key {key:#018x}", rec.key);
+    f(&rec)
 }
 
 /// A validated record frame borrowed from segment bytes.
@@ -504,7 +613,7 @@ struct RawRecord<'a> {
     payload: &'a [u8],
 }
 
-fn encode_record(key: u64, stamp: u64, payload: &[u8]) -> Vec<u8> {
+pub(crate) fn encode_record(key: u64, stamp: u64, payload: &[u8]) -> Vec<u8> {
     let mut rec =
         Vec::with_capacity(RECORD_HEADER_BYTES + payload.len() + RECORD_TRAILER_BYTES);
     rec.extend_from_slice(&key.to_le_bytes());
@@ -550,8 +659,8 @@ struct Scan {
 /// end of the segment. Stops at the first invalid record: everything
 /// before it is trusted, everything after is unreachable garbage the
 /// caller seals off.
-fn scan_segment(path: &Path, id: u32, from: u64) -> Scan {
-    let Ok(bytes) = fs::read(path) else {
+fn scan_segment(io: &dyn StoreIo, path: &Path, id: u32, from: u64) -> Scan {
+    let Ok(bytes) = with_retry(|| io.read(path)) else {
         return Scan { entries: Vec::new(), covered: from, clean: false };
     };
     let mut off = from as usize;
@@ -587,8 +696,8 @@ struct IndexContents {
 /// Strictly parse the index file. `Ok(None)` when absent; any anomaly —
 /// bad checksum, bad magic, truncation, trailing bytes — is an `Err`
 /// the caller answers with a full rescan.
-fn load_index(path: &Path) -> Result<Option<IndexContents>> {
-    let bytes = match fs::read(path) {
+fn load_index(io: &dyn StoreIo, path: &Path) -> Result<Option<IndexContents>> {
+    let bytes = match with_retry(|| io.read(path)) {
         Ok(b) => b,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
         Err(e) => return Err(e.into()),
@@ -644,138 +753,10 @@ impl<'a> Cursor<'a> {
     }
 }
 
-/// Read-side handle on one segment: the file plus, when the `mmap`
-/// feature is on and the platform supports it, a whole-file read-only
-/// mapping taken at open time.
-struct SegmentReader {
-    file: fs::File,
-    #[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
-    mapped: Option<mm::Mmap>,
-}
-
-impl SegmentReader {
-    fn open(path: &Path) -> Result<Self> {
-        let file = fs::File::open(path)?;
-        #[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
-        let reader = {
-            let mapped = mm::map_file(&file);
-            SegmentReader { file, mapped }
-        };
-        #[cfg(not(all(feature = "mmap", unix, target_pointer_width = "64")))]
-        let reader = SegmentReader { file };
-        Ok(reader)
-    }
-
-    /// Hand `f` the `len` bytes at `offset`: straight out of the mapping
-    /// when they fall inside it, otherwise via a positioned file read
-    /// (the fallback build, or bytes appended after the mapping was
-    /// taken).
-    fn with_bytes<R>(&self, offset: u64, len: usize, f: impl FnOnce(&[u8]) -> R) -> Result<R> {
-        #[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
-        if let Some(m) = &self.mapped {
-            let start = usize::try_from(offset).unwrap_or(usize::MAX);
-            if let Some(end) = start.checked_add(len) {
-                if end <= m.len() {
-                    return Ok(f(&m.as_slice()[start..end]));
-                }
-            }
-        }
-        let mut buf = vec![0u8; len];
-        self.read_exact_at(offset, &mut buf)?;
-        Ok(f(&buf))
-    }
-
-    fn read_exact_at(&self, offset: u64, buf: &mut [u8]) -> Result<()> {
-        #[cfg(unix)]
-        {
-            use std::os::unix::fs::FileExt;
-            self.file.read_exact_at(buf, offset)?;
-        }
-        #[cfg(not(unix))]
-        {
-            use std::io::{Read, Seek, SeekFrom};
-            let mut file = &self.file;
-            file.seek(SeekFrom::Start(offset))?;
-            file.read_exact(buf)?;
-        }
-        Ok(())
-    }
-}
-
-/// Minimal read-only `mmap` over the C library std already links on
-/// unix. The crate is dependency-free by policy, so this stands in for
-/// `memmap2`; the non-mmap build path proves nothing above depends on
-/// it.
-#[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
-mod mm {
-    use std::fs::File;
-    use std::os::unix::io::AsRawFd;
-
-    const PROT_READ: i32 = 0x1;
-    const MAP_SHARED: i32 = 0x1;
-
-    extern "C" {
-        fn mmap(addr: *mut u8, len: usize, prot: i32, flags: i32, fd: i32, offset: i64)
-            -> *mut u8;
-        fn munmap(addr: *mut u8, len: usize) -> i32;
-    }
-
-    /// A read-only mapping of a file's length at map time. Appends after
-    /// mapping extend the file, not the mapping; callers fall back to
-    /// file reads past `len`.
-    pub struct Mmap {
-        ptr: *mut u8,
-        len: usize,
-    }
-
-    // SAFETY: the mapping is PROT_READ and never mutated or remapped for
-    // its lifetime; concurrent reads of immutable bytes are safe.
-    unsafe impl Send for Mmap {}
-    unsafe impl Sync for Mmap {}
-
-    impl Mmap {
-        pub fn len(&self) -> usize {
-            self.len
-        }
-
-        pub fn as_slice(&self) -> &[u8] {
-            // SAFETY: ptr..ptr+len is a live PROT_READ mapping owned by
-            // self; unmapped only on drop.
-            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
-        }
-    }
-
-    impl Drop for Mmap {
-        fn drop(&mut self) {
-            // SAFETY: exactly the region mmap returned.
-            unsafe {
-                munmap(self.ptr, self.len);
-            }
-        }
-    }
-
-    /// Map `file` read-only; `None` (callers use file reads) for empty
-    /// files or on any mmap failure.
-    pub fn map_file(file: &File) -> Option<Mmap> {
-        let len = usize::try_from(file.metadata().ok()?.len()).ok()?;
-        if len == 0 {
-            return None;
-        }
-        // SAFETY: null addr lets the kernel pick; fd is open for read;
-        // failure returns MAP_FAILED (-1), checked below.
-        let ptr = unsafe {
-            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
-        };
-        if ptr.is_null() || ptr as isize == -1 {
-            return None;
-        }
-        Some(Mmap { ptr, len })
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::fs;
 
     fn test_dir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("multistride_seg_{tag}_{}", std::process::id()));
@@ -884,6 +865,39 @@ mod tests {
         drop(st);
         let st = SegmentStore::open(&dir, 200);
         assert_eq!(st.entry_count(), 8);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_append_stops_cleanly_and_recovery_keeps_earlier_records() {
+        use super::super::vfs::{FaultIo, FaultPlan, RealIo};
+        let dir = test_dir("failappend");
+        let fault = Arc::new(FaultIo::new(Arc::new(RealIo), FaultPlan::crash_after(12)));
+        let mut st = SegmentStore::open_with(&dir, DEFAULT_ROLL_BYTES, fault);
+        let mut ok = 0u64;
+        let mut failed = false;
+        for i in 0..64u64 {
+            match st.append_payload(i, i, &payload(i)) {
+                Ok(()) => ok += 1,
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        assert!(failed, "the crash-point must surface as an append error");
+        assert!(ok > 0, "some appends land before the crash-point");
+        drop(st);
+
+        // Reopen on the real filesystem: every pre-crash record serves
+        // its exact bytes back.
+        let mut st = SegmentStore::open(&dir, DEFAULT_ROLL_BYTES);
+        assert_eq!(st.entry_count(), ok);
+        for i in 0..ok {
+            let loc = *st.map.get(&i).expect("pre-crash record survives");
+            let got = st.read_checked(i, loc, |rec| Ok(rec.payload.to_vec())).unwrap();
+            assert_eq!(got, payload(i));
+        }
         let _ = fs::remove_dir_all(&dir);
     }
 

@@ -17,7 +17,12 @@
 //! **miss**, the same recoverability contract as
 //! [`crate::tune::cache::PlanCache`]. Disk *write* failures are reported
 //! on stderr and tolerated (persistence is an optimization; losing it
-//! must never fail an experiment).
+//! must never fail an experiment). Every disk touch goes through the
+//! [`super::vfs::StoreIo`] seam with bounded retry; after
+//! [`DISK_FAILURE_LIMIT`] *consecutive* hard failures the persistent
+//! tier is disabled for the rest of the run — the store keeps serving
+//! memory-only, counts the degradation in [`ExecStats::degraded`], and
+//! the `[exec]` summary line warns about it.
 //!
 //! The PR-5 sharded file-per-point format
 //! (`results/<xx>/<16-hex-key>.simres`) remains readable as a **legacy
@@ -36,7 +41,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::experiments::EngineCache;
@@ -47,6 +52,11 @@ use super::format::{parse_result, serialize_result};
 use super::planner::simulate;
 use super::point::SimPoint;
 use super::segment::{unix_now, SegmentStore, DEFAULT_ROLL_BYTES};
+use super::vfs::{default_io, with_retry, StoreIo};
+
+/// Consecutive hard disk failures after which the persistent tier is
+/// disabled for the rest of the run (memory-only degradation).
+pub const DISK_FAILURE_LIMIT: u64 = 3;
 
 /// Counter snapshot of one store's traffic (all monotonically increasing
 /// over the store's lifetime).
@@ -77,6 +87,14 @@ pub struct ExecStats {
     /// Debug-build hit verifications performed (each one a re-simulation
     /// compared bit-for-bit against the served result).
     pub verified_hits: u64,
+    /// Persistent-tier operations that failed even after bounded retry.
+    pub disk_errors: u64,
+    /// Stored hits dropped because their point no longer simulates (a
+    /// stale cache entry, healed to a plain miss).
+    pub dropped_unsimulatable: u64,
+    /// The persistent tier was disabled after [`DISK_FAILURE_LIMIT`]
+    /// consecutive failures; the store is serving memory-only.
+    pub degraded: bool,
 }
 
 impl ExecStats {
@@ -98,6 +116,8 @@ struct Counters {
     disk_writes: AtomicU64,
     corrupt_discards: AtomicU64,
     verified_hits: AtomicU64,
+    disk_errors: AtomicU64,
+    dropped_unsimulatable: AtomicU64,
 }
 
 /// The store. Cheap to share across the worker pool (`&ResultStore` is
@@ -109,6 +129,11 @@ pub struct ResultStore {
     dir: Option<PathBuf>,
     /// Segment tier over `dir`; present exactly when `dir` is.
     seg: Option<Mutex<SegmentStore>>,
+    io: Arc<dyn StoreIo>,
+    /// Set once [`DISK_FAILURE_LIMIT`] consecutive disk failures occur;
+    /// the persistent tier is skipped from then on.
+    degraded: AtomicBool,
+    consecutive_disk_failures: AtomicU64,
     stats: Counters,
 }
 
@@ -121,6 +146,9 @@ impl ResultStore {
             mem: Mutex::new(HashMap::new()),
             dir: None,
             seg: None,
+            io: default_io(),
+            degraded: AtomicBool::new(false),
+            consecutive_disk_failures: AtomicU64::new(0),
             stats: Counters::default(),
         }
     }
@@ -136,13 +164,27 @@ impl ResultStore {
     /// [`ResultStore::persistent`] with an explicit segment roll size;
     /// tests use small rolls to exercise multi-segment layouts cheaply.
     pub fn persistent_with_roll(dir: impl Into<PathBuf>, roll_bytes: u64) -> Self {
+        Self::persistent_with_io(dir, roll_bytes, default_io())
+    }
+
+    /// [`ResultStore::persistent_with_roll`] over an explicit
+    /// [`StoreIo`] — how the chaos wall injects faults under every disk
+    /// operation this store performs.
+    pub fn persistent_with_io(
+        dir: impl Into<PathBuf>,
+        roll_bytes: u64,
+        io: Arc<dyn StoreIo>,
+    ) -> Self {
         let dir = dir.into();
-        let mut seg = SegmentStore::open(&dir, roll_bytes);
+        let mut seg = SegmentStore::open_with(&dir, roll_bytes, Arc::clone(&io));
         let damage = seg.take_open_corruption();
         let store = Self {
             mem: Mutex::new(HashMap::new()),
             dir: Some(dir),
             seg: Some(Mutex::new(seg)),
+            io,
+            degraded: AtomicBool::new(false),
+            consecutive_disk_failures: AtomicU64::new(0),
             stats: Counters::default(),
         };
         store.stats.corrupt_discards.fetch_add(damage, Ordering::Relaxed);
@@ -190,7 +232,38 @@ impl ResultStore {
             disk_writes: g(&self.stats.disk_writes),
             corrupt_discards: g(&self.stats.corrupt_discards),
             verified_hits: g(&self.stats.verified_hits),
+            disk_errors: g(&self.stats.disk_errors),
+            dropped_unsimulatable: g(&self.stats.dropped_unsimulatable),
+            degraded: self.degraded.load(Ordering::Relaxed),
         }
+    }
+
+    /// The I/O implementation this store runs on (shared with grid
+    /// tooling so manifests land through the same seam).
+    pub(crate) fn io(&self) -> Arc<dyn StoreIo> {
+        Arc::clone(&self.io)
+    }
+
+    /// Whether the persistent tier has been disabled after repeated
+    /// failures (memory tier keeps serving either way).
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    fn note_disk_failure(&self, what: &str, e: &dyn std::fmt::Display) {
+        self.stats.disk_errors.fetch_add(1, Ordering::Relaxed);
+        eprintln!("[exec] {what}: {e}");
+        let n = self.consecutive_disk_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= DISK_FAILURE_LIMIT && !self.degraded.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[exec] persistent tier DISABLED after {n} consecutive disk failures — \
+                 continuing memory-only; results from this run will not be stored"
+            );
+        }
+    }
+
+    fn note_disk_ok(&self) {
+        self.consecutive_disk_failures.store(0, Ordering::Relaxed);
     }
 
     pub(crate) fn note_dedup(&self) {
@@ -223,7 +296,11 @@ impl ResultStore {
 
     /// Disk probe only (no counters beyond corruption and the legacy
     /// split): absent, corrupt, or mis-keyed entries are all a `None`.
+    /// A degraded store skips the disk entirely.
     fn load_disk(&self, key: u64) -> Option<Arc<RunResult>> {
+        if self.is_degraded() {
+            return None;
+        }
         if let Some(seg) = &self.seg {
             match seg.lock().expect("segment lock").lookup_result(key) {
                 Some(Ok(r)) => return Some(Arc::new(r)),
@@ -246,12 +323,23 @@ impl ResultStore {
     /// Legacy file-per-point probe (read-only tier).
     fn load_legacy(&self, key: u64) -> Option<Arc<RunResult>> {
         let path = self.legacy_shard_path(key)?;
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
+        let io = &self.io;
+        let bytes = match with_retry(|| io.read(&path)) {
+            Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
             Err(e) => {
+                self.note_disk_failure(
+                    &format!("unreadable result shard {path:?} — treating as miss"),
+                    &e,
+                );
+                return None;
+            }
+        };
+        let text = match String::from_utf8(bytes) {
+            Ok(t) => t,
+            Err(_) => {
                 self.stats.corrupt_discards.fetch_add(1, Ordering::Relaxed);
-                eprintln!("[exec] unreadable result shard {path:?}: {e} — treating as miss");
+                eprintln!("[exec] result shard {path:?} is not UTF-8 — treating as miss");
                 return None;
             }
         };
@@ -280,15 +368,32 @@ impl ResultStore {
     pub fn insert(&self, key: u64, result: Arc<RunResult>) {
         self.mem.lock().expect("store lock").insert(key, Arc::clone(&result));
         let Some(seg) = &self.seg else { return };
+        if self.is_degraded() {
+            return;
+        }
         let r = seg.lock().expect("segment lock").append_result(key, unix_now(), &result);
         match r {
             Ok(()) => {
                 self.stats.disk_writes.fetch_add(1, Ordering::Relaxed);
+                self.note_disk_ok();
             }
             Err(e) => {
-                eprintln!("[exec] could not persist result {key:#x}: {e}");
+                self.note_disk_failure(&format!("could not persist result {key:#x}"), &e);
             }
         }
+    }
+
+    /// Drop `key` from every tier (memory map and segment index); the
+    /// next request for it is a plain miss. Returns whether anything was
+    /// dropped. Used when a stored record turns out to be stale — e.g. a
+    /// hit whose point no longer simulates.
+    pub fn invalidate(&self, key: u64) -> bool {
+        let mem_hit = self.mem.lock().expect("store lock").remove(&key).is_some();
+        let seg_hit = match &self.seg {
+            Some(seg) => seg.lock().expect("segment lock").remove(key),
+            None => false,
+        };
+        mem_hit || seg_hit
     }
 
     /// Write `result` in the **legacy** file-per-point format. Not on
@@ -299,12 +404,14 @@ impl ResultStore {
             .legacy_shard_path(key)
             .ok_or_else(|| format_err!("ephemeral store has no disk tier"))?;
         let shard_dir = path.parent().expect("shard path has a parent");
-        std::fs::create_dir_all(shard_dir)?;
+        let io = &self.io;
+        with_retry(|| io.create_dir_all(shard_dir))?;
         // Unique temp name per process: two processes landing the same
         // key concurrently each rename their own complete file.
         let tmp = shard_dir.join(format!("{key:016x}.tmp{}", std::process::id()));
-        std::fs::write(&tmp, serialize_result(key, result))?;
-        std::fs::rename(&tmp, &path)?;
+        let text = serialize_result(key, result);
+        with_retry(|| io.write(&tmp, text.as_bytes()))?;
+        with_retry(|| io.rename(&tmp, &path))?;
         self.stats.disk_writes.fetch_add(1, Ordering::Relaxed);
         Ok(path)
     }
@@ -314,8 +421,11 @@ impl ResultStore {
     /// a later crash cannot cost the index.
     pub fn flush(&self) {
         if let Some(seg) = &self.seg {
+            if self.is_degraded() {
+                return;
+            }
             if let Err(e) = seg.lock().expect("segment lock").flush_index() {
-                eprintln!("[exec] could not flush segment index: {e}");
+                self.note_disk_failure("could not flush segment index", &e);
             }
         }
     }
@@ -331,7 +441,7 @@ impl ResultStore {
     ) -> Result<Arc<RunResult>> {
         if let Some(hit) = self.lookup(point.key()) {
             #[cfg(debug_assertions)]
-            self.verify_hit(engines, point, &hit);
+            self.verify_hit(engines, point, &hit)?;
             return Ok(hit);
         }
         self.note_miss();
@@ -345,11 +455,32 @@ impl ResultStore {
     /// fresh simulation. Panics on mismatch — a divergence here means
     /// either the simulator lost determinism or the store served the
     /// wrong bytes, and both must fail loudly, not skew results.
+    ///
+    /// A hit whose point no longer *simulates at all* (e.g. a kernel
+    /// renamed out of the registry after its result was stored) is a
+    /// stale cache entry, not a determinism breach: the record is
+    /// dropped from every tier, counted, and surfaced as a recoverable
+    /// error so the caller's point becomes a plain miss from now on.
     #[cfg(debug_assertions)]
-    pub(crate) fn verify_hit(&self, engines: &mut EngineCache, point: &SimPoint, hit: &RunResult) {
+    pub(crate) fn verify_hit(
+        &self,
+        engines: &mut EngineCache,
+        point: &SimPoint,
+        hit: &RunResult,
+    ) -> Result<()> {
         self.stats.verified_hits.fetch_add(1, Ordering::Relaxed);
-        let fresh = simulate(engines, point)
-            .unwrap_or_else(|e| panic!("store hit for unsimulatable point {}: {e}", point.label()));
+        let fresh = match simulate(engines, point) {
+            Ok(r) => r,
+            Err(e) => {
+                self.invalidate(point.key());
+                self.stats.dropped_unsimulatable.fetch_add(1, Ordering::Relaxed);
+                return Err(format_err!(
+                    "store hit for unsimulatable point {} dropped ({e}); \
+                     the key now degrades to a miss",
+                    point.label()
+                ));
+            }
+        };
         let key = point.key();
         assert_eq!(
             serialize_result(key, &fresh),
@@ -357,6 +488,7 @@ impl ResultStore {
             "store hit diverged from a fresh simulation for {} (key {key:#x})",
             point.label()
         );
+        Ok(())
     }
 }
 
@@ -496,6 +628,73 @@ mod tests {
         let (new_seg, ..) = healed.segment_location(p.key()).unwrap();
         assert_ne!(new_seg, seg_path, "writer must not append to a sealed segment");
         drop(healed);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite fix pin: a store hit for a point the engine can no
+    /// longer simulate used to panic inside the debug verifier. It must
+    /// instead drop the stale record, count it, and surface a
+    /// recoverable error — the key heals to a plain miss.
+    #[cfg(debug_assertions)]
+    #[test]
+    fn unsimulatable_hit_heals_to_a_miss_instead_of_panicking() {
+        use crate::kernels::library::kernel_by_name;
+        use crate::transform::StridingConfig;
+
+        let store = ResultStore::ephemeral();
+        let mut engines = EngineCache::new();
+        // A "ghost" point: keyed like a kernel that is not in the
+        // registry, as if the store outlived a kernel rename.
+        let donor = kernel_by_name("mxv", MIB).expect("mxv is registered");
+        let ghost = SimPoint::kernel_from_spec(
+            coffee_lake(),
+            "ghost",
+            MIB,
+            StridingConfig::new(1, 1),
+            true,
+            &donor.spec,
+        );
+        // Smuggle any valid result under the ghost key.
+        let r = store.get_or_run(&mut engines, &point()).unwrap();
+        store.insert(ghost.key(), Arc::clone(&r));
+
+        let out = store.get_or_run(&mut engines, &ghost);
+        assert!(out.is_err(), "stale hit must be an error, not a panic");
+        let s = store.stats();
+        assert_eq!(s.dropped_unsimulatable, 1);
+        assert!(store.lookup(ghost.key()).is_none(), "the record was dropped: now a plain miss");
+    }
+
+    /// A dead disk must never fail simulation: after
+    /// [`DISK_FAILURE_LIMIT`] consecutive failures the store flips to
+    /// memory-only, keeps serving, and reports the degradation.
+    #[test]
+    fn dead_disk_degrades_to_memory_only_and_keeps_serving() {
+        use crate::exec::vfs::{FaultIo, FaultPlan, RealIo};
+
+        let dir = tmp("deaddisk");
+        std::fs::remove_dir_all(&dir).ok();
+        let io: Arc<dyn crate::exec::vfs::StoreIo> =
+            Arc::new(FaultIo::new(Arc::new(RealIo), FaultPlan::dead_disk()));
+        let store = ResultStore::persistent_with_io(&dir, DEFAULT_ROLL_BYTES, io);
+        let mut engines = EngineCache::new();
+        let mut first = None;
+        for strides in [1u32, 2, 4, 8] {
+            let p = SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, strides, MIB, true, false);
+            let r = store.get_or_run(&mut engines, &p);
+            assert!(r.is_ok(), "a dead disk must not fail simulation (strides {strides})");
+            first.get_or_insert((p, r.unwrap()));
+        }
+        let s = store.stats();
+        assert!(s.degraded, "repeated failures must flip the store to memory-only");
+        assert!(store.is_degraded());
+        assert!(s.disk_errors >= DISK_FAILURE_LIMIT);
+        assert_eq!(s.engine_runs, 4);
+        assert_eq!(s.disk_writes, 0, "nothing can land on a dead disk");
+        // The memory tier still serves bit-identical results.
+        let (p, r) = first.unwrap();
+        let served = store.lookup(p.key()).expect("memory tier survives degradation");
+        assert_eq!(serialize_result(p.key(), &r), serialize_result(p.key(), &served));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,705 @@
+//! The store's I/O seam: every filesystem touch in the persistent tier
+//! goes through the [`StoreIo`] trait.
+//!
+//! Two implementations ship:
+//!
+//! * [`RealIo`] — thin `std::fs` passthrough, plus the `mmap` fast path
+//!   for segment reads (the `mm` module lived in `exec::segment` before
+//!   this seam existed).
+//! * [`FaultIo`] — a deterministic, seeded fault injector for the chaos
+//!   test wall (`tests/chaos_store.rs`). Faults are *scheduled*, not
+//!   random: the n-th I/O operation under seed `s` always receives the
+//!   same fate, so a failing schedule replays exactly from its seed.
+//!
+//! The fault taxonomy covers the failure modes the segment tier must
+//! degrade through: torn writes (a prefix lands, then the call errors),
+//! short reads, single-byte corruption (checksums must catch it),
+//! ENOSPC, EINTR (transient — [`with_retry`] absorbs it), failed
+//! renames/metadata ops, and crash-points (`FaultPlan::crash_at`) after
+//! which *every* operation fails, modelling a dead disk or a process
+//! that never got to run the rest of its I/O.
+//!
+//! [`with_retry`] is the one retry policy in the crate: bounded attempts
+//! with exponential backoff, retrying only errors [`is_transient`]
+//! classifies as such. Callers that exhaust it surface the error to the
+//! store, which counts it and — after repeated failures — degrades the
+//! persistent tier to memory-only rather than failing simulation runs.
+
+use std::ffi::OsString;
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::tune::plan::fnv64;
+
+/// Raw-I/O result type; the store layers crate errors on top.
+pub type IoResult<T> = std::result::Result<T, io::Error>;
+
+/// One directory entry as reported by [`StoreIo::list_dir`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DirEntryInfo {
+    pub name: OsString,
+    pub len: u64,
+    /// Modification time, seconds since the Unix epoch (0 when unknown).
+    pub mtime_secs: u64,
+    pub is_dir: bool,
+}
+
+/// A read-only mapping of a segment file (the mmap fast path). The
+/// mapping is pinned for the lifetime of the value; readers slice it.
+pub trait SegmentMap: Send + Sync {
+    fn as_slice(&self) -> &[u8];
+}
+
+/// Every filesystem operation the persistent store performs, as one
+/// injectable trait. Implementations must be safe to share across the
+/// worker pool.
+pub trait StoreIo: Send + Sync {
+    /// Read a whole file.
+    fn read(&self, path: &Path) -> IoResult<Vec<u8>>;
+    /// Create-or-truncate a file with the given contents.
+    fn write(&self, path: &Path, bytes: &[u8]) -> IoResult<()>;
+    /// Append to a file, creating it if absent.
+    fn append(&self, path: &Path, bytes: &[u8]) -> IoResult<()>;
+    /// Read exactly `len` bytes at `offset`; a short file is an error
+    /// (`UnexpectedEof`), never a silent prefix.
+    fn read_range(&self, path: &Path, offset: u64, len: usize) -> IoResult<Vec<u8>>;
+    fn rename(&self, from: &Path, to: &Path) -> IoResult<()>;
+    fn remove_file(&self, path: &Path) -> IoResult<()>;
+    fn create_dir_all(&self, path: &Path) -> IoResult<()>;
+    fn remove_dir(&self, path: &Path) -> IoResult<()>;
+    fn list_dir(&self, path: &Path) -> IoResult<Vec<DirEntryInfo>>;
+    fn file_len(&self, path: &Path) -> IoResult<u64>;
+    /// Map a segment file for zero-copy reads. `None` means "use
+    /// [`StoreIo::read_range`]" — the contract is best-effort.
+    fn map_segment(&self, _path: &Path) -> Option<Arc<dyn SegmentMap>> {
+        None
+    }
+}
+
+/// The production implementation: plain `std::fs`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealIo;
+
+impl StoreIo for RealIo {
+    fn read(&self, path: &Path) -> IoResult<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn write(&self, path: &Path, bytes: &[u8]) -> IoResult<()> {
+        std::fs::write(path, bytes)
+    }
+
+    fn append(&self, path: &Path, bytes: &[u8]) -> IoResult<()> {
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(bytes)
+    }
+
+    fn read_range(&self, path: &Path, offset: u64, len: usize) -> IoResult<Vec<u8>> {
+        let mut f = std::fs::File::open(path)?;
+        let mut buf = vec![0u8; len];
+        read_exact_at(&mut f, &mut buf, offset)?;
+        Ok(buf)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> IoResult<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove_file(&self, path: &Path) -> IoResult<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn create_dir_all(&self, path: &Path) -> IoResult<()> {
+        std::fs::create_dir_all(path)
+    }
+
+    fn remove_dir(&self, path: &Path) -> IoResult<()> {
+        std::fs::remove_dir(path)
+    }
+
+    fn list_dir(&self, path: &Path) -> IoResult<Vec<DirEntryInfo>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(path)? {
+            let entry = entry?;
+            let meta = entry.metadata()?;
+            let mtime_secs = meta
+                .modified()
+                .ok()
+                .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+                .map(|d| d.as_secs())
+                .unwrap_or(0);
+            out.push(DirEntryInfo {
+                name: entry.file_name(),
+                len: meta.len(),
+                mtime_secs,
+                is_dir: meta.is_dir(),
+            });
+        }
+        Ok(out)
+    }
+
+    fn file_len(&self, path: &Path) -> IoResult<u64> {
+        Ok(std::fs::metadata(path)?.len())
+    }
+
+    fn map_segment(&self, path: &Path) -> Option<Arc<dyn SegmentMap>> {
+        map_segment_real(path)
+    }
+}
+
+/// The default (production) I/O implementation.
+pub fn default_io() -> Arc<dyn StoreIo> {
+    Arc::new(RealIo)
+}
+
+fn read_exact_at(f: &mut std::fs::File, buf: &mut [u8], offset: u64) -> IoResult<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        f.read_exact_at(buf, offset)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek};
+        f.seek(io::SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+#[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
+fn map_segment_real(path: &Path) -> Option<Arc<dyn SegmentMap>> {
+    let file = std::fs::File::open(path).ok()?;
+    mm::map_file(&file).map(|m| Arc::new(m) as Arc<dyn SegmentMap>)
+}
+
+#[cfg(not(all(feature = "mmap", unix, target_pointer_width = "64")))]
+fn map_segment_real(_path: &Path) -> Option<Arc<dyn SegmentMap>> {
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Retry policy
+// ---------------------------------------------------------------------------
+
+/// Maximum attempts [`with_retry`] makes (1 initial + 2 retries).
+pub const RETRY_ATTEMPTS: u32 = 3;
+
+/// Whether an I/O error is worth retrying: the OS interrupted or timed
+/// the call out without changing any state. Everything else (ENOSPC,
+/// corruption, permission, a dead disk) retries identically, so retrying
+/// would only delay the degradation path.
+pub fn is_transient(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Run `f` with bounded retry and exponential backoff on transient
+/// errors. Non-transient errors return immediately.
+pub fn with_retry<T>(mut f: impl FnMut() -> IoResult<T>) -> IoResult<T> {
+    let mut attempt = 0;
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient(&e) && attempt + 1 < RETRY_ATTEMPTS => {
+                attempt += 1;
+                std::thread::sleep(Duration::from_millis(1 << attempt));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// A deterministic fault schedule. The schedule is a pure function of
+/// `(seed, operation index)`, so a run under a given plan is exactly
+/// reproducible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Roughly one in `period` operations faults; `0` disables
+    /// scheduled faults entirely (crash-points still apply).
+    pub period: u64,
+    /// Operation index after which every call fails — a crash / dead
+    /// disk. `Some(0)` means the disk was never usable.
+    pub crash_at: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Derive a varied schedule from a bare seed: fault density between
+    /// 1-in-2 and 1-in-8 ops, and about a quarter of seeds also get a
+    /// crash-point within the first ~96 operations.
+    pub fn from_seed(seed: u64) -> Self {
+        let h = fnv64(&seed.to_le_bytes());
+        let period = 2 + (h % 7);
+        let crash_at = if h % 4 == 0 { Some(1 + ((h >> 8) % 96)) } else { None };
+        Self { seed, period, crash_at }
+    }
+
+    /// No scheduled faults, crash after exactly `n` operations.
+    pub fn crash_after(n: u64) -> Self {
+        Self { seed: 0, period: 0, crash_at: Some(n) }
+    }
+
+    /// Every operation fails from the start: a dead disk.
+    pub fn dead_disk() -> Self {
+        Self::crash_after(0)
+    }
+}
+
+enum OpClass {
+    Read,
+    Write,
+    Meta,
+}
+
+enum Fault {
+    /// Past the crash-point: everything fails.
+    Crash,
+    /// Transient EINTR; no side effect. [`with_retry`] absorbs it.
+    Eintr,
+    /// Hard failure with no side effect.
+    Fail(&'static str),
+    /// No space left on device; no side effect.
+    Enospc,
+    /// A prefix of the payload lands, then the call errors.
+    Torn(u64),
+    /// A read returns fewer bytes than the file holds.
+    Short(u64),
+    /// A read succeeds but one byte is flipped. Frame checksums must
+    /// catch this — the one fault that returns `Ok` with bad data.
+    Corrupt(u64),
+}
+
+impl Fault {
+    fn into_err(self) -> io::Error {
+        match self {
+            Fault::Crash => io::Error::new(io::ErrorKind::Other, "injected crash: disk is gone"),
+            Fault::Eintr => io::Error::new(io::ErrorKind::Interrupted, "injected EINTR"),
+            Fault::Fail(what) => io::Error::new(io::ErrorKind::Other, what),
+            Fault::Enospc => {
+                io::Error::new(io::ErrorKind::Other, "injected ENOSPC: no space left on device")
+            }
+            Fault::Torn(_) => io::Error::new(io::ErrorKind::Other, "injected torn write"),
+            Fault::Short(_) | Fault::Corrupt(_) => {
+                io::Error::new(io::ErrorKind::Other, "injected read failure")
+            }
+        }
+    }
+}
+
+/// [`StoreIo`] decorator that injects faults per a [`FaultPlan`].
+///
+/// `map_segment` always returns `None` so every segment read goes
+/// through the injectable `read_range` path.
+pub struct FaultIo {
+    inner: Arc<dyn StoreIo>,
+    plan: FaultPlan,
+    ops: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultIo {
+    pub fn new(inner: Arc<dyn StoreIo>, plan: FaultPlan) -> Self {
+        Self { inner, plan, ops: AtomicU64::new(0), injected: AtomicU64::new(0) }
+    }
+
+    /// Faults over the real filesystem, schedule derived from `seed`.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(Arc::new(RealIo), FaultPlan::from_seed(seed))
+    }
+
+    /// Total operations observed so far.
+    pub fn op_count(&self) -> u64 {
+        self.ops.load(Ordering::SeqCst)
+    }
+
+    /// Faults injected so far (crash-mode failures count once each).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    /// Whether the crash-point has been reached.
+    pub fn crashed(&self) -> bool {
+        self.plan.crash_at.is_some_and(|c| self.op_count() >= c)
+    }
+
+    fn decide(&self, class: OpClass) -> Option<Fault> {
+        let n = self.ops.fetch_add(1, Ordering::SeqCst);
+        if self.plan.crash_at.is_some_and(|c| n >= c) {
+            self.injected.fetch_add(1, Ordering::SeqCst);
+            return Some(Fault::Crash);
+        }
+        if self.plan.period == 0 {
+            return None;
+        }
+        let mut bytes = [0u8; 16];
+        bytes[..8].copy_from_slice(&self.plan.seed.to_le_bytes());
+        bytes[8..].copy_from_slice(&n.to_le_bytes());
+        let h = fnv64(&bytes);
+        if h % self.plan.period != 0 {
+            return None;
+        }
+        self.injected.fetch_add(1, Ordering::SeqCst);
+        let r = h / self.plan.period;
+        Some(match class {
+            OpClass::Read => match r % 4 {
+                0 => Fault::Short(r >> 2),
+                1 => Fault::Corrupt(r >> 2),
+                2 => Fault::Eintr,
+                _ => Fault::Fail("injected read failure"),
+            },
+            OpClass::Write => match r % 3 {
+                0 => Fault::Torn(r / 3),
+                1 => Fault::Enospc,
+                _ => Fault::Eintr,
+            },
+            OpClass::Meta => match r % 3 {
+                0 => Fault::Fail("injected metadata failure"),
+                1 => Fault::Enospc,
+                _ => Fault::Eintr,
+            },
+        })
+    }
+}
+
+impl StoreIo for FaultIo {
+    fn read(&self, path: &Path) -> IoResult<Vec<u8>> {
+        match self.decide(OpClass::Read) {
+            None => self.inner.read(path),
+            Some(Fault::Short(r)) => {
+                let mut b = self.inner.read(path)?;
+                let keep = (r as usize) % (b.len() + 1);
+                b.truncate(keep);
+                Ok(b)
+            }
+            Some(Fault::Corrupt(r)) => {
+                let mut b = self.inner.read(path)?;
+                if !b.is_empty() {
+                    let i = (r as usize) % b.len();
+                    b[i] ^= 0x20;
+                }
+                Ok(b)
+            }
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn write(&self, path: &Path, bytes: &[u8]) -> IoResult<()> {
+        match self.decide(OpClass::Write) {
+            None => self.inner.write(path, bytes),
+            Some(Fault::Torn(r)) => {
+                let keep = (r as usize) % (bytes.len() + 1);
+                let _ = self.inner.write(path, &bytes[..keep]);
+                Err(Fault::Torn(r).into_err())
+            }
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn append(&self, path: &Path, bytes: &[u8]) -> IoResult<()> {
+        match self.decide(OpClass::Write) {
+            None => self.inner.append(path, bytes),
+            Some(Fault::Torn(r)) => {
+                let keep = (r as usize) % (bytes.len() + 1);
+                let _ = self.inner.append(path, &bytes[..keep]);
+                Err(Fault::Torn(r).into_err())
+            }
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn read_range(&self, path: &Path, offset: u64, len: usize) -> IoResult<Vec<u8>> {
+        match self.decide(OpClass::Read) {
+            None => self.inner.read_range(path, offset, len),
+            Some(Fault::Short(_)) => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "injected short positioned read",
+            )),
+            Some(Fault::Corrupt(r)) => {
+                let mut b = self.inner.read_range(path, offset, len)?;
+                if !b.is_empty() {
+                    let i = (r as usize) % b.len();
+                    b[i] ^= 0x20;
+                }
+                Ok(b)
+            }
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> IoResult<()> {
+        match self.decide(OpClass::Meta) {
+            None => self.inner.rename(from, to),
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn remove_file(&self, path: &Path) -> IoResult<()> {
+        match self.decide(OpClass::Meta) {
+            None => self.inner.remove_file(path),
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn create_dir_all(&self, path: &Path) -> IoResult<()> {
+        match self.decide(OpClass::Meta) {
+            None => self.inner.create_dir_all(path),
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn remove_dir(&self, path: &Path) -> IoResult<()> {
+        match self.decide(OpClass::Meta) {
+            None => self.inner.remove_dir(path),
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn list_dir(&self, path: &Path) -> IoResult<Vec<DirEntryInfo>> {
+        match self.decide(OpClass::Read) {
+            None => self.inner.list_dir(path),
+            Some(Fault::Short(r)) => {
+                let mut entries = self.inner.list_dir(path)?;
+                let keep = (r as usize) % (entries.len() + 1);
+                entries.truncate(keep);
+                Ok(entries)
+            }
+            Some(Fault::Corrupt(_)) => {
+                Err(io::Error::new(io::ErrorKind::Other, "injected listing failure"))
+            }
+            Some(f) => Err(f.into_err()),
+        }
+    }
+
+    fn file_len(&self, path: &Path) -> IoResult<u64> {
+        match self.decide(OpClass::Meta) {
+            None => self.inner.file_len(path),
+            Some(f) => Err(f.into_err()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mmap (moved here from exec::segment when the I/O seam was introduced)
+// ---------------------------------------------------------------------------
+
+/// Minimal read-only mmap over a file, used for segment reads when the
+/// `mmap` feature is on. No external crates: raw libc via `extern "C"`.
+#[cfg(all(feature = "mmap", unix, target_pointer_width = "64"))]
+mod mm {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 0x1;
+    const MAP_SHARED: i32 = 0x1;
+
+    pub struct Mmap {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // The mapping is read-only and lives until Drop; sharing the raw
+    // pointer across threads is safe.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            if !self.ptr.is_null() && self.len > 0 {
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+
+    impl super::SegmentMap for Mmap {
+        fn as_slice(&self) -> &[u8] {
+            Mmap::as_slice(self)
+        }
+    }
+
+    pub fn map_file(file: &File) -> Option<Mmap> {
+        let len = file.metadata().ok()?.len();
+        if len == 0 || len > usize::MAX as u64 {
+            return None;
+        }
+        let len = len as usize;
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            return None;
+        }
+        Some(Mmap { ptr, len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("multistride_vfs_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn retry_absorbs_transient_errors() {
+        let mut calls = 0;
+        let out: IoResult<u32> = with_retry(|| {
+            calls += 1;
+            if calls < 3 {
+                Err(io::Error::new(io::ErrorKind::Interrupted, "eintr"))
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_gives_up_on_hard_errors_immediately() {
+        let mut calls = 0;
+        let out: IoResult<u32> = with_retry(|| {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::Other, "enospc"))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, 1, "hard errors must not be retried");
+    }
+
+    #[test]
+    fn retry_is_bounded_for_persistent_transients() {
+        let mut calls = 0;
+        let out: IoResult<u32> = with_retry(|| {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::Interrupted, "eintr forever"))
+        });
+        assert!(out.is_err());
+        assert_eq!(calls, RETRY_ATTEMPTS as usize, "bounded attempts");
+    }
+
+    /// Same seed, same op sequence: identical outcomes, op for op.
+    #[test]
+    fn fault_schedule_is_deterministic() {
+        let dir = tmp("det");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("x");
+        std::fs::write(&file, b"0123456789abcdef").unwrap();
+        for seed in 0..16u64 {
+            let run = |_: u64| {
+                let io = FaultIo::seeded(seed);
+                let mut outcomes = Vec::new();
+                for _ in 0..32 {
+                    outcomes.push(match io.read(&file) {
+                        Ok(b) => format!("ok:{}", b.len()),
+                        Err(e) => format!("err:{}", e.kind()),
+                    });
+                }
+                (outcomes, io.injected())
+            };
+            assert_eq!(run(seed), run(seed), "seed {seed} must replay identically");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Across a modest seed range, every fault kind actually fires.
+    #[test]
+    fn fault_taxonomy_is_exercised() {
+        let dir = tmp("taxonomy");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("payload");
+        let full = b"the quick brown fox jumps over the lazy dog".to_vec();
+        std::fs::write(&file, &full).unwrap();
+        let (mut short, mut corrupt, mut eintr, mut torn, mut enospc) = (0, 0, 0, 0, 0);
+        for seed in 0..64u64 {
+            let io = FaultIo::seeded(seed);
+            for _ in 0..16 {
+                match io.read(&file) {
+                    Ok(b) if b.len() < full.len() => short += 1,
+                    Ok(b) if b != full => corrupt += 1,
+                    Ok(_) => {}
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => eintr += 1,
+                    Err(_) => {}
+                }
+            }
+            let out = dir.join(format!("out{seed}"));
+            for _ in 0..16 {
+                std::fs::remove_file(&out).ok();
+                match io.write(&out, &full) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        let on_disk = std::fs::read(&out).map(|b| b.len()).unwrap_or(0);
+                        if on_disk > 0 && on_disk < full.len() {
+                            torn += 1;
+                        }
+                        if e.to_string().contains("ENOSPC") {
+                            enospc += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(short > 0, "short reads must occur");
+        assert!(corrupt > 0, "corrupt reads must occur");
+        assert!(eintr > 0, "EINTR must occur");
+        assert!(torn > 0, "torn writes must occur");
+        assert!(enospc > 0, "ENOSPC must occur");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crash_point_kills_all_later_ops() {
+        let dir = tmp("crash");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("f");
+        std::fs::write(&file, b"data").unwrap();
+        let io = FaultIo::new(Arc::new(RealIo), FaultPlan::crash_after(3));
+        for i in 0..3 {
+            assert!(io.read(&file).is_ok(), "op {i} is before the crash-point");
+        }
+        assert!(!io.crashed());
+        for i in 3..8 {
+            assert!(io.read(&file).is_err(), "op {i} is past the crash-point");
+        }
+        assert!(io.crashed());
+        let dead = FaultIo::new(Arc::new(RealIo), FaultPlan::dead_disk());
+        assert!(dead.read(&file).is_err(), "a dead disk never serves");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

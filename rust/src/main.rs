@@ -15,6 +15,8 @@
 //! repro native                  # real host-memory multi-striding probe
 //! repro validate                # load + execute the PJRT artifacts
 //! repro all                     # everything (writes results/*.csv too)
+//! repro grid --shard k/n        # simulate one shard of the full plan
+//! repro store merge A B --into C  # union result stores by content key
 //! ```
 
 use std::path::PathBuf;
@@ -61,6 +63,7 @@ fn main() {
         "validate" => validate(&opts),
         "run" => run_config(&opts, &store),
         "all" => all(&opts, &store),
+        "grid" => grid_cmd(&opts, &store),
         "help" | "--help" | "-h" => {
             usage();
             Ok(())
@@ -90,15 +93,19 @@ fn usage() {
          [--plans DIR] [--results DIR] [--cold] [--force] [--no-prefetch] \
          [--config FILE]\n\
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
-         sweep universe tune native validate all\n\
+         sweep universe tune native validate all grid\n\
+         grid:     repro grid --shard k/n [--results DIR]   (one shard of the full plan)\n\
          store:    repro store stats|verify|compact [--results DIR]\n\
-         \u{20}         repro store gc --max-bytes N and/or --max-age-days N"
+         \u{20}         repro store gc --max-bytes N and/or --max-age-days N\n\
+         \u{20}         repro store merge SRC... --into DST   (union stores by content key)"
     );
 }
 
-/// `repro store {stats,gc,verify,compact}`: lifecycle tooling for a
-/// persistent results directory. Returns the process exit code (verify
-/// exits nonzero when it finds corruption or a semantic mismatch).
+/// `repro store {stats,gc,verify,compact,merge}`: lifecycle tooling for
+/// a persistent results directory. Returns the process exit code:
+/// verify exits nonzero when it finds corruption or a semantic
+/// mismatch, merge when same-key/different-bytes conflicts were
+/// quarantined — so CI and scripts can gate on both.
 fn store_command(args: &[String]) -> i32 {
     use multistride::exec::lifecycle::{self, StoreCommand};
     let (cmd, rest) = match lifecycle::parse_store_cli(args) {
@@ -173,6 +180,34 @@ fn store_command(args: &[String]) -> i32 {
                 0
             })
         }
+        StoreCommand::Merge { sources, into } => {
+            multistride::exec::grid::merge(&sources, &into).map(|r| {
+                println!(
+                    "[store] merge: {} source(s): {} record(s) merged ({} from legacy \
+                     shards), {} already present, {} corrupt skipped, {} conflict(s) \
+                     quarantined; {} manifest(s) validated, {} corrupt",
+                    r.sources,
+                    r.merged,
+                    r.legacy_folded,
+                    r.already_present,
+                    r.corrupt_skipped,
+                    r.conflicts,
+                    r.manifests_seen,
+                    r.manifests_corrupt,
+                );
+                if r.is_clean() {
+                    0
+                } else {
+                    eprintln!(
+                        "[store] merge: CONFLICTS — {} record(s) quarantined under {} \
+                         (same key, different bytes; never silently chosen)",
+                        r.conflicts,
+                        into.join(multistride::exec::grid::QUARANTINE_DIR).display(),
+                    );
+                    1
+                }
+            })
+        }
     };
     match result {
         Ok(code) => code,
@@ -205,6 +240,8 @@ struct Opts {
     /// read or written, so nothing from previous invocations is served
     /// (in-process dedup across this invocation's commands still applies).
     cold: bool,
+    /// `repro grid --shard k/n`: which key-range shard this host owns.
+    shard: Option<String>,
 }
 
 impl Opts {
@@ -222,6 +259,7 @@ impl Opts {
             force: false,
             results: None,
             cold: false,
+            shard: None,
         };
         let mut it = args.iter();
         while let Some(a) = it.next() {
@@ -256,6 +294,7 @@ impl Opts {
                     o.results = Some(PathBuf::from(it.next().expect("--results needs a value")))
                 }
                 "--cold" => o.cold = true,
+                "--shard" => o.shard = Some(it.next().expect("--shard needs a value").clone()),
                 "--force" => o.force = true,
                 "--no-prefetch" => o.prefetch = false,
                 other => {
@@ -775,6 +814,30 @@ fn all(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
     } else {
         validate(opts)?;
     }
+    Ok(())
+}
+
+/// `repro grid --shard k/n`: simulate this host's key-range slice of
+/// the full `repro all` plan into the persistent store and write its
+/// checksummed ownership manifest. Stores populated by disjoint shards
+/// union with `repro store merge`, after which `repro all` against the
+/// merged directory formats everything without engine work.
+fn grid_cmd(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
+    use multistride::exec::grid;
+    let spec = opts.shard.as_deref().ok_or_else(|| {
+        multistride::format_err!("grid requires --shard k/n (e.g. --shard 1/2)")
+    })?;
+    let shard = grid::ShardSpec::parse(spec)?;
+    let m = opts.machine.config();
+    let points = exp::repro_all_points(m, opts.scale(), opts.max_total, opts.prefetch);
+    let report = grid::run_shard(store, shard, &points)?;
+    println!(
+        "[grid] shard {}: {} of {} plan point(s) owned; manifest {}",
+        report.shard.label(),
+        report.owned,
+        report.plan_points,
+        report.manifest.display(),
+    );
     Ok(())
 }
 

@@ -291,6 +291,18 @@ pub fn render_exec_summary(
     if stats.corrupt_discards > 0 {
         s.push_str(&format!(", corrupt discards: {}", stats.corrupt_discards));
     }
+    if stats.disk_errors > 0 {
+        s.push_str(&format!(", disk errors: {}", stats.disk_errors));
+    }
+    if stats.dropped_unsimulatable > 0 {
+        s.push_str(&format!(
+            ", unsimulatable hits dropped: {}",
+            stats.dropped_unsimulatable
+        ));
+    }
+    if stats.degraded {
+        s.push_str(", PERSISTENT TIER DISABLED (memory-only)");
+    }
     if stats.verified_hits > 0 {
         s.push_str(&format!(", debug-verified hits: {}", stats.verified_hits));
     }

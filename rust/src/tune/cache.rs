@@ -13,22 +13,41 @@
 //! a plan that *is* damaged on disk fails [`TunedPlan::parse`]'s checksum
 //! with a recoverable error ([`PlanCache::load`] returns `Err`, never
 //! panics), which the tuner treats as a miss and re-tunes.
+//!
+//! All filesystem traffic goes through the [`StoreIo`] seam (see
+//! `exec::vfs`), so `tests/plan_cache_roundtrip.rs` can drive the cache
+//! through seeded fault schedules: a torn write or failed rename must
+//! stay a recoverable miss, never a stale or partial serve.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use super::plan::TunedPlan;
-use crate::error::Context;
+use crate::exec::vfs::{default_io, with_retry, StoreIo};
 use crate::{format_err, Result};
 
 /// Handle to a plan-cache directory (which need not exist yet).
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct PlanCache {
     dir: PathBuf,
+    io: Arc<dyn StoreIo>,
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanCache").field("dir", &self.dir).finish()
+    }
 }
 
 impl PlanCache {
     pub fn new(dir: impl Into<PathBuf>) -> Self {
-        Self { dir: dir.into() }
+        Self::with_io(dir, default_io())
+    }
+
+    /// Like [`PlanCache::new`] but over an explicit I/O backend (the
+    /// fault injector in tests; `default_io()` everywhere else).
+    pub fn with_io(dir: impl Into<PathBuf>, io: Arc<dyn StoreIo>) -> Self {
+        Self { dir: dir.into(), io }
     }
 
     /// The conventional location under an artifact directory.
@@ -66,11 +85,13 @@ impl PlanCache {
         budget_class: u32,
     ) -> Result<Option<TunedPlan>> {
         let path = self.path_for(kernel, machine, prefetch, budget_class);
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
+        let bytes = match with_retry(|| self.io.read(&path)) {
+            Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
             Err(e) => return Err(format_err!("plan cache: cannot read {path:?}: {e}")),
         };
+        let text = String::from_utf8(bytes)
+            .map_err(|_| format_err!("plan cache: {path:?}: not valid UTF-8"))?;
         TunedPlan::parse(&text)
             .map(Some)
             .map_err(|e| format_err!("plan cache: {path:?}: {e}"))
@@ -79,25 +100,26 @@ impl PlanCache {
     /// Persist a plan under its own key, atomically (temp file + rename).
     /// Parallel tuners write distinct keys, so distinct temp names.
     pub fn store(&self, plan: &TunedPlan) -> Result<PathBuf> {
-        std::fs::create_dir_all(&self.dir)
-            .context(format!("plan cache: cannot create {:?}", self.dir))?;
+        with_retry(|| self.io.create_dir_all(&self.dir))
+            .map_err(|e| format_err!("plan cache: cannot create {:?}: {e}", self.dir))?;
         let path =
             self.path_for(&plan.kernel, &plan.machine, plan.prefetch, plan.budget_class);
         let tmp = path.with_extension("plan.tmp");
-        std::fs::write(&tmp, plan.serialize())
-            .context(format!("plan cache: cannot write {tmp:?}"))?;
-        std::fs::rename(&tmp, &path)
-            .context(format!("plan cache: cannot move plan into place at {path:?}"))?;
+        with_retry(|| self.io.write(&tmp, plan.serialize().as_bytes()))
+            .map_err(|e| format_err!("plan cache: cannot write {tmp:?}: {e}"))?;
+        with_retry(|| self.io.rename(&tmp, &path)).map_err(|e| {
+            format_err!("plan cache: cannot move plan into place at {path:?}: {e}")
+        })?;
         Ok(path)
     }
 
     /// All plan files currently cached (sorted; for benches and CI).
     pub fn list(&self) -> Vec<PathBuf> {
         let mut out = Vec::new();
-        if let Ok(rd) = std::fs::read_dir(&self.dir) {
-            for e in rd.flatten() {
-                let p = e.path();
-                if p.extension().and_then(|x| x.to_str()) == Some("plan") {
+        if let Ok(entries) = self.io.list_dir(&self.dir) {
+            for e in entries {
+                let p = self.dir.join(&e.name);
+                if !e.is_dir && p.extension().and_then(|x| x.to_str()) == Some("plan") {
                     out.push(p);
                 }
             }

@@ -1,0 +1,376 @@
+//! The chaos wall: hundreds of seeded fault schedules driven through
+//! the persistent store, the crash-recovery path, and the grid merge —
+//! over a thousand schedules in a default `cargo test` run.
+//!
+//! Three invariants hold across every schedule:
+//!
+//! 1. **Never wrong bytes** — any record the store serves, even while
+//!    faults are still firing, is bit-identical to what was stored;
+//! 2. **Always self-heal to a miss** — damage surfaces as at most one
+//!    recoverable error, after which the key misses and can be
+//!    re-stored on clean I/O;
+//! 3. **Grid = single host** — a plan run as disjoint shards and merged
+//!    is bit-identical to the same plan run on one host, and re-merging
+//!    is a no-op.
+//!
+//! Every schedule is a pure function of its seed (`exec::vfs::FaultIo`),
+//! so a failure here replays exactly. `MULTISTRIDE_CHAOS_SCHEDULES`
+//! overrides the per-wall schedule count (CI's chaos-smoke job runs a
+//! reduced wall; the default counts sum to 1040).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use multistride::config::coffee_lake;
+use multistride::exec::format::{decode_result_bin, serialize_result, RESULT_BIN_BYTES};
+use multistride::exec::grid::{self, ShardSpec};
+use multistride::exec::segment::SegmentStore;
+use multistride::exec::vfs::{FaultIo, FaultPlan, RealIo, StoreIo};
+use multistride::exec::{lifecycle, Planner, ResultStore, SimPoint};
+use multistride::kernels::micro::MicroOp;
+use multistride::sim::RunResult;
+use multistride::util::Rng;
+
+/// Small roll size so every schedule exercises segment rolling.
+const ROLL: u64 = 1 << 10;
+
+fn schedules(default: u64) -> u64 {
+    std::env::var("MULTISTRIDE_CHAOS_SCHEDULES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("multistride_chaos_{tag}_{}", std::process::id()))
+}
+
+/// Synthetic records: random payload bytes decoded through the binary
+/// twin, so the stored bytes are adversarial rather than simulator-shaped.
+/// Keys are distinct within one batch.
+fn synth_records(rng: &mut Rng, n: usize) -> Vec<(u64, RunResult)> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let key = rng.next_u64();
+        if !seen.insert(key) {
+            continue;
+        }
+        let mut bytes = [0u8; RESULT_BIN_BYTES];
+        for b in bytes.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        out.push((key, decode_result_bin(&bytes).expect("length is exact")));
+    }
+    out
+}
+
+/// Wall 1 — the store fault wall: populate and read back through a
+/// seeded fault injector; whatever the store serves must be bit-exact,
+/// and a clean reopen must heal every damaged key to a servable miss.
+#[test]
+fn store_wall_never_serves_wrong_bytes_and_heals_on_clean_io() {
+    let dir = tmp("store_wall");
+    let n = schedules(640);
+    for seed in 0..n {
+        std::fs::remove_dir_all(&dir).ok();
+        let mut rng = Rng::new(0xC4A05 ^ seed);
+        let records = synth_records(&mut rng, 12);
+        let truth: Vec<(u64, String)> =
+            records.iter().map(|(k, r)| (*k, serialize_result(*k, r))).collect();
+        let fio = Arc::new(FaultIo::seeded(seed));
+        let io: Arc<dyn StoreIo> = fio.clone();
+
+        // Populate under faults: individual appends may fail; that is
+        // the point.
+        let mut st = SegmentStore::open_with(&dir, ROLL, Arc::clone(&io));
+        for (k, r) in &records {
+            let _ = st.append_result(*k, 1, r);
+        }
+        let _ = st.flush_index();
+        drop(st);
+
+        // Invariant 1: a second store over the same directory — faults
+        // still firing — never returns wrong bytes for a key it serves.
+        let mut faulty = SegmentStore::open_with(&dir, ROLL, Arc::clone(&io));
+        for (k, want) in &truth {
+            if let Some(Ok(got)) = faulty.lookup_result(*k) {
+                assert_eq!(
+                    &serialize_result(*k, &got),
+                    want,
+                    "seed {seed}: served wrong bytes for key {k:016x}"
+                );
+            }
+        }
+        drop(faulty);
+
+        // Lifecycle under fire: compaction may fail, but never panics
+        // and never plants wrong bytes (re-checked just below).
+        if seed % 3 == 0 {
+            let _ = lifecycle::compact_with(Arc::clone(&io), &dir);
+        }
+
+        // Invariant 2: on clean I/O every key serves the exact truth
+        // bytes or heals to a miss — damage may surface one recoverable
+        // error, after which the key misses.
+        let mut clean = SegmentStore::open_with(&dir, ROLL, Arc::new(RealIo));
+        for (k, want) in &truth {
+            match clean.lookup_result(*k) {
+                Some(Ok(got)) => assert_eq!(
+                    &serialize_result(*k, &got),
+                    want,
+                    "seed {seed}: clean reopen served wrong bytes for {k:016x}"
+                ),
+                Some(Err(_)) => assert!(
+                    clean.lookup_result(*k).is_none(),
+                    "seed {seed}: corrupt record for {k:016x} must heal to a miss"
+                ),
+                None => {}
+            }
+        }
+        assert!(fio.op_count() > 0, "seed {seed}: the schedule saw no I/O");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Wall 2 — the crash wall: the process dies after exactly `k` I/O
+/// operations mid-populate. Whatever landed must serve bit-exact on a
+/// clean reopen, re-storing the missing keys completes the set, and the
+/// heal is durable across another reopen.
+#[test]
+fn crash_wall_recovers_bit_exact_after_every_crash_point() {
+    let dir = tmp("crash_wall");
+    let n = schedules(200);
+    for seed in 0..n {
+        std::fs::remove_dir_all(&dir).ok();
+        let mut rng = Rng::new(0xDEAD ^ (seed << 8));
+        let records = synth_records(&mut rng, 8);
+
+        let io: Arc<dyn StoreIo> =
+            Arc::new(FaultIo::new(Arc::new(RealIo), FaultPlan::crash_after(seed % 40)));
+        let mut dying = SegmentStore::open_with(&dir, ROLL, io);
+        for (k, r) in &records {
+            let _ = dying.append_result(*k, 1, r);
+        }
+        let _ = dying.flush_index();
+        drop(dying); // the "crash": the process never runs another op
+
+        let mut healed = SegmentStore::open_with(&dir, ROLL, Arc::new(RealIo));
+        for (k, r) in &records {
+            let want = serialize_result(*k, r);
+            match healed.lookup_result(*k) {
+                Some(Ok(got)) => assert_eq!(
+                    serialize_result(*k, &got),
+                    want,
+                    "seed {seed}: survivor {k:016x} diverged"
+                ),
+                Some(Err(_)) => assert!(
+                    healed.lookup_result(*k).is_none(),
+                    "seed {seed}: torn record {k:016x} must heal to a miss"
+                ),
+                None => {}
+            }
+            if healed.lookup_result(*k).is_none() {
+                healed.append_result(*k, 2, r).expect("clean I/O re-stores");
+            }
+        }
+        healed.flush_index().expect("clean I/O flushes the index");
+        drop(healed);
+
+        let mut reopened = SegmentStore::open_with(&dir, ROLL, Arc::new(RealIo));
+        for (k, r) in &records {
+            let got = reopened
+                .lookup_result(*k)
+                .unwrap_or_else(|| panic!("seed {seed}: {k:016x} lost after heal"))
+                .unwrap_or_else(|e| panic!("seed {seed}: {k:016x} corrupt after heal: {e}"));
+            assert_eq!(
+                serialize_result(*k, &got),
+                serialize_result(*k, r),
+                "seed {seed}: healed bytes differ for {k:016x}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Wall 3 — the merge wall: a faulted merge may fail or stop short, but
+/// never plants wrong bytes or manufactures conflicts; a clean retry
+/// converges, and a second clean pass is a pure no-op.
+#[test]
+fn merge_wall_converges_under_faults_without_conflicts() {
+    let base = tmp("merge_wall");
+    let n = schedules(200);
+    for seed in 0..n {
+        std::fs::remove_dir_all(&base).ok();
+        let a = base.join("shard-a");
+        let b = base.join("shard-b");
+        let dst = base.join("merged");
+        let mut rng = Rng::new(0x3E26E ^ (seed << 4));
+        let records = synth_records(&mut rng, 10);
+
+        let mut sa = SegmentStore::open_with(&a, ROLL, Arc::new(RealIo));
+        let mut sb = SegmentStore::open_with(&b, ROLL, Arc::new(RealIo));
+        for (k, r) in &records {
+            let st = if grid::shard_of(*k, 2) == 1 { &mut sa } else { &mut sb };
+            st.append_result(*k, 1, r).expect("clean populate");
+        }
+        sa.flush_index().expect("flush shard-a");
+        sb.flush_index().expect("flush shard-b");
+        drop((sa, sb));
+
+        // A faulted merge attempt: any outcome but a panic or bad bytes.
+        let sources = vec![a.clone(), b.clone()];
+        let fio = Arc::new(FaultIo::seeded(0x9A17 ^ seed));
+        let _ = grid::merge_with(fio, &sources, &dst);
+
+        // Nothing wrong may have landed in the destination.
+        let mut check = SegmentStore::open_with(&dst, ROLL, Arc::new(RealIo));
+        for (k, r) in &records {
+            if let Some(Ok(got)) = check.lookup_result(*k) {
+                assert_eq!(
+                    serialize_result(*k, &got),
+                    serialize_result(*k, r),
+                    "seed {seed}: faulted merge planted wrong bytes for {k:016x}"
+                );
+            }
+        }
+        drop(check);
+
+        // A clean retry converges with zero conflicts and the full set.
+        let report = grid::merge(&sources, &dst).expect("clean merge succeeds");
+        assert!(report.is_clean(), "seed {seed}: clean merge must not conflict");
+        let mut merged = SegmentStore::open_with(&dst, ROLL, Arc::new(RealIo));
+        for (k, r) in &records {
+            let got = merged
+                .lookup_result(*k)
+                .unwrap_or_else(|| panic!("seed {seed}: {k:016x} missing after clean merge"))
+                .expect("record reads clean");
+            assert_eq!(
+                serialize_result(*k, &got),
+                serialize_result(*k, r),
+                "seed {seed}: merged bytes differ for {k:016x}"
+            );
+        }
+        drop(merged);
+
+        // A second clean pass is a pure no-op.
+        let again = grid::merge(&sources, &dst).expect("re-merge succeeds");
+        assert_eq!(
+            (again.merged, again.already_present),
+            (0, records.len() as u64),
+            "seed {seed}: re-merge must be a no-op"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A same-key/different-bytes conflict is quarantined and reported: the
+/// destination copy wins, the losing copy is preserved on the side, and
+/// the `is_clean` exit gate goes red — on every merge attempt, because
+/// a conflict never silently resolves.
+#[test]
+fn merge_quarantines_conflicts_and_keeps_the_destination_copy() {
+    let base = tmp("quarantine");
+    std::fs::remove_dir_all(&base).ok();
+    let src = base.join("src");
+    let dst = base.join("dst");
+    let mut rng = Rng::new(0x0C0F);
+    let recs = synth_records(&mut rng, 2);
+    let key = recs[0].0;
+    let kept = &recs[0].1;
+    let clash = &recs[1].1;
+    assert_ne!(serialize_result(key, kept), serialize_result(key, clash));
+
+    let mut d = SegmentStore::open_with(&dst, ROLL, Arc::new(RealIo));
+    d.append_result(key, 1, kept).unwrap();
+    d.flush_index().unwrap();
+    drop(d);
+    let mut s = SegmentStore::open_with(&src, ROLL, Arc::new(RealIo));
+    s.append_result(key, 1, clash).unwrap();
+    s.flush_index().unwrap();
+    drop(s);
+
+    let report = grid::merge(&[src.clone()], &dst).unwrap();
+    assert_eq!((report.merged, report.conflicts), (0, 1));
+    assert!(!report.is_clean(), "a conflict must fail the clean gate");
+
+    // The destination copy is untouched…
+    let mut d = SegmentStore::open_with(&dst, ROLL, Arc::new(RealIo));
+    let got = d.lookup_result(key).expect("still present").unwrap();
+    assert_eq!(serialize_result(key, &got), serialize_result(key, kept));
+    drop(d);
+    // …and the loser is preserved in quarantine, not discarded.
+    let qdir = dst.join(grid::QUARANTINE_DIR);
+    let quarantined = std::fs::read_dir(&qdir).unwrap().count();
+    assert_eq!(quarantined, 1, "exactly one quarantined record");
+
+    let again = grid::merge(&[src], &dst).unwrap();
+    assert_eq!(again.conflicts, 1, "re-merge reports the conflict again");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The flagship grid invariant: a plan run as two disjoint shards on
+/// separate stores, then merged, is bit-identical to the same plan run
+/// on a single host — and the planner serves the merged store with zero
+/// fresh engine runs.
+#[test]
+fn two_shard_grid_merge_matches_single_host_bit_for_bit() {
+    let base = tmp("grid_bitident");
+    std::fs::remove_dir_all(&base).ok();
+    let m = coffee_lake();
+    let mut points = Vec::new();
+    for pf in [true, false] {
+        for s in [1u32, 2, 4, 8, 16, 32] {
+            points.push(SimPoint::micro(m, MicroOp::LoadAligned, s, 1 << 20, pf, false));
+        }
+    }
+    let distinct: std::collections::HashSet<u64> = points.iter().map(|p| p.key()).collect();
+    assert_eq!(distinct.len(), points.len(), "this plan has no duplicate keys");
+
+    // Single host.
+    let single_store = ResultStore::persistent(base.join("single"));
+    let single = Planner::new(&single_store).run(&points).unwrap();
+    let want: Vec<String> =
+        points.iter().zip(&single).map(|(p, r)| serialize_result(p.key(), r)).collect();
+    drop(single_store);
+
+    // Two shards, each on its own store, each writing its manifest.
+    let dirs = [base.join("shard-1"), base.join("shard-2")];
+    let mut owned_total = 0;
+    for (i, dir) in dirs.iter().enumerate() {
+        let shard = ShardSpec::new(i as u32 + 1, 2).unwrap();
+        let store = ResultStore::persistent(dir);
+        let report = grid::run_shard(&store, shard, &points).unwrap();
+        assert_eq!(report.plan_points, points.len() as u64);
+        owned_total += report.owned;
+        let manifest = grid::load_manifest(&RealIo, &report.manifest).unwrap();
+        assert_eq!(manifest.keys.len() as u64, report.owned);
+        assert!(manifest.keys.iter().all(|&k| shard.owns(k)), "manifest matches partition");
+    }
+    assert_eq!(owned_total, points.len() as u64, "shards partition the plan exactly");
+
+    // Merge the shards and serve the full plan with zero engine runs.
+    let merged_dir = base.join("merged");
+    let sources = dirs.to_vec();
+    let report = grid::merge(&sources, &merged_dir).unwrap();
+    assert!(report.is_clean());
+    assert_eq!(report.merged, points.len() as u64);
+    assert_eq!(report.manifests_seen, 2, "both shard manifests validated");
+    let merged_store = ResultStore::persistent(&merged_dir);
+    let served = Planner::new(&merged_store).run(&points).unwrap();
+    assert_eq!(merged_store.stats().engine_runs, 0, "merged grid run is fully warm");
+    for ((p, w), r) in points.iter().zip(&want).zip(&served) {
+        assert_eq!(
+            &serialize_result(p.key(), r),
+            w,
+            "grid+merge diverged from single host on {}",
+            p.label()
+        );
+    }
+
+    // Re-merging is a no-op.
+    let again = grid::merge(&sources, &merged_dir).unwrap();
+    assert_eq!((again.merged, again.already_present), (0, points.len() as u64));
+    std::fs::remove_dir_all(&base).ok();
+}

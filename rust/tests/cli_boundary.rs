@@ -1,0 +1,141 @@
+//! Exit-code pins for the `repro` binary's store and grid surfaces.
+//!
+//! The contract scripts and CI gate on:
+//!
+//! * `0` — clean run (`store verify` found nothing wrong; `store merge`
+//!   applied or skipped every record without conflicts);
+//! * `1` — the operation ran but found real trouble (unhealed
+//!   corruption, quarantined merge conflicts, an unusable grid setup);
+//! * `2` — the invocation itself is malformed (unknown subcommand,
+//!   missing required flags).
+//!
+//! These tests drive the actual binary (`CARGO_BIN_EXE_repro`), not the
+//! library, so the process boundary — argv parsing, stream routing,
+//! exit status — is what is pinned.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+use std::sync::Arc;
+
+use multistride::exec::format::{decode_result_bin, RESULT_BIN_BYTES};
+use multistride::exec::segment::SegmentStore;
+use multistride::exec::vfs::RealIo;
+use multistride::util::Rng;
+
+fn repro(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro")).args(args).output().expect("repro spawns")
+}
+
+fn code(out: &Output) -> i32 {
+    out.status.code().expect("repro exits rather than dying on a signal")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("multistride_cli_{tag}_{}", std::process::id()))
+}
+
+/// Fill a store directory with `n` synthetic records; returns their keys.
+fn populate(dir: &Path, rng: &mut Rng, n: usize) -> Vec<u64> {
+    let mut st = SegmentStore::open_with(dir, 1 << 20, Arc::new(RealIo));
+    let mut keys = Vec::new();
+    for _ in 0..n {
+        let key = rng.next_u64();
+        let mut bytes = [0u8; RESULT_BIN_BYTES];
+        for b in bytes.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        st.append_result(key, 1, &decode_result_bin(&bytes).unwrap()).unwrap();
+        keys.push(key);
+    }
+    st.flush_index().unwrap();
+    keys
+}
+
+#[test]
+fn store_verify_exits_zero_on_clean_and_one_on_corruption() {
+    let dir = tmp("verify");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut rng = Rng::new(0xCB1);
+    populate(&dir, &mut rng, 3);
+    let dirs = dir.to_str().unwrap();
+    let clean = repro(&["store", "verify", "--results", dirs, "--smoke"]);
+    assert_eq!(code(&clean), 0, "clean store must verify green\n{}", stderr(&clean));
+
+    // A corrupt legacy shard is real, reportable damage: exit 1.
+    std::fs::create_dir_all(dir.join("ab")).unwrap();
+    std::fs::write(dir.join("ab").join("00ab4dbadc0ffee0.simres"), "not a result").unwrap();
+    let bad = repro(&["store", "verify", "--results", dirs, "--smoke"]);
+    assert_eq!(code(&bad), 1, "unhealed corruption must exit nonzero");
+    assert!(stderr(&bad).contains("FAILED"), "failure is announced on stderr");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn store_merge_exit_codes_gate_on_conflicts() {
+    let base = tmp("merge");
+    std::fs::remove_dir_all(&base).ok();
+    let (a, b, c, dst) = (base.join("a"), base.join("b"), base.join("c"), base.join("dst"));
+    let mut rng = Rng::new(0x9E5);
+    let keys_a = populate(&a, &mut rng, 3);
+    populate(&b, &mut rng, 3);
+    let (astr, bstr) = (a.to_str().unwrap(), b.to_str().unwrap());
+    let dstr = dst.to_str().unwrap();
+
+    let first = repro(&["store", "merge", astr, bstr, "--into", dstr]);
+    assert_eq!(code(&first), 0, "disjoint merge is clean\n{}", stderr(&first));
+    assert!(stdout(&first).contains("6 record(s) merged"), "got: {}", stdout(&first));
+
+    let again = repro(&["store", "merge", astr, bstr, "--into", dstr]);
+    assert_eq!(code(&again), 0, "re-merge stays clean");
+    assert!(stdout(&again).contains("0 record(s) merged"), "re-merge must be a no-op");
+
+    // Same key, different bytes: the quarantine gate goes red.
+    let mut st = SegmentStore::open_with(&c, 1 << 20, Arc::new(RealIo));
+    let mut bytes = [0u8; RESULT_BIN_BYTES];
+    for x in bytes.iter_mut() {
+        *x = rng.below(256) as u8;
+    }
+    st.append_result(keys_a[0], 1, &decode_result_bin(&bytes).unwrap()).unwrap();
+    st.flush_index().unwrap();
+    drop(st);
+    let conflicted = repro(&["store", "merge", c.to_str().unwrap(), "--into", dstr]);
+    assert_eq!(code(&conflicted), 1, "quarantined conflicts must exit nonzero");
+    assert!(stderr(&conflicted).contains("CONFLICTS"), "got: {}", stderr(&conflicted));
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn store_cli_grammar_errors_exit_two() {
+    assert_eq!(code(&repro(&["store", "merge", "a", "b"])), 2, "--into is required");
+    assert_eq!(code(&repro(&["store", "merge", "--into", "d"])), 2, "one SRC is required");
+    assert_eq!(code(&repro(&["store", "merge", "a", "--smoke", "--into", "d"])), 2);
+    assert_eq!(code(&repro(&["store", "gc"])), 2, "gc without a bound is refused");
+    assert_eq!(code(&repro(&["store", "frobnicate"])), 2, "unknown subcommand");
+    assert_eq!(code(&repro(&["store"])), 2, "missing subcommand");
+}
+
+#[test]
+fn grid_requires_a_shard_spec_and_a_persistent_store() {
+    let dir = tmp("grid");
+    std::fs::remove_dir_all(&dir).ok();
+    let dirs = dir.to_str().unwrap();
+    let missing = repro(&["grid", "--smoke", "--results", dirs]);
+    assert_eq!(code(&missing), 1, "grid without --shard must fail");
+    assert!(stderr(&missing).contains("--shard"), "got: {}", stderr(&missing));
+
+    let bad = repro(&["grid", "--shard", "3/2", "--smoke", "--results", dirs]);
+    assert_eq!(code(&bad), 1, "an out-of-range shard index must fail");
+
+    let cold = repro(&["grid", "--shard", "1/2", "--smoke", "--cold"]);
+    assert_eq!(code(&cold), 1, "grid over an ephemeral store must fail");
+    assert!(stderr(&cold).contains("persistent"), "got: {}", stderr(&cold));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -6,8 +6,15 @@
 //!   subnormals);
 //! * a corrupted or truncated plan file is rejected with a recoverable
 //!   error — never a panic, and never a silently-different plan;
-//! * the [`PlanCache`] file layer preserves both properties through disk.
+//! * the [`PlanCache`] file layer preserves both properties through disk;
+//! * driven through seeded fault schedules on the `StoreIo` seam, torn
+//!   writes and failed renames stay recoverable misses — the cache
+//!   never serves a partial or stale plan, and a dead disk degrades to
+//!   errors and empty listings, never panics.
 
+use std::sync::Arc;
+
+use multistride::exec::vfs::{FaultIo, FaultPlan, RealIo, StoreIo};
 use multistride::trace::Arrangement;
 use multistride::transform::StridingConfig;
 use multistride::tune::{PlanCache, TunedPlan};
@@ -154,5 +161,91 @@ fn corrupted_file_on_disk_is_a_recoverable_error() {
     // Entirely foreign content.
     std::fs::write(&path, "hello world").unwrap();
     assert!(cache.load(&p.kernel, &p.machine, p.prefetch, p.budget_class).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injected cache I/O (the `exec::vfs::StoreIo` seam)
+// ---------------------------------------------------------------------------
+
+/// Torn temp-file writes, injected ENOSPC and failed renames make
+/// `store` fail loudly, and whatever state they leave behind, a clean
+/// load sees either the complete plan or nothing — never a partial one.
+#[test]
+fn torn_plan_writes_are_recoverable_misses_never_partial_serves() {
+    let dir =
+        std::env::temp_dir().join(format!("multistride_plan_torn_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut r = Rng::new(0x70A9);
+    let p = rand_plan(&mut r, 40);
+    let (mut stored_ok, mut store_failed) = (0u32, 0u32);
+    for seed in 0..100u64 {
+        let io: Arc<dyn StoreIo> = Arc::new(FaultIo::seeded(seed));
+        match PlanCache::with_io(&dir, io).store(&p) {
+            Ok(_) => stored_ok += 1,
+            Err(_) => store_failed += 1,
+        }
+        let clean = PlanCache::new(&dir);
+        match clean.load(&p.kernel, &p.machine, p.prefetch, p.budget_class) {
+            Ok(Some(q)) => assert_eq!(p.serialize(), q.serialize(), "seed {seed}: partial"),
+            Ok(None) => assert_eq!(stored_ok, 0, "seed {seed}: a stored plan vanished"),
+            Err(e) => panic!("seed {seed}: atomic store leaked a broken plan file: {e}"),
+        }
+    }
+    assert!(stored_ok > 0, "some schedules must let the store through");
+    assert!(store_failed > 0, "some schedules must break the store");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same-key rewrites under fault schedules: a load always returns
+/// exactly the last successfully stored plan — a failed rewrite leaves
+/// the previous plan fully intact (never a blend, never a loss).
+#[test]
+fn faulted_rewrites_serve_the_last_stored_plan_never_a_blend() {
+    let dir =
+        std::env::temp_dir().join(format!("multistride_plan_rewrite_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut r = Rng::new(0xA17E);
+    let base = rand_plan(&mut r, 30);
+    PlanCache::new(&dir).store(&base).unwrap();
+    let mut latest = base.serialize();
+    for seed in 0..100u64 {
+        // A same-key update differing in the tuned fields.
+        let mut next = rand_plan(&mut r, 30);
+        next.kernel = base.kernel.clone();
+        next.machine = base.machine.clone();
+        next.prefetch = base.prefetch;
+        next.budget_class = base.budget_class;
+        let io: Arc<dyn StoreIo> = Arc::new(FaultIo::seeded(0x51A1E ^ seed));
+        if PlanCache::with_io(&dir, io).store(&next).is_ok() {
+            latest = next.serialize();
+        }
+        let got = PlanCache::new(&dir)
+            .load(&base.kernel, &base.machine, base.prefetch, base.budget_class)
+            .expect("the plan file is never left unreadable")
+            .expect("the plan file is never lost");
+        assert_eq!(got.serialize(), latest, "seed {seed}: served a stale or blended plan");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A disk that fails every operation degrades to recoverable errors and
+/// empty listings — no panics, and crucially no stale serves.
+#[test]
+fn a_dead_disk_degrades_to_errors_and_empty_listings() {
+    let dir =
+        std::env::temp_dir().join(format!("multistride_plan_dead_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut r = Rng::new(0xD1ED);
+    let p = rand_plan(&mut r, 30);
+    PlanCache::new(&dir).store(&p).unwrap();
+    let dead: Arc<dyn StoreIo> = Arc::new(FaultIo::new(Arc::new(RealIo), FaultPlan::dead_disk()));
+    let cache = PlanCache::with_io(&dir, dead);
+    assert!(
+        cache.load(&p.kernel, &p.machine, p.prefetch, p.budget_class).is_err(),
+        "a dead disk is a recoverable error, not a stale serve"
+    );
+    assert!(cache.store(&p).is_err(), "storing to a dead disk fails loudly");
+    assert!(cache.list().is_empty(), "listing a dead disk degrades to empty");
     std::fs::remove_dir_all(&dir).ok();
 }
