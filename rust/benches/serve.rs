@@ -1,0 +1,260 @@
+//! Bench harness — the plan-serving daemon: request throughput, tail
+//! latency, and buffer-pool hit ratios per eviction policy.
+//!
+//! "Serving heavy traffic" is the north star, so this harness makes it
+//! a number three ways:
+//!
+//! 1. **Cold vs warm over HTTP** — a real daemon on a loopback socket,
+//!    scripted keep-alive clients: the cold sweep pays disk reads, the
+//!    warm pass runs entirely out of the bounded pool. Requests/s plus
+//!    p50/p99 per-request latency (the `p50_latency_us`/`p99_latency_us`
+//!    fields) come from the warm pass.
+//! 2. **Per-policy hit ratios** — the same skewed trace replayed through
+//!    a pool deliberately too small for the working set, once per
+//!    policy (LRU / Clock / SIEVE); the `hit_pct_<policy>` fields and a
+//!    warm-ratio assert make "the pool works" checkable.
+//! 3. **Byte identity** — every 200 response is compared against the
+//!    plan file the tuner wrote; a single divergent byte aborts the
+//!    bench.
+//!
+//! Knobs (environment):
+//! * `MULTISTRIDE_SERVE_BYTES` — per-kernel tuning budget in bytes
+//!   (default 4 MiB; CI runs a reduced size).
+//! * `MULTISTRIDE_SERVE_KERNELS` — how many registry kernels to tune
+//!   and serve (default 4).
+//! * `MULTISTRIDE_SERVE_REQUESTS` — warm-pass request count per client
+//!   thread (default 1000, 4 threads).
+//! * `MULTISTRIDE_BENCH_JSON` — output path (default `BENCH_serve.json`).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use common::{env_u64, stage, write_bench_json, JsonScenario};
+use multistride::config::MachinePreset;
+use multistride::coordinator::experiments::EngineCache;
+use multistride::exec::ResultStore;
+use multistride::serve::{
+    Client, HttpServer, MissPolicy, PlanService, Policy, Request, ServerControl,
+};
+use multistride::tune::plan::budget_class;
+use multistride::tune::{PlanCache, Tuner};
+use multistride::util::Rng;
+
+const CLIENT_THREADS: usize = 4;
+
+fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn main() {
+    let budget = env_u64("MULTISTRIDE_SERVE_BYTES", 4 * 1024 * 1024);
+    let n_kernels = env_u64("MULTISTRIDE_SERVE_KERNELS", 4) as usize;
+    let per_client = env_u64("MULTISTRIDE_SERVE_REQUESTS", 1000);
+    let machine = MachinePreset::CoffeeLake;
+    let cfg = machine.config();
+
+    let dir = std::env::temp_dir().join(format!("multistride_serve_bench_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let plans = PlanCache::new(&dir);
+
+    // Warm the plan store the way `repro tune` would: one search per
+    // kernel, winners persisted. The daemon under test never searches.
+    let kernels: Vec<String> = multistride::runtime::universe_names(budget)
+        .into_iter()
+        .take(n_kernels)
+        .collect();
+    assert!(!kernels.is_empty(), "registry must not be empty");
+    let expected: Vec<(String, Vec<u8>)> = stage("tune plans to disk", || {
+        let tuner = Tuner::new(cfg, budget);
+        let store = ResultStore::ephemeral();
+        let mut engines = EngineCache::new();
+        kernels
+            .iter()
+            .map(|k| {
+                tuner.tune_on(&store, &mut engines, &plans, k, false).expect("tune succeeds");
+                let path = plans.path_for(k, cfg.name, true, budget_class(budget));
+                (k.clone(), std::fs::read(&path).expect("plan file exists"))
+            })
+            .collect()
+    });
+    let mut results = Vec::new();
+
+    // ---------------------------------------------------------------
+    // 1. HTTP: cold sweep, then a multi-client warm pass.
+    // ---------------------------------------------------------------
+    let service = Arc::new(PlanService::new(
+        64 * 1024 * 1024,
+        Policy::Lru,
+        MissPolicy::NotFound,
+        plans.clone(),
+        ResultStore::ephemeral(),
+    ));
+    let server = HttpServer::bind(0).expect("bind port 0");
+    let port = server.port();
+    let ctl = ServerControl::new(None);
+    let handler = {
+        let service = service.clone();
+        Arc::new(move |req: &Request| service.handle(req))
+    };
+    let join = {
+        let ctl = ctl.clone();
+        std::thread::spawn(move || server.serve(handler, ctl))
+    };
+    let url_for =
+        |k: &str| format!("/plan?kernel={k}&machine={}&budget={budget}", machine.cli_name());
+
+    let t = Instant::now();
+    {
+        let mut c = Client::connect(port).expect("connect");
+        for (k, want) in &expected {
+            let (status, body) = c.get(&url_for(k)).expect("cold request");
+            assert_eq!(status, 200, "cold serve of {k}");
+            assert_eq!(&body, want, "cold HTTP bytes == tuner plan file for {k}");
+        }
+    }
+    let cold_secs = t.elapsed().as_secs_f64();
+    println!(
+        "{:>42}: {:>8.2} requests/s ({} requests, {cold_secs:.4} s)",
+        "http plan serve, cold (disk)",
+        expected.len() as f64 / cold_secs,
+        expected.len(),
+    );
+    results.push(JsonScenario {
+        label: "http plan serve, cold (disk)".into(),
+        unit: "requests",
+        count: expected.len() as u64,
+        seconds: cold_secs,
+    });
+
+    let expected = Arc::new(expected);
+    let t = Instant::now();
+    let clients: Vec<_> = (0..CLIENT_THREADS)
+        .map(|tid| {
+            let expected = expected.clone();
+            let machine_name = machine.cli_name().to_string();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(port).expect("connect");
+                let mut rng = Rng::new(0x5E12E + tid as u64);
+                let mut lat_us = Vec::with_capacity(per_client as usize);
+                for _ in 0..per_client {
+                    let (k, want) = &expected[rng.below(expected.len() as u64) as usize];
+                    let url =
+                        format!("/plan?kernel={k}&machine={machine_name}&budget={budget}");
+                    let t = Instant::now();
+                    let (status, body) = c.get(&url).expect("warm request");
+                    lat_us.push(t.elapsed().as_micros() as u64);
+                    assert_eq!(status, 200);
+                    assert_eq!(&body, want, "warm HTTP bytes == tuner plan file for {k}");
+                }
+                lat_us
+            })
+        })
+        .collect();
+    let mut lat_us: Vec<u64> =
+        clients.into_iter().flat_map(|c| c.join().expect("client thread")).collect();
+    let warm_secs = t.elapsed().as_secs_f64();
+    lat_us.sort_unstable();
+    let (p50, p99) = (percentile(&lat_us, 0.50), percentile(&lat_us, 0.99));
+    let warm_requests = lat_us.len() as u64;
+    println!(
+        "{:>42}: {:>8.2} requests/s ({warm_requests} requests, {CLIENT_THREADS} clients, \
+         p50 {p50} us, p99 {p99} us)",
+        "http plan serve, warm (pool)",
+        warm_requests as f64 / warm_secs,
+    );
+    results.push(JsonScenario {
+        label: "http plan serve, warm (pool)".into(),
+        unit: "requests",
+        count: warm_requests,
+        seconds: warm_secs,
+    });
+    ctl.request_stop();
+    join.join().expect("server thread").expect("server exits cleanly");
+    let warm_stats = service.stats();
+    assert!(warm_stats.pool.hits > 0, "warm pass must hit the pool");
+    assert!(
+        warm_stats.pool.hit_pct() > 0.0,
+        "warm hit ratio must be positive, got {:?}",
+        warm_stats.pool
+    );
+    println!("{}", multistride::report::figures::render_serve_summary(&warm_stats).trim_end());
+
+    // ---------------------------------------------------------------
+    // 2. Per-policy hit ratios: pool too small for the working set,
+    //    identical skewed trace (70% of traffic on two hot kernels).
+    // ---------------------------------------------------------------
+    let total_bytes: u64 = expected.iter().map(|(_, b)| b.len() as u64).sum();
+    let pool_bytes = (total_bytes * 6 / 10).max(1);
+    let trace_len = 20_000u64;
+    let mut policy_hit_pct: Vec<(&'static str, u64)> = Vec::new();
+    for policy in Policy::all() {
+        let service = PlanService::new(
+            pool_bytes,
+            policy,
+            MissPolicy::NotFound,
+            plans.clone(),
+            ResultStore::ephemeral(),
+        );
+        let mut rng = Rng::new(0x9001);
+        let t = Instant::now();
+        for _ in 0..trace_len {
+            let idx = if rng.below(10) < 7 {
+                (rng.below(2) as usize).min(expected.len() - 1)
+            } else {
+                rng.below(expected.len() as u64) as usize
+            };
+            let (k, want) = &expected[idx];
+            let served = service
+                .plan_bytes(k, machine.cli_name(), budget, true)
+                .expect("trace request resolves");
+            assert_eq!(&*served.bytes, want, "policy {policy:?}: bytes stay identical");
+        }
+        let secs = t.elapsed().as_secs_f64();
+        let stats = service.stats();
+        assert_eq!(stats.pool.requests, trace_len);
+        assert!(
+            stats.pool.hit_pct() > 0.0,
+            "{policy:?}: skewed trace must produce hits, got {:?}",
+            stats.pool
+        );
+        assert!(stats.pool.current_bytes <= pool_bytes, "{policy:?}: byte bound holds");
+        println!(
+            "{:>42}: {:>8.2} requests/s ({:.1}% pool hits, {} evictions)",
+            format!("pool policy {}, skewed trace", policy.cli_name()),
+            trace_len as f64 / secs,
+            stats.pool.hit_pct(),
+            stats.pool.evictions,
+        );
+        results.push(JsonScenario {
+            label: format!("pool policy {}, skewed trace", policy.cli_name()),
+            unit: "requests",
+            count: trace_len,
+            seconds: secs,
+        });
+        policy_hit_pct.push((policy.cli_name(), stats.pool.hit_pct().round() as u64));
+    }
+
+    let mut extra: Vec<(&str, u64)> = vec![
+        ("budget_bytes", budget),
+        ("kernels", expected.len() as u64),
+        ("pool_bytes_policy_runs", pool_bytes),
+        ("client_threads", CLIENT_THREADS as u64),
+        ("p50_latency_us", p50),
+        ("p99_latency_us", p99),
+        ("warm_hit_pct", warm_stats.pool.hit_pct().round() as u64),
+    ];
+    let named: Vec<(String, u64)> =
+        policy_hit_pct.iter().map(|(n, v)| (format!("hit_pct_{n}"), *v)).collect();
+    extra.extend(named.iter().map(|(n, v)| (n.as_str(), *v)));
+
+    let json_path = std::env::var("MULTISTRIDE_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    write_bench_json(&json_path, "serve", &extra, &results);
+    std::fs::remove_dir_all(&dir).ok();
+}

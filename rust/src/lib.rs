@@ -71,6 +71,7 @@ pub mod native;
 pub mod prefetch;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod trace;
 pub mod transform;

@@ -17,6 +17,7 @@
 //! repro all                     # everything (writes results/*.csv too)
 //! repro grid --shard k/n        # simulate one shard of the full plan
 //! repro store merge A B --into C  # union result stores by content key
+//! repro serve --on-miss tune    # plan-serving HTTP daemon (bounded pool)
 //! ```
 
 use std::path::PathBuf;
@@ -43,6 +44,11 @@ fn main() {
     // lifecycle operations work on the directory itself.
     if cmd == "store" {
         std::process::exit(store_command(&args[1..]));
+    }
+    // Same shape for the daemon: `repro serve` owns its flags (`--port`,
+    // `--policy`, …) and hands the generic ones to Opts::parse.
+    if cmd == "serve" {
+        std::process::exit(serve_command(&args[1..]));
     }
     let opts = Opts::parse(&args[1..]);
     // One result store per invocation: the memory tier spans every
@@ -93,11 +99,13 @@ fn usage() {
          [--plans DIR] [--results DIR] [--cold] [--force] [--no-prefetch] \
          [--config FILE]\n\
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
-         sweep universe tune native validate all grid\n\
+         sweep universe tune native validate run all grid store serve\n\
          grid:     repro grid --shard k/n [--results DIR]   (one shard of the full plan)\n\
-         store:    repro store stats|verify|compact [--results DIR]\n\
+         store:    repro store stats|gc|verify|compact|merge [--results DIR]\n\
          \u{20}         repro store gc --max-bytes N and/or --max-age-days N\n\
-         \u{20}         repro store merge SRC... --into DST   (union stores by content key)"
+         \u{20}         repro store merge SRC... --into DST   (union stores by content key)\n\
+         serve:    repro serve [--port N] [--pool-bytes N] [--policy lru|clock|sieve]\n\
+         \u{20}         [--on-miss 404|tune] [--max-requests N] [--plans DIR] [--results DIR]"
     );
 }
 
@@ -112,6 +120,7 @@ fn store_command(args: &[String]) -> i32 {
         Ok(v) => v,
         Err(e) => {
             eprintln!("error: {e}");
+            usage();
             return 2;
         }
     };
@@ -218,6 +227,40 @@ fn store_command(args: &[String]) -> i32 {
     }
 }
 
+/// `repro serve`: the plan-serving HTTP daemon. Serves tuned plans and
+/// predicted counters out of the plan cache (`--plans DIR`, default
+/// `<artifacts>/plans`) through a bounded buffer pool; `--on-miss tune`
+/// additionally tunes unknown keys on demand against the result store.
+/// Returns the process exit code: 0 after a clean (budgeted) shutdown,
+/// 1 on runtime trouble, 2 for a malformed invocation.
+fn serve_command(args: &[String]) -> i32 {
+    use multistride::serve;
+    let (serve_opts, rest) = match serve::parse_serve_cli(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            return 2;
+        }
+    };
+    let opts = Opts::parse(&rest);
+    let plans = match &opts.plans {
+        Some(dir) => multistride::tune::PlanCache::new(dir),
+        None => multistride::tune::PlanCache::default_under(&opts.artifacts),
+    };
+    let store = opts.result_store();
+    match serve::run_serve(serve_opts, plans, store) {
+        Ok(stats) => {
+            print!("{}", figures::render_serve_summary(&stats));
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
 /// Parsed command-line options.
 struct Opts {
     machine: MachinePreset,
@@ -245,6 +288,21 @@ struct Opts {
 }
 
 impl Opts {
+    /// The flag's value, or the contract's clean exit: a missing value
+    /// is a malformed invocation — report it, print usage, exit 2. (A
+    /// `.expect()` here would panic with exit 101 and a backtrace,
+    /// which `tests/cli_boundary.rs` pins against.)
+    fn require_value<'a>(it: &mut std::slice::Iter<'a, String>, flag: &str) -> &'a String {
+        match it.next() {
+            Some(v) => v,
+            None => {
+                eprintln!("error: {flag} needs a value");
+                usage();
+                std::process::exit(2);
+            }
+        }
+    }
+
     fn parse(args: &[String]) -> Self {
         let mut o = Opts {
             machine: MachinePreset::CoffeeLake,
@@ -265,7 +323,7 @@ impl Opts {
         while let Some(a) = it.next() {
             match a.as_str() {
                 "--machine" => {
-                    let v = it.next().expect("--machine needs a value");
+                    let v = Self::require_value(&mut it, "--machine");
                     o.machine = match MachinePreset::from_name_or_listing(v) {
                         Ok(p) => p,
                         Err(e) => {
@@ -274,31 +332,41 @@ impl Opts {
                         }
                     };
                 }
-                "--kernel" => o.kernel = Some(it.next().expect("--kernel needs a value").clone()),
+                "--kernel" => o.kernel = Some(Self::require_value(&mut it, "--kernel").clone()),
                 "--smoke" => o.smoke = true,
                 "--max-total" => {
-                    o.max_total =
-                        it.next().expect("--max-total needs a value").parse().expect("number")
+                    let v = Self::require_value(&mut it, "--max-total");
+                    o.max_total = match v.parse() {
+                        Ok(n) => n,
+                        Err(_) => {
+                            eprintln!("error: --max-total needs a number, got {v:?}");
+                            usage();
+                            std::process::exit(2);
+                        }
+                    };
                 }
-                "--csv" => o.csv_dir = Some(PathBuf::from(it.next().expect("--csv needs a value"))),
+                "--csv" => {
+                    o.csv_dir = Some(PathBuf::from(Self::require_value(&mut it, "--csv")))
+                }
                 "--artifacts" => {
-                    o.artifacts = PathBuf::from(it.next().expect("--artifacts needs a value"))
+                    o.artifacts = PathBuf::from(Self::require_value(&mut it, "--artifacts"))
                 }
                 "--config" => {
-                    o.config = Some(PathBuf::from(it.next().expect("--config needs a value")))
+                    o.config = Some(PathBuf::from(Self::require_value(&mut it, "--config")))
                 }
                 "--plans" => {
-                    o.plans = Some(PathBuf::from(it.next().expect("--plans needs a value")))
+                    o.plans = Some(PathBuf::from(Self::require_value(&mut it, "--plans")))
                 }
                 "--results" => {
-                    o.results = Some(PathBuf::from(it.next().expect("--results needs a value")))
+                    o.results = Some(PathBuf::from(Self::require_value(&mut it, "--results")))
                 }
                 "--cold" => o.cold = true,
-                "--shard" => o.shard = Some(it.next().expect("--shard needs a value").clone()),
+                "--shard" => o.shard = Some(Self::require_value(&mut it, "--shard").clone()),
                 "--force" => o.force = true,
                 "--no-prefetch" => o.prefetch = false,
                 other => {
                     eprintln!("unknown option {other}");
+                    usage();
                     std::process::exit(2);
                 }
             }

@@ -314,6 +314,44 @@ pub fn render_exec_summary(
     s
 }
 
+/// One-line serving-layer summary (the `[serve]` line the daemon prints
+/// on shutdown and serves live at `GET /stats`; CI's serve-smoke job
+/// greps the `pool hits:` and `tunes:` figures out of it, so keep those
+/// labels stable).
+pub fn render_serve_summary(stats: &crate::serve::ServeStats) -> String {
+    let p = &stats.pool;
+    let mut s = format!(
+        "[serve] requests: {}, pool hits: {} ({:.1}%), misses: {}, disk plans: {}, \
+         tunes: {}, 404s: {}, 400s: {}, evictions: {}, pool: {}/{} B in {} entry(ies), \
+         policy: {}, on-miss: {}",
+        p.requests,
+        p.hits,
+        p.hit_pct(),
+        p.misses,
+        stats.disk_loads,
+        stats.tunes,
+        stats.not_found,
+        stats.bad_requests,
+        p.evictions,
+        p.current_bytes,
+        p.capacity_bytes,
+        p.current_entries,
+        stats.policy.cli_name(),
+        stats.on_miss.cli_name(),
+    );
+    if stats.tune_failures > 0 {
+        s.push_str(&format!(", tune failures: {}", stats.tune_failures));
+    }
+    if stats.single_flight_waits > 0 {
+        s.push_str(&format!(", single-flight waits: {}", stats.single_flight_waits));
+    }
+    if stats.pool.rejected_oversize > 0 {
+        s.push_str(&format!(", oversize rejects: {}", stats.pool.rejected_oversize));
+    }
+    s.push('\n');
+    s
+}
+
 /// CSV rows for a micro grid (external plotting).
 pub fn micro_csv_rows(points: &[MicroPoint]) -> Vec<Vec<String>> {
     points

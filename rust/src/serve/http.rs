@@ -1,0 +1,471 @@
+//! Hand-rolled HTTP/1.1 plumbing for `repro serve`.
+//!
+//! The crate is deliberately dependency-free, so this is a minimal but
+//! correct subset of RFC 9112 in the style of `config/toml_file.rs`:
+//! enough to parse a request line plus headers, percent-decode a query
+//! string, and write framed `Content-Length` responses over keep-alive
+//! connections. Anything outside the subset degrades to a clean error
+//! response, never a hang or a panic:
+//!
+//! * header blocks are capped at 8 KiB (`431` beyond that);
+//! * only `GET` is routed (`405` otherwise — the daemon is read-only);
+//! * sockets carry a read timeout so an idle client cannot pin a
+//!   thread forever;
+//! * malformed request lines close the connection with `400`.
+//!
+//! The accept loop is thread-per-connection (plan responses are a few
+//! hundred bytes; connection counts in the benches top out far below
+//! thread-pool territory) and stops on a shared [`ServerControl`]:
+//! either an explicit `request_stop` or an optional request budget
+//! (`--max-requests`), which is what makes the CI smoke job
+//! deterministic without signal handling. Shutdown wakes the blocking
+//! `accept` by dialing the listener once, then drains in-flight
+//! connections before returning.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::{format_err, Result};
+
+/// Cap on the request line + header block, per request.
+const MAX_HEADER_BYTES: usize = 8 * 1024;
+/// Idle-client guard on every connection.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A parsed request: method, decoded path, decoded query pairs.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Vec<(String, String)>,
+    /// Client asked to drop the connection after this response.
+    pub close: bool,
+}
+
+impl Request {
+    /// Last value for `name` (duplicate params: last one wins).
+    pub fn param(&self, name: &str) -> Option<&str> {
+        self.query.iter().rev().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A response ready to frame: status, media type, body bytes.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self { status, content_type: "text/plain; charset=utf-8", body: body.into().into_bytes() }
+    }
+
+    pub fn bytes(status: u16, body: Vec<u8>) -> Self {
+        Self { status, content_type: "application/octet-stream", body }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            431 => "Request Header Fields Too Large",
+            500 => "Internal Server Error",
+            _ => "Response",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream, close: bool) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            self.reason(),
+            self.content_type,
+            self.body.len(),
+            if close { "close" } else { "keep-alive" },
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Decode `%XX` escapes and `+`-as-space; invalid escapes pass through
+/// verbatim (the service layer rejects values it cannot use anyway).
+pub fn percent_decode(s: &str) -> String {
+    fn hex(b: u8) -> Option<u8> {
+        match b {
+            b'0'..=b'9' => Some(b - b'0'),
+            b'a'..=b'f' => Some(b - b'a' + 10),
+            b'A'..=b'F' => Some(b - b'A' + 10),
+            _ => None,
+        }
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 2 < bytes.len() => match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                (Some(hi), Some(lo)) => {
+                    out.push((hi << 4) | lo);
+                    i += 3;
+                }
+                _ => {
+                    out.push(b'%');
+                    i += 1;
+                }
+            },
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Split `path?query` into the decoded path and decoded key=value pairs.
+fn parse_target(target: &str) -> (String, Vec<(String, String)>) {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let pairs = query
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(kv), String::new()),
+        })
+        .collect();
+    (percent_decode(path), pairs)
+}
+
+/// Read one request's head off the wire. `Ok(None)` means the client
+/// closed cleanly between requests (normal keep-alive end).
+fn read_request(reader: &mut BufReader<&TcpStream>) -> Result<Option<Request>> {
+    let mut head = String::new();
+    loop {
+        let before = head.len();
+        let n = reader
+            .read_line(&mut head)
+            .map_err(|e| format_err!("reading request head: {e}"))?;
+        if n == 0 {
+            if before == 0 {
+                return Ok(None);
+            }
+            return Err(format_err!("connection closed mid-request"));
+        }
+        if head.len() > MAX_HEADER_BYTES {
+            return Err(format_err!("request head exceeds {MAX_HEADER_BYTES} bytes"));
+        }
+        // A lone CRLF terminates the head.
+        if head.ends_with("\r\n\r\n") || head == "\r\n" || head.ends_with("\n\n") {
+            break;
+        }
+    }
+    let mut lines = head.lines();
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if v.starts_with("HTTP/1.") => (m, t, v),
+        _ => return Err(format_err!("malformed request line: {request_line:?}")),
+    };
+    let mut close = version == "HTTP/1.0";
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("connection") && value.trim().eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    let (path, query) = parse_target(target);
+    Ok(Some(Request { method: method.to_string(), path, query, close }))
+}
+
+/// Shared shutdown/budget state between the accept loop, connection
+/// threads, and whoever owns the daemon.
+pub struct ServerControl {
+    shutdown: AtomicBool,
+    served: AtomicU64,
+    max_requests: Option<u64>,
+    port: AtomicU64,
+}
+
+impl ServerControl {
+    pub fn new(max_requests: Option<u64>) -> Arc<Self> {
+        Arc::new(Self {
+            shutdown: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            max_requests,
+            port: AtomicU64::new(0),
+        })
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.served.load(Ordering::SeqCst)
+    }
+
+    pub fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Ask the accept loop to stop, waking it if it is parked.
+    pub fn request_stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let port = self.port.load(Ordering::SeqCst) as u16;
+        if port != 0 {
+            // Accept is blocking; a throwaway dial unparks it so it can
+            // observe the flag. Failure is fine — the loop also checks
+            // the flag on every natural wakeup.
+            let _ = TcpStream::connect(("127.0.0.1", port));
+        }
+    }
+
+    /// Count one finished request; returns true when this request
+    /// exhausted the budget (that request is still answered in full).
+    fn count_request(&self) -> bool {
+        let n = self.served.fetch_add(1, Ordering::SeqCst) + 1;
+        matches!(self.max_requests, Some(max) if n >= max)
+    }
+}
+
+/// A bound listener plus its accept loop.
+pub struct HttpServer {
+    listener: TcpListener,
+    port: u16,
+}
+
+impl HttpServer {
+    /// Bind on localhost; port 0 picks a free port (tests, benches).
+    pub fn bind(port: u16) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| format_err!("binding 127.0.0.1:{port}: {e}"))?;
+        let port = listener.local_addr().map_err(|e| format_err!("local_addr: {e}"))?.port();
+        Ok(Self { listener, port })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Accept until `ctl` says stop; one thread per connection, drained
+    /// before returning. The handler must answer every request (the
+    /// wrapper maps a handler panic to a closed connection, not a
+    /// daemon crash).
+    pub fn serve<H>(&self, handler: Arc<H>, ctl: Arc<ServerControl>) -> Result<()>
+    where
+        H: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        ctl.port.store(self.port as u64, Ordering::SeqCst);
+        let active = Arc::new(AtomicUsize::new(0));
+        for conn in self.listener.incoming() {
+            if ctl.stopping() {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let (handler, ctl, active) = (handler.clone(), ctl.clone(), active.clone());
+            active.fetch_add(1, Ordering::SeqCst);
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &*handler, &ctl);
+                active.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        // Drain in-flight connections (bounded by the read timeout).
+        while active.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection<H>(stream: TcpStream, handler: &H, ctl: &ServerControl) -> Result<()>
+where
+    H: Fn(&Request) -> Response,
+{
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    let mut reader = BufReader::new(&stream);
+    let mut writer = stream.try_clone().map_err(|e| format_err!("cloning stream: {e}"))?;
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return Ok(()), // clean keep-alive close
+            Err(e) => {
+                let msg = e.to_string();
+                let status = if msg.contains("exceeds") { 431 } else { 400 };
+                let _ = Response::text(status, format!("{msg}\n")).write_to(&mut writer, true);
+                return Ok(());
+            }
+        };
+        // The head is all we frame; a GET body is not expected, and
+        // anything else is refused before a body could matter.
+        let response = if req.method == "GET" {
+            handler(&req)
+        } else {
+            Response::text(405, "only GET is served\n")
+        };
+        let exhausted = ctl.count_request();
+        let close = req.close || exhausted || ctl.stopping();
+        response.write_to(&mut writer, close).map_err(|e| format_err!("writing response: {e}"))?;
+        if exhausted {
+            ctl.request_stop();
+        }
+        if close {
+            return Ok(());
+        }
+    }
+}
+
+/// Minimal scripted client for tests and the bench load generator:
+/// one keep-alive connection, sequential GETs.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> Result<Self> {
+        let stream = TcpStream::connect(("127.0.0.1", port))
+            .map_err(|e| format_err!("connecting to 127.0.0.1:{port}: {e}"))?;
+        stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+        Ok(Self { stream })
+    }
+
+    /// Issue `GET <target>`; returns (status, body bytes).
+    pub fn get(&mut self, target: &str) -> Result<(u16, Vec<u8>)> {
+        let req = format!("GET {target} HTTP/1.1\r\nHost: 127.0.0.1\r\n\r\n");
+        self.stream.write_all(req.as_bytes()).map_err(|e| format_err!("sending request: {e}"))?;
+        let mut reader = BufReader::new(&self.stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line).map_err(|e| format_err!("reading status: {e}"))?;
+        let status: u16 = status_line
+            .split_ascii_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format_err!("malformed status line: {status_line:?}"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).map_err(|e| format_err!("reading header: {e}"))?;
+            if n == 0 || line == "\r\n" || line == "\n" {
+                break;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value
+                        .trim()
+                        .parse()
+                        .map_err(|e| format_err!("bad content-length {value:?}: {e}"))?;
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body).map_err(|e| format_err!("reading body: {e}"))?;
+        Ok((status, body))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percent_decoding_handles_escapes_plus_and_junk() {
+        assert_eq!(percent_decode("coffee-lake"), "coffee-lake");
+        assert_eq!(percent_decode("coffee%2Dlake"), "coffee-lake");
+        assert_eq!(percent_decode("a+b%20c"), "a b c");
+        assert_eq!(percent_decode("bad%zzend"), "bad%zzend", "invalid escape passes through");
+        assert_eq!(percent_decode("cut%2"), "cut%2", "truncated escape passes through");
+    }
+
+    #[test]
+    fn target_parsing_splits_path_and_params() {
+        let (path, q) = parse_target("/plan?kernel=mxv&machine=coffee%2Dlake&flag");
+        assert_eq!(path, "/plan");
+        assert_eq!(q[0], ("kernel".to_string(), "mxv".to_string()));
+        assert_eq!(q[1], ("machine".to_string(), "coffee-lake".to_string()));
+        assert_eq!(q[2], ("flag".to_string(), String::new()));
+        let req = Request { method: "GET".into(), path, query: q, close: false };
+        assert_eq!(req.param("kernel"), Some("mxv"));
+        assert_eq!(req.param("absent"), None);
+    }
+
+    #[test]
+    fn duplicate_params_last_one_wins() {
+        let (_, q) = parse_target("/plan?budget=1&budget=2");
+        let req = Request { method: "GET".into(), path: "/plan".into(), query: q, close: false };
+        assert_eq!(req.param("budget"), Some("2"));
+    }
+
+    #[test]
+    fn round_trip_over_a_real_socket() {
+        let server = HttpServer::bind(0).unwrap();
+        let port = server.port();
+        let ctl = ServerControl::new(Some(3));
+        let handler = Arc::new(|req: &Request| {
+            Response::text(200, format!("path={} kernel={:?}\n", req.path, req.param("kernel")))
+        });
+        let srv_ctl = ctl.clone();
+        let join = std::thread::spawn(move || server.serve(handler, srv_ctl));
+
+        let mut client = Client::connect(port).unwrap();
+        // Two requests over one keep-alive connection.
+        let (status, body) = client.get("/plan?kernel=mxv").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(String::from_utf8_lossy(&body), "path=/plan kernel=Some(\"mxv\")\n");
+        let (status, _) = client.get("/healthz").unwrap();
+        assert_eq!(status, 200);
+        // Drop the idle connection so the drain loop need not wait out
+        // its read timeout.
+        drop(client);
+        // Third request exhausts the budget and stops the daemon.
+        let mut second = Client::connect(port).unwrap();
+        let (status, _) = second.get("/plan").unwrap();
+        assert_eq!(status, 200);
+        join.join().unwrap().unwrap();
+        assert_eq!(ctl.requests_served(), 3);
+    }
+
+    #[test]
+    fn non_get_is_405_and_garbage_is_400() {
+        let server = HttpServer::bind(0).unwrap();
+        let port = server.port();
+        let ctl = ServerControl::new(None);
+        let handler = Arc::new(|_: &Request| Response::text(200, "ok\n"));
+        let srv_ctl = ctl.clone();
+        let join = std::thread::spawn(move || server.serve(handler, srv_ctl));
+
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream.write_all(b"POST /plan HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        BufReader::new(&stream).read_line(&mut buf).unwrap();
+        assert!(buf.contains("405"), "got: {buf}");
+
+        let mut bad = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        bad.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        BufReader::new(&bad).read_line(&mut buf).unwrap();
+        assert!(buf.contains("400"), "got: {buf}");
+
+        // Free the parked keep-alive thread before stopping: the drain
+        // loop waits for active connections.
+        drop(stream);
+        drop(bad);
+        ctl.request_stop();
+        join.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,200 @@
+//! `repro serve` — the plan-serving daemon.
+//!
+//! The north star is serving tuned plans and predicted counters to
+//! heavy traffic, and everything needed already sits content-addressed
+//! on disk: `<artifacts>/plans` (the [`PlanCache`](crate::tune::PlanCache))
+//! and `<artifacts>/results` (the segment
+//! [`ResultStore`](crate::exec::ResultStore)). This module puts an HTTP
+//! front on those stores:
+//!
+//! * [`http`] — hand-rolled, dependency-free HTTP/1.1 over
+//!   `std::net::TcpListener` (keep-alive, bounded heads, scripted
+//!   client for tests and the bench load generator);
+//! * [`replacer`] — the pluggable eviction lattice (LRU / Clock /
+//!   SIEVE) behind one [`Replacer`] trait;
+//! * [`pool`] — the bounded [`BufferPool`]: a byte-budgeted cache of
+//!   serialized plans whose bound is never exceeded, not even
+//!   transiently;
+//! * [`service`] — the [`PlanService`]: endpoint grammar, pool → disk
+//!   → miss-policy resolution, single-flight tune-on-demand, counters.
+//!
+//! This file owns the CLI surface (`parse_serve_cli`, mirroring
+//! `exec::lifecycle::parse_store_cli`: serve-specific flags out,
+//! generic flags left for the caller's option parser) and the daemon
+//! entry point [`run_serve`]. The daemon's lifetime summary is the
+//! greppable `[serve]` line (see `report::figures::render_serve_summary`),
+//! printed on shutdown and served live at `GET /stats`.
+
+pub mod http;
+pub mod pool;
+pub mod replacer;
+pub mod service;
+
+use std::sync::Arc;
+
+use crate::exec::ResultStore;
+use crate::tune::PlanCache;
+use crate::{ensure, format_err, Result};
+
+pub use http::{Client, HttpServer, Request, Response, ServerControl};
+pub use pool::{BufferPool, PoolStats};
+pub use replacer::{Policy, Replacer};
+pub use service::{MissPolicy, PlanService, PlanSource, ServeError, ServeStats, Served};
+
+/// Default listening port (deliberately unprivileged and greppable).
+pub const DEFAULT_PORT: u16 = 7878;
+/// Default pool budget: 64 MiB holds tens of thousands of plans —
+/// plans are a few hundred bytes, so the bound exists to make eviction
+/// *observable* under bench pressure, not because plans are big.
+pub const DEFAULT_POOL_BYTES: u64 = 64 * 1024 * 1024;
+
+/// Parsed `repro serve` options (the serve-specific flags only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeOpts {
+    pub port: u16,
+    pub pool_bytes: u64,
+    pub policy: Policy,
+    pub on_miss: MissPolicy,
+    /// Stop after answering exactly this many requests (the request
+    /// that exhausts the budget is still answered in full). This is
+    /// what lets CI script a deterministic daemon lifetime without
+    /// signal handling; absent means serve forever.
+    pub max_requests: Option<u64>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self {
+            port: DEFAULT_PORT,
+            pool_bytes: DEFAULT_POOL_BYTES,
+            policy: Policy::Lru,
+            on_miss: MissPolicy::NotFound,
+            max_requests: None,
+        }
+    }
+}
+
+/// Parse `repro serve …` argv: the daemon flags, returning the leftover
+/// args for the generic option parser (`--plans`, `--results`,
+/// `--artifacts`, `--cold`, `--smoke`, …).
+pub fn parse_serve_cli(args: &[String]) -> Result<(ServeOpts, Vec<String>)> {
+    fn value<'a>(it: &mut std::slice::Iter<'a, String>, flag: &str) -> Result<&'a String> {
+        it.next().ok_or_else(|| format_err!("serve: {flag} needs a value"))
+    }
+    let mut o = ServeOpts::default();
+    let mut rest = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--port" => {
+                let v = value(&mut it, "--port")?;
+                o.port = v
+                    .parse()
+                    .map_err(|_| format_err!("serve: --port must be 0..=65535, got {v:?}"))?;
+            }
+            "--pool-bytes" => {
+                let v = value(&mut it, "--pool-bytes")?;
+                o.pool_bytes = v.parse().map_err(|_| {
+                    format_err!("serve: --pool-bytes must be a byte count, got {v:?}")
+                })?;
+                ensure!(o.pool_bytes > 0, "serve: --pool-bytes must be positive");
+            }
+            "--policy" => o.policy = Policy::from_name(value(&mut it, "--policy")?)?,
+            "--on-miss" => o.on_miss = MissPolicy::from_name(value(&mut it, "--on-miss")?)?,
+            "--max-requests" => {
+                let v = value(&mut it, "--max-requests")?;
+                let n: u64 = v.parse().map_err(|_| {
+                    format_err!("serve: --max-requests must be a count, got {v:?}")
+                })?;
+                ensure!(n > 0, "serve: --max-requests must be positive");
+                o.max_requests = Some(n);
+            }
+            _ => rest.push(a.clone()),
+        }
+    }
+    Ok((o, rest))
+}
+
+/// Run the daemon until its [`ServerControl`] stops it (request budget,
+/// or an external `request_stop`). Blocks; returns the lifetime stats
+/// for the `[serve]` summary line.
+pub fn run_serve(opts: ServeOpts, plans: PlanCache, store: ResultStore) -> Result<ServeStats> {
+    let service =
+        Arc::new(PlanService::new(opts.pool_bytes, opts.policy, opts.on_miss, plans, store));
+    let server = HttpServer::bind(opts.port)?;
+    let ctl = ServerControl::new(opts.max_requests);
+    println!(
+        "[serve] listening on 127.0.0.1:{} (policy {}, pool {} B, on-miss {}{})",
+        server.port(),
+        opts.policy.cli_name(),
+        opts.pool_bytes,
+        opts.on_miss.cli_name(),
+        match opts.max_requests {
+            Some(n) => format!(", stopping after {n} request(s)"),
+            None => String::new(),
+        },
+    );
+    let handler = {
+        let service = service.clone();
+        Arc::new(move |req: &Request| service.handle(req))
+    };
+    server.serve(handler, ctl)?;
+    Ok(service.stats())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn serve_cli_defaults_and_passthrough() {
+        let (o, rest) = parse_serve_cli(&argv(&["--results", "r", "--smoke"])).unwrap();
+        assert_eq!(o, ServeOpts::default());
+        assert_eq!(rest, argv(&["--results", "r", "--smoke"]));
+    }
+
+    #[test]
+    fn serve_cli_parses_every_flag() {
+        let (o, rest) = parse_serve_cli(&argv(&[
+            "--port",
+            "0",
+            "--pool-bytes",
+            "4096",
+            "--policy",
+            "sieve",
+            "--on-miss",
+            "tune",
+            "--max-requests",
+            "7",
+            "--plans",
+            "p",
+        ]))
+        .unwrap();
+        assert_eq!(o.port, 0);
+        assert_eq!(o.pool_bytes, 4096);
+        assert_eq!(o.policy, Policy::Sieve);
+        assert_eq!(o.on_miss, MissPolicy::Tune);
+        assert_eq!(o.max_requests, Some(7));
+        assert_eq!(rest, argv(&["--plans", "p"]));
+    }
+
+    #[test]
+    fn serve_cli_rejects_malformed_values() {
+        for bad in [
+            &["--port"][..],
+            &["--port", "notaport"],
+            &["--pool-bytes", "big"],
+            &["--pool-bytes", "0"],
+            &["--policy", "mru"],
+            &["--on-miss", "panic"],
+            &["--max-requests", "0"],
+            &["--max-requests", "many"],
+        ] {
+            assert!(parse_serve_cli(&argv(bad)).is_err(), "{bad:?} must be refused");
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Bounded in-memory buffer pool fronting the plan stores.
+//!
+//! The pool is the serving layer's only cache: a byte-budgeted map from
+//! a plan-identity key (see `super::service::plan_key`) to the exact
+//! serialized plan bytes, with eviction order delegated to a pluggable
+//! [`Replacer`](super::replacer::Replacer). The hard contract — pinned
+//! by a concurrent wall in `tests/serve_pool.rs` — is that the sum of
+//! cached entry sizes **never** exceeds `capacity_bytes`, not even
+//! transiently: insertion evicts first, inserts after, all under one
+//! mutex.
+//!
+//! Entries larger than the whole budget are refused outright (counted
+//! in `rejected_oversize`) instead of flushing the pool for a single
+//! request. Values are handed out as `Arc<Vec<u8>>`, so an entry
+//! evicted mid-flight stays alive for the response already holding it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::replacer::{Policy, Replacer};
+
+/// Point-in-time counters, readable while the daemon runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub rejected_oversize: u64,
+    pub current_bytes: u64,
+    pub current_entries: u64,
+    pub capacity_bytes: u64,
+}
+
+impl PoolStats {
+    /// Hit ratio in percent (0 when the pool was never asked).
+    pub fn hit_pct(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        100.0 * self.hits as f64 / self.requests as f64
+    }
+}
+
+struct Inner {
+    entries: HashMap<u64, Arc<Vec<u8>>>,
+    bytes: u64,
+    replacer: Box<dyn Replacer>,
+    stats: PoolStats,
+}
+
+/// Byte-bounded cache with pluggable eviction. Shared by `&self`; all
+/// state sits behind one mutex (entries are small and the critical
+/// sections copy nothing but an `Arc`).
+pub struct BufferPool {
+    capacity_bytes: u64,
+    inner: Mutex<Inner>,
+}
+
+impl BufferPool {
+    pub fn new(capacity_bytes: u64, policy: Policy) -> Self {
+        Self {
+            capacity_bytes,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                bytes: 0,
+                replacer: policy.new_replacer(),
+                stats: PoolStats { capacity_bytes, ..PoolStats::default() },
+            }),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.inner.lock().unwrap().replacer.policy()
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Look up `key`, counting a hit or miss and updating recency.
+    pub fn get(&self, key: u64) -> Option<Arc<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.requests += 1;
+        match inner.entries.get(&key).cloned() {
+            Some(value) => {
+                inner.stats.hits += 1;
+                inner.replacer.touch(key);
+                Some(value)
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Cache `value` under `key`, evicting until it fits. Returns false
+    /// (and caches nothing) when the value alone exceeds the budget.
+    /// Re-inserting a present key replaces the bytes in place.
+    pub fn insert(&self, key: u64, value: Arc<Vec<u8>>) -> bool {
+        let size = value.len() as u64;
+        let mut inner = self.inner.lock().unwrap();
+        if size > self.capacity_bytes {
+            inner.stats.rejected_oversize += 1;
+            return false;
+        }
+        if let Some(old) = inner.entries.remove(&key) {
+            // Replacement: release the old bytes first so the fit check
+            // sees the true residual load.
+            inner.bytes -= old.len() as u64;
+            inner.replacer.remove(key);
+        }
+        while inner.bytes + size > self.capacity_bytes {
+            let victim = inner.replacer.evict().expect("bytes > 0 implies a tracked key");
+            let dropped = inner.entries.remove(&victim).expect("replacer tracks only residents");
+            inner.bytes -= dropped.len() as u64;
+            inner.stats.evictions += 1;
+        }
+        inner.bytes += size;
+        inner.entries.insert(key, value);
+        inner.replacer.touch(key);
+        inner.stats.insertions += 1;
+        true
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        let mut s = inner.stats;
+        s.current_bytes = inner.bytes;
+        s.current_entries = inner.entries.len() as u64;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val(n: usize, fill: u8) -> Arc<Vec<u8>> {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn insert_then_get_round_trips() {
+        let pool = BufferPool::new(100, Policy::Lru);
+        assert!(pool.insert(1, val(40, 0xA)));
+        assert_eq!(pool.get(1).unwrap().len(), 40);
+        assert!(pool.get(2).is_none());
+        let s = pool.stats();
+        assert_eq!((s.requests, s.hits, s.misses), (2, 1, 1));
+        assert_eq!((s.current_bytes, s.current_entries), (40, 1));
+    }
+
+    #[test]
+    fn byte_bound_holds_and_evictions_are_counted() {
+        let pool = BufferPool::new(100, Policy::Lru);
+        for key in 0..5u64 {
+            assert!(pool.insert(key, val(40, key as u8)));
+            assert!(pool.stats().current_bytes <= 100);
+        }
+        let s = pool.stats();
+        assert_eq!(s.current_entries, 2, "100-byte budget holds two 40-byte plans");
+        assert_eq!(s.evictions, 3);
+        // LRU: the two newest keys survive.
+        assert!(pool.get(3).is_some() && pool.get(4).is_some());
+    }
+
+    #[test]
+    fn oversize_values_are_rejected_not_cached() {
+        let pool = BufferPool::new(64, Policy::Sieve);
+        assert!(pool.insert(1, val(10, 1)));
+        assert!(!pool.insert(2, val(65, 2)), "larger than the whole budget");
+        let s = pool.stats();
+        assert_eq!(s.rejected_oversize, 1);
+        assert_eq!(s.current_entries, 1, "the resident entry is untouched");
+        assert!(pool.get(2).is_none());
+    }
+
+    #[test]
+    fn reinsert_replaces_in_place() {
+        let pool = BufferPool::new(100, Policy::Clock);
+        assert!(pool.insert(7, val(60, 1)));
+        assert!(pool.insert(7, val(80, 2)), "replacement releases the old bytes first");
+        let s = pool.stats();
+        assert_eq!((s.current_bytes, s.current_entries, s.evictions), (80, 1, 0));
+        assert_eq!(pool.get(7).unwrap()[0], 2);
+    }
+
+    #[test]
+    fn evicted_arcs_stay_alive_for_in_flight_readers() {
+        let pool = BufferPool::new(50, Policy::Lru);
+        pool.insert(1, val(50, 0xEE));
+        let held = pool.get(1).unwrap();
+        pool.insert(2, val(50, 0x22)); // evicts 1
+        assert!(pool.get(1).is_none());
+        assert_eq!(held.len(), 50, "response already holding the Arc is unaffected");
+        assert!(held.iter().all(|&b| b == 0xEE));
+    }
+
+    #[test]
+    fn hit_pct_reads_back() {
+        let pool = BufferPool::new(100, Policy::Lru);
+        assert_eq!(pool.stats().hit_pct(), 0.0);
+        pool.insert(1, val(10, 0));
+        pool.get(1);
+        pool.get(2);
+        assert!((pool.stats().hit_pct() - 50.0).abs() < 1e-9);
+    }
+}

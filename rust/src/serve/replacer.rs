@@ -1,0 +1,399 @@
+//! Pluggable eviction policies for the serving buffer pool.
+//!
+//! The pool ([`super::pool::BufferPool`]) tracks *what* is cached and how
+//! many bytes it costs; a [`Replacer`] tracks *which entry dies next*.
+//! Keeping the two concerns behind one small trait is what makes the
+//! policy a CLI knob (`repro serve --policy lru|clock|sieve`) and lets
+//! the bench measure the policies against each other on identical
+//! request streams.
+//!
+//! Three policies ship, the classic buffer-manager lattice:
+//!
+//! * [`LruReplacer`] — exact least-recently-used. Every touch stamps the
+//!   key with a monotonically increasing tick; eviction removes the
+//!   minimum stamp. O(1) touch, O(n) evict — the pool holds at most a
+//!   few thousand plan-sized entries, so the scan is cheaper than
+//!   maintaining an intrusive list.
+//! * [`ClockReplacer`] — the second-chance approximation. Keys sit on a
+//!   ring in insertion order with a referenced bit; a touch sets the
+//!   bit. The eviction hand sweeps the ring: a referenced key is spared
+//!   (bit cleared, pushed behind the hand), the first unreferenced key
+//!   is the victim. New keys join immediately *behind* the hand, so
+//!   they are visited last in the current sweep.
+//! * [`SieveReplacer`] — SIEVE (NSDI'24): a FIFO queue with a visited
+//!   bit and a hand that moves from the oldest entry toward the newest.
+//!   A hit only sets the visited bit — entries never move, which is
+//!   what makes the policy scan-resistant. The hand clears visited bits
+//!   as it sweeps and evicts the first unvisited entry it meets; new
+//!   entries join at the newest end, and the hand wraps back to the
+//!   oldest end when it runs off the queue.
+//!
+//! Contract shared by all three (pinned differentially against naive
+//! reference models in `tests/serve_pool.rs`):
+//!
+//! * `touch(k)` inserts an absent key and marks a present one used;
+//! * `evict()` removes and returns exactly one tracked key (`None` when
+//!   empty) — the pool then drops that entry's bytes;
+//! * `remove(k)` forgets a key without counting as an eviction;
+//! * `len()` equals the number of tracked keys at all times.
+//!
+//! To add a policy: implement the trait, extend [`Policy`] and its
+//! name tables, and add an arm to [`Policy::new_replacer`] — the CLI,
+//! pool, bench sweep and differential wall all enumerate
+//! [`Policy::all`], so the new policy is picked up everywhere at once.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::{format_err, Result};
+
+/// Eviction-policy selector (the `--policy` CLI knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Lru,
+    Clock,
+    Sieve,
+}
+
+impl Policy {
+    pub fn all() -> [Policy; 3] {
+        [Self::Lru, Self::Clock, Self::Sieve]
+    }
+
+    /// Canonical CLI spelling (what `--policy` accepts and help prints).
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            Self::Lru => "lru",
+            Self::Clock => "clock",
+            Self::Sieve => "sieve",
+        }
+    }
+
+    /// Parse a CLI spelling; the error lists the valid set.
+    pub fn from_name(name: &str) -> Result<Policy> {
+        match name.to_ascii_lowercase().as_str() {
+            "lru" => Ok(Self::Lru),
+            "clock" => Ok(Self::Clock),
+            "sieve" => Ok(Self::Sieve),
+            other => Err(format_err!(
+                "unknown eviction policy {other:?} (expected one of: lru, clock, sieve)"
+            )),
+        }
+    }
+
+    /// A fresh replacer implementing this policy.
+    pub fn new_replacer(self) -> Box<dyn Replacer> {
+        match self {
+            Self::Lru => Box::new(LruReplacer::new()),
+            Self::Clock => Box::new(ClockReplacer::new()),
+            Self::Sieve => Box::new(SieveReplacer::new()),
+        }
+    }
+}
+
+/// The eviction-order contract the pool drives (see the module docs).
+pub trait Replacer: Send {
+    /// Which policy this replacer implements.
+    fn policy(&self) -> Policy;
+    /// Insert `key` if absent; mark it used either way.
+    fn touch(&mut self, key: u64);
+    /// Forget `key` (no-op when untracked). Not an eviction.
+    fn remove(&mut self, key: u64);
+    /// Choose, forget and return the next victim (`None` when empty).
+    fn evict(&mut self) -> Option<u64>;
+    /// Number of tracked keys.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Exact LRU via monotonic stamps: the victim is the minimum stamp.
+pub struct LruReplacer {
+    stamps: HashMap<u64, u64>,
+    tick: u64,
+}
+
+impl LruReplacer {
+    pub fn new() -> Self {
+        Self { stamps: HashMap::new(), tick: 0 }
+    }
+}
+
+impl Default for LruReplacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Replacer for LruReplacer {
+    fn policy(&self) -> Policy {
+        Policy::Lru
+    }
+
+    fn touch(&mut self, key: u64) {
+        self.tick += 1;
+        self.stamps.insert(key, self.tick);
+    }
+
+    fn remove(&mut self, key: u64) {
+        self.stamps.remove(&key);
+    }
+
+    fn evict(&mut self) -> Option<u64> {
+        // Stamps are unique, so the minimum is a deterministic victim
+        // regardless of HashMap iteration order.
+        let victim = self.stamps.iter().min_by_key(|(_, &stamp)| stamp).map(|(&k, _)| k)?;
+        self.stamps.remove(&victim);
+        Some(victim)
+    }
+
+    fn len(&self) -> usize {
+        self.stamps.len()
+    }
+}
+
+/// Second-chance clock. The ring front is the hand position; sparing a
+/// referenced key rotates it behind the hand. Removal is eager — a
+/// lazily-skipped stale slot would collide with a re-touched key's new
+/// slot and corrupt the sweep order.
+pub struct ClockReplacer {
+    ring: VecDeque<u64>,
+    /// key → referenced bit; always in lockstep with `ring`.
+    referenced: HashMap<u64, bool>,
+}
+
+impl ClockReplacer {
+    pub fn new() -> Self {
+        Self { ring: VecDeque::new(), referenced: HashMap::new() }
+    }
+}
+
+impl Default for ClockReplacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Replacer for ClockReplacer {
+    fn policy(&self) -> Policy {
+        Policy::Clock
+    }
+
+    fn touch(&mut self, key: u64) {
+        match self.referenced.get_mut(&key) {
+            Some(bit) => *bit = true,
+            None => {
+                // New keys join behind the hand (ring back): the sweep
+                // in progress visits them last.
+                self.referenced.insert(key, true);
+                self.ring.push_back(key);
+            }
+        }
+    }
+
+    fn remove(&mut self, key: u64) {
+        if self.referenced.remove(&key).is_some() {
+            if let Some(idx) = self.ring.iter().position(|&k| k == key) {
+                self.ring.remove(idx);
+            }
+        }
+    }
+
+    fn evict(&mut self) -> Option<u64> {
+        // Terminates within two sweeps: the first pass clears every
+        // referenced bit, and bits are only set by touch().
+        loop {
+            let key = self.ring.pop_front()?;
+            let bit = self.referenced.get_mut(&key).expect("ring and map agree");
+            if *bit {
+                // Second chance: clear and rotate behind the hand.
+                *bit = false;
+                self.ring.push_back(key);
+            } else {
+                self.referenced.remove(&key);
+                return Some(key);
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.referenced.len()
+    }
+}
+
+/// SIEVE. Queue front = oldest, back = newest; `hand` indexes the next
+/// sweep position from the oldest side. Hits set the visited bit and
+/// never move the entry.
+pub struct SieveReplacer {
+    /// Oldest at index 0, newest at the end.
+    queue: VecDeque<u64>,
+    visited: HashMap<u64, bool>,
+    /// Next sweep index into `queue`; wraps to 0 (the oldest survivor)
+    /// when it runs off the newest end.
+    hand: usize,
+}
+
+impl SieveReplacer {
+    pub fn new() -> Self {
+        Self { queue: VecDeque::new(), visited: HashMap::new(), hand: 0 }
+    }
+}
+
+impl Default for SieveReplacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Replacer for SieveReplacer {
+    fn policy(&self) -> Policy {
+        Policy::Sieve
+    }
+
+    fn touch(&mut self, key: u64) {
+        match self.visited.get_mut(&key) {
+            Some(bit) => *bit = true,
+            None => {
+                // New entries join unvisited at the newest end; the hand
+                // index (counted from the oldest end) is unaffected.
+                self.visited.insert(key, false);
+                self.queue.push_back(key);
+            }
+        }
+    }
+
+    fn remove(&mut self, key: u64) {
+        if self.visited.remove(&key).is_none() {
+            return;
+        }
+        if let Some(idx) = self.queue.iter().position(|&k| k == key) {
+            self.queue.remove(idx);
+            // Keep the hand on the same logical neighbour: entries at
+            // or past the removed index shift down by one.
+            if idx < self.hand {
+                self.hand -= 1;
+            }
+        }
+    }
+
+    fn evict(&mut self) -> Option<u64> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        // Terminates: each loop iteration either evicts or clears one
+        // visited bit, and bits are only set by touch().
+        loop {
+            if self.hand >= self.queue.len() {
+                self.hand = 0;
+            }
+            let key = self.queue[self.hand];
+            let bit = self.visited.get_mut(&key).expect("queue and map agree");
+            if *bit {
+                *bit = false;
+                self.hand += 1;
+            } else {
+                self.queue.remove(self.hand);
+                self.visited.remove(&key);
+                // The hand now indexes the evictee's next-newer
+                // neighbour (or wraps on the next call).
+                return Some(key);
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.visited.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(r: &mut dyn Replacer) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(k) = r.evict() {
+            out.push(k);
+        }
+        out
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in Policy::all() {
+            assert_eq!(Policy::from_name(p.cli_name()).unwrap(), p);
+            assert_eq!(p.new_replacer().policy(), p);
+        }
+        assert!(Policy::from_name("mru").is_err());
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut r = LruReplacer::new();
+        for k in [1, 2, 3] {
+            r.touch(k);
+        }
+        r.touch(1); // 2 is now the least recent
+        assert_eq!(r.evict(), Some(2));
+        assert_eq!(drain(&mut r), vec![3, 1]);
+        assert_eq!(r.evict(), None);
+    }
+
+    #[test]
+    fn clock_gives_second_chances() {
+        let mut r = ClockReplacer::new();
+        for k in [1, 2, 3] {
+            r.touch(k);
+        }
+        // All referenced: the first sweep clears 1 and 2, then 3... and
+        // wraps — every key gets one pass before the oldest dies.
+        assert_eq!(r.evict(), Some(1));
+        r.touch(2); // re-referenced: spared again
+        assert_eq!(r.evict(), Some(3));
+        assert_eq!(r.evict(), Some(2));
+        assert_eq!(r.evict(), None);
+    }
+
+    #[test]
+    fn sieve_hits_do_not_move_entries() {
+        let mut r = SieveReplacer::new();
+        for k in [1, 2, 3] {
+            r.touch(k);
+        }
+        r.touch(1); // visited; stays the oldest
+        assert_eq!(r.evict(), Some(2), "hand spares visited 1, evicts unvisited 2");
+        r.touch(4);
+        assert_eq!(r.evict(), Some(3), "hand continues from the old position");
+        // The hand now points at 4 (unvisited, newest); 1's bit was
+        // cleared by the first sweep, so it goes after the wrap.
+        assert_eq!(drain(&mut r), vec![4, 1]);
+    }
+
+    #[test]
+    fn remove_is_not_an_eviction_and_keeps_order_sane() {
+        for policy in Policy::all() {
+            let mut r = policy.new_replacer();
+            for k in [1, 2, 3, 4] {
+                r.touch(k);
+            }
+            r.remove(2);
+            r.remove(99); // untracked: no-op
+            assert_eq!(r.len(), 3);
+            let mut rest = drain(r.as_mut());
+            rest.sort_unstable();
+            assert_eq!(rest, vec![1, 3, 4], "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn empty_replacer_evicts_none() {
+        for policy in Policy::all() {
+            let mut r = policy.new_replacer();
+            assert!(r.is_empty());
+            assert_eq!(r.evict(), None, "{policy:?}");
+            r.touch(7);
+            assert_eq!(r.evict(), Some(7));
+            assert_eq!(r.evict(), None);
+        }
+    }
+}

@@ -1,0 +1,455 @@
+//! The plan-serving service: request grammar, resolution order, miss
+//! policy, and the daemon's counters.
+//!
+//! One [`PlanService`] answers the whole endpoint surface:
+//!
+//! * `GET /plan?kernel=..&machine=..&budget=..&prefetch=..` — the exact
+//!   serialized [`TunedPlan`] bytes (the same bytes `repro tune` writes
+//!   to `<plans>/<key>.plan`; the plan format's bit-identical
+//!   serialize→parse→serialize round trip is what makes "served bytes
+//!   == tuner bytes" a checkable contract, and `tests/serve_http.rs`
+//!   checks it);
+//! * `GET /counters?…` — the same plan rendered as human-readable
+//!   predicted counters (`key=value` lines);
+//! * `GET /stats` — the live `[serve]` summary line;
+//! * `GET /healthz` — liveness probe.
+//!
+//! Resolution order for a plan request is pool → disk → miss policy:
+//! the bounded [`BufferPool`] first, then a [`PlanCache`] load whose
+//! identity triple (`spec_hash`, `machine_fingerprint`, `budget_class`)
+//! is validated exactly the way [`Tuner::tune_on`] validates it — a
+//! renamed or stale plan file is a miss here too, never a wrong serve.
+//! What a miss means is the `--on-miss` knob: [`MissPolicy::NotFound`]
+//! answers 404 (pure read replica), [`MissPolicy::Tune`] runs the
+//! tuner's search on demand with **single-flight dedup** — concurrent
+//! requests for the same key park on a condvar while one flight
+//! searches, then re-probe the pool, so a thundering herd costs one
+//! search (pinned by `tests/serve_http.rs`).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::http::{Request, Response};
+use super::pool::{BufferPool, PoolStats};
+use super::replacer::Policy;
+use crate::config::machines::{MachineConfig, MachinePreset};
+use crate::coordinator::experiments::EngineCache;
+use crate::exec::ResultStore;
+use crate::kernels::library::kernel_by_name;
+use crate::tune::plan::{budget_class, fnv64, machine_fingerprint, spec_hash, TunedPlan};
+use crate::tune::{PlanCache, Tuner};
+use crate::{format_err, Result};
+
+/// What a full miss (pool and disk) resolves to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissPolicy {
+    /// Pure read replica: answer 404, never simulate.
+    NotFound,
+    /// Tune on demand through the [`Tuner`], single-flighted per key.
+    Tune,
+}
+
+impl MissPolicy {
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            Self::NotFound => "404",
+            Self::Tune => "tune",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "404" => Ok(Self::NotFound),
+            "tune" => Ok(Self::Tune),
+            other => {
+                Err(format_err!("unknown miss policy {other:?} (expected one of: 404, tune)"))
+            }
+        }
+    }
+}
+
+/// Where a served plan came from (per-request provenance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanSource {
+    Pool,
+    Disk,
+    Tuned,
+}
+
+/// A successfully resolved plan: the exact bytes plus provenance.
+pub struct Served {
+    pub bytes: Arc<Vec<u8>>,
+    pub source: PlanSource,
+}
+
+/// Service-layer failure, carrying the HTTP status it maps to.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Malformed or unresolvable parameters (400).
+    BadRequest(String),
+    /// Well-formed key with no plan under the active miss policy (404).
+    NotFound(String),
+    /// The on-demand tune itself failed (500).
+    Internal(String),
+}
+
+impl ServeError {
+    pub fn status(&self) -> u16 {
+        match self {
+            Self::BadRequest(_) => 400,
+            Self::NotFound(_) => 404,
+            Self::Internal(_) => 500,
+        }
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            Self::BadRequest(m) | Self::NotFound(m) | Self::Internal(m) => m,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    disk_loads: AtomicU64,
+    tunes: AtomicU64,
+    tune_failures: AtomicU64,
+    single_flight_waits: AtomicU64,
+    not_found: AtomicU64,
+    bad_requests: AtomicU64,
+}
+
+/// Snapshot of everything the `[serve]` summary line reports.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    pub pool: PoolStats,
+    pub policy: Policy,
+    pub on_miss: MissPolicy,
+    pub disk_loads: u64,
+    pub tunes: u64,
+    pub tune_failures: u64,
+    pub single_flight_waits: u64,
+    pub not_found: u64,
+    pub bad_requests: u64,
+}
+
+/// The daemon's brain: pool + stores + miss policy + counters. Shared
+/// across connection threads by `Arc`; every method takes `&self`.
+pub struct PlanService {
+    pool: BufferPool,
+    plans: PlanCache,
+    store: ResultStore,
+    on_miss: MissPolicy,
+    inflight: Mutex<HashSet<u64>>,
+    flight_done: Condvar,
+    counters: Counters,
+}
+
+/// Pool key for one plan identity. Length-prefixed FNV over the same
+/// four coordinates the on-disk cache is keyed by (machine by resolved
+/// preset name, budget by class) so equivalent spellings collapse to
+/// one entry.
+pub fn plan_key(kernel: &str, machine: &str, prefetch: bool, budget_class: u32) -> u64 {
+    let mut buf = Vec::with_capacity(kernel.len() + machine.len() + 24);
+    buf.extend_from_slice(&(kernel.len() as u64).to_le_bytes());
+    buf.extend_from_slice(kernel.as_bytes());
+    buf.extend_from_slice(&(machine.len() as u64).to_le_bytes());
+    buf.extend_from_slice(machine.as_bytes());
+    buf.push(prefetch as u8);
+    buf.extend_from_slice(&budget_class.to_le_bytes());
+    fnv64(&buf)
+}
+
+impl PlanService {
+    pub fn new(
+        pool_bytes: u64,
+        policy: Policy,
+        on_miss: MissPolicy,
+        plans: PlanCache,
+        store: ResultStore,
+    ) -> Self {
+        Self {
+            pool: BufferPool::new(pool_bytes, policy),
+            plans,
+            store,
+            on_miss,
+            inflight: Mutex::new(HashSet::new()),
+            flight_done: Condvar::new(),
+            counters: Counters::default(),
+        }
+    }
+
+    pub fn on_miss(&self) -> MissPolicy {
+        self.on_miss
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            pool: self.pool.stats(),
+            policy: self.pool.policy(),
+            on_miss: self.on_miss,
+            disk_loads: self.counters.disk_loads.load(Ordering::SeqCst),
+            tunes: self.counters.tunes.load(Ordering::SeqCst),
+            tune_failures: self.counters.tune_failures.load(Ordering::SeqCst),
+            single_flight_waits: self.counters.single_flight_waits.load(Ordering::SeqCst),
+            not_found: self.counters.not_found.load(Ordering::SeqCst),
+            bad_requests: self.counters.bad_requests.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Resolve a plan identity to its serialized bytes: pool → disk →
+    /// miss policy. This is the library entry the HTTP handler, the
+    /// bench load generator, and the tests all share.
+    pub fn plan_bytes(
+        &self,
+        kernel: &str,
+        machine: &str,
+        budget: u64,
+        prefetch: bool,
+    ) -> std::result::Result<Served, ServeError> {
+        let preset = MachinePreset::from_name_or_listing(machine)
+            .map_err(|e| ServeError::BadRequest(e.to_string()))?;
+        let cfg = preset.config();
+        let pk = kernel_by_name(kernel, budget).ok_or_else(|| {
+            ServeError::NotFound(format!("unknown kernel {kernel:?} (see `repro universe`)"))
+        })?;
+        let class = budget_class(budget);
+        let key = plan_key(kernel, cfg.name, prefetch, class);
+        let want = (spec_hash(&pk.spec), machine_fingerprint(&cfg, prefetch), class);
+
+        loop {
+            if let Some(bytes) = self.pool.get(key) {
+                return Ok(Served { bytes, source: PlanSource::Pool });
+            }
+            if let Some(plan) = self.load_valid(kernel, &cfg, prefetch, want) {
+                let bytes = Arc::new(plan.serialize().into_bytes());
+                self.pool.insert(key, bytes.clone());
+                return Ok(Served { bytes, source: PlanSource::Disk });
+            }
+            match self.on_miss {
+                MissPolicy::NotFound => {
+                    self.counters.not_found.fetch_add(1, Ordering::SeqCst);
+                    return Err(ServeError::NotFound(format!(
+                        "no tuned plan for kernel={kernel} machine={} budget_class={class} \
+                         prefetch={prefetch} (daemon runs with --on-miss 404; tune it first \
+                         or restart with --on-miss tune)",
+                        preset.cli_name(),
+                    )));
+                }
+                MissPolicy::Tune => {
+                    let mut inflight = self.inflight.lock().unwrap();
+                    if inflight.contains(&key) {
+                        // Another request is already searching this key:
+                        // park, then re-probe pool/disk from the top.
+                        self.counters.single_flight_waits.fetch_add(1, Ordering::SeqCst);
+                        while inflight.contains(&key) {
+                            inflight = self.flight_done.wait(inflight).unwrap();
+                        }
+                        drop(inflight);
+                        continue;
+                    }
+                    inflight.insert(key);
+                    drop(inflight);
+                    let tuned = self.tune_now(&cfg, budget, prefetch, kernel);
+                    let mut inflight = self.inflight.lock().unwrap();
+                    inflight.remove(&key);
+                    self.flight_done.notify_all();
+                    drop(inflight);
+                    match tuned {
+                        Ok(plan) => {
+                            let bytes = Arc::new(plan.serialize().into_bytes());
+                            self.pool.insert(key, bytes.clone());
+                            return Ok(Served { bytes, source: PlanSource::Tuned });
+                        }
+                        Err(e) => {
+                            self.counters.tune_failures.fetch_add(1, Ordering::SeqCst);
+                            return Err(ServeError::Internal(format!(
+                                "tuning {kernel} on demand failed: {e}"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Disk lookup with the tuner's identity-triple validation; a
+    /// stale, unreadable, or corrupt plan is a miss, never a serve.
+    fn load_valid(
+        &self,
+        kernel: &str,
+        cfg: &MachineConfig,
+        prefetch: bool,
+        want: (u64, u64, u32),
+    ) -> Option<TunedPlan> {
+        match self.plans.load(kernel, cfg.name, prefetch, want.2) {
+            Ok(Some(p))
+                if p.spec_hash == want.0
+                    && p.machine_fingerprint == want.1
+                    && p.budget_class == want.2 =>
+            {
+                self.counters.disk_loads.fetch_add(1, Ordering::SeqCst);
+                Some(p)
+            }
+            Ok(Some(_)) | Ok(None) => None,
+            Err(e) => {
+                eprintln!("[serve] plan load for {kernel}: {e} — treating as miss");
+                None
+            }
+        }
+    }
+
+    /// One on-demand tuning flight. `force=false`: the search re-checks
+    /// the disk cache first, so a flight that lost a race — to a
+    /// concurrent `repro tune` process, or to a just-finished flight it
+    /// narrowly missed waiting on — serves that winner's plan instead
+    /// of re-searching. The `tunes` counter therefore counts *searches
+    /// actually run*, which is what "a thundering herd runs one search"
+    /// promises.
+    fn tune_now(
+        &self,
+        cfg: &MachineConfig,
+        budget: u64,
+        prefetch: bool,
+        kernel: &str,
+    ) -> Result<TunedPlan> {
+        let tuner = Tuner { prefetch, ..Tuner::new(*cfg, budget) };
+        let mut engines = EngineCache::new();
+        let out = tuner.tune_on(&self.store, &mut engines, &self.plans, kernel, false)?;
+        if !out.cache_hit {
+            self.counters.tunes.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(out.plan)
+    }
+
+    /// HTTP dispatch: routes, parameter grammar, status mapping.
+    pub fn handle(&self, req: &Request) -> Response {
+        match req.path.as_str() {
+            "/healthz" => Response::text(200, "ok\n"),
+            "/stats" => {
+                let line = crate::report::figures::render_serve_summary(&self.stats());
+                Response::text(200, format!("{line}\n"))
+            }
+            "/plan" => match self.parse_and_resolve(req) {
+                Ok(served) => Response::bytes(200, served.bytes.as_ref().clone()),
+                Err(e) => self.error_response(e),
+            },
+            "/counters" => match self.parse_and_resolve(req) {
+                Ok(served) => match render_counters(&served) {
+                    Ok(text) => Response::text(200, text),
+                    Err(e) => Response::text(500, format!("{e}\n")),
+                },
+                Err(e) => self.error_response(e),
+            },
+            other => Response::text(
+                404,
+                format!("no route {other:?} (try /plan, /counters, /stats, /healthz)\n"),
+            ),
+        }
+    }
+
+    fn error_response(&self, e: ServeError) -> Response {
+        if e.status() == 400 {
+            self.counters.bad_requests.fetch_add(1, Ordering::SeqCst);
+        }
+        Response::text(e.status(), format!("{}\n", e.message()))
+    }
+
+    fn parse_and_resolve(&self, req: &Request) -> std::result::Result<Served, ServeError> {
+        let kernel = require_param(req, "kernel")?;
+        let machine = require_param(req, "machine")?;
+        let budget: u64 = require_param(req, "budget")?.parse().map_err(|_| {
+            ServeError::BadRequest(format!(
+                "budget must be a byte count, got {:?}",
+                req.param("budget").unwrap_or_default()
+            ))
+        })?;
+        let prefetch = match req.param("prefetch") {
+            None | Some("on") | Some("true") | Some("1") => true,
+            Some("off") | Some("false") | Some("0") => false,
+            Some(other) => {
+                return Err(ServeError::BadRequest(format!(
+                    "prefetch must be on|off|true|false|1|0, got {other:?}"
+                )))
+            }
+        };
+        self.plan_bytes(kernel, machine, budget, prefetch)
+    }
+}
+
+fn require_param<'r>(req: &'r Request, name: &str) -> std::result::Result<&'r str, ServeError> {
+    match req.param(name) {
+        Some(v) if !v.is_empty() => Ok(v),
+        _ => Err(ServeError::BadRequest(format!(
+            "missing required query parameter {name:?} \
+             (grammar: /plan?kernel=..&machine=..&budget=..&prefetch=on|off)"
+        ))),
+    }
+}
+
+/// Render a served plan as human-readable predicted counters.
+fn render_counters(served: &Served) -> Result<String> {
+    let text = std::str::from_utf8(&served.bytes)
+        .map_err(|e| format_err!("served plan is not UTF-8: {e}"))?;
+    let p = TunedPlan::parse(text)?;
+    let mut out = String::new();
+    let mut push = |k: &str, v: String| {
+        out.push_str(k);
+        out.push('=');
+        out.push_str(&v);
+        out.push('\n');
+    };
+    push("kernel", p.kernel.clone());
+    push("machine", p.machine.clone());
+    push("budget_class", p.budget_class.to_string());
+    push("budget_bytes", p.budget_bytes.to_string());
+    push("prefetch", p.prefetch.to_string());
+    push("predicted_gib_s", format!("{:.6}", p.predicted_gib));
+    push("winner_probe_gib_s", format!("{:.6}", p.winner_probe_gib));
+    push("baseline_probe_gib_s", format!("{:.6}", p.baseline_probe_gib));
+    push("predicted_accesses_per_sec", format!("{:.3}", p.predicted_accesses_per_sec));
+    push("l1_hit", format!("{:.6}", p.l1_hit));
+    push("l2_hit", format!("{:.6}", p.l2_hit));
+    push("l3_hit", format!("{:.6}", p.l3_hit));
+    if let Some(s) = p.speedup_over_single() {
+        push("speedup_over_single", format!("{s:.6}"));
+    }
+    push("source", format!("{:?}", served.source).to_ascii_lowercase());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_key_separates_every_coordinate() {
+        let base = plan_key("mxv", "Coffee Lake", true, 21);
+        assert_ne!(base, plan_key("jacobi-1d", "Coffee Lake", true, 21));
+        assert_ne!(base, plan_key("mxv", "Zen 2", true, 21));
+        assert_ne!(base, plan_key("mxv", "Coffee Lake", false, 21));
+        assert_ne!(base, plan_key("mxv", "Coffee Lake", true, 22));
+        assert_eq!(base, plan_key("mxv", "Coffee Lake", true, 21), "deterministic");
+    }
+
+    #[test]
+    fn plan_key_length_prefix_blocks_concatenation_aliases() {
+        assert_ne!(plan_key("ab", "c", true, 0), plan_key("a", "bc", true, 0));
+    }
+
+    #[test]
+    fn miss_policy_names_round_trip() {
+        for p in [MissPolicy::NotFound, MissPolicy::Tune] {
+            assert_eq!(MissPolicy::from_name(p.cli_name()).unwrap(), p);
+        }
+        assert!(MissPolicy::from_name("panic").is_err());
+    }
+
+    #[test]
+    fn serve_error_statuses() {
+        assert_eq!(ServeError::BadRequest("x".into()).status(), 400);
+        assert_eq!(ServeError::NotFound("x".into()).status(), 404);
+        assert_eq!(ServeError::Internal("x".into()).status(), 500);
+    }
+}

@@ -122,6 +122,88 @@ fn store_cli_grammar_errors_exit_two() {
     assert_eq!(code(&repro(&["store"])), 2, "missing subcommand");
 }
 
+/// Every flag that takes a value, with the value missing, must exit 2
+/// through `usage()` — not panic (exit 101 + backtrace). `repro all
+/// --results` used to do exactly that.
+#[test]
+fn missing_flag_values_exit_two_without_panicking() {
+    const VALUE_FLAGS: &[&str] = &[
+        "--machine",
+        "--kernel",
+        "--max-total",
+        "--csv",
+        "--artifacts",
+        "--config",
+        "--plans",
+        "--results",
+        "--shard",
+    ];
+    for flag in VALUE_FLAGS {
+        let out = repro(&["all", flag]);
+        assert_eq!(code(&out), 2, "{flag} with no value must exit 2\n{}", stderr(&out));
+        let err = stderr(&out);
+        assert!(err.contains("needs a value"), "{flag}: got: {err}");
+        assert!(err.contains("usage:"), "{flag}: usage text must be printed\ngot: {err}");
+        assert!(!err.contains("panicked"), "{flag}: no panic may reach the boundary\ngot: {err}");
+    }
+}
+
+#[test]
+fn non_numeric_max_total_exits_two_without_panicking() {
+    let out = repro(&["all", "--max-total", "foo"]);
+    assert_eq!(code(&out), 2, "got: {}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("--max-total needs a number"), "got: {err}");
+    assert!(err.contains("usage:"), "got: {err}");
+    assert!(!err.contains("panicked"), "got: {err}");
+}
+
+#[test]
+fn unknown_option_exits_two_with_usage() {
+    let out = repro(&["all", "--frobnicate"]);
+    assert_eq!(code(&out), 2);
+    assert!(stderr(&out).contains("usage:"), "got: {}", stderr(&out));
+}
+
+/// Anti-rot: every subcommand `parse_store_cli` accepts must appear in
+/// the usage text, along with every top-level command `main` dispatches
+/// — PRs 6–7 shipped `gc` and `merge` without updating `usage()`, and
+/// nothing caught it.
+#[test]
+fn usage_text_lists_every_store_subcommand_and_command() {
+    let out = repro(&[]);
+    assert_eq!(code(&out), 2, "bare `repro` is a malformed invocation");
+    let usage = stderr(&out);
+    for sub in multistride::exec::lifecycle::STORE_SUBCOMMANDS {
+        assert!(usage.contains(sub), "store subcommand {sub:?} missing from usage:\n{usage}");
+    }
+    for cmd in [
+        "table1", "table2", "figure2", "figure3", "figure4", "figure5", "figure6", "figure7",
+        "sweep", "universe", "tune", "native", "validate", "run", "all", "grid", "store", "serve",
+    ] {
+        assert!(usage.contains(cmd), "command {cmd:?} missing from usage:\n{usage}");
+    }
+}
+
+#[test]
+fn serve_cli_grammar_errors_exit_two() {
+    for bad in [
+        &["serve", "--port"][..],
+        &["serve", "--port", "notaport"],
+        &["serve", "--pool-bytes", "0"],
+        &["serve", "--policy", "mru"],
+        &["serve", "--on-miss", "panic"],
+        &["serve", "--max-requests", "many"],
+    ] {
+        let out = repro(bad);
+        assert_eq!(code(&out), 2, "{bad:?} must exit 2\n{}", stderr(&out));
+        assert!(!stderr(&out).contains("panicked"), "{bad:?}: got: {}", stderr(&out));
+    }
+    // --cold + --results stays mutually exclusive through the serve path.
+    let out = repro(&["serve", "--cold", "--results", "r", "--max-requests", "1"]);
+    assert_eq!(code(&out), 2, "got: {}", stderr(&out));
+}
+
 #[test]
 fn grid_requires_a_shard_spec_and_a_persistent_store() {
     let dir = tmp("grid");

@@ -1,0 +1,192 @@
+//! End-to-end pins for the plan-serving daemon.
+//!
+//! The load-bearing contract is **byte identity**: the body of
+//! `GET /plan` must be the exact bytes `repro tune` wrote to the plan
+//! file for the same `(kernel, machine, budget, prefetch)` identity —
+//! through the pool, off the disk, or tuned on demand. The plan
+//! format's bit-identical serialize→parse→serialize round trip makes
+//! this checkable with `assert_eq!` on raw bytes, and these tests check
+//! it at both the library seam (`PlanService::plan_bytes`) and over a
+//! real socket.
+//!
+//! Tuning here runs at a deliberately tiny 2 MiB budget so the searches
+//! finish in test time; the identity triple math is budget-independent.
+
+use std::sync::Arc;
+
+use multistride::config::MachinePreset;
+use multistride::coordinator::experiments::EngineCache;
+use multistride::exec::ResultStore;
+use multistride::serve::{
+    Client, HttpServer, MissPolicy, PlanService, PlanSource, Policy, Request, ServerControl,
+};
+use multistride::tune::plan::budget_class;
+use multistride::tune::{PlanCache, Tuner};
+
+const BUDGET: u64 = 2 * 1024 * 1024;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("multistride_serve_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Tune `kernel` into `plans` the way `repro tune` does, and return the
+/// plan file's bytes.
+fn tune_to_disk(plans: &PlanCache, kernel: &str) -> Vec<u8> {
+    let cfg = MachinePreset::CoffeeLake.config();
+    let tuner = Tuner::new(cfg, BUDGET);
+    let store = ResultStore::ephemeral();
+    let mut engines = EngineCache::new();
+    let out = tuner.tune_on(&store, &mut engines, plans, kernel, false).expect("tune succeeds");
+    assert!(!out.cache_hit, "fresh plans dir must search");
+    let path = plans.path_for(kernel, cfg.name, true, budget_class(BUDGET));
+    std::fs::read(&path).expect("tuner persisted the plan file")
+}
+
+#[test]
+fn served_plan_bytes_are_identical_to_the_tuners() {
+    let dir = tmp("identity");
+    let plans = PlanCache::new(&dir);
+    let file_bytes = tune_to_disk(&plans, "mxv");
+
+    let service = PlanService::new(
+        1 << 20,
+        Policy::Lru,
+        MissPolicy::NotFound,
+        plans,
+        ResultStore::ephemeral(),
+    );
+    let cold = service.plan_bytes("mxv", "coffee-lake", BUDGET, true).expect("plan resolves");
+    assert_eq!(cold.source, PlanSource::Disk, "first serve reads through to disk");
+    assert_eq!(*cold.bytes, file_bytes, "served bytes == the tuner's plan file");
+
+    let warm = service.plan_bytes("mxv", "coffee-lake", BUDGET, true).expect("plan resolves");
+    assert_eq!(warm.source, PlanSource::Pool, "second serve is a pool hit");
+    assert_eq!(*warm.bytes, file_bytes);
+
+    let s = service.stats();
+    assert_eq!((s.pool.hits, s.pool.misses, s.disk_loads), (1, 1, 1));
+    assert_eq!(s.tunes, 0, "an on-miss-404 service never tunes");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn http_surface_serves_plans_counters_stats_and_clean_errors() {
+    let dir = tmp("http");
+    let plans = PlanCache::new(&dir);
+    let file_bytes = tune_to_disk(&plans, "mxv");
+
+    let service = Arc::new(PlanService::new(
+        1 << 20,
+        Policy::Sieve,
+        MissPolicy::NotFound,
+        plans,
+        ResultStore::ephemeral(),
+    ));
+    let server = HttpServer::bind(0).expect("bind port 0");
+    let port = server.port();
+    let ctl = ServerControl::new(None);
+    let handler = {
+        let service = service.clone();
+        Arc::new(move |req: &Request| service.handle(req))
+    };
+    let srv_ctl = ctl.clone();
+    let join = std::thread::spawn(move || server.serve(handler, srv_ctl));
+
+    // One keep-alive connection carries the whole scripted session.
+    let mut c = Client::connect(port).expect("connect");
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!((status, body.as_slice()), (200, b"ok\n".as_slice()));
+
+    let plan_url = format!("/plan?kernel=mxv&machine=coffee-lake&budget={BUDGET}");
+    let (status, cold) = c.get(&plan_url).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(cold, file_bytes, "cold HTTP serve == the tuner's plan file");
+    let (status, warm) = c.get(&plan_url).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(warm, cold, "warm (pool) serve is byte-identical");
+
+    let (status, counters) =
+        c.get(&format!("/counters?kernel=mxv&machine=coffee-lake&budget={BUDGET}")).unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(counters).unwrap();
+    for needle in ["kernel=mxv", "predicted_gib_s=", "l1_hit=", "budget_class="] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+
+    let (status, stats) = c.get("/stats").unwrap();
+    assert_eq!(status, 200);
+    let line = String::from_utf8(stats).unwrap();
+    assert!(line.starts_with("[serve] "), "got: {line}");
+    assert!(line.contains("pool hits: 1"), "got: {line}");
+
+    // Error grammar: every malformed or unresolvable request gets a
+    // clean status, and the connection survives for the next request.
+    for (url, want) in [
+        ("/plan?kernel=mxv", 400),                                     // missing machine+budget
+        (&*format!("/plan?kernel=mxv&machine=quantum&budget={BUDGET}"), 400), // unknown machine
+        (&*format!("/plan?kernel=mxv&machine=coffee-lake&budget={BUDGET}&prefetch=banana"), 400),
+        ("/plan?kernel=mxv&machine=coffee-lake&budget=lots", 400),     // non-numeric budget
+        (&*format!("/plan?kernel=nope&machine=coffee-lake&budget={BUDGET}"), 404), // unknown kernel
+        (&*format!("/plan?kernel=bicg&machine=coffee-lake&budget={BUDGET}"), 404), // untuned
+        (&*format!("/plan?kernel=mxv&machine=coffee-lake&budget={BUDGET}&prefetch=off"), 404),
+        ("/nope", 404),                                                // unknown route
+    ] {
+        let (status, _) = c.get(url).unwrap();
+        assert_eq!(status, want, "for {url}");
+    }
+
+    // Drop the client first: the server's drain loop waits for active
+    // connections, and an idle keep-alive one would pin it until the
+    // read timeout.
+    drop(c);
+    ctl.request_stop();
+    join.join().unwrap().unwrap();
+    let s = service.stats();
+    assert!(s.not_found >= 2, "miss-policy 404s are counted");
+    assert!(s.bad_requests >= 3, "malformed requests are counted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn thundering_herd_tunes_once_and_serves_identical_bytes() {
+    let dir = tmp("herd");
+    let service = Arc::new(PlanService::new(
+        1 << 20,
+        Policy::Clock,
+        MissPolicy::Tune,
+        PlanCache::new(&dir),
+        ResultStore::ephemeral(),
+    ));
+    let threads: Vec<_> = (0..6)
+        .map(|_| {
+            let service = service.clone();
+            std::thread::spawn(move || {
+                service.plan_bytes("mxv", "coffee-lake", BUDGET, true).expect("herd request")
+            })
+        })
+        .collect();
+    let bodies: Vec<_> = threads.into_iter().map(|t| t.join().expect("no panic")).collect();
+    for served in &bodies[1..] {
+        assert_eq!(*served.bytes, *bodies[0].bytes, "every herd member sees the same plan");
+    }
+    let s = service.stats();
+    assert_eq!(s.tunes, 1, "single-flight: the herd runs exactly one search");
+    assert!(
+        bodies.iter().filter(|b| b.source == PlanSource::Tuned).count() <= 2,
+        "at most the winning flight (plus a rare racing revalidation) reports Tuned"
+    );
+    // The on-demand plan also landed on disk, exactly as `repro tune`
+    // would have written it.
+    let plans = PlanCache::new(&dir);
+    let path = plans.path_for(
+        "mxv",
+        MachinePreset::CoffeeLake.config().name,
+        true,
+        budget_class(BUDGET),
+    );
+    let file_bytes = std::fs::read(&path).expect("on-demand tune persisted the plan");
+    assert_eq!(*bodies[0].bytes, file_bytes, "served bytes == persisted plan file");
+    std::fs::remove_dir_all(&dir).ok();
+}

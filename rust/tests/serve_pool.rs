@@ -1,0 +1,350 @@
+//! Differential wall for the serving layer's eviction policies and the
+//! buffer pool's byte bound.
+//!
+//! Each production `Replacer` is driven op-for-op against a naive,
+//! structurally different reference model (plain `Vec`s, no hash maps,
+//! no lazy deletion) over random touch/evict/remove sequences: the
+//! victim sequences and lengths must agree exactly. On top of that, a
+//! capacity-N mini-cache harness replays skewed access traces through
+//! both implementations and compares exact hit counts and eviction
+//! order — the accounting the bench's hit-ratio numbers rest on.
+//!
+//! The pool itself is hammered concurrently: its invariant is that
+//! `current_bytes` NEVER exceeds the configured capacity, observable
+//! at any instant from any thread.
+
+use std::sync::Arc;
+
+use multistride::serve::pool::BufferPool;
+use multistride::serve::replacer::{Policy, Replacer};
+use multistride::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Naive reference models. Deliberately different structure from the
+// production implementations: flat Vecs, eager removal, no maps.
+// ---------------------------------------------------------------------------
+
+trait RefModel {
+    fn touch(&mut self, key: u64);
+    fn remove(&mut self, key: u64);
+    fn evict(&mut self) -> Option<u64>;
+    fn len(&self) -> usize;
+}
+
+/// LRU: recency order held literally — front is oldest.
+#[derive(Default)]
+struct RefLru {
+    order: Vec<u64>,
+}
+
+impl RefModel for RefLru {
+    fn touch(&mut self, key: u64) {
+        self.order.retain(|&k| k != key);
+        self.order.push(key);
+    }
+    fn remove(&mut self, key: u64) {
+        self.order.retain(|&k| k != key);
+    }
+    fn evict(&mut self) -> Option<u64> {
+        if self.order.is_empty() {
+            None
+        } else {
+            Some(self.order.remove(0))
+        }
+    }
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+}
+
+/// Clock: a flat ring with an explicit hand index. Entries never move;
+/// a new key is inserted just before the hand so the sweep in progress
+/// visits it last (the production ring expresses the same thing by
+/// rotating spared keys behind a hand pinned at the front).
+#[derive(Default)]
+struct RefClock {
+    slots: Vec<(u64, bool)>,
+    hand: usize,
+}
+
+impl RefModel for RefClock {
+    fn touch(&mut self, key: u64) {
+        if let Some(slot) = self.slots.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = true;
+            return;
+        }
+        self.slots.insert(self.hand, (key, true));
+        self.hand += 1;
+    }
+    fn remove(&mut self, key: u64) {
+        if let Some(idx) = self.slots.iter().position(|(k, _)| *k == key) {
+            self.slots.remove(idx);
+            if idx < self.hand {
+                self.hand -= 1;
+            }
+        }
+    }
+    fn evict(&mut self) -> Option<u64> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        loop {
+            if self.hand >= self.slots.len() {
+                self.hand = 0;
+            }
+            if self.slots[self.hand].1 {
+                self.slots[self.hand].1 = false;
+                self.hand += 1;
+            } else {
+                let (key, _) = self.slots.remove(self.hand);
+                return Some(key);
+            }
+        }
+    }
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// SIEVE: FIFO of (key, visited) with a hand sweeping oldest → newest.
+/// Unlike Clock, a spared entry keeps its position (only the bit
+/// clears) and new entries always join at the newest end.
+#[derive(Default)]
+struct RefSieve {
+    queue: Vec<(u64, bool)>,
+    hand: usize,
+}
+
+impl RefModel for RefSieve {
+    fn touch(&mut self, key: u64) {
+        if let Some(slot) = self.queue.iter_mut().find(|(k, _)| *k == key) {
+            slot.1 = true;
+            return;
+        }
+        self.queue.push((key, false));
+    }
+    fn remove(&mut self, key: u64) {
+        if let Some(idx) = self.queue.iter().position(|(k, _)| *k == key) {
+            self.queue.remove(idx);
+            if idx < self.hand {
+                self.hand -= 1;
+            }
+        }
+    }
+    fn evict(&mut self) -> Option<u64> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        loop {
+            if self.hand >= self.queue.len() {
+                self.hand = 0;
+            }
+            if self.queue[self.hand].1 {
+                self.queue[self.hand].1 = false;
+                self.hand += 1;
+            } else {
+                let (key, _) = self.queue.remove(self.hand);
+                return Some(key);
+            }
+        }
+    }
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+fn reference_for(policy: Policy) -> Box<dyn RefModel> {
+    match policy {
+        Policy::Lru => Box::new(RefLru::default()),
+        Policy::Clock => Box::new(RefClock::default()),
+        Policy::Sieve => Box::new(RefSieve::default()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Differential drivers.
+// ---------------------------------------------------------------------------
+
+/// Random op streams: production and reference must agree on every
+/// victim and every length, at every step.
+#[test]
+fn replacers_match_reference_models_on_random_op_streams() {
+    for policy in Policy::all() {
+        for seed in [0xD1F5u64, 0xBEEF, 0x5EED, 0xACE5, 0x90210] {
+            let mut rng = Rng::new(seed ^ policy.cli_name().len() as u64);
+            let mut prod = policy.new_replacer();
+            let mut refm = reference_for(policy);
+            for step in 0..4000 {
+                let ctx = format!("{policy:?} seed {seed:#x} step {step}");
+                match rng.below(10) {
+                    // Touches dominate, over a small universe so keys
+                    // collide and re-touch often.
+                    0..=5 => {
+                        let key = rng.below(24);
+                        prod.touch(key);
+                        refm.touch(key);
+                    }
+                    6..=7 => {
+                        let got = prod.evict();
+                        let want = refm.evict();
+                        assert_eq!(got, want, "victim diverged: {ctx}");
+                    }
+                    8 => {
+                        let key = rng.below(24);
+                        prod.remove(key);
+                        refm.remove(key);
+                    }
+                    _ => {
+                        // Eviction burst: drain a few in a row, the
+                        // regime where hand state matters most.
+                        for _ in 0..rng.below(4) + 1 {
+                            assert_eq!(prod.evict(), refm.evict(), "burst diverged: {ctx}");
+                        }
+                    }
+                }
+                assert_eq!(prod.len(), refm.len(), "length diverged: {ctx}");
+            }
+            // Full drain must agree to the last victim.
+            loop {
+                let (got, want) = (prod.evict(), refm.evict());
+                assert_eq!(got, want, "{policy:?} seed {seed:#x} drain diverged");
+                if got.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Capacity-N cache harness: exact hit counts and eviction sequences on
+/// a skewed (hot-set + scan) trace, production vs reference.
+#[test]
+fn cache_hit_accounting_matches_reference_models() {
+    const CAPACITY: usize = 8;
+    for policy in Policy::all() {
+        for seed in [0xCAFEu64, 0xF00D, 0x1DEA] {
+            let mut rng = Rng::new(seed);
+            // 80% of accesses to an 8-key hot set, 20% scanning a
+            // 64-key cold tail: distinguishes the three policies while
+            // each still must match its own reference exactly.
+            let trace: Vec<u64> = (0..3000)
+                .map(|_| if rng.below(10) < 8 { rng.below(8) } else { 100 + rng.below(64) })
+                .collect();
+
+            let run = |replacer: &mut dyn FnMut(u64) -> (bool, Option<u64>)| {
+                let mut hits = 0u64;
+                let mut victims = Vec::new();
+                for &key in &trace {
+                    let (hit, victim) = replacer(key);
+                    hits += hit as u64;
+                    victims.extend(victim);
+                }
+                (hits, victims)
+            };
+
+            let mut prod = policy.new_replacer();
+            let mut prod_resident = std::collections::HashSet::new();
+            let (prod_hits, prod_victims) = run(&mut |key| {
+                if prod_resident.contains(&key) {
+                    prod.touch(key);
+                    return (true, None);
+                }
+                let victim = if prod_resident.len() == CAPACITY {
+                    let v = prod.evict().expect("full cache evicts");
+                    prod_resident.remove(&v);
+                    Some(v)
+                } else {
+                    None
+                };
+                prod.touch(key);
+                prod_resident.insert(key);
+                (false, victim)
+            });
+
+            let mut refm = reference_for(policy);
+            let mut ref_resident = std::collections::HashSet::new();
+            let (ref_hits, ref_victims) = run(&mut |key| {
+                if ref_resident.contains(&key) {
+                    refm.touch(key);
+                    return (true, None);
+                }
+                let victim = if ref_resident.len() == CAPACITY {
+                    let v = refm.evict().expect("full cache evicts");
+                    ref_resident.remove(&v);
+                    Some(v)
+                } else {
+                    None
+                };
+                refm.touch(key);
+                ref_resident.insert(key);
+                (false, victim)
+            });
+
+            assert_eq!(prod_hits, ref_hits, "{policy:?} seed {seed:#x}: hit counts diverged");
+            assert_eq!(
+                prod_victims, ref_victims,
+                "{policy:?} seed {seed:#x}: eviction sequences diverged"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool invariants under concurrency.
+// ---------------------------------------------------------------------------
+
+/// Eight clients hammering one pool: the byte bound must hold at every
+/// observation, from every thread, under every policy.
+#[test]
+fn pool_never_exceeds_its_byte_bound_under_concurrent_clients() {
+    const CAPACITY: u64 = 4096;
+    for policy in Policy::all() {
+        let pool = Arc::new(BufferPool::new(CAPACITY, policy));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(0xB0B + t as u64);
+                    for _ in 0..500 {
+                        let key = rng.below(64);
+                        if pool.get(key).is_none() {
+                            let size = (rng.below(1024) + 1) as usize;
+                            pool.insert(key, Arc::new(vec![t as u8; size]));
+                        }
+                        let s = pool.stats();
+                        assert!(
+                            s.current_bytes <= CAPACITY,
+                            "{policy:?}: pool at {} bytes exceeds bound {CAPACITY}",
+                            s.current_bytes
+                        );
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().expect("client thread panicked");
+        }
+        let s = pool.stats();
+        assert!(s.current_bytes <= CAPACITY);
+        assert_eq!(s.requests, 8 * 500, "{policy:?}: every get is counted");
+        assert!(s.insertions > 0 && s.hits > 0, "{policy:?}: the trace exercised both paths");
+    }
+}
+
+/// Same bound when single values are as large as the whole budget, and
+/// oversize values are refused without disturbing residents.
+#[test]
+fn pool_handles_budget_sized_and_oversize_values() {
+    for policy in Policy::all() {
+        let pool = BufferPool::new(1000, policy);
+        assert!(pool.insert(1, Arc::new(vec![1u8; 1000])), "exactly the budget fits");
+        assert_eq!(pool.stats().current_bytes, 1000);
+        assert!(!pool.insert(2, Arc::new(vec![2u8; 1001])), "{policy:?}: over budget refused");
+        assert!(pool.get(1).is_some(), "{policy:?}: resident survives the refusal");
+        assert!(pool.insert(3, Arc::new(vec![3u8; 600])), "evicts 1 to fit");
+        let s = pool.stats();
+        assert!(s.current_bytes <= 1000);
+        assert_eq!(s.rejected_oversize, 1);
+        assert_eq!(s.evictions, 1);
+    }
+}
