@@ -47,7 +47,13 @@ where
     let workers = workers.max(1).min(n);
     if workers == 1 {
         let mut state = init();
-        return jobs.iter().map(|j| f(&mut state, j)).collect();
+        return jobs
+            .iter()
+            .map(|j| {
+                let _span = crate::obs::span("pool_task");
+                f(&mut state, j)
+            })
+            .collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -69,7 +75,11 @@ where
                         if i >= n {
                             break;
                         }
-                        local.push((i, f_ref(&mut state, &jobs_ref[i])));
+                        let r = {
+                            let _span = crate::obs::span("pool_task");
+                            f_ref(&mut state, &jobs_ref[i])
+                        };
+                        local.push((i, r));
                     }
                     local
                 })

@@ -222,6 +222,7 @@ pub struct GridReport {
 /// Simulate the shard-owned subset of `points` through `store` and
 /// write this shard's ownership manifest next to the segments.
 pub fn run_shard(store: &ResultStore, shard: ShardSpec, points: &[SimPoint]) -> Result<GridReport> {
+    let _span = crate::obs::span("grid_shard");
     let dir = store
         .dir()
         .ok_or_else(|| format_err!("grid requires a persistent result store (--results DIR)"))?
@@ -235,6 +236,11 @@ pub fn run_shard(store: &ResultStore, shard: ShardSpec, points: &[SimPoint]) -> 
     let manifest = GridManifest { shard, plan_points: points.len() as u64, keys };
     let owned_count = manifest.keys.len() as u64;
     let path = write_manifest(&*store.io(), &dir, &manifest)?;
+    crate::obs::global().with(|v| {
+        v.counter_add("grid_shards_total", 1);
+        v.counter_add("grid_plan_points_total", points.len() as u64);
+        v.counter_add("grid_owned_points_total", owned_count);
+    });
     Ok(GridReport { shard, plan_points: points.len() as u64, owned: owned_count, manifest: path })
 }
 
@@ -283,6 +289,7 @@ pub fn merge(sources: &[PathBuf], dest: &Path) -> Result<MergeReport> {
 
 /// [`merge`] over an explicit I/O backend.
 pub fn merge_with(io: Arc<dyn StoreIo>, sources: &[PathBuf], dest: &Path) -> Result<MergeReport> {
+    let _span = crate::obs::span("store_merge");
     ensure!(!sources.is_empty(), "merge: at least one SRC directory is required");
     for s in sources {
         ensure!(
@@ -372,6 +379,14 @@ pub fn merge_with(io: Arc<dyn StoreIo>, sources: &[PathBuf], dest: &Path) -> Res
         }
     }
     dst.flush_index()?;
+    crate::obs::global().with(|v| {
+        v.counter_add("grid_merges_total", 1);
+        v.counter_add("grid_merge_sources_total", report.sources);
+        v.counter_add("grid_merged_records_total", report.merged);
+        v.counter_add("grid_merge_already_present_total", report.already_present);
+        v.counter_add("grid_merge_conflicts_total", report.conflicts);
+        v.counter_add("grid_merge_corrupt_skipped_total", report.corrupt_skipped);
+    });
     Ok(report)
 }
 

@@ -86,6 +86,7 @@ impl<'a> Planner<'a> {
     /// an error here is a bug, not a data condition) — or, debug builds
     /// only, panics if a served hit diverges from a fresh simulation.
     pub fn run(&self, points: &[SimPoint]) -> Result<Vec<Arc<RunResult>>> {
+        let _span = crate::obs::span("plan_batch");
         // Phase 1 — resolve against the store, dedup within the batch.
         // `None` marks a key scheduled for simulation below.
         let mut resolved: HashMap<u64, Option<Arc<RunResult>>> = HashMap::new();
@@ -115,7 +116,11 @@ impl<'a> Planner<'a> {
         // engine per worker, and write each result through the store.
         let fresh = parallel_map_with(to_run, self.workers, EngineCache::new, |engines, p| {
             self.store.note_engine_run();
-            simulate(engines, p).map(|r| (p.key(), Arc::new(r)))
+            let _span = crate::obs::span("engine_run");
+            simulate(engines, p).map(|r| {
+                crate::obs::fold_run_result(&r);
+                (p.key(), Arc::new(r))
+            })
         });
         // (`p` above is `&&SimPoint`: the pool hands `&J` with `J = &SimPoint`;
         // auto-deref covers the calls.)

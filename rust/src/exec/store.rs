@@ -301,6 +301,7 @@ impl ResultStore {
         if self.is_degraded() {
             return None;
         }
+        let _span = crate::obs::span("store_disk_probe");
         if let Some(seg) = &self.seg {
             match seg.lock().expect("segment lock").lookup_result(key) {
                 Some(Ok(r)) => return Some(Arc::new(r)),
@@ -446,7 +447,14 @@ impl ResultStore {
         }
         self.note_miss();
         self.note_engine_run();
-        let r = Arc::new(simulate(engines, point)?);
+        let r = {
+            let _span = crate::obs::span("engine_run");
+            Arc::new(simulate(engines, point)?)
+        };
+        // Fold the run's simulator counters into the obs registry here —
+        // once per fresh simulation, at the stage boundary, so the
+        // per-access hot path never touches the registry.
+        crate::obs::fold_run_result(&r);
         self.insert(point.key(), Arc::clone(&r));
         Ok(r)
     }

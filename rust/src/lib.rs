@@ -54,6 +54,11 @@
 //!   [`tune::PlanCache`] keyed by (spec hash, machine fingerprint,
 //!   budget class) so repeated requests are cache hits and stale plans
 //!   are re-tuned, never silently served.
+//! * [`obs`] — unified observability: a process-wide metrics registry
+//!   (counters / gauges / log2 histograms), hierarchical timing spans,
+//!   Chrome trace-event export (`--trace out.json`) and Prometheus text
+//!   exposition (`GET /metrics` on the serve daemon). Everything folds
+//!   in at stage boundaries — the sim hot loop is untouched.
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas kernel
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them numerically.
 //! * [`native`] — real memory-bandwidth probes that run single- vs
@@ -68,6 +73,7 @@ pub mod exec;
 pub mod kernels;
 pub mod mem;
 pub mod native;
+pub mod obs;
 pub mod prefetch;
 pub mod report;
 pub mod runtime;

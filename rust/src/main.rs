@@ -50,6 +50,11 @@ fn main() {
     if cmd == "serve" {
         std::process::exit(serve_command(&args[1..]));
     }
+    // And the observability report: `repro obs report --trace FILE`
+    // renders tables from a prior `--trace` run's artifacts.
+    if cmd == "obs" {
+        std::process::exit(obs_command(&args[1..]));
+    }
     let opts = Opts::parse(&args[1..]);
     // One result store per invocation: the memory tier spans every
     // command `repro all` chains, so overlapping sweeps dedup in-process
@@ -86,9 +91,28 @@ fn main() {
     if result.is_ok() && stats.requests > 0 {
         print!("{}", figures::render_exec_summary(&stats, store.dir()));
     }
+    if result.is_ok() {
+        write_trace_if_requested(&opts);
+    }
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// Write the `--trace` artifacts after a successful command. Telemetry
+/// is never part of the result contract: a failed write warns on
+/// stderr and leaves the exit code alone.
+fn write_trace_if_requested(opts: &Opts) {
+    let Some(path) = &opts.trace else { return };
+    match multistride::obs::write_trace_artifacts(path) {
+        Ok(a) => println!(
+            "[obs] trace: {} ({} span(s)); counters: {}",
+            a.trace.display(),
+            a.spans,
+            a.counters.display(),
+        ),
+        Err(e) => eprintln!("[obs] trace export failed: {e:#} — results are unaffected"),
     }
 }
 
@@ -97,15 +121,18 @@ fn usage() {
         "usage: repro <command> [--machine coffee-lake|cascade-lake|zen2] \
          [--kernel NAME] [--smoke] [--max-total N] [--csv DIR] [--artifacts DIR] \
          [--plans DIR] [--results DIR] [--cold] [--force] [--no-prefetch] \
-         [--config FILE]\n\
+         [--config FILE] [--trace FILE]\n\
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
-         sweep universe tune native validate run all grid store serve\n\
+         sweep universe tune native validate run all grid store serve obs\n\
          grid:     repro grid --shard k/n [--results DIR]   (one shard of the full plan)\n\
          store:    repro store stats|gc|verify|compact|merge [--results DIR]\n\
          \u{20}         repro store gc --max-bytes N and/or --max-age-days N\n\
          \u{20}         repro store merge SRC... --into DST   (union stores by content key)\n\
          serve:    repro serve [--port N] [--pool-bytes N] [--policy lru|clock|sieve]\n\
-         \u{20}         [--on-miss 404|tune] [--max-requests N] [--plans DIR] [--results DIR]"
+         \u{20}         [--on-miss 404|tune] [--max-requests N] [--plans DIR] [--results DIR]\n\
+         obs:      repro obs report --trace FILE   (top spans + counters from a --trace run)\n\
+         \u{20}         --trace FILE on any command writes Chrome trace events (Perfetto/\n\
+         \u{20}         about:tracing) plus a deterministic FILE sibling .counters.json"
     );
 }
 
@@ -252,6 +279,7 @@ fn serve_command(args: &[String]) -> i32 {
     match serve::run_serve(serve_opts, plans, store) {
         Ok(stats) => {
             print!("{}", figures::render_serve_summary(&stats));
+            write_trace_if_requested(&opts);
             0
         }
         Err(e) => {
@@ -259,6 +287,68 @@ fn serve_command(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// `repro obs report --trace FILE`: render the top-spans table and the
+/// counter table from a prior `--trace` run's artifacts. Exit codes
+/// follow the CLI contract: 2 for a malformed invocation, 1 when the
+/// files cannot be read or parsed.
+fn obs_command(args: &[String]) -> i32 {
+    match args.first().map(|s| s.as_str()) {
+        Some("report") => {}
+        Some(other) => {
+            eprintln!("error: unknown obs subcommand {other:?} (expected: report)");
+            usage();
+            return 2;
+        }
+        None => {
+            eprintln!("error: repro obs needs a subcommand: report");
+            usage();
+            return 2;
+        }
+    }
+    let opts = Opts::parse(&args[1..]);
+    let Some(path) = &opts.trace else {
+        eprintln!("error: obs report requires --trace FILE (a file written by a --trace run)");
+        usage();
+        return 2;
+    };
+    match obs_report(path) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn obs_report(path: &std::path::Path) -> multistride::Result<()> {
+    use multistride::obs;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| multistride::format_err!("reading trace file {}: {e}", path.display()))?;
+    let events = obs::trace::parse_chrome_trace(&text)?;
+    let aggs = obs::span::aggregate(events.iter().map(|e| (e.name.as_str(), e.dur_us)));
+    println!("{}", figures::render_span_report(&aggs));
+
+    // The sibling counter snapshot rides along when present; a trace
+    // file alone still yields the span report.
+    let counters = obs::counters_path_for(path);
+    match std::fs::read_to_string(&counters) {
+        Ok(body) => {
+            let entries = obs::export::parse_json_snapshot(&body)?;
+            println!("{}", figures::render_obs_counters(&entries));
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            println!("(no counter snapshot at {} — spans only)", counters.display());
+        }
+        Err(e) => {
+            return Err(multistride::format_err!(
+                "reading counter snapshot {}: {e}",
+                counters.display()
+            ))
+        }
+    }
+    Ok(())
 }
 
 /// Parsed command-line options.
@@ -285,6 +375,9 @@ struct Opts {
     cold: bool,
     /// `repro grid --shard k/n`: which key-range shard this host owns.
     shard: Option<String>,
+    /// `--trace FILE`: write Chrome trace events (plus the sibling
+    /// `.counters.json` deterministic snapshot) after a clean run.
+    trace: Option<PathBuf>,
 }
 
 impl Opts {
@@ -318,6 +411,7 @@ impl Opts {
             results: None,
             cold: false,
             shard: None,
+            trace: None,
         };
         let mut it = args.iter();
         while let Some(a) = it.next() {
@@ -362,6 +456,9 @@ impl Opts {
                 }
                 "--cold" => o.cold = true,
                 "--shard" => o.shard = Some(Self::require_value(&mut it, "--shard").clone()),
+                "--trace" => {
+                    o.trace = Some(PathBuf::from(Self::require_value(&mut it, "--trace")))
+                }
                 "--force" => o.force = true,
                 "--no-prefetch" => o.prefetch = false,
                 other => {

@@ -1,0 +1,148 @@
+//! Registry exposition: Prometheus text format and the deterministic
+//! JSON counter snapshot.
+//!
+//! Two consumers, two formats:
+//!
+//! * `GET /metrics` on the serve daemon returns [`prometheus_text`] —
+//!   the standard text exposition (`# TYPE` headers, cumulative
+//!   histogram buckets with `le` labels) any Prometheus scraper reads.
+//! * `--trace out.json` also writes `out.counters.json` via
+//!   [`json_snapshot`] — counters and gauges only, **no histograms and
+//!   no timings**, so two identical cold runs produce byte-identical
+//!   files. That property is pinned by tests and CI.
+
+use crate::obs::metrics::{bucket_bound, Snapshot};
+use crate::{format_err, Result};
+
+/// Render a snapshot in the Prometheus text exposition format.
+pub fn prometheus_text(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (name, h) in &snap.hists {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let last_used = h.counts.iter().rposition(|&c| c > 0);
+        let mut cumulative = 0u64;
+        if let Some(last) = last_used {
+            for (i, &c) in h.counts.iter().enumerate().take(last + 1) {
+                cumulative += c;
+                match bucket_bound(i) {
+                    Some(le) => {
+                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cumulative}\n"));
+                    }
+                    None => break,
+                }
+            }
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{name}_sum {}\n", h.sum));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+    }
+    out
+}
+
+/// Render the deterministic JSON snapshot: counters and gauges only,
+/// sorted by name, one entry per line. Histograms (timings) are
+/// excluded by contract — they are the nondeterministic half.
+pub fn json_snapshot(snap: &Snapshot) -> String {
+    let mut out = String::from("{\n  \"counters\": {\n");
+    push_section(&mut out, &snap.counters);
+    out.push_str("  },\n  \"gauges\": {\n");
+    push_section(&mut out, &snap.gauges);
+    out.push_str("  }\n}\n");
+    out
+}
+
+fn push_section(out: &mut String, entries: &[(String, u64)]) {
+    for (i, (name, v)) in entries.iter().enumerate() {
+        let comma = if i + 1 < entries.len() { "," } else { "" };
+        out.push_str(&format!("    \"{name}\": {v}{comma}\n"));
+    }
+}
+
+/// Read back a [`json_snapshot`] file: `(name, value)` pairs from both
+/// sections, in file order. Line-based on our own emission grammar —
+/// the crate is dependency-free, so no general JSON parser.
+pub fn parse_json_snapshot(text: &str) -> Result<Vec<(String, u64)>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let Some((name, value)) = rest.split_once("\": ") else { continue };
+        let value: u64 = value
+            .trim()
+            .parse()
+            .map_err(|_| format_err!("bad snapshot value for {name:?}: {value:?}"))?;
+        out.push((name.to_string(), value));
+    }
+    if out.is_empty() {
+        return Err(format_err!("no counters found — not a snapshot file, or a torn write"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+
+    fn sample() -> Snapshot {
+        let r = Registry::new();
+        r.counter_set("exec_requests_total", 12);
+        r.counter_set("sim_accesses_total", 34_000);
+        r.gauge_set("store_degraded", 1);
+        r.observe("serve_plan_request_us", 3);
+        r.observe("serve_plan_request_us", 100);
+        r.snapshot()
+    }
+
+    #[test]
+    fn prometheus_text_exposes_all_three_kinds() {
+        let text = prometheus_text(&sample());
+        assert!(text.contains("# TYPE exec_requests_total counter\nexec_requests_total 12\n"));
+        assert!(text.contains("# TYPE store_degraded gauge\nstore_degraded 1\n"));
+        assert!(text.contains("# TYPE serve_plan_request_us histogram\n"));
+        assert!(text.contains("serve_plan_request_us_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("serve_plan_request_us_sum 103\n"));
+        assert!(text.contains("serve_plan_request_us_count 2\n"));
+    }
+
+    #[test]
+    fn prometheus_histogram_buckets_are_cumulative() {
+        let r = Registry::new();
+        r.observe("h_us", 1); // bucket 0 (le=1)
+        r.observe("h_us", 2); // bucket 1 (le=2)
+        let text = prometheus_text(&r.snapshot());
+        assert!(text.contains("h_us_bucket{le=\"1\"} 1\n"), "got:\n{text}");
+        assert!(text.contains("h_us_bucket{le=\"2\"} 2\n"), "got:\n{text}");
+    }
+
+    #[test]
+    fn json_snapshot_excludes_histograms_and_round_trips() {
+        let json = json_snapshot(&sample());
+        assert!(!json.contains("serve_plan_request_us"), "timings must be excluded");
+        let parsed = parse_json_snapshot(&json).unwrap();
+        assert_eq!(
+            parsed,
+            vec![
+                ("exec_requests_total".to_string(), 12),
+                ("sim_accesses_total".to_string(), 34_000),
+                ("store_degraded".to_string(), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn json_snapshot_is_byte_identical_for_equal_registries() {
+        assert_eq!(json_snapshot(&sample()), json_snapshot(&sample()));
+    }
+
+    #[test]
+    fn parse_rejects_non_snapshot_text() {
+        assert!(parse_json_snapshot("{\"traceEvents\":[]}").is_err());
+    }
+}

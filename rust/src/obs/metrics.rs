@@ -1,0 +1,317 @@
+//! The process-wide metrics registry: named counters, gauges, and
+//! log2-bucket histograms.
+//!
+//! Design constraints (see `ARCHITECTURE.md` §Observability):
+//!
+//! * **No atomics or locks in the sim hot loop.** The registry is only
+//!   touched at *stage boundaries* — an engine run completing, a batch
+//!   resolving, an HTTP request finishing, a summary line rendering.
+//!   Engine counters fold in from the already-aggregated
+//!   [`crate::sim::RunResult`] at run end, so the issue→fill→stall path
+//!   is untouched.
+//! * **Deterministic snapshots.** Counters and gauges carry only values
+//!   that are deterministic for a given workload (request counts,
+//!   simulated accesses, bytes moved); wall-clock observations go into
+//!   histograms, which the JSON snapshot excludes
+//!   ([`crate::obs::export::json_snapshot`]) — that is what makes "two
+//!   identical cold runs produce byte-identical snapshots" a testable
+//!   contract.
+//! * **Names follow `subsystem_name_unit`** (`exec_requests_total`,
+//!   `serve_plan_request_us`, `store_degraded`), so the Prometheus
+//!   exposition needs no relabeling.
+//!
+//! One [`Registry`] is process-global ([`global`]); tests that assert
+//! exact values construct their own so parallel test threads cannot
+//! interleave.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Log2 histogram bucket count: bucket `i` holds values in
+/// `(2^(i-1), 2^i]` (bucket 0 holds 0 and 1); the last bucket is the
+/// overflow/`+Inf` catch-all for values above `2^63`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// One log2-bucket histogram: per-bucket counts plus count and sum.
+#[derive(Clone)]
+pub struct Hist {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self { counts: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl Hist {
+    fn observe(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+}
+
+/// Which log2 bucket `v` lands in (see [`HIST_BUCKETS`]).
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        64 - (v - 1).leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`None` for the `+Inf` bucket).
+pub fn bucket_bound(i: usize) -> Option<u64> {
+    if i >= 64 {
+        None
+    } else {
+        Some(1u64 << i)
+    }
+}
+
+/// The registry's mutable interior: every update and the snapshot walk
+/// happen through one of these, under one lock — callers that need a
+/// fold and a snapshot to be mutually atomic use [`Registry::with`].
+#[derive(Default)]
+pub struct Values {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl Values {
+    /// Add `v` to counter `name` (created at 0).
+    pub fn counter_add(&mut self, name: &str, v: u64) {
+        *self.entry_counter(name) += v;
+    }
+
+    /// Set counter `name` to an absolute value — the fold path for
+    /// sources that already aggregate (e.g. [`crate::exec::ExecStats`]
+    /// is itself monotonic over a store's lifetime).
+    pub fn counter_set(&mut self, name: &str, v: u64) {
+        *self.entry_counter(name) = v;
+    }
+
+    /// Set gauge `name`.
+    pub fn gauge_set(&mut self, name: &str, v: u64) {
+        match self.gauges.get_mut(name) {
+            Some(slot) => *slot = v,
+            None => {
+                self.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Record one observation into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: u64) {
+        match self.hists.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Hist::default();
+                h.observe(v);
+                self.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    fn entry_counter(&mut self, name: &str) -> &mut u64 {
+        if !self.counters.contains_key(name) {
+            self.counters.insert(name.to_string(), 0);
+        }
+        self.counters.get_mut(name).expect("just inserted")
+    }
+
+    /// Immutable snapshot, deterministically ordered (BTreeMap order =
+    /// lexicographic by name).
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self.counters.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            gauges: self.gauges.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            hists: self
+                .hists
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        HistSnapshot { counts: h.counts.to_vec(), count: h.count, sum: h.sum },
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket (non-cumulative) counts, [`HIST_BUCKETS`] long.
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+/// Point-in-time copy of the whole registry, lexicographically sorted.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+impl Snapshot {
+    /// Counter value by name (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(k, _)| k == name).map_or(0, |(_, v)| *v)
+    }
+
+    /// Gauge value by name (0 when absent).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.iter().find(|(k, _)| k == name).map_or(0, |(_, v)| *v)
+    }
+}
+
+/// A named-metric registry. Cheap to share (`&Registry` is `Sync`);
+/// all methods take `&self` and lock internally.
+pub struct Registry {
+    values: Mutex<Values>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { values: Mutex::new(Values::default()) }
+    }
+
+    /// Run `f` against the registry interior under the lock — how fold
+    /// functions make "write these values, snapshot the result" atomic
+    /// with respect to concurrent updaters.
+    pub fn with<R>(&self, f: impl FnOnce(&mut Values) -> R) -> R {
+        f(&mut self.values.lock().expect("metrics lock"))
+    }
+
+    pub fn counter_add(&self, name: &str, v: u64) {
+        self.with(|vals| vals.counter_add(name, v));
+    }
+
+    pub fn counter_set(&self, name: &str, v: u64) {
+        self.with(|vals| vals.counter_set(name, v));
+    }
+
+    pub fn gauge_set(&self, name: &str, v: u64) {
+        self.with(|vals| vals.gauge_set(name, v));
+    }
+
+    pub fn observe(&self, name: &str, v: u64) {
+        self.with(|vals| vals.observe(name, v));
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        self.with(|vals| vals.snapshot())
+    }
+
+    /// Drop every metric (tests and long-lived daemons that rotate).
+    pub fn reset(&self) {
+        self.with(|vals| *vals = Values::default());
+    }
+}
+
+/// The process-wide registry every subsystem folds into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add_set_and_snapshot_sorted() {
+        let r = Registry::new();
+        r.counter_add("b_total", 2);
+        r.counter_add("a_total", 1);
+        r.counter_add("b_total", 3);
+        r.counter_set("c_total", 7);
+        let s = r.snapshot();
+        assert_eq!(
+            s.counters,
+            vec![("a_total".into(), 1), ("b_total".into(), 5), ("c_total".into(), 7)]
+        );
+        assert_eq!(s.counter("b_total"), 5);
+        assert_eq!(s.counter("absent"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let r = Registry::new();
+        r.gauge_set("store_degraded", 1);
+        r.gauge_set("store_degraded", 0);
+        assert_eq!(r.snapshot().gauge("store_degraded"), 0);
+    }
+
+    #[test]
+    fn log2_buckets_partition_the_u64_range() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        // Every value lands in exactly the bucket whose bound covers it.
+        for v in [0u64, 1, 2, 3, 7, 8, 9, 1024, 1025, u64::MAX / 2] {
+            let i = bucket_index(v);
+            if let Some(bound) = bucket_bound(i) {
+                assert!(v <= bound, "v={v} bucket={i} bound={bound}");
+            }
+            if i > 0 {
+                let below = bucket_bound(i - 1).unwrap();
+                assert!(v > below, "v={v} must exceed the previous bound {below}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_count_and_sum() {
+        let r = Registry::new();
+        for v in [1u64, 2, 3, 1000] {
+            r.observe("x_us", v);
+        }
+        let s = r.snapshot();
+        let (name, h) = &s.hists[0];
+        assert_eq!(name, "x_us");
+        assert_eq!(h.count, 4);
+        assert_eq!(h.sum, 1006);
+        assert_eq!(h.counts.iter().sum::<u64>(), 4);
+        assert_eq!(h.counts.len(), HIST_BUCKETS);
+    }
+
+    #[test]
+    fn with_makes_fold_plus_snapshot_atomic() {
+        let r = Registry::new();
+        let s = r.with(|v| {
+            v.counter_set("a_total", 1);
+            v.gauge_set("g", 2);
+            v.snapshot()
+        });
+        assert_eq!((s.counter("a_total"), s.gauge("g")), (1, 2));
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let r = Registry::new();
+        r.counter_add("a", 1);
+        r.observe("h", 1);
+        r.reset();
+        let s = r.snapshot();
+        assert!(s.counters.is_empty() && s.gauges.is_empty() && s.hists.is_empty());
+    }
+}

@@ -1,0 +1,187 @@
+//! Unified observability: metrics registry, timing spans, Chrome-trace
+//! export, and Prometheus/JSON exposition.
+//!
+//! The paper's argument is made of counters (hit ratios, prefetch
+//! usefulness, effective bandwidth — §4); this layer gives the *repo's
+//! own operation* the same treatment. Every subsystem folds what it
+//! already counts into one process-wide [`metrics::Registry`]:
+//!
+//! * `exec` — [`crate::exec::ExecStats`] via [`fold_exec_stats`], plus
+//!   per-run engine counters via [`fold_run_result`];
+//! * `serve` — [`crate::serve::ServeStats`] via [`fold_serve_stats`],
+//!   plus per-endpoint latency histograms recorded at request end;
+//! * `tune` / `coordinator` / grid — counters and [`span::span`]s at
+//!   their stage boundaries.
+//!
+//! Nothing here runs in the sim hot loop: folds happen per engine run,
+//! per request, per rung, per render — never per access.
+//!
+//! Exposition surfaces: `GET /metrics` (Prometheus text), `--trace
+//! out.json` (Chrome trace events + `out.counters.json` deterministic
+//! snapshot), and `repro obs report` (tables from a trace run).
+//! The metric naming contract is `subsystem_name_unit`; see
+//! `ARCHITECTURE.md` §Observability for the add-a-metric checklist.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+use std::path::{Path, PathBuf};
+
+pub use metrics::{global, Registry, Snapshot};
+pub use span::{span, SpanAgg, SpanRecord};
+
+use crate::exec::ExecStats;
+use crate::serve::ServeStats;
+use crate::sim::RunResult;
+use crate::Result;
+
+/// Fold a [`ExecStats`] snapshot into `reg` and return the registry
+/// snapshot taken under the same lock. `ExecStats` is monotonic over a
+/// store's lifetime, so absolute sets are the correct fold.
+pub fn fold_exec_stats(reg: &Registry, s: &ExecStats) -> Snapshot {
+    reg.with(|v| {
+        v.counter_set("exec_requests_total", s.requests);
+        v.counter_set("exec_mem_hits_total", s.mem_hits);
+        v.counter_set("exec_disk_hits_total", s.disk_hits);
+        v.counter_set("exec_legacy_hits_total", s.legacy_hits);
+        v.counter_set("exec_misses_total", s.misses);
+        v.counter_set("exec_deduped_total", s.deduped);
+        v.counter_set("exec_engine_runs_total", s.engine_runs);
+        v.counter_set("exec_disk_writes_total", s.disk_writes);
+        v.counter_set("exec_corrupt_discards_total", s.corrupt_discards);
+        v.counter_set("exec_verified_hits_total", s.verified_hits);
+        v.counter_set("exec_disk_errors_total", s.disk_errors);
+        v.counter_set("exec_dropped_unsimulatable_total", s.dropped_unsimulatable);
+        v.gauge_set("store_degraded", u64::from(s.degraded));
+        v.snapshot()
+    })
+}
+
+/// Fold a [`ServeStats`] snapshot into `reg` and return the registry
+/// snapshot taken under the same lock.
+pub fn fold_serve_stats(reg: &Registry, s: &ServeStats) -> Snapshot {
+    reg.with(|v| {
+        v.counter_set("serve_pool_requests_total", s.pool.requests);
+        v.counter_set("serve_pool_hits_total", s.pool.hits);
+        v.counter_set("serve_pool_misses_total", s.pool.misses);
+        v.counter_set("serve_pool_insertions_total", s.pool.insertions);
+        v.counter_set("serve_pool_evictions_total", s.pool.evictions);
+        v.counter_set("serve_pool_oversize_rejects_total", s.pool.rejected_oversize);
+        v.gauge_set("serve_pool_bytes", s.pool.current_bytes);
+        v.gauge_set("serve_pool_entries", s.pool.current_entries);
+        v.gauge_set("serve_pool_capacity_bytes", s.pool.capacity_bytes);
+        v.counter_set("serve_disk_plans_total", s.disk_loads);
+        v.counter_set("serve_tunes_total", s.tunes);
+        v.counter_set("serve_tune_failures_total", s.tune_failures);
+        v.counter_set("serve_single_flight_waits_total", s.single_flight_waits);
+        v.counter_set("serve_not_found_total", s.not_found);
+        v.counter_set("serve_bad_requests_total", s.bad_requests);
+        v.snapshot()
+    })
+}
+
+/// Fold one engine run's simulator counters into `reg`. Called once
+/// per [`crate::exec::ResultStore::get_or_run`] miss — the aggregation
+/// the simulator already did is reused, so the per-access hot path
+/// never sees the registry.
+pub fn fold_run_result_into(reg: &Registry, r: &RunResult) {
+    reg.with(|v| {
+        v.counter_add("sim_engine_runs_total", 1);
+        v.counter_add("sim_accesses_total", r.counters.accesses);
+        v.counter_add("sim_cycles_total", r.counters.cycles);
+        v.counter_add("sim_stall_cycles_total", r.counters.stalls_total);
+        v.counter_add("sim_bytes_read_total", r.counters.bytes_read);
+        v.counter_add("sim_bytes_written_total", r.counters.bytes_written);
+        v.counter_add("sim_dram_demand_lines_total", r.counters.dram_demand_lines);
+        v.counter_add("prefetch_lines_total", r.counters.prefetch_lines);
+        v.counter_add("prefetch_merges_total", r.counters.prefetch_merges);
+        v.counter_add("prefetch_streams_allocated_total", r.streamer.streams_allocated);
+        v.counter_add("prefetch_streams_evicted_total", r.streamer.streams_evicted);
+        v.counter_add("prefetch_issued_total", r.streamer.prefetches_issued);
+    });
+}
+
+/// [`fold_run_result_into`] against the process-global registry.
+pub fn fold_run_result(r: &RunResult) {
+    fold_run_result_into(global(), r);
+}
+
+/// What `--trace` wrote and where.
+pub struct TraceArtifacts {
+    pub trace: PathBuf,
+    pub counters: PathBuf,
+    pub spans: usize,
+}
+
+/// Sibling counter-snapshot path for a trace file: `out.json` →
+/// `out.counters.json`.
+pub fn counters_path_for(trace: &Path) -> PathBuf {
+    trace.with_extension("counters.json")
+}
+
+/// Write both `--trace` artifacts through the default I/O: the Chrome
+/// trace at `trace_path` and the deterministic counter snapshot next
+/// to it. The snapshot is counters/gauges only — reruns byte-match.
+pub fn write_trace_artifacts(trace_path: &Path) -> Result<TraceArtifacts> {
+    let io = crate::exec::vfs::default_io();
+    let spans = trace::write_chrome_trace_with(&io, trace_path)?;
+    let counters = counters_path_for(trace_path);
+    let body = export::json_snapshot(&global().snapshot());
+    crate::exec::vfs::with_retry(|| io.write(&counters, body.as_bytes()))
+        .map_err(|e| crate::format_err!("writing counter snapshot {}: {e}", counters.display()))?;
+    Ok(TraceArtifacts { trace: trace_path.to_path_buf(), counters, spans })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exec_stats() -> ExecStats {
+        ExecStats {
+            requests: 10,
+            mem_hits: 4,
+            disk_hits: 3,
+            legacy_hits: 1,
+            misses: 3,
+            deduped: 2,
+            engine_runs: 3,
+            disk_writes: 3,
+            corrupt_discards: 1,
+            verified_hits: 0,
+            disk_errors: 5,
+            dropped_unsimulatable: 1,
+            degraded: true,
+        }
+    }
+
+    #[test]
+    fn exec_fold_maps_every_field() {
+        let r = Registry::new();
+        let s = fold_exec_stats(&r, &exec_stats());
+        assert_eq!(s.counter("exec_requests_total"), 10);
+        assert_eq!(s.counter("exec_mem_hits_total"), 4);
+        assert_eq!(s.counter("exec_disk_hits_total"), 3);
+        assert_eq!(s.counter("exec_engine_runs_total"), 3);
+        assert_eq!(s.counter("exec_disk_errors_total"), 5);
+        assert_eq!(s.gauge("store_degraded"), 1);
+    }
+
+    #[test]
+    fn exec_fold_is_idempotent() {
+        let r = Registry::new();
+        let first = fold_exec_stats(&r, &exec_stats());
+        let second = fold_exec_stats(&r, &exec_stats());
+        assert_eq!(first, second, "absolute sets must not accumulate across folds");
+    }
+
+    #[test]
+    fn counters_path_is_a_sibling() {
+        assert_eq!(
+            counters_path_for(Path::new("/tmp/out.json")),
+            Path::new("/tmp/out.counters.json")
+        );
+        assert_eq!(counters_path_for(Path::new("trace")), Path::new("trace.counters.json"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Hierarchical timing spans with thread-local stacks.
+//!
+//! A span covers one coarse unit of work — a coordinator pool task, a
+//! tuner rung, a store disk probe, an engine run, a serve request —
+//! never anything per-access. Opening one is a thread-local push plus
+//! an `Instant::now()`; closing is a push onto a global mutex-guarded
+//! vector. Both are nanoseconds against work that takes microseconds
+//! to seconds, so spans are safe to leave enabled by default.
+//!
+//! Records accumulate until [`drain`]/[`snapshot`] and are bounded by
+//! [`MAX_SPANS`]: a long-lived serve daemon cannot grow without limit —
+//! once full, new records are dropped and `obs_spans_dropped_total`
+//! counts them.
+//!
+//! ```ignore
+//! let _span = crate::obs::span("engine_run");
+//! // ... work; the record is filed when _span drops ...
+//! ```
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Hard cap on buffered finished spans (records, not bytes). At ~64 B
+/// a record this bounds the buffer near 16 MiB.
+pub const MAX_SPANS: usize = 262_144;
+
+/// One finished span, timestamped in microseconds relative to the
+/// first obs activity in the process (a stable epoch for the whole
+/// trace file).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    /// Microseconds since the process obs epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Small dense per-thread id (1-based, first-use order).
+    pub tid: u64,
+    /// Nesting depth on its thread at open time (0 = top level).
+    pub depth: u32,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn finished() -> &'static Mutex<Vec<SpanRecord>> {
+    static FINISHED: OnceLock<Mutex<Vec<SpanRecord>>> = OnceLock::new();
+    FINISHED.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Open a span; the record is filed when the guard drops. Names are
+/// `&'static str` by design: opening a span must not allocate.
+pub fn span(name: &'static str) -> SpanGuard {
+    let start = Instant::now();
+    let start_us = start.duration_since(epoch()).as_micros() as u64;
+    let depth = DEPTH.with(|d| {
+        let cur = d.get();
+        d.set(cur + 1);
+        cur
+    });
+    SpanGuard { name, start, start_us, depth, tid: TID.with(|t| *t) }
+}
+
+/// RAII handle returned by [`span`].
+pub struct SpanGuard {
+    name: &'static str,
+    start: Instant,
+    start_us: u64,
+    depth: u32,
+    tid: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        let rec = SpanRecord {
+            name: self.name,
+            start_us: self.start_us,
+            dur_us: self.start.elapsed().as_micros() as u64,
+            tid: self.tid,
+            depth: self.depth,
+        };
+        let mut buf = finished().lock().expect("span buffer lock");
+        if buf.len() < MAX_SPANS {
+            buf.push(rec);
+        } else {
+            drop(buf);
+            crate::obs::metrics::global().counter_add("obs_spans_dropped_total", 1);
+        }
+    }
+}
+
+/// Copy out every finished span, leaving the buffer intact — export
+/// paths use this so a failed trace write (chaos schedules!) loses
+/// nothing.
+pub fn snapshot() -> Vec<SpanRecord> {
+    finished().lock().expect("span buffer lock").clone()
+}
+
+/// Take every finished span, emptying the buffer.
+pub fn drain() -> Vec<SpanRecord> {
+    std::mem::take(&mut *finished().lock().expect("span buffer lock"))
+}
+
+/// Per-name rollup for the `repro obs report` table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanAgg {
+    pub name: String,
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+impl SpanAgg {
+    pub fn mean_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_us / self.count
+        }
+    }
+}
+
+/// Aggregate `(name, dur_us)` pairs into per-name rollups, sorted by
+/// total time descending (name ascending as the tiebreak, so reports
+/// are deterministic).
+pub fn aggregate<'a>(spans: impl IntoIterator<Item = (&'a str, u64)>) -> Vec<SpanAgg> {
+    let mut by_name: std::collections::BTreeMap<&str, SpanAgg> = std::collections::BTreeMap::new();
+    for (name, dur_us) in spans {
+        match by_name.get_mut(name) {
+            Some(agg) => {
+                agg.count += 1;
+                agg.total_us += dur_us;
+                agg.max_us = agg.max_us.max(dur_us);
+            }
+            None => {
+                by_name.insert(
+                    name,
+                    SpanAgg { name: name.to_string(), count: 1, total_us: dur_us, max_us: dur_us },
+                );
+            }
+        }
+    }
+    let mut out: Vec<SpanAgg> = by_name.into_values().collect();
+    out.sort_by(|a, b| b.total_us.cmp(&a.total_us).then_with(|| a.name.cmp(&b.name)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_name_thread_and_nesting() {
+        {
+            let _outer = span("obs_test_outer");
+            let _inner = span("obs_test_inner");
+        }
+        let recs = snapshot();
+        let inner = recs.iter().find(|r| r.name == "obs_test_inner").expect("inner recorded");
+        let outer = recs.iter().find(|r| r.name == "obs_test_outer").expect("outer recorded");
+        assert_eq!(inner.tid, outer.tid, "same thread");
+        assert_eq!(inner.depth, outer.depth + 1, "inner nests one level deeper");
+        assert!(inner.start_us >= outer.start_us);
+    }
+
+    #[test]
+    fn threads_get_distinct_ids() {
+        let _main = span("obs_test_tid_main");
+        std::thread::spawn(|| {
+            let _child = span("obs_test_tid_child");
+        })
+        .join()
+        .unwrap();
+        let recs = snapshot();
+        let main_tid =
+            recs.iter().find(|r| r.name == "obs_test_tid_main").map(|r| r.tid).unwrap_or(0);
+        let child = recs.iter().find(|r| r.name == "obs_test_tid_child").expect("child recorded");
+        assert_ne!(child.tid, 0);
+        assert_ne!(child.tid, main_tid);
+    }
+
+    #[test]
+    fn aggregate_rolls_up_and_sorts_by_total() {
+        let aggs = aggregate([("b", 10u64), ("a", 3), ("b", 20), ("a", 1)]);
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(aggs[0].name, "b");
+        assert_eq!(aggs[0].count, 2);
+        assert_eq!(aggs[0].total_us, 30);
+        assert_eq!(aggs[0].max_us, 20);
+        assert_eq!(aggs[0].mean_us(), 15);
+        assert_eq!(aggs[1].name, "a");
+        assert_eq!(aggs[1].total_us, 4);
+    }
+
+    #[test]
+    fn aggregate_breaks_total_ties_by_name() {
+        let aggs = aggregate([("z", 5u64), ("a", 5)]);
+        assert_eq!(aggs[0].name, "a");
+        assert_eq!(aggs[1].name, "z");
+    }
+}

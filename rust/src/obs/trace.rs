@@ -1,0 +1,219 @@
+//! Chrome trace-event JSON export.
+//!
+//! `repro <cmd> --trace out.json` serializes every finished span into
+//! the Chrome trace-event format — complete events (`"ph":"X"`) with
+//! microsecond timestamps — loadable in `about:tracing` or Perfetto.
+//! A sibling `out.counters.json` carries the deterministic counter
+//! snapshot ([`crate::obs::export::json_snapshot`]).
+//!
+//! Writes go through the [`StoreIo`] seam so FaultIo chaos schedules
+//! cover them: a failed or torn trace write is reported as an error to
+//! the caller (who downgrades it to a warning — traces are telemetry,
+//! never part of the result contract) and the span buffer is left
+//! untouched, so nothing is lost or corrupted.
+//!
+//! The emitter writes one event per line inside the `traceEvents`
+//! array. That is both valid JSON for Perfetto and a stable line
+//! grammar [`parse_chrome_trace`] can read back without a JSON parser
+//! (the crate is dependency-free).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::exec::vfs::{with_retry, StoreIo};
+use crate::obs::span::{self, SpanRecord};
+use crate::{format_err, Result};
+
+/// Serialize spans as Chrome trace-event JSON. Events are sorted by
+/// (start, thread, name) so the file is deterministic for a given set
+/// of records.
+pub fn chrome_trace_json(records: &[SpanRecord]) -> String {
+    let mut recs: Vec<&SpanRecord> = records.iter().collect();
+    recs.sort_by(|a, b| {
+        a.start_us.cmp(&b.start_us).then(a.tid.cmp(&b.tid)).then(a.name.cmp(b.name))
+    });
+    let mut out = String::with_capacity(128 + recs.len() * 96);
+    out.push_str("{\"traceEvents\":[\n");
+    for (i, r) in recs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"obs\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"depth\":{}}}}}",
+            escape_json(r.name),
+            r.start_us,
+            r.dur_us,
+            r.tid,
+            r.depth,
+        ));
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write the current span buffer as a Chrome trace through `io`.
+/// Returns the number of events written. The buffer is *snapshotted*,
+/// not drained: a failed write under a chaos schedule loses nothing.
+pub fn write_chrome_trace_with(io: &Arc<dyn StoreIo>, path: &Path) -> Result<usize> {
+    let records = span::snapshot();
+    let body = chrome_trace_json(&records);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            with_retry(|| io.create_dir_all(parent))
+                .map_err(|e| format_err!("creating trace dir {}: {e}", parent.display()))?;
+        }
+    }
+    with_retry(|| io.write(path, body.as_bytes()))
+        .map_err(|e| format_err!("writing trace file {}: {e}", path.display()))?;
+    Ok(records.len())
+}
+
+/// [`write_chrome_trace_with`] through the default (real) filesystem.
+pub fn write_chrome_trace(path: &Path) -> Result<usize> {
+    write_chrome_trace_with(&crate::exec::vfs::default_io(), path)
+}
+
+/// One event read back from a trace file — just the fields the
+/// `repro obs report` rollup needs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParsedEvent {
+    pub name: String,
+    pub dur_us: u64,
+}
+
+/// Read back a trace file written by [`chrome_trace_json`]: one event
+/// object per line, `"name"` and `"dur"` extracted per line. Lines
+/// that are not complete events (the envelope, metadata) are skipped;
+/// a file with no parseable events is an error — it is either not a
+/// trace file or a torn write.
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<ParsedEvent>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if !line.starts_with('{') || !line.contains("\"ph\":\"X\"") {
+            continue;
+        }
+        let (Some(name), Some(dur)) = (field_str(line, "name"), field_u64(line, "dur")) else {
+            continue;
+        };
+        out.push(ParsedEvent { name, dur_us: dur });
+    }
+    if out.is_empty() {
+        return Err(format_err!("no trace events found — not a trace file, or a torn write"));
+    }
+    Ok(out)
+}
+
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let tag = format!("\"{key}\":\"");
+    let start = line.find(&tag)? + tag.len();
+    let rest = &line[start..];
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                other => out.push(other),
+            },
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    let tag = format!("\"{key}\":");
+    let start = line.find(&tag)? + tag.len();
+    let digits: String = line[start..].chars().take_while(char::is_ascii_digit).collect();
+    digits.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &'static str, start_us: u64, dur_us: u64, tid: u64) -> SpanRecord {
+        SpanRecord { name, start_us, dur_us, tid, depth: 0 }
+    }
+
+    #[test]
+    fn trace_json_has_the_chrome_envelope_and_sorted_events() {
+        let json = chrome_trace_json(&[rec("b", 20, 5, 1), rec("a", 10, 3, 2)]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.trim_end().ends_with("],\"displayTimeUnit\":\"ms\"}"));
+        let a = json.find("\"name\":\"a\"").unwrap();
+        let b = json.find("\"name\":\"b\"").unwrap();
+        assert!(a < b, "events must be sorted by start time");
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ts\":10"));
+        assert!(json.contains("\"dur\":5"));
+    }
+
+    #[test]
+    fn trace_json_is_deterministic_for_the_same_records() {
+        let recs = [rec("x", 1, 2, 1), rec("y", 3, 4, 2)];
+        assert_eq!(chrome_trace_json(&recs), chrome_trace_json(&recs));
+    }
+
+    #[test]
+    fn parse_round_trips_names_and_durations() {
+        let json = chrome_trace_json(&[rec("pool_task", 10, 42, 1), rec("engine_run", 12, 7, 1)]);
+        let events = parse_chrome_trace(&json).unwrap();
+        assert_eq!(events.len(), 2);
+        assert!(events.iter().any(|e| e.name == "pool_task" && e.dur_us == 42));
+        assert!(events.iter().any(|e| e.name == "engine_run" && e.dur_us == 7));
+    }
+
+    #[test]
+    fn parse_rejects_non_trace_text() {
+        assert!(parse_chrome_trace("{\"counters\":{}}\n").is_err());
+        assert!(parse_chrome_trace("").is_err());
+    }
+
+    #[test]
+    fn string_escaping_survives_the_round_trip() {
+        assert_eq!(escape_json("a\"b\\c"), "a\\\"b\\\\c");
+        let line = "{\"name\":\"a\\\"b\\\\c\",\"ph\":\"X\",\"dur\":3}";
+        let events = parse_chrome_trace(line).unwrap();
+        assert_eq!(events[0].name, "a\"b\\c");
+    }
+
+    #[test]
+    fn chaos_faulted_write_fails_cleanly_and_keeps_the_buffer() {
+        use crate::exec::vfs::{FaultIo, FaultPlan, RealIo};
+        drop(crate::obs::span("obs_trace_chaos_probe"));
+        let before = crate::obs::span::snapshot().len();
+        let io: Arc<dyn StoreIo> =
+            Arc::new(FaultIo::new(Arc::new(RealIo), FaultPlan::dead_disk()));
+        let dir = std::env::temp_dir()
+            .join(format!("multistride_obs_trace_{}", std::process::id()));
+        let err = write_chrome_trace_with(&io, &dir.join("t.json"));
+        assert!(err.is_err(), "dead disk must surface as an error, not a panic");
+        assert!(
+            crate::obs::span::snapshot().len() >= before,
+            "a failed write must not lose span records"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -272,39 +272,51 @@ pub fn render_exec_summary(
     stats: &crate::exec::ExecStats,
     dir: Option<&std::path::Path>,
 ) -> String {
+    let snap = crate::obs::fold_exec_stats(crate::obs::global(), stats);
+    render_exec_summary_from(&snap, dir)
+}
+
+/// Render the `[exec]` line from a registry snapshot — the single
+/// formatter both the summary println and `repro obs report` share, so
+/// the greppable line can never drift from the scraped metrics.
+pub fn render_exec_summary_from(
+    snap: &crate::obs::Snapshot,
+    dir: Option<&std::path::Path>,
+) -> String {
+    let c = |name: &str| snap.counter(name);
     let mut s = format!(
         "[exec] sim points: {} requests, engine runs: {}, store hits: {} (mem {} / disk {}), deduped: {}, written: {}",
-        stats.requests,
-        stats.engine_runs,
-        stats.hits(),
-        stats.mem_hits,
-        stats.disk_hits,
-        stats.deduped,
-        stats.disk_writes,
+        c("exec_requests_total"),
+        c("exec_engine_runs_total"),
+        c("exec_mem_hits_total") + c("exec_disk_hits_total"),
+        c("exec_mem_hits_total"),
+        c("exec_disk_hits_total"),
+        c("exec_deduped_total"),
+        c("exec_disk_writes_total"),
     );
-    if stats.legacy_hits > 0 {
+    if c("exec_legacy_hits_total") > 0 {
         s.push_str(&format!(
             ", legacy-shard hits: {} (pack with `repro store compact`)",
-            stats.legacy_hits
+            c("exec_legacy_hits_total")
         ));
     }
-    if stats.corrupt_discards > 0 {
-        s.push_str(&format!(", corrupt discards: {}", stats.corrupt_discards));
+    if c("exec_corrupt_discards_total") > 0 {
+        s.push_str(&format!(", corrupt discards: {}", c("exec_corrupt_discards_total")));
     }
-    if stats.disk_errors > 0 {
-        s.push_str(&format!(", disk errors: {}", stats.disk_errors));
+    if c("exec_disk_errors_total") > 0 {
+        s.push_str(&format!(", disk errors: {}", c("exec_disk_errors_total")));
     }
-    if stats.dropped_unsimulatable > 0 {
+    if c("exec_dropped_unsimulatable_total") > 0 {
         s.push_str(&format!(
             ", unsimulatable hits dropped: {}",
-            stats.dropped_unsimulatable
+            c("exec_dropped_unsimulatable_total")
         ));
     }
-    if stats.degraded {
+    if snap.gauge("store_degraded") != 0 {
         s.push_str(", PERSISTENT TIER DISABLED (memory-only)");
     }
-    if stats.verified_hits > 0 {
-        s.push_str(&format!(", debug-verified hits: {}", stats.verified_hits));
+    if c("exec_verified_hits_total") > 0 {
+        s.push_str(&format!(", debug-verified hits: {}", c("exec_verified_hits_total")));
     }
     match dir {
         Some(d) => s.push_str(&format!("; results dir: {}", d.display())),
@@ -319,37 +331,80 @@ pub fn render_exec_summary(
 /// greps the `pool hits:` and `tunes:` figures out of it, so keep those
 /// labels stable).
 pub fn render_serve_summary(stats: &crate::serve::ServeStats) -> String {
-    let p = &stats.pool;
+    let snap = crate::obs::fold_serve_stats(crate::obs::global(), stats);
+    render_serve_summary_from(&snap, stats.policy.cli_name(), stats.on_miss.cli_name())
+}
+
+/// Render the `[serve]` line from a registry snapshot (the numeric
+/// half; policy names ride along as strings — they are configuration,
+/// not metrics).
+pub fn render_serve_summary_from(
+    snap: &crate::obs::Snapshot,
+    policy: &str,
+    on_miss: &str,
+) -> String {
+    let c = |name: &str| snap.counter(name);
+    let requests = c("serve_pool_requests_total");
+    let hits = c("serve_pool_hits_total");
+    let hit_pct = if requests == 0 { 0.0 } else { 100.0 * hits as f64 / requests as f64 };
     let mut s = format!(
         "[serve] requests: {}, pool hits: {} ({:.1}%), misses: {}, disk plans: {}, \
          tunes: {}, 404s: {}, 400s: {}, evictions: {}, pool: {}/{} B in {} entry(ies), \
          policy: {}, on-miss: {}",
-        p.requests,
-        p.hits,
-        p.hit_pct(),
-        p.misses,
-        stats.disk_loads,
-        stats.tunes,
-        stats.not_found,
-        stats.bad_requests,
-        p.evictions,
-        p.current_bytes,
-        p.capacity_bytes,
-        p.current_entries,
-        stats.policy.cli_name(),
-        stats.on_miss.cli_name(),
+        requests,
+        hits,
+        hit_pct,
+        c("serve_pool_misses_total"),
+        c("serve_disk_plans_total"),
+        c("serve_tunes_total"),
+        c("serve_not_found_total"),
+        c("serve_bad_requests_total"),
+        c("serve_pool_evictions_total"),
+        snap.gauge("serve_pool_bytes"),
+        snap.gauge("serve_pool_capacity_bytes"),
+        snap.gauge("serve_pool_entries"),
+        policy,
+        on_miss,
     );
-    if stats.tune_failures > 0 {
-        s.push_str(&format!(", tune failures: {}", stats.tune_failures));
+    if c("serve_tune_failures_total") > 0 {
+        s.push_str(&format!(", tune failures: {}", c("serve_tune_failures_total")));
     }
-    if stats.single_flight_waits > 0 {
-        s.push_str(&format!(", single-flight waits: {}", stats.single_flight_waits));
+    if c("serve_single_flight_waits_total") > 0 {
+        s.push_str(&format!(", single-flight waits: {}", c("serve_single_flight_waits_total")));
     }
-    if stats.pool.rejected_oversize > 0 {
-        s.push_str(&format!(", oversize rejects: {}", stats.pool.rejected_oversize));
+    if c("serve_pool_oversize_rejects_total") > 0 {
+        s.push_str(&format!(", oversize rejects: {}", c("serve_pool_oversize_rejects_total")));
     }
     s.push('\n');
     s
+}
+
+/// Counter + gauge table for `repro obs report` — the deterministic
+/// half of the registry, in snapshot (lexicographic) order.
+pub fn render_obs_counters(entries: &[(String, u64)]) -> String {
+    let mut t = Table::new(&["metric", "value"]).with_title("Counters");
+    for (name, v) in entries {
+        t.row(vec![name.clone(), v.to_string()]);
+    }
+    t.render()
+}
+
+/// Top-spans table for `repro obs report`: one row per span name,
+/// sorted by total time (the aggregation [`crate::obs::span::aggregate`]
+/// already did).
+pub fn render_span_report(aggs: &[crate::obs::SpanAgg]) -> String {
+    let mut t =
+        Table::new(&["span", "count", "total ms", "mean us", "max us"]).with_title("Top spans");
+    for a in aggs {
+        t.row(vec![
+            a.name.clone(),
+            a.count.to_string(),
+            format!("{:.3}", a.total_us as f64 / 1000.0),
+            a.mean_us().to_string(),
+            a.max_us.to_string(),
+        ]);
+    }
+    t.render()
 }
 
 /// CSV rows for a micro grid (external plotting).

@@ -9,10 +9,21 @@
 //!   serialize→parse→serialize round trip is what makes "served bytes
 //!   == tuner bytes" a checkable contract, and `tests/serve_http.rs`
 //!   checks it);
+//! * `GET /plans?kernels=a,b,c&machine=..&budget=..` — the batched
+//!   variant: one round trip resolves a comma-separated kernel list,
+//!   answering one status line per kernel (`status=ok source=..` or
+//!   `status=error code=..`) — per-kernel failures never fail the batch;
 //! * `GET /counters?…` — the same plan rendered as human-readable
 //!   predicted counters (`key=value` lines);
 //! * `GET /stats` — the live `[serve]` summary line;
-//! * `GET /healthz` — liveness probe.
+//! * `GET /metrics` — Prometheus text exposition of the obs registry
+//!   (serve + result-store counters folded in at scrape time, plus the
+//!   per-endpoint `serve_<endpoint>_request_us` latency histograms
+//!   every request records);
+//! * `GET /healthz` — liveness probe; answers `degraded` (still 200)
+//!   when the result store has dropped to memory-only after repeated
+//!   disk failures, so fleet probes can see the condition without
+//!   declaring the daemon dead.
 //!
 //! Resolution order for a plan request is pool → disk → miss policy:
 //! the bounded [`BufferPool`] first, then a [`PlanCache`] load whose
@@ -323,16 +334,57 @@ impl PlanService {
         Ok(out.plan)
     }
 
-    /// HTTP dispatch: routes, parameter grammar, status mapping.
+    /// HTTP dispatch: routes, parameter grammar, status mapping. Every
+    /// request is counted and spanned, and its latency lands in a
+    /// per-endpoint log2 histogram (`serve_<endpoint>_request_us`).
     pub fn handle(&self, req: &Request) -> Response {
+        let (endpoint, span_name) = match req.path.as_str() {
+            "/plan" => ("plan", "serve /plan"),
+            "/plans" => ("plans", "serve /plans"),
+            "/counters" => ("counters", "serve /counters"),
+            "/stats" => ("stats", "serve /stats"),
+            "/metrics" => ("metrics", "serve /metrics"),
+            "/healthz" => ("healthz", "serve /healthz"),
+            _ => ("other", "serve other"),
+        };
+        // Counted before routing so a /metrics scrape includes itself.
+        crate::obs::global().counter_add("serve_http_requests_total", 1);
+        let _span = crate::obs::span(span_name);
+        let start = std::time::Instant::now();
+        let resp = self.route(req);
+        crate::obs::global()
+            .observe(&format!("serve_{endpoint}_request_us"), start.elapsed().as_micros() as u64);
+        resp
+    }
+
+    fn route(&self, req: &Request) -> Response {
         match req.path.as_str() {
-            "/healthz" => Response::text(200, "ok\n"),
+            "/healthz" => {
+                if self.store.is_degraded() {
+                    Response::text(
+                        200,
+                        "degraded: result store is memory-only (persistent tier disabled)\n",
+                    )
+                } else {
+                    Response::text(200, "ok\n")
+                }
+            }
             "/stats" => {
                 let line = crate::report::figures::render_serve_summary(&self.stats());
                 Response::text(200, format!("{line}\n"))
             }
+            "/metrics" => {
+                let reg = crate::obs::global();
+                crate::obs::fold_exec_stats(reg, &self.store.stats());
+                let snap = crate::obs::fold_serve_stats(reg, &self.stats());
+                Response::text(200, crate::obs::export::prometheus_text(&snap))
+            }
             "/plan" => match self.parse_and_resolve(req) {
                 Ok(served) => Response::bytes(200, served.bytes.as_ref().clone()),
+                Err(e) => self.error_response(e),
+            },
+            "/plans" => match self.batch_plans(req) {
+                Ok(resp) => resp,
                 Err(e) => self.error_response(e),
             },
             "/counters" => match self.parse_and_resolve(req) {
@@ -344,9 +396,51 @@ impl PlanService {
             },
             other => Response::text(
                 404,
-                format!("no route {other:?} (try /plan, /counters, /stats, /healthz)\n"),
+                format!(
+                    "no route {other:?} (try /plan, /plans, /counters, /stats, /metrics, \
+                     /healthz)\n"
+                ),
             ),
         }
+    }
+
+    /// Batched plan resolution: `/plans?kernels=a,b,c&machine=..&budget=..`
+    /// warms a whole universe in one round trip. Shared-parameter errors
+    /// (machine, budget, prefetch, an empty kernel list) are a normal
+    /// 400; per-kernel failures are reported in their own body line and
+    /// never fail the batch.
+    fn batch_plans(&self, req: &Request) -> std::result::Result<Response, ServeError> {
+        let kernels = require_param(req, "kernels")?;
+        let machine = require_param(req, "machine")?;
+        let budget = parse_budget(req)?;
+        let prefetch = parse_prefetch(req)?;
+        let names: Vec<&str> =
+            kernels.split(',').map(str::trim).filter(|k| !k.is_empty()).collect();
+        if names.is_empty() {
+            return Err(ServeError::BadRequest(
+                "kernels must name at least one kernel (comma-separated)".to_string(),
+            ));
+        }
+        let mut body = String::new();
+        for kernel in names {
+            match self.plan_bytes(kernel, machine, budget, prefetch) {
+                Ok(served) => {
+                    let source = format!("{:?}", served.source).to_ascii_lowercase();
+                    body.push_str(&format!(
+                        "kernel={kernel} status=ok source={source} bytes={}\n",
+                        served.bytes.len()
+                    ));
+                }
+                Err(e) => {
+                    let msg = e.message().replace('\n', " ");
+                    body.push_str(&format!(
+                        "kernel={kernel} status=error code={} {msg}\n",
+                        e.status()
+                    ));
+                }
+            }
+        }
+        Ok(Response::text(200, body))
     }
 
     fn error_response(&self, e: ServeError) -> Response {
@@ -359,22 +453,28 @@ impl PlanService {
     fn parse_and_resolve(&self, req: &Request) -> std::result::Result<Served, ServeError> {
         let kernel = require_param(req, "kernel")?;
         let machine = require_param(req, "machine")?;
-        let budget: u64 = require_param(req, "budget")?.parse().map_err(|_| {
-            ServeError::BadRequest(format!(
-                "budget must be a byte count, got {:?}",
-                req.param("budget").unwrap_or_default()
-            ))
-        })?;
-        let prefetch = match req.param("prefetch") {
-            None | Some("on") | Some("true") | Some("1") => true,
-            Some("off") | Some("false") | Some("0") => false,
-            Some(other) => {
-                return Err(ServeError::BadRequest(format!(
-                    "prefetch must be on|off|true|false|1|0, got {other:?}"
-                )))
-            }
-        };
+        let budget = parse_budget(req)?;
+        let prefetch = parse_prefetch(req)?;
         self.plan_bytes(kernel, machine, budget, prefetch)
+    }
+}
+
+fn parse_budget(req: &Request) -> std::result::Result<u64, ServeError> {
+    require_param(req, "budget")?.parse().map_err(|_| {
+        ServeError::BadRequest(format!(
+            "budget must be a byte count, got {:?}",
+            req.param("budget").unwrap_or_default()
+        ))
+    })
+}
+
+fn parse_prefetch(req: &Request) -> std::result::Result<bool, ServeError> {
+    match req.param("prefetch") {
+        None | Some("on") | Some("true") | Some("1") => Ok(true),
+        Some("off") | Some("false") | Some("0") => Ok(false),
+        Some(other) => Err(ServeError::BadRequest(format!(
+            "prefetch must be on|off|true|false|1|0, got {other:?}"
+        ))),
     }
 }
 
@@ -451,5 +551,143 @@ mod tests {
         assert_eq!(ServeError::BadRequest("x".into()).status(), 400);
         assert_eq!(ServeError::NotFound("x".into()).status(), 404);
         assert_eq!(ServeError::Internal("x".into()).status(), 500);
+    }
+
+    fn get(path: &str, query: &[(&str, &str)]) -> Request {
+        Request {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            query: query.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect(),
+            close: false,
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("multistride_svc_{tag}_{}", std::process::id()))
+    }
+
+    fn service(on_miss: MissPolicy, store: ResultStore, dir: &std::path::Path) -> PlanService {
+        PlanService::new(1 << 20, Policy::Lru, on_miss, PlanCache::new(dir.join("plans")), store)
+    }
+
+    fn body(resp: &Response) -> String {
+        String::from_utf8_lossy(&resp.body).into_owned()
+    }
+
+    #[test]
+    fn healthz_is_ok_on_a_healthy_store() {
+        let dir = tmp("healthy");
+        let svc = service(MissPolicy::NotFound, ResultStore::ephemeral(), &dir);
+        let resp = svc.handle(&get("/healthz", &[]));
+        assert_eq!(resp.status, 200);
+        assert_eq!(body(&resp), "ok\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite pin: a store degraded to memory-only by a dead disk
+    /// must surface through `/healthz` as `degraded` — still 200, so a
+    /// liveness probe keeps the daemon up while a fleet probe can grep
+    /// the condition — and through the `store_degraded` gauge.
+    #[test]
+    fn healthz_reports_degraded_store_but_stays_200() {
+        use crate::config::coffee_lake;
+        use crate::exec::vfs::{FaultIo, FaultPlan, RealIo, StoreIo};
+        use crate::exec::SimPoint;
+        use crate::kernels::micro::MicroOp;
+
+        let dir = tmp("degraded");
+        std::fs::remove_dir_all(&dir).ok();
+        let io: Arc<dyn StoreIo> = Arc::new(FaultIo::new(Arc::new(RealIo), FaultPlan::dead_disk()));
+        let store = ResultStore::persistent_with_io(
+            dir.join("results"),
+            crate::exec::segment::DEFAULT_ROLL_BYTES,
+            io,
+        );
+        let mut engines = EngineCache::new();
+        for strides in [1u32, 2, 4, 8] {
+            let p = SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, strides, 1 << 20, true, false);
+            store.get_or_run(&mut engines, &p).expect("a dead disk must not fail simulation");
+        }
+        assert!(store.stats().degraded, "test premise: the store must be degraded");
+
+        let svc = service(MissPolicy::NotFound, store, &dir);
+        let resp = svc.handle(&get("/healthz", &[]));
+        assert_eq!(resp.status, 200, "degraded is a condition, not an outage");
+        assert!(body(&resp).starts_with("degraded"), "got: {}", body(&resp));
+
+        // The same condition is scrapeable as the store_degraded gauge.
+        let metrics = svc.handle(&get("/metrics", &[]));
+        assert_eq!(metrics.status, 200);
+        assert!(body(&metrics).contains("store_degraded 1\n"), "got: {}", body(&metrics));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_exposes_serve_and_exec_counters() {
+        let dir = tmp("metrics");
+        let svc = service(MissPolicy::NotFound, ResultStore::ephemeral(), &dir);
+        svc.handle(&get("/healthz", &[]));
+        let resp = svc.handle(&get("/metrics", &[]));
+        assert_eq!(resp.status, 200);
+        let text = body(&resp);
+        assert!(text.contains("# TYPE serve_pool_requests_total counter"), "got: {text}");
+        assert!(text.contains("\nexec_requests_total "), "got: {text}");
+        assert!(text.contains("# TYPE store_degraded gauge\nstore_degraded 0\n"), "got: {text}");
+        assert!(
+            text.contains("# TYPE serve_healthz_request_us histogram"),
+            "the healthz request before the scrape must have recorded a latency\ngot: {text}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batched_plans_reports_per_kernel_status_without_failing_the_batch() {
+        let dir = tmp("plans404");
+        let svc = service(MissPolicy::NotFound, ResultStore::ephemeral(), &dir);
+        let resp = svc.handle(&get(
+            "/plans",
+            &[
+                ("kernels", "mxv,nosuchkernel"),
+                ("machine", "coffee-lake"),
+                ("budget", "2097152"),
+            ],
+        ));
+        assert_eq!(resp.status, 200, "per-kernel misses never fail the batch: {}", body(&resp));
+        let text = body(&resp);
+        assert!(text.contains("kernel=mxv status=error code=404"), "got: {text}");
+        assert!(text.contains("kernel=nosuchkernel status=error code=404"), "got: {text}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batched_plans_tunes_once_and_serves_the_duplicate_from_the_pool() {
+        let dir = tmp("planstune");
+        std::fs::remove_dir_all(&dir).ok();
+        let svc = service(MissPolicy::Tune, ResultStore::ephemeral(), &dir);
+        let resp = svc.handle(&get(
+            "/plans",
+            &[("kernels", "mxv, mxv"), ("machine", "coffee-lake"), ("budget", "2097152")],
+        ));
+        assert_eq!(resp.status, 200, "got: {}", body(&resp));
+        let text = body(&resp);
+        assert!(text.contains("kernel=mxv status=ok source=tuned"), "got: {text}");
+        assert!(text.contains("kernel=mxv status=ok source=pool"), "got: {text}");
+        assert_eq!(svc.stats().tunes, 1, "the duplicate must not re-tune");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn batched_plans_shared_parameter_errors_are_a_400() {
+        let dir = tmp("plansbad");
+        let svc = service(MissPolicy::NotFound, ResultStore::ephemeral(), &dir);
+        for query in [
+            &[("machine", "coffee-lake"), ("budget", "1048576")][..],
+            &[("kernels", " , "), ("machine", "coffee-lake"), ("budget", "1048576")],
+            &[("kernels", "mxv"), ("machine", "coffee-lake"), ("budget", "lots")],
+        ] {
+            let resp = svc.handle(&get("/plans", query));
+            assert_eq!(resp.status, 400, "{query:?} got: {}", body(&resp));
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -92,6 +92,11 @@ impl EngineConfig {
 }
 
 /// Result of one simulated run.
+///
+/// This is also the observability boundary: the engine aggregates its
+/// counters here with plain `u64`s, and `crate::obs::fold_run_result`
+/// folds the finished struct into the metrics registry once per run —
+/// the per-access hot path never sees an atomic or a lock.
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub counters: Counters,

@@ -183,6 +183,7 @@ pub fn search_on(
     let survivors: Vec<StridingConfig> = if live.len() == 1 {
         live.clone()
     } else {
+        let _rung_span = crate::obs::span("tuner_probe_rung");
         let mut scored: Vec<(StridingConfig, Option<f64>, u64)> = Vec::new();
         for &cfg in &live {
             match cost::evaluate_on(store, engines, machine, kernel, probe, cfg, prefetch) {
@@ -255,19 +256,22 @@ pub fn search_on(
     // Full-budget rung.
     let mut full_runs = 0u32;
     let mut finals: Vec<(StridingConfig, cost::CostSample)> = Vec::new();
-    for &cfg in &survivors {
-        let s = cost::evaluate_on(store, engines, machine, kernel, budget, cfg, prefetch)?;
-        full_runs += 1;
-        sim_accesses += s.sim_accesses;
-        steps.push(SearchStep {
-            config: cfg,
-            rung: 1,
-            budget,
-            score_gib: Some(s.throughput_gib),
-            sim_accesses: s.sim_accesses,
-            verdict: Verdict::Advanced,
-        });
-        finals.push((cfg, s));
+    {
+        let _rung_span = crate::obs::span("tuner_full_rung");
+        for &cfg in &survivors {
+            let s = cost::evaluate_on(store, engines, machine, kernel, budget, cfg, prefetch)?;
+            full_runs += 1;
+            sim_accesses += s.sim_accesses;
+            steps.push(SearchStep {
+                config: cfg,
+                rung: 1,
+                budget,
+                score_gib: Some(s.throughput_gib),
+                sim_accesses: s.sim_accesses,
+                verdict: Verdict::Advanced,
+            });
+            finals.push((cfg, s));
+        }
     }
     // Same tie-breaking as experiments::best_point: max_by keeps the last
     // maximal element in family order.
@@ -319,6 +323,21 @@ pub fn search_on(
         full_runs,
         search_sim_accesses: sim_accesses,
     };
+    crate::obs::global().with(|v| {
+        v.counter_add("tuner_searches_total", 1);
+        v.counter_add("tuner_steps_total", steps.len() as u64);
+        v.counter_add("tuner_probe_runs_total", u64::from(probe_runs));
+        v.counter_add("tuner_full_runs_total", u64::from(full_runs));
+        v.counter_add(
+            "tuner_pruned_total",
+            steps.iter().filter(|s| matches!(s.verdict, Verdict::Pruned { .. })).count() as u64,
+        );
+        v.counter_add(
+            "tuner_infeasible_total",
+            steps.iter().filter(|s| matches!(s.verdict, Verdict::Infeasible)).count() as u64,
+        );
+        v.counter_add("tuner_search_accesses_total", sim_accesses);
+    });
     Ok(SearchOutcome { plan, steps })
 }
 

@@ -310,6 +310,87 @@ fn merge_quarantines_conflicts_and_keeps_the_destination_copy() {
     std::fs::remove_dir_all(&base).ok();
 }
 
+/// Wall 4 — the telemetry wall: `--trace` exports go through the same
+/// `StoreIo` seam, so the fault injector covers them too. A faulted
+/// trace write may fail, but it never panics, never corrupts a result
+/// store sharing the directory, and never loses the span buffer — the
+/// export snapshots rather than drains, so a clean retry always lands
+/// a parseable trace.
+#[test]
+fn trace_wall_faulted_exports_fail_clean_and_never_touch_results() {
+    use multistride::obs;
+    use multistride::obs::trace::{parse_chrome_trace, write_chrome_trace_with};
+
+    let base = tmp("trace_wall");
+    std::fs::remove_dir_all(&base).ok();
+
+    // A store populated on clean I/O shares the directory tree with the
+    // trace artifacts; no schedule may disturb it.
+    let mut rng = Rng::new(0x7ACE);
+    let records = synth_records(&mut rng, 6);
+    let store_dir = base.join("results");
+    let mut st = SegmentStore::open_with(&store_dir, ROLL, Arc::new(RealIo));
+    for (k, r) in &records {
+        st.append_result(*k, 1, r).expect("clean populate");
+    }
+    st.flush_index().expect("clean flush");
+    drop(st);
+
+    // At least one span is in the buffer regardless of test ordering.
+    {
+        let _probe = obs::span("obs_chaos_probe");
+    }
+
+    let n = schedules(100);
+    for seed in 0..n {
+        let trace = base.join(format!("trace-{seed}.json"));
+        let io: Arc<dyn StoreIo> = Arc::new(FaultIo::seeded(0x7AC3 ^ seed));
+        match write_chrome_trace_with(&io, &trace) {
+            Ok(written) => {
+                assert!(written > 0, "seed {seed}: the probe span must be in the snapshot");
+                let body = std::fs::read_to_string(&trace)
+                    .unwrap_or_else(|e| panic!("seed {seed}: Ok write must be readable: {e}"));
+                let events = parse_chrome_trace(&body)
+                    .unwrap_or_else(|e| panic!("seed {seed}: Ok write must parse: {e:#}"));
+                assert!(
+                    events.len() >= written,
+                    "seed {seed}: {} event(s) for {written} span(s) written",
+                    events.len()
+                );
+            }
+            Err(_) => {
+                // A failed export loses nothing: the buffer still holds
+                // the spans and a clean retry writes a parseable trace.
+                assert!(
+                    obs::span::snapshot().iter().any(|s| s.name == "obs_chaos_probe"),
+                    "seed {seed}: a failed write must not drain the span buffer"
+                );
+                let retry: Arc<dyn StoreIo> = Arc::new(RealIo);
+                let written = write_chrome_trace_with(&retry, &trace)
+                    .unwrap_or_else(|e| panic!("seed {seed}: clean retry must land: {e:#}"));
+                assert!(written > 0, "seed {seed}: retry wrote an empty trace");
+            }
+        }
+        std::fs::remove_file(&trace).ok();
+    }
+
+    // Telemetry never bleeds into results: every record still serves
+    // bit-exact on clean I/O.
+    let mut check = SegmentStore::open_with(&store_dir, ROLL, Arc::new(RealIo));
+    for (k, r) in &records {
+        let got = check
+            .lookup_result(*k)
+            .unwrap_or_else(|| panic!("{k:016x} missing after the trace wall"))
+            .expect("record reads clean");
+        assert_eq!(
+            serialize_result(*k, &got),
+            serialize_result(*k, r),
+            "trace writes disturbed stored result {k:016x}"
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
 /// The flagship grid invariant: a plan run as two disjoint shards on
 /// separate stores, then merged, is bit-identical to the same plan run
 /// on a single host — and the planner serves the merged store with zero

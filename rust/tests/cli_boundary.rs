@@ -137,6 +137,7 @@ fn missing_flag_values_exit_two_without_panicking() {
         "--plans",
         "--results",
         "--shard",
+        "--trace",
     ];
     for flag in VALUE_FLAGS {
         let out = repro(&["all", flag]);
@@ -180,6 +181,7 @@ fn usage_text_lists_every_store_subcommand_and_command() {
     for cmd in [
         "table1", "table2", "figure2", "figure3", "figure4", "figure5", "figure6", "figure7",
         "sweep", "universe", "tune", "native", "validate", "run", "all", "grid", "store", "serve",
+        "obs",
     ] {
         assert!(usage.contains(cmd), "command {cmd:?} missing from usage:\n{usage}");
     }
@@ -202,6 +204,44 @@ fn serve_cli_grammar_errors_exit_two() {
     // --cold + --results stays mutually exclusive through the serve path.
     let out = repro(&["serve", "--cold", "--results", "r", "--max-requests", "1"]);
     assert_eq!(code(&out), 2, "got: {}", stderr(&out));
+}
+
+/// `repro obs` follows the same 2-for-grammar / 1-for-trouble split as
+/// the store surface, and a real `--trace` run produces a report the
+/// command can render.
+#[test]
+fn obs_cli_grammar_and_report_round_trip() {
+    assert_eq!(code(&repro(&["obs"])), 2, "missing subcommand");
+    assert_eq!(code(&repro(&["obs", "frobnicate"])), 2, "unknown subcommand");
+    let no_trace = repro(&["obs", "report"]);
+    assert_eq!(code(&no_trace), 2, "report without --trace is malformed");
+    assert!(stderr(&no_trace).contains("--trace"), "got: {}", stderr(&no_trace));
+
+    let gone = repro(&["obs", "report", "--trace", "/nonexistent/trace.json"]);
+    assert_eq!(code(&gone), 1, "an unreadable trace file is real trouble, not a grammar error");
+    assert!(!stderr(&gone).contains("panicked"), "got: {}", stderr(&gone));
+
+    // End to end: a traced smoke run writes both artifacts, and the
+    // report renders spans plus the deterministic counter table.
+    let dir = tmp("obs");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.json");
+    let traces = trace.to_str().unwrap();
+    let run = repro(&["figure2", "--smoke", "--cold", "--trace", traces]);
+    assert_eq!(code(&run), 0, "traced smoke run must stay green\n{}", stderr(&run));
+    assert!(stdout(&run).contains("[obs] trace:"), "got: {}", stdout(&run));
+    assert!(trace.is_file(), "trace file must exist");
+    assert!(dir.join("trace.counters.json").is_file(), "counter sibling must exist");
+
+    let report = repro(&["obs", "report", "--trace", traces]);
+    assert_eq!(code(&report), 0, "got: {}", stderr(&report));
+    let text = stdout(&report);
+    assert!(text.contains("Top spans"), "got: {text}");
+    assert!(text.contains("engine_run"), "got: {text}");
+    assert!(text.contains("Counters"), "got: {text}");
+    assert!(text.contains("sim_accesses_total"), "got: {text}");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -1,0 +1,190 @@
+//! Integration pins for the observability layer (`multistride::obs`):
+//!
+//! * the `--trace` counter snapshot is **deterministic** — two identical
+//!   cold runs fold to byte-identical JSON;
+//! * the `[exec]` / `[serve]` summary lines render from the metrics
+//!   registry, so a counter renamed or dropped from the fold breaks
+//!   these tests before it silently drifts from `GET /metrics`;
+//! * `write_trace_artifacts` produces a trace the dependency-free
+//!   parser (and Perfetto) can load, plus the counter sibling.
+//!
+//! Exact-value assertions use private [`Registry`] instances: the test
+//! binary is multi-threaded and the global registry is shared.
+
+use std::path::PathBuf;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::EngineCache;
+use multistride::exec::{simulate, ExecStats, SimPoint};
+use multistride::kernels::micro::MicroOp;
+use multistride::obs::export::{json_snapshot, parse_json_snapshot};
+use multistride::obs::trace::parse_chrome_trace;
+use multistride::obs::{self, Registry};
+use multistride::report::figures;
+use multistride::serve::{MissPolicy, Policy, ServeStats};
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("multistride_obs_{tag}_{}", std::process::id()))
+}
+
+fn point(strides: u32) -> SimPoint {
+    SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, strides, 1 << 20, true, false)
+}
+
+/// Satellite 4: the counter snapshot from two identical cold runs is
+/// byte-identical. The simulator is deterministic and the snapshot
+/// excludes every timing source, so nothing wall-clock can leak in.
+#[test]
+fn identical_cold_runs_fold_to_byte_identical_snapshots() {
+    let run = || {
+        let reg = Registry::new();
+        let mut engines = EngineCache::new();
+        for strides in [1u32, 2, 4] {
+            let r = simulate(&mut engines, &point(strides)).expect("micro point simulates");
+            obs::fold_run_result_into(&reg, &r);
+        }
+        json_snapshot(&reg.snapshot())
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "counter snapshots must be byte-identical across reruns");
+    assert!(first.contains("\"sim_accesses_total\""), "got: {first}");
+    assert!(first.contains("\"sim_engine_runs_total\": 3"), "got: {first}");
+    // And the snapshot survives its own line grammar.
+    let entries = parse_json_snapshot(&first).expect("snapshot parses");
+    assert!(entries.iter().any(|(n, v)| n == "sim_engine_runs_total" && *v == 3));
+}
+
+/// Satellite 2 anti-drift: the `[exec]` line is rendered from the
+/// registry fold, and every ExecStats field surfaces under its label.
+/// Distinct prime-ish values make a swapped pair impossible to miss.
+#[test]
+fn exec_summary_renders_every_folded_field() {
+    let stats = ExecStats {
+        requests: 101,
+        mem_hits: 31,
+        disk_hits: 17,
+        legacy_hits: 7,
+        misses: 53,
+        deduped: 11,
+        engine_runs: 47,
+        disk_writes: 43,
+        corrupt_discards: 5,
+        verified_hits: 3,
+        disk_errors: 13,
+        dropped_unsimulatable: 2,
+        degraded: true,
+    };
+    let reg = Registry::new();
+    let snap = obs::fold_exec_stats(&reg, &stats);
+    let line = figures::render_exec_summary_from(&snap, None);
+    assert!(line.starts_with("[exec] "), "got: {line}");
+    assert!(line.contains("sim points: 101 requests"), "got: {line}");
+    assert!(line.contains("engine runs: 47"), "got: {line}");
+    assert!(line.contains("store hits: 48 (mem 31 / disk 17)"), "got: {line}");
+    assert!(line.contains("deduped: 11"), "got: {line}");
+    assert!(line.contains("written: 43"), "got: {line}");
+    assert!(line.contains("legacy-shard hits: 7"), "got: {line}");
+    assert!(line.contains("corrupt discards: 5"), "got: {line}");
+    assert!(line.contains("disk errors: 13"), "got: {line}");
+    assert!(line.contains("unsimulatable hits dropped: 2"), "got: {line}");
+    assert!(line.contains("debug-verified hits: 3"), "got: {line}");
+    assert!(line.contains("PERSISTENT TIER DISABLED"), "got: {line}");
+    assert!(line.contains("results dir: (none"), "got: {line}");
+    assert!(line.ends_with('\n'), "the summary is a complete greppable line");
+}
+
+/// Same pin for the `[serve]` line — CI's serve-smoke job greps `pool
+/// hits:` and `tunes:` out of it, so the registry-rendered form must
+/// keep every figure.
+#[test]
+fn serve_summary_renders_every_folded_field() {
+    let stats = ServeStats {
+        pool: multistride::serve::PoolStats {
+            requests: 200,
+            hits: 150,
+            misses: 50,
+            insertions: 23,
+            evictions: 19,
+            rejected_oversize: 3,
+            current_bytes: 4096,
+            current_entries: 29,
+            capacity_bytes: 65536,
+        },
+        policy: Policy::Sieve,
+        on_miss: MissPolicy::Tune,
+        disk_loads: 37,
+        tunes: 41,
+        tune_failures: 2,
+        single_flight_waits: 5,
+        not_found: 59,
+        bad_requests: 61,
+    };
+    let reg = Registry::new();
+    let snap = obs::fold_serve_stats(&reg, &stats);
+    let line =
+        figures::render_serve_summary_from(&snap, stats.policy.cli_name(), stats.on_miss.cli_name());
+    assert!(line.starts_with("[serve] "), "got: {line}");
+    assert!(line.contains("requests: 200"), "got: {line}");
+    assert!(line.contains("pool hits: 150 (75.0%)"), "got: {line}");
+    assert!(line.contains("misses: 50"), "got: {line}");
+    assert!(line.contains("disk plans: 37"), "got: {line}");
+    assert!(line.contains("tunes: 41"), "got: {line}");
+    assert!(line.contains("404s: 59"), "got: {line}");
+    assert!(line.contains("400s: 61"), "got: {line}");
+    assert!(line.contains("evictions: 19"), "got: {line}");
+    assert!(line.contains("pool: 4096/65536 B in 29 entry(ies)"), "got: {line}");
+    assert!(line.contains("policy: sieve"), "got: {line}");
+    assert!(line.contains("on-miss: tune"), "got: {line}");
+    assert!(line.contains("tune failures: 2"), "got: {line}");
+    assert!(line.contains("single-flight waits: 5"), "got: {line}");
+    assert!(line.contains("oversize rejects: 3"), "got: {line}");
+}
+
+/// End to end through the library surface `main` uses: record spans,
+/// write both artifacts, and read them back with the same parsers
+/// `repro obs report` runs.
+#[test]
+fn trace_artifacts_round_trip_through_the_report_parsers() {
+    let dir = tmp("artifacts");
+    std::fs::remove_dir_all(&dir).ok();
+    {
+        let _outer = obs::span("obs_test_outer");
+        let _inner = obs::span("obs_test_inner");
+    }
+    // The snapshot parser refuses an empty file, and nothing else in
+    // this test binary folds into the global registry.
+    obs::global().counter_add("obs_test_probe_total", 1);
+    let trace = dir.join("run.json");
+    let arts = obs::write_trace_artifacts(&trace).expect("artifacts write");
+    assert_eq!(arts.trace, trace);
+    assert_eq!(arts.counters, dir.join("run.counters.json"));
+    assert!(arts.spans >= 2, "both guards must have recorded, got {}", arts.spans);
+
+    let body = std::fs::read_to_string(&trace).unwrap();
+    let events = parse_chrome_trace(&body).expect("trace parses");
+    assert_eq!(events.len(), arts.spans, "one event per recorded span");
+    for name in ["obs_test_outer", "obs_test_inner"] {
+        assert!(events.iter().any(|e| e.name == name), "{name} missing from trace");
+    }
+
+    let counters = std::fs::read_to_string(&arts.counters).unwrap();
+    let entries = parse_json_snapshot(&counters).expect("counter snapshot parses");
+    assert!(!entries.is_empty(), "global registry has folded at least span bookkeeping");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The span aggregation `repro obs report` renders: totals roll up by
+/// name and sort by total time descending.
+#[test]
+fn span_aggregation_feeds_the_report_table() {
+    let aggs = obs::span::aggregate([("merge", 50u64), ("shard", 400), ("merge", 150), ("probe", 9)]);
+    let table = figures::render_span_report(&aggs);
+    assert!(table.contains("Top spans"), "got: {table}");
+    let shard = table.find("shard").unwrap();
+    let merge = table.find("merge").unwrap();
+    let probe = table.find("probe").unwrap();
+    assert!(shard < merge && merge < probe, "rows sort by total time desc:\n{table}");
+    assert!(table.contains("0.400"), "shard total ms, got: {table}");
+    assert!(table.contains("100"), "merge mean us, got: {table}");
+}
