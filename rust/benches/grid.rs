@@ -1,0 +1,232 @@
+//! Bench harness — dynamic work distribution at both scales:
+//!
+//! 1. **Local imbalance** — a front-loaded skewed job mix through the
+//!    static chunked baseline (`parallel_map_with_static`) vs the
+//!    work-stealing pool (`parallel_map_with`) at 4 workers. Static
+//!    chunking idles three workers behind the heavy chunk; stealing
+//!    spreads it. The PR gate wants `local_dynamic_speedup_x100 >= 150`.
+//! 2. **Fleet scaling** — one coordinator draining the same micro plan
+//!    with 1, 2 and 4 connected workers (each single-threaded, so the
+//!    curve measures the fleet, not the inner pool). Points/s per
+//!    width, plus `fleet_scaling_2w_x100` / `fleet_scaling_4w_x100`.
+//! 3. **Lease-reassignment overhead** — a 2-worker drain where one
+//!    worker abandons its first batch mid-run vs a clean 2-worker
+//!    drain: `lease_reassign_overhead_pct` is the wall-clock cost of
+//!    losing a worker.
+//!
+//! Knobs (environment):
+//! * `MULTISTRIDE_GRID_SPIN` — iterations per heavy local job
+//!   (default 2,000,000; the light jobs run 1/16th of it).
+//! * `MULTISTRIDE_GRID_POINTS` — fleet plan size (default 8).
+//! * `MULTISTRIDE_BENCH_SMOKE` — shrink both for CI.
+//! * `MULTISTRIDE_BENCH_JSON` — output path (default `BENCH_grid.json`).
+
+mod common;
+
+use std::time::Instant;
+
+use common::{env_u64, stage, write_bench_json, JsonScenario};
+use multistride::config::coffee_lake;
+use multistride::coordinator::{parallel_map_with, parallel_map_with_static};
+use multistride::exec::{ResultStore, SimPoint};
+use multistride::grid::{run_worker, Coordinator, CoordinatorConfig, FleetReport, WorkerConfig};
+use multistride::kernels::micro::MicroOp;
+
+const POOL_WORKERS: usize = 4;
+const LOCAL_REPS: usize = 3;
+
+/// Deterministic spin work: `iters` FNV-style rounds the optimizer
+/// cannot fold away.
+fn spin(iters: u64) -> u64 {
+    let mut acc = 0x9E37_79B9_7F4A_7C15u64;
+    for i in 0..iters {
+        acc = acc.wrapping_mul(0x1000_0000_1B3).wrapping_add(i);
+        std::hint::black_box(acc);
+    }
+    acc
+}
+
+/// The skewed mix: the first quarter of the jobs carry 16× the work,
+/// and static chunking hands that whole quarter to worker 0.
+fn skewed_jobs(heavy: u64, n: usize) -> Vec<u64> {
+    (0..n).map(|i| if i < n / 4 { heavy } else { heavy / 16 }).collect()
+}
+
+/// The fleet plan: micro points with distinct stride counts (and a
+/// second working-set size once strides wrap), so every key is unique.
+fn fleet_plan(n: usize) -> Vec<SimPoint> {
+    (0..n)
+        .map(|i| {
+            let strides = 1 + (i % 8) as u32;
+            let bytes = (1u64 << 21) << (i / 8);
+            SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, strides, bytes, true, false)
+        })
+        .collect()
+}
+
+/// Drain `points` once with `k` healthy workers (plus, optionally, one
+/// that abandons its first batch). Returns wall-clock seconds and the
+/// coordinator's report.
+fn fleet_drain(points: &[SimPoint], k: usize, with_crasher: bool) -> (f64, FleetReport) {
+    let coord = Coordinator::bind(0).expect("bind port 0");
+    let port = coord.port();
+    let store = ResultStore::ephemeral();
+    let cfg = CoordinatorConfig { lease_ms: 120_000, batch: 2 };
+    let wcfg = WorkerConfig { batch: 2, local_workers: 1, max_batches: None, abandon_after: None };
+    let t = Instant::now();
+    let report = std::thread::scope(|scope| {
+        let drain = scope.spawn(|| coord.run(&store, points, &cfg));
+        if with_crasher {
+            let crasher = scope.spawn(move || {
+                let local = ResultStore::ephemeral();
+                let cfg = WorkerConfig { abandon_after: Some(1), ..wcfg };
+                run_worker("127.0.0.1", port, &local, points, &cfg)
+            });
+            let crashed = crasher.join().expect("crasher thread").expect("scripted crash");
+            assert!(crashed.abandoned);
+        }
+        let workers: Vec<_> = (0..k)
+            .map(|_| {
+                scope.spawn(move || {
+                    let local = ResultStore::ephemeral();
+                    run_worker("127.0.0.1", port, &local, points, &wcfg)
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("worker thread").expect("worker run");
+        }
+        drain.join().expect("coordinator thread").expect("fleet drain")
+    });
+    let secs = t.elapsed().as_secs_f64();
+    assert_eq!(report.results + report.already_present as u64, points.len() as u64);
+    (secs, report)
+}
+
+fn main() {
+    let smoke = std::env::var("MULTISTRIDE_BENCH_SMOKE").is_ok();
+    let heavy = env_u64("MULTISTRIDE_GRID_SPIN", if smoke { 200_000 } else { 2_000_000 });
+    let plan_n = env_u64("MULTISTRIDE_GRID_POINTS", if smoke { 4 } else { 8 }) as usize;
+    let mut results = Vec::new();
+
+    // ---------------------------------------------------------------
+    // 1. Local imbalance: static chunking vs work stealing.
+    // ---------------------------------------------------------------
+    let jobs = skewed_jobs(heavy, 16 * POOL_WORKERS);
+    let total_jobs = (jobs.len() * LOCAL_REPS) as u64;
+    let (static_out, static_secs) = stage("local static, skewed mix", || {
+        let t = Instant::now();
+        let mut out = Vec::new();
+        for _ in 0..LOCAL_REPS {
+            out = parallel_map_with_static(jobs.clone(), POOL_WORKERS, || (), |_, &j| spin(j));
+        }
+        (out, t.elapsed().as_secs_f64())
+    });
+    let (dynamic_out, dynamic_secs) = stage("local dynamic, skewed mix", || {
+        let t = Instant::now();
+        let mut out = Vec::new();
+        for _ in 0..LOCAL_REPS {
+            out = parallel_map_with(jobs.clone(), POOL_WORKERS, || (), |_, &j| spin(j));
+        }
+        (out, t.elapsed().as_secs_f64())
+    });
+    assert_eq!(static_out, dynamic_out, "distribution must never change results");
+    let speedup = static_secs / dynamic_secs;
+    println!(
+        "{:>42}: {:.2}x over static ({static_secs:.3} s -> {dynamic_secs:.3} s, \
+         {} jobs x {LOCAL_REPS} reps, {POOL_WORKERS} workers)",
+        "work stealing on the skewed mix",
+        jobs.len(),
+    );
+    if speedup < 1.5 {
+        println!("[bench] WARNING: dynamic speedup {speedup:.2}x below the 1.5x gate");
+    }
+    results.push(JsonScenario {
+        label: "local static, skewed mix".into(),
+        unit: "jobs",
+        count: total_jobs,
+        seconds: static_secs,
+    });
+    results.push(JsonScenario {
+        label: "local dynamic, skewed mix".into(),
+        unit: "jobs",
+        count: total_jobs,
+        seconds: dynamic_secs,
+    });
+
+    // ---------------------------------------------------------------
+    // 2. Fleet scaling: the same plan at 1, 2 and 4 workers.
+    // ---------------------------------------------------------------
+    let points = fleet_plan(plan_n);
+    // One unrecorded warmup drain so allocator and page-cache effects
+    // land outside the measured runs.
+    stage("fleet warmup", || fleet_drain(&points, 1, false));
+    let mut per_width = Vec::new();
+    for k in [1usize, 2, 4] {
+        let (secs, report) = stage(&format!("fleet drain, {k} worker(s)"), || {
+            fleet_drain(&points, k, false)
+        });
+        assert_eq!(report.workers, k as u64);
+        println!(
+            "{:>42}: {:>8.2} points/s ({} points, {secs:.3} s)",
+            format!("fleet drain, {k} worker(s)"),
+            points.len() as f64 / secs,
+            points.len(),
+        );
+        results.push(JsonScenario {
+            label: format!("fleet drain, {k} worker(s)"),
+            unit: "points",
+            count: points.len() as u64,
+            seconds: secs,
+        });
+        per_width.push((k, secs));
+    }
+    let secs_at = |k: usize| per_width.iter().find(|(w, _)| *w == k).map(|(_, s)| *s).unwrap();
+    let scale2 = secs_at(1) / secs_at(2);
+    let scale4 = secs_at(1) / secs_at(4);
+    println!(
+        "{:>42}: 2w {scale2:.2}x, 4w {scale4:.2}x",
+        "fleet scaling vs a single worker"
+    );
+    if scale2 < 1.7 {
+        println!("[bench] WARNING: 2-worker fleet scaling {scale2:.2}x below the 1.7x gate");
+    }
+
+    // ---------------------------------------------------------------
+    // 3. Lease-reassignment overhead: lose one worker mid-run.
+    // ---------------------------------------------------------------
+    let clean_secs = secs_at(2);
+    let (chaos_secs, chaos_report) = stage("fleet drain, 2 workers, one abandons", || {
+        fleet_drain(&points, 2, true)
+    });
+    assert!(
+        chaos_report.reassigned >= 1,
+        "the abandoned batch must be re-leased: {chaos_report:?}"
+    );
+    let overhead_pct = (chaos_secs / clean_secs - 1.0) * 100.0;
+    println!(
+        "{:>42}: {overhead_pct:+.1}% wall-clock vs clean ({} re-lease(s))",
+        "lease reassignment after a worker loss",
+        chaos_report.reassigned,
+    );
+    results.push(JsonScenario {
+        label: "fleet drain, 2 workers, one abandons".into(),
+        unit: "points",
+        count: points.len() as u64,
+        seconds: chaos_secs,
+    });
+
+    let extra: Vec<(&str, u64)> = vec![
+        ("pool_workers", POOL_WORKERS as u64),
+        ("heavy_spin_iters", heavy),
+        ("plan_points", points.len() as u64),
+        ("local_dynamic_speedup_x100", (speedup * 100.0).round() as u64),
+        ("fleet_scaling_2w_x100", (scale2 * 100.0).round() as u64),
+        ("fleet_scaling_4w_x100", (scale4 * 100.0).round() as u64),
+        ("lease_reassign_overhead_pct", overhead_pct.max(0.0).round() as u64),
+        ("chaos_reassignments", chaos_report.reassigned),
+    ];
+    let json_path =
+        std::env::var("MULTISTRIDE_BENCH_JSON").unwrap_or_else(|_| "BENCH_grid.json".to_string());
+    write_bench_json(&json_path, "grid", &extra, &results);
+}

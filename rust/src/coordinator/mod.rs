@@ -14,4 +14,4 @@ pub mod experiments;
 pub mod pool;
 
 pub use experiments::*;
-pub use pool::{parallel_map, parallel_map_with};
+pub use pool::{parallel_map, parallel_map_with, parallel_map_with_static};

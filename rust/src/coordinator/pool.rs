@@ -2,8 +2,31 @@
 //! parallel map over independent jobs, with optional per-worker state so
 //! sweeps can reuse expensive resources (a warm [`crate::sim::Engine`])
 //! across the jobs one worker processes.
+//!
+//! Work distribution is dynamic: every worker owns a contiguous index
+//! range and drains it front-to-back; a worker whose range empties
+//! steals the upper half of the largest remaining range. Simulation
+//! cost per point is wildly uneven (a 3-deep kernel nest costs orders
+//! of magnitude more than a short micro run), which is exactly the
+//! shape where static chunking leaves a fleet idling behind its
+//! slowest chunk. Jobs here are coarse — whole engine runs — so the
+//! per-claim mutex is noise next to the work it hands out.
+//!
+//! The pre-stealing distribution survives as
+//! [`parallel_map_with_static`]: the reference the imbalance bench
+//! (`benches/grid.rs`) and the differential tests below compare
+//! against. Both paths keep the same contract: output in input order,
+//! one `init()` state per worker, worker panics propagate.
+//!
+//! Straggler accounting folds into the metrics registry once per pool
+//! run (never per job): `pool_jobs_claimed_total`, `pool_steals_total`,
+//! and the per-worker busy-time histogram `pool_worker_busy_us`. Steal
+//! counts depend on thread scheduling, so `pool_steals_total` is on the
+//! [`crate::obs::export::SCHEDULING_COUNTERS`] list — exported to
+//! Prometheus, excluded from the deterministic JSON snapshot.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
 
 /// Number of workers to use: `MULTISTRIDE_THREADS` env var, else the
 /// available parallelism, else 4.
@@ -27,13 +50,187 @@ where
     parallel_map_with(jobs, workers, || (), |_state, j| f(j))
 }
 
+/// What one pool run did, folded into the registry at pool exit.
+struct PoolTally {
+    claimed: u64,
+    steals: u64,
+    /// One busy-time observation per worker, in microseconds.
+    busy_us: Vec<u64>,
+}
+
+impl PoolTally {
+    fn fold(&self) {
+        crate::obs::global().with(|v| {
+            v.counter_add("pool_jobs_claimed_total", self.claimed);
+            v.counter_add("pool_steals_total", self.steals);
+            for &us in &self.busy_us {
+                v.observe("pool_worker_busy_us", us);
+            }
+        });
+    }
+}
+
 /// [`parallel_map`] with per-worker state: every worker thread builds one
-/// `S` via `init` and threads it through all jobs it claims (dynamic
-/// work-stealing via an atomic cursor, so load stays balanced).
+/// `S` via `init` and threads it through all jobs it claims.
 ///
 /// Results are collected into per-worker chunk buffers and stitched back
-/// into input order at the end — no per-job locking on the hot path.
+/// into input order at the end — no per-job locking on the result path.
 pub fn parallel_map_with<S, J, R, I, F>(jobs: Vec<J>, workers: usize, init: I, f: F) -> Vec<R>
+where
+    J: Send + Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &J) -> R + Sync,
+{
+    let (out, tally) = run_dynamic(&jobs, workers, &init, &f);
+    tally.fold();
+    out
+}
+
+/// The dynamic work-stealing core, returning results plus the tally so
+/// tests can assert scheduling behaviour without the global registry.
+fn run_dynamic<S, J, R, I, F>(jobs: &[J], workers: usize, init: &I, f: &F) -> (Vec<R>, PoolTally)
+where
+    J: Send + Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &J) -> R + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return (Vec::new(), PoolTally { claimed: 0, steals: 0, busy_us: Vec::new() });
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        let start = Instant::now();
+        let mut state = init();
+        let out: Vec<R> = jobs
+            .iter()
+            .map(|j| {
+                let _span = crate::obs::span("pool_task");
+                f(&mut state, j)
+            })
+            .collect();
+        let tally = PoolTally {
+            claimed: n as u64,
+            steals: 0,
+            busy_us: vec![start.elapsed().as_micros() as u64],
+        };
+        return (out, tally);
+    }
+
+    // Every job index lives in exactly one `[lo, hi)` range at any
+    // moment (or is claimed and in flight), so a worker that scans all
+    // ranges empty can exit: whatever remains is being run by someone.
+    let ranges: Vec<Mutex<(usize, usize)>> = (0..workers)
+        .map(|w| Mutex::new((w * n / workers, (w + 1) * n / workers)))
+        .collect();
+    let ranges_ref = &ranges;
+
+    // Each worker returns its own (index, result) chunk; joining inside the
+    // scope propagates panics.
+    let per_worker: Vec<(Vec<(usize, R)>, u64, u64, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let start = Instant::now();
+                    let mut state = init();
+                    let mut local = Vec::with_capacity(n / workers + 1);
+                    let mut claimed = 0u64;
+                    let mut steals = 0u64;
+                    loop {
+                        let i = {
+                            let mut own = ranges_ref[w].lock().expect("pool range lock");
+                            if own.0 < own.1 {
+                                let i = own.0;
+                                own.0 += 1;
+                                Some(i)
+                            } else {
+                                None
+                            }
+                        };
+                        let i = match i {
+                            Some(i) => i,
+                            None => match steal(ranges_ref, w) {
+                                Some(range) => {
+                                    steals += 1;
+                                    *ranges_ref[w].lock().expect("pool range lock") = range;
+                                    continue;
+                                }
+                                None => break,
+                            },
+                        };
+                        claimed += 1;
+                        let r = {
+                            let _span = crate::obs::span("pool_task");
+                            f(&mut state, &jobs[i])
+                        };
+                        local.push((i, r));
+                    }
+                    (local, claimed, steals, start.elapsed().as_micros() as u64)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let mut tally = PoolTally { claimed: 0, steals: 0, busy_us: Vec::with_capacity(workers) };
+    let mut indexed: Vec<(usize, R)> = Vec::with_capacity(n);
+    for (chunk, claimed, steals, busy_us) in per_worker {
+        tally.claimed += claimed;
+        tally.steals += steals;
+        tally.busy_us.push(busy_us);
+        indexed.extend(chunk);
+    }
+    debug_assert_eq!(indexed.len(), n, "every job produced exactly one result");
+    indexed.sort_unstable_by_key(|&(i, _)| i);
+    (indexed.into_iter().map(|(_, r)| r).collect(), tally)
+}
+
+/// Take the upper half of the largest remaining range owned by any
+/// worker other than `thief`. Locks are taken one at a time — never two
+/// together — so thieves cannot deadlock; a victim observed with work
+/// may have drained by the time it is re-locked, in which case the
+/// scan repeats. `None` means every other range was empty, i.e. all
+/// unclaimed work is already in flight.
+fn steal(ranges: &[Mutex<(usize, usize)>], thief: usize) -> Option<(usize, usize)> {
+    loop {
+        let mut best: Option<(usize, usize)> = None; // (victim, remaining)
+        for (v, m) in ranges.iter().enumerate() {
+            if v == thief {
+                continue;
+            }
+            let (lo, hi) = *m.lock().expect("pool range lock");
+            let rem = hi - lo;
+            if rem > 0 && best.map_or(true, |(_, r)| rem > r) {
+                best = Some((v, rem));
+            }
+        }
+        let (victim, _) = best?;
+        let mut vr = ranges[victim].lock().expect("pool range lock");
+        let rem = vr.1 - vr.0;
+        if rem == 0 {
+            continue; // raced to empty between the scan and the re-lock
+        }
+        let take = (rem + 1) / 2;
+        let stolen = (vr.1 - take, vr.1);
+        vr.1 = stolen.0;
+        return Some(stolen);
+    }
+}
+
+/// Static per-worker chunking — the pre-stealing distribution, kept as
+/// the baseline the imbalance bench and the differential wall compare
+/// against. Same output contract as [`parallel_map_with`] (input order,
+/// one state per worker, panic propagation); worker `w` owns the
+/// contiguous chunk `[w*n/workers, (w+1)*n/workers)` come what may, so
+/// a skewed job mix leaves the pool idling behind its heaviest chunk.
+pub fn parallel_map_with_static<S, J, R, I, F>(
+    jobs: Vec<J>,
+    workers: usize,
+    init: I,
+    f: F,
+) -> Vec<R>
 where
     J: Send + Sync,
     R: Send,
@@ -47,57 +244,36 @@ where
     let workers = workers.max(1).min(n);
     if workers == 1 {
         let mut state = init();
-        return jobs
-            .iter()
-            .map(|j| {
-                let _span = crate::obs::span("pool_task");
-                f(&mut state, j)
-            })
-            .collect();
+        return jobs.iter().map(|j| f(&mut state, j)).collect();
     }
-
-    let next = AtomicUsize::new(0);
     let jobs_ref = &jobs;
-    let f_ref = &f;
     let init_ref = &init;
-    let next_ref = &next;
-
-    // Each worker returns its own (index, result) chunk; joining inside the
-    // scope propagates panics.
-    let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+    let f_ref = &f;
+    let mut chunks: Vec<Vec<R>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
-            .map(|_| {
+            .map(|w| {
                 scope.spawn(move || {
                     let mut state = init_ref();
-                    let mut local = Vec::with_capacity(n / workers + 1);
-                    loop {
-                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        let r = {
-                            let _span = crate::obs::span("pool_task");
-                            f_ref(&mut state, &jobs_ref[i])
-                        };
-                        local.push((i, r));
-                    }
-                    local
+                    jobs_ref[w * n / workers..(w + 1) * n / workers]
+                        .iter()
+                        .map(|j| f_ref(&mut state, j))
+                        .collect::<Vec<R>>()
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
     });
-
-    // Stitch the chunks back into input order.
-    let mut indexed: Vec<(usize, R)> = chunks.into_iter().flatten().collect();
-    debug_assert_eq!(indexed.len(), n, "every job produced exactly one result");
-    indexed.sort_unstable_by_key(|&(i, _)| i);
-    indexed.into_iter().map(|(_, r)| r).collect()
+    let mut out = Vec::with_capacity(n);
+    for chunk in &mut chunks {
+        out.append(chunk);
+    }
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
 
     #[test]
     fn preserves_order() {
@@ -153,5 +329,81 @@ mod tests {
         let serial: Vec<u64> = jobs.iter().map(|&j| (j as u64) * 3 + 1).collect();
         let parallel = parallel_map_with(jobs, 5, || (), |_state, &j| (j as u64) * 3 + 1);
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn every_job_is_claimed_exactly_once() {
+        let jobs: Vec<u64> = (0..257).collect();
+        let (out, tally) = run_dynamic(&jobs, 7, &|| (), &|_s, &j| j);
+        assert_eq!(out, jobs);
+        assert_eq!(tally.claimed, 257, "claims must cover the job list exactly");
+        assert_eq!(tally.busy_us.len(), 7, "one busy-time observation per worker");
+    }
+
+    /// A steal is forced deterministically: worker 0 owns [0, 2) and its
+    /// first job blocks until job 1 has *run* — so worker 0 can never
+    /// claim job 1 itself, and the only way the pool finishes is worker 1
+    /// draining its own chunk and stealing job 1 out of worker 0's range.
+    #[test]
+    fn a_blocked_chunk_gets_stolen_from() {
+        let job1_done = AtomicBool::new(false);
+        let jobs: Vec<usize> = vec![0, 1, 2, 3];
+        let (out, tally) = run_dynamic(&jobs, 2, &|| (), &|_s, &j| {
+            match j {
+                0 => {
+                    while !job1_done.load(Ordering::SeqCst) {
+                        std::thread::yield_now();
+                    }
+                }
+                1 => job1_done.store(true, Ordering::SeqCst),
+                _ => {}
+            }
+            j * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        assert!(tally.steals >= 1, "job 1 can only have run via a steal");
+        assert_eq!(tally.claimed, 4);
+    }
+
+    /// Satellite: dynamic claiming and the static baseline produce
+    /// bit-identical output on randomized uneven job mixes, including
+    /// the 1-worker and workers>jobs edges.
+    #[test]
+    fn dynamic_and_static_agree_on_random_uneven_mixes() {
+        let mut rng = crate::util::Rng::new(0xD1FF);
+        for _trial in 0..6 {
+            let n = rng.range(1, 48) as usize;
+            // Uneven cost profile: some jobs spin ~64x longer than others.
+            let jobs: Vec<u64> = (0..n as u64).map(|j| j | (rng.below(4) << 32)).collect();
+            let work = |&j: &u64| {
+                let spins = if j >> 32 == 0 { 2_000 } else { 30 };
+                let mut acc = j;
+                for _ in 0..spins {
+                    acc = acc.wrapping_mul(0x100000001b3).rotate_left(7);
+                }
+                (j & 0xffff_ffff, acc)
+            };
+            let serial: Vec<(u64, u64)> = jobs.iter().map(work).collect();
+            for workers in [1usize, 3, n + 5] {
+                let dynamic =
+                    parallel_map_with(jobs.clone(), workers, || (), |_s, j| work(j));
+                let fixed =
+                    parallel_map_with_static(jobs.clone(), workers, || (), |_s, j| work(j));
+                assert_eq!(dynamic, serial, "dynamic path diverged at {workers} worker(s)");
+                assert_eq!(fixed, serial, "static path diverged at {workers} worker(s)");
+            }
+        }
+    }
+
+    #[test]
+    fn static_baseline_keeps_the_edge_contracts() {
+        assert!(parallel_map_with_static(Vec::<u32>::new(), 4, || (), |_s, &j| j).is_empty());
+        assert_eq!(parallel_map_with_static(vec![7u32], 16, || (), |_s, &j| j), vec![7]);
+        // Per-worker state survives across a worker's chunk.
+        let out = parallel_map_with_static((0..32).collect::<Vec<u32>>(), 4, || 0u32, |seen, _| {
+            *seen += 1;
+            *seen
+        });
+        assert!(*out.iter().max().unwrap() >= 8);
     }
 }

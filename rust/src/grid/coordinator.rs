@@ -1,0 +1,428 @@
+//! The fleet coordinator: owns one repro-all plan and drains it over
+//! sockets to any number of workers, dynamically.
+//!
+//! Where `repro grid --shard k/n` (exec/grid.rs) partitions the plan
+//! *statically* — a fleet's wall-clock gated by its slowest shard —
+//! the coordinator hands out small batches of content keys on demand,
+//! so a fast worker simply comes back for more. Three properties make
+//! this safe without any distributed-systems machinery:
+//!
+//! * **Results are content-addressed.** A `SimPoint` key pins the
+//!   entire simulation input, and the engine is deterministic, so two
+//!   workers simulating the same key produce bit-identical records.
+//!   Handing a key out twice is wasted work, never a conflict.
+//! * **Leases, not assignments.** A batch is leased, and a lease that
+//!   expires ([`CoordinatorConfig::lease_ms`]) or whose connection
+//!   dies is requeued. Late results from the original holder are still
+//!   accepted (first write wins; the rest count as duplicates).
+//! * **One writer.** Workers never touch the store; they stream
+//!   records back and the coordinator appends through the ordinary
+//!   [`ResultStore::insert`] path under one lock — each key is written
+//!   exactly once, so a fleet-populated store is record-identical to a
+//!   single-host cold run.
+//!
+//! The accept loop mirrors `serve/http.rs`: thread-per-connection,
+//! port 0 for tests, shutdown by flag plus a self-dial to unpark
+//! `accept`. Connection reads use a short timeout as an idle tick —
+//! one peeked byte distinguishes "worker is busy simulating" from
+//! "worker died mid-frame".
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::exec::format::decode_result_bin;
+use crate::exec::{ResultStore, SimPoint};
+use crate::grid::proto::{self, read_frame_after_kind, write_frame, Frame, PROTO_VERSION};
+use crate::{format_err, Result};
+
+/// Default coordinator port (one above the serve daemon's 7878).
+pub const DEFAULT_PORT: u16 = 7879;
+/// Default batch size: big enough to amortize a round trip, small
+/// enough that a dead worker strands little work.
+pub const DEFAULT_BATCH: u32 = 8;
+/// Default lease timeout before a batch is requeued from a silent
+/// worker. Generous: an expiry costs only duplicate simulation.
+pub const DEFAULT_LEASE_MS: u64 = 30_000;
+
+/// Idle tick while waiting for a worker's next frame: long enough to
+/// avoid spinning, short enough that shutdown and lease math stay
+/// responsive.
+const READ_TICK: Duration = Duration::from_millis(250);
+
+/// Knobs for one coordinator run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoordinatorConfig {
+    pub lease_ms: u64,
+    pub batch: u32,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { lease_ms: DEFAULT_LEASE_MS, batch: DEFAULT_BATCH }
+    }
+}
+
+/// What one fleet drain did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetReport {
+    /// Deduplicated plan size.
+    pub plan_points: usize,
+    /// Plan points already in the store before any worker connected.
+    pub already_present: usize,
+    /// Fresh results received and appended.
+    pub results: u64,
+    /// Result records for keys that were already done (late or twice-
+    /// leased work) — discarded, never re-appended.
+    pub duplicates: u64,
+    /// Leases requeued from dead or silent workers.
+    pub reassigned: u64,
+    /// Batches granted (including re-grants of requeued keys).
+    pub batches: u64,
+    /// Workers that completed the handshake.
+    pub workers: u64,
+}
+
+struct Lease {
+    keys: Vec<u64>,
+    worker: u64,
+    issued: Instant,
+}
+
+struct FleetState {
+    plan: HashSet<u64>,
+    pending: VecDeque<u64>,
+    done: HashSet<u64>,
+    leases: HashMap<u64, Lease>,
+    next_lease: u64,
+    next_worker: u64,
+    workers: u64,
+    batches: u64,
+    leased_points: u64,
+    results: u64,
+    duplicates: u64,
+    reassigned: u64,
+}
+
+impl FleetState {
+    fn complete(&self) -> bool {
+        self.done.len() == self.plan.len()
+    }
+
+    /// Requeue every lease that predates `cutoff` (counted once per
+    /// lease). Keys that completed under a sibling lease stay done.
+    fn reap_expired(&mut self, lease_ms: u64) {
+        let expired: Vec<u64> = self
+            .leases
+            .iter()
+            .filter(|(_, l)| l.issued.elapsed() >= Duration::from_millis(lease_ms))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            self.requeue_lease(id);
+        }
+    }
+
+    fn requeue_lease(&mut self, id: u64) {
+        if let Some(lease) = self.leases.remove(&id) {
+            let mut requeued = false;
+            for k in lease.keys {
+                if !self.done.contains(&k) && !self.pending.contains(&k) {
+                    self.pending.push_front(k);
+                    requeued = true;
+                }
+            }
+            if requeued {
+                self.reassigned += 1;
+            }
+        }
+    }
+
+    /// Requeue everything a dying connection still holds.
+    fn requeue_worker(&mut self, worker: u64) {
+        let held: Vec<u64> =
+            self.leases.iter().filter(|(_, l)| l.worker == worker).map(|(&id, _)| id).collect();
+        for id in held {
+            self.requeue_lease(id);
+        }
+    }
+}
+
+/// A bound coordinator listener (port 0 picks a free port for tests).
+pub struct Coordinator {
+    listener: TcpListener,
+    port: u16,
+}
+
+impl Coordinator {
+    pub fn bind(port: u16) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| format_err!("binding 127.0.0.1:{port}: {e}"))?;
+        let port = listener.local_addr().map_err(|e| format_err!("local_addr: {e}"))?.port();
+        Ok(Self { listener, port })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Drain `points` through however many workers connect, appending
+    /// every fresh result to `store`, and return when the plan is done.
+    /// Points already in the store are resolved up front (ordinary
+    /// lookups, so they show in the `[exec]` summary as store hits);
+    /// if nothing is left the call returns without waiting for anyone.
+    pub fn run(
+        &self,
+        store: &ResultStore,
+        points: &[SimPoint],
+        cfg: &CoordinatorConfig,
+    ) -> Result<FleetReport> {
+        let _span = crate::obs::span("grid_fleet_drain");
+        let keys: Vec<u64> = points.iter().map(|p| p.key()).collect();
+        let fingerprint = proto::plan_fingerprint(&keys);
+        let mut st = FleetState {
+            plan: HashSet::new(),
+            pending: VecDeque::new(),
+            done: HashSet::new(),
+            leases: HashMap::new(),
+            next_lease: 1,
+            next_worker: 1,
+            workers: 0,
+            batches: 0,
+            leased_points: 0,
+            results: 0,
+            duplicates: 0,
+            reassigned: 0,
+        };
+        for &k in &keys {
+            if st.plan.insert(k) {
+                if store.lookup(k).is_some() {
+                    st.done.insert(k);
+                } else {
+                    st.pending.push_back(k);
+                }
+            }
+        }
+        let already_present = st.done.len();
+        if !st.complete() {
+            let state = Mutex::new(st);
+            let stop = AtomicBool::new(false);
+            let state_ref = &state;
+            let stop_ref = &stop;
+            let port = self.port;
+            std::thread::scope(|scope| {
+                for conn in self.listener.incoming() {
+                    if stop_ref.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    scope.spawn(move || {
+                        let _ = serve_worker(
+                            stream, state_ref, stop_ref, store, cfg, fingerprint, port,
+                        );
+                    });
+                }
+            });
+            st = state.into_inner().expect("fleet state lock");
+        }
+        let report = FleetReport {
+            plan_points: st.plan.len(),
+            already_present,
+            results: st.results,
+            duplicates: st.duplicates,
+            reassigned: st.reassigned,
+            batches: st.batches,
+            workers: st.workers,
+        };
+        // Fold at the stage boundary, once per drain. Scheduling-shaped
+        // counts (batches, re-leases, duplicates) are on the snapshot
+        // exclusion list — see obs::export::SCHEDULING_COUNTERS.
+        crate::obs::global().with(|v| {
+            v.counter_add("grid_fleet_drains_total", 1);
+            v.counter_add("grid_batches_granted_total", report.batches);
+            v.counter_add("grid_points_leased_total", st.leased_points);
+            v.counter_add("grid_results_received_total", report.results);
+            v.counter_add("grid_duplicate_results_total", report.duplicates);
+            v.counter_add("grid_lease_reassignments_total", report.reassigned);
+            v.counter_add("grid_workers_total", report.workers);
+        });
+        store.flush();
+        Ok(report)
+    }
+}
+
+/// One worker connection, handshake to goodbye. Any exit path requeues
+/// whatever the worker still held.
+fn serve_worker(
+    stream: TcpStream,
+    state: &Mutex<FleetState>,
+    stop: &AtomicBool,
+    store: &ResultStore,
+    cfg: &CoordinatorConfig,
+    fingerprint: u64,
+    port: u16,
+) -> Result<()> {
+    stream.set_read_timeout(Some(READ_TICK)).ok();
+    let mut reader = stream.try_clone().map_err(|e| format_err!("cloning stream: {e}"))?;
+    let mut writer = stream;
+    let mut worker_id: Option<u64> = None;
+    let outcome = (|| -> Result<()> {
+        loop {
+            // Peek one byte: a timeout here is an idle worker (keep
+            // waiting unless the drain finished), not a dead one.
+            let mut kind = [0u8; 1];
+            match reader.read_exact(&mut kind) {
+                Ok(()) => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                    continue;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Ok(()), // peer is gone; leases requeue below
+            }
+            let frame = read_frame_after_kind(kind[0], &mut reader)?;
+            match frame {
+                Frame::Hello { version, fingerprint: fp } => {
+                    if version != PROTO_VERSION {
+                        let msg = format!("protocol v{version} not spoken here (v{PROTO_VERSION})");
+                        let _ = write_frame(&mut writer, &Frame::Error { msg });
+                        return Ok(());
+                    }
+                    if fp != fingerprint {
+                        let msg = format!(
+                            "plan fingerprint mismatch: worker {fp:#018x}, \
+                             coordinator {fingerprint:#018x} — same flags on both ends?"
+                        );
+                        let _ = write_frame(&mut writer, &Frame::Error { msg });
+                        return Ok(());
+                    }
+                    let id = {
+                        let mut st = state.lock().expect("fleet state lock");
+                        st.workers += 1;
+                        let id = st.next_worker;
+                        st.next_worker += 1;
+                        id
+                    };
+                    worker_id = Some(id);
+                    write_frame(&mut writer, &Frame::Welcome { worker_id: id, fingerprint })
+                        .map_err(|e| format_err!("writing WELCOME: {e}"))?;
+                }
+                Frame::Request { max_points } => {
+                    let Some(id) = worker_id else {
+                        let _ = write_frame(&mut writer, &Frame::Error {
+                            msg: "REQUEST before HELLO".into(),
+                        });
+                        return Ok(());
+                    };
+                    let _span = crate::obs::span("grid_grant_batch");
+                    let reply = {
+                        let mut st = state.lock().expect("fleet state lock");
+                        st.reap_expired(cfg.lease_ms);
+                        let want = max_points.min(cfg.batch).max(1) as usize;
+                        let mut batch = Vec::with_capacity(want);
+                        while batch.len() < want {
+                            match st.pending.pop_front() {
+                                Some(k) if st.done.contains(&k) => continue,
+                                Some(k) => batch.push(k),
+                                None => break,
+                            }
+                        }
+                        if batch.is_empty() {
+                            Frame::Drained { done: st.complete() }
+                        } else {
+                            let lease = st.next_lease;
+                            st.next_lease += 1;
+                            st.batches += 1;
+                            st.leased_points += batch.len() as u64;
+                            st.leases.insert(
+                                lease,
+                                Lease { keys: batch.clone(), worker: id, issued: Instant::now() },
+                            );
+                            Frame::Batch { lease, keys: batch }
+                        }
+                    };
+                    write_frame(&mut writer, &reply)
+                        .map_err(|e| format_err!("writing batch: {e}"))?;
+                }
+                Frame::Results { lease, records } => {
+                    let _span = crate::obs::span("grid_apply_results");
+                    let (ack, finished) = {
+                        let mut st = state.lock().expect("fleet state lock");
+                        let mut fresh = 0u32;
+                        let mut dup = 0u32;
+                        for (key, bin) in &records {
+                            if !st.plan.contains(key) {
+                                let _ = write_frame(&mut writer, &Frame::Error {
+                                    msg: format!("result for unknown key {key:#018x}"),
+                                });
+                                return Ok(());
+                            }
+                            if st.done.contains(key) {
+                                dup += 1;
+                                continue;
+                            }
+                            let result = decode_result_bin(bin).map_err(|e| {
+                                format_err!("undecodable result for key {key:#018x}: {e}")
+                            })?;
+                            store.insert(*key, Arc::new(result));
+                            st.done.insert(*key);
+                            fresh += 1;
+                        }
+                        let stx = &mut *st;
+                        let done = &stx.done;
+                        let mut lease_empty = false;
+                        if let Some(l) = stx.leases.get_mut(&lease) {
+                            l.keys.retain(|k| !done.contains(k));
+                            lease_empty = l.keys.is_empty();
+                        }
+                        if lease_empty {
+                            stx.leases.remove(&lease);
+                        }
+                        st.results += u64::from(fresh);
+                        st.duplicates += u64::from(dup);
+                        (Frame::Ack { lease, fresh, dup }, st.complete())
+                    };
+                    write_frame(&mut writer, &ack)
+                        .map_err(|e| format_err!("writing ACK: {e}"))?;
+                    if finished {
+                        request_stop(stop, port);
+                    }
+                }
+                Frame::Bye => return Ok(()),
+                Frame::Error { msg } => {
+                    return Err(format_err!("worker reported: {msg}"));
+                }
+                other => {
+                    let _ = write_frame(&mut writer, &Frame::Error {
+                        msg: format!("unexpected frame {other:?} from a worker"),
+                    });
+                    return Ok(());
+                }
+            }
+        }
+    })();
+    if let Some(id) = worker_id {
+        state.lock().expect("fleet state lock").requeue_worker(id);
+    }
+    outcome
+}
+
+/// Flag the accept loop down and unpark it with a throwaway dial (the
+/// serve/http.rs shutdown idiom).
+fn request_stop(stop: &AtomicBool, port: u16) {
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(("127.0.0.1", port));
+}

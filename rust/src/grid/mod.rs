@@ -1,0 +1,178 @@
+//! Dynamic fleet execution: `repro grid coordinator` / `repro grid
+//! worker` — one repro-all plan drained over sockets by however many
+//! workers show up.
+//!
+//! This module is the *dynamic* half of grid execution; the static
+//! half (`repro grid --shard k/n`, ownership manifests, `repro store
+//! merge`) lives in [`crate::exec::grid`] and remains the right tool
+//! when hosts cannot reach each other. Layout:
+//!
+//! * [`proto`] — the length-prefixed, FNV-checksummed frame grammar on
+//!   `std::net::TcpStream`, plus the plan fingerprint handshake;
+//! * [`coordinator`] — lease table, batch handout, reassignment from
+//!   dead/slow workers, and the single store-append path;
+//! * [`worker`] — plan mirror, batch simulation on the local
+//!   work-stealing pool, result streaming;
+//! * [`fault`] — [`fault::FaultStream`], the seeded wire-fault
+//!   injector the chaos wall drives.
+//!
+//! The CLI surface mirrors `serve`: [`parse_fleet_cli`] pulls the
+//! fleet-specific flags out and leaves the generic ones (`--results`,
+//! `--smoke`, `--machine`, …) for the caller's option parser. See
+//! `ARCHITECTURE.md` §Grid & merge for the protocol walkthrough and
+//! the add-a-worker recipe.
+
+pub mod coordinator;
+pub mod fault;
+pub mod proto;
+pub mod worker;
+
+pub use coordinator::{Coordinator, CoordinatorConfig, FleetReport, DEFAULT_BATCH, DEFAULT_LEASE_MS, DEFAULT_PORT};
+pub use fault::FaultStream;
+pub use proto::{plan_fingerprint, Frame, PROTO_VERSION};
+pub use worker::{parse_connect, run_worker, WorkerConfig, WorkerReport};
+
+use crate::{format_err, Result};
+
+/// Which fleet role `repro grid <role>` was asked to play, with its
+/// role-specific flags parsed out.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetRole {
+    Coordinator { port: u16, cfg: CoordinatorConfig },
+    Worker { host: String, port: u16, cfg: WorkerConfig },
+}
+
+/// Parse `repro grid coordinator|worker` flags (mirroring
+/// `serve::parse_serve_cli`): fleet flags out, generic flags returned
+/// for `Opts::parse`. `args[0]` must be the role name. Errors are
+/// malformed invocations — the CLI maps them to exit 2.
+pub fn parse_fleet_cli(args: &[String]) -> Result<(FleetRole, Vec<String>)> {
+    fn value<'a>(it: &mut std::slice::Iter<'a, String>, flag: &str) -> Result<&'a String> {
+        it.next().ok_or_else(|| format_err!("grid: {flag} needs a value"))
+    }
+    fn number<T: std::str::FromStr>(v: &str, flag: &str) -> Result<T> {
+        v.parse().map_err(|_| format_err!("grid: {flag} needs a number, got {v:?}"))
+    }
+    let role = args.first().map(String::as_str).unwrap_or_default();
+    let is_coordinator = match role {
+        "coordinator" => true,
+        "worker" => false,
+        other => return Err(format_err!("grid: unknown role {other:?} (coordinator|worker)")),
+    };
+    let mut port: u16 = DEFAULT_PORT;
+    let mut connect: Option<(String, u16)> = None;
+    let mut batch: u32 = DEFAULT_BATCH;
+    let mut lease_ms: u64 = DEFAULT_LEASE_MS;
+    let mut max_batches: Option<u64> = None;
+    let mut abandon_after: Option<u64> = None;
+    let mut rest = Vec::new();
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--port" if is_coordinator => {
+                port = number(value(&mut it, "--port")?, "--port")?;
+            }
+            "--connect" if !is_coordinator => {
+                connect = Some(parse_connect(value(&mut it, "--connect")?)?);
+            }
+            "--batch" => {
+                batch = number::<u32>(value(&mut it, "--batch")?, "--batch")?.max(1);
+            }
+            "--lease-ms" if is_coordinator => {
+                lease_ms = number::<u64>(value(&mut it, "--lease-ms")?, "--lease-ms")?.max(1);
+            }
+            "--max-batches" if !is_coordinator => {
+                max_batches = Some(number(value(&mut it, "--max-batches")?, "--max-batches")?);
+            }
+            "--abandon-after" if !is_coordinator => {
+                abandon_after =
+                    Some(number(value(&mut it, "--abandon-after")?, "--abandon-after")?);
+            }
+            _ => rest.push(a.clone()),
+        }
+    }
+    let role = if is_coordinator {
+        FleetRole::Coordinator { port, cfg: CoordinatorConfig { lease_ms, batch } }
+    } else {
+        let (host, port) = connect
+            .ok_or_else(|| format_err!("grid worker requires --connect HOST:PORT"))?;
+        let cfg = WorkerConfig {
+            batch,
+            local_workers: crate::coordinator::pool::default_workers(),
+            max_batches,
+            abandon_after,
+        };
+        FleetRole::Worker { host, port, cfg }
+    };
+    Ok((role, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn coordinator_flags_parse_and_generic_flags_pass_through() {
+        let (role, rest) = parse_fleet_cli(&s(&[
+            "coordinator", "--port", "0", "--lease-ms", "200", "--batch", "4", "--smoke",
+            "--results", "/tmp/r",
+        ]))
+        .expect("parses");
+        assert_eq!(
+            role,
+            FleetRole::Coordinator { port: 0, cfg: CoordinatorConfig { lease_ms: 200, batch: 4 } }
+        );
+        assert_eq!(rest, s(&["--smoke", "--results", "/tmp/r"]));
+    }
+
+    #[test]
+    fn worker_requires_and_validates_connect() {
+        let (role, _) =
+            parse_fleet_cli(&s(&["worker", "--connect", "10.0.0.7:7879"])).expect("parses");
+        match role {
+            FleetRole::Worker { host, port, .. } => {
+                assert_eq!((host.as_str(), port), ("10.0.0.7", 7879));
+            }
+            other => panic!("expected worker, got {other:?}"),
+        }
+        for bad in ["worker"] {
+            let err = parse_fleet_cli(&s(&[bad])).unwrap_err().to_string();
+            assert!(err.contains("--connect"), "got: {err}");
+        }
+        for bad in ["nohost", ":7879", "h:", "h:0", "h:70000", "h:abc"] {
+            let err =
+                parse_fleet_cli(&s(&["worker", "--connect", bad])).unwrap_err().to_string();
+            assert!(err.contains("--connect"), "{bad:?} must be malformed, got: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_role_and_role_mismatched_flags_are_errors_or_passthrough() {
+        assert!(parse_fleet_cli(&s(&["shard"])).is_err());
+        // A coordinator-only flag on a worker is not consumed — it falls
+        // through to the generic parser, which rejects it (exit 2 there).
+        let (_, rest) =
+            parse_fleet_cli(&s(&["worker", "--connect", "h:1", "--lease-ms", "5"])).expect("parses");
+        assert_eq!(rest, s(&["--lease-ms", "5"]));
+    }
+
+    #[test]
+    fn abandon_and_max_batches_are_worker_knobs() {
+        let (role, rest) = parse_fleet_cli(&s(&[
+            "worker", "--connect", "h:1", "--abandon-after", "1", "--max-batches", "3",
+        ]))
+        .expect("parses");
+        assert!(rest.is_empty());
+        match role {
+            FleetRole::Worker { cfg, .. } => {
+                assert_eq!(cfg.abandon_after, Some(1));
+                assert_eq!(cfg.max_batches, Some(3));
+            }
+            other => panic!("expected worker, got {other:?}"),
+        }
+    }
+}

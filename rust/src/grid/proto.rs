@@ -1,0 +1,322 @@
+//! The fleet wire protocol: length-prefixed, checksummed frames over
+//! `std::net::TcpStream` — dependency-free, little-endian, in the
+//! style of the segment record format (`exec/segment.rs`).
+//!
+//! Frame grammar (all integers little-endian):
+//!
+//! ```text
+//! frame   := kind: u8 | len: u32 | payload: len bytes | fnv64: u64
+//! ```
+//!
+//! The checksum covers `kind | len | payload`, so a torn or corrupted
+//! frame is always detected before its payload is interpreted; the
+//! frame length is capped at [`MAX_FRAME_BYTES`] so a garbage peer
+//! cannot ask the reader to allocate the moon.
+//!
+//! Message payloads:
+//!
+//! ```text
+//! HELLO    (0x01, worker → coordinator): version: u32 | fingerprint: u64
+//! WELCOME  (0x02, coordinator → worker): worker_id: u64 | fingerprint: u64
+//! REQUEST  (0x03, worker → coordinator): max_points: u32
+//! BATCH    (0x04, coordinator → worker): lease: u64 | n: u32 | n × key: u64
+//! RESULTS  (0x05, worker → coordinator): lease: u64 | n: u32
+//!                                        | n × (key: u64 | bin: 416 bytes)
+//! ACK      (0x06, coordinator → worker): lease: u64 | fresh: u32 | dup: u32
+//! DRAINED  (0x07, coordinator → worker): done: u8
+//! ERROR    (0x08, either direction):     utf-8 message
+//! BYE      (0x09, worker → coordinator): empty
+//! ```
+//!
+//! `RESULTS` records carry [`crate::exec::format::encode_result_bin`]
+//! payloads — the same 416-byte binary twin the segment store appends,
+//! which is what makes a fleet-populated store record-identical to a
+//! single-host cold run.
+//!
+//! Both sides derive the plan independently (same `repro all` plan
+//! builder, same flags) and exchange [`plan_fingerprint`]s in the
+//! handshake: a worker launched with a different machine, scale, or
+//! prefetch setting is refused before any batch moves.
+
+use std::io::{Read, Write};
+
+use crate::exec::format::RESULT_BIN_BYTES;
+use crate::tune::plan::fnv64;
+use crate::{ensure, format_err, Result};
+
+/// Bumped when the frame grammar changes incompatibly.
+pub const PROTO_VERSION: u32 = 1;
+/// Upper bound on a frame's payload length.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// One protocol message (see the module docs for the grammar).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    Hello { version: u32, fingerprint: u64 },
+    Welcome { worker_id: u64, fingerprint: u64 },
+    Request { max_points: u32 },
+    Batch { lease: u64, keys: Vec<u64> },
+    Results { lease: u64, records: Vec<(u64, Vec<u8>)> },
+    Ack { lease: u64, fresh: u32, dup: u32 },
+    Drained { done: bool },
+    Error { msg: String },
+    Bye,
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 0x01,
+            Frame::Welcome { .. } => 0x02,
+            Frame::Request { .. } => 0x03,
+            Frame::Batch { .. } => 0x04,
+            Frame::Results { .. } => 0x05,
+            Frame::Ack { .. } => 0x06,
+            Frame::Drained { .. } => 0x07,
+            Frame::Error { .. } => 0x08,
+            Frame::Bye => 0x09,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Frame::Hello { version, fingerprint } => {
+                p.extend_from_slice(&version.to_le_bytes());
+                p.extend_from_slice(&fingerprint.to_le_bytes());
+            }
+            Frame::Welcome { worker_id, fingerprint } => {
+                p.extend_from_slice(&worker_id.to_le_bytes());
+                p.extend_from_slice(&fingerprint.to_le_bytes());
+            }
+            Frame::Request { max_points } => p.extend_from_slice(&max_points.to_le_bytes()),
+            Frame::Batch { lease, keys } => {
+                p.extend_from_slice(&lease.to_le_bytes());
+                p.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+                for k in keys {
+                    p.extend_from_slice(&k.to_le_bytes());
+                }
+            }
+            Frame::Results { lease, records } => {
+                p.extend_from_slice(&lease.to_le_bytes());
+                p.extend_from_slice(&(records.len() as u32).to_le_bytes());
+                for (k, bin) in records {
+                    debug_assert_eq!(bin.len(), RESULT_BIN_BYTES);
+                    p.extend_from_slice(&k.to_le_bytes());
+                    p.extend_from_slice(bin);
+                }
+            }
+            Frame::Ack { lease, fresh, dup } => {
+                p.extend_from_slice(&lease.to_le_bytes());
+                p.extend_from_slice(&fresh.to_le_bytes());
+                p.extend_from_slice(&dup.to_le_bytes());
+            }
+            Frame::Drained { done } => p.push(u8::from(*done)),
+            Frame::Error { msg } => p.extend_from_slice(msg.as_bytes()),
+            Frame::Bye => {}
+        }
+        p
+    }
+}
+
+/// Serialize one frame (header + payload + trailing checksum).
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let payload = f.payload();
+    let mut out = Vec::with_capacity(5 + payload.len() + 8);
+    out.push(f.kind());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    let sum = fnv64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Write one frame and flush it — every message is a complete unit on
+/// the wire, so the peer never blocks on a half-buffered frame.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode_frame(f))?;
+    w.flush()
+}
+
+fn read_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().expect("bounds checked by caller"))
+}
+
+fn read_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().expect("bounds checked by caller"))
+}
+
+/// Read one frame, verifying length bound and checksum. A short read
+/// (peer died mid-frame) or a checksum mismatch (torn/corrupted frame)
+/// is an error — the connection is no longer trustworthy.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind).map_err(|e| format_err!("reading frame header: {e}"))?;
+    read_frame_after_kind(kind[0], r)
+}
+
+/// Finish reading a frame whose kind byte the caller already consumed
+/// (the coordinator peeks one byte so an idle-socket timeout between
+/// frames is distinguishable from a death mid-frame).
+pub fn read_frame_after_kind(kind: u8, r: &mut impl Read) -> Result<Frame> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes).map_err(|e| format_err!("reading frame length: {e}"))?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "frame payload of {len} bytes exceeds {MAX_FRAME_BYTES}");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| format_err!("reading frame payload: {e}"))?;
+    let mut sum_bytes = [0u8; 8];
+    r.read_exact(&mut sum_bytes).map_err(|e| format_err!("reading frame checksum: {e}"))?;
+    let mut body = Vec::with_capacity(5 + len);
+    body.push(kind);
+    body.extend_from_slice(&len_bytes);
+    body.extend_from_slice(&payload);
+    ensure!(
+        fnv64(&body) == u64::from_le_bytes(sum_bytes),
+        "frame checksum mismatch (kind 0x{kind:02x}, {len} payload byte(s))"
+    );
+    parse_payload(kind, &payload)
+}
+
+fn parse_payload(kind: u8, p: &[u8]) -> Result<Frame> {
+    let exact = |want: usize| -> Result<()> {
+        ensure!(p.len() == want, "frame 0x{kind:02x} payload: {} byte(s), want {want}", p.len());
+        Ok(())
+    };
+    match kind {
+        0x01 => {
+            exact(12)?;
+            Ok(Frame::Hello { version: read_u32(p, 0), fingerprint: read_u64(p, 4) })
+        }
+        0x02 => {
+            exact(16)?;
+            Ok(Frame::Welcome { worker_id: read_u64(p, 0), fingerprint: read_u64(p, 8) })
+        }
+        0x03 => {
+            exact(4)?;
+            Ok(Frame::Request { max_points: read_u32(p, 0) })
+        }
+        0x04 => {
+            ensure!(p.len() >= 12, "BATCH payload too short: {} byte(s)", p.len());
+            let lease = read_u64(p, 0);
+            let n = read_u32(p, 8) as usize;
+            exact(12 + n * 8)?;
+            let keys = (0..n).map(|i| read_u64(p, 12 + i * 8)).collect();
+            Ok(Frame::Batch { lease, keys })
+        }
+        0x05 => {
+            ensure!(p.len() >= 12, "RESULTS payload too short: {} byte(s)", p.len());
+            let lease = read_u64(p, 0);
+            let n = read_u32(p, 8) as usize;
+            let rec = 8 + RESULT_BIN_BYTES;
+            exact(12 + n * rec)?;
+            let records = (0..n)
+                .map(|i| {
+                    let at = 12 + i * rec;
+                    (read_u64(p, at), p[at + 8..at + rec].to_vec())
+                })
+                .collect();
+            Ok(Frame::Results { lease, records })
+        }
+        0x06 => {
+            exact(16)?;
+            Ok(Frame::Ack { lease: read_u64(p, 0), fresh: read_u32(p, 8), dup: read_u32(p, 12) })
+        }
+        0x07 => {
+            exact(1)?;
+            Ok(Frame::Drained { done: p[0] != 0 })
+        }
+        0x08 => Ok(Frame::Error {
+            msg: String::from_utf8(p.to_vec())
+                .map_err(|_| format_err!("ERROR frame message is not UTF-8"))?,
+        }),
+        0x09 => {
+            exact(0)?;
+            Ok(Frame::Bye)
+        }
+        other => Err(format_err!("unknown frame kind 0x{other:02x}")),
+    }
+}
+
+/// Content fingerprint of a plan: FNV-1a over the count and the sorted
+/// content keys. Both ends compute it from their own plan, so mismatched
+/// flags (machine, scale, `--max-total`, prefetch) are caught in the
+/// handshake rather than surfacing as unknown-key errors mid-run.
+pub fn plan_fingerprint(keys: &[u64]) -> u64 {
+    let mut sorted: Vec<u64> = keys.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut bytes = Vec::with_capacity(8 + sorted.len() * 8);
+    bytes.extend_from_slice(&(sorted.len() as u64).to_le_bytes());
+    for k in &sorted {
+        bytes.extend_from_slice(&k.to_le_bytes());
+    }
+    fnv64(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: Frame) {
+        let bytes = encode_frame(&f);
+        let got = read_frame(&mut bytes.as_slice()).expect("frame parses");
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        round_trip(Frame::Hello { version: PROTO_VERSION, fingerprint: 0xDEAD_BEEF });
+        round_trip(Frame::Welcome { worker_id: 3, fingerprint: 7 });
+        round_trip(Frame::Request { max_points: 16 });
+        round_trip(Frame::Batch { lease: 42, keys: vec![1, u64::MAX, 9] });
+        round_trip(Frame::Results {
+            lease: 42,
+            records: vec![(5, vec![0xAB; RESULT_BIN_BYTES]), (6, vec![0x01; RESULT_BIN_BYTES])],
+        });
+        round_trip(Frame::Ack { lease: 42, fresh: 2, dup: 1 });
+        round_trip(Frame::Drained { done: true });
+        round_trip(Frame::Drained { done: false });
+        round_trip(Frame::Error { msg: "plan fingerprint mismatch".into() });
+        round_trip(Frame::Bye);
+    }
+
+    #[test]
+    fn corrupted_byte_fails_the_checksum() {
+        let mut bytes = encode_frame(&Frame::Batch { lease: 1, keys: vec![2, 3] });
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = read_frame(&mut bytes.as_slice()).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("payload"),
+            "corruption must be detected, got: {err}"
+        );
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_hang() {
+        let bytes = encode_frame(&Frame::Request { max_points: 8 });
+        for cut in 1..bytes.len() {
+            assert!(
+                read_frame(&mut bytes[..cut].to_vec().as_slice()).is_err(),
+                "prefix of {cut} byte(s) must not parse"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut bytes = vec![0x04u8];
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let err = read_frame(&mut bytes.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "got: {err}");
+    }
+
+    #[test]
+    fn fingerprint_is_order_independent_and_content_sensitive() {
+        let a = plan_fingerprint(&[1, 2, 3]);
+        assert_eq!(a, plan_fingerprint(&[3, 1, 2]), "order must not matter");
+        assert_ne!(a, plan_fingerprint(&[1, 2, 4]), "content must matter");
+        assert_ne!(a, plan_fingerprint(&[1, 2]), "count must matter");
+    }
+}

@@ -1,0 +1,177 @@
+//! The fleet worker: connects to a coordinator, leases batches of
+//! content keys, simulates them on the local pool, and streams the
+//! records back.
+//!
+//! The worker derives the *same* repro-all plan the coordinator did
+//! (same plan builder, same flags) and keeps a key → [`SimPoint`] map;
+//! the wire only ever carries content keys and result records, never
+//! simulation inputs. A worker launched with different flags fails the
+//! fingerprint handshake instead of silently simulating the wrong grid.
+//!
+//! Each leased batch runs through the ordinary [`Planner`] against the
+//! worker's own store — an ephemeral one by default (`--cold`), or a
+//! local persistent store (`--results DIR`) whose hits turn leased
+//! work into pure lookups. Either way the bytes shipped back are
+//! [`encode_result_bin`] records, bit-identical to what a single-host
+//! run would have appended, by the determinism contract.
+//!
+//! Two test/bench knobs ride along: `max_batches` stops a worker
+//! cleanly after N batches (bench pacing), and `abandon_after` drops
+//! the connection *without* returning the Nth batch — the scripted
+//! mid-run crash the chaos wall and the CI kill-a-worker job use.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::pool::default_workers;
+use crate::exec::format::encode_result_bin;
+use crate::exec::{Planner, ResultStore, SimPoint};
+use crate::grid::coordinator::DEFAULT_BATCH;
+use crate::grid::proto::{plan_fingerprint, read_frame, write_frame, Frame, PROTO_VERSION};
+use crate::{ensure, format_err, Result};
+
+/// Handshake/ack patience. Coordinator replies are immediate; this
+/// bounds how long a dead coordinator can hang a worker.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+/// Idle nap between polls once the pending queue is empty but other
+/// workers still hold leases that might yet be requeued.
+const IDLE_NAP: Duration = Duration::from_millis(20);
+
+/// Knobs for one worker run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerConfig {
+    /// Points to request per batch.
+    pub batch: u32,
+    /// Local pool width for simulating a batch.
+    pub local_workers: usize,
+    /// Stop cleanly (BYE) after this many batches.
+    pub max_batches: Option<u64>,
+    /// Crash deliberately: receive the Nth batch, then drop the
+    /// connection without results. The coordinator must requeue.
+    pub abandon_after: Option<u64>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self { batch: DEFAULT_BATCH, local_workers: default_workers(), max_batches: None, abandon_after: None }
+    }
+}
+
+/// What one worker run did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerReport {
+    pub worker_id: u64,
+    /// Batches received (including an abandoned one).
+    pub batches: u64,
+    /// Points simulated and acknowledged.
+    pub points: u64,
+    /// True when `abandon_after` cut the run short.
+    pub abandoned: bool,
+}
+
+/// Parse and validate a `HOST:PORT` connect target. Malformed input is
+/// a usage error (the CLI maps it to exit 2).
+pub fn parse_connect(s: &str) -> Result<(String, u16)> {
+    let (host, port) = s
+        .rsplit_once(':')
+        .ok_or_else(|| format_err!("--connect wants HOST:PORT, got {s:?}"))?;
+    ensure!(!host.is_empty(), "--connect wants HOST:PORT, got {s:?} (empty host)");
+    let port: u16 = port
+        .parse()
+        .map_err(|_| format_err!("--connect port must be 1..=65535, got {port:?}"))?;
+    ensure!(port != 0, "--connect port must be nonzero");
+    Ok((host.to_string(), port))
+}
+
+/// Work one coordinator's plan to completion (or to a configured
+/// stop). `points` must be the same plan the coordinator holds.
+pub fn run_worker(
+    host: &str,
+    port: u16,
+    store: &ResultStore,
+    points: &[SimPoint],
+    cfg: &WorkerConfig,
+) -> Result<WorkerReport> {
+    let _span = crate::obs::span("grid_worker_run");
+    let by_key: HashMap<u64, &SimPoint> = points.iter().map(|p| (p.key(), p)).collect();
+    let keys: Vec<u64> = points.iter().map(|p| p.key()).collect();
+    let fingerprint = plan_fingerprint(&keys);
+
+    let stream = TcpStream::connect((host, port))
+        .map_err(|e| format_err!("connecting to coordinator {host}:{port}: {e}"))?;
+    stream.set_read_timeout(Some(REPLY_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let mut reader = stream.try_clone().map_err(|e| format_err!("cloning stream: {e}"))?;
+    let mut writer = stream;
+
+    write_frame(&mut writer, &Frame::Hello { version: PROTO_VERSION, fingerprint })
+        .map_err(|e| format_err!("sending HELLO: {e}"))?;
+    let worker_id = match read_frame(&mut reader)? {
+        Frame::Welcome { worker_id, fingerprint: fp } => {
+            ensure!(fp == fingerprint, "coordinator echoed fingerprint {fp:#018x}, sent {fingerprint:#018x}");
+            worker_id
+        }
+        Frame::Error { msg } => return Err(format_err!("coordinator refused: {msg}")),
+        other => return Err(format_err!("expected WELCOME, got {other:?}")),
+    };
+
+    let mut report = WorkerReport { worker_id, batches: 0, points: 0, abandoned: false };
+    loop {
+        if cfg.max_batches.is_some_and(|max| report.batches >= max) {
+            let _ = write_frame(&mut writer, &Frame::Bye);
+            break;
+        }
+        write_frame(&mut writer, &Frame::Request { max_points: cfg.batch.max(1) })
+            .map_err(|e| format_err!("sending REQUEST: {e}"))?;
+        match read_frame(&mut reader)? {
+            Frame::Batch { lease, keys } => {
+                report.batches += 1;
+                if cfg.abandon_after.is_some_and(|n| report.batches >= n) {
+                    // Scripted crash: vanish mid-batch, results unsent.
+                    report.abandoned = true;
+                    break;
+                }
+                let batch_points: Vec<SimPoint> = keys
+                    .iter()
+                    .map(|k| {
+                        by_key
+                            .get(k)
+                            .map(|&p| p.clone())
+                            .ok_or_else(|| format_err!("leased unknown key {k:#018x}"))
+                    })
+                    .collect::<Result<_>>()?;
+                let results = {
+                    let _span = crate::obs::span("grid_worker_batch");
+                    Planner::new(store).with_workers(cfg.local_workers).run(&batch_points)?
+                };
+                let records: Vec<(u64, Vec<u8>)> = keys
+                    .iter()
+                    .zip(&results)
+                    .map(|(&k, r)| (k, encode_result_bin(r).to_vec()))
+                    .collect();
+                write_frame(&mut writer, &Frame::Results { lease, records })
+                    .map_err(|e| format_err!("sending RESULTS: {e}"))?;
+                match read_frame(&mut reader)? {
+                    Frame::Ack { lease: acked, fresh, dup } => {
+                        ensure!(acked == lease, "ACK for lease {acked}, sent {lease}");
+                        report.points += u64::from(fresh) + u64::from(dup);
+                    }
+                    Frame::Error { msg } => return Err(format_err!("coordinator rejected results: {msg}")),
+                    other => return Err(format_err!("expected ACK, got {other:?}")),
+                }
+            }
+            Frame::Drained { done: true } => {
+                let _ = write_frame(&mut writer, &Frame::Bye);
+                break;
+            }
+            Frame::Drained { done: false } => {
+                // Others still hold leases; their keys may yet requeue.
+                std::thread::sleep(IDLE_NAP);
+            }
+            Frame::Error { msg } => return Err(format_err!("coordinator: {msg}")),
+            other => return Err(format_err!("expected BATCH or DRAINED, got {other:?}")),
+        }
+    }
+    Ok(report)
+}

@@ -45,9 +45,13 @@
 //!   `<artifacts>/results/`), so identical simulation points run once
 //!   per store lifetime instead of once per request.
 //! * [`coordinator`] — parallel experiment orchestration: config sweeps
-//!   fan out over worker threads, each of which reuses one warm
-//!   [`sim::Engine`] allocation across sweep points via
-//!   [`sim::Engine::prepare`].
+//!   fan out over a work-stealing worker-thread pool, each worker
+//!   reusing one warm [`sim::Engine`] allocation across the sweep
+//!   points it claims via [`sim::Engine::prepare`].
+//! * [`grid`] — dynamic fleet execution (`repro grid coordinator` /
+//!   `repro grid worker`): one repro-all plan drained over a framed
+//!   TCP protocol with leased batches, dead-worker reassignment, and
+//!   store appends bit-identical to a single-host cold run.
 //! * [`tune`] — the auto-tuning planner: successive-halving search over
 //!   each kernel's derived variant family with the simulator as cost
 //!   model, winning [`tune::TunedPlan`]s persisted to an on-disk
@@ -70,6 +74,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod exec;
+pub mod grid;
 pub mod kernels;
 pub mod mem;
 pub mod native;

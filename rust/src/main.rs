@@ -55,6 +55,13 @@ fn main() {
     if cmd == "obs" {
         std::process::exit(obs_command(&args[1..]));
     }
+    // The fleet roles own their flags (`--port`, `--connect`, …);
+    // `repro grid --shard k/n` (no role word) stays on the generic path.
+    if cmd == "grid"
+        && matches!(args.get(1).map(String::as_str), Some("coordinator") | Some("worker"))
+    {
+        std::process::exit(grid_fleet_command(&args[1..]));
+    }
     let opts = Opts::parse(&args[1..]);
     // One result store per invocation: the memory tier spans every
     // command `repro all` chains, so overlapping sweeps dedup in-process
@@ -125,6 +132,8 @@ fn usage() {
          commands: table1 table2 figure2 figure3 figure4 figure5 figure6 figure7 \
          sweep universe tune native validate run all grid store serve obs\n\
          grid:     repro grid --shard k/n [--results DIR]   (one shard of the full plan)\n\
+         \u{20}         repro grid coordinator [--port N] [--lease-ms N] [--batch N] [--results DIR]\n\
+         \u{20}         repro grid worker --connect HOST:PORT [--batch N] [--results DIR|--cold]\n\
          store:    repro store stats|gc|verify|compact|merge [--results DIR]\n\
          \u{20}         repro store gc --max-bytes N and/or --max-age-days N\n\
          \u{20}         repro store merge SRC... --into DST   (union stores by content key)\n\
@@ -1004,6 +1013,84 @@ fn grid_cmd(opts: &Opts, store: &ResultStore) -> multistride::Result<()> {
         report.manifest.display(),
     );
     Ok(())
+}
+
+/// `repro grid coordinator|worker`: the dynamic fleet roles. Parsed
+/// before `Opts::parse` (like store/serve/obs) so the roles own their
+/// flags; returns the process exit code — 2 for malformed invocations
+/// (including a bad `--connect`), 1 for runtime trouble (including an
+/// unreachable coordinator).
+fn grid_fleet_command(args: &[String]) -> i32 {
+    use multistride::grid::{self, FleetRole};
+    let (role, rest) = match grid::parse_fleet_cli(args) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+            return 2;
+        }
+    };
+    let opts = Opts::parse(&rest);
+    let store = opts.result_store();
+    let m = opts.machine.config();
+    let points = exp::repro_all_points(m, opts.scale(), opts.max_total, opts.prefetch);
+    let result: multistride::Result<()> = match role {
+        FleetRole::Coordinator { port, cfg } => (|| {
+            if store.dir().is_none() {
+                return Err(multistride::format_err!(
+                    "grid coordinator appends through a persistent store (drop --cold)"
+                ));
+            }
+            let coord = grid::Coordinator::bind(port)?;
+            println!(
+                "[grid] coordinator: listening on 127.0.0.1:{} — {} plan point(s), \
+                 batch {}, lease {} ms",
+                coord.port(),
+                points.len(),
+                cfg.batch,
+                cfg.lease_ms,
+            );
+            let r = coord.run(&store, &points, &cfg)?;
+            println!(
+                "[grid] coordinator: drained {} point(s) ({} already present), \
+                 {} result(s) from {} worker(s) in {} batch(es), \
+                 {} lease(s) reassigned, {} duplicate(s) discarded",
+                r.plan_points,
+                r.already_present,
+                r.results,
+                r.workers,
+                r.batches,
+                r.reassigned,
+                r.duplicates,
+            );
+            Ok(())
+        })(),
+        FleetRole::Worker { host, port, cfg } => (|| {
+            let r = grid::run_worker(&host, port, &store, &points, &cfg)?;
+            println!(
+                "[grid] worker {}: {} point(s) over {} batch(es){}",
+                r.worker_id,
+                r.points,
+                r.batches,
+                if r.abandoned { " — ABANDONED (scripted crash)" } else { "" },
+            );
+            Ok(())
+        })(),
+    };
+    let stats = store.stats();
+    if result.is_ok() && stats.requests > 0 {
+        print!("{}", figures::render_exec_summary(&stats, store.dir()));
+    }
+    if result.is_ok() {
+        write_trace_if_requested(&opts);
+    }
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
 }
 
 /// `repro run --config FILE`: a TOML-driven kernel sweep.

@@ -45,12 +45,38 @@ pub fn prometheus_text(snap: &Snapshot) -> String {
     out
 }
 
+/// Counters whose value depends on thread/fleet scheduling, not on the
+/// work performed: how often the pool stole, how the fleet's batches
+/// happened to be cut, which worker raced a lease. They stay visible
+/// in [`prometheus_text`] (live operators want them) but are excluded
+/// from the deterministic snapshot, which pins "identical cold runs
+/// produce byte-identical files".
+pub const SCHEDULING_COUNTERS: &[&str] = &[
+    "pool_steals_total",
+    "grid_batches_granted_total",
+    "grid_points_leased_total",
+    "grid_duplicate_results_total",
+    "grid_lease_reassignments_total",
+];
+
+/// Is `name` on the [`SCHEDULING_COUNTERS`] exclusion list?
+pub fn is_scheduling_dependent(name: &str) -> bool {
+    SCHEDULING_COUNTERS.contains(&name)
+}
+
 /// Render the deterministic JSON snapshot: counters and gauges only,
-/// sorted by name, one entry per line. Histograms (timings) are
-/// excluded by contract — they are the nondeterministic half.
+/// sorted by name, one entry per line. Histograms (timings) and
+/// [`SCHEDULING_COUNTERS`] are excluded by contract — they are the
+/// nondeterministic half.
 pub fn json_snapshot(snap: &Snapshot) -> String {
+    let counters: Vec<(String, u64)> = snap
+        .counters
+        .iter()
+        .filter(|(name, _)| !is_scheduling_dependent(name))
+        .cloned()
+        .collect();
     let mut out = String::from("{\n  \"counters\": {\n");
-    push_section(&mut out, &snap.counters);
+    push_section(&mut out, &counters);
     out.push_str("  },\n  \"gauges\": {\n");
     push_section(&mut out, &snap.gauges);
     out.push_str("  }\n}\n");
@@ -139,6 +165,27 @@ mod tests {
     #[test]
     fn json_snapshot_is_byte_identical_for_equal_registries() {
         assert_eq!(json_snapshot(&sample()), json_snapshot(&sample()));
+    }
+
+    #[test]
+    fn scheduling_counters_are_snapshot_excluded_but_scrapable() {
+        let r = Registry::new();
+        r.counter_set("pool_jobs_claimed_total", 9);
+        r.counter_set("pool_steals_total", 3);
+        r.counter_set("grid_lease_reassignments_total", 1);
+        let snap = r.snapshot();
+        let json = json_snapshot(&snap);
+        for name in SCHEDULING_COUNTERS {
+            assert!(is_scheduling_dependent(name));
+            assert!(!json.contains(name), "{name} must not reach the snapshot:\n{json}");
+        }
+        assert!(json.contains("\"pool_jobs_claimed_total\": 9"), "got:\n{json}");
+        // Trailing-comma hygiene survives the filter: the last surviving
+        // counter line has none.
+        assert!(json.contains("\"pool_jobs_claimed_total\": 9\n"), "got:\n{json}");
+        let prom = prometheus_text(&snap);
+        assert!(prom.contains("pool_steals_total 3\n"), "got:\n{prom}");
+        assert!(prom.contains("grid_lease_reassignments_total 1\n"), "got:\n{prom}");
     }
 
     #[test]

@@ -318,6 +318,21 @@ pub fn render_exec_summary_from(
     if c("exec_verified_hits_total") > 0 {
         s.push_str(&format!(", debug-verified hits: {}", c("exec_verified_hits_total")));
     }
+    if c("pool_jobs_claimed_total") > 0 {
+        s.push_str(&format!(
+            ", pool: {} job(s) claimed / {} steal(s)",
+            c("pool_jobs_claimed_total"),
+            c("pool_steals_total"),
+        ));
+    }
+    if c("grid_fleet_drains_total") > 0 {
+        s.push_str(&format!(
+            ", fleet: {} result(s) from {} worker(s), {} re-lease(s)",
+            c("grid_results_received_total"),
+            c("grid_workers_total"),
+            c("grid_lease_reassignments_total"),
+        ));
+    }
     match dir {
         Some(d) => s.push_str(&format!("; results dir: {}", d.display())),
         None => s.push_str("; results dir: (none — cold/ephemeral store)"),

@@ -244,6 +244,51 @@ fn obs_cli_grammar_and_report_round_trip() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The fleet roles follow the same split: a malformed invocation —
+/// above all a bad `--connect` — is exit 2 through `usage()`, before
+/// any socket is touched.
+#[test]
+fn grid_fleet_cli_grammar_errors_exit_two() {
+    for bad in [
+        &["grid", "worker", "--smoke"][..], // --connect is required
+        &["grid", "worker", "--connect"],
+        &["grid", "worker", "--connect", "nohost"],
+        &["grid", "worker", "--connect", ":7879"],
+        &["grid", "worker", "--connect", "host:"],
+        &["grid", "worker", "--connect", "host:0"],
+        &["grid", "worker", "--connect", "host:notaport"],
+        &["grid", "coordinator", "--port", "notaport"],
+        &["grid", "coordinator", "--lease-ms", "soon"],
+    ] {
+        let out = repro(bad);
+        assert_eq!(code(&out), 2, "{bad:?} must exit 2\n{}", stderr(&out));
+        let err = stderr(&out);
+        assert!(err.contains("usage:"), "{bad:?}: usage must be printed\ngot: {err}");
+        assert!(!err.contains("panicked"), "{bad:?}: got: {err}");
+    }
+    let usage = stderr(&repro(&[]));
+    assert!(usage.contains("grid coordinator"), "got:\n{usage}");
+    assert!(usage.contains("grid worker --connect"), "got:\n{usage}");
+}
+
+/// Runtime trouble on the fleet surface is exit 1: a well-formed
+/// `--connect` whose coordinator is unreachable, or a coordinator
+/// pointed at a store it cannot append to.
+#[test]
+fn grid_fleet_runtime_trouble_exits_one() {
+    // Port 1 is privileged and unbound: the dial is refused immediately.
+    let out = repro(&["grid", "worker", "--connect", "127.0.0.1:1", "--cold", "--smoke"]);
+    assert_eq!(code(&out), 1, "unreachable coordinator must exit 1\n{}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("error:"), "got: {err}");
+    assert!(err.contains("coordinator"), "got: {err}");
+    assert!(!err.contains("panicked"), "got: {err}");
+
+    let cold = repro(&["grid", "coordinator", "--cold", "--smoke"]);
+    assert_eq!(code(&cold), 1, "a coordinator needs a persistent store\n{}", stderr(&cold));
+    assert!(stderr(&cold).contains("persistent"), "got: {}", stderr(&cold));
+}
+
 #[test]
 fn grid_requires_a_shard_spec_and_a_persistent_store() {
     let dir = tmp("grid");

@@ -1,0 +1,259 @@
+//! Integration wall for the dynamic fleet (`multistride::grid`):
+//!
+//! * a store populated by a coordinator + N workers is record-identical
+//!   to a single-host cold run — the PR's byte-identity contract;
+//! * a worker that vanishes mid-batch (the chaos `abandon_after` knob)
+//!   loses no points and duplicates none;
+//! * a worker that goes silent while holding a lease gets its batch
+//!   requeued after `lease_ms`;
+//! * a worker whose plan disagrees with the coordinator's is refused at
+//!   the handshake instead of polluting the store.
+//!
+//! Everything runs on loopback with port 0 and `std::thread::scope`:
+//! the coordinator drains in one scoped thread while workers (or a raw
+//! misbehaving client) run in others.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use multistride::config::coffee_lake;
+use multistride::coordinator::experiments::EngineCache;
+use multistride::exec::format::encode_result_bin;
+use multistride::exec::{simulate, ResultStore, SimPoint};
+use multistride::grid::proto::{plan_fingerprint, read_frame, write_frame, Frame, PROTO_VERSION};
+use multistride::grid::{run_worker, Coordinator, CoordinatorConfig, WorkerConfig};
+use multistride::kernels::micro::MicroOp;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("multistride_fleet_{tag}_{}", std::process::id()))
+}
+
+/// A small all-unique plan: six micro points, one per stride count.
+fn plan() -> Vec<SimPoint> {
+    (1..=6u32)
+        .map(|s| SimPoint::micro(coffee_lake(), MicroOp::LoadAligned, s, 1 << 20, true, false))
+        .collect()
+}
+
+/// Reference records from a plain single-host cold run: key → the exact
+/// bytes `ResultStore::insert` would append for it.
+fn single_host_records(points: &[SimPoint]) -> HashMap<u64, Vec<u8>> {
+    let mut engines = EngineCache::new();
+    points
+        .iter()
+        .map(|p| {
+            let r = simulate(&mut engines, p).expect("micro point simulates");
+            (p.key(), encode_result_bin(&r).to_vec())
+        })
+        .collect()
+}
+
+fn worker_cfg(batch: u32) -> WorkerConfig {
+    WorkerConfig { batch, local_workers: 2, max_batches: None, abandon_after: None }
+}
+
+/// Tentpole acceptance: coordinator + 2 workers populate a store whose
+/// per-key records are bit-identical to a single-host cold run, and a
+/// fresh process over that store resolves the whole plan from disk.
+#[test]
+fn fleet_populated_store_is_record_identical_to_single_host() {
+    let dir = tmp("identity");
+    std::fs::remove_dir_all(&dir).ok();
+    let points = plan();
+    let reference = single_host_records(&points);
+
+    let coord = Coordinator::bind(0).expect("bind port 0");
+    let port = coord.port();
+    let store = ResultStore::persistent(&dir);
+    let cfg = CoordinatorConfig { lease_ms: 30_000, batch: 2 };
+    let report = std::thread::scope(|scope| {
+        let drain = scope.spawn(|| coord.run(&store, &points, &cfg));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let points = &points;
+                scope.spawn(move || {
+                    let local = ResultStore::ephemeral();
+                    run_worker("127.0.0.1", port, &local, points, &worker_cfg(2))
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("worker thread").expect("worker run");
+        }
+        drain.join().expect("coordinator thread").expect("fleet drain")
+    });
+    assert_eq!(report.plan_points, points.len());
+    assert_eq!(report.already_present, 0);
+    assert_eq!(report.results, points.len() as u64, "every point arrives exactly once");
+    assert_eq!(report.workers, 2);
+    drop(store);
+
+    // A fresh store over the fleet-written directory serves the whole
+    // plan from disk, and every record matches the single-host bytes.
+    let reopened = ResultStore::persistent(&dir);
+    for p in &points {
+        let r = reopened.lookup(p.key()).expect("fleet-populated store resolves every key");
+        assert_eq!(
+            encode_result_bin(&r).to_vec(),
+            reference[&p.key()],
+            "record for key {:#018x} must be bit-identical to a single-host run",
+            p.key()
+        );
+    }
+    assert_eq!(reopened.stats().disk_hits, points.len() as u64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Chaos wall: a worker that takes a batch and drops the connection
+/// without returning it never loses a point — the coordinator requeues
+/// the lease and a healthy sibling finishes the plan, with zero
+/// duplicate appends.
+#[test]
+fn a_worker_crash_mid_batch_loses_and_duplicates_nothing() {
+    let points = plan();
+    let reference = single_host_records(&points);
+
+    let coord = Coordinator::bind(0).expect("bind port 0");
+    let port = coord.port();
+    let store = ResultStore::ephemeral();
+    // Generous lease: the requeue must come from the observed
+    // disconnect, not from an expiry racing the healthy worker.
+    let cfg = CoordinatorConfig { lease_ms: 120_000, batch: 2 };
+    let report = std::thread::scope(|scope| {
+        let drain = scope.spawn(|| coord.run(&store, &points, &cfg));
+        let crasher = {
+            let points = &points;
+            scope.spawn(move || {
+                let local = ResultStore::ephemeral();
+                let cfg = WorkerConfig { abandon_after: Some(1), ..worker_cfg(2) };
+                run_worker("127.0.0.1", port, &local, points, &cfg)
+            })
+        };
+        let crashed = crasher.join().expect("crasher thread").expect("scripted crash is clean");
+        assert!(crashed.abandoned);
+        assert_eq!(crashed.points, 0, "an abandoned batch returns nothing");
+        let healthy = {
+            let points = &points;
+            scope.spawn(move || {
+                let local = ResultStore::ephemeral();
+                run_worker("127.0.0.1", port, &local, points, &worker_cfg(2))
+            })
+        };
+        healthy.join().expect("healthy thread").expect("healthy worker run");
+        drain.join().expect("coordinator thread").expect("fleet drain")
+    });
+    assert_eq!(report.results, points.len() as u64, "no point lost to the crash");
+    assert_eq!(report.duplicates, 0, "no point appended twice");
+    assert!(report.reassigned >= 1, "the abandoned lease must requeue: {report:?}");
+    assert_eq!(store.stats().disk_writes, 0, "ephemeral store never touches disk");
+    for p in &points {
+        let r = store.lookup(p.key()).expect("every key lands despite the crash");
+        assert_eq!(encode_result_bin(&r).to_vec(), reference[&p.key()]);
+    }
+}
+
+/// A silent worker — handshake, lease a batch, then nothing — stalls
+/// the plan only until `lease_ms`; the reaper requeues its keys and a
+/// healthy worker completes the drain.
+#[test]
+fn a_stalled_lease_is_reassigned_after_the_timeout() {
+    let points = plan();
+    let keys: Vec<u64> = points.iter().map(|p| p.key()).collect();
+    let fingerprint = plan_fingerprint(&keys);
+
+    let coord = Coordinator::bind(0).expect("bind port 0");
+    let port = coord.port();
+    let store = ResultStore::ephemeral();
+    let cfg = CoordinatorConfig { lease_ms: 100, batch: 2 };
+    let report = std::thread::scope(|scope| {
+        let drain = scope.spawn(|| coord.run(&store, &points, &cfg));
+
+        // A raw client that takes a lease and goes silent, holding the
+        // connection open so only the timeout can free its keys.
+        let mut stalled = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+        write_frame(&mut stalled, &Frame::Hello { version: PROTO_VERSION, fingerprint })
+            .expect("hello");
+        match read_frame(&mut stalled).expect("welcome") {
+            Frame::Welcome { .. } => {}
+            other => panic!("expected WELCOME, got {other:?}"),
+        }
+        write_frame(&mut stalled, &Frame::Request { max_points: 2 }).expect("request");
+        match read_frame(&mut stalled).expect("batch") {
+            Frame::Batch { keys, .. } => assert!(!keys.is_empty()),
+            other => panic!("expected BATCH, got {other:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(150)); // let the lease expire
+
+        let healthy = {
+            let points = &points;
+            scope.spawn(move || {
+                let local = ResultStore::ephemeral();
+                run_worker("127.0.0.1", port, &local, points, &worker_cfg(2))
+            })
+        };
+        healthy.join().expect("healthy thread").expect("healthy worker run");
+        let report = drain.join().expect("coordinator thread").expect("fleet drain");
+        drop(stalled);
+        report
+    });
+    assert_eq!(report.results, points.len() as u64);
+    assert!(report.reassigned >= 1, "the stalled lease must expire and requeue: {report:?}");
+    for k in &keys {
+        assert!(store.lookup(*k).is_some(), "key {k:#018x} missing after reassignment");
+    }
+}
+
+/// The fingerprint handshake: a worker whose flags derive a different
+/// plan is refused before any batch moves, then a matching worker
+/// drains the plan normally.
+#[test]
+fn a_mismatched_plan_is_refused_at_the_handshake() {
+    let points = plan();
+    let wrong_plan: Vec<SimPoint> = points[..3].to_vec();
+
+    let coord = Coordinator::bind(0).expect("bind port 0");
+    let port = coord.port();
+    let store = ResultStore::ephemeral();
+    let cfg = CoordinatorConfig::default();
+    std::thread::scope(|scope| {
+        let drain = scope.spawn(|| coord.run(&store, &points, &cfg));
+        let err = {
+            let local = ResultStore::ephemeral();
+            run_worker("127.0.0.1", port, &local, &wrong_plan, &worker_cfg(2))
+                .expect_err("mismatched plan must be refused")
+        };
+        assert!(err.to_string().contains("fingerprint"), "got: {err}");
+        let healthy = {
+            let points = &points;
+            scope.spawn(move || {
+                let local = ResultStore::ephemeral();
+                run_worker("127.0.0.1", port, &local, points, &worker_cfg(8))
+            })
+        };
+        healthy.join().expect("healthy thread").expect("healthy worker run");
+        let report = drain.join().expect("coordinator thread").expect("fleet drain");
+        assert_eq!(report.results, points.len() as u64);
+        assert_eq!(report.workers, 1, "the refused worker never completed the handshake");
+    });
+}
+
+/// A coordinator over a fully warm store returns without waiting for
+/// any worker — the CLI's non-hanging path, and the reason a rerun of
+/// a finished fleet is instant.
+#[test]
+fn a_warm_store_drains_without_any_worker() {
+    let points = plan();
+    let store = ResultStore::ephemeral();
+    let mut engines = EngineCache::new();
+    for p in &points {
+        let r = simulate(&mut engines, p).expect("simulates");
+        store.insert(p.key(), std::sync::Arc::new(r));
+    }
+    let coord = Coordinator::bind(0).expect("bind port 0");
+    let report =
+        coord.run(&store, &points, &CoordinatorConfig::default()).expect("instant drain");
+    assert_eq!(report.already_present, points.len());
+    assert_eq!(report.results, 0);
+    assert_eq!(report.workers, 0);
+}

@@ -76,6 +76,14 @@ fn exec_summary_renders_every_folded_field() {
         degraded: true,
     };
     let reg = Registry::new();
+    // Pool and fleet counters fold at their own stage boundaries; seed
+    // them here so the single formatter proves it renders every family.
+    reg.counter_set("pool_jobs_claimed_total", 89);
+    reg.counter_set("pool_steals_total", 23);
+    reg.counter_set("grid_fleet_drains_total", 1);
+    reg.counter_set("grid_results_received_total", 67);
+    reg.counter_set("grid_workers_total", 2);
+    reg.counter_set("grid_lease_reassignments_total", 1);
     let snap = obs::fold_exec_stats(&reg, &stats);
     let line = figures::render_exec_summary_from(&snap, None);
     assert!(line.starts_with("[exec] "), "got: {line}");
@@ -91,7 +99,44 @@ fn exec_summary_renders_every_folded_field() {
     assert!(line.contains("debug-verified hits: 3"), "got: {line}");
     assert!(line.contains("PERSISTENT TIER DISABLED"), "got: {line}");
     assert!(line.contains("results dir: (none"), "got: {line}");
+    assert!(line.contains("pool: 89 job(s) claimed / 23 steal(s)"), "got: {line}");
+    assert!(line.contains("fleet: 67 result(s) from 2 worker(s), 1 re-lease(s)"), "got: {line}");
     assert!(line.ends_with('\n'), "the summary is a complete greppable line");
+}
+
+/// The pool and fleet segments are conditional: a store-only command
+/// that never spun the pool keeps the historic `[exec]` line shape, so
+/// CI greps and old log diffs stay valid.
+#[test]
+fn exec_summary_omits_pool_and_fleet_segments_when_idle() {
+    let stats = ExecStats { requests: 4, mem_hits: 4, ..ExecStats::default() };
+    let reg = Registry::new();
+    let snap = obs::fold_exec_stats(&reg, &stats);
+    let line = figures::render_exec_summary_from(&snap, None);
+    assert!(!line.contains("pool:"), "got: {line}");
+    assert!(!line.contains("fleet:"), "got: {line}");
+}
+
+/// Scheduling-shaped counters (steal counts, lease churn) are visible
+/// to a live scraper but never reach the deterministic `--trace`
+/// snapshot — otherwise two identical cold runs could differ by thread
+/// timing alone.
+#[test]
+fn scheduling_counters_stay_out_of_the_deterministic_snapshot() {
+    let reg = Registry::new();
+    reg.counter_set("pool_jobs_claimed_total", 12);
+    reg.counter_set("pool_steals_total", 5);
+    reg.counter_set("grid_batches_granted_total", 3);
+    reg.counter_set("grid_results_received_total", 12);
+    let snap = reg.snapshot();
+    let json = json_snapshot(&snap);
+    assert!(json.contains("\"pool_jobs_claimed_total\": 12"), "got: {json}");
+    assert!(json.contains("\"grid_results_received_total\": 12"), "got: {json}");
+    assert!(!json.contains("pool_steals_total"), "got: {json}");
+    assert!(!json.contains("grid_batches_granted_total"), "got: {json}");
+    let prom = multistride::obs::export::prometheus_text(&snap);
+    assert!(prom.contains("pool_steals_total 5\n"), "got: {prom}");
+    assert!(prom.contains("grid_batches_granted_total 3\n"), "got: {prom}");
 }
 
 /// Same pin for the `[serve]` line — CI's serve-smoke job greps `pool
